@@ -1,0 +1,56 @@
+//! Paper Fig 2: MiniResNet test accuracy vs communication rounds, IID and
+//! non-IID (Dirichlet 0.5), all five algorithms.
+//!
+//! Smoke mode runs a few rounds per setting; REPRO_FULL=1 widens the budget
+//! so the parity shape (HERON ~ CSE-FSL ~ FSL-SAGE, slightly below SFLV2)
+//! becomes visible. Series print as CSV so curves can be replotted.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::data::partition::Scheme;
+use heron_sfl::experiments::{curve_summary, run, scaled_rounds, vision_base};
+use heron_sfl::metrics::sparkline;
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(6, 60);
+
+    for (setting, scheme) in [
+        ("IID", Scheme::Iid),
+        ("non-IID (Dirichlet 0.5)", Scheme::Dirichlet { alpha: 0.5 }),
+    ] {
+        println!("\n=== Fig 2 ({setting}) — accuracy vs rounds ===");
+        println!("series CSV: algo,round,accuracy");
+        for alg in Algorithm::all() {
+            let mut cfg = vision_base(rounds);
+            cfg.algorithm = alg;
+            cfg.scheme = scheme;
+            let rec = run(&session, cfg, alg.name())?;
+            for r in &rec.rounds {
+                if r.eval_metric.is_finite() {
+                    println!(
+                        "{},{},{:.4}",
+                        alg.name(),
+                        r.round,
+                        r.eval_metric
+                    );
+                }
+            }
+            let accs: Vec<f64> = rec
+                .rounds
+                .iter()
+                .filter(|r| r.eval_metric.is_finite())
+                .map(|r| r.eval_metric)
+                .collect();
+            println!(
+                "# {:<10} {} {}",
+                alg.name(),
+                sparkline(&accs, 40),
+                curve_summary(&rec, true)
+            );
+        }
+    }
+    println!("\nfig2_convergence OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Paper Fig 3: robustness of HERON-SFL vs its FO counterpart under
+//! (a) data heterogeneity — Dirichlet alpha sweep,
+//! (b) client scalability — total client count sweep,
+//! (c) partial participation — per-round participation fraction sweep.
+//!
+//! Each sub-figure prints a CSV series (setting,algo,value,accuracy).
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::data::partition::Scheme;
+use heron_sfl::experiments::{run, scaled_rounds, vision_base};
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(5, 40);
+    let full = heron_sfl::experiments::full_mode();
+    let algos = [Algorithm::Heron, Algorithm::CseFsl];
+
+    // --- (a) Dirichlet alpha sweep (10 clients full participation) -------
+    println!("=== Fig 3a — heterogeneity (Dirichlet alpha) ===");
+    println!("csv: alpha,algo,best_acc");
+    let alphas: &[f64] = if full {
+        &[0.1, 0.3, 0.5, 1.0, 10.0]
+    } else {
+        &[0.1, 1.0]
+    };
+    for &alpha in alphas {
+        for alg in algos {
+            let mut cfg = vision_base(rounds);
+            cfg.algorithm = alg;
+            cfg.n_clients = 10;
+            cfg.scheme = Scheme::Dirichlet { alpha };
+            cfg.eval_every = rounds; // final eval
+            let rec = run(&session, cfg, &format!("a{alpha}-{}", alg.name()))?;
+            println!(
+                "{alpha},{},{:.4}",
+                alg.name(),
+                rec.best_metric(true).unwrap_or(0.0)
+            );
+        }
+    }
+
+    // --- (b) client-count sweep (IID, full participation) ----------------
+    println!("\n=== Fig 3b — scalability (total clients) ===");
+    println!("csv: n_clients,algo,best_acc");
+    let counts: &[usize] = if full { &[10, 30, 50, 100] } else { &[5, 20] };
+    for &n in counts {
+        for alg in algos {
+            let mut cfg = vision_base(rounds);
+            cfg.algorithm = alg;
+            cfg.n_clients = n;
+            cfg.dataset_size = (n as u64) * 400;
+            cfg.eval_every = rounds;
+            let rec = run(&session, cfg, &format!("n{n}-{}", alg.name()))?;
+            println!(
+                "{n},{},{:.4}",
+                alg.name(),
+                rec.best_metric(true).unwrap_or(0.0)
+            );
+        }
+    }
+
+    // --- (c) participation-fraction sweep (10 IID clients) ---------------
+    println!("\n=== Fig 3c — partial participation ===");
+    println!("csv: fraction,algo,best_acc");
+    let fracs: &[f64] = if full {
+        &[0.1, 0.2, 0.5, 0.8, 1.0]
+    } else {
+        &[0.2, 1.0]
+    };
+    for &f in fracs {
+        for alg in algos {
+            let mut cfg = vision_base(rounds);
+            cfg.algorithm = alg;
+            cfg.n_clients = 10;
+            cfg.participation = f;
+            cfg.eval_every = rounds;
+            let rec = run(&session, cfg, &format!("p{f}-{}", alg.name()))?;
+            println!(
+                "{f},{},{:.4}",
+                alg.name(),
+                rec.best_metric(true).unwrap_or(0.0)
+            );
+        }
+    }
+
+    println!("\nfig3_robustness OK");
+    Ok(())
+}

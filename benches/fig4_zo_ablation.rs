@@ -1,0 +1,62 @@
+//! Paper Fig 4: ablation of the ZO hyperparameters on MiniResNet —
+//! (left) perturbation step size mu, (right) probes per step n_pert —
+//! for both client split points ("Client Size 1" = cnn_c1,
+//! "Client Size 2" = cnn_c2).
+//!
+//! Expected shape: accuracy stable over a wide mu band, n_pert=1-2 already
+//! sufficient, and cnn_c1 >= cnn_c2 (larger client share trains slower with
+//! ZO).
+
+use heron_sfl::experiments::{full_mode, run, scaled_rounds, vision_base};
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(5, 40);
+    let variants = ["cnn_c1", "cnn_c2"];
+
+    println!("=== Fig 4 (left) — perturbation step size mu ===");
+    println!("csv: variant,mu,best_acc");
+    let mus: &[f32] = if full_mode() {
+        &[1e-4, 1e-3, 1e-2, 5e-2, 1e-1]
+    } else {
+        &[1e-3, 1e-2]
+    };
+    for variant in variants {
+        for &mu in mus {
+            let mut cfg = vision_base(rounds);
+            cfg.variant = variant.into();
+            cfg.n_clients = 10;
+            cfg.dataset_size = 4096;
+            cfg.mu = mu;
+            cfg.eval_every = rounds;
+            let rec = run(&session, cfg, &format!("{variant}-mu{mu}"))?;
+            println!(
+                "{variant},{mu},{:.4}",
+                rec.best_metric(true).unwrap_or(0.0)
+            );
+        }
+    }
+
+    println!("\n=== Fig 4 (right) — perturbation count n_pert ===");
+    println!("csv: variant,n_pert,best_acc");
+    let nps: &[usize] = if full_mode() { &[1, 2, 4, 8] } else { &[1, 2] };
+    for variant in variants {
+        for &np in nps {
+            let mut cfg = vision_base(rounds);
+            cfg.variant = variant.into();
+            cfg.n_clients = 10;
+            cfg.n_pert = np;
+            cfg.eval_every = rounds;
+            let rec = run(&session, cfg, &format!("{variant}-np{np}"))?;
+            println!(
+                "{variant},{np},{:.4}",
+                rec.best_metric(true).unwrap_or(0.0)
+            );
+        }
+    }
+
+    println!("\nfig4_zo_ablation OK");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Paper Fig 5: GPT2 validation perplexity vs cumulative communication
+//! volume on the E2E task — nano (GPT2-Small analog, left) and micro
+//! (GPT2-Medium analog, right), four algorithms.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::experiments::{curve_summary, lm_base, run, scaled_rounds};
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(4, 25);
+
+    for (panel, variant) in [
+        ("left: GPT2-nano (Small analog)", "gpt2nano_c1_a1"),
+        ("right: GPT2-micro (Medium analog)", "gpt2micro_c2_a1"),
+    ] {
+        println!("\n=== Fig 5 ({panel}) — perplexity vs comm volume ===");
+        println!("csv: algo,comm_mb,ppl");
+        for (label, alg) in [
+            ("SplitLoRA", Algorithm::SflV2),
+            ("CSE-FSL", Algorithm::CseFsl),
+            ("FSL-SAGE", Algorithm::FslSage),
+            ("HERON-SFL", Algorithm::Heron),
+        ] {
+            let mut cfg = lm_base(variant, rounds);
+            cfg.algorithm = alg;
+            let rec = run(&session, cfg, label)?;
+            for r in &rec.rounds {
+                if r.eval_metric.is_finite() {
+                    println!(
+                        "{label},{:.3},{:.3}",
+                        r.comm_bytes_cum as f64 / 1e6,
+                        r.eval_metric
+                    );
+                }
+            }
+            println!("# {label:<10} ppl {}", curve_summary(&rec, false));
+        }
+    }
+    println!("\nfig5_ppl_vs_comm OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! §Perf hot-path microbenchmarks: the numbers EXPERIMENTS.md §Perf records.
+//!
+//! Measures each layer's contribution to a training step:
+//!   L3: marshaling, aggregation, perturbation streaming, data generation
+//!   L2/L1 (through PJRT): zo_step / fo_step / server_step / client_fwd
+//!   end-to-end: one full HERON round
+
+use anyhow::Result;
+use heron_sfl::bench_harness::Bench;
+use heron_sfl::coordinator::aggregator::fedavg_into;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::data::synth_vision;
+use heron_sfl::golden;
+use heron_sfl::runtime::Session;
+use heron_sfl::zo::stream::PerturbStream;
+use heron_sfl::zo::ZoSgd;
+
+fn main() -> Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let mut b = Bench::new();
+
+    Bench::header("L3 primitives");
+    // perturbation stream regeneration (the Remark-4 O(1)-memory path)
+    let mut buf = vec![0.0f32; 1 << 16];
+    b.run("perturb_stream_fill_64k", || {
+        PerturbStream::new(7).fill(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    let m = b.results().last().unwrap();
+    println!(
+        "  -> {:.2} M elems/s",
+        (1 << 16) as f64 / m.mean_secs() / 1e6
+    );
+
+    // ZO-SGD quadratic steps: materialized vs streamed
+    let quad = |x: &[f32]| x.iter().map(|v| v * v).sum::<f32>() * 0.5;
+    let opt = ZoSgd::new(quad, 1e-3, 0.01);
+    let mut theta = vec![0.5f32; 1 << 16];
+    b.run("zo_step_materialized_64k", || {
+        opt.step_materialized(&mut theta, 3);
+    });
+    b.run("zo_step_streamed_64k", || {
+        opt.alloc_free_step(&mut theta, 3);
+    });
+
+    // FedAvg aggregation over 10 clients x 64k params
+    let clients: Vec<Vec<f32>> = (0..10)
+        .map(|i| vec![i as f32 * 0.1; 1 << 16])
+        .collect();
+    let refs: Vec<&[f32]> = clients.iter().map(|c| c.as_slice()).collect();
+    let weights = vec![1.0f64; 10];
+    let mut out = vec![0.0f32; 1 << 16];
+    b.run("fedavg_10x64k", || {
+        fedavg_into(&refs, &weights, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    // synthetic data generation (per 32-image batch)
+    let mut xs = vec![0.0f32; 32 * synth_vision::PIXELS];
+    let mut ys = vec![0i32; 32];
+    b.run("synth_vision_batch32", || {
+        synth_vision::batch_into(42, 0, 32, &mut xs, &mut ys);
+        std::hint::black_box(&xs);
+    });
+
+    Bench::header("L2/L1 entries through PJRT (cnn_c1, batch 32)");
+    let variant = "cnn_c1";
+    session.warmup(
+        variant,
+        &["zo_step", "fo_step", "server_step", "client_fwd", "eval_full"],
+    )?;
+    let v = session.variant(variant)?.clone();
+    for entry in ["client_fwd", "zo_step", "fo_step", "server_step", "eval_full"]
+    {
+        let espec = v.entry(entry)?.clone();
+        let inputs: Vec<_> = espec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(idx, spec)| {
+                golden_input_for_bench(&session, variant, spec, idx, &v.task)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        b.run(&format!("invoke_{entry}"), || {
+            session.invoke(variant, entry, &inputs).expect("invoke");
+        });
+    }
+
+    Bench::header("end-to-end round (HERON, 5 clients, h=2)");
+    let cfg = RunConfig {
+        rounds: 1,
+        ..heron_sfl::experiments::vision_base(1)
+    };
+    let mut driver = Driver::new(&session, cfg)?;
+    driver.warmup()?;
+    b.run("heron_full_round", || {
+        driver.run_round().expect("round");
+    });
+
+    let st = session.stats();
+    println!(
+        "\nruntime totals: {} invocations | exec {:.2}s | marshal {:.2}s ({:.1}% of exec)",
+        st.invocations,
+        st.exec_seconds,
+        st.marshal_seconds,
+        100.0 * st.marshal_seconds / st.exec_seconds.max(1e-9)
+    );
+    println!("\nperf_hotpath OK");
+    Ok(())
+}
+
+fn golden_input_for_bench(
+    session: &Session,
+    variant: &str,
+    spec: &heron_sfl::runtime::manifest::TensorSpec,
+    idx: usize,
+    task: &str,
+) -> Result<heron_sfl::runtime::tensor::TensorValue> {
+    // reuse the golden-input construction (deterministic, well-conditioned)
+    golden::bench_input(session, variant, spec, idx, task)
+}

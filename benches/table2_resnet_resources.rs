@@ -1,0 +1,88 @@
+//! Paper Table II: client consumption for ResNet training — cumulative
+//! communication until the accuracy threshold, peak client memory, and
+//! client FLOPs per step, for all five algorithms.
+//!
+//! The paper's threshold is 80% on CIFAR-10; the substitute threshold here
+//! scales to SynthCIFAR (env ACC_THRESHOLD, default 0.8 under REPRO_FULL,
+//! 0.45 in smoke mode so the table populates within the short budget).
+
+use heron_sfl::bench_harness::Table;
+use heron_sfl::coordinator::accounting::fmt_bytes;
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::experiments::{full_mode, run, scaled_rounds, vision_base};
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(8, 120);
+    let threshold: f64 = std::env::var("ACC_THRESHOLD")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full_mode() { 0.8 } else { 0.45 });
+
+    let mut t = Table::new(&[
+        "Algorithm",
+        &format!("Comm to {:.0}% (MB)", threshold * 100.0),
+        "Peak FP (MB)",
+        "FLOPs/step (G)",
+        "Best acc",
+    ]);
+
+    let mut rows: Vec<(Algorithm, Option<u64>, u64, u64, f64)> = Vec::new();
+    for alg in Algorithm::all() {
+        let mut cfg = vision_base(rounds);
+        cfg.algorithm = alg;
+        let mut driver =
+            heron_sfl::coordinator::round::Driver::new(&session, cfg.clone())?;
+        let book_mem = driver.book.peak_mem_bytes;
+        let book_flops = driver.book.flops_per_step;
+        let rec = driver.run(alg.name())?;
+        let comm = rec.comm_to_threshold(threshold, true);
+        let best = rec.best_metric(true).unwrap_or(0.0);
+        rows.push((alg, comm, book_mem, book_flops, best));
+        let _ = run; // (helper consumed above through Driver directly)
+    }
+
+    for (alg, comm, mem, flops, best) in &rows {
+        t.row(vec![
+            alg.name().into(),
+            comm.map(|c| format!("{:.2}", c as f64 / 1e6))
+                .unwrap_or_else(|| "not reached".into()),
+            format!("{:.2}", *mem as f64 / 1e6),
+            format!("{:.2}", *flops as f64 / 1e9),
+            format!("{best:.3}"),
+        ]);
+    }
+    t.print("TABLE II — client consumption, MiniResNet on SynthCIFAR");
+
+    // paper-shape checks: HERON minimizes memory and flops
+    let heron = rows
+        .iter()
+        .find(|(a, ..)| *a == Algorithm::Heron)
+        .unwrap();
+    let cse = rows
+        .iter()
+        .find(|(a, ..)| *a == Algorithm::CseFsl)
+        .unwrap();
+    let sflv1 = rows
+        .iter()
+        .find(|(a, ..)| *a == Algorithm::SflV1)
+        .unwrap();
+    println!(
+        "\nHERON memory reduction vs CSE-FSL: {:.0}% (paper: ~64% vs SFLV1/V2)",
+        (1.0 - heron.2 as f64 / cse.2 as f64) * 100.0
+    );
+    println!(
+        "HERON FLOPs reduction vs CSE-FSL: {:.0}% (paper: ~33%)",
+        (1.0 - heron.3 as f64 / cse.3 as f64) * 100.0
+    );
+    assert!(heron.2 < cse.2 && heron.2 < sflv1.2);
+    assert!(heron.3 < cse.3);
+    println!(
+        "comm note: {}",
+        fmt_bytes(heron.1.unwrap_or(0))
+    );
+    println!("\ntable2_resnet_resources OK");
+    Ok(())
+}

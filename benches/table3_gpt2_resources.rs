@@ -1,0 +1,60 @@
+//! Paper Table III: client consumption for GPT2-Medium fine-tuning —
+//! peak client memory and FLOPs per step on the GPT2-micro analog
+//! (SplitLoRA / CSE-FSL / FSL-SAGE / HERON-SFL).
+
+use heron_sfl::bench_harness::Table;
+use heron_sfl::coordinator::accounting::CostBook;
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::experiments::{curve_summary, lm_base, run, scaled_rounds};
+use heron_sfl::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds = scaled_rounds(3, 30);
+    let variant = "gpt2micro_c2_a1";
+    let v = session.variant(variant)?.clone();
+
+    let mut t = Table::new(&[
+        "Algorithm", "Peak FP (MB)", "FLOPs/step (M)", "ppl curve",
+    ]);
+    // SplitLoRA is SFLV2 on the LoRA transformer
+    for (label, alg) in [
+        ("SplitLoRA", Algorithm::SflV2),
+        ("CSE-FSL", Algorithm::CseFsl),
+        ("FSL-SAGE", Algorithm::FslSage),
+        ("HERON-SFL", Algorithm::Heron),
+    ] {
+        let book = CostBook::new(&v, alg, 1);
+        let mut cfg = lm_base(variant, rounds);
+        cfg.algorithm = alg;
+        let rec = run(&session, cfg, label)?;
+        t.row(vec![
+            label.into(),
+            format!("{:.3}", book.peak_mem_bytes as f64 / 1e6),
+            format!("{:.1}", book.flops_per_step as f64 / 1e6),
+            curve_summary(&rec, false),
+        ]);
+    }
+    t.print("TABLE III — client consumption, GPT2-micro on SynthE2E");
+
+    let heron = CostBook::new(&v, Algorithm::Heron, 1);
+    let cse = CostBook::new(&v, Algorithm::CseFsl, 1);
+    let sfl = CostBook::new(&v, Algorithm::SflV2, 1);
+    println!(
+        "\nHERON peak mem vs CSE-FSL: -{:.0}% | vs SplitLoRA: {:+.0}%",
+        (1.0 - heron.peak_mem_bytes as f64 / cse.peak_mem_bytes as f64)
+            * 100.0,
+        (heron.peak_mem_bytes as f64 / sfl.peak_mem_bytes as f64 - 1.0)
+            * 100.0,
+    );
+    println!(
+        "HERON FLOPs vs CSE-FSL: -{:.0}% (paper: ~44%)",
+        (1.0 - heron.flops_per_step as f64 / cse.flops_per_step as f64)
+            * 100.0
+    );
+    assert!(heron.peak_mem_bytes < cse.peak_mem_bytes);
+    assert!(heron.flops_per_step < cse.flops_per_step);
+    println!("\ntable3_gpt2_resources OK");
+    Ok(())
+}

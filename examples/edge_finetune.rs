@@ -1,0 +1,70 @@
+//! Edge LM fine-tuning scenario (paper §VI-C): LoRA-adapt the pretrained
+//! GPT2-nano to the SynthE2E task under HERON-SFL vs SplitLoRA, comparing
+//! perplexity against communication volume — the Fig 5 story at example
+//! scale.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example edge_finetune
+//! ```
+
+use anyhow::Result;
+use heron_sfl::coordinator::accounting::fmt_bytes;
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::data::synth_text;
+use heron_sfl::metrics::sparkline;
+use heron_sfl::runtime::Session;
+
+fn main() -> Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds: usize = std::env::var("FT_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    println!(
+        "sample of the fine-tuning corpus:\n  {}\n  {}",
+        synth_text::record(42, 0),
+        synth_text::record(42, 1)
+    );
+
+    for alg in [Algorithm::Heron, Algorithm::SflV2, Algorithm::CseFsl] {
+        let cfg = RunConfig {
+            variant: "gpt2nano_c1_a1".into(),
+            algorithm: alg,
+            n_clients: 3,
+            rounds,
+            local_steps: 2,
+            lr_client: 1e-3,
+            lr_server: 1e-3,
+            mu: 1e-2,
+            n_pert: 1,
+            dataset_size: 1536,
+            ..Default::default()
+        };
+        let mut driver = Driver::new(&session, cfg)?;
+        let rec = driver.run(alg.name())?;
+        let ppl: Vec<f64> = rec
+            .rounds
+            .iter()
+            .filter(|r| r.eval_metric.is_finite())
+            .map(|r| r.eval_metric)
+            .collect();
+        println!(
+            "\n{:<10} ppl {} {:.2} -> {:.2} | comm {} | peak mem {}",
+            alg.name(),
+            sparkline(&ppl, 32),
+            ppl.first().unwrap(),
+            ppl.last().unwrap(),
+            fmt_bytes(rec.summary["comm_bytes"] as u64),
+            fmt_bytes(rec.summary["peak_mem_bytes"] as u64),
+        );
+    }
+    println!(
+        "\nHERON fine-tunes with forward-only clients at inference-level \
+         memory;\nSplitLoRA pays a per-batch server round-trip (training lock)."
+    );
+    Ok(())
+}

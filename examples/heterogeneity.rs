@@ -1,0 +1,63 @@
+//! Non-IID robustness scenario (paper Fig 3a at example scale): sweep the
+//! Dirichlet concentration α and watch HERON-SFL track its FO counterpart
+//! under increasing label skew.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example heterogeneity
+//! ```
+
+use anyhow::Result;
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::data::partition::{Partition, Scheme};
+use heron_sfl::runtime::Session;
+
+fn main() -> Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let rounds: usize = std::env::var("HET_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+
+    // visualize what the partitioner does before training
+    println!("label histograms at alpha=0.1 (10 clients, 2000 samples):");
+    let p = Partition::vision(42, 2000, 10, Scheme::Dirichlet { alpha: 0.1 });
+    for (i, h) in p.label_histograms(42).iter().enumerate().take(4) {
+        println!("  client {i}: {h:?}");
+    }
+    println!("  ... (max client share {:.2})", p.max_share());
+
+    println!(
+        "\n{:<8} {:>14} {:>14}",
+        "alpha", "HERON acc", "CSE-FSL acc"
+    );
+    for alpha in [0.1, 0.5, 10.0] {
+        let mut row = vec![format!("{alpha}")];
+        for alg in [Algorithm::Heron, Algorithm::CseFsl] {
+            let cfg = RunConfig {
+                variant: "cnn_c1".into(),
+                algorithm: alg,
+                n_clients: 5,
+                rounds,
+                local_steps: 2,
+                lr_client: 2e-3,
+                lr_server: 2e-3,
+                mu: 1e-2,
+                scheme: Scheme::Dirichlet { alpha },
+                eval_every: rounds.max(1), // final eval only
+                ..Default::default()
+            };
+            let mut driver = Driver::new(&session, cfg)?;
+            let rec = driver.run(&format!("{}-a{alpha}", alg.name()))?;
+            row.push(format!("{:.3}", rec.best_metric(true).unwrap_or(0.0)));
+        }
+        println!("{:<8} {:>14} {:>14}", row[0], row[1], row[2]);
+    }
+    println!(
+        "\nExpected shape (paper Fig 3a): both methods degrade gracefully as \
+         alpha shrinks,\nwith HERON tracking the FO baseline at every skew level."
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: train MiniResNet under HERON-SFL for a handful of rounds.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the minimal public-API path: open a session, configure a
+//! run, drive rounds, read the curve. Takes ~1 minute on CPU.
+
+use anyhow::Result;
+use heron_sfl::coordinator::accounting::fmt_bytes;
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::metrics::sparkline;
+use heron_sfl::runtime::Session;
+
+fn main() -> Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+
+    let cfg = RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: Algorithm::Heron,
+        n_clients: 5,
+        rounds: 12,
+        local_steps: 2,
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        ..Default::default()
+    };
+    println!("config: {}", cfg.describe());
+
+    let mut driver = Driver::new(&session, cfg)?;
+    let rec = driver.run("quickstart")?;
+
+    let accs: Vec<f64> = rec
+        .rounds
+        .iter()
+        .filter(|r| r.eval_metric.is_finite())
+        .map(|r| r.eval_metric)
+        .collect();
+    println!("\naccuracy curve  {}", sparkline(&accs, 40));
+    println!(
+        "round 0 acc {:.3} -> round {} acc {:.3}",
+        accs.first().unwrap(),
+        accs.len() - 1,
+        accs.last().unwrap()
+    );
+    println!(
+        "client comm {} | client compute {:.1} GFLOPs | peak client mem {}",
+        fmt_bytes(rec.summary["comm_bytes"] as u64),
+        rec.summary["client_flops"] / 1e9,
+        fmt_bytes(rec.summary["peak_mem_bytes"] as u64)
+    );
+    assert!(
+        accs.last().unwrap() > accs.first().unwrap(),
+        "training made no progress"
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT pipeline: lower every (variant, entry) to HLO text + manifest.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does
+this). For each variant in ``variants.VARIANTS``:
+
+1. build the SplitModel and its entry family,
+2. (transformers) pretrain / load-cached the frozen base on SynthE2E and
+   attach aux-base copies,
+3. jit-lower each entry to stablehlo, convert to an XlaComputation and dump
+   **HLO text** — xla_extension 0.5.1 rejects jax>=0.5's serialized protos
+   (64-bit instruction ids); the text parser reassigns ids and round-trips,
+4. write binary blobs (frozen base, initial parameter vectors) and golden
+   input/output digests for the Rust cross-language test,
+5. emit ``manifest.json`` describing everything.
+
+Python never runs after this step; the Rust coordinator is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import synth, variants
+from .entries import Entry, build_entries
+from .models import cnn, transformer
+
+GOLDEN_SEED_I32 = 0x5EED
+GOLDEN_DATA_SEED = 777
+GOLDEN_MU = 1e-3
+GOLDEN_LR = 1e-2
+
+
+def log(msg: str):
+    print(msg, flush=True)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# model construction per variant
+# ---------------------------------------------------------------------------
+
+
+def build_model(v: variants.Variant):
+    if v.family == "cnn":
+        return cnn.build(v.cut, batch=v.batch or 32)
+    dm = transformer.NANO if v.family == "gpt2nano" else transformer.MICRO
+    return transformer.build(
+        dm, v.cut, v.aux, batch=v.batch or 8, use_pallas=v.use_pallas,
+        name=v.name,
+    )
+
+
+_PRETRAIN_CACHE = {}
+
+
+def pretrained_base(v: variants.Variant, model, cache_dir: str, steps: int):
+    """Return the flat frozen-base vector for a transformer variant."""
+    dm = model.extra["dims"]
+    key = v.pretrain_key or v.family
+    path = os.path.join(cache_dir, f"base_{key}.npz")
+    if key in _PRETRAIN_CACHE:
+        base = _PRETRAIN_CACHE[key]
+    elif os.path.exists(path):
+        base = dict(np.load(path))
+        log(f"  loaded cached pretrained base {path}")
+        _PRETRAIN_CACHE[key] = base
+    else:
+        t0 = time.time()
+        base, final = transformer.pretrain(dm, steps=steps, log=log)
+        log(f"  pretrained {key}: loss {final:.3f} in {time.time()-t0:.0f}s")
+        os.makedirs(cache_dir, exist_ok=True)
+        np.savez(path, **base)
+        _PRETRAIN_CACHE[key] = base
+    full = transformer.attach_aux_base(base, dm, v.cut, v.aux)
+    spec = model.extra["base_spec"]
+    return np.concatenate(
+        [np.ravel(full[n]).astype(np.float32) for n, _ in spec.entries]
+    )
+
+
+# ---------------------------------------------------------------------------
+# golden inputs: deterministic, regenerated identically by the Rust tests
+# ---------------------------------------------------------------------------
+
+
+def golden_input(model, name, shape, dtype, salt):
+    if name == "x":
+        b = shape[0]
+        if model.task == "vision":
+            xs, _ = synth.vision_batch(GOLDEN_DATA_SEED, 0, b)
+            return jnp.asarray(xs)
+        return jnp.asarray(synth.text_batch(GOLDEN_DATA_SEED, 0, b))
+    if name == "y":
+        b = shape[0]
+        if model.task == "vision":
+            _, ys = synth.vision_batch(GOLDEN_DATA_SEED, 0, b)
+            return jnp.asarray(ys)
+        return jnp.asarray(synth.text_batch(GOLDEN_DATA_SEED, 0, b))
+    if name == "seed":
+        return jnp.asarray(GOLDEN_SEED_I32, jnp.int32)
+    if name == "n_pert":
+        return jnp.asarray(1, jnp.int32)
+    if name == "mu":
+        return jnp.asarray(GOLDEN_MU, jnp.float32)
+    if name == "lr":
+        return jnp.asarray(GOLDEN_LR, jnp.float32)
+    if name == "opt_t":
+        # mature step count: keeps bias-correction factors O(1)
+        return jnp.asarray(10.0, jnp.float32)
+    if name == "opt_v":
+        # Adam second moment: non-negative (sqrt) AND floored away from 0 —
+        # v ~ 0 makes the update ~ m/|g|, amplifying XLA-version rounding
+        # differences in conv backward by 1/|g| and breaking the
+        # cross-language golden comparison.
+        n = int(np.prod(shape)) if shape else 1
+        v = jnp.abs(jnp.asarray(synth.golden_vec(n, salt))) + 0.05
+        return v.reshape(shape)
+    if dtype == "i32":
+        return jnp.zeros(shape, jnp.int32)
+    n = int(np.prod(shape)) if shape else 1
+    return jnp.asarray(synth.golden_vec(n, salt)).reshape(shape)
+
+
+def summarize(arr) -> dict:
+    a = np.asarray(arr, dtype=np.float64).ravel()
+    return {
+        "shape": list(np.asarray(arr).shape),
+        "head": [float(x) for x in a[:4]],
+        "sum": float(a.sum()),
+        "l2": float(np.sqrt((a * a).sum())),
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def lower_variant(v: variants.Variant, out_dir: str, cache_dir: str,
+                  golden: bool, pretrain_steps: int) -> dict:
+    log(f"[variant] {v.name}")
+    model = build_model(v)
+    entries = build_entries(
+        model, optimizer=v.optimizer, zo_mode=v.zo_mode, which=v.entries
+    )
+    vdir = os.path.join(out_dir, v.name)
+    os.makedirs(vdir, exist_ok=True)
+
+    has_base = "base_spec" in model.extra
+    files = {}
+    base_vec = None
+    if has_base:
+        base_vec = pretrained_base(v, model, cache_dir, pretrain_steps)
+        files["frozen_base"] = "frozen_base.bin"
+        base_vec.astype("<f4").tofile(os.path.join(vdir, "frozen_base.bin"))
+
+    # initial parameter vectors (shared across all algorithms in Rust)
+    rng = np.random.default_rng(0xC0FFEE)
+    tc, ta, ts = model.init(rng)
+    init_l = np.concatenate(
+        [np.ravel(tc[n]) for n, _ in model.spec_client.entries]
+        + [np.ravel(ta[n]) for n, _ in model.spec_aux.entries]
+    ).astype("<f4")
+    init_s = np.concatenate(
+        [np.ravel(ts[n]) for n, _ in model.spec_server.entries]
+    ).astype("<f4")
+    init_l.tofile(os.path.join(vdir, "init_theta_l.bin"))
+    init_s.tofile(os.path.join(vdir, "init_theta_s.bin"))
+    files["init_theta_l"] = "init_theta_l.bin"
+    files["init_theta_s"] = "init_theta_s.bin"
+
+    man_entries = {}
+    goldens = {}
+    for name, e in entries.items():
+        t0 = time.time()
+        specs = [
+            jax.ShapeDtypeStruct(
+                tuple(s), jnp.int32 if d == "i32" else jnp.float32
+            )
+            for _, s, d in e.inputs
+        ]
+        lowered = jax.jit(e.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        man = e.manifest()
+        man["file"] = fname
+        man_entries[name] = man
+        dt = time.time() - t0
+
+        if golden:
+            args = []
+            for idx, (nm, s, d) in enumerate(e.inputs):
+                if nm == "base":
+                    args.append(jnp.asarray(base_vec))
+                else:
+                    args.append(golden_input(model, nm, s, d, 101 + idx * 13))
+            outs = jax.jit(e.fn)(*args)
+            goldens[name] = {"outputs": [summarize(o) for o in outs]}
+        log(f"  lowered {name}: {len(text)//1024} KiB in {dt:.1f}s")
+
+    sizes = {
+        "client": model.spec_client.size,
+        "aux": model.spec_aux.size,
+        "server": model.spec_server.size,
+        "base": model.extra["base_spec"].size if has_base else 0,
+    }
+    return {
+        "family": v.family,
+        "task": model.task,
+        "optimizer": v.optimizer,
+        "opt_state": 3 if v.optimizer == "adam" else 0,
+        "zo_mode": v.zo_mode,
+        "use_pallas": v.use_pallas,
+        "batch": model.batch,
+        "eval_batch": model.eval_batch,
+        "x_shape": list(model.x_shape),
+        "y_shape": list(model.y_shape),
+        "x_dtype": model.x_dtype,
+        "y_dtype": model.y_dtype,
+        "smashed_shape": list(model.smashed_shape),
+        "sizes": sizes,
+        "cost": model.cost.manifest(),
+        "layout_client": model.spec_client.manifest(),
+        "layout_aux": model.spec_aux.manifest(),
+        "layout_server": model.spec_server.manifest(),
+        "entries": man_entries,
+        "files": files,
+        "golden": goldens,
+    }
+
+
+def synth_golden() -> dict:
+    """Cross-language digests of the synthetic data generators."""
+    labels = [synth.vision_label(42, i) for i in range(32)]
+    img0 = synth.vision_image(42, 0)
+    toks = synth.text_batch(42, 0, 2)
+    return {
+        "vision_labels_seed42": labels,
+        "vision_img0_sum": float(img0.sum()),
+        "vision_img0_first": [float(x) for x in img0.ravel()[:6]],
+        "text_record0": synth.e2e_record(42, 0),
+        "text_tokens0": [int(t) for t in toks[0][:24]],
+        "mix64_42_0": str(synth.mix64(42, 0)),
+        "golden_vec8_salt101": [float(x) for x in synth.golden_vec(8, 101)],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--cache-dir", default="../artifacts/.cache")
+    ap.add_argument("--only", default="", help="comma-separated variant names")
+    ap.add_argument("--no-golden", action="store_true")
+    ap.add_argument("--pretrain-steps", type=int, default=250)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = [s for s in args.only.split(",") if s]
+    t0 = time.time()
+    manifest = {"version": 1, "variants": {}, "synth": synth_golden()}
+
+    # merge with existing manifest when lowering a subset
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    if wanted and os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest["variants"] = json.load(f).get("variants", {})
+
+    for v in variants.VARIANTS:
+        if wanted and v.name not in wanted:
+            continue
+        manifest["variants"][v.name] = lower_variant(
+            v, args.out_dir, args.cache_dir,
+            golden=not args.no_golden, pretrain_steps=args.pretrain_steps,
+        )
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"wrote {man_path} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

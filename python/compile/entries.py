@@ -1,0 +1,351 @@
+"""HLO entry-point builders: the protocol surface the Rust coordinator calls.
+
+Every entry is a pure function over flat f32 vectors (+ int32 batches and
+scalars), generated from a ``SplitModel``. The set of entries *is* the
+client/server ABI — see DESIGN.md §3 for the table.
+
+Conventions:
+* ``theta_l`` = concat(client params, aux params); ``theta_c`` / ``theta_s``
+  are the client/server vectors alone.
+* Transformer variants take the frozen ``base`` vector as the first input;
+  CNN variants have no base (``has_base=False``).
+* ``seed`` arrives as i32 (the xla crate's scalar path) and is bitcast to
+  u32 in-graph; ``n_pert`` is a runtime i32 driving a ``fori_loop``.
+* Optimizer state (Adam: m, v, t) threads through as explicit tensors.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.perturb import fold_seed, perturbation
+from .models.base import SplitModel
+from .optim import make_optimizer
+
+F32, I32 = "f32", "i32"
+
+
+class Entry:
+    """A lowered-entry description: python fn + typed input/output specs."""
+
+    def __init__(self, name: str, fn: Callable,
+                 inputs: List[Tuple[str, Tuple[int, ...], str]],
+                 outputs: List[Tuple[str, Tuple[int, ...], str]]):
+        self.name, self.fn, self.inputs, self.outputs = name, fn, inputs, outputs
+
+    def manifest(self) -> dict:
+        def fmt(items):
+            return [
+                {"name": n, "shape": list(s), "dtype": d} for n, s, d in items
+            ]
+
+        return {"inputs": fmt(self.inputs), "outputs": fmt(self.outputs)}
+
+
+def _seed_u32(seed_i32):
+    return jax.lax.bitcast_convert_type(seed_i32, jnp.uint32)
+
+
+def build_entries(model: SplitModel, optimizer: str = "adam",
+                  zo_mode: str = "gaussian",
+                  which: List[str] | None = None) -> Dict[str, Entry]:
+    """Construct the entry family for one model variant."""
+    spec_c, spec_a, spec_s = model.spec_client, model.spec_aux, model.spec_server
+    nc, na, ns = spec_c.size, spec_a.size, spec_s.size
+    nl = nc + na
+    has_base = "base_spec" in model.extra
+    nbase = model.extra["base_spec"].size if has_base else 0
+    B, EB = model.batch, model.eval_batch
+    xs, ys = model.x_shape, model.y_shape
+    xd, yd = model.x_dtype, model.y_dtype
+    sm_shape = (B,) + tuple(model.smashed_shape)
+
+    opt_init, opt_update, n_opt = make_optimizer(optimizer)
+
+    base_in = [("base", (nbase,), F32)] if has_base else []
+
+    def call_client(pc_flat, x, base_tree):
+        pc = spec_c.unpack(pc_flat)
+        if has_base:
+            return model.client_fwd(pc, x, base_tree)
+        return model.client_fwd(pc, x)
+
+    def call_aux(pa_flat, smashed, base_tree):
+        pa = spec_a.unpack(pa_flat)
+        if has_base:
+            return model.aux_fwd(pa, smashed, base_tree)
+        return model.aux_fwd(pa, smashed)
+
+    def call_server(ps_flat, smashed, base_tree):
+        ps = spec_s.unpack(ps_flat)
+        if has_base:
+            return model.server_fwd(ps, smashed, base_tree)
+        return model.server_fwd(ps, smashed)
+
+    def base_tree_of(args):
+        if has_base:
+            return model.extra["base_spec"].unpack(args[0]), args[1:]
+        return None, args
+
+    def local_loss_fn(theta_l, x, y, bt):
+        sm = call_client(theta_l[:nc], x, bt)
+        logits = call_aux(theta_l[nc:], sm, bt)
+        return model.loss(logits, y)
+
+    def opt_inputs(prefix, dim):
+        if n_opt == 0:
+            return []
+        return [
+            (f"{prefix}_m", (dim,), F32),
+            (f"{prefix}_v", (dim,), F32),
+            (f"{prefix}_t", (), F32),
+        ]
+
+    entries: Dict[str, Entry] = {}
+
+    def add(e: Entry):
+        if which is None or e.name in which:
+            entries[e.name] = e
+
+    # -- client_fwd ---------------------------------------------------------
+    def client_fwd(*args):
+        bt, (pc, x) = base_tree_of(args)
+        return (call_client(pc, x, bt),)
+
+    add(Entry(
+        "client_fwd", client_fwd,
+        base_in + [("theta_c", (nc,), F32), ("x", (B,) + xs, xd)],
+        [("smashed", sm_shape, F32)],
+    ))
+
+    # -- zo_step -------------------------------------------------------------
+    def zo_step(*args):
+        bt, (theta_l, *rest) = base_tree_of(args)
+        if n_opt:
+            m, v, t, x, y, seed_i, mu, lr, n_pert = rest
+            opt = (m, v, t)
+        else:
+            x, y, seed_i, mu, lr, n_pert = rest
+            opt = ()
+        seed = _seed_u32(seed_i)
+        base_loss = local_loss_fn(theta_l, x, y, bt)
+
+        def probe(p, acc):
+            sp = fold_seed(seed, p)
+            u = perturbation(sp, nl)
+            if zo_mode == "sphere":
+                u = u * jax.lax.rsqrt(jnp.sum(u * u)) * np.float32(1.0)
+                scale = np.float32(nl)
+            else:
+                scale = np.float32(1.0)
+            lp = local_loss_fn(theta_l + mu * u, x, y, bt)
+            return acc + (scale * (lp - base_loss) / mu) * u
+
+        g = jax.lax.fori_loop(
+            0, n_pert, probe, jnp.zeros((nl,), jnp.float32)
+        ) / jnp.maximum(n_pert.astype(jnp.float32), 1.0)
+        theta2, opt2 = opt_update(theta_l, g, opt, lr)
+        return (theta2, *opt2, base_loss)
+
+    add(Entry(
+        "zo_step", zo_step,
+        base_in + [("theta_l", (nl,), F32)] + opt_inputs("opt", nl) + [
+            ("x", (B,) + xs, xd), ("y", (B,) + ys, yd),
+            ("seed", (), I32), ("mu", (), F32), ("lr", (), F32),
+            ("n_pert", (), I32),
+        ],
+        [("theta_l", (nl,), F32)]
+        + [(n, s, d) for n, s, d in opt_inputs("opt", nl)]
+        + [("loss", (), F32)],
+    ))
+
+    # -- fo_step -------------------------------------------------------------
+    def fo_step(*args):
+        bt, (theta_l, *rest) = base_tree_of(args)
+        if n_opt:
+            m, v, t, x, y, lr = rest
+            opt = (m, v, t)
+        else:
+            x, y, lr = rest
+            opt = ()
+        loss, g = jax.value_and_grad(local_loss_fn)(theta_l, x, y, bt)
+        theta2, opt2 = opt_update(theta_l, g, opt, lr)
+        return (theta2, *opt2, loss)
+
+    add(Entry(
+        "fo_step", fo_step,
+        base_in + [("theta_l", (nl,), F32)] + opt_inputs("opt", nl) + [
+            ("x", (B,) + xs, xd), ("y", (B,) + ys, yd), ("lr", (), F32),
+        ],
+        [("theta_l", (nl,), F32)]
+        + [(n, s, d) for n, s, d in opt_inputs("opt", nl)]
+        + [("loss", (), F32)],
+    ))
+
+    # -- server_step / server_step_cutgrad ------------------------------------
+    def server_loss_fn(theta_s, smashed, y, bt):
+        return model.loss(call_server(theta_s, smashed, bt), y)
+
+    def server_step(*args):
+        bt, (theta_s, *rest) = base_tree_of(args)
+        if n_opt:
+            m, v, t, smashed, y, lr = rest
+            opt = (m, v, t)
+        else:
+            smashed, y, lr = rest
+            opt = ()
+        loss, g = jax.value_and_grad(server_loss_fn)(theta_s, smashed, y, bt)
+        theta2, opt2 = opt_update(theta_s, g, opt, lr)
+        return (theta2, *opt2, loss)
+
+    add(Entry(
+        "server_step", server_step,
+        base_in + [("theta_s", (ns,), F32)] + opt_inputs("opt", ns) + [
+            ("smashed", sm_shape, F32), ("y", (B,) + ys, yd), ("lr", (), F32),
+        ],
+        [("theta_s", (ns,), F32)]
+        + [(n, s, d) for n, s, d in opt_inputs("opt", ns)]
+        + [("loss", (), F32)],
+    ))
+
+    def server_step_cutgrad(*args):
+        bt, (theta_s, *rest) = base_tree_of(args)
+        if n_opt:
+            m, v, t, smashed, y, lr = rest
+            opt = (m, v, t)
+        else:
+            smashed, y, lr = rest
+            opt = ()
+        loss, (g_s, g_sm) = jax.value_and_grad(
+            server_loss_fn, argnums=(0, 1)
+        )(theta_s, smashed, y, bt)
+        theta2, opt2 = opt_update(theta_s, g_s, opt, lr)
+        return (theta2, *opt2, loss, g_sm)
+
+    add(Entry(
+        "server_step_cutgrad", server_step_cutgrad,
+        base_in + [("theta_s", (ns,), F32)] + opt_inputs("opt", ns) + [
+            ("smashed", sm_shape, F32), ("y", (B,) + ys, yd), ("lr", (), F32),
+        ],
+        [("theta_s", (ns,), F32)]
+        + [(n, s, d) for n, s, d in opt_inputs("opt", ns)]
+        + [("loss", (), F32), ("g_smashed", sm_shape, F32)],
+    ))
+
+    # -- client_bp_step (traditional SFL: update from relayed cut gradient) ---
+    def client_bp_step(*args):
+        bt, (theta_c, *rest) = base_tree_of(args)
+        if n_opt:
+            m, v, t, x, g_sm, lr = rest
+            opt = (m, v, t)
+        else:
+            x, g_sm, lr = rest
+            opt = ()
+        _, vjp = jax.vjp(lambda tc: call_client(tc, x, bt), theta_c)
+        (g_c,) = vjp(g_sm)
+        theta2, opt2 = opt_update(theta_c, g_c, opt, lr)
+        return (theta2, *opt2)
+
+    add(Entry(
+        "client_bp_step", client_bp_step,
+        base_in + [("theta_c", (nc,), F32)] + opt_inputs("opt", nc) + [
+            ("x", (B,) + xs, xd), ("g_smashed", sm_shape, F32),
+            ("lr", (), F32),
+        ],
+        [("theta_c", (nc,), F32)]
+        + [(n, s, d) for n, s, d in opt_inputs("opt", nc)],
+    ))
+
+    # -- aux_align (FSL-SAGE: fit aux's cut-gradient to the server's) ---------
+    def aux_align(*args):
+        bt, (theta_l, smashed, y, g_sm, lr) = base_tree_of(args)
+
+        def align_loss(theta_a):
+            # FSL-SAGE-style alignment: make the aux head's cut-layer
+            # gradient *direction* match the server's. Cosine (per sample)
+            # is scale-free — raw MSE between two ~1e-3-magnitude gradients
+            # has vanishing curvature and trains at float32 noise level.
+            def aux_loss_of_sm(sm):
+                return model.loss(call_aux(theta_a, sm, bt), y)
+
+            g_aux = jax.grad(aux_loss_of_sm)(smashed)
+            ga = g_aux.reshape(g_aux.shape[0], -1)
+            gs = g_sm.reshape(g_sm.shape[0], -1)
+            cos = jnp.sum(ga * gs, -1) * jax.lax.rsqrt(
+                jnp.sum(ga * ga, -1) * jnp.sum(gs * gs, -1) + 1e-20
+            )
+            return 1.0 - jnp.mean(cos)
+
+        g_a = jax.grad(align_loss)(theta_l[nc:])
+        theta_a2 = theta_l[nc:] - lr * g_a
+        return (jnp.concatenate([theta_l[:nc], theta_a2]),)
+
+    add(Entry(
+        "aux_align", aux_align,
+        base_in + [
+            ("theta_l", (nl,), F32), ("smashed", sm_shape, F32),
+            ("y", (B,) + ys, yd), ("g_smashed", sm_shape, F32),
+            ("lr", (), F32),
+        ],
+        [("theta_l", (nl,), F32)],
+    ))
+
+    # -- eval_full -------------------------------------------------------------
+    ev_sm = (EB,) + tuple(model.smashed_shape)[0:]
+
+    def eval_full(*args):
+        bt, (theta_c, theta_s, x, y) = base_tree_of(args)
+        sm = call_client(theta_c, x, bt)
+        logits = call_server(theta_s, sm, bt)
+        if model.task == "lm":
+            s1, s2 = model.metric(logits, y)
+        else:
+            s1 = model.metric(logits, y)
+            s2 = jnp.asarray(float(EB), jnp.float32)
+        return (s1, s2)
+
+    add(Entry(
+        "eval_full", eval_full,
+        base_in + [
+            ("theta_c", (nc,), F32), ("theta_s", (ns,), F32),
+            ("x", (EB,) + xs, xd), ("y", (EB,) + ys, yd),
+        ],
+        [("stat1", (), F32), ("stat2", (), F32)],
+    ))
+
+    # -- local_loss / hvp (diagnostics + Fig 7 Lanczos) ------------------------
+    def local_loss(*args):
+        bt, (theta_l, x, y) = base_tree_of(args)
+        return (local_loss_fn(theta_l, x, y, bt),)
+
+    add(Entry(
+        "local_loss", local_loss,
+        base_in + [("theta_l", (nl,), F32), ("x", (B,) + xs, xd),
+                   ("y", (B,) + ys, yd)],
+        [("loss", (), F32)],
+    ))
+
+    def hvp(*args):
+        bt, (theta_l, x, y, vdir) = base_tree_of(args)
+        gfn = lambda t: jax.grad(local_loss_fn)(t, x, y, bt)
+        _, hv = jax.jvp(gfn, (theta_l,), (vdir,))
+        return (hv,)
+
+    add(Entry(
+        "hvp", hvp,
+        base_in + [("theta_l", (nl,), F32), ("x", (B,) + xs, xd),
+                   ("y", (B,) + ys, yd), ("v", (nl,), F32)],
+        [("hv", (nl,), F32)],
+    ))
+
+    return entries
+
+
+CORE_ENTRIES = ["client_fwd", "zo_step", "fo_step", "server_step", "eval_full"]
+FULL_ENTRIES = CORE_ENTRIES + [
+    "server_step_cutgrad", "client_bp_step", "aux_align", "local_loss", "hvp",
+]

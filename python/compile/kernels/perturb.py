@@ -1,0 +1,69 @@
+"""Counter-based perturbation generator used by the ZO estimator.
+
+The paper's Remark 4 observes that the ZO perturbation vector u never needs
+to be stored: it can be regenerated from a seed and applied in place.  We make
+that concrete with a *counter-based* generator: element ``idx`` of the
+perturbation stream for ``seed`` is a pure function ``gauss(seed, idx)``.
+
+The same function is implemented three times, bit-identically:
+
+* here in jnp (used inside the lowered ``zo_step`` HLO and as the kernel
+  oracle),
+* inside the Pallas kernel (``zo_perturbed_linear``), generated per-tile so
+  the full matrix U never exists in memory,
+* in Rust (``rust/src/zo/stream.rs``) for the streaming O(1)-memory update
+  demonstration and property tests.
+
+The scalar pipeline is integer hash -> 4x uniform -> Irwin-Hall(4) gaussian
+approximation, ``(sum - 2) * sqrt(3)`` (exact mean 0 / variance 1, and only
++,*,- on f32 so cross-language f32 results are bit-exact).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+_SQRT3 = np.float32(1.7320508075688772)
+_INV32 = np.float32(2.0**-32)
+_C1 = np.uint32(0x9E3779B9)
+_C2 = np.uint32(0x21F0AAAD)
+_C3 = np.uint32(0x735A2D97)
+
+
+def hash_u32(seed, idx):
+    """murmur3-finalizer-style avalanche of (seed, idx); uint32 -> uint32."""
+    x = (seed + idx * _C1).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C2
+    x = x ^ (x >> 15)
+    x = x * _C3
+    x = x ^ (x >> 15)
+    return x
+
+
+def gauss(seed, idx):
+    """Approximate N(0,1) draw for stream position ``idx`` (uint32 array).
+
+    Irwin-Hall(4): mean 2, var 4/12; normalized to mean 0 var 1.
+    """
+    idx4 = idx * np.uint32(4)
+    acc = jnp.zeros(idx.shape, jnp.float32)
+    for k in range(4):
+        h = hash_u32(seed, idx4 + np.uint32(k))
+        acc = acc + h.astype(jnp.float32) * _INV32
+    return (acc - np.float32(2.0)) * _SQRT3
+
+
+def perturbation(seed, n: int):
+    """Full perturbation vector u of length n for a uint32 scalar seed."""
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return gauss(jnp.asarray(seed, jnp.uint32), idx)
+
+
+def fold_seed(seed, k):
+    """Derive an independent sub-seed (e.g. per ZO probe index)."""
+    return hash_u32(
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(k, jnp.uint32) + np.uint32(0x517C_C1B7),
+    )

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has an oracle here with an identical signature;
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis and
+asserts allclose (bit-exact for the procedural perturbation, tolerance for
+matmul accumulation order).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .perturb import gauss, perturbation
+
+
+def perturbed_weight(w, seed, mu, offset=0):
+    """W + mu * U where U is the procedural stream starting at ``offset``."""
+    n = w.size
+    idx = jnp.arange(n, dtype=jnp.uint32) + np.uint32(offset)
+    u = gauss(jnp.asarray(seed, jnp.uint32), idx).reshape(w.shape)
+    return w + mu * u
+
+
+def zo_perturbed_linear_ref(x, w, seed, mu, offset=0):
+    """Oracle for the perturbed-forward kernel: x @ (W + mu*U(seed))."""
+    return x @ perturbed_weight(w, seed, mu, offset)
+
+
+def lora_linear_ref(x, w, a, b, scale):
+    """Oracle for the fused LoRA projection: x@W + (x@A)@B * scale."""
+    return x @ w + (x @ a) @ b * scale
+
+
+def zo_grad_ref(loss_fn, theta, seed, mu):
+    """Reference two-point ZO gradient estimate on a flat parameter vector.
+
+    g_hat = (loss(theta + mu*u) - loss(theta)) / mu * u,  u = U(seed).
+    """
+    u = perturbation(seed, theta.size)
+    lp = loss_fn(theta + mu * u)
+    lb = loss_fn(theta)
+    return (lp - lb) / mu * u, lb

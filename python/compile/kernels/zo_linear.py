@@ -1,0 +1,104 @@
+"""Pallas kernel: perturbed linear forward for zeroth-order probes.
+
+``zo_perturbed_linear(x, w, seed, mu)`` computes ``x @ (W + mu * U(seed))``
+where ``U`` is the counter-based perturbation stream of ``perturb.py``.
+
+TPU mapping of the paper's insight (see DESIGN.md §6):
+
+* The full perturbation matrix U never exists in HBM — each grid step
+  regenerates its (bk, bn) tile of U in VMEM from ``(seed, flat index)``.
+  This is the kernel-level form of the paper's Remark 4 (O(1) perturbation
+  memory), and it is what makes ZO probes memory-neutral relative to plain
+  inference.
+* Grid is (M/bm, N/bn, K/bk) with the K axis innermost; the output tile acts
+  as the VMEM accumulator (its index map ignores k, so it stays resident
+  across the K loop); x tiles stream HBM->VMEM once per (i, k).
+* Block shapes default to MXU-shaped 128x128x128 when the operands are big
+  enough and fall back to the full (small) dims otherwise — the CPU interpret
+  path exercises the same BlockSpec schedule.
+
+Numerics are bit-identical to ``ref.zo_perturbed_linear_ref`` because both
+paths evaluate the same f32 +,*,- pipeline per element (matmul accumulation
+order can differ; tests use tight allclose).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .perturb import _C1, _C2, _C3, _INV32, _SQRT3
+
+
+def _tile_gauss(seed_u32, row0, col0, bk, bn, n_cols):
+    """(bk, bn) tile of the perturbation stream U for a weight of n_cols."""
+    i = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0) + row0
+    j = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1) + col0
+    idx4 = (i * np.uint32(n_cols) + j) * np.uint32(4)
+    acc = jnp.zeros((bk, bn), jnp.float32)
+    for k in range(4):
+        x = (seed_u32 + (idx4 + np.uint32(k)) * _C1).astype(jnp.uint32)
+        x = x ^ (x >> 16)
+        x = x * _C2
+        x = x ^ (x >> 15)
+        x = x * _C3
+        x = x ^ (x >> 15)
+        acc = acc + x.astype(jnp.float32) * _INV32
+    return (acc - np.float32(2.0)) * _SQRT3
+
+
+def _kernel(x_ref, w_ref, seed_ref, mu_ref, o_ref, *, bk, bn, n_cols):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row0 = (k * np.uint32(bk)).astype(jnp.uint32)
+    col0 = (pl.program_id(1) * np.uint32(bn)).astype(jnp.uint32)
+    u = _tile_gauss(seed_ref[0], row0, col0, bk, bn, n_cols)
+    wp = w_ref[...] + mu_ref[0] * u
+    o_ref[...] += jnp.dot(x_ref[...], wp, preferred_element_type=jnp.float32)
+
+
+def _pick(block, dim):
+    return block if dim % block == 0 and dim >= block else dim
+
+
+def zo_perturbed_linear(x, w, seed, mu, *, bm=128, bn=128, bk=128,
+                        interpret=True):
+    """x:(M,K) @ (w:(K,N) + mu*U(seed)) with U generated per-tile in VMEM."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, kdim)
+    grid = (m // bm, n // bn, kdim // bk)
+    seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
+    mu = jnp.asarray(mu, jnp.float32).reshape((1,))
+    kern = functools.partial(_kernel, bk=bk, bn=bn, n_cols=n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, seed, mu)
+
+
+def vmem_bytes(bm, bn, bk):
+    """Estimated VMEM working set of one grid step (f32 operands + acc).
+
+    x tile + w tile + u tile + accumulator/output tile. Used by the §Perf
+    roofline notes in EXPERIMENTS.md.
+    """
+    return 4 * (bm * bk + bk * bn + bk * bn + bm * bn)

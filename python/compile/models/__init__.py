@@ -1,0 +1,9 @@
+"""L2 model zoo: split-federated model definitions over the flat-param ABI.
+
+Each model family exposes a ``SplitModel`` (see ``base.py``): client forward,
+aux forward, server forward, loss/metric functions, parameter specs, and the
+analytic cost model (activation bytes + FLOPs) that feeds the Rust resource
+accounting (paper Tables I-III).
+"""
+
+from .base import SplitModel, CostModel  # noqa: F401

@@ -1,0 +1,80 @@
+"""Common interface for split-federated models.
+
+A ``SplitModel`` is a purely functional description of the three sub-models
+the SFL protocol shuffles around:
+
+    client_fwd(theta_c_tree, x)            -> smashed
+    aux_fwd(theta_a_tree, smashed)         -> logits over targets
+    server_fwd(theta_s_tree, smashed)      -> logits over targets
+    loss(logits, y)                        -> scalar mean loss
+    metric(logits, y)                      -> scalar sum-statistic
+                                              (correct count / token nll sum)
+
+plus the parameter specs and the cost model. The ZO/FO/server entry points in
+``entries.py`` are generated from this interface only — model families never
+see the protocol.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from ..params import Spec
+
+
+@dataclass
+class CostModel:
+    """Analytic per-sample resource model emitted into the manifest.
+
+    All byte figures are f32 (4 bytes/elt), per *sample* (multiply by batch
+    in Rust). ``act_cache_bytes`` is the total activation footprint retained
+    for a backward pass; ``act_peak_bytes`` is the largest single transient
+    activation (the inference/ZO peak). ``flops_fwd`` is one forward pass.
+    These feed the paper's Table I formulas in
+    rust/src/coordinator/accounting.rs.
+    """
+
+    params_client: int = 0
+    params_aux: int = 0
+    params_server: int = 0
+    act_cache_client: int = 0
+    act_cache_aux: int = 0
+    act_cache_server: int = 0
+    act_peak_client: int = 0
+    act_peak_aux: int = 0
+    act_peak_server: int = 0
+    flops_fwd_client: int = 0
+    flops_fwd_aux: int = 0
+    flops_fwd_server: int = 0
+    smashed_elems: int = 0
+    target_elems: int = 1
+
+    def manifest(self) -> dict:
+        return {k: int(v) for k, v in self.__dict__.items()}
+
+
+@dataclass
+class SplitModel:
+    name: str
+    spec_client: Spec
+    spec_aux: Spec
+    spec_server: Spec
+    client_fwd: Callable
+    aux_fwd: Callable
+    server_fwd: Callable
+    loss: Callable
+    metric: Callable
+    init: Callable  # (np_rng) -> (tree_c, tree_a, tree_s)
+    cost: CostModel
+    batch: int
+    eval_batch: int
+    x_shape: Tuple[int, ...]  # per-sample input shape
+    y_shape: Tuple[int, ...]  # per-sample target shape ( () for class id )
+    x_dtype: str = "f32"
+    y_dtype: str = "i32"
+    smashed_shape: Tuple[int, ...] = ()
+    task: str = "vision"  # "vision" | "lm"
+    extra: Dict = field(default_factory=dict)

@@ -1,0 +1,255 @@
+"""MiniResNet: the vision family (paper §VI-B, ResNet-18/CIFAR-10 analog).
+
+Architecture (NHWC, 16x16x3 SynthCIFAR input):
+
+    stem:   conv3x3 3->16, BN, relu
+    block1: residual [conv3x3 16->16, BN, relu, conv3x3 16->16, BN] + id
+    block2: residual stride-2 16->32 (1x1 stride-2 projection skip)
+    block3: residual stride-2 32->64
+    head:   global avg pool, fc 64->10
+
+Split points (paper Fig 4 "Client Size 1 / 2"):
+
+    cut1: client = stem + block1          (smashed 16x16x16)
+    cut2: client = stem + block1 + block2 (smashed  8x8x32)
+
+Aux head per the paper's minimal design: global pool + fc(C_cut -> 10).
+
+BatchNorm uses batch statistics only (no running buffers) so every entry
+point stays a pure function of (params, batch); see DESIGN.md §5 for why this
+substitution is algorithm-neutral.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..params import Spec, fan_in_init
+from .base import CostModel, SplitModel
+
+H = W = 16
+CIN = 3
+NCLASS = 10
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# layer primitives (functional, NHWC)
+# ---------------------------------------------------------------------------
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def batchnorm(x, gamma, beta):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + BN_EPS)
+    return xn * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# parameterized blocks: each block contributes spec entries + a forward fn
+# ---------------------------------------------------------------------------
+
+
+def _stem_spec(prefix: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    return [
+        (f"{prefix}.conv.w", (3, 3, CIN, 16)),
+        (f"{prefix}.bn.g", (16,)),
+        (f"{prefix}.bn.b", (16,)),
+    ]
+
+
+def _stem_fwd(p: Dict, prefix: str, x):
+    x = conv(x, p[f"{prefix}.conv.w"])
+    x = batchnorm(x, p[f"{prefix}.bn.g"], p[f"{prefix}.bn.b"])
+    return jax.nn.relu(x)
+
+
+def _block_spec(prefix, cin, cout, stride):
+    s = [
+        (f"{prefix}.conv1.w", (3, 3, cin, cout)),
+        (f"{prefix}.bn1.g", (cout,)),
+        (f"{prefix}.bn1.b", (cout,)),
+        (f"{prefix}.conv2.w", (3, 3, cout, cout)),
+        (f"{prefix}.bn2.g", (cout,)),
+        (f"{prefix}.bn2.b", (cout,)),
+    ]
+    if stride != 1 or cin != cout:
+        s.append((f"{prefix}.proj.w", (1, 1, cin, cout)))
+    return s
+
+
+def _block_fwd(p, prefix, x, cin, cout, stride):
+    h = conv(x, p[f"{prefix}.conv1.w"], stride)
+    h = jax.nn.relu(batchnorm(h, p[f"{prefix}.bn1.g"], p[f"{prefix}.bn1.b"]))
+    h = conv(h, p[f"{prefix}.conv2.w"])
+    h = batchnorm(h, p[f"{prefix}.bn2.g"], p[f"{prefix}.bn2.b"])
+    skip = x
+    if stride != 1 or cin != cout:
+        skip = conv(x, p[f"{prefix}.proj.w"], stride)
+    return jax.nn.relu(h + skip)
+
+
+BLOCKS = [  # (name, cin, cout, stride, out_hw)
+    ("block1", 16, 16, 1, 16),
+    ("block2", 16, 32, 2, 8),
+    ("block3", 32, 64, 2, 4),
+]
+
+
+# ---------------------------------------------------------------------------
+# cost model helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv_flops(hw, cin, cout, k=3):
+    return 2 * hw * hw * cin * cout * k * k
+
+
+def _stem_cost():
+    acts = H * W * 16 * 4 * 3  # conv out, bn out, relu out retained for bwd
+    flops = _conv_flops(H, CIN, 16) + 4 * H * W * 16  # conv + bn/relu elemwise
+    return acts, flops, H * W * 16 * 4
+
+
+def _block_cost(cin, cout, stride, hw_out):
+    hw_in = hw_out * stride
+    # retained: conv1/bn1/relu1, conv2/bn2, skip, sum-relu (per-sample f32)
+    acts = (6 * hw_out * hw_out * cout) * 4
+    flops = (
+        _conv_flops(hw_out, cin, cout)
+        + _conv_flops(hw_out, cout, cout)
+        + ((2 * hw_out * hw_out * cin * cout) if (stride != 1 or cin != cout) else 0)
+        + 8 * hw_out * hw_out * cout
+    )
+    peak = hw_in * hw_in * cin * 4 + hw_out * hw_out * cout * 4
+    return acts, flops, peak
+
+
+# ---------------------------------------------------------------------------
+# model factory
+# ---------------------------------------------------------------------------
+
+
+def build(cut: int, batch: int = 32, eval_batch: int = 256) -> SplitModel:
+    """cut = number of residual blocks on the client (1 or 2)."""
+    assert cut in (1, 2)
+    client_blocks = BLOCKS[:cut]
+    server_blocks = BLOCKS[cut:]
+    c_cut = client_blocks[-1][2]
+    hw_cut = client_blocks[-1][4]
+
+    spec_c = Spec(
+        _stem_spec("stem")
+        + [e for b in client_blocks for e in _block_spec(b[0], b[1], b[2], b[3])]
+    )
+    spec_a = Spec([("aux.fc.w", (c_cut, NCLASS)), ("aux.fc.b", (NCLASS,))])
+    spec_s = Spec(
+        [e for b in server_blocks for e in _block_spec(b[0], b[1], b[2], b[3])]
+        + [("head.fc.w", (64, NCLASS)), ("head.fc.b", (NCLASS,))]
+    )
+
+    def client_fwd(p, x):
+        h = _stem_fwd(p, "stem", x)
+        for name, cin, cout, stride, _ in client_blocks:
+            h = _block_fwd(p, name, h, cin, cout, stride)
+        return h
+
+    def aux_fwd(p, smashed):
+        pooled = jnp.mean(smashed, axis=(1, 2))
+        return pooled @ p["aux.fc.w"] + p["aux.fc.b"]
+
+    def server_fwd(p, smashed):
+        h = smashed
+        for name, cin, cout, stride, _ in server_blocks:
+            h = _block_fwd(p, name, h, cin, cout, stride)
+        pooled = jnp.mean(h, axis=(1, 2))
+        return pooled @ p["head.fc.w"] + p["head.fc.b"]
+
+    def loss(logits, y):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    def metric(logits, y):
+        return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+    def init(rng: np.random.Generator):
+        def tree_for(spec: Spec):
+            t = {}
+            for name, shape in spec.entries:
+                if name.endswith(".g"):
+                    t[name] = np.ones(shape, np.float32)
+                elif name.endswith(".b"):
+                    t[name] = np.zeros(shape, np.float32)
+                elif name.endswith(".w") and len(shape) == 4:
+                    fan = shape[0] * shape[1] * shape[2]
+                    t[name] = fan_in_init(rng, shape, fan)
+                else:  # fc weight / bias
+                    fan = shape[0] if len(shape) == 2 else 1
+                    t[name] = (
+                        fan_in_init(rng, shape, fan)
+                        if len(shape) == 2
+                        else np.zeros(shape, np.float32)
+                    )
+            return t
+
+        return tree_for(spec_c), tree_for(spec_a), tree_for(spec_s)
+
+    # ---- cost model -------------------------------------------------------
+    cost = CostModel()
+    cost.params_client = spec_c.size
+    cost.params_aux = spec_a.size
+    cost.params_server = spec_s.size
+    a, f, p = _stem_cost()
+    cost.act_cache_client += a
+    cost.flops_fwd_client += f
+    cost.act_peak_client = max(cost.act_peak_client, p)
+    for name, cin, cout, stride, hw in client_blocks:
+        a, f, p = _block_cost(cin, cout, stride, hw)
+        cost.act_cache_client += a
+        cost.flops_fwd_client += f
+        cost.act_peak_client = max(cost.act_peak_client, p)
+    for name, cin, cout, stride, hw in server_blocks:
+        a, f, p = _block_cost(cin, cout, stride, hw)
+        cost.act_cache_server += a
+        cost.flops_fwd_server += f
+        cost.act_peak_server = max(cost.act_peak_server, p)
+    cost.act_cache_aux = (c_cut + NCLASS) * 4
+    cost.act_peak_aux = hw_cut * hw_cut * c_cut * 4
+    cost.flops_fwd_aux = 2 * c_cut * NCLASS + hw_cut * hw_cut * c_cut
+    cost.flops_fwd_server += 2 * 64 * NCLASS
+    cost.act_cache_server += (64 + NCLASS) * 4
+    cost.smashed_elems = hw_cut * hw_cut * c_cut
+    cost.target_elems = 1
+
+    return SplitModel(
+        name=f"cnn_c{cut}",
+        spec_client=spec_c,
+        spec_aux=spec_a,
+        spec_server=spec_s,
+        client_fwd=client_fwd,
+        aux_fwd=aux_fwd,
+        server_fwd=server_fwd,
+        loss=loss,
+        metric=metric,
+        init=init,
+        cost=cost,
+        batch=batch,
+        eval_batch=eval_batch,
+        x_shape=(H, W, CIN),
+        y_shape=(),
+        smashed_shape=(hw_cut, hw_cut, c_cut),
+        task="vision",
+    )

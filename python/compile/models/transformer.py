@@ -1,0 +1,374 @@
+"""GPT2-nano/micro: the language family (paper §VI-C, GPT2-Small/Medium analog).
+
+A byte-level GPT-2-shaped decoder, pretrained *in-repo* on the SynthE2E
+corpus (aot.py caches the pretrained base), then LoRA fine-tuned under SFL:
+
+* frozen base weights travel as one flat f32 "base" input tensor (stored as
+  ``artifacts/<variant>/frozen_base.bin``; baking ~1M floats into HLO text
+  constants would explode artifact size),
+* trainable parameters are LoRA adapters (rank r on the q and v projections
+  of every block) plus the aux head's final-LN scale/shift,
+* the aux network is ``m`` transformer blocks + LN + tied unembedding, its
+  base initialized by *copying the first server blocks* (paper §VI-A).
+
+Splits mirror the paper: nano (4 blocks) client=1; micro (6 blocks)
+client∈{2,3} with aux∈{0..3} blocks for the Fig 6 ablation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import synth
+from ..kernels.lora_linear import lora_linear
+from ..kernels.ref import lora_linear_ref
+from ..params import Spec, fan_in_init
+from .base import CostModel, SplitModel
+
+LN_EPS = 1e-5
+
+
+class Dims:
+    def __init__(self, d, heads, blocks, mlp, seq=synth.SEQ_LEN,
+                 vocab=synth.VOCAB, rank=4, alpha=8.0):
+        self.d, self.heads, self.blocks, self.mlp = d, heads, blocks, mlp
+        self.seq, self.vocab, self.rank, self.alpha = seq, vocab, rank, alpha
+        self.head_dim = d // heads
+
+
+NANO = Dims(d=64, heads=4, blocks=4, mlp=256)
+MICRO = Dims(d=96, heads=6, blocks=6, mlp=384)
+
+
+# ---------------------------------------------------------------------------
+# base parameter spec (frozen)
+# ---------------------------------------------------------------------------
+
+
+def _block_base(prefix: str, dm: Dims):
+    d, m = dm.d, dm.mlp
+    return [
+        (f"{prefix}.ln1.g", (d,)), (f"{prefix}.ln1.b", (d,)),
+        (f"{prefix}.q.w", (d, d)), (f"{prefix}.k.w", (d, d)),
+        (f"{prefix}.v.w", (d, d)), (f"{prefix}.o.w", (d, d)),
+        (f"{prefix}.ln2.g", (d,)), (f"{prefix}.ln2.b", (d,)),
+        (f"{prefix}.fc.w", (d, m)), (f"{prefix}.fc.b", (m,)),
+        (f"{prefix}.proj.w", (m, d)), (f"{prefix}.proj.b", (d,)),
+    ]
+
+
+def base_spec(dm: Dims, aux_blocks: int) -> Spec:
+    entries = [("emb", (dm.vocab, dm.d)), ("pos", (dm.seq, dm.d))]
+    for i in range(dm.blocks):
+        entries += _block_base(f"blk{i}", dm)
+    entries += [("lnf.g", (dm.d,)), ("lnf.b", (dm.d,))]
+    for j in range(aux_blocks):
+        entries += _block_base(f"aux{j}", dm)
+    entries += [("auxlnf.g", (dm.d,)), ("auxlnf.b", (dm.d,))]
+    return Spec(entries)
+
+
+def _block_lora(prefix: str, dm: Dims):
+    d, r = dm.d, dm.rank
+    return [
+        (f"{prefix}.q.A", (d, r)), (f"{prefix}.q.B", (r, d)),
+        (f"{prefix}.v.A", (d, r)), (f"{prefix}.v.B", (r, d)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def _lora_proj(x2d, w, lora, pa, pb, scale, use_pallas):
+    """(T*B, d) LoRA projection; pallas kernel or jnp oracle path."""
+    if lora is None:
+        return x2d @ w
+    fn = lora_linear if use_pallas else lora_linear_ref
+    return fn(x2d, w, lora[pa], lora[pb], scale)
+
+
+def block_fwd(base, lora, prefix, dm: Dims, h, use_pallas):
+    """h: (B, T, d). lora may be None (frozen block) or a tree with
+    {prefix}.{q,v}.{A,B}."""
+    b, t, d = h.shape
+    scale = dm.alpha / dm.rank
+    x = layer_norm(h, base[f"{prefix}.ln1.g"], base[f"{prefix}.ln1.b"])
+    x2 = x.reshape(b * t, d)
+    q = _lora_proj(x2, base[f"{prefix}.q.w"], lora,
+                   f"{prefix}.q.A", f"{prefix}.q.B", scale, use_pallas)
+    k = x2 @ base[f"{prefix}.k.w"]
+    v = _lora_proj(x2, base[f"{prefix}.v.w"], lora,
+                   f"{prefix}.v.A", f"{prefix}.v.B", scale, use_pallas)
+
+    def split(z):
+        return z.reshape(b, t, dm.heads, dm.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) / np.float32(
+        np.sqrt(dm.head_dim)
+    )
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    att = jnp.where(mask[None, None] > 0, att, np.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b * t, d)
+    h = h + (out @ base[f"{prefix}.o.w"]).reshape(b, t, d)
+
+    x = layer_norm(h, base[f"{prefix}.ln2.g"], base[f"{prefix}.ln2.b"])
+    x2 = x.reshape(b * t, d)
+    ff = jax.nn.gelu(x2 @ base[f"{prefix}.fc.w"] + base[f"{prefix}.fc.b"])
+    h = h + (ff @ base[f"{prefix}.proj.w"] + base[f"{prefix}.proj.b"]).reshape(
+        b, t, d
+    )
+    return h
+
+
+def embed(base, tokens, dm: Dims):
+    h = base["emb"][tokens] + base["pos"][None, : tokens.shape[1]]
+    return h
+
+
+def unembed(base, h):
+    return h @ base["emb"].T
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def _block_flops(dm: Dims, lora: bool):
+    d, t, m = dm.d, dm.seq, dm.mlp
+    f = 2 * d * d * 4  # qkvo per token
+    f += 2 * 2 * t * d  # attention scores + mix per token
+    f += 2 * d * m * 2  # mlp per token
+    if lora:
+        f += 2 * 2 * (d * dm.rank + dm.rank * d)  # q,v adapters
+    return f * t  # per sample (t tokens)
+
+
+def _block_act_cache(dm: Dims):
+    d, t, m = dm.d, dm.seq, dm.mlp
+    per_tok = 10 * d + 2 * m + dm.heads * t  # ln/qkv/att/out/mlp retained
+    return per_tok * t * 4
+
+
+# ---------------------------------------------------------------------------
+# model factory
+# ---------------------------------------------------------------------------
+
+
+def build(dm: Dims, client_blocks: int, aux_blocks: int, *, batch=8,
+          eval_batch=32, use_pallas=False, name=None) -> SplitModel:
+    nb = dm.blocks
+    assert 1 <= client_blocks < nb
+    server_ids = list(range(client_blocks, nb))
+    client_ids = list(range(client_blocks))
+
+    spec_c = Spec([e for i in client_ids for e in _block_lora(f"blk{i}", dm)])
+    spec_a = Spec(
+        [e for j in range(aux_blocks) for e in _block_lora(f"aux{j}", dm)]
+        + [("auxlnf_d.g", (dm.d,)), ("auxlnf_d.b", (dm.d,))]
+    )
+    spec_s = Spec([e for i in server_ids for e in _block_lora(f"blk{i}", dm)])
+    bspec = base_spec(dm, aux_blocks)
+
+    def client_fwd(p, x, base):
+        h = embed(base, x, dm)
+        for i in client_ids:
+            h = block_fwd(base, p, f"blk{i}", dm, h, use_pallas)
+        return h
+
+    def aux_fwd(p, smashed, base):
+        h = smashed
+        for j in range(aux_blocks):
+            h = block_fwd(base, p, f"aux{j}", dm, h, use_pallas)
+        g = base["auxlnf.g"] + p["auxlnf_d.g"]
+        b = base["auxlnf.b"] + p["auxlnf_d.b"]
+        h = layer_norm(h, g, b)
+        return unembed(base, h)
+
+    def server_fwd(p, smashed, base):
+        h = smashed
+        for i in server_ids:
+            h = block_fwd(base, p, f"blk{i}", dm, h, use_pallas)
+        h = layer_norm(h, base["lnf.g"], base["lnf.b"])
+        return unembed(base, h)
+
+    def loss(logits, y):
+        # next-token CE, pad-masked mean
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = y[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt != synth.PAD).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def metric(logits, y):
+        # (nll_sum, token_count) folded into one call by entries.py
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = y[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt != synth.PAD).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    def init(rng: np.random.Generator):
+        def lora_tree(spec: Spec):
+            t = {}
+            for nm, shape in spec.entries:
+                if nm.endswith(".A"):
+                    t[nm] = fan_in_init(rng, shape, shape[0])
+                else:  # .B and LN deltas start at zero (LoRA convention)
+                    t[nm] = np.zeros(shape, np.float32)
+            return t
+
+        return lora_tree(spec_c), lora_tree(spec_a), lora_tree(spec_s)
+
+    # ---- cost model -------------------------------------------------------
+    cost = CostModel()
+    cost.params_client = spec_c.size
+    cost.params_aux = spec_a.size
+    cost.params_server = spec_s.size
+    t, d = dm.seq, dm.d
+    cost.flops_fwd_client = len(client_ids) * _block_flops(dm, True) + 2 * t * d
+    cost.flops_fwd_aux = (
+        aux_blocks * _block_flops(dm, True) + 2 * t * d * dm.vocab
+    )
+    cost.flops_fwd_server = (
+        len(server_ids) * _block_flops(dm, True) + 2 * t * d * dm.vocab
+    )
+    cost.act_cache_client = len(client_ids) * _block_act_cache(dm) + t * d * 4
+    cost.act_cache_aux = aux_blocks * _block_act_cache(dm) + t * dm.vocab * 4
+    cost.act_cache_server = (
+        len(server_ids) * _block_act_cache(dm) + t * dm.vocab * 4
+    )
+    cost.act_peak_client = t * max(4 * d, dm.heads * t) * 4
+    cost.act_peak_aux = t * dm.vocab * 4
+    cost.act_peak_server = t * dm.vocab * 4
+    cost.smashed_elems = t * d
+    cost.target_elems = t
+
+    fam = "gpt2nano" if dm is NANO else "gpt2micro"
+    return SplitModel(
+        name=name or f"{fam}_c{client_blocks}_a{aux_blocks}",
+        spec_client=spec_c,
+        spec_aux=spec_a,
+        spec_server=spec_s,
+        client_fwd=client_fwd,
+        aux_fwd=aux_fwd,
+        server_fwd=server_fwd,
+        loss=loss,
+        metric=metric,
+        init=init,
+        cost=cost,
+        batch=batch,
+        eval_batch=eval_batch,
+        x_shape=(dm.seq,),
+        y_shape=(dm.seq,),
+        x_dtype="i32",
+        y_dtype="i32",
+        smashed_shape=(dm.seq, dm.d),
+        task="lm",
+        extra={
+            "dims": dm,
+            "base_spec": bspec,
+            "client_ids": client_ids,
+            "server_ids": server_ids,
+            "aux_blocks": aux_blocks,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-repo pretraining of the frozen base (full-parameter, pure jax)
+# ---------------------------------------------------------------------------
+
+
+def init_base(dm: Dims, rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    base = {}
+    spec = base_spec(dm, aux_blocks=0)  # aux copies appended later
+    for nm, shape in spec.entries:
+        if nm.endswith(".g"):
+            base[nm] = np.ones(shape, np.float32)
+        elif nm.endswith((".b",)):
+            base[nm] = np.zeros(shape, np.float32)
+        elif nm in ("emb", "pos"):
+            base[nm] = rng.standard_normal(shape).astype(np.float32) * 0.02
+        else:
+            base[nm] = fan_in_init(rng, shape, shape[0])
+    return base
+
+
+def full_fwd(base, tokens, dm: Dims):
+    h = embed(base, tokens, dm)
+    for i in range(dm.blocks):
+        h = block_fwd(base, None, f"blk{i}", dm, h, False)
+    h = layer_norm(h, base["lnf.g"], base["lnf.b"])
+    return unembed(base, h)
+
+
+def pretrain(dm: Dims, steps: int = 250, batch: int = 16, seed: int = 7,
+             lr: float = 3e-3, log=lambda s: None):
+    """Adam pretraining on SynthE2E; returns (base_tree, final_loss)."""
+    rng = np.random.default_rng(seed)
+    base = {k: jnp.asarray(v) for k, v in init_base(dm, rng).items()}
+
+    def loss_fn(params, toks):
+        logits = full_fwd(params, toks, dm)
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        tgt = toks[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt != synth.PAD).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    m = jax.tree.map(jnp.zeros_like, base)
+    v = jax.tree.map(jnp.zeros_like, base)
+
+    @jax.jit
+    def adam(params, m, v, g, t):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        params = jax.tree.map(
+            lambda p, mm, vv: p
+            - lr * (mm / (1 - b1**t)) / (jnp.sqrt(vv / (1 - b2**t)) + eps),
+            params, m, v,
+        )
+        return params, m, v
+
+    final = 0.0
+    for step in range(steps):
+        toks = jnp.asarray(
+            synth.text_batch(0xE2E0 + seed, step * batch, batch, style=0)
+        )
+        final, g = grad_fn(base, toks)
+        base, m, v = adam(base, m, v, g, step + 1.0)
+        if step % 50 == 0:
+            log(f"  pretrain[{dm.d}d/{dm.blocks}b] step {step}: loss {float(final):.3f}")
+    return {k: np.asarray(x) for k, x in base.items()}, float(final)
+
+
+def attach_aux_base(base: Dict[str, np.ndarray], dm: Dims,
+                    client_blocks: int, aux_blocks: int):
+    """Copy the first server blocks into the aux base (paper's aux init)."""
+    out = dict(base)
+    for j in range(aux_blocks):
+        src = f"blk{min(client_blocks + j, dm.blocks - 1)}"
+        for nm, _ in _block_base("X", dm):
+            leaf = nm[2:]  # strip "X."
+            out[f"aux{j}.{leaf}"] = base[f"{src}.{leaf}"].copy()
+    out["auxlnf.g"] = base["lnf.g"].copy()
+    out["auxlnf.b"] = base["lnf.b"].copy()
+    return out

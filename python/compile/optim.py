@@ -1,0 +1,59 @@
+"""In-graph optimizers over flat parameter vectors.
+
+Both optimizers operate on the flat f32 ABI of ``params.py`` so the optimizer
+state threads through HLO entry points as plain tensors:
+
+* SGD — stateless, ``opt = ()``.
+* Adam — ``opt = (m, v, t)`` with m, v the same length as the params and t a
+  scalar step counter carried as f32. Matches the paper's ResNet setup
+  (Adam on both sides, lr 1e-4).
+
+``make_optimizer(name)`` returns ``(init_fn, update_fn, n_state)`` where
+``update_fn(theta, grad, opt, lr) -> (theta', opt')`` and ``n_state`` is the
+number of extra state tensors (used by entries.py to shape the HLO
+signature).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+ADAM_B1 = np.float32(0.9)
+ADAM_B2 = np.float32(0.999)
+ADAM_EPS = np.float32(1e-8)
+
+
+def sgd_init(dim: int):
+    return ()
+
+
+def sgd_update(theta, grad, opt, lr):
+    return theta - lr * grad, ()
+
+
+def adam_init(dim: int):
+    return (
+        jnp.zeros((dim,), jnp.float32),
+        jnp.zeros((dim,), jnp.float32),
+        jnp.zeros((), jnp.float32),
+    )
+
+
+def adam_update(theta, grad, opt, lr):
+    m, v, t = opt
+    t = t + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, (m, v, t)
+
+
+def make_optimizer(name: str):
+    if name == "sgd":
+        return sgd_init, sgd_update, 0
+    if name == "adam":
+        return adam_init, adam_update, 3
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,77 @@
+"""Flat-parameter packing: the L2 <-> L3 parameter ABI.
+
+Rust holds every parameter group (client / aux / server) as one flat f32
+vector and passes it to HLO entries verbatim. This module defines the layout:
+a ``Spec`` is an ordered list of ``(name, shape)``; ``pack``/``unpack``
+convert between a dict of arrays and the flat vector with *static* offsets
+(so unpack lowers to pure slices — no gathers).
+
+The layout is exported into the artifact manifest so Rust can initialize,
+checkpoint, and aggregate parameters without ever materializing shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Shape = Tuple[int, ...]
+
+
+class Spec:
+    """Ordered (name, shape) layout of one flat parameter vector."""
+
+    def __init__(self, entries: Sequence[Tuple[str, Shape]]):
+        self.entries: List[Tuple[str, Shape]] = [
+            (n, tuple(s)) for n, s in entries
+        ]
+        self.offsets: Dict[str, int] = {}
+        off = 0
+        for name, shape in self.entries:
+            if name in self.offsets:
+                raise ValueError(f"duplicate param name {name!r}")
+            self.offsets[name] = off
+            off += int(np.prod(shape)) if shape else 1
+        self.size = off
+
+    def __len__(self):
+        return len(self.entries)
+
+    def shape(self, name: str) -> Shape:
+        for n, s in self.entries:
+            if n == name:
+                return s
+        raise KeyError(name)
+
+    def pack(self, tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        missing = [n for n, _ in self.entries if n not in tree]
+        if missing:
+            raise KeyError(f"missing params: {missing}")
+        return jnp.concatenate(
+            [jnp.ravel(tree[n]).astype(jnp.float32) for n, _ in self.entries]
+        ) if self.entries else jnp.zeros((0,), jnp.float32)
+
+    def unpack(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for name, shape in self.entries:
+            off = self.offsets[name]
+            n = int(np.prod(shape)) if shape else 1
+            out[name] = flat[off : off + n].reshape(shape)
+        return out
+
+    def manifest(self) -> dict:
+        return {
+            "size": self.size,
+            "entries": [
+                {"name": n, "shape": list(s)} for n, s in self.entries
+            ],
+        }
+
+
+def fan_in_init(rng, shape: Shape, fan_in: int) -> np.ndarray:
+    """He-style init used by both model families (numpy RNG, build-time)."""
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return rng.standard_normal(shape).astype(np.float32) * np.float32(std)

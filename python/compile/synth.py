@@ -1,0 +1,191 @@
+"""Deterministic synthetic data generators, mirrored bit-for-bit in Rust.
+
+Both the vision set ("SynthCIFAR") and the text corpus ("SynthE2E") are pure
+functions of ``(seed, index)`` built on a splitmix64 finalizer, so the Rust
+coordinator (rust/src/data/) and this module generate identical streams.
+Integer draws (labels, field choices) match exactly across languages; float
+images match to ~1e-5 (libm sin differs in ulps).
+
+The cross-language contract is pinned by golden tests:
+``aot.py`` writes sample digests into ``artifacts/manifest.json`` and the Rust
+test suite regenerates and compares them.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+# ---------------------------------------------------------------------------
+# splitmix64-style mixing
+# ---------------------------------------------------------------------------
+
+
+def mix64(seed: int, k: int) -> int:
+    """Finalize ``seed`` xored with stream position ``k`` (splitmix64 core)."""
+    z = (seed + (k + 1) * GOLDEN) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def u01(seed: int, k: int) -> float:
+    """Uniform in [0, 1) from the top 53 bits of mix64."""
+    return (mix64(seed, k) >> 11) * (1.0 / (1 << 53))
+
+
+# ---------------------------------------------------------------------------
+# SynthCIFAR: 10-class procedural images, shape (H, W, 3)
+# ---------------------------------------------------------------------------
+
+VISION_H = 16
+VISION_W = 16
+VISION_C = 3
+VISION_CLASSES = 10
+# Signal/noise mix + per-sample nuisance parameters chosen so MiniResNet
+# starts at chance and climbs over tens of federated rounds (a fixed
+# pattern per class saturates to 100% within one round).
+VISION_SIGNAL = 0.55
+VISION_NOISE = 1.0
+
+
+def vision_label(seed: int, index: int) -> int:
+    return mix64(seed, index * 3) % VISION_CLASSES
+
+
+def vision_image(seed: int, index: int) -> np.ndarray:
+    """One image as float32 (H, W, 3).
+
+    Class determines the grating frequencies (fu, fv) and the chroma tint;
+    each *sample* additionally draws a random spatial phase and amplitude
+    (translation/contrast nuisance) plus strong pixel noise, so the class
+    must be inferred from the pattern structure, not raw pixel values.
+    """
+    label = vision_label(seed, index)
+    fu = 1 + label % 3
+    fv = 1 + (label // 3) % 3
+    tint = (label % 4) * (2.0 * math.pi / 3.0 / 4.0)
+    noise_seed = mix64(seed, index * 3 + 1)
+    nuis_seed = mix64(seed, index * 3 + 2)
+    two_pi = 2.0 * math.pi
+    r_phase = u01(nuis_seed, 0) * two_pi
+    r_amp = 0.6 + 0.4 * u01(nuis_seed, 1)
+
+    img = np.empty((VISION_H, VISION_W, VISION_C), dtype=np.float32)
+    for h in range(VISION_H):
+        for w in range(VISION_W):
+            base_arg = (
+                two_pi * (fu * h / VISION_H + fv * w / VISION_W) + r_phase
+            )
+            for c in range(VISION_C):
+                base = math.sin(base_arg + c * tint)
+                p = (h * VISION_W + w) * VISION_C + c
+                noise = 2.0 * (u01(noise_seed, p) - 0.5)
+                img[h, w, c] = np.float32(
+                    r_amp * VISION_SIGNAL * base + VISION_NOISE * noise
+                )
+    return img
+
+
+def vision_batch(seed: int, start: int, count: int):
+    xs = np.stack([vision_image(seed, start + i) for i in range(count)])
+    ys = np.array(
+        [vision_label(seed, start + i) for i in range(count)], dtype=np.int32
+    )
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# SynthE2E: slot-grammar restaurant descriptions (E2E-NLG shaped)
+# ---------------------------------------------------------------------------
+
+E2E_NAMES = [
+    "Alimentum", "Aromi", "Blue Spice", "Clowns", "Cocum", "Cotto",
+    "Fitzbillies", "Giraffe", "Green Man", "Loch Fyne", "Strada", "Zizzi",
+    "The Mill", "The Eagle", "The Punter", "Wildwood",
+]
+E2E_EATTYPE = ["pub", "restaurant", "coffee shop"]
+E2E_FOOD = ["Chinese", "English", "French", "Indian", "Italian", "Japanese"]
+E2E_PRICE = ["cheap", "moderate", "expensive"]
+E2E_AREA = ["city centre", "riverside"]
+E2E_RATING = ["low", "average", "high"]
+
+SEQ_LEN = 96
+VOCAB = 96  # printable ASCII 32..126 -> 1..95, pad/other -> 0
+PAD = 0
+
+
+def e2e_record(seed: int, index: int, style: int = 1) -> str:
+    """MR-then-realisation string, fields drawn deterministically.
+
+    ``style=0`` is the *pretraining* distribution; ``style=1`` (the default,
+    used by the SFL fine-tuning data in Rust and by the goldens) reorders the
+    MR fields and uses different realisation templates — the domain shift
+    that makes LoRA fine-tuning meaningful (paper §VI-C: adapt a pretrained
+    LM to a new task). MRs use 3-char abbreviations so the worst-case record
+    (94 chars) fits SEQ_LEN=96 without truncation.
+    """
+    base = index * 8
+    name = E2E_NAMES[mix64(seed, base) % len(E2E_NAMES)]
+    eat = E2E_EATTYPE[mix64(seed, base + 1) % len(E2E_EATTYPE)]
+    food = E2E_FOOD[mix64(seed, base + 2) % len(E2E_FOOD)]
+    price = E2E_PRICE[mix64(seed, base + 3) % len(E2E_PRICE)]
+    area = E2E_AREA[mix64(seed, base + 4) % len(E2E_AREA)]
+    rating = E2E_RATING[mix64(seed, base + 5) % len(E2E_RATING)]
+    form = mix64(seed, base + 6) % 3
+    if style == 0:
+        mr = (
+            f"{name}|{eat[:3]}|{food[:3]}|{price[:3]}|{area[:3]}"
+            f"|{rating[:3]}="
+        )
+        if form == 0:
+            text = f"{name} is a {price} {food} {eat}."
+        elif form == 1:
+            text = f"{name} serves {price} {food} food in the {area}."
+        else:
+            text = f"{name} is a {rating} rated {food} {eat}."
+    else:
+        mr = (
+            f"{food[:3]};{price[:3]};{area[:3]};{eat[:3]}"
+            f";{rating[:3]};{name}>"
+        )
+        if form == 0:
+            text = f"In {area}, {name} offers {price} {food} dishes."
+        elif form == 1:
+            text = f"{name}: {price} {food} cuisine, {rating} rating."
+        else:
+            text = f"Visit {name} for {food} food at {price} prices."
+    return mr + text
+
+
+def encode(s: str) -> np.ndarray:
+    """Byte-level tokenizer: printable ASCII -> 1..95, else PAD; pad/truncate
+    to SEQ_LEN."""
+    toks = np.full(SEQ_LEN, PAD, dtype=np.int32)
+    for i, ch in enumerate(s[:SEQ_LEN]):
+        o = ord(ch)
+        toks[i] = (o - 31) if 32 <= o <= 126 else PAD
+    return toks
+
+
+def text_batch(
+    seed: int, start: int, count: int, style: int = 1
+) -> np.ndarray:
+    return np.stack(
+        [encode(e2e_record(seed, start + i, style)) for i in range(count)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic pseudo-inputs for golden IO (no RNG, trivially portable)
+# ---------------------------------------------------------------------------
+
+
+def golden_vec(n: int, salt: int) -> np.ndarray:
+    """Exact-match pattern both languages compute: ((i*31+salt) % 17 - 8)/100."""
+    i = np.arange(n, dtype=np.int64)
+    return (((i * 31 + salt) % 17 - 8) / 100.0).astype(np.float32)

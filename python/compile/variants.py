@@ -1,0 +1,72 @@
+"""Variant registry: which (model, split, aux, optimizer) combinations get
+lowered to HLO by aot.py.
+
+Each variant maps to a directory ``artifacts/<name>/`` holding one HLO text
+file per entry plus binary init/frozen-base blobs. The entry subset is
+``FULL`` for the variants the main experiments drive and ``CORE`` for
+ablation-only variants (keeps `make artifacts` to a few minutes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from .entries import CORE_ENTRIES, FULL_ENTRIES
+
+
+@dataclass
+class Variant:
+    name: str
+    family: str          # "cnn" | "gpt2nano" | "gpt2micro"
+    cut: int             # client residual blocks / transformer blocks
+    aux: int = 0         # transformer aux blocks (cnn: fixed linear head)
+    optimizer: str = "adam"
+    entries: List[str] = field(default_factory=lambda: list(FULL_ENTRIES))
+    batch: int = 0       # 0 = family default
+    use_pallas: bool = False
+    zo_mode: str = "gaussian"
+    pretrain_key: Optional[str] = None  # share pretrained bases per family
+
+
+VARIANTS: List[Variant] = [
+    # --- vision (Fig 2, 3, 4, 7; Table II) --------------------------------
+    Variant("cnn_c1", "cnn", cut=1, entries=list(FULL_ENTRIES)),
+    Variant("cnn_c1_sgd", "cnn", cut=1, optimizer="sgd",
+            entries=["zo_step", "fo_step", "server_step", "eval_full",
+                     "client_fwd"]),
+    Variant("cnn_c2", "cnn", cut=2, entries=list(CORE_ENTRIES)),
+    # --- language: nano = GPT2-Small analog (Fig 5 left) ------------------
+    Variant("gpt2nano_c1_a1", "gpt2nano", cut=1, aux=1,
+            entries=list(FULL_ENTRIES), pretrain_key="nano"),
+    Variant("gpt2nano_c1_a0", "gpt2nano", cut=1, aux=0,
+            entries=list(CORE_ENTRIES), pretrain_key="nano"),
+    # --- language: micro = GPT2-Medium analog (Fig 5 right, 6; Table III) -
+    Variant("gpt2micro_c2_a1", "gpt2micro", cut=2, aux=1,
+            entries=list(FULL_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c2_a0", "gpt2micro", cut=2, aux=0,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c2_a2", "gpt2micro", cut=2, aux=2,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c2_a3", "gpt2micro", cut=2, aux=3,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c3_a0", "gpt2micro", cut=3, aux=0,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c3_a1", "gpt2micro", cut=3, aux=1,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c3_a2", "gpt2micro", cut=3, aux=2,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    Variant("gpt2micro_c3_a3", "gpt2micro", cut=3, aux=3,
+            entries=list(CORE_ENTRIES), pretrain_key="micro"),
+    # --- kernel-path artifact: pallas lowered into the same HLO -----------
+    Variant("gpt2nano_c1_a1_pallas", "gpt2nano", cut=1, aux=1,
+            entries=["client_fwd", "zo_step", "eval_full"],
+            use_pallas=True, pretrain_key="nano"),
+]
+
+
+def get(name: str) -> Variant:
+    for v in VARIANTS:
+        if v.name == name:
+            return v
+    raise KeyError(name)

@@ -1,0 +1,117 @@
+"""AOT pipeline checks: variant registry sanity and (when built) manifest
+consistency with the live model definitions."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import synth, variants
+from compile.aot import build_model, summarize
+from compile.entries import CORE_ENTRIES, FULL_ENTRIES, build_entries
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../artifacts")
+MANIFEST = os.path.join(ARTIFACTS, "manifest.json")
+
+
+class TestVariantRegistry:
+    def test_names_unique(self):
+        names = [v.name for v in variants.VARIANTS]
+        assert len(names) == len(set(names))
+
+    def test_get_known_and_unknown(self):
+        assert variants.get("cnn_c1").family == "cnn"
+        with pytest.raises(KeyError):
+            variants.get("nope")
+
+    def test_entry_lists_are_known(self):
+        for v in variants.VARIANTS:
+            for e in v.entries:
+                assert e in FULL_ENTRIES, f"{v.name}: unknown entry {e}"
+
+    def test_core_is_subset_of_full(self):
+        assert set(CORE_ENTRIES) <= set(FULL_ENTRIES)
+
+    @pytest.mark.parametrize("name", ["cnn_c1", "gpt2nano_c1_a1",
+                                      "gpt2micro_c3_a2"])
+    def test_models_build_and_entries_construct(self, name):
+        v = variants.get(name)
+        model = build_model(v)
+        entries = build_entries(model, v.optimizer, which=v.entries)
+        assert set(entries) == set(v.entries)
+        for e in entries.values():
+            names = [n for n, _, _ in e.inputs]
+            assert len(names) == len(set(names)), f"dup inputs in {e.name}"
+
+    def test_heron_runnable_everywhere(self):
+        need = {"zo_step", "client_fwd", "server_step", "eval_full"}
+        for v in variants.VARIANTS:
+            if v.name.endswith("_pallas"):
+                continue
+            assert need <= set(v.entries), v.name
+
+
+class TestSummarize:
+    def test_summary_fields(self):
+        s = summarize(np.arange(6, dtype=np.float32).reshape(2, 3))
+        assert s["shape"] == [2, 3]
+        assert s["head"] == [0.0, 1.0, 2.0, 3.0]
+        assert s["sum"] == 15.0
+        assert abs(s["l2"] - np.sqrt(55)) < 1e-9
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run make artifacts")
+class TestManifestConsistency:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(MANIFEST) as f:
+            return json.load(f)
+
+    def test_every_variant_present(self, manifest):
+        for v in variants.VARIANTS:
+            assert v.name in manifest["variants"], v.name
+
+    def test_sizes_match_live_models(self, manifest):
+        for name in ["cnn_c1", "cnn_c2", "gpt2nano_c1_a1",
+                     "gpt2micro_c2_a3"]:
+            v = variants.get(name)
+            model = build_model(v)
+            m = manifest["variants"][name]
+            assert m["sizes"]["client"] == model.spec_client.size
+            assert m["sizes"]["aux"] == model.spec_aux.size
+            assert m["sizes"]["server"] == model.spec_server.size
+
+    def test_hlo_files_exist(self, manifest):
+        for name, mv in manifest["variants"].items():
+            for ename, e in mv["entries"].items():
+                p = os.path.join(ARTIFACTS, name, e["file"])
+                assert os.path.exists(p), f"{name}/{ename}"
+                # HLO text sanity: must contain an entry computation
+                with open(p) as f:
+                    head = f.read(4096)
+                assert "HloModule" in head, f"{name}/{ename}"
+
+    def test_blobs_match_sizes(self, manifest):
+        for name, mv in manifest["variants"].items():
+            d = os.path.join(ARTIFACTS, name)
+            nl = mv["sizes"]["client"] + mv["sizes"]["aux"]
+            init_l = np.fromfile(
+                os.path.join(d, mv["files"]["init_theta_l"]), dtype="<f4"
+            )
+            assert init_l.size == nl, name
+            if mv["sizes"]["base"]:
+                base = np.fromfile(
+                    os.path.join(d, mv["files"]["frozen_base"]), dtype="<f4"
+                )
+                assert base.size == mv["sizes"]["base"], name
+                assert np.isfinite(base).all(), name
+
+    def test_synth_goldens_reproduce(self, manifest):
+        g = manifest["synth"]
+        assert g["vision_labels_seed42"] == [
+            synth.vision_label(42, i) for i in range(32)
+        ]
+        assert g["text_record0"] == synth.e2e_record(42, 0)
+        img = synth.vision_image(42, 0)
+        assert abs(g["vision_img0_sum"] - float(img.sum())) < 1e-4

@@ -1,0 +1,259 @@
+"""Entry-point semantics: the protocol surface Rust drives.
+
+These run the jitted entry functions directly (not through HLO text) and
+check the optimization semantics each SFL algorithm relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import synth, variants
+from compile.aot import build_model, golden_input
+from compile.entries import build_entries
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    v = variants.get("cnn_c1")
+    model = build_model(v)
+    entries = build_entries(model, "adam")
+    return model, entries
+
+
+def make_args(model, e, overrides=None):
+    args = []
+    for idx, (nm, s, d) in enumerate(e.inputs):
+        if overrides and nm in overrides:
+            args.append(overrides[nm])
+        else:
+            args.append(golden_input(model, nm, s, d, 101 + idx * 13))
+    return args
+
+
+def zeros_opt(model, dim):
+    return {
+        "opt_m": jnp.zeros((dim,), jnp.float32),
+        "opt_v": jnp.zeros((dim,), jnp.float32),
+        "opt_t": jnp.asarray(0.0, jnp.float32),
+    }
+
+
+class TestZoStep:
+    def test_changes_params_and_returns_loss(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["zo_step"]
+        nl = model.spec_client.size + model.spec_aux.size
+        args = make_args(model, e, zeros_opt(model, nl))
+        outs = jax.jit(e.fn)(*args)
+        theta2, loss = outs[0], outs[-1]
+        assert theta2.shape == (nl,)
+        assert float(jnp.abs(theta2 - args[0]).max()) > 0
+        assert 1.0 < float(loss) < 4.0
+
+    def test_deterministic_given_seed(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["zo_step"]
+        nl = model.spec_client.size + model.spec_aux.size
+        args = make_args(model, e, zeros_opt(model, nl))
+        o1 = jax.jit(e.fn)(*args)
+        o2 = jax.jit(e.fn)(*args)
+        assert (np.asarray(o1[0]) == np.asarray(o2[0])).all()
+
+    def test_seed_changes_update(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["zo_step"]
+        nl = model.spec_client.size + model.spec_aux.size
+        base = zeros_opt(model, nl)
+        a1 = make_args(model, e, {**base, "seed": jnp.asarray(1, jnp.int32)})
+        a2 = make_args(model, e, {**base, "seed": jnp.asarray(2, jnp.int32)})
+        o1 = jax.jit(e.fn)(*a1)
+        o2 = jax.jit(e.fn)(*a2)
+        assert float(jnp.abs(o1[0] - o2[0]).max()) > 0
+
+    def test_n_pert_is_dynamic(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["zo_step"]
+        nl = model.spec_client.size + model.spec_aux.size
+        base = zeros_opt(model, nl)
+        fn = jax.jit(e.fn)
+        outs = {}
+        for n in (1, 2, 4):
+            a = make_args(
+                model, e, {**base, "n_pert": jnp.asarray(n, jnp.int32)}
+            )
+            outs[n] = np.asarray(fn(*a)[0])
+        assert np.abs(outs[1] - outs[2]).max() > 0
+        assert np.abs(outs[2] - outs[4]).max() > 0
+
+    def test_zo_direction_correlates_with_fo(self):
+        """Averaged over seeds, raw (SGD) ZO deltas should point like the FO
+        delta. Expected cosine after N probes in dimension d is ~sqrt(N/d);
+        with N=150, d~5.3k that is ~0.17, so 0.08 is a robust floor.
+        (The Adam variant sign-normalizes updates, which destroys this
+        signal — hence the SGD entries here.)"""
+        v = variants.get("cnn_c1_sgd")
+        model = build_model(v)
+        entries = build_entries(model, "sgd", which=["zo_step", "fo_step"])
+        ez, ef = entries["zo_step"], entries["fo_step"]
+        fo_args = make_args(model, ef)
+        fo_delta = np.asarray(jax.jit(ef.fn)(*fo_args)[0] - fo_args[0])
+        zfn = jax.jit(ez.fn)
+        acc = np.zeros(fo_delta.size)
+        for s in range(150):
+            a = make_args(
+                model, ez, {"seed": jnp.asarray(1000 + s, jnp.int32)}
+            )
+            acc += np.asarray(zfn(*a)[0] - a[0])
+        cos = acc @ fo_delta / (
+            np.linalg.norm(acc) * np.linalg.norm(fo_delta) + 1e-12
+        )
+        assert cos > 0.08
+
+
+class TestFoAndServer:
+    def test_fo_step_reduces_loss_iterated(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["fo_step"]
+        nl = model.spec_client.size + model.spec_aux.size
+        ov = zeros_opt(model, nl)
+        ov["lr"] = jnp.asarray(3e-3, jnp.float32)
+        args = make_args(model, e, ov)
+        fn = jax.jit(e.fn)
+        losses = []
+        for _ in range(30):
+            out = fn(*args)
+            losses.append(float(out[-1]))
+            args[0], args[1], args[2], args[3] = out[0], out[1], out[2], out[3]
+        assert losses[-1] < losses[0] - 0.1
+
+    def test_server_step_reduces_loss_iterated(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["server_step"]
+        ns = model.spec_server.size
+        ov = zeros_opt(model, ns)
+        ov["lr"] = jnp.asarray(3e-3, jnp.float32)
+        args = make_args(model, e, ov)
+        fn = jax.jit(e.fn)
+        losses = []
+        for _ in range(30):
+            out = fn(*args)
+            losses.append(float(out[-1]))
+            args[0], args[1], args[2], args[3] = out[0], out[1], out[2], out[3]
+        assert losses[-1] < losses[0] - 0.1
+
+    def test_cutgrad_matches_server_step_params(self, cnn_setup):
+        model, entries = cnn_setup
+        e1, e2 = entries["server_step"], entries["server_step_cutgrad"]
+        ns = model.spec_server.size
+        ov = zeros_opt(model, ns)
+        a1 = make_args(model, e1, dict(ov))
+        a2 = make_args(model, e2, dict(ov))
+        o1 = jax.jit(e1.fn)(*a1)
+        o2 = jax.jit(e2.fn)(*a2)
+        np.testing.assert_allclose(o1[0], o2[0], rtol=1e-6, atol=1e-7)
+        g_sm = o2[-1]
+        assert g_sm.shape[0] == model.batch
+        assert float(jnp.abs(g_sm).max()) > 0
+
+    def test_client_bp_step_moves_toward_cut_gradient(self, cnn_setup):
+        """bp step with the true cut gradient reduces the full local loss
+        computed through the server path."""
+        model, entries = cnn_setup
+        ecut = entries["server_step_cutgrad"]
+        ebp = entries["client_bp_step"]
+        ns, nc = model.spec_server.size, model.spec_client.size
+        a_cut = make_args(model, ecut, zeros_opt(model, ns))
+        g_sm = jax.jit(ecut.fn)(*a_cut)[-1]
+        ov = zeros_opt(model, nc)
+        ov["g_smashed"] = g_sm
+        a_bp = make_args(model, ebp, ov)
+        out = jax.jit(ebp.fn)(*a_bp)
+        assert float(jnp.abs(out[0] - a_bp[0]).max()) > 0
+
+
+class TestEvalAndDiagnostics:
+    def test_eval_stats_bounds(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["eval_full"]
+        args = make_args(model, e)
+        s1, s2 = jax.jit(e.fn)(*args)
+        assert 0 <= float(s1) <= float(s2) == model.eval_batch
+
+    def test_hvp_linear_in_v(self, cnn_setup):
+        model, entries = cnn_setup
+        e = entries["hvp"]
+        args = make_args(model, e)
+        fn = jax.jit(e.fn)
+        v = args[-1]
+        h1 = np.asarray(fn(*args)[0])
+        args2 = args[:-1] + [2.0 * v]
+        h2 = np.asarray(fn(*args2)[0])
+        np.testing.assert_allclose(h2, 2 * h1, rtol=1e-3, atol=1e-5)
+
+    def test_hvp_symmetry(self, cnn_setup):
+        """v^T H w == w^T H v (Hessian symmetry through the entry)."""
+        model, entries = cnn_setup
+        e = entries["hvp"]
+        args = make_args(model, e)
+        nl = model.spec_client.size + model.spec_aux.size
+        v = jnp.asarray(synth.golden_vec(nl, 7))
+        w = jnp.asarray(synth.golden_vec(nl, 19))
+        fn = jax.jit(e.fn)
+        hv = np.asarray(fn(*args[:-1], v)[0])
+        hw = np.asarray(fn(*args[:-1], w)[0])
+        lhs = float(np.asarray(w, np.float64) @ hv)
+        rhs = float(np.asarray(v, np.float64) @ hw)
+        assert abs(lhs - rhs) < 1e-3 * max(abs(lhs), abs(rhs), 1e-6)
+
+    def test_aux_align_improves_gradient_cosine(self, cnn_setup):
+        """Align steps against the *true* server cut-gradient must raise the
+        per-sample cosine between aux and server cut-gradients."""
+        model, entries = cnn_setup
+        ecut = entries["server_step_cutgrad"]
+        ns = model.spec_server.size
+        a_cut = make_args(model, ecut, zeros_opt(model, ns))
+        g_sm = jax.jit(ecut.fn)(*a_cut)[-1]
+
+        e = entries["aux_align"]
+        fn = jax.jit(e.fn)
+        args = make_args(
+            model, e,
+            {"g_smashed": g_sm, "lr": jnp.asarray(0.5, jnp.float32)},
+        )
+        nc = model.spec_client.size
+
+        def mean_cos(theta_l):
+            sm, y = args[1], args[2]
+            pa = model.spec_aux.unpack(theta_l[nc:])
+
+            def aux_loss(s):
+                return model.loss(model.aux_fwd(pa, s), y)
+
+            ga = jax.grad(aux_loss)(sm).reshape(sm.shape[0], -1)
+            gs = np.asarray(g_sm).reshape(sm.shape[0], -1)
+            ga = np.asarray(ga)
+            num = (ga * gs).sum(-1)
+            den = np.linalg.norm(ga, axis=-1) * np.linalg.norm(gs, axis=-1)
+            return float((num / (den + 1e-20)).mean())
+
+        c0 = mean_cos(args[0])
+        theta = args[0]
+        for _ in range(25):
+            theta = fn(theta, *args[1:])[0]
+        c1 = mean_cos(theta)
+        assert c1 > c0 + 1e-3
+
+
+class TestSgdVariant:
+    def test_sgd_entries_have_no_opt_state(self):
+        v = variants.get("cnn_c1_sgd")
+        model = build_model(v)
+        entries = build_entries(model, "sgd", which=["zo_step", "fo_step"])
+        names = [n for n, _, _ in entries["zo_step"].inputs]
+        assert "opt_m" not in names
+        e = entries["fo_step"]
+        args = make_args(model, e)
+        out = jax.jit(e.fn)(*args)
+        assert len(out) == 2  # theta, loss

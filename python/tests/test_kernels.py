@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and block configurations; the perturbation stream
+is additionally checked for bit-exactness between the per-tile kernel
+generation and the flat oracle generation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lora_linear import lora_linear
+from compile.kernels.perturb import fold_seed, hash_u32, perturbation
+from compile.kernels.zo_linear import zo_perturbed_linear, vmem_bytes
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# perturbation stream
+# ---------------------------------------------------------------------------
+
+
+class TestPerturbStream:
+    def test_deterministic(self):
+        a = perturbation(123, 256)
+        b = perturbation(123, 256)
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_seed_sensitivity(self):
+        a = np.asarray(perturbation(123, 256))
+        b = np.asarray(perturbation(124, 256))
+        assert np.abs(a - b).max() > 0.5
+
+    def test_moments(self):
+        u = np.asarray(perturbation(7, 1 << 16), dtype=np.float64)
+        assert abs(u.mean()) < 0.02
+        assert abs(u.std() - 1.0) < 0.02
+        # Irwin-Hall(4) support is bounded: |u| <= 2*sqrt(3)
+        assert np.abs(u).max() <= 2 * np.sqrt(3) + 1e-6
+
+    def test_hash_avalanche(self):
+        h0 = int(hash_u32(jnp.uint32(1), jnp.uint32(0)))
+        h1 = int(hash_u32(jnp.uint32(1), jnp.uint32(1)))
+        assert bin(h0 ^ h1).count("1") > 8
+
+    def test_fold_seed_independence(self):
+        s = jnp.uint32(99)
+        u0 = np.asarray(perturbation(fold_seed(s, 0), 4096), np.float64)
+        u1 = np.asarray(perturbation(fold_seed(s, 1), 4096), np.float64)
+        corr = np.corrcoef(u0, u1)[0, 1]
+        assert abs(corr) < 0.05
+
+    def test_gauss_prefix_stability(self):
+        """Stream element i does not depend on the vector length."""
+        long = np.asarray(perturbation(5, 512))
+        short = np.asarray(perturbation(5, 64))
+        assert (long[:64] == short).all()
+
+
+# ---------------------------------------------------------------------------
+# zo_perturbed_linear
+# ---------------------------------------------------------------------------
+
+
+class TestZoLinear:
+    @given(
+        m=st.sampled_from([1, 4, 8]),
+        k=st.sampled_from([16, 32, 64]),
+        n=st.sampled_from([8, 16, 48]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, m, k, n, seed):
+        x = rand(1, m, k)
+        w = rand(2, k, n)
+        out = zo_perturbed_linear(x, w, seed, 0.01)
+        exp = ref.zo_perturbed_linear_ref(x, w, seed, 0.01)
+        np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(4, 8, 16), (8, 16, 32), (2, 4, 8)])
+    def test_block_shapes_equivalent(self, bm, bn, bk):
+        """Tiling must not change the generated U (flat-index addressing)."""
+        x = rand(3, 8, 32)
+        w = rand(4, 32, 16)
+        full = zo_perturbed_linear(x, w, 42, 0.5, bm=8, bn=16, bk=32)
+        tiled = zo_perturbed_linear(x, w, 42, 0.5, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(full, tiled, rtol=2e-5, atol=2e-5)
+
+    def test_mu_zero_is_plain_matmul(self):
+        x = rand(5, 4, 16)
+        w = rand(6, 16, 8)
+        out = zo_perturbed_linear(x, w, 9, 0.0)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-5, atol=1e-6)
+
+    def test_perturbation_scales_linearly(self):
+        x = rand(7, 4, 16)
+        w = jnp.zeros((16, 8))
+        o1 = np.asarray(zo_perturbed_linear(x, w, 11, 1.0))
+        o2 = np.asarray(zo_perturbed_linear(x, w, 11, 2.0))
+        np.testing.assert_allclose(o2, 2 * o1, rtol=1e-4, atol=1e-5)
+
+    def test_vmem_estimate_monotone(self):
+        assert vmem_bytes(128, 128, 128) > vmem_bytes(64, 64, 64)
+
+
+# ---------------------------------------------------------------------------
+# lora_linear
+# ---------------------------------------------------------------------------
+
+
+class TestLoraLinear:
+    @given(
+        m=st.sampled_from([2, 8]),
+        k=st.sampled_from([16, 64]),
+        n=st.sampled_from([16, 32]),
+        r=st.sampled_from([2, 4, 8]),
+    )
+    def test_matches_oracle(self, m, k, n, r):
+        x = rand(1, m, k)
+        w = rand(2, k, n)
+        a = rand(3, k, r, scale=0.1)
+        b = rand(4, r, n, scale=0.1)
+        out = lora_linear(x, w, a, b, 2.0)
+        exp = ref.lora_linear_ref(x, w, a, b, 2.0)
+        np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+    def test_zero_adapter_is_identity(self):
+        x = rand(5, 4, 32)
+        w = rand(6, 32, 16)
+        a = jnp.zeros((32, 4))
+        b = jnp.zeros((4, 16))
+        out = lora_linear(x, w, a, b, 8.0)
+        np.testing.assert_allclose(out, x @ w, rtol=1e-5, atol=1e-6)
+
+    def test_scale_applies_to_adapter_only(self):
+        x = rand(7, 4, 16)
+        w = jnp.zeros((16, 8))
+        a = rand(8, 16, 4, scale=0.2)
+        b = rand(9, 4, 8, scale=0.2)
+        o1 = np.asarray(lora_linear(x, w, a, b, 1.0))
+        o3 = np.asarray(lora_linear(x, w, a, b, 3.0))
+        np.testing.assert_allclose(o3, 3 * o1, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("bk", [8, 16, 32])
+    def test_k_tiling_equivalent(self, bk):
+        x = rand(1, 4, 32)
+        w = rand(2, 32, 16)
+        a = rand(3, 32, 4, scale=0.1)
+        b = rand(4, 4, 16, scale=0.1)
+        full = lora_linear(x, w, a, b, 2.0, bk=32)
+        tiled = lora_linear(x, w, a, b, 2.0, bk=bk)
+        np.testing.assert_allclose(full, tiled, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ZO estimator sanity (reference-level)
+# ---------------------------------------------------------------------------
+
+
+class TestZoEstimator:
+    def test_zo_grad_points_downhill_quadratic(self):
+        """On f(x) = ||x||^2/2 the ZO estimate correlates with x."""
+        theta = jnp.asarray(np.linspace(-1, 1, 64), jnp.float32)
+        f = lambda t: 0.5 * jnp.sum(t * t)
+        dots = []
+        for s in range(50):
+            g, _ = ref.zo_grad_ref(f, theta, s, 1e-3)
+            dots.append(float(jnp.dot(g, theta)))
+        assert np.mean(dots) > 0  # E[g] ~ grad = theta
+
+    def test_zo_grad_unbiasedness(self):
+        """Averaged ZO estimates approach the true gradient direction."""
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal(32), jnp.float32)
+        theta = jnp.asarray(rng.standard_normal(32), jnp.float32)
+        f = lambda t: jnp.dot(a, t)  # linear: grad == a exactly
+        acc = np.zeros(32)
+        n = 400
+        for s in range(n):
+            g, _ = ref.zo_grad_ref(f, theta, s, 1e-2)
+            acc += np.asarray(g)
+        est = acc / n
+        cos = est @ np.asarray(a) / (
+            np.linalg.norm(est) * np.linalg.norm(a)
+        )
+        assert cos > 0.8

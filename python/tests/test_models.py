@@ -1,0 +1,179 @@
+"""L2 model-family checks: shapes, gradients, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import synth
+from compile.models import cnn, transformer
+
+
+@pytest.fixture(scope="module")
+def cnn_model():
+    return cnn.build(cut=1, batch=8, eval_batch=16)
+
+
+@pytest.fixture(scope="module")
+def cnn_params(cnn_model):
+    rng = np.random.default_rng(1)
+    return cnn_model.init(rng)
+
+
+class TestCnn:
+    def test_spec_sizes_positive(self, cnn_model):
+        assert cnn_model.spec_client.size > 1000
+        assert cnn_model.spec_aux.size == 16 * 10 + 10
+        assert cnn_model.spec_server.size > 10000
+
+    def test_forward_shapes(self, cnn_model, cnn_params):
+        tc, ta, ts = cnn_params
+        x = jnp.asarray(synth.vision_batch(0, 0, 8)[0])
+        sm = cnn_model.client_fwd(tc, x)
+        assert sm.shape == (8, 16, 16, 16)
+        la = cnn_model.aux_fwd(ta, sm)
+        assert la.shape == (8, 10)
+        ls = cnn_model.server_fwd(ts, sm)
+        assert ls.shape == (8, 10)
+
+    def test_cut2_smashed_shape(self):
+        m = cnn.build(cut=2, batch=4)
+        tc, _, _ = m.init(np.random.default_rng(0))
+        x = jnp.asarray(synth.vision_batch(0, 0, 4)[0])
+        assert m.client_fwd(tc, x).shape == (4, 8, 8, 32)
+
+    def test_loss_at_init_near_log10(self, cnn_model, cnn_params):
+        tc, ta, ts = cnn_params
+        x, y = synth.vision_batch(0, 0, 8)
+        sm = cnn_model.client_fwd(tc, jnp.asarray(x))
+        loss = cnn_model.loss(cnn_model.server_fwd(ts, sm), jnp.asarray(y))
+        assert abs(float(loss) - np.log(10)) < 0.7
+
+    def test_gradients_finite_and_nonzero(self, cnn_model, cnn_params):
+        tc, ta, ts = cnn_params
+        x, y = synth.vision_batch(0, 0, 8)
+        x, y = jnp.asarray(x), jnp.asarray(y)
+
+        def loss_fn(tc):
+            sm = cnn_model.client_fwd(tc, x)
+            return cnn_model.loss(cnn_model.aux_fwd(ta, sm), y)
+
+        g = jax.grad(loss_fn)(tc)
+        flat = jnp.concatenate([jnp.ravel(v) for v in g.values()])
+        assert bool(jnp.isfinite(flat).all())
+        assert float(jnp.abs(flat).max()) > 0
+
+    def test_few_fo_steps_reduce_loss(self, cnn_model, cnn_params):
+        tc, ta, ts = [dict(t) for t in cnn_params]
+        x, y = synth.vision_batch(0, 0, 8)
+        x, y = jnp.asarray(x), jnp.asarray(y)
+
+        def loss_fn(params):
+            tc, ta = params
+            sm = cnn_model.client_fwd(tc, x)
+            return cnn_model.loss(cnn_model.aux_fwd(ta, sm), y)
+
+        params = (tc, ta)
+        l0 = float(loss_fn(params))
+        vg = jax.jit(jax.value_and_grad(loss_fn))
+        for _ in range(20):
+            l, g = vg(params)
+            params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+        assert float(l) < l0 - 0.1
+
+    def test_metric_counts_correct(self, cnn_model):
+        logits = jnp.asarray(np.eye(10, dtype=np.float32)[:8] * 5)
+        y = jnp.arange(8, dtype=jnp.int32)
+        assert float(cnn_model.metric(logits, y)) == 8.0
+        y_bad = (y + 1) % 10
+        assert float(cnn_model.metric(logits, y_bad)) == 0.0
+
+    def test_cost_model_consistency(self, cnn_model):
+        c = cnn_model.cost
+        assert c.params_client == cnn_model.spec_client.size
+        assert c.params_server == cnn_model.spec_server.size
+        assert c.flops_fwd_server > c.flops_fwd_client > c.flops_fwd_aux > 0
+        assert c.act_cache_client > c.act_peak_client > 0
+        assert c.smashed_elems == 16 * 16 * 16
+
+
+class TestTransformer:
+    @pytest.fixture(scope="class")
+    def nano(self):
+        return transformer.build(transformer.NANO, 1, 1, batch=2, eval_batch=2)
+
+    @pytest.fixture(scope="class")
+    def base_vec_tree(self, nano):
+        rng = np.random.default_rng(3)
+        base = transformer.init_base(transformer.NANO, rng)
+        full = transformer.attach_aux_base(base, transformer.NANO, 1, 1)
+        return {k: jnp.asarray(v) for k, v in full.items()}
+
+    def test_lora_specs(self, nano):
+        d, r = 64, 4
+        assert nano.spec_client.size == 4 * d * r  # q.A q.B v.A v.B
+        assert nano.spec_aux.size == 4 * d * r + 2 * d
+
+    def test_forward_shapes(self, nano, base_vec_tree):
+        tc, ta, ts = nano.init(np.random.default_rng(0))
+        tc = {k: jnp.asarray(v) for k, v in tc.items()}
+        toks = jnp.asarray(synth.text_batch(0, 0, 2))
+        sm = nano.client_fwd(tc, toks, base_vec_tree)
+        assert sm.shape == (2, synth.SEQ_LEN, 64)
+        la = nano.aux_fwd({k: jnp.asarray(v) for k, v in ta.items()}, sm,
+                          base_vec_tree)
+        assert la.shape == (2, synth.SEQ_LEN, synth.VOCAB)
+
+    def test_zero_lora_b_matches_frozen(self, nano, base_vec_tree):
+        """LoRA init (B=0) must not change the base forward."""
+        tc, _, _ = nano.init(np.random.default_rng(0))
+        tc = {k: jnp.asarray(v) for k, v in tc.items()}
+        toks = jnp.asarray(synth.text_batch(0, 0, 2))
+        sm_lora = nano.client_fwd(tc, toks, base_vec_tree)
+        h = transformer.embed(base_vec_tree, toks, transformer.NANO)
+        h = transformer.block_fwd(
+            base_vec_tree, None, "blk0", transformer.NANO, h, False
+        )
+        np.testing.assert_allclose(sm_lora, h, rtol=1e-5, atol=1e-5)
+
+    def test_loss_masked_by_pad(self, nano):
+        logits = jnp.zeros((1, synth.SEQ_LEN, synth.VOCAB))
+        y = jnp.zeros((1, synth.SEQ_LEN), jnp.int32)  # all PAD
+        y = y.at[0, :4].set(5)
+        loss = nano.loss(logits, y)
+        # uniform logits -> CE = log(vocab) over the 3 valid targets
+        assert abs(float(loss) - np.log(synth.VOCAB)) < 1e-4
+
+    def test_pretrain_reduces_loss(self):
+        base0 = transformer.init_base(
+            transformer.NANO, np.random.default_rng(7)
+        )
+        b0 = {k: jnp.asarray(v) for k, v in base0.items()}
+        toks = jnp.asarray(synth.text_batch(0xE2E0 + 7, 0, 8))
+
+        def eval_loss(base):
+            logits = transformer.full_fwd(base, toks, transformer.NANO)
+            lp = jax.nn.log_softmax(logits[:, :-1], -1)
+            tgt = toks[:, 1:]
+            nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
+            mask = (tgt != synth.PAD).astype(jnp.float32)
+            return float(jnp.sum(nll * mask) / jnp.sum(mask))
+
+        l0 = eval_loss(b0)
+        base, _ = transformer.pretrain(transformer.NANO, steps=25, seed=7)
+        l1 = eval_loss({k: jnp.asarray(v) for k, v in base.items()})
+        assert l1 < l0 - 0.5
+
+    def test_aux_base_copied_from_server(self):
+        base = transformer.init_base(transformer.NANO, np.random.default_rng(1))
+        full = transformer.attach_aux_base(base, transformer.NANO, 1, 2)
+        assert (full["aux0.q.w"] == base["blk1.q.w"]).all()
+        assert (full["aux1.q.w"] == base["blk2.q.w"]).all()
+        assert (full["auxlnf.g"] == base["lnf.g"]).all()
+
+    def test_cost_model_scales_with_blocks(self):
+        m2 = transformer.build(transformer.MICRO, 2, 1)
+        m3 = transformer.build(transformer.MICRO, 3, 1)
+        assert m3.cost.flops_fwd_client > m2.cost.flops_fwd_client
+        assert m3.cost.flops_fwd_server < m2.cost.flops_fwd_server
+        assert m3.cost.params_client == m3.spec_client.size

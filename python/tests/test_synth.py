@@ -1,0 +1,144 @@
+"""Determinism and distribution checks for the synthetic data generators."""
+
+import numpy as np
+import pytest
+
+from compile import synth
+
+
+def test_mix64_deterministic():
+    assert synth.mix64(42, 0) == synth.mix64(42, 0)
+    assert synth.mix64(42, 0) != synth.mix64(42, 1)
+    assert synth.mix64(42, 0) != synth.mix64(43, 0)
+
+
+def test_mix64_range():
+    for k in range(100):
+        v = synth.mix64(7, k)
+        assert 0 <= v <= synth.MASK64
+
+
+def test_u01_bounds():
+    vals = [synth.u01(3, k) for k in range(1000)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert abs(np.mean(vals) - 0.5) < 0.05
+
+
+def test_vision_label_distribution():
+    labels = [synth.vision_label(1, i) for i in range(2000)]
+    counts = np.bincount(labels, minlength=10)
+    assert counts.min() > 120  # roughly uniform over 10 classes
+    assert set(labels) == set(range(10))
+
+
+def test_vision_image_shape_and_range():
+    img = synth.vision_image(1, 0)
+    assert img.shape == (16, 16, 3)
+    assert img.dtype == np.float32
+    assert np.abs(img).max() < 1.5
+
+
+def test_vision_images_differ_between_classes():
+    # find two indices with different labels; their images should differ a lot
+    i0, i1 = 0, 1
+    while synth.vision_label(5, i1) == synth.vision_label(5, i0):
+        i1 += 1
+    a, b = synth.vision_image(5, i0), synth.vision_image(5, i1)
+    assert np.abs(a - b).mean() > 0.1
+
+
+def test_vision_same_class_not_pixel_correlated():
+    # the per-sample random phase is a translation nuisance: two same-class
+    # images must NOT be trivially pixel-correlated (otherwise the task
+    # saturates within one federated round), yet share a frequency signature
+    by_label = {}
+    for i in range(200):
+        by_label.setdefault(synth.vision_label(9, i), []).append(i)
+    lab = next(k for k, v in by_label.items() if len(v) >= 8)
+    idxs = by_label[lab][:8]
+    corrs = []
+    for i0, i1 in zip(idxs[:-1], idxs[1:]):
+        a = synth.vision_image(9, i0).ravel()
+        b = synth.vision_image(9, i1).ravel()
+        corrs.append(abs(np.corrcoef(a, b)[0, 1]))
+    assert np.mean(corrs) < 0.5, corrs
+
+
+def test_vision_class_determines_spectrum():
+    # same-class images share dominant FFT frequencies even though the
+    # random phase decorrelates raw pixels
+    def spectrum(i):
+        img = synth.vision_image(11, i)[:, :, 0]
+        return np.abs(np.fft.fft2(img))
+
+    by_label = {}
+    for i in range(300):
+        by_label.setdefault(synth.vision_label(11, i), []).append(i)
+    # two classes with different (fu, fv): labels 0 -> (1,1), 4 -> (2,2)
+    a0, a1 = by_label[0][:2]
+    b0 = by_label[4][0]
+    s_a0, s_a1, s_b0 = spectrum(a0), spectrum(a1), spectrum(b0)
+    same = np.corrcoef(s_a0.ravel(), s_a1.ravel())[0, 1]
+    diff = np.corrcoef(s_a0.ravel(), s_b0.ravel())[0, 1]
+    assert same > diff, (same, diff)
+
+
+def test_e2e_record_structure():
+    # style 1 (fine-tune distribution, the default)
+    rec = synth.e2e_record(42, 0)
+    assert ">" in rec and ";" in rec
+    mr, text = rec.split(">", 1)
+    assert mr.count(";") == 5
+    assert len(text) > 10
+    # style 0 (pretraining distribution)
+    rec0 = synth.e2e_record(42, 0, style=0)
+    assert "=" in rec0 and "|" in rec0
+    assert rec0 != rec
+
+
+def test_e2e_styles_share_fields():
+    # both styles draw the same underlying fields for the same index
+    r0 = synth.e2e_record(7, 3, style=0)
+    r1 = synth.e2e_record(7, 3, style=1)
+    name = r1.split(">", 1)[0].rsplit(";", 1)[1]
+    assert name in r0
+
+
+def test_records_fit_seq_len():
+    for style in (0, 1):
+        lens = [len(synth.e2e_record(1, i, style)) for i in range(300)]
+        assert max(lens) <= synth.SEQ_LEN
+
+
+def test_encode_roundtrippable():
+    toks = synth.encode("Hello, world!")
+    assert toks.shape == (synth.SEQ_LEN,)
+    assert toks.max() < synth.VOCAB
+    decoded = "".join(
+        chr(t + 31) if t > 0 else " " for t in toks[: len("Hello, world!")]
+    )
+    assert decoded == "Hello, world!"
+
+
+def test_text_batch_deterministic():
+    a = synth.text_batch(3, 0, 4)
+    b = synth.text_batch(3, 0, 4)
+    assert (a == b).all()
+    c = synth.text_batch(4, 0, 4)
+    assert not (a == c).all()
+
+
+def test_golden_vec_values():
+    v = synth.golden_vec(8, 101)
+    assert v.dtype == np.float32
+    # exact formula check
+    for i in range(8):
+        assert v[i] == np.float32(((i * 31 + 101) % 17 - 8) / 100.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 0xDEADBEEF])
+def test_vision_batch_matches_scalar_api(seed):
+    xs, ys = synth.vision_batch(seed, 5, 3)
+    for j in range(3):
+        assert ys[j] == synth.vision_label(seed, 5 + j)
+        assert np.allclose(xs[j], synth.vision_image(seed, 5 + j))

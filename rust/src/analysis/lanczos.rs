@@ -1,0 +1,384 @@
+//! Stochastic Lanczos quadrature over the client-side local-loss Hessian
+//! (substrate S17, reproduces paper Fig 7).
+//!
+//! The Hessian is only touched through matrix-vector products — the `hvp`
+//! HLO entry — so the algorithm is the classic matrix-free Lanczos:
+//! m steps produce a tridiagonal T whose Ritz values/weights give a
+//! quadrature of the spectral density; averaging over probe vectors yields
+//! the eigenvalue-density histogram, and the trace/op-norm ratio estimates
+//! the paper's effective rank (Assumption 5).
+
+use anyhow::Result;
+
+/// Abstract H·v oracle (implemented over runtime::Session in the benches,
+/// and by dense matrices in tests).
+pub trait Hvp {
+    fn dim(&self) -> usize;
+    fn apply(&mut self, v: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Ritz values and quadrature weights from one Lanczos run.
+#[derive(Debug, Clone)]
+pub struct RitzQuadrature {
+    pub values: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+/// m-step Lanczos with full reorthogonalization (m is small — ≤ 64 — so the
+/// O(m^2 d) cost is irrelevant and numerical stability wins).
+pub fn lanczos<H: Hvp>(
+    h: &mut H,
+    m: usize,
+    probe_seed: u32,
+) -> Result<RitzQuadrature> {
+    let d = h.dim();
+    let m = m.min(d);
+    // Rademacher probe
+    let mut v: Vec<f32> = (0..d)
+        .map(|i| {
+            if crate::zo::stream::hash_u32(probe_seed, i as u32) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+    normalize(&mut v);
+
+    let mut basis: Vec<Vec<f32>> = vec![v.clone()];
+    let mut alphas: Vec<f64> = Vec::with_capacity(m);
+    let mut betas: Vec<f64> = Vec::with_capacity(m);
+
+    let mut w_prev: Option<Vec<f32>> = None;
+    let mut beta_prev = 0.0f64;
+    for j in 0..m {
+        let mut w = h.apply(&basis[j])?;
+        if let Some(prev) = &w_prev {
+            for i in 0..d {
+                w[i] -= (beta_prev as f32) * prev[i];
+            }
+        }
+        let alpha = dot(&w, &basis[j]);
+        for i in 0..d {
+            w[i] -= (alpha as f32) * basis[j][i];
+        }
+        // full reorthogonalization
+        for b in &basis {
+            let c = dot(&w, b);
+            for i in 0..d {
+                w[i] -= c as f32 * b[i];
+            }
+        }
+        alphas.push(alpha);
+        let beta = norm(&w);
+        if j + 1 < m {
+            if beta < 1e-10 {
+                break; // invariant subspace found
+            }
+            for x in &mut w {
+                *x /= beta as f32;
+            }
+            betas.push(beta);
+            beta_prev = beta;
+            w_prev = Some(basis[j].clone());
+            basis.push(w);
+        }
+    }
+
+    let (values, first_components) = tridiag_eigen(&alphas, &betas);
+    let weights = first_components.iter().map(|c| c * c).collect();
+    Ok(RitzQuadrature { values, weights })
+}
+
+/// Spectral density histogram averaged over `probes` Lanczos runs.
+pub fn spectral_density<H: Hvp>(
+    h: &mut H,
+    m: usize,
+    probes: usize,
+    bins: usize,
+) -> Result<Histogram> {
+    let mut quads = Vec::new();
+    for p in 0..probes {
+        quads.push(lanczos(h, m, 0xF16_7 + p as u32)?);
+    }
+    let lo = quads
+        .iter()
+        .flat_map(|q| q.values.iter().cloned())
+        .fold(f64::INFINITY, f64::min);
+    let hi = quads
+        .iter()
+        .flat_map(|q| q.values.iter().cloned())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0.0f64; bins];
+    for q in &quads {
+        for (v, w) in q.values.iter().zip(&q.weights) {
+            let b = (((v - lo) / span) * (bins as f64 - 1.0)).round() as usize;
+            counts[b.min(bins - 1)] += w / probes as f64;
+        }
+    }
+    Ok(Histogram {
+        lo,
+        hi,
+        counts,
+    })
+}
+
+/// Effective-rank estimate tr(|H|)/||H||_2 via the same quadratures
+/// (Assumption 5's κ). The absolute spectrum is used because a training
+/// Hessian is indefinite — plain tr(H) cancels between positive and
+/// negative curvature and can even go negative; Assumption 5's H_l is the
+/// PSD curvature envelope, for which |λ| is the faithful proxy.
+pub fn effective_rank<H: Hvp>(
+    h: &mut H,
+    m: usize,
+    probes: usize,
+) -> Result<f64> {
+    let d = h.dim() as f64;
+    let mut trace_abs = 0.0;
+    let mut opnorm: f64 = 0.0;
+    for p in 0..probes {
+        let q = lanczos(h, m, 0x7ACE + p as u32)?;
+        // quadrature estimate of tr(|H|)/d is sum w_i * |lambda_i|
+        trace_abs += q
+            .values
+            .iter()
+            .zip(&q.weights)
+            .map(|(v, w)| v.abs() * w)
+            .sum::<f64>()
+            * d;
+        opnorm = opnorm.max(
+            q.values
+                .iter()
+                .cloned()
+                .fold(0.0f64, |a, b| a.max(b.abs())),
+        );
+    }
+    trace_abs /= probes as f64;
+    Ok(if opnorm > 0.0 { trace_abs / opnorm } else { 0.0 })
+}
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn print(&self, title: &str) {
+        println!("\n--- {title} ---");
+        let max = self.counts.iter().cloned().fold(1e-12, f64::max);
+        let n = self.counts.len();
+        for (i, c) in self.counts.iter().enumerate() {
+            let lo = self.lo + (self.hi - self.lo) * i as f64 / n as f64;
+            let bar_len = ((c / max) * 50.0).round() as usize;
+            // log-ish marker so small-but-nonzero bins stay visible
+            let bar: String = "#".repeat(bar_len.max(usize::from(*c > 1e-9)));
+            println!("{lo:>+10.4}  {c:>9.5}  {bar}");
+        }
+    }
+
+    /// Mass within `eps` of zero — the paper's "heavily concentrated at
+    /// zero" observation.
+    pub fn mass_near_zero(&self, eps: f64) -> f64 {
+        let n = self.counts.len();
+        let total: f64 = self.counts.iter().sum();
+        let mut near = 0.0;
+        for (i, c) in self.counts.iter().enumerate() {
+            let center =
+                self.lo + (self.hi - self.lo) * (i as f64 + 0.5) / n as f64;
+            if center.abs() <= eps {
+                near += c;
+            }
+        }
+        if total > 0.0 {
+            near / total
+        } else {
+            0.0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// small linear algebra helpers
+// ---------------------------------------------------------------------------
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+fn normalize(a: &mut [f32]) {
+    let n = norm(a) as f32;
+    if n > 0.0 {
+        for x in a {
+            *x /= n;
+        }
+    }
+}
+
+/// Eigen-decomposition of a symmetric tridiagonal matrix via implicit-shift
+/// QL (Numerical-Recipes-style `tqli`), returning eigenvalues and the first
+/// component of each eigenvector (all Lanczos quadrature needs).
+fn tridiag_eigen(alphas: &[f64], betas: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = alphas.len();
+    if n == 0 {
+        return (vec![], vec![]);
+    }
+    let mut d = alphas.to_vec();
+    let mut e = vec![0.0; n];
+    e[..n - 1].copy_from_slice(&betas[..n.saturating_sub(1)]);
+    // z tracks only the first row of the eigenvector matrix
+    let mut z = vec![0.0; n];
+    z[0] = 1.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                break;
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // first-row eigenvector update
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    // sort by eigenvalue
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    (
+        idx.iter().map(|&i| d[i]).collect(),
+        idx.iter().map(|&i| z[i]).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dense symmetric test oracle.
+    struct Dense {
+        a: Vec<Vec<f32>>,
+    }
+
+    impl Hvp for Dense {
+        fn dim(&self) -> usize {
+            self.a.len()
+        }
+        fn apply(&mut self, v: &[f32]) -> Result<Vec<f32>> {
+            Ok(self
+                .a
+                .iter()
+                .map(|row| row.iter().zip(v).map(|(&x, &y)| x * y).sum())
+                .collect())
+        }
+    }
+
+    fn diag(vals: &[f32]) -> Dense {
+        let n = vals.len();
+        let mut a = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            a[i][i] = vals[i];
+        }
+        Dense { a }
+    }
+
+    #[test]
+    fn tridiag_eigen_2x2_known() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3; first components 1/sqrt(2)
+        let (vals, z) = tridiag_eigen(&[2.0, 2.0], &[1.0]);
+        assert!((vals[0] - 1.0).abs() < 1e-10);
+        assert!((vals[1] - 3.0).abs() < 1e-10);
+        for c in z {
+            assert!((c.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lanczos_recovers_diagonal_spectrum() {
+        let vals: Vec<f32> = vec![0.0, 0.0, 0.0, 0.0, 1.0, 5.0, 10.0, -2.0];
+        let mut h = diag(&vals);
+        let q = lanczos(&mut h, 8, 3).unwrap();
+        // extreme eigenvalues must be found accurately
+        let max = q.values.iter().cloned().fold(f64::MIN, f64::max);
+        let min = q.values.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max - 10.0).abs() < 1e-4, "max {max}");
+        assert!((min + 2.0).abs() < 1e-4, "min {min}");
+        // weights sum to ~1
+        let wsum: f64 = q.weights.iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-6, "wsum {wsum}");
+    }
+
+    #[test]
+    fn spectral_density_concentrates_where_spectrum_is() {
+        // mostly-zero spectrum: histogram mass near zero should dominate
+        let mut vals = vec![0.0f32; 60];
+        vals.extend_from_slice(&[8.0, 9.0, 10.0, -1.0]);
+        let mut h = diag(&vals);
+        let hist = spectral_density(&mut h, 16, 4, 21).unwrap();
+        assert!(hist.mass_near_zero(1.0) > 0.7);
+    }
+
+    #[test]
+    fn effective_rank_of_identity_is_dim() {
+        let mut h = diag(&vec![1.0f32; 32]);
+        let k = effective_rank(&mut h, 16, 3).unwrap();
+        assert!((k - 32.0).abs() < 2.0, "kappa {k}");
+    }
+
+    #[test]
+    fn effective_rank_of_rank1_is_small() {
+        let mut vals = vec![0.0f32; 63];
+        vals.push(10.0);
+        let mut h = diag(&vals);
+        let k = effective_rank(&mut h, 16, 3).unwrap();
+        assert!(k < 3.0, "kappa {k}");
+    }
+}

@@ -1,0 +1,4 @@
+//! Loss-landscape analysis: Hessian spectrum via stochastic Lanczos
+//! quadrature (paper Fig 7 / Appendix B evidence for Assumption 5).
+
+pub mod lanczos;

@@ -1,0 +1,213 @@
+//! Mini statistical benchmark harness (substrate S18; criterion is not in
+//! the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and call into this module.
+//! Each measurement runs warmup iterations, then timed batches until the
+//! time budget is spent, and reports mean / p50 / p95 / stddev.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Smoke mode (default) keeps cargo bench fast; REPRO_FULL=1 widens
+        // budgets for the recorded runs.
+        let full = std::env::var("REPRO_FULL").is_ok();
+        Self {
+            warmup: Duration::from_millis(if full { 500 } else { 100 }),
+            budget: Duration::from_millis(if full { 3000 } else { 600 }),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (one logical operation per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // warmup
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget || samples_ns.len() < 10 {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let var = samples_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            p50_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+            std_ns: var.sqrt(),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            fmt_ns(m.p95_ns),
+            m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(title: &str) {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p95"
+        );
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Simple table printer shared by the paper-table benches.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n--- {title} ---");
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(10),
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        let m = b
+            .run("noop-ish", || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            })
+            .clone();
+        assert!(m.iters >= 10);
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.p95_ns >= m.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn table_shape_enforced() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Fed-Server aggregation (substrate S12): weighted FedAvg over flat
+//! parameter vectors, paper Eq. (8).
+
+/// Weighted average of client parameter vectors into `out`.
+///
+/// Weights are normalized internally; equal weights reproduce plain FedAvg.
+/// Preallocated `out` keeps the round loop allocation-free.
+pub fn fedavg_into(clients: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+    assert!(!clients.is_empty(), "no clients to aggregate");
+    assert_eq!(clients.len(), weights.len());
+    let dim = out.len();
+    for c in clients {
+        assert_eq!(c.len(), dim, "parameter dimension mismatch");
+    }
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "non-positive total weight");
+
+    out.fill(0.0);
+    for (c, &w) in clients.iter().zip(weights) {
+        let wf = (w / total) as f32;
+        for (o, &x) in out.iter_mut().zip(c.iter()) {
+            *o += wf * x;
+        }
+    }
+}
+
+pub fn fedavg(clients: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    let mut out = vec![0.0; clients[0].len()];
+    fedavg_into(clients, weights, &mut out);
+    out
+}
+
+/// Aggregate optimizer moment vectors the same way (used for the SFLV1
+/// per-client server copies where the optimizer state is averaged along
+/// with the parameters).
+pub fn fedavg_state(states: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    fedavg(states, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, assert_prop};
+
+    #[test]
+    fn identical_inputs_are_fixed_point() {
+        // up to f32 rounding of the normalized weights (1/3 is inexact)
+        let a = vec![1.0f32, -2.0, 3.5];
+        let out = fedavg(&[&a, &a, &a], &[1.0, 1.0, 1.0]);
+        for (o, x) in out.iter().zip(&a) {
+            assert!((o - x).abs() < 1e-6, "{o} vs {x}");
+        }
+    }
+
+    #[test]
+    fn weighted_mean_exact() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![4.0f32, 8.0];
+        let out = fedavg(&[&a, &b], &[3.0, 1.0]);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dimension_mismatch_panics() {
+        let a = vec![1.0f32; 3];
+        let b = vec![1.0f32; 4];
+        fedavg(&[&a, &b], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn property_mean_within_bounds_and_linear() {
+        prop::check(100, |g| {
+            let dim = g.usize_in(1..50);
+            let n = g.usize_in(1..6);
+            let clients: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| g.f32_in(-5.0..5.0)).collect())
+                .collect();
+            let weights: Vec<f64> =
+                (0..n).map(|_| g.f64_in(0.1..3.0)).collect();
+            let refs: Vec<&[f32]> =
+                clients.iter().map(|c| c.as_slice()).collect();
+            let out = fedavg(&refs, &weights);
+
+            // mean of values is within [min, max] coordinatewise
+            for j in 0..dim {
+                let mn = clients
+                    .iter()
+                    .map(|c| c[j])
+                    .fold(f32::INFINITY, f32::min);
+                let mx = clients
+                    .iter()
+                    .map(|c| c[j])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                assert_prop!(
+                    out[j] >= mn - 1e-4 && out[j] <= mx + 1e-4,
+                    "coordinate {j}: {} outside [{mn}, {mx}]",
+                    out[j]
+                );
+            }
+
+            // scaling all weights by a constant changes nothing
+            let w2: Vec<f64> = weights.iter().map(|w| w * 7.0).collect();
+            let out2 = fedavg(&refs, &w2);
+            for (a, b) in out.iter().zip(&out2) {
+                assert_prop!((a - b).abs() < 1e-5, "weight-scale invariance");
+            }
+            Ok(())
+        });
+    }
+}

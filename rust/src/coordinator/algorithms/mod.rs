@@ -1,0 +1,129 @@
+//! The SFL algorithm family (substrate S9).
+//!
+//! Each algorithm is a strategy over the shared round driver
+//! (`coordinator::round`): it decides how a client performs one local step,
+//! what it uploads, and what the server does with it.
+//!
+//! * [`Algorithm::Heron`] — the paper's contribution: client-side ZO
+//!   (forward-only) updates through the aux head, server-side FO.
+//! * [`Algorithm::CseFsl`] — decoupled FO baseline (aux head trained with
+//!   local backprop; paper [10]).
+//! * [`Algorithm::FslSage`] — CSE-FSL plus periodic aux-gradient alignment
+//!   against the server's cut gradient (paper [11]).
+//! * [`Algorithm::SflV2`] — traditional split-fed: per-batch smashed upload,
+//!   server FO step, cut-gradient download, client backprop (training
+//!   lock). On transformer variants this is the SplitLoRA baseline.
+//! * [`Algorithm::SflV1`] — as V2 but with per-client server model copies
+//!   aggregated at round end.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Heron,
+    CseFsl,
+    FslSage,
+    SflV1,
+    SflV2,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Heron => "HERON-SFL",
+            Algorithm::CseFsl => "CSE-FSL",
+            Algorithm::FslSage => "FSL-SAGE",
+            Algorithm::SflV1 => "SFLV1",
+            Algorithm::SflV2 => "SFLV2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "heron" | "heron-sfl" | "heron_sfl" => Some(Algorithm::Heron),
+            "cse" | "cse-fsl" | "cse_fsl" => Some(Algorithm::CseFsl),
+            "sage" | "fsl-sage" | "fsl_sage" => Some(Algorithm::FslSage),
+            "sflv1" | "sfl-v1" => Some(Algorithm::SflV1),
+            "sflv2" | "sfl-v2" | "splitlora" => Some(Algorithm::SflV2),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Algorithm; 5] {
+        [
+            Algorithm::SflV1,
+            Algorithm::SflV2,
+            Algorithm::CseFsl,
+            Algorithm::FslSage,
+            Algorithm::Heron,
+        ]
+    }
+
+    /// Decoupled algorithms update clients without per-step server
+    /// round-trips (aux-network based).
+    pub fn is_decoupled(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::Heron | Algorithm::CseFsl | Algorithm::FslSage
+        )
+    }
+
+    /// Does the client-side update need backprop (activation caching)?
+    pub fn client_uses_backprop(&self) -> bool {
+        !matches!(self, Algorithm::Heron)
+    }
+
+    /// HLO entries this algorithm needs (used for warmup + manifest
+    /// validation).
+    pub fn required_entries(&self) -> &'static [&'static str] {
+        match self {
+            Algorithm::Heron => {
+                &["zo_step", "client_fwd", "server_step", "eval_full"]
+            }
+            Algorithm::CseFsl => {
+                &["fo_step", "client_fwd", "server_step", "eval_full"]
+            }
+            Algorithm::FslSage => &[
+                "fo_step",
+                "client_fwd",
+                "server_step",
+                "server_step_cutgrad",
+                "aux_align",
+                "eval_full",
+            ],
+            Algorithm::SflV1 | Algorithm::SflV2 => &[
+                "client_fwd",
+                "server_step_cutgrad",
+                "client_bp_step",
+                "eval_full",
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Algorithm::parse("heron"), Some(Algorithm::Heron));
+        assert_eq!(Algorithm::parse("HERON-SFL"), Some(Algorithm::Heron));
+        assert_eq!(Algorithm::parse("splitlora"), Some(Algorithm::SflV2));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn classification_flags() {
+        assert!(Algorithm::Heron.is_decoupled());
+        assert!(!Algorithm::SflV2.is_decoupled());
+        assert!(!Algorithm::Heron.client_uses_backprop());
+        assert!(Algorithm::CseFsl.client_uses_backprop());
+    }
+
+    #[test]
+    fn required_entries_nonempty() {
+        for a in Algorithm::all() {
+            assert!(!a.required_entries().is_empty());
+            assert!(a.required_entries().contains(&"eval_full"));
+        }
+    }
+}

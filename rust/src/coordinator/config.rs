@@ -1,0 +1,276 @@
+//! Experiment configuration (substrate S5): typed config with JSON presets
+//! and dotted CLI overrides.
+
+use crate::coordinator::algorithms::Algorithm;
+use crate::data::partition::Scheme;
+use crate::util::cli::Args;
+use crate::util::json::Value;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact variant (e.g. "cnn_c1", "gpt2micro_c2_a1")
+    pub variant: String,
+    pub algorithm: Algorithm,
+    pub n_clients: usize,
+    /// fraction of clients participating per round (paper Fig 3c)
+    pub participation: f64,
+    pub rounds: usize,
+    /// local steps per round (h in the paper)
+    pub local_steps: usize,
+    /// upload smashed data every k local steps
+    pub upload_every: usize,
+    /// FSL-SAGE: run aux alignment every this many uploads
+    pub align_every: usize,
+    pub lr_client: f32,
+    pub lr_server: f32,
+    /// ZO perturbation step size μ
+    pub mu: f32,
+    /// ZO probes per step (n_p); total forwards = n_pert + 1
+    pub n_pert: usize,
+    pub scheme: Scheme,
+    /// virtual dataset size assigned across clients
+    pub dataset_size: u64,
+    pub data_seed: u64,
+    pub run_seed: u64,
+    pub eval_every: usize,
+    /// held-out eval sample start (beyond dataset_size)
+    pub eval_holdout: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            variant: "cnn_c1".into(),
+            algorithm: Algorithm::Heron,
+            n_clients: 5,
+            participation: 1.0,
+            rounds: 30,
+            local_steps: 2,
+            upload_every: 1,
+            align_every: 4,
+            lr_client: 1e-3,
+            lr_server: 1e-3,
+            mu: 1e-2,
+            n_pert: 1,
+            scheme: Scheme::Iid,
+            dataset_size: 4096,
+            data_seed: 42,
+            run_seed: 7,
+            eval_every: 1,
+            eval_holdout: 1 << 20,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_clients == 0 {
+            bail!("n_clients must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation <= 0.0
+        {
+            bail!("participation must be in (0, 1]");
+        }
+        if self.local_steps == 0 || self.upload_every == 0 {
+            bail!("local_steps and upload_every must be positive");
+        }
+        if self.mu <= 0.0 {
+            bail!("mu must be positive");
+        }
+        if self.dataset_size < self.n_clients as u64 {
+            bail!("dataset smaller than client count");
+        }
+        Ok(())
+    }
+
+    pub fn participants_per_round(&self) -> usize {
+        ((self.n_clients as f64 * self.participation).round() as usize)
+            .clamp(1, self.n_clients)
+    }
+
+    /// Apply `--key value` overrides (dotted keys accepted for
+    /// discoverability; the last path segment decides).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        for (k, v) in &args.flags {
+            let key = k.rsplit('.').next().unwrap_or(k);
+            self.apply_kv(key, v)
+                .with_context(|| format!("applying --{k} {v}"))?;
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "variant" => self.variant = v.to_string(),
+            "algorithm" | "algo" => {
+                self.algorithm = Algorithm::parse(v)
+                    .with_context(|| format!("unknown algorithm {v}"))?
+            }
+            "clients" | "n_clients" => self.n_clients = v.parse()?,
+            "participation" => self.participation = v.parse()?,
+            "rounds" => self.rounds = v.parse()?,
+            "local_steps" | "h" => self.local_steps = v.parse()?,
+            "upload_every" | "k" => self.upload_every = v.parse()?,
+            "align_every" => self.align_every = v.parse()?,
+            "lr_client" => self.lr_client = v.parse()?,
+            "lr_server" => self.lr_server = v.parse()?,
+            "mu" => self.mu = v.parse()?,
+            "n_pert" => self.n_pert = v.parse()?,
+            "alpha" | "dirichlet" => {
+                self.scheme = Scheme::Dirichlet { alpha: v.parse()? }
+            }
+            "iid" => {
+                if v == "true" {
+                    self.scheme = Scheme::Iid
+                }
+            }
+            "dataset_size" => self.dataset_size = v.parse()?,
+            "data_seed" => self.data_seed = v.parse()?,
+            "run_seed" | "seed" => self.run_seed = v.parse()?,
+            "eval_every" => self.eval_every = v.parse()?,
+            // non-config CLI flags pass through silently
+            _ => {}
+        }
+        Ok(())
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(obj) = v.as_obj() {
+            for (k, val) in obj {
+                let s = match val {
+                    Value::Str(s) => s.clone(),
+                    Value::Num(n) => {
+                        if *n == n.trunc() {
+                            format!("{}", *n as i64)
+                        } else {
+                            format!("{n}")
+                        }
+                    }
+                    Value::Bool(b) => b.to_string(),
+                    _ => continue,
+                };
+                cfg.apply_kv(k, &s)?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = crate::util::json::parse(&text)?;
+        Self::from_json(&v)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | {:?}",
+            self.algorithm.name(),
+            self.variant,
+            self.n_clients,
+            self.participation * 100.0,
+            self.rounds,
+            self.local_steps,
+            self.upload_every,
+            self.lr_client,
+            self.lr_server,
+            self.mu,
+            self.n_pert,
+            self.scheme,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn args_override() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--algo", "sage", "--rounds", "5", "--alpha", "0.3",
+             "--run.mu", "0.05"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::FslSage);
+        assert_eq!(cfg.rounds, 5);
+        assert!(matches!(cfg.scheme, Scheme::Dirichlet { alpha } if (alpha - 0.3).abs() < 1e-12));
+        assert!((cfg.mu - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_config() {
+        let v = crate::util::json::parse(
+            r#"{"variant": "cnn_c2", "algorithm": "heron", "clients": 10,
+                "mu": 0.001, "rounds": 3}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.variant, "cnn_c2");
+        assert_eq!(cfg.n_clients, 10);
+        assert!((cfg.mu - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = RunConfig::default();
+        c.n_clients = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.mu = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn participants_rounding() {
+        let mut c = RunConfig::default();
+        c.n_clients = 10;
+        c.participation = 0.25;
+        assert_eq!(c.participants_per_round(), 3);
+        c.participation = 0.01;
+        assert_eq!(c.participants_per_round(), 1);
+    }
+}
+
+#[cfg(test)]
+mod preset_tests {
+    use super::*;
+
+    #[test]
+    fn repo_presets_load_and_validate() {
+        let mut dir = std::env::current_dir().unwrap();
+        loop {
+            if dir.join("configs").exists() {
+                break;
+            }
+            assert!(dir.pop(), "configs/ not found above cwd");
+        }
+        let configs = dir.join("configs");
+        let mut count = 0;
+        for entry in std::fs::read_dir(&configs).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                let cfg = RunConfig::load(&path)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+                cfg.validate().unwrap();
+                count += 1;
+            }
+        }
+        assert!(count >= 3, "expected >=3 preset configs, found {count}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Discrete-event latency simulator (substrate S14).
+//!
+//! The paper's protocol is synchronous; actual client parallelism is modeled
+//! over *virtual time* while compute executes sequentially on the single
+//! PJRT client. Each device profile has a compute rate (FLOP/s) and an
+//! uplink/downlink bandwidth; the simulator derives per-round wall-clock:
+//!
+//!   round_time = max_i(client_compute_i + uplink_i) + server_queue_time
+//!              + aggregation broadcast
+//!
+//! which is what the paper's idle-time / training-lock discussion is about:
+//! SFLV1/V2 serialize every local step against a server round-trip, while
+//! decoupled methods overlap.
+
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    /// sustained client compute, FLOP/s (edge device)
+    pub client_flops: f64,
+    /// sustained server compute, FLOP/s
+    pub server_flops: f64,
+    /// uplink bandwidth, bytes/s
+    pub uplink_bps: f64,
+    /// downlink bandwidth, bytes/s
+    pub downlink_bps: f64,
+    /// per-message latency floor, seconds
+    pub rtt: f64,
+}
+
+impl DeviceProfile {
+    /// A Raspberry-Pi-class edge device on home broadband against a
+    /// datacenter server — the regime the paper's intro motivates.
+    pub fn edge_default() -> Self {
+        Self {
+            client_flops: 8e9,
+            server_flops: 2e12,
+            uplink_bps: 2.5e6,
+            downlink_bps: 10e6,
+            rtt: 0.02,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RoundTiming {
+    /// virtual seconds of the parallel client phase (max over clients)
+    pub client_phase: f64,
+    /// virtual seconds the server spends draining the queue
+    pub server_phase: f64,
+    /// model sync (broadcast + collect)
+    pub sync_phase: f64,
+    /// total idle time clients spend blocked on the server (training lock)
+    pub client_idle: f64,
+}
+
+impl RoundTiming {
+    pub fn total(&self) -> f64 {
+        self.client_phase + self.server_phase + self.sync_phase
+    }
+}
+
+/// Accumulates per-client virtual time within one round, then folds into a
+/// `RoundTiming`. Owns a copy of the (small, Copy) device profile so the
+/// round driver can mutate itself while the sim is live.
+pub struct RoundSim {
+    profile: DeviceProfile,
+    client_times: Vec<f64>,
+    client_idle: Vec<f64>,
+    server_time: f64,
+    sync_bytes: u64,
+}
+
+impl RoundSim {
+    pub fn new(profile: &DeviceProfile, n_clients: usize) -> Self {
+        Self {
+            profile: *profile,
+            client_times: vec![0.0; n_clients],
+            client_idle: vec![0.0; n_clients],
+            server_time: 0.0,
+            sync_bytes: 0,
+        }
+    }
+
+    pub fn client_compute(&mut self, client: usize, flops: u64) {
+        self.client_times[client] += flops as f64 / self.profile.client_flops;
+    }
+
+    pub fn client_upload(&mut self, client: usize, bytes: u64) {
+        self.client_times[client] +=
+            bytes as f64 / self.profile.uplink_bps + self.profile.rtt;
+    }
+
+    pub fn client_download(&mut self, client: usize, bytes: u64) {
+        self.client_times[client] +=
+            bytes as f64 / self.profile.downlink_bps + self.profile.rtt;
+    }
+
+    pub fn server_compute(&mut self, flops: u64) {
+        self.server_time += flops as f64 / self.profile.server_flops;
+    }
+
+    /// Synchronous round-trip: the client blocks while the server computes
+    /// (SFLV1/V2's training lock). Charges the client the wait as idle time.
+    pub fn client_blocked_on_server(&mut self, client: usize, server_flops: u64) {
+        let wait = server_flops as f64 / self.profile.server_flops
+            + 2.0 * self.profile.rtt;
+        self.client_times[client] += wait;
+        self.client_idle[client] += wait;
+    }
+
+    pub fn sync(&mut self, bytes_per_client: u64) {
+        self.sync_bytes += bytes_per_client;
+    }
+
+    pub fn finish(self) -> RoundTiming {
+        let client_phase = self
+            .client_times
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        let n = self.client_times.len().max(1) as f64;
+        let sync_phase = self.sync_bytes as f64
+            / self.profile.downlink_bps.min(self.profile.uplink_bps)
+            / n
+            + self.profile.rtt;
+        RoundTiming {
+            client_phase,
+            server_phase: self.server_time,
+            sync_phase,
+            client_idle: self.client_idle.iter().sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> DeviceProfile {
+        DeviceProfile {
+            client_flops: 1e9,
+            server_flops: 1e12,
+            uplink_bps: 1e6,
+            downlink_bps: 1e7,
+            rtt: 0.01,
+        }
+    }
+
+    #[test]
+    fn client_phase_is_max_not_sum() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 3);
+        sim.client_compute(0, 1_000_000_000); // 1 s
+        sim.client_compute(1, 2_000_000_000); // 2 s
+        sim.client_compute(2, 500_000_000); // 0.5 s
+        let t = sim.finish();
+        assert!((t.client_phase - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn upload_time_includes_rtt() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 1);
+        sim.client_upload(0, 1_000_000); // 1 s + 0.01 rtt
+        let t = sim.finish();
+        assert!((t.client_phase - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_lock_accumulates_idle() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 2);
+        for _ in 0..10 {
+            sim.client_blocked_on_server(0, 1_000_000_000); // 1 ms + 20 ms rtt
+        }
+        let t = sim.finish();
+        assert!(t.client_idle > 0.2, "idle {}", t.client_idle);
+    }
+
+    #[test]
+    fn server_phase_independent_of_client_phase() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 1);
+        sim.server_compute(5_000_000_000_000); // 5 s of server work
+        let t = sim.finish();
+        assert!((t.server_phase - 5.0).abs() < 1e-9);
+        assert_eq!(t.client_phase, 0.0);
+    }
+
+    #[test]
+    fn total_is_sum_of_phases() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 1);
+        sim.client_compute(0, 1_000_000_000);
+        sim.server_compute(1_000_000_000_000);
+        sim.sync(1_000_000);
+        let t = sim.finish();
+        assert!(
+            (t.total() - (t.client_phase + t.server_phase + t.sync_phase))
+                .abs()
+                < 1e-12
+        );
+    }
+}

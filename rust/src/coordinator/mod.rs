@@ -1,0 +1,18 @@
+//! L3 coordinator: the HERON-SFL protocol and its baselines.
+//!
+//! * [`algorithms`] — the algorithm family (HERON, CSE-FSL, FSL-SAGE,
+//!   SFLV1/V2-SplitLoRA)
+//! * [`round`] — the four-stage round driver over the AOT runtime
+//! * [`aggregator`] — Fed-Server FedAvg (Eq. 8)
+//! * [`server_queue`] — Main-Server sequential smashed-data queue (Eq. 7)
+//! * [`accounting`] — Table I/II/III resource cost models
+//! * [`eventsim`] — virtual-time latency / training-lock simulator
+//! * [`config`] — experiment configuration
+
+pub mod accounting;
+pub mod aggregator;
+pub mod algorithms;
+pub mod config;
+pub mod eventsim;
+pub mod round;
+pub mod server_queue;

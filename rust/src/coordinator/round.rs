@@ -1,0 +1,745 @@
+//! The round driver (substrate S10): executes the four-stage HERON-SFL
+//! protocol (paper §IV) and its baselines over the AOT runtime.
+//!
+//! Per communication round t:
+//! 1. *Model initialization* — participants start from the aggregated
+//!    θ_l^t (Fed-Server broadcast).
+//! 2. *Local phase* — h local steps per client. HERON uses the in-graph ZO
+//!    step (Eq. 6); CSE-FSL/FSL-SAGE use local FO; SFLV1/V2 do the
+//!    traditional locked exchange (upload smashed, server FO step, download
+//!    cut gradient, client backprop). Decoupled methods enqueue smashed
+//!    batches every k steps.
+//! 3. *Server phase* — the Main-Server drains the queue sequentially with
+//!    FO updates (Eq. 7; SFLV2-style single server model).
+//! 4. *Aggregation* — Fed-Server FedAvg over participants (Eq. 8).
+//!
+//! Client compute runs sequentially on the single PJRT client; parallelism
+//! is accounted in virtual time by the event simulator.
+
+use crate::coordinator::accounting::CostBook;
+use crate::coordinator::aggregator::fedavg_into;
+use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::eventsim::{DeviceProfile, RoundSim, RoundTiming};
+use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
+use crate::data::loader::{Loader, Task};
+use crate::data::partition::Partition;
+use crate::metrics::{RoundRecord, RunRecord};
+use crate::runtime::tensor::TensorValue;
+use crate::runtime::{Call, Session};
+use crate::util::rng::{mix64, Xoshiro256pp};
+use anyhow::{bail, Context, Result};
+
+/// Adam state threading through the step entries ((m, v, t) or stateless).
+#[derive(Debug, Clone)]
+pub enum OptState {
+    None,
+    Adam { m: Vec<f32>, v: Vec<f32>, t: f32 },
+}
+
+impl OptState {
+    pub fn new(opt_state: usize, dim: usize) -> Self {
+        if opt_state == 0 {
+            OptState::None
+        } else {
+            OptState::Adam {
+                m: vec![0.0; dim],
+                v: vec![0.0; dim],
+                t: 0.0,
+            }
+        }
+    }
+}
+
+struct ClientState {
+    loader: Loader,
+    opt_local: OptState,
+    /// SFLV1/V2: separate optimizer for θ_c-only backprop updates
+    opt_client: OptState,
+    shard_weight: f64,
+    /// last uploaded batch (FSL-SAGE alignment needs it)
+    last_upload: Option<(Vec<f32>, Vec<i32>, Vec<i32>)>, // smashed, y, x
+}
+
+pub struct Driver<'s> {
+    pub session: &'s Session,
+    pub cfg: RunConfig,
+    pub book: CostBook,
+    task: Task,
+    base: Option<Vec<f32>>,
+    pub theta_l: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    opt_server: OptState,
+    /// SFLV1: per-client server replicas (θ_s, opt)
+    server_replicas: Vec<(Vec<f32>, OptState)>,
+    clients: Vec<ClientState>,
+    rng: Xoshiro256pp,
+    pub comm_bytes: u64,
+    pub flops_client: u64,
+    profile: DeviceProfile,
+    pub timings: Vec<RoundTiming>,
+    nc: usize,
+    ns: usize,
+    round_idx: usize,
+    // reusable aggregation buffer
+    agg_buf: Vec<f32>,
+}
+
+impl<'s> Driver<'s> {
+    pub fn new(session: &'s Session, cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let v = session.variant(&cfg.variant)?.clone();
+        for e in cfg.algorithm.required_entries() {
+            if !v.entries.contains_key(*e) {
+                bail!(
+                    "variant {} lacks entry {e} required by {}",
+                    cfg.variant,
+                    cfg.algorithm.name()
+                );
+            }
+        }
+        let task = if v.task == "lm" { Task::Lm } else { Task::Vision };
+        let base = if v.size_base > 0 {
+            Some(v.blob("frozen_base")?)
+        } else {
+            None
+        };
+        let theta_l = v.blob("init_theta_l")?;
+        let theta_s = v.blob("init_theta_s")?;
+        let (nc, nl, ns) = (v.size_client, v.size_local(), v.size_server);
+        if theta_l.len() != nl || theta_s.len() != ns {
+            bail!("init blob sizes disagree with manifest");
+        }
+
+        let part = match task {
+            Task::Vision => Partition::vision(
+                cfg.data_seed,
+                cfg.dataset_size,
+                cfg.n_clients,
+                cfg.scheme,
+            ),
+            Task::Lm => Partition::text(
+                cfg.data_seed,
+                cfg.dataset_size,
+                cfg.n_clients,
+                cfg.scheme,
+            ),
+        };
+        let total: usize = part.sizes().iter().sum();
+        let clients = part
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let shard = if shard.is_empty() {
+                    vec![(i as u64) % cfg.dataset_size] // degenerate shard fallback
+                } else {
+                    shard.clone()
+                };
+                let w = shard.len() as f64 / total.max(1) as f64;
+                ClientState {
+                    loader: Loader::new(
+                        task,
+                        cfg.data_seed,
+                        shard,
+                        v.batch,
+                        mix64(cfg.run_seed, 0x10AD ^ i as u64),
+                    ),
+                    opt_local: OptState::new(v.opt_state, nl),
+                    opt_client: OptState::new(v.opt_state, nc),
+                    shard_weight: w,
+                    last_upload: None,
+                }
+            })
+            .collect();
+
+        let server_replicas = if cfg.algorithm == Algorithm::SflV1 {
+            (0..cfg.n_clients)
+                .map(|_| (theta_s.clone(), OptState::new(v.opt_state, ns)))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let opt_state = v.opt_state;
+        Ok(Driver {
+            session,
+            book: CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64),
+            task,
+            base,
+            theta_l,
+            theta_s,
+            opt_server: OptState::new(opt_state, ns),
+            server_replicas,
+            clients,
+            rng: Xoshiro256pp::new(cfg.run_seed),
+            comm_bytes: 0,
+            flops_client: 0,
+            profile: DeviceProfile::edge_default(),
+            timings: Vec::new(),
+            nc,
+            ns,
+            round_idx: 0,
+            agg_buf: vec![0.0; nl],
+            cfg,
+        })
+    }
+
+    pub fn warmup(&self) -> Result<()> {
+        self.session
+            .warmup(&self.cfg.variant, self.cfg.algorithm.required_entries())
+    }
+
+    fn call<'a>(&'a self, entry: &'a str) -> Call<'a> {
+        let mut c = Call::new(self.session, &self.cfg.variant, entry);
+        if let Some(b) = &self.base {
+            c = c.arg("base", b.clone());
+        }
+        c
+    }
+
+    fn opt_args<'a>(mut c: Call<'a>, opt: &OptState) -> Call<'a> {
+        if let OptState::Adam { m, v, t } = opt {
+            c = c
+                .arg("opt_m", m.clone())
+                .arg("opt_v", v.clone())
+                .arg("opt_t", *t);
+        }
+        c
+    }
+
+    fn take_opt(
+        outs: &mut std::collections::HashMap<String, TensorValue>,
+        opt: &mut OptState,
+    ) -> Result<()> {
+        if let OptState::Adam { m, v, t } = opt {
+            *m = outs
+                .remove("opt_m")
+                .context("opt_m output")?
+                .into_f32()?;
+            *v = outs
+                .remove("opt_v")
+                .context("opt_v output")?
+                .into_f32()?;
+            *t = outs
+                .remove("opt_t")
+                .context("opt_t output")?
+                .scalar_f32()?;
+        }
+        Ok(())
+    }
+
+    fn step_seed(&self, client: usize, step: usize) -> i32 {
+        mix64(
+            self.cfg.run_seed,
+            (self.round_idx as u64) << 24 | (client as u64) << 12 | step as u64,
+        ) as i32
+    }
+
+    fn batch_xy(&self, client: usize) -> (TensorValue, Vec<i32>) {
+        let cs = &self.clients[client];
+        match self.task {
+            Task::Vision => (
+                TensorValue::F32(cs.loader.xs_f32.clone()),
+                cs.loader.ys.clone(),
+            ),
+            Task::Lm => (
+                TensorValue::I32(cs.loader.xs_i32.clone()),
+                cs.loader.xs_i32.clone(),
+            ),
+        }
+    }
+
+    /// One full communication round. Returns the train-loss mean over all
+    /// local steps.
+    pub fn run_round(&mut self) -> Result<f64> {
+        let participants = self.sample_participants();
+        let mut sim = RoundSim::new(&self.profile, self.cfg.n_clients);
+        let mut queue = ServerQueue::new(
+            participants.len()
+                * (self.cfg.local_steps / self.cfg.upload_every + 1),
+        );
+        let mut losses: Vec<f64> = Vec::new();
+        let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
+
+        for &ci in &participants {
+            let theta_start = self.theta_l.clone();
+            let theta_end = match self.cfg.algorithm {
+                Algorithm::Heron => self.local_phase_zo(
+                    ci,
+                    theta_start,
+                    &mut queue,
+                    &mut sim,
+                    &mut losses,
+                )?,
+                Algorithm::CseFsl | Algorithm::FslSage => self
+                    .local_phase_fo(
+                        ci,
+                        theta_start,
+                        &mut queue,
+                        &mut sim,
+                        &mut losses,
+                    )?,
+                Algorithm::SflV1 | Algorithm::SflV2 => self
+                    .local_phase_locked(ci, theta_start, &mut sim, &mut losses)?,
+            };
+            // model sync accounting (download at init + upload at end)
+            self.comm_bytes += self.book.comm_per_round_sync();
+            sim.sync(self.book.comm_per_round_sync());
+            updated.push((ci, theta_end));
+        }
+
+        // ---- server phase: drain queued smashed batches sequentially ----
+        if self.cfg.algorithm.is_decoupled() {
+            let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
+            while let Some(b) = queue.pop() {
+                let want_cutgrad = self.cfg.algorithm == Algorithm::FslSage
+                    && b.step % (self.cfg.upload_every * self.cfg.align_every)
+                        == 0;
+                let g = self.server_consume(&b, want_cutgrad, &mut sim)?;
+                if let Some(g_sm) = g {
+                    sage_feedback.push((b.client, g_sm));
+                }
+            }
+            // FSL-SAGE: clients align their aux model against the returned
+            // cut gradients (one alignment per feedback message)
+            for (ci, g_sm) in sage_feedback {
+                self.comm_bytes += self.book.comm_per_alignment();
+                sim.client_download(ci, self.book.comm_per_alignment());
+                if let Some(pos) =
+                    updated.iter().position(|(c, _)| *c == ci)
+                {
+                    let (sm, y, _x) = self.clients[ci]
+                        .last_upload
+                        .clone()
+                        .context("sage alignment without upload")?;
+                    let theta = updated[pos].1.clone();
+                    let mut outs = self
+                        .call("aux_align")
+                        .arg("theta_l", theta)
+                        .arg("smashed", sm)
+                        .arg("y", TensorValue::I32(y))
+                        .arg("g_smashed", g_sm)
+                        .arg("lr", self.cfg.lr_client)
+                        .run()?;
+                    updated[pos].1 = outs
+                        .remove("theta_l")
+                        .context("aux_align theta_l")?
+                        .into_f32()?;
+                }
+            }
+        }
+
+        // ---- aggregation (Fed-Server, Eq. 8) ----
+        if !updated.is_empty() {
+            let refs: Vec<&[f32]> =
+                updated.iter().map(|(_, t)| t.as_slice()).collect();
+            let weights: Vec<f64> = updated
+                .iter()
+                .map(|(c, _)| self.clients[*c].shard_weight.max(1e-9))
+                .collect();
+            fedavg_into(&refs, &weights, &mut self.agg_buf);
+            if self.cfg.algorithm.is_decoupled() {
+                self.theta_l.copy_from_slice(&self.agg_buf);
+            } else {
+                // SFLV1/V2: only θ_c is client-trained; aux stays at init
+                self.theta_l[..self.nc]
+                    .copy_from_slice(&self.agg_buf[..self.nc]);
+            }
+        }
+
+        // SFLV1: aggregate the per-client server replicas into all replicas
+        if self.cfg.algorithm == Algorithm::SflV1 {
+            let refs: Vec<&[f32]> = participants
+                .iter()
+                .map(|&c| self.server_replicas[c].0.as_slice())
+                .collect();
+            let w = vec![1.0; refs.len()];
+            let mut mean = vec![0.0f32; self.ns];
+            fedavg_into(&refs, &w, &mut mean);
+            self.theta_s.copy_from_slice(&mean);
+            for (rep, _) in &mut self.server_replicas {
+                rep.copy_from_slice(&mean);
+            }
+        }
+
+        self.timings.push(sim.finish());
+        self.round_idx += 1;
+        Ok(losses.iter().sum::<f64>() / losses.len().max(1) as f64)
+    }
+
+    fn sample_participants(&mut self) -> Vec<usize> {
+        let k = self.cfg.participants_per_round();
+        let mut idx = self.rng.sample_indices(self.cfg.n_clients, k);
+        idx.sort_unstable();
+        idx
+    }
+
+    // ---- local phases -----------------------------------------------------
+
+    fn local_phase_zo(
+        &mut self,
+        ci: usize,
+        mut theta: Vec<f32>,
+        queue: &mut ServerQueue,
+        sim: &mut RoundSim,
+        losses: &mut Vec<f64>,
+    ) -> Result<Vec<f32>> {
+        let mut opt = std::mem::replace(
+            &mut self.clients[ci].opt_local,
+            OptState::None,
+        );
+        for step in 1..=self.cfg.local_steps {
+            self.clients[ci].loader.next_batch();
+            let (x, y) = self.batch_xy(ci);
+            let seed = self.step_seed(ci, step);
+            let mut outs = Self::opt_args(
+                self.call("zo_step").arg("theta_l", theta.clone()),
+                &opt,
+            )
+            .arg("x", x.clone())
+            .arg("y", TensorValue::I32(y.clone()))
+            .arg("seed", seed)
+            .arg("mu", self.cfg.mu)
+            .arg("lr", self.cfg.lr_client)
+            .arg("n_pert", self.cfg.n_pert as i32)
+            .run()?;
+            theta = outs
+                .remove("theta_l")
+                .context("zo theta_l")?
+                .into_f32()?;
+            Self::take_opt(&mut outs, &mut opt)?;
+            losses.push(
+                outs.remove("loss").context("zo loss")?.scalar_f32()? as f64,
+            );
+            self.flops_client += self.book.flops_per_step;
+            sim.client_compute(ci, self.book.flops_per_step);
+
+            if step % self.cfg.upload_every == 0 {
+                self.upload_smashed(ci, &theta, &x, &y, step, queue, sim)?;
+            }
+        }
+        self.clients[ci].opt_local = opt;
+        Ok(theta)
+    }
+
+    fn local_phase_fo(
+        &mut self,
+        ci: usize,
+        mut theta: Vec<f32>,
+        queue: &mut ServerQueue,
+        sim: &mut RoundSim,
+        losses: &mut Vec<f64>,
+    ) -> Result<Vec<f32>> {
+        let mut opt = std::mem::replace(
+            &mut self.clients[ci].opt_local,
+            OptState::None,
+        );
+        for step in 1..=self.cfg.local_steps {
+            self.clients[ci].loader.next_batch();
+            let (x, y) = self.batch_xy(ci);
+            let mut outs = Self::opt_args(
+                self.call("fo_step").arg("theta_l", theta.clone()),
+                &opt,
+            )
+            .arg("x", x.clone())
+            .arg("y", TensorValue::I32(y.clone()))
+            .arg("lr", self.cfg.lr_client)
+            .run()?;
+            theta = outs
+                .remove("theta_l")
+                .context("fo theta_l")?
+                .into_f32()?;
+            Self::take_opt(&mut outs, &mut opt)?;
+            losses.push(
+                outs.remove("loss").context("fo loss")?.scalar_f32()? as f64,
+            );
+            self.flops_client += self.book.flops_per_step;
+            sim.client_compute(ci, self.book.flops_per_step);
+
+            if step % self.cfg.upload_every == 0 {
+                self.upload_smashed(ci, &theta, &x, &y, step, queue, sim)?;
+            }
+        }
+        self.clients[ci].opt_local = opt;
+        Ok(theta)
+    }
+
+    /// Traditional SFL (V1/V2): every batch runs the locked exchange.
+    fn local_phase_locked(
+        &mut self,
+        ci: usize,
+        mut theta: Vec<f32>,
+        sim: &mut RoundSim,
+        losses: &mut Vec<f64>,
+    ) -> Result<Vec<f32>> {
+        let mut opt_c = std::mem::replace(
+            &mut self.clients[ci].opt_client,
+            OptState::None,
+        );
+        let server_fwd_flops = self.variant_server_flops();
+        for _step in 1..=self.cfg.local_steps {
+            self.clients[ci].loader.next_batch();
+            let (x, y) = self.batch_xy(ci);
+            // client forward to the cut layer
+            let mut outs = self
+                .call("client_fwd")
+                .arg("theta_c", theta[..self.nc].to_vec())
+                .arg("x", x.clone())
+                .run()?;
+            let smashed = outs
+                .remove("smashed")
+                .context("smashed")?
+                .into_f32()?;
+            let fwd = self.book.flops_per_step / 3; // 1 of 3F_c is the fwd
+            self.flops_client += fwd;
+            sim.client_compute(ci, fwd);
+            self.comm_bytes += self.book.smashed_bytes;
+            sim.client_upload(ci, self.book.smashed_bytes);
+
+            // server step on this client's replica (V1) or the shared model
+            // (V2); returns the cut gradient
+            let (theta_s, opt_s) = match self.cfg.algorithm {
+                Algorithm::SflV1 => {
+                    let (t, o) = &mut self.server_replicas[ci];
+                    (t, o)
+                }
+                _ => (&mut self.theta_s, &mut self.opt_server),
+            };
+            let mut souts = {
+                let mut c = Call::new(
+                    self.session,
+                    &self.cfg.variant,
+                    "server_step_cutgrad",
+                );
+                if let Some(b) = &self.base {
+                    c = c.arg("base", b.clone());
+                }
+                c = c.arg("theta_s", theta_s.clone());
+                if let OptState::Adam { m, v, t } = &*opt_s {
+                    c = c
+                        .arg("opt_m", m.clone())
+                        .arg("opt_v", v.clone())
+                        .arg("opt_t", *t);
+                }
+                c.arg("smashed", smashed)
+                    .arg("y", TensorValue::I32(y.clone()))
+                    .arg("lr", self.cfg.lr_server)
+                    .run()?
+            };
+            *theta_s = souts
+                .remove("theta_s")
+                .context("server theta_s")?
+                .into_f32()?;
+            Self::take_opt(&mut souts, opt_s)?;
+            losses.push(
+                souts.remove("loss").context("server loss")?.scalar_f32()?
+                    as f64,
+            );
+            let g_sm = souts
+                .remove("g_smashed")
+                .context("g_smashed")?
+                .into_f32()?;
+            // training lock: the client waits for the server's fwd+bwd
+            sim.client_blocked_on_server(ci, 3 * server_fwd_flops);
+            self.comm_bytes += self.book.cutgrad_bytes;
+            sim.client_download(ci, self.book.cutgrad_bytes);
+
+            // client backprop from the relayed cut gradient
+            let mut bouts = Self::opt_args(
+                self.call("client_bp_step")
+                    .arg("theta_c", theta[..self.nc].to_vec()),
+                &opt_c,
+            )
+            .arg("x", x)
+            .arg("g_smashed", g_sm)
+            .arg("lr", self.cfg.lr_client)
+            .run()?;
+            let new_c = bouts
+                .remove("theta_c")
+                .context("bp theta_c")?
+                .into_f32()?;
+            theta[..self.nc].copy_from_slice(&new_c);
+            Self::take_opt(&mut bouts, &mut opt_c)?;
+            let bwd = 2 * (self.book.flops_per_step / 3);
+            self.flops_client += bwd;
+            sim.client_compute(ci, bwd);
+        }
+        self.clients[ci].opt_client = opt_c;
+        Ok(theta)
+    }
+
+    fn upload_smashed(
+        &mut self,
+        ci: usize,
+        theta: &[f32],
+        x: &TensorValue,
+        y: &[i32],
+        step: usize,
+        queue: &mut ServerQueue,
+        sim: &mut RoundSim,
+    ) -> Result<()> {
+        let mut outs = self
+            .call("client_fwd")
+            .arg("theta_c", theta[..self.nc].to_vec())
+            .arg("x", x.clone())
+            .run()?;
+        let smashed = outs
+            .remove("smashed")
+            .context("smashed")?
+            .into_f32()?;
+        // the upload forward is part of the protocol but NOT an extra
+        // training cost in Table I (the paper's accounting charges the ZO /
+        // FO step); we still charge its flops to the client sim for latency
+        sim.client_compute(
+            ci,
+            (self.book.flops_per_step / (self.cfg.n_pert as u64 + 1)).max(1),
+        );
+        self.comm_bytes += self.book.comm_per_step(true);
+        sim.client_upload(ci, self.book.smashed_bytes);
+        let x_i32 = match x {
+            TensorValue::I32(v) => v.clone(),
+            _ => Vec::new(),
+        };
+        self.clients[ci].last_upload =
+            Some((smashed.clone(), y.to_vec(), x_i32));
+        queue.push(SmashedBatch {
+            client: ci,
+            round: self.round_idx,
+            step,
+            smashed,
+            targets: y.to_vec(),
+        });
+        Ok(())
+    }
+
+    fn server_consume(
+        &mut self,
+        b: &SmashedBatch,
+        want_cutgrad: bool,
+        sim: &mut RoundSim,
+    ) -> Result<Option<Vec<f32>>> {
+        let entry = if want_cutgrad {
+            "server_step_cutgrad"
+        } else {
+            "server_step"
+        };
+        let mut outs = Self::opt_args(
+            self.call(entry).arg("theta_s", self.theta_s.clone()),
+            &self.opt_server,
+        )
+        .arg("smashed", b.smashed.clone())
+        .arg("y", TensorValue::I32(b.targets.clone()))
+        .arg("lr", self.cfg.lr_server)
+        .run()?;
+        self.theta_s = outs
+            .remove("theta_s")
+            .context("theta_s")?
+            .into_f32()?;
+        let mut opt = std::mem::replace(&mut self.opt_server, OptState::None);
+        Self::take_opt(&mut outs, &mut opt)?;
+        self.opt_server = opt;
+        sim.server_compute(3 * self.variant_server_flops());
+        Ok(if want_cutgrad {
+            Some(
+                outs.remove("g_smashed")
+                    .context("g_smashed")?
+                    .into_f32()?,
+            )
+        } else {
+            None
+        })
+    }
+
+    fn variant_server_flops(&self) -> u64 {
+        let v = self
+            .session
+            .variant(&self.cfg.variant)
+            .expect("variant exists");
+        v.cost.flops_fwd_server as u64 * v.batch as u64
+    }
+
+    // ---- evaluation ---------------------------------------------------------
+
+    /// Evaluate the assembled global model on a held-out batch.
+    /// Returns (metric, raw_stats): vision accuracy in [0,1], or LM
+    /// perplexity.
+    pub fn evaluate(&self) -> Result<f64> {
+        let v = self.session.variant(&self.cfg.variant)?;
+        let eb = v.eval_batch;
+        let (x, y): (TensorValue, Vec<i32>) = match self.task {
+            Task::Vision => {
+                let (xs, ys) = crate::data::loader::eval_batch_vision(
+                    self.cfg.data_seed,
+                    self.cfg.eval_holdout,
+                    eb,
+                );
+                (TensorValue::F32(xs), ys)
+            }
+            Task::Lm => {
+                let xs = crate::data::loader::eval_batch_text(
+                    self.cfg.data_seed,
+                    self.cfg.eval_holdout,
+                    eb,
+                );
+                (TensorValue::I32(xs.clone()), xs)
+            }
+        };
+        let outs = self
+            .call("eval_full")
+            .arg("theta_c", self.theta_l[..self.nc].to_vec())
+            .arg("theta_s", self.theta_s.clone())
+            .arg("x", x)
+            .arg("y", TensorValue::I32(y))
+            .run()?;
+        let s1 = outs.get("stat1").context("stat1")?.scalar_f32()? as f64;
+        let s2 = outs.get("stat2").context("stat2")?.scalar_f32()? as f64;
+        Ok(match self.task {
+            Task::Vision => s1 / s2.max(1.0), // accuracy
+            Task::Lm => (s1 / s2.max(1.0)).exp(), // perplexity
+        })
+    }
+
+    /// Run the configured number of rounds, recording curves.
+    pub fn run(&mut self, record_name: &str) -> Result<RunRecord> {
+        self.warmup()?;
+        let mut rec = RunRecord::new(record_name);
+        let t0 = std::time::Instant::now();
+        for round in 0..self.cfg.rounds {
+            let loss = self.run_round()?;
+            let eval_due = self.cfg.eval_every > 0
+                && (round % self.cfg.eval_every == 0
+                    || round + 1 == self.cfg.rounds);
+            let metric = if eval_due { self.evaluate()? } else { f64::NAN };
+            rec.push(RoundRecord {
+                round,
+                train_loss: loss,
+                eval_metric: metric,
+                comm_bytes_cum: self.comm_bytes,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+            });
+            if eval_due {
+                log::info!(
+                    "[{}] round {round}: loss {loss:.4} metric {metric:.4} comm {}",
+                    record_name,
+                    crate::coordinator::accounting::fmt_bytes(self.comm_bytes)
+                );
+            }
+        }
+        rec.set("comm_bytes", self.comm_bytes as f64);
+        rec.set("client_flops", self.flops_client as f64);
+        rec.set(
+            "peak_mem_bytes",
+            self.book.peak_mem_bytes as f64,
+        );
+        rec.set(
+            "virtual_seconds",
+            self.timings.iter().map(|t| t.total()).sum(),
+        );
+        rec.set(
+            "client_idle_seconds",
+            self.timings.iter().map(|t| t.client_idle).sum(),
+        );
+        Ok(rec)
+    }
+}

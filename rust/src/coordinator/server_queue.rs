@@ -1,0 +1,127 @@
+//! Main-Server smashed-data queue (substrate S11).
+//!
+//! Clients enqueue (smashed, targets) batches during their local phase; the
+//! Main-Server drains the queue sequentially (SFLV2-style, paper Eq. (7))
+//! with first-order updates. The queue tracks occupancy statistics and
+//! enforces a capacity bound so backpressure behaviour is observable in the
+//! event simulator.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct SmashedBatch {
+    pub client: usize,
+    pub round: usize,
+    pub step: usize,
+    pub smashed: Vec<f32>,
+    /// vision: labels; lm: full token batch (targets derived in-graph)
+    pub targets: Vec<i32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub enqueued: u64,
+    pub processed: u64,
+    pub dropped: u64,
+    pub max_depth: usize,
+}
+
+pub struct ServerQueue {
+    queue: VecDeque<SmashedBatch>,
+    capacity: usize,
+    stats: QueueStats,
+}
+
+impl ServerQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            capacity: capacity.max(1),
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Enqueue; returns false (and counts a drop) when at capacity.
+    /// The synchronous protocol never drops — capacity is sized to
+    /// N·(h/k) — but failure-injection tests exercise this path.
+    pub fn push(&mut self, batch: SmashedBatch) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.stats.dropped += 1;
+            return false;
+        }
+        self.queue.push_back(batch);
+        self.stats.enqueued += 1;
+        self.stats.max_depth = self.stats.max_depth.max(self.queue.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<SmashedBatch> {
+        let b = self.queue.pop_front();
+        if b.is_some() {
+            self.stats.processed += 1;
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn stats(&self) -> &QueueStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(client: usize) -> SmashedBatch {
+        SmashedBatch {
+            client,
+            round: 0,
+            step: 0,
+            smashed: vec![0.0; 4],
+            targets: vec![1],
+        }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = ServerQueue::new(10);
+        for c in 0..5 {
+            assert!(q.push(batch(c)));
+        }
+        for c in 0..5 {
+            assert_eq!(q.pop().unwrap().client, c);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn capacity_enforced_and_drops_counted() {
+        let mut q = ServerQueue::new(2);
+        assert!(q.push(batch(0)));
+        assert!(q.push(batch(1)));
+        assert!(!q.push(batch(2)));
+        assert_eq!(q.stats().dropped, 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn stats_track_depth() {
+        let mut q = ServerQueue::new(8);
+        for c in 0..6 {
+            q.push(batch(c));
+        }
+        q.pop();
+        q.push(batch(9));
+        assert_eq!(q.stats().max_depth, 6);
+        assert_eq!(q.stats().enqueued, 7);
+        assert_eq!(q.stats().processed, 1);
+    }
+}

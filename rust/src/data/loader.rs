@@ -1,0 +1,179 @@
+//! Batch loader over a client's shard of the virtual dataset.
+//!
+//! Buffers are reused across batches (the hot path allocates nothing after
+//! warmup). Epoch order is a deterministic reshuffle of the shard.
+
+use crate::data::{synth_text, synth_vision};
+use crate::util::rng::Xoshiro256pp;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Task {
+    Vision,
+    Lm,
+}
+
+pub struct Loader {
+    task: Task,
+    data_seed: u64,
+    shard: Vec<u64>,
+    order: Vec<u32>,
+    cursor: usize,
+    epoch: u64,
+    batch: usize,
+    rng: Xoshiro256pp,
+    // reused buffers
+    pub xs_f32: Vec<f32>,
+    pub xs_i32: Vec<i32>,
+    pub ys: Vec<i32>,
+}
+
+impl Loader {
+    pub fn new(
+        task: Task,
+        data_seed: u64,
+        shard: Vec<u64>,
+        batch: usize,
+        shuffle_seed: u64,
+    ) -> Self {
+        assert!(!shard.is_empty(), "empty shard");
+        let order: Vec<u32> = (0..shard.len() as u32).collect();
+        let x_elems = match task {
+            Task::Vision => batch * synth_vision::PIXELS,
+            Task::Lm => batch * synth_text::SEQ_LEN,
+        };
+        let mut s = Self {
+            task,
+            data_seed,
+            shard,
+            order,
+            cursor: 0,
+            epoch: 0,
+            batch,
+            rng: Xoshiro256pp::new(shuffle_seed),
+            xs_f32: vec![0.0; if task == Task::Vision { x_elems } else { 0 }],
+            xs_i32: vec![0; if task == Task::Lm { x_elems } else { 0 }],
+            ys: vec![0; batch],
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Fill the internal buffers with the next batch (wraps across epochs,
+    /// sampling with replacement at the shard tail if needed).
+    pub fn next_batch(&mut self) {
+        for i in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            let idx = self.shard[self.order[self.cursor] as usize];
+            self.cursor += 1;
+            match self.task {
+                Task::Vision => {
+                    synth_vision::image_into(
+                        self.data_seed,
+                        idx,
+                        &mut self.xs_f32
+                            [i * synth_vision::PIXELS..(i + 1) * synth_vision::PIXELS],
+                    );
+                    self.ys[i] =
+                        synth_vision::label(self.data_seed, idx) as i32;
+                }
+                Task::Lm => {
+                    let rec = synth_text::record(self.data_seed, idx);
+                    synth_text::encode_into(
+                        &rec,
+                        &mut self.xs_i32
+                            [i * synth_text::SEQ_LEN..(i + 1) * synth_text::SEQ_LEN],
+                    );
+                }
+            }
+        }
+        if self.task == Task::Lm {
+            // LM target = input (next-token shift happens in-graph)
+            self.ys.clear();
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+}
+
+/// Evaluation batch over a held-out range of the generator stream
+/// (indices >= `holdout_start` are never assigned to clients).
+pub fn eval_batch_vision(
+    data_seed: u64,
+    holdout_start: u64,
+    count: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    synth_vision::batch(data_seed, holdout_start, count)
+}
+
+pub fn eval_batch_text(
+    data_seed: u64,
+    holdout_start: u64,
+    count: usize,
+) -> Vec<i32> {
+    synth_text::batch(data_seed, holdout_start, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vision_loader_cycles_epochs() {
+        let mut l = Loader::new(Task::Vision, 1, (0..10).collect(), 4, 2);
+        for _ in 0..10 {
+            l.next_batch();
+            assert_eq!(l.xs_f32.len(), 4 * synth_vision::PIXELS);
+            assert_eq!(l.ys.len(), 4);
+        }
+        assert!(l.epoch() >= 3);
+    }
+
+    #[test]
+    fn lm_loader_fills_tokens() {
+        let mut l = Loader::new(Task::Lm, 1, (0..6).collect(), 2, 3);
+        l.next_batch();
+        assert_eq!(l.xs_i32.len(), 2 * synth_text::SEQ_LEN);
+        assert!(l.xs_i32.iter().any(|&t| t != 0));
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let mut a = Loader::new(Task::Vision, 5, (0..20).collect(), 4, 9);
+        let mut b = Loader::new(Task::Vision, 5, (0..20).collect(), 4, 9);
+        for _ in 0..5 {
+            a.next_batch();
+            b.next_batch();
+            assert_eq!(a.ys, b.ys);
+            assert_eq!(a.xs_f32, b.xs_f32);
+        }
+    }
+
+    #[test]
+    fn labels_match_generator() {
+        let mut l = Loader::new(Task::Vision, 7, vec![3, 8, 1], 3, 1);
+        l.next_batch();
+        for &y in &l.ys {
+            assert!((0..10).contains(&y));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn empty_shard_panics() {
+        Loader::new(Task::Vision, 1, vec![], 4, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data plane: synthetic datasets, federated partitioning, batch loading.
+//!
+//! The generators mirror `python/compile/synth.py` (shared mix64 streams);
+//! partitioning implements the paper's IID and Dirichlet(α) label-skew
+//! settings (Fig 3a).
+
+pub mod loader;
+pub mod partition;
+pub mod synth_text;
+pub mod synth_vision;

@@ -1,0 +1,201 @@
+//! Federated data partitioning (substrate S8).
+//!
+//! Assigns a virtual dataset (indices 0..n into the synthetic generators) to
+//! N clients either IID or non-IID via the standard Dirichlet(α) label-skew
+//! construction (paper Fig 3a). Deterministic given the seed.
+
+use crate::data::synth_vision;
+use crate::util::rng::Xoshiro256pp;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    Iid,
+    /// Label-skewed: per class, proportions over clients ~ Dirichlet(alpha).
+    Dirichlet { alpha: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// per-client list of sample indices (into the generator stream)
+    pub clients: Vec<Vec<u64>>,
+    pub scheme: Scheme,
+}
+
+impl Partition {
+    /// Partition `n_samples` vision samples under `seed` across `n_clients`.
+    pub fn vision(
+        seed: u64,
+        n_samples: u64,
+        n_clients: usize,
+        scheme: Scheme,
+    ) -> Self {
+        let mut rng = Xoshiro256pp::new(seed ^ 0x9A27);
+        let clients = match scheme {
+            Scheme::Iid => iid(&mut rng, n_samples, n_clients),
+            Scheme::Dirichlet { alpha } => {
+                // group indices by label, then split each class by a
+                // Dirichlet draw over clients
+                let mut by_class: Vec<Vec<u64>> =
+                    vec![Vec::new(); synth_vision::CLASSES];
+                for i in 0..n_samples {
+                    by_class[synth_vision::label(seed, i) as usize].push(i);
+                }
+                let mut clients: Vec<Vec<u64>> = vec![Vec::new(); n_clients];
+                for idxs in by_class {
+                    let props = rng.dirichlet(alpha, n_clients);
+                    // cumulative split of this class across clients
+                    let total = idxs.len();
+                    let mut start = 0usize;
+                    let mut acc = 0.0f64;
+                    for (c, p) in props.iter().enumerate() {
+                        acc += p;
+                        let end = if c + 1 == n_clients {
+                            total
+                        } else {
+                            ((acc * total as f64).round() as usize).min(total)
+                        };
+                        clients[c].extend_from_slice(&idxs[start..end]);
+                        start = end;
+                    }
+                }
+                for c in &mut clients {
+                    rng.shuffle(c);
+                }
+                clients
+            }
+        };
+        Partition { clients, scheme }
+    }
+
+    /// Text partitioning: record streams are unlabeled, so non-IID is
+    /// simulated by giving each client a distinct contiguous shard (distinct
+    /// template/field statistics emerge from disjoint index ranges).
+    pub fn text(
+        seed: u64,
+        n_samples: u64,
+        n_clients: usize,
+        scheme: Scheme,
+    ) -> Self {
+        let mut rng = Xoshiro256pp::new(seed ^ 0x7E27);
+        let clients = match scheme {
+            Scheme::Iid => iid(&mut rng, n_samples, n_clients),
+            Scheme::Dirichlet { .. } => {
+                let per = (n_samples as usize) / n_clients;
+                (0..n_clients)
+                    .map(|c| {
+                        let s = c as u64 * per as u64;
+                        (s..s + per as u64).collect()
+                    })
+                    .collect()
+            }
+        };
+        Partition { clients, scheme }
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.clients.iter().map(Vec::len).collect()
+    }
+
+    /// Fraction of samples on the most loaded client (skew diagnostic).
+    pub fn max_share(&self) -> f64 {
+        let total: usize = self.sizes().iter().sum();
+        let max = self.sizes().into_iter().max().unwrap_or(0);
+        if total == 0 {
+            0.0
+        } else {
+            max as f64 / total as f64
+        }
+    }
+
+    /// Per-client label histogram (vision only).
+    pub fn label_histograms(&self, seed: u64) -> Vec<[usize; 10]> {
+        self.clients
+            .iter()
+            .map(|idxs| {
+                let mut h = [0usize; 10];
+                for &i in idxs {
+                    h[synth_vision::label(seed, i) as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+fn iid(rng: &mut Xoshiro256pp, n_samples: u64, n_clients: usize) -> Vec<Vec<u64>> {
+    let mut all: Vec<u64> = (0..n_samples).collect();
+    rng.shuffle(&mut all);
+    let per = all.len() / n_clients;
+    (0..n_clients)
+        .map(|c| all[c * per..(c + 1) * per].to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_covers_disjoint() {
+        let p = Partition::vision(1, 1000, 5, Scheme::Iid);
+        let mut all: Vec<u64> = p.clients.concat();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "overlapping shards");
+        assert_eq!(n, 1000);
+        assert!(p.sizes().iter().all(|&s| s == 200));
+    }
+
+    #[test]
+    fn dirichlet_disjoint_and_complete() {
+        let p = Partition::vision(2, 2000, 10, Scheme::Dirichlet { alpha: 0.5 });
+        let mut all: Vec<u64> = p.clients.concat();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+        assert_eq!(n, 2000);
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let spiky =
+            Partition::vision(3, 5000, 10, Scheme::Dirichlet { alpha: 0.1 });
+        let flat =
+            Partition::vision(3, 5000, 10, Scheme::Dirichlet { alpha: 100.0 });
+        // low alpha concentrates labels: max per-client class share higher
+        let skew = |p: &Partition| -> f64 {
+            p.label_histograms(3)
+                .iter()
+                .map(|h| {
+                    let tot: usize = h.iter().sum();
+                    if tot == 0 {
+                        0.0
+                    } else {
+                        *h.iter().max().unwrap() as f64 / tot as f64
+                    }
+                })
+                .sum::<f64>()
+                / 10.0
+        };
+        assert!(skew(&spiky) > skew(&flat) + 0.1,
+            "spiky {} flat {}", skew(&spiky), skew(&flat));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Partition::vision(7, 500, 4, Scheme::Dirichlet { alpha: 0.3 });
+        let b = Partition::vision(7, 500, 4, Scheme::Dirichlet { alpha: 0.3 });
+        assert_eq!(a.clients, b.clients);
+    }
+
+    #[test]
+    fn text_shards() {
+        let p = Partition::text(1, 900, 3, Scheme::Dirichlet { alpha: 0.5 });
+        assert_eq!(p.sizes(), vec![300, 300, 300]);
+        // contiguous disjoint shards
+        assert!(p.clients[0].iter().all(|&i| i < 300));
+        assert!(p.clients[1].iter().all(|&i| (300..600).contains(&i)));
+    }
+}

@@ -1,0 +1,145 @@
+//! SynthE2E: slot-grammar restaurant corpus (substrate S7).
+//!
+//! Byte-identical mirror of `synth.e2e_record` / `synth.encode` in Python:
+//! field choices come from the shared `mix64` stream, so record index i under
+//! seed s is the same string in both languages (pinned by the golden test).
+
+use crate::util::rng::mix64;
+
+pub const SEQ_LEN: usize = 96;
+pub const VOCAB: usize = 96; // printable ASCII 32..126 -> 1..95; pad/other -> 0
+pub const PAD: i32 = 0;
+
+pub const NAMES: [&str; 16] = [
+    "Alimentum", "Aromi", "Blue Spice", "Clowns", "Cocum", "Cotto",
+    "Fitzbillies", "Giraffe", "Green Man", "Loch Fyne", "Strada", "Zizzi",
+    "The Mill", "The Eagle", "The Punter", "Wildwood",
+];
+pub const EATTYPE: [&str; 3] = ["pub", "restaurant", "coffee shop"];
+pub const FOOD: [&str; 6] =
+    ["Chinese", "English", "French", "Indian", "Italian", "Japanese"];
+pub const PRICE: [&str; 3] = ["cheap", "moderate", "expensive"];
+pub const AREA: [&str; 2] = ["city centre", "riverside"];
+pub const RATING: [&str; 3] = ["low", "average", "high"];
+
+fn pick<'a>(seed: u64, k: u64, options: &[&'a str]) -> &'a str {
+    options[(mix64(seed, k) % options.len() as u64) as usize]
+}
+
+/// Fine-tuning-distribution record ("style 1" — exact mirror of python's
+/// `e2e_record(style=1)`). The frozen base was pretrained on the style-0
+/// layout; the reordered MR and new templates are the domain shift that LoRA
+/// fine-tuning adapts to (paper §VI-C). MRs use 3-char abbreviations so the
+/// worst-case record (94 chars) fits SEQ_LEN=96 without truncation.
+pub fn record(seed: u64, index: u64) -> String {
+    let base = index * 8;
+    let name = pick(seed, base, &NAMES);
+    let eat = pick(seed, base + 1, &EATTYPE);
+    let food = pick(seed, base + 2, &FOOD);
+    let price = pick(seed, base + 3, &PRICE);
+    let area = pick(seed, base + 4, &AREA);
+    let rating = pick(seed, base + 5, &RATING);
+    let form = mix64(seed, base + 6) % 3;
+    let mr = format!(
+        "{};{};{};{};{};{name}>",
+        &food[..3],
+        &price[..3],
+        &area[..3],
+        &eat[..3],
+        &rating[..3]
+    );
+    let text = match form {
+        0 => format!("In {area}, {name} offers {price} {food} dishes."),
+        1 => format!("{name}: {price} {food} cuisine, {rating} rating."),
+        _ => format!("Visit {name} for {food} food at {price} prices."),
+    };
+    mr + &text
+}
+
+/// Byte-level tokenizer: printable ASCII -> 1..95, else PAD; pad/truncate to
+/// SEQ_LEN.
+pub fn encode_into(s: &str, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), SEQ_LEN);
+    out.fill(PAD);
+    for (i, b) in s.bytes().take(SEQ_LEN).enumerate() {
+        out[i] = if (32..=126).contains(&b) {
+            (b - 31) as i32
+        } else {
+            PAD
+        };
+    }
+}
+
+pub fn encode(s: &str) -> Vec<i32> {
+    let mut out = vec![PAD; SEQ_LEN];
+    encode_into(s, &mut out);
+    out
+}
+
+pub fn batch_into(seed: u64, start: u64, count: usize, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), count * SEQ_LEN);
+    for i in 0..count {
+        let rec = record(seed, start + i as u64);
+        encode_into(&rec, &mut out[i * SEQ_LEN..(i + 1) * SEQ_LEN]);
+    }
+}
+
+pub fn batch(seed: u64, start: u64, count: usize) -> Vec<i32> {
+    let mut out = vec![PAD; count * SEQ_LEN];
+    batch_into(seed, start, count, &mut out);
+    out
+}
+
+/// Decode tokens back to a string (diagnostics / examples).
+pub fn decode(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .take_while(|&&t| t != PAD)
+        .map(|&t| (t as u8 + 31) as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_deterministic_and_structured() {
+        let r = record(42, 0);
+        assert_eq!(r, record(42, 0));
+        let (mr, text) = r.split_once('>').expect("has >");
+        assert_eq!(mr.matches(';').count(), 5);
+        assert!(text.len() > 10);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "Hello, world!";
+        let toks = encode(s);
+        assert_eq!(decode(&toks), s);
+        assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn records_fit_seq_len_mostly() {
+        // grammar is designed so records fit in SEQ_LEN
+        let over = (0..200).filter(|&i| record(1, i).len() > SEQ_LEN).count();
+        assert_eq!(over, 0, "{over} records overflow SEQ_LEN");
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let b = batch(7, 3, 2);
+        assert_eq!(&b[..SEQ_LEN], &encode(&record(7, 3))[..]);
+        assert_eq!(&b[SEQ_LEN..], &encode(&record(7, 4))[..]);
+    }
+
+    #[test]
+    fn corpus_has_diversity() {
+        let mut distinct = std::collections::HashSet::new();
+        for i in 0..100 {
+            distinct.insert(record(11, i));
+        }
+        assert!(distinct.len() > 90);
+    }
+}

@@ -1,0 +1,156 @@
+//! SynthCIFAR: 10-class procedural images (substrate S6).
+//!
+//! Mirrors `python/compile/synth.py` exactly: labels and the uniform noise
+//! stream come from the shared `mix64` generator (bit-identical integers);
+//! the sinusoidal base pattern matches to libm ulp differences (the golden
+//! test in tests/golden.rs compares against digests the Python side wrote
+//! into the manifest).
+
+use crate::util::rng::{mix64, u01};
+
+pub const H: usize = 16;
+pub const W: usize = 16;
+pub const C: usize = 3;
+pub const CLASSES: usize = 10;
+pub const PIXELS: usize = H * W * C;
+
+const SIGNAL: f64 = 0.55;
+const NOISE: f64 = 1.0;
+const TWO_PI: f64 = std::f64::consts::TAU;
+
+#[inline]
+pub fn label(seed: u64, index: u64) -> u32 {
+    (mix64(seed, index * 3) % CLASSES as u64) as u32
+}
+
+/// Write one image (HWC f32) into `out` (len PIXELS). Allocation-free so the
+/// batch loader can reuse buffers on the hot path.
+///
+/// Class determines the grating frequencies and chroma tint; each *sample*
+/// draws a random spatial phase and amplitude plus strong pixel noise (see
+/// synth.vision_image — a fixed per-class pattern is learnable to 100%
+/// within one federated round, which destroys the convergence curves).
+pub fn image_into(seed: u64, index: u64, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), PIXELS);
+    let lab = label(seed, index) as u64;
+    let fu = (1 + lab % 3) as f64;
+    let fv = (1 + (lab / 3) % 3) as f64;
+    let tint = (lab % 4) as f64 * (TWO_PI / 3.0 / 4.0);
+    let noise_seed = mix64(seed, index * 3 + 1);
+    let nuis_seed = mix64(seed, index * 3 + 2);
+    let r_phase = u01(nuis_seed, 0) * TWO_PI;
+    let r_amp = 0.6 + 0.4 * u01(nuis_seed, 1);
+
+    let mut p = 0usize;
+    for h in 0..H {
+        for w in 0..W {
+            let base_arg = TWO_PI * (fu * h as f64 / H as f64
+                + fv * w as f64 / W as f64)
+                + r_phase;
+            for c in 0..C {
+                let base = (base_arg + c as f64 * tint).sin();
+                let noise = 2.0 * (u01(noise_seed, p as u64) - 0.5);
+                out[p] = (r_amp * SIGNAL * base + NOISE * noise) as f32;
+                p += 1;
+            }
+        }
+    }
+}
+
+pub fn image(seed: u64, index: u64) -> Vec<f32> {
+    let mut out = vec![0.0; PIXELS];
+    image_into(seed, index, &mut out);
+    out
+}
+
+/// Fill a batch of `count` images/labels starting at `start` into the
+/// provided buffers.
+pub fn batch_into(
+    seed: u64,
+    start: u64,
+    count: usize,
+    xs: &mut [f32],
+    ys: &mut [i32],
+) {
+    debug_assert_eq!(xs.len(), count * PIXELS);
+    debug_assert_eq!(ys.len(), count);
+    for i in 0..count {
+        let idx = start + i as u64;
+        image_into(seed, idx, &mut xs[i * PIXELS..(i + 1) * PIXELS]);
+        ys[i] = label(seed, idx) as i32;
+    }
+}
+
+pub fn batch(seed: u64, start: u64, count: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = vec![0.0; count * PIXELS];
+    let mut ys = vec![0; count];
+    batch_into(seed, start, count, &mut xs, &mut ys);
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let mut seen = [false; CLASSES];
+        for i in 0..500 {
+            seen[label(1, i) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn images_deterministic() {
+        assert_eq!(image(3, 7), image(3, 7));
+        assert_ne!(image(3, 7), image(3, 8));
+    }
+
+    #[test]
+    fn image_range_bounded() {
+        let img = image(1, 0);
+        assert!(img.iter().all(|v| v.abs() < 1.5));
+    }
+
+    #[test]
+    fn batch_matches_scalar_api() {
+        let (xs, ys) = batch(5, 10, 4);
+        for j in 0..4 {
+            assert_eq!(ys[j], label(5, 10 + j as u64) as i32);
+            assert_eq!(&xs[j * PIXELS..(j + 1) * PIXELS], &image(5, 10 + j as u64)[..]);
+        }
+    }
+
+    #[test]
+    fn same_class_images_decorrelated_by_phase() {
+        // the per-sample random phase is a translation nuisance: same-class
+        // images must not be trivially pixel-correlated (otherwise the task
+        // saturates within one federated round)
+        let (i0, mut i1) = (0u64, 1u64);
+        while label(9, i1) != label(9, i0) {
+            i1 += 1;
+        }
+        let a = image(9, i0);
+        let b = image(9, i1);
+        let ma = a.iter().sum::<f32>() / a.len() as f32;
+        let mb = b.iter().sum::<f32>() / b.len() as f32;
+        let (mut num, mut da, mut db) = (0.0f64, 0.0f64, 0.0f64);
+        for (x, y) in a.iter().zip(&b) {
+            let (u, v) = ((x - ma) as f64, (y - mb) as f64);
+            num += u * v;
+            da += u * u;
+            db += v * v;
+        }
+        assert!((num / (da * db).sqrt()).abs() < 0.9);
+    }
+
+    #[test]
+    fn amplitude_jitter_within_bounds() {
+        // signal amplitude in [0.6, 1.0]*SIGNAL plus noise in [-NOISE, NOISE]
+        for i in 0..50 {
+            let img = image(3, i);
+            assert!(img.iter().all(|v| v.abs() <= (SIGNAL + NOISE) as f32 + 1e-5));
+        }
+    }
+}

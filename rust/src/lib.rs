@@ -1,0 +1,29 @@
+//! HERON-SFL: hybrid zeroth/first-order split federated learning.
+//!
+//! Reproduction of *"Lean Clients, Full Accuracy: Hybrid Zeroth- and
+//! First-Order Split Federated Learning"* as a three-layer Rust + JAX +
+//! Pallas system (see DESIGN.md). This crate is the L3 coordinator: the
+//! split-federated protocol, data plane, resource accounting, and analysis
+//! tooling. All model compute executes through AOT-compiled HLO artifacts
+//! loaded by [`runtime::Session`]; Python is never on the request path.
+//!
+//! Layout:
+//! * [`util`] — offline substrates (JSON, PRNG, CLI, property testing)
+//! * [`runtime`] — PJRT artifact loading + invocation
+//! * [`data`] — synthetic datasets + federated partitioning
+//! * [`coordinator`] — the SFL protocol: algorithms, rounds, accounting
+//! * [`metrics`] — run recording and reporting
+//! * [`zo`] — pure-Rust ZO reference + streaming perturbation (Remark 4)
+//! * [`analysis`] — Hessian spectrum tooling (Fig 7)
+//! * [`bench_harness`] — statistical micro-benchmark runner
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod golden;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod zo;

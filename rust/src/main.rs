@@ -1,0 +1,240 @@
+//! heron-sfl CLI: run experiments, inspect artifacts, validate goldens.
+//!
+//! Subcommands:
+//!   run        — one training run (all config flags overridable)
+//!   list       — list artifact variants and their entries
+//!   validate   — execute golden cross-language checks over the artifacts
+//!   costs      — print the Table-I style cost book for a variant
+//!   spectrum   — Hessian eigenvalue density of the client local loss (Fig 7)
+
+use anyhow::{bail, Context, Result};
+use heron_sfl::analysis::lanczos;
+use heron_sfl::coordinator::accounting::{fmt_bytes, table1_row, CostBook};
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::metrics::sparkline;
+use heron_sfl::runtime::tensor::TensorValue;
+use heron_sfl::runtime::Session;
+use heron_sfl::util::cli::Args;
+
+fn main() {
+    heron_sfl::util::logging::init();
+    let args = Args::parse();
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    let res = match cmd {
+        "run" => cmd_run(&args),
+        "list" => cmd_list(),
+        "validate" => cmd_validate(&args),
+        "costs" => cmd_costs(&args),
+        "spectrum" => cmd_spectrum(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "heron-sfl — hybrid ZO/FO split federated learning\n\n\
+         USAGE: heron-sfl <run|list|validate|costs|spectrum> [--key value ...]\n\n\
+         run flags: --variant cnn_c1 --algo heron|cse|sage|sflv1|sflv2\n\
+           --clients N --rounds R --h H --k K --mu MU --n_pert P\n\
+           --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
+           --out results/dir (writes json+csv)\n\
+         costs flags: --variant V [--n_pert P]\n\
+         spectrum flags: --variant cnn_c1 [--steps M] [--probes P]"
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    log::info!("{}", cfg.describe());
+    let session = Session::open_default()?;
+    let mut driver = Driver::new(&session, cfg.clone())?;
+    let rec = driver.run("run")?;
+    let curve: Vec<f64> = rec
+        .rounds
+        .iter()
+        .filter(|r| r.eval_metric.is_finite())
+        .map(|r| r.eval_metric)
+        .collect();
+    println!("metric curve: {}", sparkline(&curve, 60));
+    println!(
+        "final metric {:.4} | comm {} | client flops {:.2} G | peak mem {}",
+        curve.last().copied().unwrap_or(f64::NAN),
+        fmt_bytes(rec.summary["comm_bytes"] as u64),
+        rec.summary["client_flops"] / 1e9,
+        fmt_bytes(rec.summary["peak_mem_bytes"] as u64),
+    );
+    if let Some(out) = args.get("out") {
+        rec.save(std::path::Path::new(out))?;
+        println!("saved to {out}/run.{{json,csv}}");
+    }
+    let st = session.stats();
+    log::info!(
+        "runtime: {} invocations, exec {:.2}s, marshal {:.2}s, compile {:.2}s",
+        st.invocations,
+        st.exec_seconds,
+        st.marshal_seconds,
+        st.compile_seconds
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let session = Session::open_default()?;
+    for (name, v) in &session.manifest.variants {
+        println!(
+            "{name:<24} task={:<6} batch={:<4} θc={:<7} θa={:<7} θs={:<8} entries: {}",
+            v.task,
+            v.batch,
+            v.size_client,
+            v.size_aux,
+            v.size_server,
+            v.entries
+                .keys()
+                .cloned()
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_costs(args: &Args) -> Result<()> {
+    let session = Session::open_default()?;
+    let variant = args.get_or("variant", "cnn_c1");
+    let n_pert = args.get_usize("n_pert", 1) as u64;
+    let v = session.variant(variant)?;
+    let mut t = heron_sfl::bench_harness::Table::new(&[
+        "Method", "Comms/round/client", "Peak Memory", "FLOPs/step",
+    ]);
+    for alg in Algorithm::all() {
+        t.row(table1_row(v, alg, n_pert.max(2)));
+    }
+    t.print(&format!("Table I instantiated for {variant}"));
+    let book = CostBook::new(v, Algorithm::Heron, n_pert);
+    println!(
+        "\nHERON peak memory {} vs CSE-FSL {}",
+        fmt_bytes(book.peak_mem_bytes),
+        fmt_bytes(CostBook::new(v, Algorithm::CseFsl, 1).peak_mem_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let session = Session::open_default()?;
+    let only = args.get("variant");
+    let mut total = 0usize;
+    let mut failed = 0usize;
+    for (name, v) in &session.manifest.variants {
+        if let Some(o) = only {
+            if o != name {
+                continue;
+            }
+        }
+        for (entry, goldens) in &v.golden {
+            total += 1;
+            match heron_sfl::golden::check_entry(&session, name, entry) {
+                Ok(max_rel) => {
+                    println!("ok   {name}/{entry} (max rel err {max_rel:.2e})");
+                }
+                Err(e) => {
+                    failed += 1;
+                    println!("FAIL {name}/{entry}: {e:#}");
+                }
+            }
+            let _ = goldens;
+        }
+    }
+    println!("\n{}/{} golden checks passed", total - failed, total);
+    if failed > 0 {
+        bail!("{failed} golden checks failed");
+    }
+    Ok(())
+}
+
+fn cmd_spectrum(args: &Args) -> Result<()> {
+    let session = Session::open_default()?;
+    let variant = args.get_or("variant", "cnn_c1");
+    let steps = args.get_usize("steps", 24);
+    let probes = args.get_usize("probes", 4);
+    let v = session.variant(variant)?;
+    if !v.entries.contains_key("hvp") {
+        bail!("variant {variant} has no hvp entry (use cnn_c1)");
+    }
+
+    struct EntryHvp<'a> {
+        session: &'a Session,
+        variant: String,
+        theta: Vec<f32>,
+        x: TensorValue,
+        y: Vec<i32>,
+        base: Option<Vec<f32>>,
+    }
+    impl lanczos::Hvp for EntryHvp<'_> {
+        fn dim(&self) -> usize {
+            self.theta.len()
+        }
+        fn apply(&mut self, vdir: &[f32]) -> Result<Vec<f32>> {
+            let mut c = heron_sfl::runtime::Call::new(
+                self.session,
+                &self.variant,
+                "hvp",
+            );
+            if let Some(b) = &self.base {
+                c = c.arg("base", b.clone());
+            }
+            let outs = c
+                .arg("theta_l", self.theta.clone())
+                .arg("x", self.x.clone())
+                .arg("y", TensorValue::I32(self.y.clone()))
+                .arg("v", vdir.to_vec())
+                .run()?;
+            outs.get("hv").context("hv")?.clone().into_f32()
+        }
+    }
+
+    let theta = v.blob("init_theta_l")?;
+    let (xs, ys) =
+        heron_sfl::data::synth_vision::batch(42, 0, v.batch);
+    let base = if v.size_base > 0 {
+        Some(v.blob("frozen_base")?)
+    } else {
+        None
+    };
+    let mut h = EntryHvp {
+        session: &session,
+        variant: variant.to_string(),
+        theta,
+        x: TensorValue::F32(xs),
+        y: ys,
+        base,
+    };
+    let hist = lanczos::spectral_density(&mut h, steps, probes, 31)?;
+    hist.print(&format!(
+        "Hessian eigenvalue density — {variant} local loss (Fig 7)"
+    ));
+    println!(
+        "mass within 5% of spectral range around zero: {:.1}%",
+        hist.mass_near_zero((hist.hi - hist.lo) * 0.05) * 100.0
+    );
+    let kappa = lanczos::effective_rank(&mut h, steps, probes)?;
+    println!("effective rank tr(H)/||H||: {kappa:.1} (dim {})", lanczos::Hvp::dim(&h));
+    Ok(())
+}

@@ -1,0 +1,347 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the L2→L3 contract: per variant it lists the HLO entry
+//! files with their input/output tensor specs, flat-parameter sizes and
+//! layouts, the analytic cost model, binary blob files (frozen base, init
+//! params), and golden output digests for the cross-language test.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .context("tensor name")?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Value::usize_vec)
+                .context("tensor shape")?,
+            dtype: DType::parse(
+                v.get("dtype").and_then(Value::as_str).context("dtype")?,
+            )?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Analytic per-sample cost model emitted by L2 (see models/base.py).
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub params_client: usize,
+    pub params_aux: usize,
+    pub params_server: usize,
+    pub act_cache_client: usize,
+    pub act_cache_aux: usize,
+    pub act_cache_server: usize,
+    pub act_peak_client: usize,
+    pub act_peak_aux: usize,
+    pub act_peak_server: usize,
+    pub flops_fwd_client: usize,
+    pub flops_fwd_aux: usize,
+    pub flops_fwd_server: usize,
+    pub smashed_elems: usize,
+    pub target_elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenOutput {
+    pub shape: Vec<usize>,
+    pub head: Vec<f64>,
+    pub sum: f64,
+    pub l2: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub family: String,
+    pub task: String,
+    pub optimizer: String,
+    pub opt_state: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub smashed_shape: Vec<usize>,
+    pub size_client: usize,
+    pub size_aux: usize,
+    pub size_server: usize,
+    pub size_base: usize,
+    pub cost: CostModel,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub files: BTreeMap<String, PathBuf>,
+    pub golden: BTreeMap<String, Vec<GoldenOutput>>,
+    pub dir: PathBuf,
+}
+
+impl VariantSpec {
+    pub fn size_local(&self) -> usize {
+        self.size_client + self.size_aux
+    }
+
+    pub fn smashed_elems_per_batch(&self) -> usize {
+        self.batch * self.smashed_shape.iter().product::<usize>()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {} has no entry {name}", self.name))
+    }
+
+    pub fn blob(&self, key: &str) -> Result<Vec<f32>> {
+        let rel = self
+            .files
+            .get(key)
+            .ok_or_else(|| anyhow!("variant {} has no blob {key}", self.name))?;
+        let path = self.dir.join(rel);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("blob {} has non-f32 length {}", path.display(), bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub synth: Value,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Locate `artifacts/` relative to the repo root (works from tests,
+    /// benches, and examples regardless of cwd).
+    pub fn default_path() -> PathBuf {
+        let mut dir = std::env::current_dir().unwrap_or_default();
+        loop {
+            let cand = dir.join("artifacts/manifest.json");
+            if cand.exists() {
+                return dir.join("artifacts");
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_path())
+    }
+
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (name, vv) in v
+            .get("variants")
+            .and_then(Value::as_obj)
+            .context("manifest.variants")?
+        {
+            variants.insert(
+                name.clone(),
+                parse_variant(name, vv, &root.join(name))
+                    .with_context(|| format!("variant {name}"))?,
+            );
+        }
+        Ok(Manifest {
+            variants,
+            synth: v.get("synth").cloned().unwrap_or(Value::Null),
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("no variant {name} in manifest"))
+    }
+}
+
+fn parse_cost(v: &Value) -> Result<CostModel> {
+    let g = |k: &str| -> usize {
+        v.get(k).and_then(Value::as_usize).unwrap_or(0)
+    };
+    Ok(CostModel {
+        params_client: g("params_client"),
+        params_aux: g("params_aux"),
+        params_server: g("params_server"),
+        act_cache_client: g("act_cache_client"),
+        act_cache_aux: g("act_cache_aux"),
+        act_cache_server: g("act_cache_server"),
+        act_peak_client: g("act_peak_client"),
+        act_peak_aux: g("act_peak_aux"),
+        act_peak_server: g("act_peak_server"),
+        flops_fwd_client: g("flops_fwd_client"),
+        flops_fwd_aux: g("flops_fwd_aux"),
+        flops_fwd_server: g("flops_fwd_server"),
+        smashed_elems: g("smashed_elems"),
+        target_elems: g("target_elems").max(1),
+    })
+}
+
+fn parse_variant(name: &str, v: &Value, dir: &Path) -> Result<VariantSpec> {
+    let s = |k: &str| -> Result<&str> {
+        v.get(k)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("missing {k}"))
+    };
+    let u = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("missing {k}"))
+    };
+    let sizes = v.get("sizes").context("sizes")?;
+    let size = |k: &str| -> Result<usize> {
+        sizes
+            .get(k)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("missing sizes.{k}"))
+    };
+
+    let mut entries = BTreeMap::new();
+    for (en, ev) in v
+        .get("entries")
+        .and_then(Value::as_obj)
+        .context("entries")?
+    {
+        let parse_list = |k: &str| -> Result<Vec<TensorSpec>> {
+            ev.get(k)
+                .and_then(Value::as_arr)
+                .context("tensor list")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        entries.insert(
+            en.clone(),
+            EntrySpec {
+                name: en.clone(),
+                file: dir.join(
+                    ev.get("file").and_then(Value::as_str).context("file")?,
+                ),
+                inputs: parse_list("inputs")?,
+                outputs: parse_list("outputs")?,
+            },
+        );
+    }
+
+    let mut files = BTreeMap::new();
+    if let Some(fm) = v.get("files").and_then(Value::as_obj) {
+        for (k, fv) in fm {
+            files.insert(
+                k.clone(),
+                PathBuf::from(fv.as_str().unwrap_or_default()),
+            );
+        }
+    }
+
+    let mut golden = BTreeMap::new();
+    if let Some(gm) = v.get("golden").and_then(Value::as_obj) {
+        for (k, gv) in gm {
+            let outs = gv
+                .get("outputs")
+                .and_then(Value::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|o| {
+                    Ok(GoldenOutput {
+                        shape: o
+                            .get("shape")
+                            .and_then(Value::usize_vec)
+                            .context("golden shape")?,
+                        head: o
+                            .get("head")
+                            .and_then(Value::f64_vec)
+                            .context("golden head")?,
+                        sum: o
+                            .get("sum")
+                            .and_then(Value::as_f64)
+                            .context("golden sum")?,
+                        l2: o
+                            .get("l2")
+                            .and_then(Value::as_f64)
+                            .context("golden l2")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            golden.insert(k.clone(), outs);
+        }
+    }
+
+    Ok(VariantSpec {
+        name: name.to_string(),
+        family: s("family")?.to_string(),
+        task: s("task")?.to_string(),
+        optimizer: s("optimizer")?.to_string(),
+        opt_state: u("opt_state")?,
+        batch: u("batch")?,
+        eval_batch: u("eval_batch")?,
+        x_shape: v.get("x_shape").and_then(Value::usize_vec).context("x_shape")?,
+        y_shape: v.get("y_shape").and_then(Value::usize_vec).context("y_shape")?,
+        smashed_shape: v
+            .get("smashed_shape")
+            .and_then(Value::usize_vec)
+            .context("smashed_shape")?,
+        size_client: size("client")?,
+        size_aux: size("aux")?,
+        size_server: size("server")?,
+        size_base: size("base")?,
+        cost: parse_cost(v.get("cost").context("cost")?)?,
+        entries,
+        files,
+        golden,
+        dir: dir.to_path_buf(),
+    })
+}

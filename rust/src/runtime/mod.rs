@@ -1,0 +1,290 @@
+//! L3 runtime: load AOT HLO artifacts and execute them on PJRT CPU.
+//!
+//! One `Session` owns the PJRT client and a lazily-populated cache of
+//! compiled executables keyed by (variant, entry). Invocation marshals
+//! `TensorValue`s to `xla::Literal`s per the manifest's `TensorSpec`s,
+//! executes, and unpacks the returned tuple.
+//!
+//! The flow (see /opt/xla-example reference):
+//!   HloModuleProto::from_text_file -> XlaComputation::from_proto
+//!   -> client.compile -> exe.execute -> Literal tuple.
+
+pub mod manifest;
+pub mod tensor;
+
+use anyhow::{bail, Context, Result};
+use manifest::{DType, Manifest, VariantSpec};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+use tensor::TensorValue;
+
+/// Cumulative execution statistics (the coordinator reads these for
+/// §Perf and the event simulator's compute-time calibration).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub invocations: u64,
+    pub exec_seconds: f64,
+    pub marshal_seconds: f64,
+    pub compile_seconds: f64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+pub struct Session {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables:
+        RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Session {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Session {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.manifest.variant(name)
+    }
+
+    /// Compile (or fetch cached) the executable for (variant, entry).
+    pub fn executable(
+        &self,
+        variant: &str,
+        entry: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (variant.to_string(), entry.to_string());
+        if let Some(e) = self.executables.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let vspec = self.manifest.variant(variant)?;
+        let espec = vspec.entry(entry)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&espec.file)
+            .with_context(|| format!("parsing {}", espec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {variant}/{entry}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().compile_seconds += dt;
+        log::debug!("compiled {variant}/{entry} in {dt:.2}s");
+        let rc = Rc::new(exe);
+        self.executables.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile a set of entries (examples call this up-front so the
+    /// first training round isn't skewed by compile time).
+    pub fn warmup(&self, variant: &str, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            if self.manifest.variant(variant)?.entries.contains_key(*e) {
+                self.executable(variant, e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Invoke an entry with positional inputs; returns positional outputs.
+    pub fn invoke(
+        &self,
+        variant: &str,
+        entry: &str,
+        inputs: &[TensorValue],
+    ) -> Result<Vec<TensorValue>> {
+        let vspec = self.manifest.variant(variant)?;
+        let espec = vspec.entry(entry)?;
+        if inputs.len() != espec.inputs.len() {
+            bail!(
+                "{variant}/{entry}: expected {} inputs, got {}",
+                espec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(variant, entry)?;
+
+        let tm = Instant::now();
+        let mut literals = Vec::with_capacity(inputs.len());
+        let mut bytes_in = 0u64;
+        for (val, spec) in inputs.iter().zip(&espec.inputs) {
+            val.check(spec)
+                .with_context(|| format!("{variant}/{entry}"))?;
+            literals.push(to_literal(val, spec)?);
+            bytes_in += (val.len() * 4) as u64;
+        }
+        let marshal1 = tm.elapsed().as_secs_f64();
+
+        let te = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {variant}/{entry}"))?;
+        let exec_dt = te.elapsed().as_secs_f64();
+
+        let tm2 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != espec.outputs.len() {
+            bail!(
+                "{variant}/{entry}: expected {} outputs, got {}",
+                espec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        let mut bytes_out = 0u64;
+        for (lit, spec) in parts.into_iter().zip(&espec.outputs) {
+            let v = from_literal(&lit, spec)?;
+            bytes_out += (v.len() * 4) as u64;
+            outs.push(v);
+        }
+        let marshal2 = tm2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.invocations += 1;
+        st.exec_seconds += exec_dt;
+        st.marshal_seconds += marshal1 + marshal2;
+        st.bytes_in += bytes_in;
+        st.bytes_out += bytes_out;
+        Ok(outs)
+    }
+}
+
+fn to_literal(
+    val: &TensorValue,
+    spec: &manifest::TensorSpec,
+) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match val {
+        TensorValue::ScalarF32(s) => xla::Literal::scalar(*s),
+        TensorValue::ScalarI32(s) => xla::Literal::scalar(*s),
+        TensorValue::F32(v) => {
+            let l = xla::Literal::vec1(v.as_slice());
+            if spec.shape.len() == 1 {
+                l
+            } else {
+                l.reshape(&dims).context("reshape f32 input")?
+            }
+        }
+        TensorValue::I32(v) => {
+            let l = xla::Literal::vec1(v.as_slice());
+            if spec.shape.len() == 1 {
+                l
+            } else {
+                l.reshape(&dims).context("reshape i32 input")?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+fn from_literal(
+    lit: &xla::Literal,
+    spec: &manifest::TensorSpec,
+) -> Result<TensorValue> {
+    match spec.dtype {
+        DType::F32 => {
+            if spec.shape.is_empty() {
+                Ok(TensorValue::ScalarF32(
+                    lit.get_first_element::<f32>()
+                        .context("scalar f32 output")?,
+                ))
+            } else {
+                Ok(TensorValue::F32(
+                    lit.to_vec::<f32>().context("f32 output")?,
+                ))
+            }
+        }
+        DType::I32 => {
+            if spec.shape.is_empty() {
+                Ok(TensorValue::ScalarI32(
+                    lit.get_first_element::<i32>()
+                        .context("scalar i32 output")?,
+                ))
+            } else {
+                Ok(TensorValue::I32(
+                    lit.to_vec::<i32>().context("i32 output")?,
+                ))
+            }
+        }
+    }
+}
+
+/// Convenience: named-argument invocation builder.
+pub struct Call<'a> {
+    session: &'a Session,
+    variant: &'a str,
+    entry: &'a str,
+    args: HashMap<String, TensorValue>,
+}
+
+impl<'a> Call<'a> {
+    pub fn new(session: &'a Session, variant: &'a str, entry: &'a str) -> Self {
+        Call {
+            session,
+            variant,
+            entry,
+            args: HashMap::new(),
+        }
+    }
+
+    pub fn arg<V: Into<TensorValue>>(mut self, name: &str, v: V) -> Self {
+        self.args.insert(name.to_string(), v.into());
+        self
+    }
+
+    pub fn run(mut self) -> Result<HashMap<String, TensorValue>> {
+        let vspec = self.session.manifest.variant(self.variant)?;
+        let espec = vspec.entry(self.entry)?;
+        let mut inputs = Vec::with_capacity(espec.inputs.len());
+        for spec in &espec.inputs {
+            let v = self.args.remove(&spec.name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}/{}: missing argument {}",
+                    self.variant,
+                    self.entry,
+                    spec.name
+                )
+            })?;
+            inputs.push(v);
+        }
+        if let Some(extra) = self.args.keys().next() {
+            bail!(
+                "{}/{}: unknown argument {extra}",
+                self.variant,
+                self.entry
+            );
+        }
+        let outs = self.session.invoke(self.variant, self.entry, &inputs)?;
+        Ok(espec
+            .outputs
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(outs)
+            .collect())
+    }
+}

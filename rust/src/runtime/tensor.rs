@@ -1,0 +1,155 @@
+//! Host-side tensor values crossing the Rust <-> XLA boundary.
+//!
+//! Everything the protocol moves is either a flat `f32` vector (parameters,
+//! activations, gradients) or an `i32` batch (tokens/labels) or a scalar.
+//! `TensorValue` is that closed union; `runtime::Session` marshals it to/from
+//! `xla::Literal` using the entry's `TensorSpec` shapes.
+
+use super::manifest::{DType, TensorSpec};
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl TensorValue {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorValue::F32(_) | TensorValue::ScalarF32(_) => DType::F32,
+            TensorValue::I32(_) | TensorValue::ScalarI32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+            _ => 1,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorValue::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorValue::F32(v) => Ok(v),
+            TensorValue::ScalarF32(s) => Ok(vec![s]),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            TensorValue::ScalarF32(s) => Ok(*s),
+            TensorValue::F32(v) if v.len() == 1 => Ok(v[0]),
+            other => bail!("expected f32 scalar, got len {}", other.len()),
+        }
+    }
+
+    /// Validate value against a spec (shape product + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {}: dtype mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        let want = spec.elems();
+        let scalar = matches!(
+            self,
+            TensorValue::ScalarF32(_) | TensorValue::ScalarI32(_)
+        );
+        if scalar {
+            if !spec.shape.is_empty() {
+                bail!("input {}: scalar given for shaped tensor", spec.name);
+            }
+        } else if self.len() != want {
+            bail!(
+                "input {}: length mismatch (got {}, want {} = {:?})",
+                spec.name,
+                self.len(),
+                want,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+impl From<Vec<f32>> for TensorValue {
+    fn from(v: Vec<f32>) -> Self {
+        TensorValue::F32(v)
+    }
+}
+
+impl From<Vec<i32>> for TensorValue {
+    fn from(v: Vec<i32>) -> Self {
+        TensorValue::I32(v)
+    }
+}
+
+impl From<f32> for TensorValue {
+    fn from(v: f32) -> Self {
+        TensorValue::ScalarF32(v)
+    }
+}
+
+impl From<i32> for TensorValue {
+    fn from(v: i32) -> Self {
+        TensorValue::ScalarI32(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    #[test]
+    fn check_accepts_matching() {
+        let v = TensorValue::F32(vec![0.0; 6]);
+        assert!(v.check(&spec("x", &[2, 3], DType::F32)).is_ok());
+        let s = TensorValue::ScalarI32(3);
+        assert!(s.check(&spec("n", &[], DType::I32)).is_ok());
+    }
+
+    #[test]
+    fn check_rejects_mismatch() {
+        let v = TensorValue::F32(vec![0.0; 5]);
+        assert!(v.check(&spec("x", &[2, 3], DType::F32)).is_err());
+        assert!(v.check(&spec("x", &[5], DType::I32)).is_err());
+        let s = TensorValue::ScalarF32(1.0);
+        assert!(s.check(&spec("x", &[1], DType::F32)).is_err());
+    }
+
+    #[test]
+    fn conversions() {
+        let v: TensorValue = vec![1.0f32, 2.0].into();
+        assert_eq!(v.as_f32().unwrap(), &[1.0, 2.0]);
+        let s: TensorValue = 3.5f32.into();
+        assert_eq!(s.scalar_f32().unwrap(), 3.5);
+        assert!(s.as_f32().is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parser (substrate S5; clap is not vendored).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args,
+//! and collects unknown `--key value` pairs as config overrides so every
+//! binary accepts dotted-path settings (e.g. `--run.rounds 50`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-ful unless next token is another flag / absent
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags
+                                .insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--rounds", "10", "--algo=heron", "--quiet"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_usize("rounds", 0), 10);
+        assert_eq!(a.get("algo"), Some("heron"));
+        assert!(a.get_bool("quiet", false));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--verbose", "--n", "3"]);
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("lr", 0.5), 0.5);
+        assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset", "-3.5"]);
+        assert_eq!(a.get_f64("offset", 0.0), -3.5);
+    }
+}

