@@ -2,8 +2,11 @@
 //!
 //! Measures each layer's contribution to a training step:
 //!   L3: marshaling, aggregation, perturbation streaming, data generation
-//!   L2/L1 (through PJRT): zo_step / fo_step / server_step / client_fwd
-//!   end-to-end: one full HERON round
+//!   runtime entries: zo_step / fo_step / server_step / client_fwd
+//!   end-to-end: one full HERON round, sequential vs parallel workers
+//!
+//! Set `BENCH_OUT=path.json` to write the measurements (plus the parallel
+//! speedup) as a JSON report — CI uploads this as the perf-smoke artifact.
 
 use anyhow::Result;
 use heron_sfl::bench_harness::Bench;
@@ -65,7 +68,7 @@ fn main() -> Result<()> {
         std::hint::black_box(&xs);
     });
 
-    Bench::header("L2/L1 entries through PJRT (cnn_c1, batch 32)");
+    Bench::header("runtime entries (cnn_c1, batch 32)");
     let variant = "cnn_c1";
     session.warmup(
         variant,
@@ -99,6 +102,44 @@ fn main() -> Result<()> {
         driver.run_round().expect("round");
     });
 
+    // ---- parallel round engine: sequential vs worker-pool wall clock ----
+    Bench::header("parallel round engine (HERON, 8 clients, h=4)");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut worker_counts = vec![1usize, 2, cores.max(2)];
+    worker_counts.dedup(); // <=2 cores would repeat the workers=2 run
+    let mut round_means: Vec<(usize, f64)> = Vec::new();
+    for workers in worker_counts {
+        let cfg = RunConfig {
+            rounds: 1,
+            n_clients: 8,
+            local_steps: 4,
+            workers,
+            ..heron_sfl::experiments::vision_base(1)
+        };
+        let mut driver = Driver::new(&session, cfg)?;
+        driver.warmup()?;
+        let m = b
+            .run(&format!("heron_round_8c_workers{workers}"), || {
+                driver.run_round().expect("round");
+            })
+            .clone();
+        round_means.push((workers, m.mean_ns));
+    }
+    let seq = round_means[0].1;
+    let (best_w, best) = round_means
+        .iter()
+        .cloned()
+        .fold((1, f64::INFINITY), |a, b| if b.1 < a.1 { b } else { a });
+    let speedup = seq / best.max(1.0);
+    println!(
+        "  -> parallel speedup: {speedup:.2}x at {best_w} workers \
+         (sequential {} vs {})",
+        heron_sfl::bench_harness::fmt_ns(seq),
+        heron_sfl::bench_harness::fmt_ns(best),
+    );
+
     let st = session.stats();
     println!(
         "\nruntime totals: {} invocations | exec {:.2}s | marshal {:.2}s ({:.1}% of exec)",
@@ -107,7 +148,43 @@ fn main() -> Result<()> {
         st.marshal_seconds,
         100.0 * st.marshal_seconds / st.exec_seconds.max(1e-9)
     );
+
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        write_report(&path, b.results(), speedup, best_w)?;
+        println!("wrote JSON report to {path}");
+    }
     println!("\nperf_hotpath OK");
+    Ok(())
+}
+
+/// JSON report for the CI perf-smoke artifact.
+fn write_report(
+    path: &str,
+    results: &[heron_sfl::bench_harness::Measurement],
+    speedup: f64,
+    speedup_workers: usize,
+) -> Result<()> {
+    use heron_sfl::util::json::Value;
+    let benchmarks: Vec<Value> = results
+        .iter()
+        .map(|m| {
+            Value::obj(vec![
+                ("name", Value::str(&m.name)),
+                ("iters", Value::Num(m.iters as f64)),
+                ("mean_ns", Value::Num(m.mean_ns)),
+                ("p50_ns", Value::Num(m.p50_ns)),
+                ("p95_ns", Value::Num(m.p95_ns)),
+                ("std_ns", Value::Num(m.std_ns)),
+            ])
+        })
+        .collect();
+    let report = Value::obj(vec![
+        ("schema", Value::str("heron-sfl-bench-v1")),
+        ("benchmarks", Value::Arr(benchmarks)),
+        ("parallel_speedup", Value::Num(speedup)),
+        ("parallel_speedup_workers", Value::Num(speedup_workers as f64)),
+    ]);
+    std::fs::write(path, report.to_string_pretty())?;
     Ok(())
 }
 

@@ -37,6 +37,8 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// held-out eval sample start (beyond dataset_size)
     pub eval_holdout: u64,
+    /// host worker threads for the parallel client phase (0 = all cores)
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -60,6 +62,7 @@ impl Default for RunConfig {
             run_seed: 7,
             eval_every: 1,
             eval_holdout: 1 << 20,
+            workers: 0,
         }
     }
 }
@@ -126,6 +129,7 @@ impl RunConfig {
                     self.scheme = Scheme::Iid
                 }
             }
+            "workers" => self.workers = v.parse()?,
             "dataset_size" => self.dataset_size = v.parse()?,
             "data_seed" => self.data_seed = v.parse()?,
             "run_seed" | "seed" => self.run_seed = v.parse()?,
@@ -167,8 +171,13 @@ impl RunConfig {
     }
 
     pub fn describe(&self) -> String {
+        let w = if self.workers == 0 {
+            "auto".to_string()
+        } else {
+            self.workers.to_string()
+        };
         format!(
-            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | {:?}",
+            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | workers={w} | {:?}",
             self.algorithm.name(),
             self.variant,
             self.n_clients,
@@ -234,6 +243,18 @@ mod tests {
         let mut c = RunConfig::default();
         c.mu = -1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn workers_flag_parses() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.workers, 0, "default is auto");
+        let args = Args::parse_from(
+            ["--workers", "4"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert!(cfg.describe().contains("workers=4"));
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Discrete-event latency simulator (substrate S14).
 //!
-//! The paper's protocol is synchronous; actual client parallelism is modeled
-//! over *virtual time* while compute executes sequentially on the single
-//! PJRT client. Each device profile has a compute rate (FLOP/s) and an
-//! uplink/downlink bandwidth; the simulator derives per-round wall-clock:
+//! The paper's protocol is synchronous; the simulator accounts the client
+//! fleet's parallelism over *virtual time* regardless of how many host
+//! worker threads executed the round. Each device profile has a compute
+//! rate (FLOP/s) and an uplink/downlink bandwidth; the simulator derives
+//! per-round wall-clock:
 //!
 //!   round_time = max_i(client_compute_i + uplink_i) + server_queue_time
 //!              + aggregation broadcast
@@ -11,6 +12,15 @@
 //! which is what the paper's idle-time / training-lock discussion is about:
 //! SFLV1/V2 serialize every local step against a server round-trip, while
 //! decoupled methods overlap.
+//!
+//! Since the round driver now fans clients out across a host worker pool,
+//! the simulator additionally records the pool width and the Main-Server
+//! queue's occupancy/backpressure statistics, and exposes a host-side
+//! makespan estimate (`host_makespan`) — the greedy least-loaded schedule
+//! of the per-client virtual compute over `workers` lanes — so virtual-time
+//! accounting can be compared against observed wall-clock parallelism.
+
+use crate::coordinator::server_queue::QueueStats;
 
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceProfile {
@@ -42,7 +52,8 @@ impl DeviceProfile {
 
 #[derive(Debug, Clone, Default)]
 pub struct RoundTiming {
-    /// virtual seconds of the parallel client phase (max over clients)
+    /// virtual seconds of the parallel client phase (max over clients —
+    /// every simulated client is its own device)
     pub client_phase: f64,
     /// virtual seconds the server spends draining the queue
     pub server_phase: f64,
@@ -50,11 +61,60 @@ pub struct RoundTiming {
     pub sync_phase: f64,
     /// total idle time clients spend blocked on the server (training lock)
     pub client_idle: f64,
+    /// host worker-pool width used to execute this round
+    pub workers: usize,
+    /// greedy makespan of the per-client virtual compute over `workers`
+    /// host lanes — what the wall clock should scale like
+    pub host_makespan: f64,
+    /// Main-Server queue occupancy/backpressure for this round
+    pub queue: QueueStats,
 }
 
 impl RoundTiming {
     pub fn total(&self) -> f64 {
         self.client_phase + self.server_phase + self.sync_phase
+    }
+}
+
+/// Per-client virtual-time accumulator usable from a worker thread: owns a
+/// copy of the (small, Copy) device profile and accumulates one client's
+/// lane locally, to be merged into the round sim at the barrier.
+#[derive(Debug, Clone)]
+pub struct ClientLane {
+    profile: DeviceProfile,
+    pub time: f64,
+    pub idle: f64,
+}
+
+impl ClientLane {
+    pub fn new(profile: &DeviceProfile) -> Self {
+        Self {
+            profile: *profile,
+            time: 0.0,
+            idle: 0.0,
+        }
+    }
+
+    pub fn compute(&mut self, flops: u64) {
+        self.time += flops as f64 / self.profile.client_flops;
+    }
+
+    pub fn upload(&mut self, bytes: u64) {
+        self.time += bytes as f64 / self.profile.uplink_bps + self.profile.rtt;
+    }
+
+    pub fn download(&mut self, bytes: u64) {
+        self.time +=
+            bytes as f64 / self.profile.downlink_bps + self.profile.rtt;
+    }
+
+    /// Synchronous round-trip: the client blocks while the server computes
+    /// (SFLV1/V2's training lock). Charges the wait as idle time.
+    pub fn blocked_on_server(&mut self, server_flops: u64) {
+        let wait = server_flops as f64 / self.profile.server_flops
+            + 2.0 * self.profile.rtt;
+        self.time += wait;
+        self.idle += wait;
     }
 }
 
@@ -67,6 +127,8 @@ pub struct RoundSim {
     client_idle: Vec<f64>,
     server_time: f64,
     sync_bytes: u64,
+    workers: usize,
+    queue_stats: QueueStats,
 }
 
 impl RoundSim {
@@ -77,21 +139,51 @@ impl RoundSim {
             client_idle: vec![0.0; n_clients],
             server_time: 0.0,
             sync_bytes: 0,
+            workers: n_clients.max(1),
+            queue_stats: QueueStats::default(),
         }
     }
 
+    /// Record the host worker-pool width used for this round.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    /// Record the Main-Server queue statistics observed this round.
+    pub fn record_queue(&mut self, stats: QueueStats) {
+        self.queue_stats = stats;
+    }
+
+    pub fn lane(&self) -> ClientLane {
+        ClientLane::new(&self.profile)
+    }
+
+    /// Merge a worker-thread lane into this client's virtual-time account.
+    pub fn merge_lane(&mut self, client: usize, lane: &ClientLane) {
+        self.client_times[client] += lane.time;
+        self.client_idle[client] += lane.idle;
+    }
+
+    // The per-event formulas live once, in ClientLane; the sequential
+    // accessors below delegate through a scratch lane so the parallel
+    // (lane-merge) and sequential paths can never diverge.
+
     pub fn client_compute(&mut self, client: usize, flops: u64) {
-        self.client_times[client] += flops as f64 / self.profile.client_flops;
+        let mut lane = self.lane();
+        lane.compute(flops);
+        self.merge_lane(client, &lane);
     }
 
     pub fn client_upload(&mut self, client: usize, bytes: u64) {
-        self.client_times[client] +=
-            bytes as f64 / self.profile.uplink_bps + self.profile.rtt;
+        let mut lane = self.lane();
+        lane.upload(bytes);
+        self.merge_lane(client, &lane);
     }
 
     pub fn client_download(&mut self, client: usize, bytes: u64) {
-        self.client_times[client] +=
-            bytes as f64 / self.profile.downlink_bps + self.profile.rtt;
+        let mut lane = self.lane();
+        lane.download(bytes);
+        self.merge_lane(client, &lane);
     }
 
     pub fn server_compute(&mut self, flops: u64) {
@@ -101,10 +193,9 @@ impl RoundSim {
     /// Synchronous round-trip: the client blocks while the server computes
     /// (SFLV1/V2's training lock). Charges the client the wait as idle time.
     pub fn client_blocked_on_server(&mut self, client: usize, server_flops: u64) {
-        let wait = server_flops as f64 / self.profile.server_flops
-            + 2.0 * self.profile.rtt;
-        self.client_times[client] += wait;
-        self.client_idle[client] += wait;
+        let mut lane = self.lane();
+        lane.blocked_on_server(server_flops);
+        self.merge_lane(client, &lane);
     }
 
     pub fn sync(&mut self, bytes_per_client: u64) {
@@ -122,13 +213,35 @@ impl RoundSim {
             / self.profile.downlink_bps.min(self.profile.uplink_bps)
             / n
             + self.profile.rtt;
+        let host_makespan = makespan(&self.client_times, self.workers);
         RoundTiming {
             client_phase,
             server_phase: self.server_time,
             sync_phase,
             client_idle: self.client_idle.iter().sum(),
+            workers: self.workers,
+            host_makespan,
+            queue: self.queue_stats,
         }
     }
+}
+
+/// Greedy least-loaded schedule of `times` over `lanes` workers, assigning
+/// in index order (the order the pool hands jobs out). Returns the maximum
+/// lane load. With `lanes >= times.len()` this equals `max(times)`.
+pub fn makespan(times: &[f64], lanes: usize) -> f64 {
+    let lanes = lanes.max(1).min(times.len().max(1));
+    let mut loads = vec![0.0f64; lanes];
+    for &t in times {
+        let min_idx = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        loads[min_idx] += t;
+    }
+    loads.iter().cloned().fold(0.0f64, f64::max)
 }
 
 #[cfg(test)]
@@ -199,5 +312,58 @@ mod tests {
                 .abs()
                 < 1e-12
         );
+    }
+
+    #[test]
+    fn lane_merge_equals_direct_accounting() {
+        let p = profile();
+        let mut direct = RoundSim::new(&p, 2);
+        direct.client_compute(0, 3_000_000_000);
+        direct.client_upload(0, 2_000_000);
+        direct.client_compute(1, 1_000_000_000);
+
+        let mut merged = RoundSim::new(&p, 2);
+        let mut lane0 = merged.lane();
+        lane0.compute(3_000_000_000);
+        lane0.upload(2_000_000);
+        let mut lane1 = merged.lane();
+        lane1.compute(1_000_000_000);
+        merged.merge_lane(0, &lane0);
+        merged.merge_lane(1, &lane1);
+
+        let (a, b) = (direct.finish(), merged.finish());
+        assert_eq!(a.client_phase, b.client_phase);
+        assert_eq!(a.client_idle, b.client_idle);
+    }
+
+    #[test]
+    fn makespan_limits() {
+        let times = [1.0, 1.0, 1.0, 1.0];
+        assert!((makespan(&times, 4) - 1.0).abs() < 1e-12); // fully parallel
+        assert!((makespan(&times, 1) - 4.0).abs() < 1e-12); // sequential
+        assert!((makespan(&times, 2) - 2.0).abs() < 1e-12);
+        // skewed loads balance greedily
+        assert!((makespan(&[3.0, 1.0, 1.0, 1.0], 2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workers_and_queue_recorded() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 4);
+        sim.set_workers(2);
+        sim.client_compute(0, 1_000_000_000);
+        sim.client_compute(1, 1_000_000_000);
+        let stats = crate::coordinator::server_queue::QueueStats {
+            enqueued: 8,
+            processed: 8,
+            dropped: 0,
+            max_depth: 5,
+        };
+        sim.record_queue(stats.clone());
+        let t = sim.finish();
+        assert_eq!(t.workers, 2);
+        assert_eq!(t.queue, stats);
+        // two 1s clients on 2 lanes -> makespan 1s; on the fleet also 1s
+        assert!((t.host_makespan - 1.0).abs() < 1e-9);
     }
 }

@@ -1,5 +1,5 @@
 //! The round driver (substrate S10): executes the four-stage HERON-SFL
-//! protocol (paper §IV) and its baselines over the AOT runtime.
+//! protocol (paper §IV) and its baselines over the runtime.
 //!
 //! Per communication round t:
 //! 1. *Model initialization* — participants start from the aggregated
@@ -9,24 +9,48 @@
 //!    traditional locked exchange (upload smashed, server FO step, download
 //!    cut gradient, client backprop). Decoupled methods enqueue smashed
 //!    batches every k steps.
-//! 3. *Server phase* — the Main-Server drains the queue sequentially with
-//!    FO updates (Eq. 7; SFLV2-style single server model).
+//! 3. *Server phase* — the Main-Server drains the queue with FO updates
+//!    (Eq. 7; SFLV2-style single server model).
 //! 4. *Aggregation* — Fed-Server FedAvg over participants (Eq. 8).
 //!
-//! Client compute runs sequentially on the single PJRT client; parallelism
-//! is accounted in virtual time by the event simulator.
+//! ## Parallel execution model
+//!
+//! The local phase of the decoupled algorithms (HERON, CSE-FSL, FSL-SAGE)
+//! is embarrassingly parallel: each client's steps touch only its own
+//! loader/optimizer state and read-only shared state. The driver fans
+//! those clients out across a worker-thread pool (`util::pool`, sized by
+//! `RunConfig::workers`; 0 = all cores), with clients enqueueing smashed
+//! batches into the concurrent bounded [`ServerQueue`] as they go. Results
+//! are **bit-identical for any worker count or scheduling order** because:
+//!
+//! * per-client randomness is a counter-based stream derived via
+//!   `mix64(run_seed, round << 24 | client << 12 | step)` — no shared RNG
+//!   is touched during the fan-out;
+//! * every f32 reduction (loss list, FedAvg, queue drain) happens at the
+//!   round barrier in participant order, and the Main-Server drains the
+//!   queue in the deterministic `(round, client, step)` order (Eq. 7);
+//! * participant sampling uses the driver's sequential RNG *before* the
+//!   fan-out begins.
+//!
+//! SFLV1/V2 keep their sequential path: the per-step training lock against
+//! the Main-Server is the defining property of those baselines (every
+//! batch waits on a server round-trip), so there is no decoupled client
+//! phase to parallelize without changing the algorithm.
 
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::aggregator::fedavg_into;
 use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::eventsim::{DeviceProfile, RoundSim, RoundTiming};
+use crate::coordinator::eventsim::{
+    ClientLane, DeviceProfile, RoundSim, RoundTiming,
+};
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::{Loader, Task};
 use crate::data::partition::Partition;
 use crate::metrics::{RoundRecord, RunRecord};
 use crate::runtime::tensor::TensorValue;
 use crate::runtime::{Call, Session};
+use crate::util::pool;
 use crate::util::rng::{mix64, Xoshiro256pp};
 use anyhow::{bail, Context, Result};
 
@@ -59,6 +83,30 @@ struct ClientState {
     shard_weight: f64,
     /// last uploaded batch (FSL-SAGE alignment needs it)
     last_upload: Option<(Vec<f32>, Vec<i32>, Vec<i32>)>, // smashed, y, x
+}
+
+/// Read-only context shared by all client worker threads during the
+/// decoupled fan-out phase.
+struct LocalCtx<'a> {
+    session: &'a Session,
+    cfg: &'a RunConfig,
+    book: &'a CostBook,
+    base: Option<&'a [f32]>,
+    task: Task,
+    round_idx: usize,
+    profile: DeviceProfile,
+    nc: usize,
+}
+
+/// What one client's local phase produces, merged at the round barrier in
+/// participant order.
+struct LocalOutcome {
+    ci: usize,
+    theta: Vec<f32>,
+    losses: Vec<f64>,
+    comm_bytes: u64,
+    flops: u64,
+    lane: ClientLane,
 }
 
 pub struct Driver<'s> {
@@ -229,25 +277,8 @@ impl<'s> Driver<'s> {
         Ok(())
     }
 
-    fn step_seed(&self, client: usize, step: usize) -> i32 {
-        mix64(
-            self.cfg.run_seed,
-            (self.round_idx as u64) << 24 | (client as u64) << 12 | step as u64,
-        ) as i32
-    }
-
     fn batch_xy(&self, client: usize) -> (TensorValue, Vec<i32>) {
-        let cs = &self.clients[client];
-        match self.task {
-            Task::Vision => (
-                TensorValue::F32(cs.loader.xs_f32.clone()),
-                cs.loader.ys.clone(),
-            ),
-            Task::Lm => (
-                TensorValue::I32(cs.loader.xs_i32.clone()),
-                cs.loader.xs_i32.clone(),
-            ),
-        }
+        loader_batch_xy(self.task, &self.clients[client].loader)
     }
 
     /// One full communication round. Returns the train-loss mean over all
@@ -255,44 +286,42 @@ impl<'s> Driver<'s> {
     pub fn run_round(&mut self) -> Result<f64> {
         let participants = self.sample_participants();
         let mut sim = RoundSim::new(&self.profile, self.cfg.n_clients);
-        let mut queue = ServerQueue::new(
+        let queue = ServerQueue::new(
             participants.len()
                 * (self.cfg.local_steps / self.cfg.upload_every + 1),
         );
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
 
-        for &ci in &participants {
-            let theta_start = self.theta_l.clone();
-            let theta_end = match self.cfg.algorithm {
-                Algorithm::Heron => self.local_phase_zo(
-                    ci,
-                    theta_start,
-                    &mut queue,
-                    &mut sim,
-                    &mut losses,
-                )?,
-                Algorithm::CseFsl | Algorithm::FslSage => self
-                    .local_phase_fo(
-                        ci,
-                        theta_start,
-                        &mut queue,
-                        &mut sim,
-                        &mut losses,
-                    )?,
-                Algorithm::SflV1 | Algorithm::SflV2 => self
-                    .local_phase_locked(ci, theta_start, &mut sim, &mut losses)?,
-            };
-            // model sync accounting (download at init + upload at end)
-            self.comm_bytes += self.book.comm_per_round_sync();
-            sim.sync(self.book.comm_per_round_sync());
-            updated.push((ci, theta_end));
+        if self.cfg.algorithm.is_decoupled() {
+            self.local_fanout(
+                &participants,
+                &queue,
+                &mut sim,
+                &mut losses,
+                &mut updated,
+            )?;
+        } else {
+            // SFLV1/V2: the per-step training lock serializes each client
+            // against the Main-Server — executed sequentially by design.
+            sim.set_workers(1);
+            for &ci in &participants {
+                let theta_start = self.theta_l.clone();
+                let theta_end = self
+                    .local_phase_locked(ci, theta_start, &mut sim, &mut losses)?;
+                self.comm_bytes += self.book.comm_per_round_sync();
+                sim.sync(self.book.comm_per_round_sync());
+                updated.push((ci, theta_end));
+            }
         }
 
-        // ---- server phase: drain queued smashed batches sequentially ----
+        // ---- server phase: drain queued smashed batches (Eq. 7) ----
+        // The concurrent queue is drained at the barrier in deterministic
+        // (round, client, step) order, which matches the order a purely
+        // sequential client loop would have produced.
         if self.cfg.algorithm.is_decoupled() {
             let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
-            while let Some(b) = queue.pop() {
+            for b in queue.drain_sorted() {
                 let want_cutgrad = self.cfg.algorithm == Algorithm::FslSage
                     && b.step % (self.cfg.upload_every * self.cfg.align_every)
                         == 0;
@@ -329,6 +358,7 @@ impl<'s> Driver<'s> {
                 }
             }
         }
+        sim.record_queue(queue.stats());
 
         // ---- aggregation (Fed-Server, Eq. 8) ----
         if !updated.is_empty() {
@@ -375,95 +405,55 @@ impl<'s> Driver<'s> {
         idx
     }
 
-    // ---- local phases -----------------------------------------------------
+    // ---- parallel local phase (decoupled algorithms) ---------------------
 
-    fn local_phase_zo(
+    /// Fan the participants' local phases out across the worker pool and
+    /// merge outcomes at the barrier in participant order.
+    fn local_fanout(
         &mut self,
-        ci: usize,
-        mut theta: Vec<f32>,
-        queue: &mut ServerQueue,
+        participants: &[usize],
+        queue: &ServerQueue,
         sim: &mut RoundSim,
         losses: &mut Vec<f64>,
-    ) -> Result<Vec<f32>> {
-        let mut opt = std::mem::replace(
-            &mut self.clients[ci].opt_local,
-            OptState::None,
-        );
-        for step in 1..=self.cfg.local_steps {
-            self.clients[ci].loader.next_batch();
-            let (x, y) = self.batch_xy(ci);
-            let seed = self.step_seed(ci, step);
-            let mut outs = Self::opt_args(
-                self.call("zo_step").arg("theta_l", theta.clone()),
-                &opt,
-            )
-            .arg("x", x.clone())
-            .arg("y", TensorValue::I32(y.clone()))
-            .arg("seed", seed)
-            .arg("mu", self.cfg.mu)
-            .arg("lr", self.cfg.lr_client)
-            .arg("n_pert", self.cfg.n_pert as i32)
-            .run()?;
-            theta = outs
-                .remove("theta_l")
-                .context("zo theta_l")?
-                .into_f32()?;
-            Self::take_opt(&mut outs, &mut opt)?;
-            losses.push(
-                outs.remove("loss").context("zo loss")?.scalar_f32()? as f64,
-            );
-            self.flops_client += self.book.flops_per_step;
-            sim.client_compute(ci, self.book.flops_per_step);
-
-            if step % self.cfg.upload_every == 0 {
-                self.upload_smashed(ci, &theta, &x, &y, step, queue, sim)?;
-            }
+        updated: &mut Vec<(usize, Vec<f32>)>,
+    ) -> Result<()> {
+        let eff = pool::effective_workers(self.cfg.workers, participants.len());
+        sim.set_workers(eff);
+        let theta0 = self.theta_l.clone();
+        let ctx = LocalCtx {
+            session: self.session,
+            cfg: &self.cfg,
+            book: &self.book,
+            base: self.base.as_deref(),
+            task: self.task,
+            round_idx: self.round_idx,
+            profile: self.profile,
+            nc: self.nc,
+        };
+        // Disjoint &mut borrows of the participating client states.
+        let jobs: Vec<(usize, &mut ClientState)> = self
+            .clients
+            .iter_mut()
+            .enumerate()
+            .filter(|(ci, _)| participants.binary_search(ci).is_ok())
+            .collect();
+        let results = pool::run_jobs(eff, jobs, |(ci, state)| {
+            client_local_phase(&ctx, ci, state, theta0.clone(), queue)
+        });
+        for res in results {
+            let out = res?;
+            losses.extend(out.losses);
+            self.comm_bytes +=
+                out.comm_bytes + self.book.comm_per_round_sync();
+            self.flops_client += out.flops;
+            sim.merge_lane(out.ci, &out.lane);
+            sim.sync(self.book.comm_per_round_sync());
+            updated.push((out.ci, out.theta));
         }
-        self.clients[ci].opt_local = opt;
-        Ok(theta)
+        Ok(())
     }
 
-    fn local_phase_fo(
-        &mut self,
-        ci: usize,
-        mut theta: Vec<f32>,
-        queue: &mut ServerQueue,
-        sim: &mut RoundSim,
-        losses: &mut Vec<f64>,
-    ) -> Result<Vec<f32>> {
-        let mut opt = std::mem::replace(
-            &mut self.clients[ci].opt_local,
-            OptState::None,
-        );
-        for step in 1..=self.cfg.local_steps {
-            self.clients[ci].loader.next_batch();
-            let (x, y) = self.batch_xy(ci);
-            let mut outs = Self::opt_args(
-                self.call("fo_step").arg("theta_l", theta.clone()),
-                &opt,
-            )
-            .arg("x", x.clone())
-            .arg("y", TensorValue::I32(y.clone()))
-            .arg("lr", self.cfg.lr_client)
-            .run()?;
-            theta = outs
-                .remove("theta_l")
-                .context("fo theta_l")?
-                .into_f32()?;
-            Self::take_opt(&mut outs, &mut opt)?;
-            losses.push(
-                outs.remove("loss").context("fo loss")?.scalar_f32()? as f64,
-            );
-            self.flops_client += self.book.flops_per_step;
-            sim.client_compute(ci, self.book.flops_per_step);
-
-            if step % self.cfg.upload_every == 0 {
-                self.upload_smashed(ci, &theta, &x, &y, step, queue, sim)?;
-            }
-        }
-        self.clients[ci].opt_local = opt;
-        Ok(theta)
-    }
+    // ---- locked local phase (SFLV1/V2) -----------------------------------
 
     /// Traditional SFL (V1/V2): every batch runs the locked exchange.
     fn local_phase_locked(
@@ -567,50 +557,6 @@ impl<'s> Driver<'s> {
         }
         self.clients[ci].opt_client = opt_c;
         Ok(theta)
-    }
-
-    fn upload_smashed(
-        &mut self,
-        ci: usize,
-        theta: &[f32],
-        x: &TensorValue,
-        y: &[i32],
-        step: usize,
-        queue: &mut ServerQueue,
-        sim: &mut RoundSim,
-    ) -> Result<()> {
-        let mut outs = self
-            .call("client_fwd")
-            .arg("theta_c", theta[..self.nc].to_vec())
-            .arg("x", x.clone())
-            .run()?;
-        let smashed = outs
-            .remove("smashed")
-            .context("smashed")?
-            .into_f32()?;
-        // the upload forward is part of the protocol but NOT an extra
-        // training cost in Table I (the paper's accounting charges the ZO /
-        // FO step); we still charge its flops to the client sim for latency
-        sim.client_compute(
-            ci,
-            (self.book.flops_per_step / (self.cfg.n_pert as u64 + 1)).max(1),
-        );
-        self.comm_bytes += self.book.comm_per_step(true);
-        sim.client_upload(ci, self.book.smashed_bytes);
-        let x_i32 = match x {
-            TensorValue::I32(v) => v.clone(),
-            _ => Vec::new(),
-        };
-        self.clients[ci].last_upload =
-            Some((smashed.clone(), y.to_vec(), x_i32));
-        queue.push(SmashedBatch {
-            client: ci,
-            round: self.round_idx,
-            step,
-            smashed,
-            targets: y.to_vec(),
-        });
-        Ok(())
     }
 
     fn server_consume(
@@ -740,6 +686,172 @@ impl<'s> Driver<'s> {
             "client_idle_seconds",
             self.timings.iter().map(|t| t.client_idle).sum(),
         );
+        rec.set(
+            "host_makespan_seconds",
+            self.timings.iter().map(|t| t.host_makespan).sum(),
+        );
+        rec.set(
+            "queue_enqueued",
+            self.timings.iter().map(|t| t.queue.enqueued as f64).sum(),
+        );
+        rec.set(
+            "queue_dropped",
+            self.timings.iter().map(|t| t.queue.dropped as f64).sum(),
+        );
+        rec.set(
+            "queue_max_depth",
+            self.timings
+                .iter()
+                .map(|t| t.queue.max_depth as f64)
+                .fold(0.0, f64::max),
+        );
         Ok(rec)
     }
+}
+
+// ---------------------------------------------------------------------------
+// worker-thread client phase (decoupled algorithms)
+// ---------------------------------------------------------------------------
+
+fn loader_batch_xy(task: Task, loader: &Loader) -> (TensorValue, Vec<i32>) {
+    match task {
+        Task::Vision => (
+            TensorValue::F32(loader.xs_f32.clone()),
+            loader.ys.clone(),
+        ),
+        Task::Lm => (
+            TensorValue::I32(loader.xs_i32.clone()),
+            loader.xs_i32.clone(),
+        ),
+    }
+}
+
+fn step_seed(ctx: &LocalCtx, client: usize, step: usize) -> i32 {
+    mix64(
+        ctx.cfg.run_seed,
+        (ctx.round_idx as u64) << 24 | (client as u64) << 12 | step as u64,
+    ) as i32
+}
+
+fn entry_call<'a>(ctx: &LocalCtx<'a>, entry: &'a str) -> Call<'a> {
+    let mut c = Call::new(ctx.session, &ctx.cfg.variant, entry);
+    if let Some(b) = ctx.base {
+        c = c.arg("base", b.to_vec());
+    }
+    c
+}
+
+/// One client's full local phase (h steps + uploads), self-contained so it
+/// can run on any worker thread. Mutates only this client's state; all
+/// cross-client effects go through the concurrent queue and the returned
+/// outcome.
+fn client_local_phase(
+    ctx: &LocalCtx,
+    ci: usize,
+    cs: &mut ClientState,
+    mut theta: Vec<f32>,
+    queue: &ServerQueue,
+) -> Result<LocalOutcome> {
+    let mut lane = ClientLane::new(&ctx.profile);
+    let mut losses = Vec::with_capacity(ctx.cfg.local_steps);
+    let mut comm_bytes = 0u64;
+    let mut flops = 0u64;
+    let zo = ctx.cfg.algorithm == Algorithm::Heron;
+    let entry = if zo { "zo_step" } else { "fo_step" };
+    let mut opt = std::mem::replace(&mut cs.opt_local, OptState::None);
+
+    for step in 1..=ctx.cfg.local_steps {
+        cs.loader.next_batch();
+        let (x, y) = loader_batch_xy(ctx.task, &cs.loader);
+        let mut call = Driver::opt_args(
+            entry_call(ctx, entry).arg("theta_l", theta.clone()),
+            &opt,
+        )
+        .arg("x", x.clone())
+        .arg("y", TensorValue::I32(y.clone()));
+        if zo {
+            call = call
+                .arg("seed", step_seed(ctx, ci, step))
+                .arg("mu", ctx.cfg.mu)
+                .arg("n_pert", ctx.cfg.n_pert as i32);
+        }
+        let mut outs = call.arg("lr", ctx.cfg.lr_client).run()?;
+        theta = outs
+            .remove("theta_l")
+            .context("local theta_l")?
+            .into_f32()?;
+        Driver::take_opt(&mut outs, &mut opt)?;
+        losses.push(
+            outs.remove("loss").context("local loss")?.scalar_f32()? as f64,
+        );
+        flops += ctx.book.flops_per_step;
+        lane.compute(ctx.book.flops_per_step);
+
+        if step % ctx.cfg.upload_every == 0 {
+            upload_smashed(
+                ctx,
+                ci,
+                cs,
+                &theta,
+                &x,
+                &y,
+                step,
+                queue,
+                &mut lane,
+                &mut comm_bytes,
+            )?;
+        }
+    }
+    cs.opt_local = opt;
+    Ok(LocalOutcome {
+        ci,
+        theta,
+        losses,
+        comm_bytes,
+        flops,
+        lane,
+    })
+}
+
+fn upload_smashed(
+    ctx: &LocalCtx,
+    ci: usize,
+    cs: &mut ClientState,
+    theta: &[f32],
+    x: &TensorValue,
+    y: &[i32],
+    step: usize,
+    queue: &ServerQueue,
+    lane: &mut ClientLane,
+    comm_bytes: &mut u64,
+) -> Result<()> {
+    let mut outs = entry_call(ctx, "client_fwd")
+        .arg("theta_c", theta[..ctx.nc].to_vec())
+        .arg("x", x.clone())
+        .run()?;
+    let smashed = outs
+        .remove("smashed")
+        .context("smashed")?
+        .into_f32()?;
+    // the upload forward is part of the protocol but NOT an extra
+    // training cost in Table I (the paper's accounting charges the ZO /
+    // FO step); we still charge its flops to the client sim for latency
+    lane.compute(
+        (ctx.book.flops_per_step / (ctx.cfg.n_pert as u64 + 1)).max(1),
+    );
+    *comm_bytes += ctx.book.comm_per_step(true);
+    lane.upload(ctx.book.smashed_bytes);
+    let x_i32 = match x {
+        TensorValue::I32(v) => v.clone(),
+        _ => Vec::new(),
+    };
+    cs.last_upload = Some((smashed.clone(), y.to_vec(), x_i32));
+    queue.push(SmashedBatch {
+        client: ci,
+        round: ctx.round_idx,
+        step,
+        smashed,
+        targets: y.to_vec(),
+    });
+    Ok(())
 }

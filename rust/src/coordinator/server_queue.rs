@@ -1,12 +1,20 @@
-//! Main-Server smashed-data queue (substrate S11).
+//! Main-Server smashed-data queue (substrate S11) — bounded MPSC.
 //!
-//! Clients enqueue (smashed, targets) batches during their local phase; the
-//! Main-Server drains the queue sequentially (SFLV2-style, paper Eq. (7))
-//! with first-order updates. The queue tracks occupancy statistics and
-//! enforces a capacity bound so backpressure behaviour is observable in the
-//! event simulator.
+//! Clients enqueue (smashed, targets) batches **concurrently** during the
+//! parallel local phase; the Main-Server drains at the round barrier with
+//! first-order updates (SFLV2-style, paper Eq. (7)). The paper's Eq. (7)
+//! semantics are deterministic regardless of thread scheduling because the
+//! drain happens via [`ServerQueue::drain_sorted`], which orders batches by
+//! `(round, client, step)` — exactly the order the old single-threaded
+//! driver produced them in.
+//!
+//! The queue tracks occupancy statistics and enforces a capacity bound so
+//! backpressure behaviour is observable in the event simulator. The
+//! synchronous protocol never drops — capacity is sized to N·(h/k) — but
+//! failure-injection tests exercise the drop path.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 
 #[derive(Debug, Clone)]
 pub struct SmashedBatch {
@@ -18,7 +26,7 @@ pub struct SmashedBatch {
     pub targets: Vec<i32>,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct QueueStats {
     pub enqueued: u64,
     pub processed: u64,
@@ -26,53 +34,83 @@ pub struct QueueStats {
     pub max_depth: usize,
 }
 
-pub struct ServerQueue {
+struct Inner {
     queue: VecDeque<SmashedBatch>,
-    capacity: usize,
     stats: QueueStats,
+}
+
+/// Bounded multi-producer queue. All methods take `&self`, so worker
+/// threads can share one queue by reference during the fan-out phase.
+pub struct ServerQueue {
+    inner: Mutex<Inner>,
+    capacity: usize,
 }
 
 impl ServerQueue {
     pub fn new(capacity: usize) -> Self {
         Self {
-            queue: VecDeque::new(),
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                stats: QueueStats::default(),
+            }),
             capacity: capacity.max(1),
-            stats: QueueStats::default(),
         }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Enqueue; returns false (and counts a drop) when at capacity.
-    /// The synchronous protocol never drops — capacity is sized to
-    /// N·(h/k) — but failure-injection tests exercise this path.
-    pub fn push(&mut self, batch: SmashedBatch) -> bool {
-        if self.queue.len() >= self.capacity {
-            self.stats.dropped += 1;
+    pub fn push(&self, batch: SmashedBatch) -> bool {
+        let mut g = self.lock();
+        if g.queue.len() >= self.capacity {
+            g.stats.dropped += 1;
             return false;
         }
-        self.queue.push_back(batch);
-        self.stats.enqueued += 1;
-        self.stats.max_depth = self.stats.max_depth.max(self.queue.len());
+        g.queue.push_back(batch);
+        g.stats.enqueued += 1;
+        let depth = g.queue.len();
+        g.stats.max_depth = g.stats.max_depth.max(depth);
         true
     }
 
-    pub fn pop(&mut self) -> Option<SmashedBatch> {
-        let b = self.queue.pop_front();
+    /// FIFO pop (streaming consumers; the round driver uses
+    /// [`Self::drain_sorted`] instead).
+    pub fn pop(&self) -> Option<SmashedBatch> {
+        let mut g = self.lock();
+        let b = g.queue.pop_front();
         if b.is_some() {
-            self.stats.processed += 1;
+            g.stats.processed += 1;
         }
         b
     }
 
+    /// Barrier drain: remove everything, ordered by `(round, client, step)`.
+    /// This is the deterministic Eq. (7) consumption order — identical no
+    /// matter how concurrent producers interleaved their pushes.
+    pub fn drain_sorted(&self) -> Vec<SmashedBatch> {
+        let mut g = self.lock();
+        let mut out: Vec<SmashedBatch> = g.queue.drain(..).collect();
+        out.sort_by_key(|b| (b.round, b.client, b.step));
+        g.stats.processed += out.len() as u64;
+        out
+    }
+
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.lock().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len() == 0
     }
 
-    pub fn stats(&self) -> &QueueStats {
-        &self.stats
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.lock().stats.clone()
     }
 }
 
@@ -81,10 +119,14 @@ mod tests {
     use super::*;
 
     fn batch(client: usize) -> SmashedBatch {
+        batch_at(client, 0, 0)
+    }
+
+    fn batch_at(client: usize, round: usize, step: usize) -> SmashedBatch {
         SmashedBatch {
             client,
-            round: 0,
-            step: 0,
+            round,
+            step,
             smashed: vec![0.0; 4],
             targets: vec![1],
         }
@@ -92,7 +134,7 @@ mod tests {
 
     #[test]
     fn fifo_order_preserved() {
-        let mut q = ServerQueue::new(10);
+        let q = ServerQueue::new(10);
         for c in 0..5 {
             assert!(q.push(batch(c)));
         }
@@ -104,7 +146,7 @@ mod tests {
 
     #[test]
     fn capacity_enforced_and_drops_counted() {
-        let mut q = ServerQueue::new(2);
+        let q = ServerQueue::new(2);
         assert!(q.push(batch(0)));
         assert!(q.push(batch(1)));
         assert!(!q.push(batch(2)));
@@ -114,7 +156,7 @@ mod tests {
 
     #[test]
     fn stats_track_depth() {
-        let mut q = ServerQueue::new(8);
+        let q = ServerQueue::new(8);
         for c in 0..6 {
             q.push(batch(c));
         }
@@ -123,5 +165,46 @@ mod tests {
         assert_eq!(q.stats().max_depth, 6);
         assert_eq!(q.stats().enqueued, 7);
         assert_eq!(q.stats().processed, 1);
+    }
+
+    #[test]
+    fn drain_sorted_orders_by_round_client_step() {
+        let q = ServerQueue::new(16);
+        q.push(batch_at(2, 0, 1));
+        q.push(batch_at(0, 1, 1));
+        q.push(batch_at(0, 0, 2));
+        q.push(batch_at(1, 0, 1));
+        q.push(batch_at(0, 0, 1));
+        let order: Vec<(usize, usize, usize)> = q
+            .drain_sorted()
+            .iter()
+            .map(|b| (b.round, b.client, b.step))
+            .collect();
+        assert_eq!(
+            order,
+            vec![(0, 0, 1), (0, 0, 2), (0, 1, 1), (0, 2, 1), (1, 0, 1)]
+        );
+        assert!(q.is_empty());
+        assert_eq!(q.stats().processed, 5);
+    }
+
+    #[test]
+    fn concurrent_enqueue_conserves_counts() {
+        let q = ServerQueue::new(64);
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..32 {
+                        q.push(batch_at(t, 0, i));
+                    }
+                });
+            }
+        });
+        let st = q.stats();
+        assert_eq!(st.enqueued + st.dropped, 8 * 32);
+        assert_eq!(st.enqueued, 64);
+        assert_eq!(st.max_depth, 64);
+        assert_eq!(q.len(), 64);
     }
 }

@@ -15,7 +15,7 @@
 //! * `base` — the variant's frozen-base blob.
 
 use crate::data::{synth_text, synth_vision};
-use crate::runtime::manifest::{DType, TensorSpec};
+use crate::runtime::manifest::{DType, TensorSpec, VariantSpec};
 use crate::runtime::tensor::TensorValue;
 use crate::runtime::Session;
 use anyhow::{bail, Context, Result};
@@ -37,12 +37,21 @@ fn golden_input(
     idx: usize,
     task: &str,
 ) -> Result<TensorValue> {
+    golden_input_for(session.variant(variant)?, spec, idx, task)
+}
+
+/// Session-free construction against a bare [`VariantSpec`] — used by the
+/// artifact generator to record goldens before any session exists.
+pub fn golden_input_for(
+    vspec: &VariantSpec,
+    spec: &TensorSpec,
+    idx: usize,
+    task: &str,
+) -> Result<TensorValue> {
     let salt = 101 + idx as i64 * 13;
     let n = spec.elems();
     Ok(match spec.name.as_str() {
-        "base" => TensorValue::F32(
-            session.variant(variant)?.blob("frozen_base")?,
-        ),
+        "base" => TensorValue::F32(vspec.blob("frozen_base")?),
         "x" => {
             let b = spec.shape[0];
             if task == "vision" {
@@ -104,7 +113,10 @@ pub fn bench_input(
     golden_input(session, variant, spec, idx, task)
 }
 
-fn digest(v: &TensorValue) -> (Vec<f64>, f64, f64, usize) {
+/// Digest one output tensor: (head, sum, l2, len) — the manifest's golden
+/// record shape. Public so the artifact generator can record goldens with
+/// exactly the digest the checker recomputes.
+pub fn digest(v: &TensorValue) -> (Vec<f64>, f64, f64, usize) {
     let vals: Vec<f64> = match v {
         TensorValue::F32(x) => x.iter().map(|&v| v as f64).collect(),
         TensorValue::I32(x) => x.iter().map(|&v| v as f64).collect(),

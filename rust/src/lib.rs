@@ -4,12 +4,17 @@
 //! First-Order Split Federated Learning"* as a three-layer Rust + JAX +
 //! Pallas system (see DESIGN.md). This crate is the L3 coordinator: the
 //! split-federated protocol, data plane, resource accounting, and analysis
-//! tooling. All model compute executes through AOT-compiled HLO artifacts
-//! loaded by [`runtime::Session`]; Python is never on the request path.
+//! tooling. Model compute executes through artifact entry points behind
+//! [`runtime::Session`] — by default the deterministic native reference
+//! engine (the offline vendor set has no XLA toolchain); Python is never
+//! on the request path. The round driver fans independent client phases
+//! out across a worker pool with bit-deterministic results for any worker
+//! count (`--workers`).
 //!
 //! Layout:
-//! * [`util`] — offline substrates (JSON, PRNG, CLI, property testing)
-//! * [`runtime`] — PJRT artifact loading + invocation
+//! * [`util`] — offline substrates (JSON, PRNG, CLI, worker pool,
+//!   property testing)
+//! * [`runtime`] — artifact manifest + native execution engine
 //! * [`data`] — synthetic datasets + federated partitioning
 //! * [`coordinator`] — the SFL protocol: algorithms, rounds, accounting
 //! * [`metrics`] — run recording and reporting

@@ -50,6 +50,7 @@ fn print_help() {
          run flags: --variant cnn_c1 --algo heron|cse|sage|sflv1|sflv2\n\
            --clients N --rounds R --h H --k K --mu MU --n_pert P\n\
            --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
+           --workers W (client-phase worker threads; 0 = all cores)\n\
            --out results/dir (writes json+csv)\n\
          costs flags: --variant V [--n_pert P]\n\
          spectrum flags: --variant cnn_c1 [--steps M] [--probes P]"

@@ -1,0 +1,841 @@
+//! Deterministic artifact generation (substrate S21).
+//!
+//! The L2→L3 contract is an on-disk `artifacts/` directory: a manifest with
+//! per-variant entry specs, init/base parameter blobs, and golden output
+//! digests. When the AOT (JAX/Pallas) toolchain is unavailable — the
+//! offline default — this module synthesizes the full artifact set for the
+//! native reference engine: the same manifest schema, blobs written as
+//! little-endian f32, entry marker files, and goldens recorded by actually
+//! executing every entry once through [`crate::runtime::native::Engine`].
+//!
+//! Generation is deterministic (all streams are counter-based) and atomic:
+//! the tree is built under `artifacts.tmp.<pid>` and renamed into place, so
+//! concurrent readers never observe a half-written manifest.
+
+use crate::golden;
+use crate::runtime::manifest::{
+    CostModel, DType, EntrySpec, GoldenOutput, Manifest, TensorSpec,
+    VariantSpec,
+};
+use crate::runtime::native::lm::{AuxKind, VOCAB};
+use crate::runtime::native::Engine;
+use crate::util::json::Value;
+use crate::util::rng::mix64;
+use crate::zo::stream::{fold_seed, PerturbStream};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Bumped whenever the native model definition changes; a manifest carrying
+/// a different tag is regenerated on load.
+pub const ENGINE_TAG: &str = "native-ref-v1";
+
+const SEQ: usize = 96;
+const PIXELS: usize = 768;
+const CLASSES: usize = 10;
+
+static GEN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Locate the default artifact set, generating it if missing or stale.
+/// Returns the `artifacts/` directory.
+pub fn ensure_default() -> Result<PathBuf> {
+    let _guard = GEN_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(dir) = find_existing() {
+        return match manifest_tag(&dir) {
+            Some(tag) if tag == ENGINE_TAG => Ok(dir),
+            Some(_) => {
+                // our own output from an older engine: regenerate in place
+                log::info!(
+                    "regenerating stale native artifact set at {}",
+                    dir.display()
+                );
+                let parent =
+                    dir.parent().unwrap_or(Path::new(".")).to_path_buf();
+                generate_at(&parent, true)
+            }
+            // no generated_by tag: a foreign artifact set (e.g. AOT
+            // toolchain output) — never delete what we didn't generate
+            None => Ok(dir),
+        };
+    }
+    let root = find_repo_root();
+    log::info!(
+        "no artifacts found — generating native set under {}",
+        root.display()
+    );
+    generate_at(&root, false)
+}
+
+/// Walk up from cwd looking for `artifacts/manifest.json`, but never past
+/// the repo root (the first ancestor holding a Cargo.toml) — an unrelated
+/// `artifacts/` directory above the repo must not be picked up.
+fn find_existing() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if dir.join("Cargo.toml").exists() || !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn find_repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+/// The `generated_by` tag of an artifact manifest, if it has one. `None`
+/// means the tree was not produced by this generator (or is unreadable).
+fn manifest_tag(dir: &Path) -> Option<String> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+    let v = crate::util::json::parse(&text).ok()?;
+    v.get("generated_by")
+        .and_then(Value::as_str)
+        .map(str::to_string)
+}
+
+fn generate_at(root: &Path, replace: bool) -> Result<PathBuf> {
+    let tmp = root.join(format!("artifacts.tmp.{}", std::process::id()));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+    std::fs::create_dir_all(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let result = generate_into(&tmp);
+    let dest = root.join("artifacts");
+    match result {
+        Ok(()) => {
+            if replace && dest.exists() {
+                std::fs::remove_dir_all(&dest)
+                    .with_context(|| format!("clearing {}", dest.display()))?;
+            }
+            match std::fs::rename(&tmp, &dest) {
+                Ok(()) => Ok(dest),
+                Err(_) if dest.join("manifest.json").exists() => {
+                    // another process won the race; use theirs
+                    std::fs::remove_dir_all(&tmp).ok();
+                    Ok(dest)
+                }
+                Err(e) => Err(e).with_context(|| {
+                    format!("installing artifacts at {}", dest.display())
+                }),
+            }
+        }
+        Err(e) => {
+            std::fs::remove_dir_all(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// variant definitions
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Arch {
+    /// Gabor-energy vision client with `q` features
+    Vision { q: usize },
+    /// LoRA-bigram LM client with embedding width `e`
+    Lm { e: usize, aux: AuxKind },
+}
+
+#[derive(Clone, Copy)]
+struct VDef {
+    name: &'static str,
+    arch: Arch,
+    batch: usize,
+    eval_batch: usize,
+    /// include the locked-exchange + alignment entries
+    full: bool,
+    /// include the Hessian-vector-product entry (Fig 7)
+    hvp: bool,
+}
+
+fn defs() -> Vec<VDef> {
+    use AuxKind::*;
+    let v = |name, q, full, hvp| VDef {
+        name,
+        arch: Arch::Vision { q },
+        batch: 32,
+        eval_batch: 64,
+        full,
+        hvp,
+    };
+    let l = |name, e, aux| VDef {
+        name,
+        arch: Arch::Lm { e, aux },
+        batch: 4,
+        eval_batch: 8,
+        full: true,
+        hvp: false,
+    };
+    vec![
+        v("cnn_c1", 36, true, true),
+        v("cnn_c2", 18, false, false),
+        v("cnn_c3", 27, false, false),
+        l("gpt2nano_c1_a1", 16, Linear),
+        // kernel-path twin: same model lowered through the Pallas kernels
+        l("gpt2nano_c1_a1_pallas", 16, Linear),
+        l("gpt2micro_c2_a0", 24, Bias),
+        l("gpt2micro_c2_a1", 24, Linear),
+        l("gpt2micro_c2_a1_pallas", 24, Linear),
+        l("gpt2micro_c2_a2", 24, Mlp(8)),
+        l("gpt2micro_c2_a3", 24, Mlp(16)),
+        l("gpt2micro_c3_a1", 32, Linear),
+    ]
+}
+
+impl VDef {
+    fn task(&self) -> &'static str {
+        match self.arch {
+            Arch::Vision { .. } => "vision",
+            Arch::Lm { .. } => "lm",
+        }
+    }
+
+    fn family(&self) -> &'static str {
+        match self.arch {
+            Arch::Vision { .. } => "cnn",
+            Arch::Lm { .. } => "gpt2",
+        }
+    }
+
+    fn sizes(&self) -> (usize, usize, usize, usize) {
+        // (client, aux, server, base)
+        match self.arch {
+            Arch::Vision { q } => {
+                (2 * q, q * CLASSES + CLASSES, q * CLASSES + CLASSES, 0)
+            }
+            Arch::Lm { e, aux } => {
+                (VOCAB * e, aux.size(e), e * VOCAB + VOCAB, VOCAB * e)
+            }
+        }
+    }
+
+    fn entry_names(&self) -> Vec<&'static str> {
+        let mut es = vec![
+            "local_loss",
+            "zo_step",
+            "fo_step",
+            "client_fwd",
+            "server_step",
+            "eval_full",
+        ];
+        if self.full {
+            es.extend([
+                "server_step_cutgrad",
+                "client_bp_step",
+                "aux_align",
+            ]);
+        }
+        if self.hvp {
+            es.push("hvp");
+        }
+        es
+    }
+
+    fn cost(&self) -> CostModel {
+        let (pc, pa, ps, _) = self.sizes();
+        match self.arch {
+            Arch::Vision { q } => CostModel {
+                params_client: pc,
+                params_aux: pa,
+                params_server: ps,
+                act_cache_client: 8 * q,
+                act_cache_aux: 4 * CLASSES,
+                act_cache_server: 4 * CLASSES,
+                act_peak_client: 4 * q,
+                act_peak_aux: 4 * CLASSES,
+                act_peak_server: 4 * CLASSES,
+                flops_fwd_client: 4 * PIXELS * q + 4 * q,
+                flops_fwd_aux: 2 * q * CLASSES + CLASSES,
+                flops_fwd_server: 2 * q * CLASSES + CLASSES,
+                smashed_elems: q,
+                target_elems: 1,
+            },
+            Arch::Lm { e, .. } => CostModel {
+                params_client: pc,
+                params_aux: pa,
+                params_server: ps,
+                act_cache_client: 4 * SEQ * e,
+                act_cache_aux: 4 * SEQ * VOCAB,
+                act_cache_server: 4 * SEQ * VOCAB,
+                act_peak_client: 4 * e,
+                act_peak_aux: 4 * VOCAB,
+                act_peak_server: 4 * VOCAB,
+                flops_fwd_client: SEQ * 4 * e,
+                flops_fwd_aux: SEQ * (2 * e * VOCAB + VOCAB),
+                flops_fwd_server: SEQ * (2 * e * VOCAB + VOCAB),
+                smashed_elems: SEQ * e,
+                target_elems: SEQ,
+            },
+        }
+    }
+
+    fn x_shape(&self) -> Vec<usize> {
+        match self.arch {
+            Arch::Vision { .. } => vec![16, 16, 3],
+            Arch::Lm { .. } => vec![SEQ],
+        }
+    }
+
+    fn y_shape(&self) -> Vec<usize> {
+        match self.arch {
+            Arch::Vision { .. } => vec![],
+            Arch::Lm { .. } => vec![SEQ],
+        }
+    }
+
+    fn smashed_shape(&self) -> Vec<usize> {
+        match self.arch {
+            Arch::Vision { q } => vec![q],
+            Arch::Lm { e, .. } => vec![SEQ, e],
+        }
+    }
+
+    fn init_theta_l(&self) -> Vec<f32> {
+        let (nc, na, _, _) = self.sizes();
+        match self.arch {
+            Arch::Vision { q } => {
+                let mut t = vec![0.0f32; nc + na];
+                for s in t.iter_mut().take(q) {
+                    *s = 2.0; // feature gains start at 2, biases/aux at 0
+                }
+                t
+            }
+            Arch::Lm { .. } => vec![0.0f32; nc + na],
+        }
+    }
+
+    fn init_theta_s(&self) -> Vec<f32> {
+        vec![0.0f32; self.sizes().2]
+    }
+
+    fn frozen_base(&self) -> Option<Vec<f32>> {
+        match self.arch {
+            Arch::Vision { .. } => None,
+            Arch::Lm { e, .. } => Some(
+                PerturbStream::new(fold_seed(0xBA5E, e as u32))
+                    .take_vec(VOCAB * e)
+                    .into_iter()
+                    .map(|v| v * 0.3)
+                    .collect(),
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// entry spec construction
+// ---------------------------------------------------------------------------
+
+fn t(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype,
+    }
+}
+
+fn entry_spec(def: &VDef, entry: &str, dir: &Path) -> EntrySpec {
+    let (nc, na, ns, nb) = def.sizes();
+    let nl = nc + na;
+    let b = def.batch;
+    let eb = def.eval_batch;
+    let is_lm = matches!(def.arch, Arch::Lm { .. });
+    let xdt = if is_lm { DType::I32 } else { DType::F32 };
+    let xsh: Vec<usize> = if is_lm { vec![SEQ] } else { vec![PIXELS] };
+    let ysh: Vec<usize> = if is_lm { vec![SEQ] } else { vec![] };
+    let smsh = def.smashed_shape();
+    let batched = |n: usize, per: &[usize]| -> Vec<usize> {
+        let mut s = vec![n];
+        s.extend_from_slice(per);
+        s
+    };
+
+    let mut inputs: Vec<TensorSpec> = Vec::new();
+    if nb > 0 {
+        inputs.push(t("base", &[nb], DType::F32));
+    }
+    let x = |n: usize| t("x", &batched(n, &xsh), xdt);
+    let y = |n: usize| t("y", &batched(n, &ysh), DType::I32);
+    let smashed = |name: &str| t(name, &batched(b, &smsh), DType::F32);
+    let outputs: Vec<TensorSpec>;
+    match entry {
+        "local_loss" => {
+            inputs.extend([t("theta_l", &[nl], DType::F32), x(b), y(b)]);
+            outputs = vec![t("loss", &[], DType::F32)];
+        }
+        "zo_step" => {
+            inputs.extend([
+                t("theta_l", &[nl], DType::F32),
+                x(b),
+                y(b),
+                t("seed", &[], DType::I32),
+                t("mu", &[], DType::F32),
+                t("lr", &[], DType::F32),
+                t("n_pert", &[], DType::I32),
+            ]);
+            outputs = vec![
+                t("theta_l", &[nl], DType::F32),
+                t("loss", &[], DType::F32),
+            ];
+        }
+        "fo_step" => {
+            inputs.extend([
+                t("theta_l", &[nl], DType::F32),
+                x(b),
+                y(b),
+                t("lr", &[], DType::F32),
+            ]);
+            outputs = vec![
+                t("theta_l", &[nl], DType::F32),
+                t("loss", &[], DType::F32),
+            ];
+        }
+        "client_fwd" => {
+            inputs.extend([t("theta_c", &[nc], DType::F32), x(b)]);
+            outputs = vec![smashed("smashed")];
+        }
+        "server_step" | "server_step_cutgrad" => {
+            inputs.extend([
+                t("theta_s", &[ns], DType::F32),
+                smashed("smashed"),
+                y(b),
+                t("lr", &[], DType::F32),
+            ]);
+            let mut outs = vec![
+                t("theta_s", &[ns], DType::F32),
+                t("loss", &[], DType::F32),
+            ];
+            if entry == "server_step_cutgrad" {
+                outs.push(smashed("g_smashed"));
+            }
+            outputs = outs;
+        }
+        "client_bp_step" => {
+            inputs.extend([
+                t("theta_c", &[nc], DType::F32),
+                x(b),
+                smashed("g_smashed"),
+                t("lr", &[], DType::F32),
+            ]);
+            outputs = vec![t("theta_c", &[nc], DType::F32)];
+        }
+        "aux_align" => {
+            inputs.extend([
+                t("theta_l", &[nl], DType::F32),
+                smashed("smashed"),
+                y(b),
+                smashed("g_smashed"),
+                t("lr", &[], DType::F32),
+            ]);
+            outputs = vec![t("theta_l", &[nl], DType::F32)];
+        }
+        "eval_full" => {
+            inputs.extend([
+                t("theta_c", &[nc], DType::F32),
+                t("theta_s", &[ns], DType::F32),
+                x(eb),
+                y(eb),
+            ]);
+            outputs = vec![
+                t("stat1", &[], DType::F32),
+                t("stat2", &[], DType::F32),
+            ];
+        }
+        "hvp" => {
+            inputs.extend([
+                t("theta_l", &[nl], DType::F32),
+                x(b),
+                y(b),
+                t("v", &[nl], DType::F32),
+            ]);
+            outputs = vec![t("hv", &[nl], DType::F32)];
+        }
+        other => panic!("unknown entry template {other}"),
+    }
+    EntrySpec {
+        name: entry.to_string(),
+        file: dir.join(format!("{entry}.native.json")),
+        inputs,
+        outputs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generation
+// ---------------------------------------------------------------------------
+
+fn write_blob(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+fn generate_into(dir: &Path) -> Result<()> {
+    let defs = defs();
+    let mut variants: BTreeMap<String, VariantSpec> = BTreeMap::new();
+
+    for def in &defs {
+        let vdir = dir.join(def.name);
+        std::fs::create_dir_all(&vdir)
+            .with_context(|| format!("creating {}", vdir.display()))?;
+        let (nc, na, ns, nb) = def.sizes();
+        write_blob(&vdir.join("init_theta_l.bin"), &def.init_theta_l())?;
+        write_blob(&vdir.join("init_theta_s.bin"), &def.init_theta_s())?;
+        let mut files = BTreeMap::new();
+        files.insert(
+            "init_theta_l".to_string(),
+            PathBuf::from("init_theta_l.bin"),
+        );
+        files.insert(
+            "init_theta_s".to_string(),
+            PathBuf::from("init_theta_s.bin"),
+        );
+        if let Some(base) = def.frozen_base() {
+            write_blob(&vdir.join("frozen_base.bin"), &base)?;
+            files.insert(
+                "frozen_base".to_string(),
+                PathBuf::from("frozen_base.bin"),
+            );
+        }
+
+        let mut entries = BTreeMap::new();
+        for entry in def.entry_names() {
+            let espec = entry_spec(def, entry, &vdir);
+            std::fs::write(
+                &espec.file,
+                format!(
+                    "{{\"engine\": \"{ENGINE_TAG}\", \"variant\": \"{}\", \
+                     \"entry\": \"{entry}\"}}\n",
+                    def.name
+                ),
+            )
+            .with_context(|| format!("writing {}", espec.file.display()))?;
+            entries.insert(entry.to_string(), espec);
+        }
+
+        variants.insert(
+            def.name.to_string(),
+            VariantSpec {
+                name: def.name.to_string(),
+                family: def.family().to_string(),
+                task: def.task().to_string(),
+                optimizer: "sgd".to_string(),
+                opt_state: 0,
+                batch: def.batch,
+                eval_batch: def.eval_batch,
+                x_shape: def.x_shape(),
+                y_shape: def.y_shape(),
+                smashed_shape: def.smashed_shape(),
+                size_client: nc,
+                size_aux: na,
+                size_server: ns,
+                size_base: nb,
+                cost: def.cost(),
+                entries,
+                files,
+                golden: BTreeMap::new(),
+                dir: vdir.clone(),
+            },
+        );
+    }
+
+    // Execute every entry once with the canonical golden inputs and record
+    // the digests — the same engine the tests run, so check_entry is a true
+    // end-to-end determinism check.
+    let pre = Manifest {
+        variants,
+        synth: Value::Null,
+        root: dir.to_path_buf(),
+    };
+    let engine = Engine::new(&pre)?;
+    let mut goldens: BTreeMap<String, BTreeMap<String, Vec<GoldenOutput>>> =
+        BTreeMap::new();
+    for (name, vspec) in &pre.variants {
+        let mut per_entry = BTreeMap::new();
+        for (ename, espec) in &vspec.entries {
+            let mut inputs = Vec::with_capacity(espec.inputs.len());
+            for (idx, spec) in espec.inputs.iter().enumerate() {
+                inputs.push(
+                    golden::golden_input_for(vspec, spec, idx, &vspec.task)
+                        .with_context(|| format!("{name}/{ename} input"))?,
+                );
+            }
+            let outs = engine
+                .execute(vspec, espec, &inputs)
+                .with_context(|| format!("golden run {name}/{ename}"))?;
+            let mut recs = Vec::with_capacity(outs.len());
+            for (out, ospec) in outs.iter().zip(&espec.outputs) {
+                let (head, sum, l2, _len) = golden::digest(out);
+                recs.push(GoldenOutput {
+                    shape: ospec.shape.clone(),
+                    head,
+                    sum,
+                    l2,
+                });
+            }
+            per_entry.insert(ename.clone(), recs);
+        }
+        goldens.insert(name.clone(), per_entry);
+    }
+
+    let manifest_json = render_manifest(&pre, &goldens);
+    std::fs::write(
+        dir.join("manifest.json"),
+        manifest_json.to_string_pretty(),
+    )
+    .context("writing manifest.json")?;
+    Ok(())
+}
+
+fn tensor_json(s: &TensorSpec) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(&s.name)),
+        (
+            "shape",
+            Value::Arr(s.shape.iter().map(|&d| Value::Num(d as f64)).collect()),
+        ),
+        (
+            "dtype",
+            Value::str(match s.dtype {
+                DType::F32 => "f32",
+                DType::I32 => "i32",
+            }),
+        ),
+    ])
+}
+
+fn render_manifest(
+    m: &Manifest,
+    goldens: &BTreeMap<String, BTreeMap<String, Vec<GoldenOutput>>>,
+) -> Value {
+    let mut vmap: BTreeMap<String, Value> = BTreeMap::new();
+    for (name, v) in &m.variants {
+        let usz = |n: usize| Value::Num(n as f64);
+        let shape = |s: &Vec<usize>| {
+            Value::Arr(s.iter().map(|&d| Value::Num(d as f64)).collect())
+        };
+        let c = &v.cost;
+        let cost = Value::obj(vec![
+            ("params_client", usz(c.params_client)),
+            ("params_aux", usz(c.params_aux)),
+            ("params_server", usz(c.params_server)),
+            ("act_cache_client", usz(c.act_cache_client)),
+            ("act_cache_aux", usz(c.act_cache_aux)),
+            ("act_cache_server", usz(c.act_cache_server)),
+            ("act_peak_client", usz(c.act_peak_client)),
+            ("act_peak_aux", usz(c.act_peak_aux)),
+            ("act_peak_server", usz(c.act_peak_server)),
+            ("flops_fwd_client", usz(c.flops_fwd_client)),
+            ("flops_fwd_aux", usz(c.flops_fwd_aux)),
+            ("flops_fwd_server", usz(c.flops_fwd_server)),
+            ("smashed_elems", usz(c.smashed_elems)),
+            ("target_elems", usz(c.target_elems)),
+        ]);
+        let entries: BTreeMap<String, Value> = v
+            .entries
+            .iter()
+            .map(|(en, e)| {
+                let fname = e
+                    .file
+                    .file_name()
+                    .map(|f| f.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                (
+                    en.clone(),
+                    Value::obj(vec![
+                        ("file", Value::str(&fname)),
+                        (
+                            "inputs",
+                            Value::Arr(
+                                e.inputs.iter().map(tensor_json).collect(),
+                            ),
+                        ),
+                        (
+                            "outputs",
+                            Value::Arr(
+                                e.outputs.iter().map(tensor_json).collect(),
+                            ),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        let files: BTreeMap<String, Value> = v
+            .files
+            .iter()
+            .map(|(k, p)| {
+                (k.clone(), Value::str(&p.to_string_lossy()))
+            })
+            .collect();
+        let golden: BTreeMap<String, Value> = goldens
+            .get(name)
+            .map(|per| {
+                per.iter()
+                    .map(|(en, recs)| {
+                        let outs: Vec<Value> = recs
+                            .iter()
+                            .map(|g| {
+                                Value::obj(vec![
+                                    ("shape", shape(&g.shape)),
+                                    ("head", Value::arr_f64(&g.head)),
+                                    ("sum", Value::Num(g.sum)),
+                                    ("l2", Value::Num(g.l2)),
+                                ])
+                            })
+                            .collect();
+                        (
+                            en.clone(),
+                            Value::obj(vec![("outputs", Value::Arr(outs))]),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        vmap.insert(
+            name.clone(),
+            Value::obj(vec![
+                ("family", Value::str(&v.family)),
+                ("task", Value::str(&v.task)),
+                ("optimizer", Value::str(&v.optimizer)),
+                ("opt_state", usz(v.opt_state)),
+                ("batch", usz(v.batch)),
+                ("eval_batch", usz(v.eval_batch)),
+                ("x_shape", shape(&v.x_shape)),
+                ("y_shape", shape(&v.y_shape)),
+                ("smashed_shape", shape(&v.smashed_shape)),
+                (
+                    "sizes",
+                    Value::obj(vec![
+                        ("client", usz(v.size_client)),
+                        ("aux", usz(v.size_aux)),
+                        ("server", usz(v.size_server)),
+                        ("base", usz(v.size_base)),
+                    ]),
+                ),
+                ("cost", cost),
+                ("entries", Value::Obj(entries)),
+                ("files", Value::Obj(files)),
+                ("golden", Value::Obj(golden)),
+            ]),
+        );
+    }
+
+    Value::obj(vec![
+        ("generated_by", Value::str(ENGINE_TAG)),
+        ("variants", Value::Obj(vmap)),
+        ("synth", synth_goldens()),
+    ])
+}
+
+/// Cross-generator pin points: digests of the shared deterministic streams,
+/// checked by tests/golden.rs against the live Rust generators.
+fn synth_goldens() -> Value {
+    use crate::data::{synth_text, synth_vision};
+    let labels: Vec<Value> = (0..32)
+        .map(|i| Value::Num(synth_vision::label(42, i) as f64))
+        .collect();
+    let img = synth_vision::image(42, 0);
+    let img_sum: f64 = img.iter().map(|&v| v as f64).sum();
+    let img_first: Vec<f64> =
+        img.iter().take(8).map(|&v| v as f64).collect();
+    let tokens: Vec<Value> = synth_text::batch(42, 0, 1)
+        .into_iter()
+        .take(SEQ)
+        .map(|t| Value::Num(t as f64))
+        .collect();
+    let gv: Vec<f64> = golden::golden_vec(8, 101)
+        .into_iter()
+        .map(|v| v as f64)
+        .collect();
+    Value::obj(vec![
+        ("mix64_42_0", Value::str(&mix64(42, 0).to_string())),
+        ("vision_labels_seed42", Value::Arr(labels)),
+        ("vision_img0_sum", Value::Num(img_sum)),
+        ("vision_img0_first", Value::arr_f64(&img_first)),
+        ("text_record0", Value::str(&synth_text::record(42, 0))),
+        ("text_tokens0", Value::Arr(tokens)),
+        ("golden_vec8_salt101", Value::arr_f64(&gv)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defs_cover_required_variants() {
+        let names: Vec<&str> = defs().iter().map(|d| d.name).collect();
+        for required in [
+            "cnn_c1",
+            "cnn_c2",
+            "gpt2nano_c1_a1",
+            "gpt2micro_c2_a1",
+            "gpt2nano_c1_a1_pallas",
+        ] {
+            assert!(names.contains(&required), "missing {required}");
+        }
+        assert!(names.len() >= 10);
+    }
+
+    #[test]
+    fn cnn_c2_lacks_locked_entries() {
+        let d = defs();
+        let c2 = d.iter().find(|d| d.name == "cnn_c2").unwrap();
+        assert!(!c2.entry_names().contains(&"server_step_cutgrad"));
+        let c1 = d.iter().find(|d| d.name == "cnn_c1").unwrap();
+        assert!(c1.entry_names().contains(&"server_step_cutgrad"));
+        assert!(c1.entry_names().contains(&"hvp"));
+    }
+
+    #[test]
+    fn sizes_are_consistent() {
+        for d in defs() {
+            let (nc, na, ns, nb) = d.sizes();
+            assert!(nc > 0 && na > 0 && ns > 0);
+            match d.arch {
+                Arch::Vision { q } => {
+                    assert_eq!(nc, 2 * q);
+                    assert_eq!(nb, 0);
+                }
+                Arch::Lm { e, aux } => {
+                    assert_eq!(nc, VOCAB * e);
+                    assert_eq!(na, aux.size(e));
+                    assert_eq!(nb, nc);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entry_specs_have_positive_shapes() {
+        for d in defs() {
+            for entry in d.entry_names() {
+                let e = entry_spec(&d, entry, Path::new("/tmp"));
+                assert!(!e.inputs.is_empty() && !e.outputs.is_empty());
+                for s in e.inputs.iter().chain(&e.outputs) {
+                    assert!(s.elems() > 0, "{}/{}: {}", d.name, entry, s.name);
+                }
+            }
+        }
+    }
+}

@@ -170,8 +170,11 @@ impl Manifest {
         }
     }
 
+    /// Load the default artifact set, generating it first when missing or
+    /// stale (see [`crate::runtime::artifacts`]).
     pub fn load_default() -> Result<Self> {
-        Self::load(&Self::default_path())
+        let dir = crate::runtime::artifacts::ensure_default()?;
+        Self::load(&dir)
     }
 
     pub fn load(root: &Path) -> Result<Self> {

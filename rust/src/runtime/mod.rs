@@ -1,22 +1,31 @@
-//! L3 runtime: load AOT HLO artifacts and execute them on PJRT CPU.
+//! L3 runtime: load artifact manifests and execute their entry points.
 //!
-//! One `Session` owns the PJRT client and a lazily-populated cache of
-//! compiled executables keyed by (variant, entry). Invocation marshals
-//! `TensorValue`s to `xla::Literal`s per the manifest's `TensorSpec`s,
-//! executes, and unpacks the returned tuple.
+//! One `Session` owns the artifact manifest and an execution engine.
+//! Invocation validates `TensorValue`s against the manifest's
+//! `TensorSpec`s, executes the entry, and returns the outputs.
 //!
-//! The flow (see /opt/xla-example reference):
-//!   HloModuleProto::from_text_file -> XlaComputation::from_proto
-//!   -> client.compile -> exe.execute -> Literal tuple.
+//! The default engine is the pure-Rust [`native`] reference backend
+//! (substrate S20): deterministic f32 math with counter-based random
+//! streams, bit-identical across runs and thread counts. The PJRT/XLA
+//! path this API was originally written for (HloModuleProto -> compile ->
+//! execute) needs the XLA toolchain, which is not in the offline vendor
+//! set; the `Session` surface is backend-agnostic so it can return behind
+//! a feature gate without touching callers.
+//!
+//! `Session` is `Sync`: the manifest and engine are immutable after
+//! construction and the runtime statistics sit behind a mutex, so the
+//! parallel round driver can invoke entries from worker threads
+//! concurrently.
 
+pub mod artifacts;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
 use anyhow::{bail, Context, Result};
-use manifest::{DType, Manifest, VariantSpec};
-use std::cell::RefCell;
+use manifest::{Manifest, VariantSpec};
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Mutex;
 use std::time::Instant;
 use tensor::TensorValue;
 
@@ -33,27 +42,28 @@ pub struct RuntimeStats {
 }
 
 pub struct Session {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables:
-        RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
+    engine: native::Engine,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Session {
     pub fn new(manifest: Manifest) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let t0 = Instant::now();
+        let engine =
+            native::Engine::new(&manifest).context("building native engine")?;
+        let build = t0.elapsed().as_secs_f64();
         log::debug!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
+            "native engine ready: {} variants in {build:.3}s",
+            manifest.variants.len()
         );
         Ok(Session {
-            client,
             manifest,
-            executables: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            engine,
+            stats: Mutex::new(RuntimeStats {
+                compile_seconds: build,
+                ..RuntimeStats::default()
+            }),
         })
     }
 
@@ -62,47 +72,21 @@ impl Session {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
         self.manifest.variant(name)
     }
 
-    /// Compile (or fetch cached) the executable for (variant, entry).
-    pub fn executable(
-        &self,
-        variant: &str,
-        entry: &str,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        let key = (variant.to_string(), entry.to_string());
-        if let Some(e) = self.executables.borrow().get(&key) {
-            return Ok(e.clone());
-        }
-        let vspec = self.manifest.variant(variant)?;
-        let espec = vspec.entry(entry)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&espec.file)
-            .with_context(|| format!("parsing {}", espec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {variant}/{entry}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        self.stats.borrow_mut().compile_seconds += dt;
-        log::debug!("compiled {variant}/{entry} in {dt:.2}s");
-        let rc = Rc::new(exe);
-        self.executables.borrow_mut().insert(key, rc.clone());
-        Ok(rc)
-    }
-
-    /// Pre-compile a set of entries (examples call this up-front so the
-    /// first training round isn't skewed by compile time).
+    /// Validate that the given entries exist for the variant (the AOT
+    /// backend eagerly compiled them here; the native engine is ready as
+    /// soon as the session is).
     pub fn warmup(&self, variant: &str, entries: &[&str]) -> Result<()> {
+        let v = self.manifest.variant(variant)?;
         for e in entries {
-            if self.manifest.variant(variant)?.entries.contains_key(*e) {
-                self.executable(variant, e)?;
+            if v.entries.contains_key(*e) {
+                self.engine.model(variant)?;
             }
         }
         Ok(())
@@ -124,113 +108,40 @@ impl Session {
                 inputs.len()
             );
         }
-        let exe = self.executable(variant, entry)?;
 
         let tm = Instant::now();
-        let mut literals = Vec::with_capacity(inputs.len());
         let mut bytes_in = 0u64;
         for (val, spec) in inputs.iter().zip(&espec.inputs) {
             val.check(spec)
                 .with_context(|| format!("{variant}/{entry}"))?;
-            literals.push(to_literal(val, spec)?);
             bytes_in += (val.len() * 4) as u64;
         }
-        let marshal1 = tm.elapsed().as_secs_f64();
+        let marshal = tm.elapsed().as_secs_f64();
 
         let te = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
+        let outs = self
+            .engine
+            .execute(vspec, espec, inputs)
             .with_context(|| format!("executing {variant}/{entry}"))?;
         let exec_dt = te.elapsed().as_secs_f64();
 
-        let tm2 = Instant::now();
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = tuple.to_tuple().context("untupling result")?;
-        if parts.len() != espec.outputs.len() {
+        if outs.len() != espec.outputs.len() {
             bail!(
                 "{variant}/{entry}: expected {} outputs, got {}",
                 espec.outputs.len(),
-                parts.len()
+                outs.len()
             );
         }
-        let mut outs = Vec::with_capacity(parts.len());
-        let mut bytes_out = 0u64;
-        for (lit, spec) in parts.into_iter().zip(&espec.outputs) {
-            let v = from_literal(&lit, spec)?;
-            bytes_out += (v.len() * 4) as u64;
-            outs.push(v);
-        }
-        let marshal2 = tm2.elapsed().as_secs_f64();
+        let bytes_out: u64 =
+            outs.iter().map(|v| (v.len() * 4) as u64).sum();
 
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().unwrap_or_else(|p| p.into_inner());
         st.invocations += 1;
-        st.exec_seconds += exec_dt;
-        st.marshal_seconds += marshal1 + marshal2;
+        st.exec_seconds += exec_dt.max(1e-9);
+        st.marshal_seconds += marshal;
         st.bytes_in += bytes_in;
         st.bytes_out += bytes_out;
         Ok(outs)
-    }
-}
-
-fn to_literal(
-    val: &TensorValue,
-    spec: &manifest::TensorSpec,
-) -> Result<xla::Literal> {
-    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-    let lit = match val {
-        TensorValue::ScalarF32(s) => xla::Literal::scalar(*s),
-        TensorValue::ScalarI32(s) => xla::Literal::scalar(*s),
-        TensorValue::F32(v) => {
-            let l = xla::Literal::vec1(v.as_slice());
-            if spec.shape.len() == 1 {
-                l
-            } else {
-                l.reshape(&dims).context("reshape f32 input")?
-            }
-        }
-        TensorValue::I32(v) => {
-            let l = xla::Literal::vec1(v.as_slice());
-            if spec.shape.len() == 1 {
-                l
-            } else {
-                l.reshape(&dims).context("reshape i32 input")?
-            }
-        }
-    };
-    Ok(lit)
-}
-
-fn from_literal(
-    lit: &xla::Literal,
-    spec: &manifest::TensorSpec,
-) -> Result<TensorValue> {
-    match spec.dtype {
-        DType::F32 => {
-            if spec.shape.is_empty() {
-                Ok(TensorValue::ScalarF32(
-                    lit.get_first_element::<f32>()
-                        .context("scalar f32 output")?,
-                ))
-            } else {
-                Ok(TensorValue::F32(
-                    lit.to_vec::<f32>().context("f32 output")?,
-                ))
-            }
-        }
-        DType::I32 => {
-            if spec.shape.is_empty() {
-                Ok(TensorValue::ScalarI32(
-                    lit.get_first_element::<i32>()
-                        .context("scalar i32 output")?,
-                ))
-            } else {
-                Ok(TensorValue::I32(
-                    lit.to_vec::<i32>().context("i32 output")?,
-                ))
-            }
-        }
     }
 }
 

@@ -1,0 +1,348 @@
+//! Native reference execution engine (substrate S20).
+//!
+//! Executes the manifest's entry points with pure, deterministic Rust —
+//! the same split-model semantics the AOT HLO artifacts implement, with a
+//! fixed f32 evaluation order so results are bit-identical across runs,
+//! thread counts, and scheduling orders. This is the default backend; a
+//! PJRT-backed session can slot in behind the same [`crate::runtime::Session`]
+//! API when the XLA toolchain is available (it is not part of the offline
+//! vendor set).
+//!
+//! The engine is stateless per call and `Sync`: every model's fixed state
+//! (the vision feature banks) is built once at session construction, so
+//! worker threads can invoke entries concurrently with no locking on the
+//! hot path.
+
+pub mod lm;
+pub mod vision;
+
+use crate::runtime::manifest::{EntrySpec, Manifest, VariantSpec};
+use crate::runtime::tensor::TensorValue;
+use anyhow::{bail, Context, Result};
+use lm::{AuxKind, LmModel};
+use std::collections::{BTreeMap, HashMap};
+use vision::VisionModel;
+
+pub enum Model {
+    Vision(VisionModel),
+    Lm(LmModel),
+}
+
+pub struct Engine {
+    models: BTreeMap<String, Model>,
+}
+
+impl Engine {
+    /// Build per-variant models from the manifest's size contract.
+    pub fn new(manifest: &Manifest) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for (name, v) in &manifest.variants {
+            models.insert(name.clone(), build_model(v)?);
+        }
+        Ok(Engine { models })
+    }
+
+    pub fn model(&self, variant: &str) -> Result<&Model> {
+        self.models
+            .get(variant)
+            .with_context(|| format!("no native model for variant {variant}"))
+    }
+
+    /// Execute one entry. Inputs are positional per `espec.inputs`; outputs
+    /// are returned positional per `espec.outputs`.
+    pub fn execute(
+        &self,
+        vspec: &VariantSpec,
+        espec: &EntrySpec,
+        inputs: &[TensorValue],
+    ) -> Result<Vec<TensorValue>> {
+        let model = self.model(&vspec.name)?;
+        let args: HashMap<&str, &TensorValue> = espec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(s, v)| (s.name.as_str(), v))
+            .collect();
+        let mut outs = match model {
+            Model::Vision(m) => exec_vision(m, &espec.name, &args)?,
+            Model::Lm(m) => exec_lm(m, vspec, &espec.name, &args)?,
+        };
+        let mut ordered = Vec::with_capacity(espec.outputs.len());
+        for spec in &espec.outputs {
+            let v = outs.remove(spec.name.as_str()).with_context(|| {
+                format!("{}/{}: engine missing output {}", vspec.name, espec.name, spec.name)
+            })?;
+            ordered.push(v);
+        }
+        Ok(ordered)
+    }
+}
+
+fn build_model(v: &VariantSpec) -> Result<Model> {
+    if v.task == "vision" {
+        let q = v.size_client / 2;
+        if q == 0 || v.size_client != 2 * q {
+            bail!("variant {}: bad vision client size {}", v.name, v.size_client);
+        }
+        Ok(Model::Vision(VisionModel::new(q)))
+    } else {
+        let e = v.size_client / lm::VOCAB;
+        if e == 0 || v.size_client != e * lm::VOCAB {
+            bail!("variant {}: bad lm client size {}", v.name, v.size_client);
+        }
+        let aux = if v.size_aux == AuxKind::Bias.size(e) {
+            AuxKind::Bias
+        } else if v.size_aux == AuxKind::Linear.size(e) {
+            AuxKind::Linear
+        } else {
+            // size_aux = e*k + k + k*96 + 96  =>  k = (size_aux-96)/(e+97)
+            let k = (v.size_aux - lm::VOCAB) / (e + lm::VOCAB + 1);
+            if AuxKind::Mlp(k).size(e) != v.size_aux {
+                bail!("variant {}: unresolvable aux size {}", v.name, v.size_aux);
+            }
+            AuxKind::Mlp(k)
+        };
+        Ok(Model::Lm(LmModel::new(e, aux)))
+    }
+}
+
+fn f32_arg<'a>(
+    args: &'a HashMap<&str, &TensorValue>,
+    name: &str,
+) -> Result<&'a [f32]> {
+    args.get(name)
+        .with_context(|| format!("missing input {name}"))?
+        .as_f32()
+}
+
+fn i32_arg<'a>(
+    args: &'a HashMap<&str, &TensorValue>,
+    name: &str,
+) -> Result<&'a [i32]> {
+    match args.get(name).with_context(|| format!("missing input {name}"))? {
+        TensorValue::I32(v) => Ok(v),
+        other => bail!("input {name}: expected i32, got {:?}", other.dtype()),
+    }
+}
+
+fn scalar_f32(args: &HashMap<&str, &TensorValue>, name: &str) -> Result<f32> {
+    args.get(name)
+        .with_context(|| format!("missing input {name}"))?
+        .scalar_f32()
+}
+
+fn scalar_i32(args: &HashMap<&str, &TensorValue>, name: &str) -> Result<i32> {
+    match args.get(name).with_context(|| format!("missing input {name}"))? {
+        TensorValue::ScalarI32(s) => Ok(*s),
+        TensorValue::I32(v) if v.len() == 1 => Ok(v[0]),
+        other => bail!("input {name}: expected i32 scalar, got len {}", other.len()),
+    }
+}
+
+fn exec_vision(
+    m: &VisionModel,
+    entry: &str,
+    args: &HashMap<&str, &TensorValue>,
+) -> Result<HashMap<&'static str, TensorValue>> {
+    let mut outs: HashMap<&'static str, TensorValue> = HashMap::new();
+    match entry {
+        "local_loss" => {
+            let loss = m.local_loss(
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "x")?,
+                i32_arg(args, "y")?,
+            );
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "zo_step" => {
+            let (theta, loss) = m.zo_step(
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "x")?,
+                i32_arg(args, "y")?,
+                scalar_i32(args, "seed")?,
+                scalar_f32(args, "mu")?,
+                scalar_f32(args, "lr")?,
+                scalar_i32(args, "n_pert")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "fo_step" => {
+            let (theta, loss) = m.fo_step(
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "x")?,
+                i32_arg(args, "y")?,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "client_fwd" => {
+            let smashed =
+                m.client_fwd(f32_arg(args, "theta_c")?, f32_arg(args, "x")?);
+            outs.insert("smashed", TensorValue::F32(smashed));
+        }
+        "server_step" | "server_step_cutgrad" => {
+            let want = entry == "server_step_cutgrad";
+            let (theta, loss, cut) = m.server_step(
+                f32_arg(args, "theta_s")?,
+                f32_arg(args, "smashed")?,
+                i32_arg(args, "y")?,
+                scalar_f32(args, "lr")?,
+                want,
+            );
+            outs.insert("theta_s", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+            if let Some(g) = cut {
+                outs.insert("g_smashed", TensorValue::F32(g));
+            }
+        }
+        "client_bp_step" => {
+            let theta = m.client_bp_step(
+                f32_arg(args, "theta_c")?,
+                f32_arg(args, "x")?,
+                f32_arg(args, "g_smashed")?,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_c", TensorValue::F32(theta));
+        }
+        "aux_align" => {
+            let theta = m.aux_align(
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "smashed")?,
+                i32_arg(args, "y")?,
+                f32_arg(args, "g_smashed")?,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+        }
+        "eval_full" => {
+            let (s1, s2) = m.eval(
+                f32_arg(args, "theta_c")?,
+                f32_arg(args, "theta_s")?,
+                f32_arg(args, "x")?,
+                i32_arg(args, "y")?,
+            );
+            outs.insert("stat1", TensorValue::ScalarF32(s1));
+            outs.insert("stat2", TensorValue::ScalarF32(s2));
+        }
+        "hvp" => {
+            let hv = m.hvp(
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "x")?,
+                i32_arg(args, "y")?,
+                f32_arg(args, "v")?,
+            );
+            outs.insert("hv", TensorValue::F32(hv));
+        }
+        other => bail!("vision model has no entry {other}"),
+    }
+    Ok(outs)
+}
+
+fn exec_lm(
+    m: &LmModel,
+    vspec: &VariantSpec,
+    entry: &str,
+    args: &HashMap<&str, &TensorValue>,
+) -> Result<HashMap<&'static str, TensorValue>> {
+    let seq: usize = vspec.x_shape.iter().product::<usize>().max(1);
+    let base = f32_arg(args, "base")?;
+    let mut outs: HashMap<&'static str, TensorValue> = HashMap::new();
+    match entry {
+        "local_loss" => {
+            let loss = m.local_loss(
+                base,
+                f32_arg(args, "theta_l")?,
+                i32_arg(args, "x")?,
+                seq,
+            );
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "zo_step" => {
+            let (theta, loss) = m.zo_step(
+                base,
+                f32_arg(args, "theta_l")?,
+                i32_arg(args, "x")?,
+                seq,
+                scalar_i32(args, "seed")?,
+                scalar_f32(args, "mu")?,
+                scalar_f32(args, "lr")?,
+                scalar_i32(args, "n_pert")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "fo_step" => {
+            let (theta, loss) = m.fo_step(
+                base,
+                f32_arg(args, "theta_l")?,
+                i32_arg(args, "x")?,
+                seq,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+        }
+        "client_fwd" => {
+            let smashed = m.client_fwd(
+                base,
+                f32_arg(args, "theta_c")?,
+                i32_arg(args, "x")?,
+            );
+            outs.insert("smashed", TensorValue::F32(smashed));
+        }
+        "server_step" | "server_step_cutgrad" => {
+            let want = entry == "server_step_cutgrad";
+            let (theta, loss, cut) = m.server_step(
+                f32_arg(args, "theta_s")?,
+                f32_arg(args, "smashed")?,
+                i32_arg(args, "y")?,
+                seq,
+                scalar_f32(args, "lr")?,
+                want,
+            );
+            outs.insert("theta_s", TensorValue::F32(theta));
+            outs.insert("loss", TensorValue::ScalarF32(loss));
+            if let Some(g) = cut {
+                outs.insert("g_smashed", TensorValue::F32(g));
+            }
+        }
+        "client_bp_step" => {
+            let theta = m.client_bp_step(
+                base,
+                f32_arg(args, "theta_c")?,
+                i32_arg(args, "x")?,
+                f32_arg(args, "g_smashed")?,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_c", TensorValue::F32(theta));
+        }
+        "aux_align" => {
+            // round driver sends the token batch as `y` for LM tasks
+            let theta = m.aux_align(
+                base,
+                f32_arg(args, "theta_l")?,
+                f32_arg(args, "smashed")?,
+                i32_arg(args, "y")?,
+                seq,
+                f32_arg(args, "g_smashed")?,
+                scalar_f32(args, "lr")?,
+            );
+            outs.insert("theta_l", TensorValue::F32(theta));
+        }
+        "eval_full" => {
+            let (s1, s2) = m.eval(
+                base,
+                f32_arg(args, "theta_c")?,
+                f32_arg(args, "theta_s")?,
+                i32_arg(args, "x")?,
+                seq,
+            );
+            outs.insert("stat1", TensorValue::ScalarF32(s1));
+            outs.insert("stat2", TensorValue::ScalarF32(s2));
+        }
+        other => bail!("lm model has no entry {other}"),
+    }
+    Ok(outs)
+}

@@ -1,0 +1,632 @@
+//! Native reference model for the vision (`cnn_*`) variants.
+//!
+//! Mirrors the split architecture the AOT artifacts implement, in pure
+//! deterministic Rust (fixed f32 evaluation order — no reassociation):
+//!
+//! * **client** — a fixed Gabor-energy feature bank (quadrature cos/sin
+//!   templates over the SynthCIFAR grating frequencies; phase-invariant,
+//!   which is what makes the random-phase data learnable at all) followed
+//!   by a trainable per-feature affine: `h_j = f_j·s_j + b_j` with
+//!   `f_j = tanh(((c_j·x)² + (s_j·x)²)/Γ)`. θ_c = [s(q), b(q)].
+//! * **aux head** — trainable linear map q → 10 (θ_a) for the client-local
+//!   loss (HERON's ZO objective, Eq. 6).
+//! * **server head** — same shape (θ_s), trained with FO on uploaded
+//!   smashed batches (Eq. 7).
+//!
+//! The local/server losses are `LOSS_SCALE · CE_mean`; the scale is part of
+//! the model definition (it sets the effective step size of both the ZO
+//! estimator and the FO updates under the configured learning rates).
+
+use crate::zo::stream::{fold_seed, PerturbStream};
+
+pub const CLASSES: usize = 10;
+pub const PIXELS: usize = 768; // 16 x 16 x 3
+const GAMMA: f32 = 24.0;
+const LOSS_SCALE: f32 = 8.0;
+const HVP_EPS: f32 = 1e-3;
+const GRID_H: usize = 16;
+const GRID_W: usize = 16;
+const CHANNELS: usize = 3;
+
+pub struct VisionModel {
+    pub q: usize,
+    /// cos templates, q x PIXELS, row-major, L2-normalized
+    tc: Vec<f32>,
+    /// sin templates, q x PIXELS
+    ts: Vec<f32>,
+}
+
+impl VisionModel {
+    /// Build the deterministic feature bank: one (fu, fv, tint) grating per
+    /// feature, enumerated over the same grid the SynthCIFAR classes use.
+    pub fn new(q: usize) -> Self {
+        let mut tc = vec![0.0f32; q * PIXELS];
+        let mut ts = vec![0.0f32; q * PIXELS];
+        let norm = ((PIXELS / 2) as f64).sqrt();
+        let tau = std::f64::consts::TAU;
+        let mut combos = Vec::with_capacity(36);
+        for fu in 1..=3u32 {
+            for fv in 1..=3u32 {
+                for tint_i in 0..4u32 {
+                    combos.push((fu, fv, tint_i));
+                }
+            }
+        }
+        for j in 0..q {
+            let (fu, fv, tint_i) = combos[j % combos.len()];
+            let tint = tint_i as f64 * (tau / 12.0);
+            let mut p = 0usize;
+            for h in 0..GRID_H {
+                for w in 0..GRID_W {
+                    let arg = tau
+                        * (fu as f64 * h as f64 / GRID_H as f64
+                            + fv as f64 * w as f64 / GRID_W as f64);
+                    for c in 0..CHANNELS {
+                        let phase = arg + c as f64 * tint;
+                        tc[j * PIXELS + p] = (phase.cos() / norm) as f32;
+                        ts[j * PIXELS + p] = (phase.sin() / norm) as f32;
+                        p += 1;
+                    }
+                }
+            }
+        }
+        VisionModel { q, tc, ts }
+    }
+
+    pub fn nc(&self) -> usize {
+        2 * self.q
+    }
+
+    pub fn na(&self) -> usize {
+        self.q * CLASSES + CLASSES
+    }
+
+    pub fn nl(&self) -> usize {
+        self.nc() + self.na()
+    }
+
+    pub fn ns(&self) -> usize {
+        self.q * CLASSES + CLASSES
+    }
+
+    /// Phase-invariant energy features: batch x q.
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let batch = x.len() / PIXELS;
+        let mut f = vec![0.0f32; batch * self.q];
+        for b in 0..batch {
+            let xb = &x[b * PIXELS..(b + 1) * PIXELS];
+            for j in 0..self.q {
+                let tc = &self.tc[j * PIXELS..(j + 1) * PIXELS];
+                let ts = &self.ts[j * PIXELS..(j + 1) * PIXELS];
+                let mut zc = 0.0f32;
+                let mut zs = 0.0f32;
+                for p in 0..PIXELS {
+                    zc += tc[p] * xb[p];
+                    zs += ts[p] * xb[p];
+                }
+                f[b * self.q + j] = ((zc * zc + zs * zs) / GAMMA).tanh();
+            }
+        }
+        f
+    }
+
+    /// h = f * s + b over a feature batch.
+    fn client_apply(&self, theta_c: &[f32], f: &[f32]) -> Vec<f32> {
+        let batch = f.len() / self.q;
+        let (s, b) = theta_c.split_at(self.q);
+        let mut h = vec![0.0f32; batch * self.q];
+        for i in 0..batch {
+            for j in 0..self.q {
+                h[i * self.q + j] = f[i * self.q + j] * s[j] + b[j];
+            }
+        }
+        h
+    }
+
+    pub fn client_fwd(&self, theta_c: &[f32], x: &[f32]) -> Vec<f32> {
+        let f = self.features(x);
+        self.client_apply(theta_c, &f)
+    }
+
+    /// Linear head logits: batch x CLASSES from batch x q.
+    fn head(&self, w: &[f32], h: &[f32]) -> Vec<f32> {
+        let batch = h.len() / self.q;
+        let (wm, wb) = w.split_at(self.q * CLASSES);
+        let mut logits = vec![0.0f32; batch * CLASSES];
+        for b in 0..batch {
+            let hb = &h[b * self.q..(b + 1) * self.q];
+            let lb = &mut logits[b * CLASSES..(b + 1) * CLASSES];
+            lb.copy_from_slice(wb);
+            for j in 0..self.q {
+                let hj = hb[j];
+                let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    lb[c] += hj * row[c];
+                }
+            }
+        }
+        logits
+    }
+
+    /// Mean CE (unscaled) and the batch-mean dlogits (p - onehot)/B.
+    fn ce(&self, logits: &[f32], y: &[i32]) -> (f64, Vec<f32>) {
+        let batch = y.len();
+        let mut loss = 0.0f64;
+        let mut d = vec![0.0f32; batch * CLASSES];
+        for b in 0..batch {
+            let lb = &logits[b * CLASSES..(b + 1) * CLASSES];
+            let mut mx = f32::NEG_INFINITY;
+            for &v in lb {
+                mx = mx.max(v);
+            }
+            let mut se = 0.0f32;
+            for &v in lb {
+                se += (v - mx).exp();
+            }
+            let lse = mx + se.ln();
+            let yi = (y[b].clamp(0, CLASSES as i32 - 1)) as usize;
+            loss += (lse - lb[yi]) as f64;
+            let db = &mut d[b * CLASSES..(b + 1) * CLASSES];
+            for c in 0..CLASSES {
+                db[c] = (lb[c] - lse).exp() / batch as f32;
+            }
+            db[yi] -= 1.0 / batch as f32;
+        }
+        (loss / batch as f64, d)
+    }
+
+    fn loss_from_features(&self, theta_l: &[f32], f: &[f32], y: &[i32]) -> f32 {
+        let h = self.client_apply(&theta_l[..self.nc()], f);
+        let logits = self.head(&theta_l[self.nc()..], &h);
+        let (l, _) = self.ce(&logits, y);
+        LOSS_SCALE * l as f32
+    }
+
+    pub fn local_loss(&self, theta_l: &[f32], x: &[f32], y: &[i32]) -> f32 {
+        let f = self.features(x);
+        self.loss_from_features(theta_l, &f, y)
+    }
+
+    /// Analytic gradient of the scaled local loss wrt θ_l.
+    pub fn local_grad(&self, theta_l: &[f32], f: &[f32], y: &[i32]) -> (f32, Vec<f32>) {
+        let q = self.q;
+        let nc = self.nc();
+        let batch = y.len();
+        let h = self.client_apply(&theta_l[..nc], f);
+        let logits = self.head(&theta_l[nc..], &h);
+        let (loss, d) = self.ce(&logits, y);
+        let wm = &theta_l[nc..nc + q * CLASSES];
+        let mut g = vec![0.0f32; theta_l.len()];
+        // head grads: gW[j,c] = sum_b h[b,j] d[b,c]; gb[c] = sum_b d[b,c]
+        for b in 0..batch {
+            let hb = &h[b * q..(b + 1) * q];
+            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            for j in 0..q {
+                let gj = &mut g[nc + j * CLASSES..nc + (j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    gj[c] += hb[j] * db[c];
+                }
+            }
+            let gb = &mut g[nc + q * CLASSES..];
+            for c in 0..CLASSES {
+                gb[c] += db[c];
+            }
+        }
+        // client grads through gh = d W^T
+        for b in 0..batch {
+            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            let fb = &f[b * q..(b + 1) * q];
+            for j in 0..q {
+                let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                let mut gh = 0.0f32;
+                for c in 0..CLASSES {
+                    gh += db[c] * row[c];
+                }
+                g[j] += gh * fb[j]; // d/ds
+                g[q + j] += gh; // d/db
+            }
+        }
+        for v in &mut g {
+            *v *= LOSS_SCALE;
+        }
+        (LOSS_SCALE * loss as f32, g)
+    }
+
+    /// One FO step on θ_l; returns (θ_l', loss at the pre-update point).
+    pub fn fo_step(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> (Vec<f32>, f32) {
+        let f = self.features(x);
+        let (loss, g) = self.local_grad(theta_l, &f, y);
+        let mut th = theta_l.to_vec();
+        for i in 0..th.len() {
+            th[i] -= lr * g[i];
+        }
+        (th, loss)
+    }
+
+    /// One two-point ZO step (Eq. 6) with `n_pert` probes; the perturbation
+    /// stream is counter-based, so results are independent of scheduling.
+    pub fn zo_step(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        seed: i32,
+        mu: f32,
+        lr: f32,
+        n_pert: i32,
+    ) -> (Vec<f32>, f32) {
+        let f = self.features(x);
+        let d = theta_l.len();
+        let base = self.loss_from_features(theta_l, &f, y);
+        let n_pert = n_pert.max(1) as usize;
+        let mut delta = vec![0.0f32; d];
+        let mut pert = vec![0.0f32; d];
+        for k in 0..n_pert {
+            let u = PerturbStream::new(fold_seed(seed as u32, k as u32))
+                .take_vec(d);
+            for i in 0..d {
+                pert[i] = theta_l[i] + mu * u[i];
+            }
+            let lp = self.loss_from_features(&pert, &f, y);
+            let gscale = (lp - base) / mu * (lr / n_pert as f32);
+            for i in 0..d {
+                delta[i] -= gscale * u[i];
+            }
+        }
+        let mut th = theta_l.to_vec();
+        for i in 0..d {
+            th[i] += delta[i];
+        }
+        (th, base)
+    }
+
+    /// Server FO update on an uploaded smashed batch (Eq. 7). Returns
+    /// (θ_s', loss, optional cut gradient dL/d smashed).
+    pub fn server_step(
+        &self,
+        theta_s: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        lr: f32,
+        want_cutgrad: bool,
+    ) -> (Vec<f32>, f32, Option<Vec<f32>>) {
+        let q = self.q;
+        let batch = y.len();
+        let logits = self.head(theta_s, smashed);
+        let (loss, d) = self.ce(&logits, y);
+        let mut th = theta_s.to_vec();
+        for b in 0..batch {
+            let hb = &smashed[b * q..(b + 1) * q];
+            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            for j in 0..q {
+                let row = &mut th[j * CLASSES..(j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    row[c] -= lr * LOSS_SCALE * hb[j] * db[c];
+                }
+            }
+            let off = q * CLASSES;
+            for c in 0..CLASSES {
+                th[off + c] -= lr * LOSS_SCALE * db[c];
+            }
+        }
+        let cut = if want_cutgrad {
+            let wm = &theta_s[..q * CLASSES];
+            let mut g = vec![0.0f32; batch * q];
+            for b in 0..batch {
+                let db = &d[b * CLASSES..(b + 1) * CLASSES];
+                for j in 0..q {
+                    let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                    let mut s = 0.0f32;
+                    for c in 0..CLASSES {
+                        s += db[c] * row[c];
+                    }
+                    g[b * q + j] = LOSS_SCALE * s;
+                }
+            }
+            Some(g)
+        } else {
+            None
+        };
+        (th, LOSS_SCALE * loss as f32, cut)
+    }
+
+    /// Client backprop step from a relayed cut gradient (SFLV1/V2).
+    pub fn client_bp_step(
+        &self,
+        theta_c: &[f32],
+        x: &[f32],
+        g_smashed: &[f32],
+        lr: f32,
+    ) -> Vec<f32> {
+        let q = self.q;
+        let f = self.features(x);
+        let batch = f.len() / q;
+        let mut th = theta_c.to_vec();
+        for b in 0..batch {
+            let gb = &g_smashed[b * q..(b + 1) * q];
+            let fb = &f[b * q..(b + 1) * q];
+            for j in 0..q {
+                th[j] -= lr * gb[j] * fb[j];
+                th[q + j] -= lr * gb[j];
+            }
+        }
+        th
+    }
+
+    /// FSL-SAGE aux alignment: one Gauss-Newton-style step moving the aux
+    /// head's cut gradient toward the server's (δ̂ frozen).
+    pub fn aux_align(
+        &self,
+        theta_l: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+    ) -> Vec<f32> {
+        let q = self.q;
+        let nc = self.nc();
+        let batch = y.len();
+        let logits = self.head(&theta_l[nc..], smashed);
+        let (_, d) = self.ce(&logits, y);
+        let wm = &theta_l[nc..nc + q * CLASSES];
+        // g_aux[b,j] = LOSS_SCALE * sum_c d[b,c] W[j,c]
+        let mut th = theta_l.to_vec();
+        for b in 0..batch {
+            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            let gs = &g_smashed[b * q..(b + 1) * q];
+            for j in 0..q {
+                let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                let mut ga = 0.0f32;
+                for c in 0..CLASSES {
+                    ga += db[c] * row[c];
+                }
+                let diff = LOSS_SCALE * ga - gs[j];
+                let out = &mut th[nc + j * CLASSES..nc + (j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    out[c] -= lr * diff * LOSS_SCALE * db[c];
+                }
+            }
+        }
+        th
+    }
+
+    /// Assembled-model evaluation: (correct count, total) on a batch.
+    pub fn eval(
+        &self,
+        theta_c: &[f32],
+        theta_s: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> (f32, f32) {
+        let h = self.client_fwd(theta_c, x);
+        let logits = self.head(theta_s, &h);
+        let batch = y.len();
+        let mut correct = 0u32;
+        for b in 0..batch {
+            let lb = &logits[b * CLASSES..(b + 1) * CLASSES];
+            let mut arg = 0usize;
+            for c in 1..CLASSES {
+                if lb[c] > lb[arg] {
+                    arg = c;
+                }
+            }
+            if arg as i32 == y[b] {
+                correct += 1;
+            }
+        }
+        (correct as f32, batch as f32)
+    }
+
+    /// Hessian-vector product of the scaled local loss via central finite
+    /// differences of the analytic gradient (symmetric to O(ε²)).
+    pub fn hvp(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        v: &[f32],
+    ) -> Vec<f32> {
+        let f = self.features(x);
+        let d = theta_l.len();
+        let mut plus = theta_l.to_vec();
+        let mut minus = theta_l.to_vec();
+        for i in 0..d {
+            plus[i] += HVP_EPS * v[i];
+            minus[i] -= HVP_EPS * v[i];
+        }
+        let (_, gp) = self.local_grad(&plus, &f, y);
+        let (_, gm) = self.local_grad(&minus, &f, y);
+        let mut hv = vec![0.0f32; d];
+        for i in 0..d {
+            hv[i] = (gp[i] - gm[i]) / (2.0 * HVP_EPS);
+        }
+        hv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_vision;
+
+    fn model() -> VisionModel {
+        VisionModel::new(36)
+    }
+
+    fn batch(n: usize) -> (Vec<f32>, Vec<i32>) {
+        synth_vision::batch(99, 0, n)
+    }
+
+    fn init_theta(m: &VisionModel) -> Vec<f32> {
+        let mut t = vec![0.0f32; m.nl()];
+        for j in 0..m.q {
+            t[j] = 2.0;
+        }
+        t
+    }
+
+    #[test]
+    fn features_are_phase_invariant_and_informative() {
+        let m = model();
+        let (x, y) = batch(64);
+        let f = m.features(&x);
+        // same-class feature vectors should be far more similar than the
+        // raw pixels (which are decorrelated by the random phase)
+        let mut same = 0.0f64;
+        let mut diff = 0.0f64;
+        let (mut ns, mut nd) = (0, 0);
+        for a in 0..16 {
+            for b in (a + 1)..16 {
+                let dist: f64 = (0..m.q)
+                    .map(|j| {
+                        let d = f[a * m.q + j] - f[b * m.q + j];
+                        (d * d) as f64
+                    })
+                    .sum();
+                if y[a] == y[b] {
+                    same += dist;
+                    ns += 1;
+                } else {
+                    diff += dist;
+                    nd += 1;
+                }
+            }
+        }
+        if ns > 0 && nd > 0 {
+            assert!(same / ns as f64 <= diff / nd as f64 * 0.8);
+        }
+    }
+
+    #[test]
+    fn fo_step_descends() {
+        let m = model();
+        let (x, y) = batch(32);
+        let mut th = init_theta(&m);
+        let l0 = m.local_loss(&th, &x, &y);
+        for _ in 0..5 {
+            let (t2, _) = m.fo_step(&th, &x, &y, 2e-3);
+            th = t2;
+        }
+        let l1 = m.local_loss(&th, &x, &y);
+        assert!(l1 < l0, "fo did not descend: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn zo_step_deterministic_and_seed_sensitive() {
+        let m = model();
+        let (x, y) = batch(32);
+        let th = init_theta(&m);
+        let (a, la) = m.zo_step(&th, &x, &y, 7, 1e-2, 1e-3, 1);
+        let (b, lb) = m.zo_step(&th, &x, &y, 7, 1e-2, 1e-3, 1);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (c, _) = m.zo_step(&th, &x, &y, 8, 1e-2, 1e-3, 1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn analytic_grad_matches_directional_fd() {
+        let m = model();
+        let (x, y) = batch(16);
+        let th = init_theta(&m);
+        let f = m.features(&x);
+        let (_, g) = m.local_grad(&th, &f, &y);
+        // directional derivative along a dense direction
+        let dir: Vec<f32> = (0..th.len())
+            .map(|i| ((i as f32 * 0.7).sin()) * 0.5)
+            .collect();
+        let eps = 1e-3f32;
+        let mut tp = th.clone();
+        let mut tm = th.clone();
+        for i in 0..th.len() {
+            tp[i] += eps * dir[i];
+            tm[i] -= eps * dir[i];
+        }
+        let fd = (m.local_loss(&tp, &x, &y) - m.local_loss(&tm, &x, &y))
+            / (2.0 * eps);
+        let an: f64 = g
+            .iter()
+            .zip(&dir)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!(
+            (fd as f64 - an).abs() < 0.05 * an.abs().max(0.1),
+            "fd {fd} vs analytic {an}"
+        );
+    }
+
+    #[test]
+    fn server_step_reduces_its_batch_loss() {
+        let m = model();
+        let (x, y) = batch(32);
+        let th_c = init_theta(&m)[..m.nc()].to_vec();
+        let h = m.client_fwd(&th_c, &x);
+        let mut ts = vec![0.0f32; m.ns()];
+        let (_, l0, _) = m.server_step(&ts, &h, &y, 0.0, false);
+        for _ in 0..5 {
+            let (t2, _, _) = m.server_step(&ts, &h, &y, 2e-3, false);
+            ts = t2;
+        }
+        let (_, l1, _) = m.server_step(&ts, &h, &y, 0.0, false);
+        assert!(l1 < l0, "server did not descend: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn cutgrad_shape_and_effect() {
+        let m = model();
+        let (x, y) = batch(8);
+        let th_c = init_theta(&m)[..m.nc()].to_vec();
+        let h = m.client_fwd(&th_c, &x);
+        // a few warm-up server steps so W != 0 and the cut gradient is live
+        let mut ts = vec![0.0f32; m.ns()];
+        for _ in 0..3 {
+            ts = m.server_step(&ts, &h, &y, 1e-2, false).0;
+        }
+        let (_, _, g) = m.server_step(&ts, &h, &y, 1e-2, true);
+        let g = g.unwrap();
+        assert_eq!(g.len(), 8 * m.q);
+        assert!(g.iter().any(|&v| v != 0.0));
+        let t2 = m.client_bp_step(&th_c, &x, &g, 1e-3);
+        assert_ne!(t2, th_c);
+    }
+
+    #[test]
+    fn eval_counts_bounded() {
+        let m = model();
+        let (x, y) = batch(64);
+        let th = init_theta(&m);
+        let ts = vec![0.0f32; m.ns()];
+        let (s1, s2) = m.eval(&th[..m.nc()], &ts, &x, &y);
+        assert!(s1 >= 0.0 && s1 <= s2);
+        assert_eq!(s2, 64.0);
+    }
+
+    #[test]
+    fn hvp_is_symmetric_bilinear_probe() {
+        let m = VisionModel::new(18);
+        let (x, y) = batch(8);
+        let th = {
+            let mut t = vec![0.0f32; m.nl()];
+            for j in 0..m.q {
+                t[j] = 2.0;
+            }
+            t
+        };
+        let va: Vec<f32> = (0..m.nl()).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.1).collect();
+        let vb: Vec<f32> = (0..m.nl()).map(|i| ((i * 5 % 11) as f32 - 5.0) * 0.1).collect();
+        let hva = m.hvp(&th, &x, &y, &va);
+        let hvb = m.hvp(&th, &x, &y, &vb);
+        let ab: f64 = vb.iter().zip(&hva).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let ba: f64 = va.iter().zip(&hvb).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!(
+            (ab - ba).abs() < 0.1 * ab.abs().max(0.2),
+            "v^T H u = {ba} vs u^T H v = {ab}"
+        );
+    }
+}

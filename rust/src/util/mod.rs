@@ -6,5 +6,6 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,120 @@
+//! Tiny scoped worker pool (substrate S4b) for the parallel round engine.
+//!
+//! `run_jobs` fans a batch of independent jobs out across up to `workers`
+//! OS threads (std scoped threads — no external crates) and returns the
+//! results **in job order**, regardless of which worker ran what. Workers
+//! pull jobs from a shared stack, so scheduling is dynamic (LPT-ish under
+//! skewed job costs) while the output stays deterministic: result `i` is
+//! always job `i`'s output.
+//!
+//! With `workers <= 1` (or a single job) everything runs inline on the
+//! caller's thread — bit-identical results, no spawn overhead — which is
+//! what makes `--workers 1` vs `--workers N` comparisons meaningful.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Execute `jobs` with up to `workers` threads; returns results in job
+/// order. `f` must be callable from multiple threads at once.
+pub fn run_jobs<J, R, F>(workers: usize, jobs: Vec<J>, f: F) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    if workers <= 1 || n <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, J)>> =
+        Mutex::new(jobs.into_iter().enumerate().collect());
+    let results: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let threads = workers.min(n);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap_or_else(|p| p.into_inner()).pop_front();
+                match job {
+                    Some((idx, j)) => {
+                        let r = f(j);
+                        results.lock().unwrap_or_else(|p| p.into_inner())[idx] =
+                            Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap_or_else(|p| p.into_inner())
+        .into_iter()
+        .map(|r| r.expect("worker pool lost a job result"))
+        .collect()
+}
+
+/// The effective worker count for a requested setting: `0` means "auto"
+/// (all available cores), and the result is clamped to the job count.
+pub fn effective_workers(requested: usize, jobs: usize) -> usize {
+    let w = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    w.clamp(1, jobs.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<usize> = (0..64).collect();
+        let out = run_jobs(8, jobs, |j| j * 10);
+        assert_eq!(out, (0..64).map(|j| j * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let jobs: Vec<u64> = (0..40).collect();
+        let seq = run_jobs(1, jobs.clone(), |j| j.wrapping_mul(0x9E37).rotate_left(7));
+        let par = run_jobs(8, jobs, |j| j.wrapping_mul(0x9E37).rotate_left(7));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let out = run_jobs(4, (0..100).collect::<Vec<_>>(), |j: usize| {
+            count.fetch_add(1, Ordering::SeqCst);
+            j
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_jobs(16, vec![1, 2], |j| j + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<i32> = run_jobs(4, Vec::<i32>::new(), |j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn effective_workers_rules() {
+        assert_eq!(effective_workers(3, 10), 3);
+        assert_eq!(effective_workers(8, 2), 2);
+        assert!(effective_workers(0, 64) >= 1);
+        assert_eq!(effective_workers(5, 0), 1);
+    }
+}

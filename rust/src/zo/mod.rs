@@ -16,14 +16,16 @@ use stream::PerturbStream;
 /// `step` regenerates u from the seed in fixed-size chunks, so peak extra
 /// memory is O(chunk), not O(d) — the Remark-4 trick, measurable in
 /// `alloc_free_step`.
-pub struct ZoSgd<F: Fn(&[f32]) -> f32> {
+/// The objective is `Sync` so one optimizer can be shared across the
+/// parallel round engine's worker threads (each thread steps its own θ).
+pub struct ZoSgd<F: Fn(&[f32]) -> f32 + Sync> {
     pub f: F,
     pub mu: f32,
     pub lr: f32,
     pub chunk: usize,
 }
 
-impl<F: Fn(&[f32]) -> f32> ZoSgd<F> {
+impl<F: Fn(&[f32]) -> f32 + Sync> ZoSgd<F> {
     pub fn new(f: F, mu: f32, lr: f32) -> Self {
         Self {
             f,

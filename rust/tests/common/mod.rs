@@ -1,28 +1,18 @@
-//! Shared test plumbing: a process-wide Session behind a mutex.
+//! Shared test plumbing: one process-wide Session.
 //!
-//! The xla crate's handles are `Rc`-based (single-threaded by design — see
-//! DESIGN.md §7), but `cargo test` runs tests on multiple threads. All test
-//! access is serialized through one mutex, which makes the wrapper sound in
-//! practice: no `Rc` clone or PJRT call ever happens concurrently.
+//! `Session` is `Sync` (immutable manifest + native engine, stats behind a
+//! mutex), so the test binary's threads can share a single lazily-built
+//! instance directly. The first access also triggers artifact generation
+//! when the `artifacts/` tree is missing (see `runtime::artifacts`).
 
 use heron_sfl::runtime::Session;
-use once_cell::sync::Lazy;
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
-struct SendSession(Session);
-// SAFETY: every use is behind SESSION's mutex; the inner Rc/RefCell state is
-// never touched from two threads at once.
-unsafe impl Send for SendSession {}
+static SESSION: OnceLock<Session> = OnceLock::new();
 
-static SESSION: Lazy<Mutex<SendSession>> = Lazy::new(|| {
-    Mutex::new(SendSession(
-        Session::open_default()
-            .expect("run `make artifacts` before cargo test"),
-    ))
-});
-
-/// Run `f` with exclusive access to the shared session.
+/// Run `f` against the shared session.
 pub fn with_session<R>(f: impl FnOnce(&Session) -> R) -> R {
-    let guard = SESSION.lock().unwrap_or_else(|p| p.into_inner());
-    f(&guard.0)
+    f(SESSION.get_or_init(|| {
+        Session::open_default().expect("opening default session")
+    }))
 }

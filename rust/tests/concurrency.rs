@@ -1,0 +1,190 @@
+//! Parallel round-engine tests: bit-determinism across worker counts, and
+//! the concurrent Main-Server queue's stats/backpressure under contention.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::coordinator::server_queue::{ServerQueue, SmashedBatch};
+
+mod common;
+use common::with_session;
+
+fn cfg(alg: Algorithm, workers: usize) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: alg,
+        n_clients: 6,
+        rounds: 2,
+        local_steps: 2,
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        dataset_size: 1024,
+        eval_every: 1,
+        workers,
+        ..Default::default()
+    }
+}
+
+/// The round outputs a run produces, captured for bitwise comparison.
+fn run_fingerprint(alg: Algorithm, workers: usize) -> (Vec<f32>, Vec<f32>, Vec<f64>, Vec<f64>, u64) {
+    with_session(|s| {
+        let mut driver = Driver::new(s, cfg(alg, workers)).unwrap();
+        let rec = driver.run(&format!("{}x{workers}", alg.name())).unwrap();
+        let losses: Vec<f64> =
+            rec.rounds.iter().map(|r| r.train_loss).collect();
+        let metrics: Vec<f64> =
+            rec.rounds.iter().map(|r| r.eval_metric).collect();
+        (
+            driver.theta_l.clone(),
+            driver.theta_s.clone(),
+            losses,
+            metrics,
+            driver.comm_bytes,
+        )
+    })
+}
+
+#[test]
+fn heron_bit_identical_across_worker_counts() {
+    let base = run_fingerprint(Algorithm::Heron, 1);
+    for workers in [4, 8] {
+        let other = run_fingerprint(Algorithm::Heron, workers);
+        assert_eq!(base.0, other.0, "theta_l differs at workers={workers}");
+        assert_eq!(base.1, other.1, "theta_s differs at workers={workers}");
+        assert_eq!(base.2, other.2, "losses differ at workers={workers}");
+        assert_eq!(base.3, other.3, "metrics differ at workers={workers}");
+        assert_eq!(base.4, other.4, "comm differs at workers={workers}");
+    }
+}
+
+#[test]
+fn fo_baselines_bit_identical_across_worker_counts() {
+    for alg in [Algorithm::CseFsl, Algorithm::FslSage] {
+        let a = run_fingerprint(alg, 1);
+        let b = run_fingerprint(alg, 8);
+        assert_eq!(a.0, b.0, "{}: theta_l differs", alg.name());
+        assert_eq!(a.1, b.1, "{}: theta_s differs", alg.name());
+        assert_eq!(a.2, b.2, "{}: losses differ", alg.name());
+    }
+}
+
+#[test]
+fn auto_workers_matches_explicit() {
+    // workers = 0 resolves to available cores; results must still be
+    // bit-identical to the sequential run
+    let a = run_fingerprint(Algorithm::Heron, 1);
+    let b = run_fingerprint(Algorithm::Heron, 0);
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.2, b.2);
+}
+
+#[test]
+fn queue_stats_flow_into_run_summary() {
+    with_session(|s| {
+        let mut driver = Driver::new(s, cfg(Algorithm::Heron, 4)).unwrap();
+        let rec = driver.run("queue-stats").unwrap();
+        // 6 clients x 2 uploads x 2 rounds
+        assert_eq!(rec.summary["queue_enqueued"], 24.0);
+        assert_eq!(rec.summary["queue_dropped"], 0.0);
+        assert!(rec.summary["queue_max_depth"] >= 1.0);
+        assert!(rec.summary["host_makespan_seconds"] > 0.0);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// ServerQueue under concurrent producers
+// ---------------------------------------------------------------------------
+
+fn batch(client: usize, round: usize, step: usize) -> SmashedBatch {
+    SmashedBatch {
+        client,
+        round,
+        step,
+        smashed: vec![client as f32; 8],
+        targets: vec![step as i32],
+    }
+}
+
+#[test]
+fn concurrent_enqueue_backpressure_and_drop_stats() {
+    let q = ServerQueue::new(50);
+    let accepted: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let q = &q;
+                s.spawn(move || {
+                    let mut ok = 0usize;
+                    for i in 0..25 {
+                        if q.push(batch(t, 0, i)) {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let st = q.stats();
+    assert_eq!(accepted, 50, "bounded queue must accept exactly capacity");
+    assert_eq!(st.enqueued, 50);
+    assert_eq!(st.dropped, 200 - 50);
+    assert_eq!(st.max_depth, 50);
+    assert_eq!(q.len(), 50);
+}
+
+#[test]
+fn concurrent_enqueue_drains_deterministically() {
+    // whatever the producer interleaving, the barrier drain is sorted
+    let run = || {
+        let q = ServerQueue::new(1024);
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let q = &q;
+                s.spawn(move || {
+                    for step in 1..=8 {
+                        q.push(batch(t, 3, step));
+                    }
+                });
+            }
+        });
+        q.drain_sorted()
+            .iter()
+            .map(|b| (b.round, b.client, b.step))
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 48);
+    let mut sorted = a.clone();
+    sorted.sort();
+    assert_eq!(a, sorted, "drain order must be (round, client, step)");
+}
+
+#[test]
+fn interleaved_push_pop_conserves_counts() {
+    let q = ServerQueue::new(16);
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let q = &q;
+            s.spawn(move || {
+                for i in 0..64 {
+                    q.push(batch(t, 0, i));
+                    if i % 3 == 0 {
+                        q.pop();
+                    }
+                }
+            });
+        }
+    });
+    let st = q.stats();
+    assert_eq!(
+        st.enqueued,
+        st.processed + q.len() as u64,
+        "every accepted batch is either processed or still queued"
+    );
+    assert!(st.max_depth <= 16);
+}

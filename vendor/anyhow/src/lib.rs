@@ -1,0 +1,198 @@
+//! Offline facade for the `anyhow` error-handling API.
+//!
+//! The real `anyhow` crate is not in the offline vendor set, so this shim
+//! provides the subset the codebase uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait for `Result`/`Option`, and the `anyhow!` /
+//! `bail!` macros. Context frames are stored as a flat string chain;
+//! `{}` displays the outermost frame and `{:#}` the full chain joined with
+//! `": "`, matching anyhow's display conventions closely enough for logs
+//! and test assertions.
+
+use std::fmt;
+
+/// Drop-in for `anyhow::Error`: an owned error with a context chain.
+/// `chain[0]` is the outermost (most recently attached) frame.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a context frame (what `.context(...)` produces).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) frame.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for frame in &self.chain[1..] {
+                writeln!(f, "    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("inner {}", 3);
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 3");
+    }
+
+    #[test]
+    fn from_std_error_keeps_source_chain() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("boom");
+        }
+        let e = inner().context("mid").context("top").unwrap_err();
+        assert_eq!(format!("{e:#}"), "top: mid: boom");
+        assert_eq!(e.root_cause(), "boom");
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn f() -> Result<i64> {
+            let n: i64 = "12x".parse().unwrap_or(0);
+            let _ = std::fs::metadata("/definitely/not/here/ever")?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert!(f(-1).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Offline facade for the `log` logging facade crate.
+//!
+//! Provides `Level`, `LevelFilter`, `Record`, `Metadata`, the `Log` trait,
+//! the global logger registry, and the `error!`..`trace!` macros — the
+//! subset `heron_sfl::util::logging` and the rest of the crate use.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+#[derive(Debug)]
+pub struct SetLoggerError;
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("logger already set")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER
+        .set(Box::leak(logger))
+        .map_err(|_| SetLoggerError)
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments<'_>) {
+    if level <= max_level() {
+        if let Some(logger) = LOGGER.get() {
+            let record = Record {
+                metadata: Metadata { level },
+                args,
+            };
+            if logger.enabled(&record.metadata) {
+                logger.log(&record);
+            }
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Error, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Warn, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Info, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Debug, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Trace, ::std::format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(!(Level::Debug <= LevelFilter::Info));
+        assert!(!(Level::Error <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+}
