@@ -6,18 +6,35 @@
 //!   end-to-end: one full HERON round, sequential vs parallel workers
 //!
 //! Set `BENCH_OUT=path.json` to write the measurements (plus the parallel
-//! speedup) as a JSON report — CI uploads this as the perf-smoke artifact.
+//! speedup and the feature-plan cache counters) as a JSON report — CI
+//! uploads this as the perf-smoke artifact.
+//!
+//! Set `BENCH_BASELINE=path.json` to compare against a committed baseline
+//! report (`BENCH_BASELINE.json` at the repo root): the run fails if the
+//! `heron_full_round` mean regresses by more than 25% (machine-normalized
+//! by the `perturb_stream_fill_64k` canary, which this crate's hot-path
+//! work never touches), and prints the sequential-vs-parallel speedup
+//! delta. When `GITHUB_STEP_SUMMARY` is set, the comparison is appended
+//! there as markdown.
 
-use anyhow::Result;
-use heron_sfl::bench_harness::Bench;
+use anyhow::{bail, Context, Result};
+use heron_sfl::bench_harness::{fmt_ns, Bench, Measurement};
 use heron_sfl::coordinator::aggregator::fedavg_into;
 use heron_sfl::coordinator::config::RunConfig;
 use heron_sfl::coordinator::round::Driver;
 use heron_sfl::data::synth_vision;
 use heron_sfl::golden;
-use heron_sfl::runtime::Session;
+use heron_sfl::runtime::{RuntimeStats, Session};
+use heron_sfl::util::json::{self, Value};
 use heron_sfl::zo::stream::PerturbStream;
 use heron_sfl::zo::ZoSgd;
+
+/// Machine-speed canary: untouched by the invoke-path/caching work, so
+/// baseline-vs-current ratios of (round / canary) cancel host speed.
+const CANARY: &str = "perturb_stream_fill_64k";
+const ROUND: &str = "heron_full_round";
+/// Fail the baseline gate when the normalized round mean regresses >25%.
+const REGRESSION_LIMIT: f64 = 1.25;
 
 fn main() -> Result<()> {
     heron_sfl::util::logging::init();
@@ -27,7 +44,7 @@ fn main() -> Result<()> {
     Bench::header("L3 primitives");
     // perturbation stream regeneration (the Remark-4 O(1)-memory path)
     let mut buf = vec![0.0f32; 1 << 16];
-    b.run("perturb_stream_fill_64k", || {
+    b.run(CANARY, || {
         PerturbStream::new(7).fill(&mut buf);
         std::hint::black_box(&buf);
     });
@@ -37,9 +54,10 @@ fn main() -> Result<()> {
         (1 << 16) as f64 / m.mean_secs() / 1e6
     );
 
-    // ZO-SGD quadratic steps: materialized vs streamed
+    // ZO-SGD quadratic steps: materialized (optimizer-held scratch) vs
+    // streamed (O(chunk) regeneration)
     let quad = |x: &[f32]| x.iter().map(|v| v * v).sum::<f32>() * 0.5;
-    let opt = ZoSgd::new(quad, 1e-3, 0.01);
+    let mut opt = ZoSgd::new(quad, 1e-3, 0.01);
     let mut theta = vec![0.5f32; 1 << 16];
     b.run("zo_step_materialized_64k", || {
         opt.step_materialized(&mut theta, 3);
@@ -98,9 +116,24 @@ fn main() -> Result<()> {
     };
     let mut driver = Driver::new(&session, cfg)?;
     driver.warmup()?;
-    b.run("heron_full_round", || {
+    b.run(ROUND, || {
         driver.run_round().expect("round");
     });
+    // counters snapshotted around ONE further round (the bench loop above
+    // already warmed the cache): the steady-state per-round hit rate, not
+    // an aggregate over warmup + every timed iteration
+    let cache_before = session.stats();
+    driver.run_round()?;
+    let cache_after = session.stats();
+    let round_hits =
+        cache_after.feature_cache_hits - cache_before.feature_cache_hits;
+    let round_misses =
+        cache_after.feature_cache_misses - cache_before.feature_cache_misses;
+    println!(
+        "  -> feature cache, one steady-state HERON round: {round_hits} \
+         hits / {round_misses} misses ({:.1}% hit rate)",
+        100.0 * round_hits as f64 / (round_hits + round_misses).max(1) as f64
+    );
 
     // ---- parallel round engine: sequential vs worker-pool wall clock ----
     Bench::header("parallel round engine (HERON, 8 clients, h=4)");
@@ -136,8 +169,8 @@ fn main() -> Result<()> {
     println!(
         "  -> parallel speedup: {speedup:.2}x at {best_w} workers \
          (sequential {} vs {})",
-        heron_sfl::bench_harness::fmt_ns(seq),
-        heron_sfl::bench_harness::fmt_ns(best),
+        fmt_ns(seq),
+        fmt_ns(best),
     );
 
     let st = session.stats();
@@ -148,23 +181,46 @@ fn main() -> Result<()> {
         st.marshal_seconds,
         100.0 * st.marshal_seconds / st.exec_seconds.max(1e-9)
     );
+    println!(
+        "feature cache totals: {} hits / {} misses ({:.1}% hit rate), {} avoided",
+        st.feature_cache_hits,
+        st.feature_cache_misses,
+        100.0 * st.feature_cache_hit_rate(),
+        heron_sfl::coordinator::accounting::fmt_bytes(st.alloc_avoided_bytes),
+    );
 
     if let Ok(path) = std::env::var("BENCH_OUT") {
-        write_report(&path, b.results(), speedup, best_w)?;
+        write_report(
+            &path,
+            b.results(),
+            speedup,
+            best_w,
+            &st,
+            round_hits,
+            round_misses,
+        )?;
         println!("wrote JSON report to {path}");
     }
+
+    if let Ok(baseline) = std::env::var("BENCH_BASELINE") {
+        compare_with_baseline(&baseline, b.results(), speedup)?;
+    }
+
     println!("\nperf_hotpath OK");
     Ok(())
 }
 
 /// JSON report for the CI perf-smoke artifact.
+#[allow(clippy::too_many_arguments)]
 fn write_report(
     path: &str,
-    results: &[heron_sfl::bench_harness::Measurement],
+    results: &[Measurement],
     speedup: f64,
     speedup_workers: usize,
+    st: &RuntimeStats,
+    round_hits: u64,
+    round_misses: u64,
 ) -> Result<()> {
-    use heron_sfl::util::json::Value;
     let benchmarks: Vec<Value> = results
         .iter()
         .map(|m| {
@@ -178,13 +234,142 @@ fn write_report(
             ])
         })
         .collect();
+    let round_total = (round_hits + round_misses).max(1);
     let report = Value::obj(vec![
         ("schema", Value::str("heron-sfl-bench-v1")),
         ("benchmarks", Value::Arr(benchmarks)),
         ("parallel_speedup", Value::Num(speedup)),
         ("parallel_speedup_workers", Value::Num(speedup_workers as f64)),
+        ("feature_cache_hits", Value::Num(st.feature_cache_hits as f64)),
+        (
+            "feature_cache_misses",
+            Value::Num(st.feature_cache_misses as f64),
+        ),
+        (
+            "feature_cache_hit_rate",
+            Value::Num(st.feature_cache_hit_rate()),
+        ),
+        // one steady-state round's hits/(hits+misses), measured in
+        // isolation after the timed loop
+        (
+            "heron_round_cache_hit_rate",
+            Value::Num(round_hits as f64 / round_total as f64),
+        ),
+        (
+            "alloc_avoided_bytes",
+            Value::Num(st.alloc_avoided_bytes as f64),
+        ),
     ]);
     std::fs::write(path, report.to_string_pretty())?;
+    Ok(())
+}
+
+fn bench_mean(report: &Value, name: &str) -> Result<f64> {
+    let arr = report
+        .get("benchmarks")
+        .and_then(Value::as_arr)
+        .context("baseline: missing benchmarks array")?;
+    for entry in arr {
+        if entry.get("name").and_then(Value::as_str) == Some(name) {
+            return entry
+                .get("mean_ns")
+                .and_then(Value::as_f64)
+                .with_context(|| format!("baseline: {name} lacks mean_ns"));
+        }
+    }
+    bail!("baseline: no benchmark named {name}")
+}
+
+/// Compare this run's `heron_full_round` against the committed baseline,
+/// normalizing by the stream-fill canary so the gate is meaningful across
+/// hosts of different speeds. Fails on a >25% normalized regression.
+fn compare_with_baseline(
+    path: &str,
+    results: &[Measurement],
+    speedup: f64,
+) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {path}"))?;
+    let base = json::parse(&text)
+        .with_context(|| format!("parsing baseline {path}"))?;
+    let base_round = bench_mean(&base, ROUND)?;
+    let base_canary = bench_mean(&base, CANARY)?.max(1.0);
+    let base_speedup = base
+        .get("parallel_speedup")
+        .and_then(Value::as_f64)
+        .unwrap_or(1.0);
+    // A provisional baseline (estimated, not measured — see the file's
+    // "note") reports the comparison but never fails the run; the gate
+    // arms itself once a measured baseline drops the flag.
+    let provisional = base
+        .get("provisional")
+        .and_then(Value::as_bool)
+        .unwrap_or(false);
+    let cur = |name: &str| -> Result<f64> {
+        results
+            .iter()
+            .find(|m| m.name == name)
+            .map(|m| m.mean_ns)
+            .with_context(|| format!("current run lacks benchmark {name}"))
+    };
+    let cur_round = cur(ROUND)?;
+    let cur_canary = cur(CANARY)?.max(1.0);
+
+    let raw_ratio = base_round / cur_round.max(1.0);
+    let norm_ratio =
+        (base_round / base_canary) / (cur_round / cur_canary).max(1e-12);
+    let speedup_delta = speedup - base_speedup;
+    println!("\n=== baseline comparison ({path}) ===");
+    println!(
+        "{ROUND}: baseline {} -> current {}  ({raw_ratio:.2}x raw, \
+         {norm_ratio:.2}x canary-normalized)",
+        fmt_ns(base_round),
+        fmt_ns(cur_round),
+    );
+    println!(
+        "sequential-vs-parallel speedup: baseline {base_speedup:.2}x -> \
+         current {speedup:.2}x (delta {speedup_delta:+.2}x)"
+    );
+
+    if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        if let Ok(mut fh) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(summary)
+        {
+            let _ = writeln!(
+                fh,
+                "### perf_hotpath vs `{path}`\n\n\
+                 | metric | baseline | current | ratio |\n\
+                 |---|---|---|---|\n\
+                 | `{ROUND}` mean | {} | {} | {raw_ratio:.2}x raw / {norm_ratio:.2}x normalized |\n\
+                 | parallel speedup | {base_speedup:.2}x | {speedup:.2}x | {speedup_delta:+.2}x |\n",
+                fmt_ns(base_round),
+                fmt_ns(cur_round),
+            );
+        }
+    }
+
+    if norm_ratio < 1.0 / REGRESSION_LIMIT {
+        if provisional {
+            println!(
+                "WARNING: {ROUND} is {:.0}% slower (normalized) than the \
+                 provisional baseline — not failing because {path} is \
+                 estimated, not measured; refresh it with \
+                 BENCH_OUT={path} cargo bench --bench perf_hotpath and \
+                 drop its \"provisional\" flag to arm the gate",
+                100.0 * (1.0 / norm_ratio - 1.0),
+            );
+        } else {
+            bail!(
+                "{ROUND} regressed {:.0}% (normalized) against {path} — \
+                 limit is {:.0}%",
+                100.0 * (1.0 / norm_ratio - 1.0),
+                100.0 * (REGRESSION_LIMIT - 1.0),
+            );
+        }
+    }
     Ok(())
 }
 

@@ -36,6 +36,20 @@
 //! the Main-Server is the defining property of those baselines (every
 //! batch waits on a server round-trip), so there is no decoupled client
 //! phase to parallelize without changing the algorithm.
+//!
+//! ## Zero-allocation hot loop
+//!
+//! The decoupled local phase and the server drain run through
+//! [`Session::invoke_into`]: inputs are borrowed [`TensorRef`] views of
+//! the loader's reused batch buffers, the client's θ, and the frozen base
+//! blob, and outputs land in per-client scratch arenas whose buffers are
+//! reused across all h steps (the updated θ is *swapped* out of its slot,
+//! not copied). The driver itself allocates nothing parameter-sized per
+//! step — the old path cloned θ, base, x, and y into every `Call` — and
+//! the models allocate no per-probe vectors (their remaining per-call
+//! scratch is a bounded handful of buffers). Results are bit-identical
+//! to the allocating `Call` path, which the cold branches (SFLV1/V2
+//! locked exchange, alignment, eval) still use.
 
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::aggregator::fedavg_into;
@@ -48,7 +62,8 @@ use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::{Loader, Task};
 use crate::data::partition::Partition;
 use crate::metrics::{RoundRecord, RunRecord};
-use crate::runtime::tensor::TensorValue;
+use crate::runtime::manifest::EntrySpec;
+use crate::runtime::tensor::{TensorRef, TensorValue};
 use crate::runtime::{Call, Session};
 use crate::util::pool;
 use crate::util::rng::{mix64, Xoshiro256pp};
@@ -131,6 +146,8 @@ pub struct Driver<'s> {
     round_idx: usize,
     // reusable aggregation buffer
     agg_buf: Vec<f32>,
+    // reusable output slots for the server-phase invoke_into calls
+    inv_outs: Vec<TensorValue>,
 }
 
 impl<'s> Driver<'s> {
@@ -229,6 +246,7 @@ impl<'s> Driver<'s> {
             ns,
             round_idx: 0,
             agg_buf: vec![0.0; nl],
+            inv_outs: Vec::new(),
             cfg,
         })
     }
@@ -559,39 +577,64 @@ impl<'s> Driver<'s> {
         Ok(theta)
     }
 
+    /// Consume one queued smashed batch (Eq. 7) through the
+    /// zero-allocation invoke path: borrowed inputs, outputs into the
+    /// driver's reused slot vector, θ_s swapped (not copied) back.
     fn server_consume(
         &mut self,
         b: &SmashedBatch,
         want_cutgrad: bool,
         sim: &mut RoundSim,
     ) -> Result<Option<Vec<f32>>> {
+        if !matches!(self.opt_server, OptState::None) {
+            bail!(
+                "server drain: stateful optimizers are not wired through \
+                 the native entries (manifest opt_state must be 0)"
+            );
+        }
         let entry = if want_cutgrad {
             "server_step_cutgrad"
         } else {
             "server_step"
         };
-        let mut outs = Self::opt_args(
-            self.call(entry).arg("theta_s", self.theta_s.clone()),
-            &self.opt_server,
-        )
-        .arg("smashed", b.smashed.clone())
-        .arg("y", TensorValue::I32(b.targets.clone()))
-        .arg("lr", self.cfg.lr_server)
-        .run()?;
-        self.theta_s = outs
-            .remove("theta_s")
-            .context("theta_s")?
-            .into_f32()?;
-        let mut opt = std::mem::replace(&mut self.opt_server, OptState::None);
-        Self::take_opt(&mut outs, &mut opt)?;
-        self.opt_server = opt;
+        let session = self.session;
+        let espec = session.variant(&self.cfg.variant)?.entry(entry)?;
+        let ti = espec.output_pos("theta_s")?;
+        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(5);
+        if let Some(base) = self.base.as_deref() {
+            named.push(("base", TensorRef::F32(base)));
+        }
+        named.push(("theta_s", TensorRef::F32(&self.theta_s)));
+        named.push(("smashed", TensorRef::F32(&b.smashed)));
+        named.push(("y", TensorRef::I32(&b.targets)));
+        named.push(("lr", TensorRef::ScalarF32(self.cfg.lr_server)));
+        let inputs = bind_entry_inputs(espec, &named)?;
+        session.invoke_into(
+            &self.cfg.variant,
+            entry,
+            &inputs,
+            &mut self.inv_outs,
+        )?;
+        match &mut self.inv_outs[ti] {
+            TensorValue::F32(v) => std::mem::swap(&mut self.theta_s, v),
+            other => bail!(
+                "{entry}: theta_s output has wrong dtype {:?}",
+                other.dtype()
+            ),
+        }
         sim.server_compute(3 * self.variant_server_flops());
         Ok(if want_cutgrad {
-            Some(
-                outs.remove("g_smashed")
-                    .context("g_smashed")?
-                    .into_f32()?,
-            )
+            let gi = espec.output_pos("g_smashed")?;
+            match std::mem::replace(
+                &mut self.inv_outs[gi],
+                TensorValue::ScalarF32(0.0),
+            ) {
+                TensorValue::F32(v) => Some(v),
+                other => bail!(
+                    "{entry}: g_smashed output has wrong dtype {:?}",
+                    other.dtype()
+                ),
+            }
         } else {
             None
         })
@@ -733,18 +776,52 @@ fn step_seed(ctx: &LocalCtx, client: usize, step: usize) -> i32 {
     ) as i32
 }
 
-fn entry_call<'a>(ctx: &LocalCtx<'a>, entry: &'a str) -> Call<'a> {
-    let mut c = Call::new(ctx.session, &ctx.cfg.variant, entry);
-    if let Some(b) = ctx.base {
-        c = c.arg("base", b.to_vec());
+/// Borrow the loader's reused batch buffer as the entry's `x` input.
+fn x_ref(task: Task, loader: &Loader) -> TensorRef<'_> {
+    match task {
+        Task::Vision => TensorRef::F32(&loader.xs_f32),
+        Task::Lm => TensorRef::I32(&loader.xs_i32),
     }
-    c
+}
+
+/// Borrow the loader's target buffer (LM entries take the token batch).
+fn y_slice(task: Task, loader: &Loader) -> &[i32] {
+    match task {
+        Task::Vision => &loader.ys,
+        Task::Lm => &loader.xs_i32,
+    }
+}
+
+/// Build the positional input list for `espec` from named borrowed
+/// buffers. Scalars travel by value; a spec input with no binding (e.g.
+/// optimizer-state tensors the native manifest never emits) is an error.
+fn bind_entry_inputs<'a>(
+    espec: &EntrySpec,
+    named: &[(&str, TensorRef<'a>)],
+) -> Result<Vec<TensorRef<'a>>> {
+    let mut out = Vec::with_capacity(espec.inputs.len());
+    for spec in &espec.inputs {
+        let r = named
+            .iter()
+            .find(|(n, _)| *n == spec.name)
+            .map(|(_, r)| *r)
+            .with_context(|| {
+                format!("{}: no binding for input {}", espec.name, spec.name)
+            })?;
+        out.push(r);
+    }
+    Ok(out)
 }
 
 /// One client's full local phase (h steps + uploads), self-contained so it
 /// can run on any worker thread. Mutates only this client's state; all
 /// cross-client effects go through the concurrent queue and the returned
 /// outcome.
+///
+/// The loop is allocation-lean: every input is a borrowed view (θ, the
+/// loader's batch buffers, the frozen base), outputs land in the two
+/// scratch arenas below, and the updated θ is swapped out of its slot —
+/// the same two parameter buffers ping-pong through all h steps.
 fn client_local_phase(
     ctx: &LocalCtx,
     ci: usize,
@@ -758,32 +835,52 @@ fn client_local_phase(
     let mut flops = 0u64;
     let zo = ctx.cfg.algorithm == Algorithm::Heron;
     let entry = if zo { "zo_step" } else { "fo_step" };
-    let mut opt = std::mem::replace(&mut cs.opt_local, OptState::None);
+    if !matches!(cs.opt_local, OptState::None) {
+        bail!(
+            "local phase: stateful optimizers are not wired through the \
+             native entries (manifest opt_state must be 0)"
+        );
+    }
+    let vspec = ctx.session.variant(&ctx.cfg.variant)?;
+    let step_espec = vspec.entry(entry)?;
+    let fwd_espec = vspec.entry("client_fwd")?;
+    let ti = step_espec.output_pos("theta_l")?;
+    let li = step_espec.output_pos("loss")?;
+    let si = fwd_espec.output_pos("smashed")?;
+    // per-client scratch arenas, reused across all h steps
+    let mut outs: Vec<TensorValue> = Vec::new();
+    let mut fwd_outs: Vec<TensorValue> = Vec::new();
 
     for step in 1..=ctx.cfg.local_steps {
         cs.loader.next_batch();
-        let (x, y) = loader_batch_xy(ctx.task, &cs.loader);
-        let mut call = Driver::opt_args(
-            entry_call(ctx, entry).arg("theta_l", theta.clone()),
-            &opt,
-        )
-        .arg("x", x.clone())
-        .arg("y", TensorValue::I32(y.clone()));
-        if zo {
-            call = call
-                .arg("seed", step_seed(ctx, ci, step))
-                .arg("mu", ctx.cfg.mu)
-                .arg("n_pert", ctx.cfg.n_pert as i32);
+        let seed = step_seed(ctx, ci, step);
+        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(8);
+        if let Some(b) = ctx.base {
+            named.push(("base", TensorRef::F32(b)));
         }
-        let mut outs = call.arg("lr", ctx.cfg.lr_client).run()?;
-        theta = outs
-            .remove("theta_l")
-            .context("local theta_l")?
-            .into_f32()?;
-        Driver::take_opt(&mut outs, &mut opt)?;
-        losses.push(
-            outs.remove("loss").context("local loss")?.scalar_f32()? as f64,
-        );
+        named.push(("theta_l", TensorRef::F32(&theta)));
+        named.push(("x", x_ref(ctx.task, &cs.loader)));
+        named.push(("y", TensorRef::I32(y_slice(ctx.task, &cs.loader))));
+        named.push(("lr", TensorRef::ScalarF32(ctx.cfg.lr_client)));
+        if zo {
+            named.push(("seed", TensorRef::ScalarI32(seed)));
+            named.push(("mu", TensorRef::ScalarF32(ctx.cfg.mu)));
+            named.push((
+                "n_pert",
+                TensorRef::ScalarI32(ctx.cfg.n_pert as i32),
+            ));
+        }
+        let inputs = bind_entry_inputs(step_espec, &named)?;
+        ctx.session
+            .invoke_into(&ctx.cfg.variant, entry, &inputs, &mut outs)?;
+        match &mut outs[ti] {
+            TensorValue::F32(v) => std::mem::swap(&mut theta, v),
+            other => bail!(
+                "{entry}: theta_l output has wrong dtype {:?}",
+                other.dtype()
+            ),
+        }
+        losses.push(outs[li].scalar_f32()? as f64);
         flops += ctx.book.flops_per_step;
         lane.compute(ctx.book.flops_per_step);
 
@@ -793,16 +890,16 @@ fn client_local_phase(
                 ci,
                 cs,
                 &theta,
-                &x,
-                &y,
+                fwd_espec,
+                si,
                 step,
                 queue,
                 &mut lane,
                 &mut comm_bytes,
+                &mut fwd_outs,
             )?;
         }
     }
-    cs.opt_local = opt;
     Ok(LocalOutcome {
         ci,
         theta,
@@ -818,21 +915,39 @@ fn upload_smashed(
     ci: usize,
     cs: &mut ClientState,
     theta: &[f32],
-    x: &TensorValue,
-    y: &[i32],
+    fwd_espec: &EntrySpec,
+    smashed_idx: usize,
     step: usize,
     queue: &ServerQueue,
     lane: &mut ClientLane,
     comm_bytes: &mut u64,
+    fwd_outs: &mut Vec<TensorValue>,
 ) -> Result<()> {
-    let mut outs = entry_call(ctx, "client_fwd")
-        .arg("theta_c", theta[..ctx.nc].to_vec())
-        .arg("x", x.clone())
-        .run()?;
-    let smashed = outs
-        .remove("smashed")
-        .context("smashed")?
-        .into_f32()?;
+    let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(3);
+    if let Some(b) = ctx.base {
+        named.push(("base", TensorRef::F32(b)));
+    }
+    named.push(("theta_c", TensorRef::F32(&theta[..ctx.nc])));
+    named.push(("x", x_ref(ctx.task, &cs.loader)));
+    let inputs = bind_entry_inputs(fwd_espec, &named)?;
+    ctx.session.invoke_into(
+        &ctx.cfg.variant,
+        "client_fwd",
+        &inputs,
+        fwd_outs,
+    )?;
+    // the queue owns the smashed batch, so move it out of its slot (the
+    // slot re-grows a buffer on the next upload)
+    let smashed = match std::mem::replace(
+        &mut fwd_outs[smashed_idx],
+        TensorValue::ScalarF32(0.0),
+    ) {
+        TensorValue::F32(v) => v,
+        other => bail!(
+            "client_fwd: smashed output has wrong dtype {:?}",
+            other.dtype()
+        ),
+    };
     // the upload forward is part of the protocol but NOT an extra
     // training cost in Table I (the paper's accounting charges the ZO /
     // FO step); we still charge its flops to the client sim for latency
@@ -841,17 +956,23 @@ fn upload_smashed(
     );
     *comm_bytes += ctx.book.comm_per_step(true);
     lane.upload(ctx.book.smashed_bytes);
-    let x_i32 = match x {
-        TensorValue::I32(v) => v.clone(),
-        _ => Vec::new(),
-    };
-    cs.last_upload = Some((smashed.clone(), y.to_vec(), x_i32));
+    let targets = y_slice(ctx.task, &cs.loader).to_vec();
+    // only the FSL-SAGE alignment ever reads last_upload — don't pay a
+    // full smashed-batch copy per upload on the other algorithms
+    if ctx.cfg.algorithm == Algorithm::FslSage {
+        let x_i32 = match ctx.task {
+            Task::Lm => cs.loader.xs_i32.clone(),
+            Task::Vision => Vec::new(),
+        };
+        cs.last_upload =
+            Some((smashed.clone(), targets.clone(), x_i32));
+    }
     queue.push(SmashedBatch {
         client: ci,
         round: ctx.round_idx,
         step,
         smashed,
-        targets: y.to_vec(),
+        targets,
     });
     Ok(())
 }

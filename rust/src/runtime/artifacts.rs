@@ -827,6 +827,24 @@ mod tests {
     }
 
     #[test]
+    fn engine_output_table_covers_every_entry() {
+        // the stale-slot guard in Engine::execute_into only fires for
+        // entries its table knows; every generated entry must be listed
+        // with the exact output arity the spec declares
+        for d in defs() {
+            for entry in d.entry_names() {
+                let e = entry_spec(&d, entry, Path::new("/tmp"));
+                assert_eq!(
+                    crate::runtime::native::produced_outputs(entry),
+                    Some(e.outputs.len()),
+                    "{}/{entry}: engine output table out of sync",
+                    d.name
+                );
+            }
+        }
+    }
+
+    #[test]
     fn entry_specs_have_positive_shapes() {
         for d in defs() {
             for entry in d.entry_names() {

@@ -64,6 +64,18 @@ pub struct EntrySpec {
     pub outputs: Vec<TensorSpec>,
 }
 
+impl EntrySpec {
+    /// Position of a named output in this entry's output list — the one
+    /// resolution rule shared by the engine's out-slots and the round
+    /// driver's scratch arenas.
+    pub fn output_pos(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no output {name}", self.name))
+    }
+}
+
 /// Analytic per-sample cost model emitted by L2 (see models/base.py).
 #[derive(Debug, Clone, Default)]
 pub struct CostModel {

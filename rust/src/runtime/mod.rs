@@ -1,8 +1,8 @@
 //! L3 runtime: load artifact manifests and execute their entry points.
 //!
 //! One `Session` owns the artifact manifest and an execution engine.
-//! Invocation validates `TensorValue`s against the manifest's
-//! `TensorSpec`s, executes the entry, and returns the outputs.
+//! Invocation validates inputs against the manifest's `TensorSpec`s,
+//! executes the entry, and returns the outputs.
 //!
 //! The default engine is the pure-Rust [`native`] reference backend
 //! (substrate S20): deterministic f32 math with counter-based random
@@ -11,6 +11,16 @@
 //! execute) needs the XLA toolchain, which is not in the offline vendor
 //! set; the `Session` surface is backend-agnostic so it can return behind
 //! a feature gate without touching callers.
+//!
+//! Two invocation paths exist, bit-identical by construction:
+//!
+//! * [`Session::invoke`] — owned `TensorValue` in, fresh `Vec` out. The
+//!   original convenience path; still what cold callers use.
+//! * [`Session::invoke_into`] — borrowed [`TensorRef`] views in, outputs
+//!   written into a caller-owned slot vector whose buffers are reused
+//!   across calls. The round driver threads per-client scratch arenas
+//!   through this so the h-step hot loop allocates no parameter-sized
+//!   temporaries.
 //!
 //! `Session` is `Sync`: the manifest and engine are immutable after
 //! construction and the runtime statistics sit behind a mutex, so the
@@ -27,10 +37,14 @@ use manifest::{Manifest, VariantSpec};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
-use tensor::TensorValue;
+use tensor::{TensorRef, TensorValue};
 
 /// Cumulative execution statistics (the coordinator reads these for
-/// §Perf and the event simulator's compute-time calibration).
+/// §Perf and the event simulator's compute-time calibration). The
+/// feature-plan cache counters come from the engine's per-model caches:
+/// `feature_cache_hits`/`misses` count θ-independent projection lookups,
+/// and `alloc_avoided_bytes` totals the bytes served from cache instead of
+/// recomputed into fresh allocations.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub invocations: u64,
@@ -39,6 +53,21 @@ pub struct RuntimeStats {
     pub compile_seconds: f64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    pub feature_cache_hits: u64,
+    pub feature_cache_misses: u64,
+    pub alloc_avoided_bytes: u64,
+}
+
+impl RuntimeStats {
+    /// Hit rate of the feature-plan cache in [0, 1] (0 when unused).
+    pub fn feature_cache_hit_rate(&self) -> f64 {
+        let total = self.feature_cache_hits + self.feature_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.feature_cache_hits as f64 / total as f64
+        }
+    }
 }
 
 pub struct Session {
@@ -72,7 +101,13 @@ impl Session {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone()
+        let mut st =
+            self.stats.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        let cs = self.engine.cache_stats();
+        st.feature_cache_hits = cs.hits;
+        st.feature_cache_misses = cs.misses;
+        st.alloc_avoided_bytes = cs.bytes_avoided;
+        st
     }
 
     pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
@@ -81,13 +116,18 @@ impl Session {
 
     /// Validate that the given entries exist for the variant (the AOT
     /// backend eagerly compiled them here; the native engine is ready as
-    /// soon as the session is).
+    /// soon as the session is). A request for an entry the variant does
+    /// not provide is an error — a typo'd entry name must not "warm up"
+    /// successfully and then fail at first invoke.
     pub fn warmup(&self, variant: &str, entries: &[&str]) -> Result<()> {
         let v = self.manifest.variant(variant)?;
         for e in entries {
-            if v.entries.contains_key(*e) {
-                self.engine.model(variant)?;
+            if !v.entries.contains_key(*e) {
+                bail!("variant {variant} has no entry {e} to warm up");
             }
+        }
+        if !entries.is_empty() {
+            self.engine.model(variant)?;
         }
         Ok(())
     }
@@ -99,6 +139,23 @@ impl Session {
         entry: &str,
         inputs: &[TensorValue],
     ) -> Result<Vec<TensorValue>> {
+        let refs: Vec<TensorRef> =
+            inputs.iter().map(|v| v.view()).collect();
+        let mut outs = Vec::new();
+        self.invoke_into(variant, entry, &refs, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Invoke an entry with borrowed positional inputs, writing outputs
+    /// into `outs` (buffers reused across calls). Bit-identical to
+    /// [`Self::invoke`]; this is the zero-allocation hot path.
+    pub fn invoke_into(
+        &self,
+        variant: &str,
+        entry: &str,
+        inputs: &[TensorRef<'_>],
+        outs: &mut Vec<TensorValue>,
+    ) -> Result<()> {
         let vspec = self.manifest.variant(variant)?;
         let espec = vspec.entry(entry)?;
         if inputs.len() != espec.inputs.len() {
@@ -119,9 +176,8 @@ impl Session {
         let marshal = tm.elapsed().as_secs_f64();
 
         let te = Instant::now();
-        let outs = self
-            .engine
-            .execute(vspec, espec, inputs)
+        self.engine
+            .execute_into(vspec, espec, inputs, outs)
             .with_context(|| format!("executing {variant}/{entry}"))?;
         let exec_dt = te.elapsed().as_secs_f64();
 
@@ -141,7 +197,7 @@ impl Session {
         st.marshal_seconds += marshal;
         st.bytes_in += bytes_in;
         st.bytes_out += bytes_out;
-        Ok(outs)
+        Ok(())
     }
 }
 

@@ -16,8 +16,19 @@
 //! token positions — the reference optimizer semantics that make the
 //! configured per-step learning rates effective at this scale. The ZO
 //! entry perturbs against the mean loss directly (Eq. 6).
+//!
+//! ## Hot path
+//!
+//! The θ-independent part of the client forward — the E0 row gather for a
+//! token batch — is memoized in a [`FeatureCache`] keyed by a content hash
+//! of the batch, so the h local steps + upload on one batch gather it
+//! once. `zo_step_into` streams each probe's perturbation in fixed chunks
+//! (no per-probe `u` vector) and evaluates probe losses through the
+//! allocation-free [`Self::aux_loss`] path; all op orders match the
+//! materialized formulation bit for bit.
 
-use crate::zo::stream::{fold_seed, PerturbStream};
+use crate::runtime::native::cache::{self, CacheStats, FeatureCache};
+use crate::zo::stream::two_point_zo_into;
 
 pub const VOCAB: usize = 96;
 
@@ -44,6 +55,8 @@ impl AuxKind {
 pub struct LmModel {
     pub e: usize,
     pub aux: AuxKind,
+    /// memoized θ-independent E0 row gathers, keyed by batch content hash
+    cache: FeatureCache,
 }
 
 /// Per-position dlogits with PAD masking; `scale` folds in the reduction.
@@ -60,7 +73,11 @@ struct CeOut {
 
 impl LmModel {
     pub fn new(e: usize, aux: AuxKind) -> Self {
-        LmModel { e, aux }
+        LmModel {
+            e,
+            aux,
+            cache: FeatureCache::new(),
+        }
     }
 
     pub fn nc(&self) -> usize {
@@ -79,21 +96,89 @@ impl LmModel {
         self.e * VOCAB + VOCAB
     }
 
-    /// h[b,t,:] = tanh(E0[tok] + ΔE[tok]); x is batch*seq tokens.
-    pub fn client_fwd(&self, base: &[f32], theta_c: &[f32], x: &[i32]) -> Vec<f32> {
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Hidden width of the MLP aux (0 otherwise) — sizes the z1 scratch.
+    fn aux_hidden(&self) -> usize {
+        match self.aux {
+            AuxKind::Mlp(k) => k,
+            _ => 0,
+        }
+    }
+
+    /// Memoized E0 row gather for a token batch: `out[i, :] = E0[x_i, :]`
+    /// (clamped tokens). θ-independent, so one gather serves every entry
+    /// invoked on the batch — and `zo_step_into` fetches it **once** and
+    /// reuses it across every probe. The key hashes the **full** base
+    /// table (not a sampled fingerprint), so distinct base tables can
+    /// never alias to the same cached gather. That read is a deliberate
+    /// per-lookup cost: base arrives as a per-call argument with no
+    /// identity the model may trust, and every cheaper fingerprint
+    /// (length/ends sampling, pointer memos) reopens a silent-staleness
+    /// hole; the probe loop amortizes it where it matters.
+    fn base_rows_cached(
+        &self,
+        base: &[f32],
+        x: &[i32],
+    ) -> std::sync::Arc<Vec<f32>> {
+        let key = cache::hash_i32(0xBA5E ^ self.e as u64, x)
+            .rotate_left(17)
+            ^ cache::hash_f32(0xE0_B45E, base);
         let e = self.e;
-        let n = x.len();
-        let mut h = vec![0.0f32; n * e];
+        self.cache.get_or_compute(key, || {
+            let mut g = vec![0.0f32; x.len() * e];
+            for (i, &tok) in x.iter().enumerate() {
+                let t = (tok.clamp(0, VOCAB as i32 - 1)) as usize;
+                g[i * e..(i + 1) * e]
+                    .copy_from_slice(&base[t * e..(t + 1) * e]);
+            }
+            g
+        })
+    }
+
+    /// Client forward from pre-gathered E0 rows: the summands and their
+    /// order equal the direct-gather formulation, so h is bit-identical.
+    fn client_fwd_with_rows(
+        &self,
+        bg: &[f32],
+        theta_c: &[f32],
+        x: &[i32],
+        out: &mut Vec<f32>,
+    ) {
+        let e = self.e;
+        out.clear();
+        out.resize(x.len() * e, 0.0);
         for (i, &tok) in x.iter().enumerate() {
             let t = (tok.clamp(0, VOCAB as i32 - 1)) as usize;
-            let b0 = &base[t * e..(t + 1) * e];
+            let b0 = &bg[i * e..(i + 1) * e];
             let d0 = &theta_c[t * e..(t + 1) * e];
-            let out = &mut h[i * e..(i + 1) * e];
+            let o = &mut out[i * e..(i + 1) * e];
             for j in 0..e {
-                out[j] = (b0[j] + d0[j]).tanh();
+                o[j] = (b0[j] + d0[j]).tanh();
             }
         }
-        h
+    }
+
+    /// h[b,t,:] = tanh(E0[tok] + ΔE[tok]) into a reused buffer; x is
+    /// batch*seq tokens. The E0 gather comes from the cache.
+    pub fn client_fwd_into(
+        &self,
+        base: &[f32],
+        theta_c: &[f32],
+        x: &[i32],
+        out: &mut Vec<f32>,
+    ) {
+        let bg = self.base_rows_cached(base, x);
+        self.client_fwd_with_rows(&bg, theta_c, x, out);
+    }
+
+    /// h[b,t,:] = tanh(E0[tok] + ΔE[tok]); x is batch*seq tokens.
+    pub fn client_fwd(&self, base: &[f32], theta_c: &[f32], x: &[i32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.client_fwd_into(base, theta_c, x, &mut out);
+        out
     }
 
     /// Linear-head CE over shifted targets. `w` is [W(e*V), b(V)].
@@ -140,8 +225,101 @@ impl LmModel {
 
     /// Local (aux-head) mean loss for ZO / reporting.
     pub fn local_loss(&self, base: &[f32], theta_l: &[f32], x: &[i32], seq: usize) -> f32 {
-        let h = self.client_fwd(base, &theta_l[..self.nc()], x);
-        self.aux_ce(&theta_l[self.nc()..], &h, x, seq).mean as f32
+        let mut h = Vec::new();
+        self.client_fwd_into(base, &theta_l[..self.nc()], x, &mut h);
+        let mut logits = vec![0.0f32; VOCAB];
+        let mut z1 = vec![0.0f32; self.aux_hidden()];
+        self.aux_loss(&theta_l[self.nc()..], &h, x, seq, &mut logits, &mut z1)
+    }
+
+    /// Allocation-free aux-head mean loss: identical traversal order,
+    /// masking, and f64 accumulation as [`Self::aux_ce`], minus the
+    /// dlogits/probs materialization — bit-identical mean, zero
+    /// temporaries beyond the caller's row scratch.
+    fn aux_loss(
+        &self,
+        wa: &[f32],
+        h: &[f32],
+        x: &[i32],
+        seq: usize,
+        logits: &mut [f32],
+        z1: &mut [f32],
+    ) -> f32 {
+        let e = self.e;
+        let batch = x.len() / seq;
+        let tpos = seq - 1;
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        match self.aux {
+            AuxKind::Bias => {
+                for b in 0..batch {
+                    for t in 0..tpos {
+                        let tgt = x[b * seq + t + 1];
+                        if tgt <= 0 {
+                            continue;
+                        }
+                        sum += nll_only(wa, tgt as usize) as f64;
+                        count += 1;
+                    }
+                }
+            }
+            AuxKind::Linear => {
+                let (wm, wb) = wa.split_at(e * VOCAB);
+                for b in 0..batch {
+                    for t in 0..tpos {
+                        let tgt = x[b * seq + t + 1];
+                        if tgt <= 0 {
+                            continue;
+                        }
+                        let hv =
+                            &h[(b * seq + t) * e..(b * seq + t + 1) * e];
+                        logits.copy_from_slice(wb);
+                        for j in 0..e {
+                            let hj = hv[j];
+                            let row = &wm[j * VOCAB..(j + 1) * VOCAB];
+                            for v in 0..VOCAB {
+                                logits[v] += hj * row[v];
+                            }
+                        }
+                        sum += nll_only(logits, tgt as usize) as f64;
+                        count += 1;
+                    }
+                }
+            }
+            AuxKind::Mlp(k) => {
+                let (w1, rest) = wa.split_at(e * k);
+                let (b1, rest) = rest.split_at(k);
+                let (w2, b2) = rest.split_at(k * VOCAB);
+                for b in 0..batch {
+                    for t in 0..tpos {
+                        let tgt = x[b * seq + t + 1];
+                        if tgt <= 0 {
+                            continue;
+                        }
+                        let hv =
+                            &h[(b * seq + t) * e..(b * seq + t + 1) * e];
+                        for m in 0..k {
+                            let mut z = b1[m];
+                            for j in 0..e {
+                                z += hv[j] * w1[j * k + m];
+                            }
+                            z1[m] = z.tanh();
+                        }
+                        logits.copy_from_slice(b2);
+                        for m in 0..k {
+                            let zm = z1[m];
+                            let row = &w2[m * VOCAB..(m + 1) * VOCAB];
+                            for v in 0..VOCAB {
+                                logits[v] += zm * row[v];
+                            }
+                        }
+                        sum += nll_only(logits, tgt as usize) as f64;
+                        count += 1;
+                    }
+                }
+            }
+        }
+        (sum / count.max(1) as f64) as f32
     }
 
     fn aux_ce(&self, wa: &[f32], h: &[f32], x: &[i32], seq: usize) -> CeOut {
@@ -231,6 +409,49 @@ impl LmModel {
         }
     }
 
+    /// ZO step on θ_l against the aux-head mean loss, into a reused
+    /// buffer. Each probe's `u` is regenerated from its counter-based
+    /// seed in fixed chunks (perturb pass / update pass), so temporary
+    /// memory is O(d + chunk) regardless of `n_pert` and no per-probe
+    /// vector is allocated; the value stream and accumulation order match
+    /// the materialized formulation bit for bit.
+    pub fn zo_step_into(
+        &self,
+        base: &[f32],
+        theta_l: &[f32],
+        x: &[i32],
+        seq: usize,
+        seed: i32,
+        mu: f32,
+        lr: f32,
+        n_pert: i32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let nc = self.nc();
+        let mut h = Vec::new();
+        let mut logits = vec![0.0f32; VOCAB];
+        let mut z1 = vec![0.0f32; self.aux_hidden()];
+        // one gather lookup for the whole step: every probe shares it
+        let bg = self.base_rows_cached(base, x);
+        self.client_fwd_with_rows(&bg, &theta_l[..nc], x, &mut h);
+        let lbase =
+            self.aux_loss(&theta_l[nc..], &h, x, seq, &mut logits, &mut z1);
+        two_point_zo_into(
+            theta_l,
+            seed,
+            mu,
+            lr,
+            n_pert,
+            lbase,
+            |pert| {
+                self.client_fwd_with_rows(&bg, &pert[..nc], x, &mut h);
+                self.aux_loss(&pert[nc..], &h, x, seq, &mut logits, &mut z1)
+            },
+            out,
+        );
+        lbase
+    }
+
     /// ZO step on θ_l against the aux-head mean loss.
     pub fn zo_step(
         &self,
@@ -243,71 +464,60 @@ impl LmModel {
         lr: f32,
         n_pert: i32,
     ) -> (Vec<f32>, f32) {
-        let d = theta_l.len();
-        let lbase = self.local_loss(base, theta_l, x, seq);
-        let n_pert = n_pert.max(1) as usize;
-        let mut delta = vec![0.0f32; d];
-        let mut pert = vec![0.0f32; d];
-        for k in 0..n_pert {
-            let u = PerturbStream::new(fold_seed(seed as u32, k as u32))
-                .take_vec(d);
-            for i in 0..d {
-                pert[i] = theta_l[i] + mu * u[i];
-            }
-            let lp = self.local_loss(base, &pert, x, seq);
-            let gscale = (lp - lbase) / mu * (lr / n_pert as f32);
-            for i in 0..d {
-                delta[i] -= gscale * u[i];
-            }
-        }
-        let mut th = theta_l.to_vec();
-        for i in 0..d {
-            th[i] += delta[i];
-        }
-        (th, lbase)
+        let mut out = Vec::new();
+        let loss = self.zo_step_into(
+            base, theta_l, x, seq, seed, mu, lr, n_pert, &mut out,
+        );
+        (out, loss)
     }
 
-    /// FO step on θ_l (aux head + ΔE), sum reduction.
-    pub fn fo_step(
+    /// FO step on θ_l (aux head + ΔE), sum reduction, into a reused
+    /// buffer; returns the pre-update mean loss.
+    pub fn fo_step_into(
         &self,
         base: &[f32],
         theta_l: &[f32],
         x: &[i32],
         seq: usize,
         lr: f32,
-    ) -> (Vec<f32>, f32) {
+        out: &mut Vec<f32>,
+    ) -> f32 {
         let e = self.e;
         let nc = self.nc();
-        let h = self.client_fwd(base, &theta_l[..nc], x);
-        let out = self.aux_ce(&theta_l[nc..], &h, x, seq);
+        let mut h = Vec::new();
+        self.client_fwd_into(base, &theta_l[..nc], x, &mut h);
+        let ce = self.aux_ce(&theta_l[nc..], &h, x, seq);
         let tpos = seq - 1;
         let batch = x.len() / seq;
-        let mut th = theta_l.to_vec();
+        out.clear();
+        out.extend_from_slice(theta_l);
         // gradient of SUM nll: dlogits rows are (p - onehot) per position
         match self.aux {
             AuxKind::Bias => {
                 let off = nc;
                 for b in 0..batch {
                     for t in 0..tpos {
-                        let db = &out.dlogits[(b * tpos + t) * VOCAB
+                        let db = &ce.dlogits[(b * tpos + t) * VOCAB
                             ..(b * tpos + t + 1) * VOCAB];
                         for v in 0..VOCAB {
-                            th[off + v] -= lr * db[v];
+                            out[off + v] -= lr * db[v];
                         }
                     }
                 }
             }
             AuxKind::Linear => {
-                let wa: Vec<f32> = theta_l[nc..nc + e * VOCAB].to_vec();
+                // reads come from the immutable θ_l, writes go to `out`,
+                // so the pre-update weights need no defensive copy
+                let wa = &theta_l[nc..nc + e * VOCAB];
                 for b in 0..batch {
                     for t in 0..tpos {
-                        let db = &out.dlogits[(b * tpos + t) * VOCAB
+                        let db = &ce.dlogits[(b * tpos + t) * VOCAB
                             ..(b * tpos + t + 1) * VOCAB];
                         let pos = b * seq + t;
                         let hv = &h[pos * e..(pos + 1) * e];
                         // aux W/b grads
                         for j in 0..e {
-                            let row = &mut th
+                            let row = &mut out
                                 [nc + j * VOCAB..nc + (j + 1) * VOCAB];
                             for v in 0..VOCAB {
                                 row[v] -= lr * hv[j] * db[v];
@@ -315,7 +525,7 @@ impl LmModel {
                         }
                         let boff = nc + e * VOCAB;
                         for v in 0..VOCAB {
-                            th[boff + v] -= lr * db[v];
+                            out[boff + v] -= lr * db[v];
                         }
                         // ΔE grad through tanh'
                         let tok =
@@ -327,7 +537,7 @@ impl LmModel {
                                 gh += db[v] * row[v];
                             }
                             let hj = hv[j];
-                            th[tok * e + j] -= lr * gh * (1.0 - hj * hj);
+                            out[tok * e + j] -= lr * gh * (1.0 - hj * hj);
                         }
                     }
                 }
@@ -337,53 +547,71 @@ impl LmModel {
                 // ablation; a plain SPSA-style fallback keeps it trainable
                 // without a full hand-written backprop: reuse the ZO
                 // estimator with a fixed probe count.
-                let (t2, _) =
-                    self.zo_step(base, theta_l, x, seq, 0x0F0E, 1e-2, lr, 4);
-                th = t2;
+                self.zo_step_into(
+                    base, theta_l, x, seq, 0x0F0E, 1e-2, lr, 4, out,
+                );
             }
         }
-        (th, out.mean as f32)
+        ce.mean as f32
     }
 
-    /// Server FO update (sum reduction); optionally the cut gradient.
-    pub fn server_step(
+    /// FO step on θ_l (aux head + ΔE), sum reduction.
+    pub fn fo_step(
+        &self,
+        base: &[f32],
+        theta_l: &[f32],
+        x: &[i32],
+        seq: usize,
+        lr: f32,
+    ) -> (Vec<f32>, f32) {
+        let mut out = Vec::new();
+        let loss = self.fo_step_into(base, theta_l, x, seq, lr, &mut out);
+        (out, loss)
+    }
+
+    /// Server FO update (sum reduction) into reused buffers; returns the
+    /// loss and fills `cut` with the cut gradient if given.
+    pub fn server_step_into(
         &self,
         theta_s: &[f32],
         smashed: &[f32],
         x: &[i32],
         seq: usize,
         lr: f32,
-        want_cutgrad: bool,
-    ) -> (Vec<f32>, f32, Option<Vec<f32>>) {
+        cut: Option<&mut Vec<f32>>,
+        out: &mut Vec<f32>,
+    ) -> f32 {
         let e = self.e;
-        let out = self.linear_head_ce(theta_s, smashed, x, seq);
+        let ce = self.linear_head_ce(theta_s, smashed, x, seq);
         let tpos = seq - 1;
         let batch = x.len() / seq;
-        let mut th = theta_s.to_vec();
+        out.clear();
+        out.extend_from_slice(theta_s);
         for b in 0..batch {
             for t in 0..tpos {
-                let db = &out.dlogits
+                let db = &ce.dlogits
                     [(b * tpos + t) * VOCAB..(b * tpos + t + 1) * VOCAB];
                 let pos = b * seq + t;
                 let hv = &smashed[pos * e..(pos + 1) * e];
                 for j in 0..e {
-                    let row = &mut th[j * VOCAB..(j + 1) * VOCAB];
+                    let row = &mut out[j * VOCAB..(j + 1) * VOCAB];
                     for v in 0..VOCAB {
                         row[v] -= lr * hv[j] * db[v];
                     }
                 }
                 let boff = e * VOCAB;
                 for v in 0..VOCAB {
-                    th[boff + v] -= lr * db[v];
+                    out[boff + v] -= lr * db[v];
                 }
             }
         }
-        let cut = if want_cutgrad {
+        if let Some(g) = cut {
             let wm = &theta_s[..e * VOCAB];
-            let mut g = vec![0.0f32; smashed.len()];
+            g.clear();
+            g.resize(smashed.len(), 0.0);
             for b in 0..batch {
                 for t in 0..tpos {
-                    let db = &out.dlogits[(b * tpos + t) * VOCAB
+                    let db = &ce.dlogits[(b * tpos + t) * VOCAB
                         ..(b * tpos + t + 1) * VOCAB];
                     let pos = b * seq + t;
                     let gv = &mut g[pos * e..(pos + 1) * e];
@@ -397,11 +625,57 @@ impl LmModel {
                     }
                 }
             }
-            Some(g)
-        } else {
-            None
-        };
-        (th, out.mean as f32, cut)
+        }
+        ce.mean as f32
+    }
+
+    /// Server FO update (sum reduction); optionally the cut gradient.
+    pub fn server_step(
+        &self,
+        theta_s: &[f32],
+        smashed: &[f32],
+        x: &[i32],
+        seq: usize,
+        lr: f32,
+        want_cutgrad: bool,
+    ) -> (Vec<f32>, f32, Option<Vec<f32>>) {
+        let mut out = Vec::new();
+        let mut cut = Vec::new();
+        let loss = self.server_step_into(
+            theta_s,
+            smashed,
+            x,
+            seq,
+            lr,
+            if want_cutgrad { Some(&mut cut) } else { None },
+            &mut out,
+        );
+        (out, loss, if want_cutgrad { Some(cut) } else { None })
+    }
+
+    /// Client backprop from the relayed cut gradient (SplitLoRA path).
+    pub fn client_bp_step_into(
+        &self,
+        base: &[f32],
+        theta_c: &[f32],
+        x: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) {
+        let e = self.e;
+        let mut h = Vec::new();
+        self.client_fwd_into(base, theta_c, x, &mut h);
+        out.clear();
+        out.extend_from_slice(theta_c);
+        for (i, &tok) in x.iter().enumerate() {
+            let t = (tok.clamp(0, VOCAB as i32 - 1)) as usize;
+            let hv = &h[i * e..(i + 1) * e];
+            let gv = &g_smashed[i * e..(i + 1) * e];
+            for j in 0..e {
+                out[t * e + j] -= lr * gv[j] * (1.0 - hv[j] * hv[j]);
+            }
+        }
     }
 
     /// Client backprop from the relayed cut gradient (SplitLoRA path).
@@ -413,18 +687,58 @@ impl LmModel {
         g_smashed: &[f32],
         lr: f32,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.client_bp_step_into(base, theta_c, x, g_smashed, lr, &mut out);
+        out
+    }
+
+    /// FSL-SAGE alignment of the aux head toward the server cut gradient.
+    pub fn aux_align_into(
+        &self,
+        base: &[f32],
+        theta_l: &[f32],
+        smashed: &[f32],
+        x: &[i32],
+        seq: usize,
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) {
+        let _ = base;
         let e = self.e;
-        let h = self.client_fwd(base, theta_c, x);
-        let mut th = theta_c.to_vec();
-        for (i, &tok) in x.iter().enumerate() {
-            let t = (tok.clamp(0, VOCAB as i32 - 1)) as usize;
-            let hv = &h[i * e..(i + 1) * e];
-            let gv = &g_smashed[i * e..(i + 1) * e];
-            for j in 0..e {
-                th[t * e + j] -= lr * gv[j] * (1.0 - hv[j] * hv[j]);
+        let nc = self.nc();
+        out.clear();
+        out.extend_from_slice(theta_l);
+        if self.aux != AuxKind::Linear {
+            // bias-only aux has no cut-gradient path to align; the MLP aux
+            // alignment is not exercised by any configured baseline
+            return;
+        }
+        let ce = self.aux_ce(&theta_l[nc..], smashed, x, seq);
+        let wa = &theta_l[nc..nc + e * VOCAB];
+        let tpos = seq - 1;
+        let batch = x.len() / seq;
+        for b in 0..batch {
+            for t in 0..tpos {
+                let db = &ce.dlogits
+                    [(b * tpos + t) * VOCAB..(b * tpos + t + 1) * VOCAB];
+                let pos = b * seq + t;
+                let gs = &g_smashed[pos * e..(pos + 1) * e];
+                for j in 0..e {
+                    let row = &wa[j * VOCAB..(j + 1) * VOCAB];
+                    let mut ga = 0.0f32;
+                    for v in 0..VOCAB {
+                        ga += db[v] * row[v];
+                    }
+                    let diff = ga - gs[j];
+                    let orow =
+                        &mut out[nc + j * VOCAB..nc + (j + 1) * VOCAB];
+                    for v in 0..VOCAB {
+                        orow[v] -= lr * diff * db[v];
+                    }
+                }
             }
         }
-        th
     }
 
     /// FSL-SAGE alignment of the aux head toward the server cut gradient.
@@ -438,41 +752,11 @@ impl LmModel {
         g_smashed: &[f32],
         lr: f32,
     ) -> Vec<f32> {
-        let _ = base;
-        let e = self.e;
-        let nc = self.nc();
-        let mut th = theta_l.to_vec();
-        if self.aux != AuxKind::Linear {
-            // bias-only aux has no cut-gradient path to align; the MLP aux
-            // alignment is not exercised by any configured baseline
-            return th;
-        }
-        let out = self.aux_ce(&theta_l[nc..], smashed, x, seq);
-        let wa = &theta_l[nc..nc + e * VOCAB];
-        let tpos = seq - 1;
-        let batch = x.len() / seq;
-        for b in 0..batch {
-            for t in 0..tpos {
-                let db = &out.dlogits
-                    [(b * tpos + t) * VOCAB..(b * tpos + t + 1) * VOCAB];
-                let pos = b * seq + t;
-                let gs = &g_smashed[pos * e..(pos + 1) * e];
-                for j in 0..e {
-                    let row = &wa[j * VOCAB..(j + 1) * VOCAB];
-                    let mut ga = 0.0f32;
-                    for v in 0..VOCAB {
-                        ga += db[v] * row[v];
-                    }
-                    let diff = ga - gs[j];
-                    let orow =
-                        &mut th[nc + j * VOCAB..nc + (j + 1) * VOCAB];
-                    for v in 0..VOCAB {
-                        orow[v] -= lr * diff * db[v];
-                    }
-                }
-            }
-        }
-        th
+        let mut out = Vec::new();
+        self.aux_align_into(
+            base, theta_l, smashed, x, seq, g_smashed, lr, &mut out,
+        );
+        out
     }
 
     /// (NLL sum, valid-token count) of the assembled client+server model.
@@ -503,6 +787,21 @@ fn log_softmax_nll(logits: &[f32], target: usize) -> (f32, Vec<f32>) {
     let lse = mx + se.ln();
     let probs: Vec<f32> = logits.iter().map(|&v| (v - lse).exp()).collect();
     (lse - logits[target.min(logits.len() - 1)], probs)
+}
+
+/// The nll of [`log_softmax_nll`] without materializing the probs — the
+/// same max/sum-exp/ln op sequence, hence the same bits.
+fn nll_only(logits: &[f32], target: usize) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in logits {
+        mx = mx.max(v);
+    }
+    let mut se = 0.0f32;
+    for &v in logits {
+        se += (v - mx).exp();
+    }
+    let lse = mx + se.ln();
+    lse - logits[target.min(logits.len() - 1)]
 }
 
 #[cfg(test)]
@@ -567,6 +866,95 @@ mod tests {
         assert_eq!(a, bb);
         assert_eq!(la, lb);
         assert!((la - (VOCAB as f32).ln()).abs() < 0.05);
+    }
+
+    #[test]
+    fn chunked_zo_matches_materialized_reference() {
+        // reference: the pre-refactor formulation with a materialized u
+        // per probe and a separate delta vector
+        let m = model();
+        let b = base(16);
+        let x = synth_text::batch(42, 0, 2);
+        let th: Vec<f32> = PerturbStream::new(fold_seed(0x7E57, 2))
+            .take_vec(m.nl())
+            .into_iter()
+            .map(|v| v * 0.05)
+            .collect();
+        let d = th.len();
+        let (seed, mu, lr, n_pert) = (0x5EED, 1e-2f32, 1e-3f32, 3usize);
+        let lbase = m.local_loss(&b, &th, &x, SEQ);
+        let mut delta = vec![0.0f32; d];
+        let mut pert = vec![0.0f32; d];
+        for k in 0..n_pert {
+            let u = PerturbStream::new(fold_seed(seed as u32, k as u32))
+                .take_vec(d);
+            for i in 0..d {
+                pert[i] = th[i] + mu * u[i];
+            }
+            let lp = m.local_loss(&b, &pert, &x, SEQ);
+            let gscale = (lp - lbase) / mu * (lr / n_pert as f32);
+            for i in 0..d {
+                delta[i] -= gscale * u[i];
+            }
+        }
+        let mut want = th.clone();
+        for i in 0..d {
+            want[i] += delta[i];
+        }
+        let (got, lgot) =
+            m.zo_step(&b, &th, &x, SEQ, seed, mu, lr, n_pert as i32);
+        assert_eq!(lgot.to_bits(), lbase.to_bits());
+        for i in 0..d {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn aux_loss_matches_aux_ce_mean_for_all_kinds() {
+        for aux in [AuxKind::Bias, AuxKind::Linear, AuxKind::Mlp(8)] {
+            let m = LmModel::new(16, aux);
+            let b = base(16);
+            let x = synth_text::batch(7, 0, 2);
+            let wa: Vec<f32> = PerturbStream::new(fold_seed(0xA0A, 3))
+                .take_vec(m.na())
+                .into_iter()
+                .map(|v| v * 0.1)
+                .collect();
+            let th_c = vec![0.0f32; m.nc()];
+            let h = m.client_fwd(&b, &th_c, &x);
+            let want = m.aux_ce(&wa, &h, &x, SEQ).mean as f32;
+            let mut logits = vec![0.0f32; VOCAB];
+            let mut z1 = vec![0.0f32; m.aux_hidden()];
+            let got = m.aux_loss(&wa, &h, &x, SEQ, &mut logits, &mut z1);
+            assert_eq!(got.to_bits(), want.to_bits(), "aux {aux:?}");
+        }
+    }
+
+    #[test]
+    fn cached_base_rows_leave_fwd_bit_identical() {
+        let m = model();
+        let b = base(16);
+        let x = synth_text::batch(11, 0, 2);
+        let th_c: Vec<f32> = PerturbStream::new(fold_seed(0xC0DE, 1))
+            .take_vec(m.nc())
+            .into_iter()
+            .map(|v| v * 0.05)
+            .collect();
+        // direct reference without the gather cache
+        let e = m.e;
+        let mut want = vec![0.0f32; x.len() * e];
+        for (i, &tok) in x.iter().enumerate() {
+            let t = (tok.clamp(0, VOCAB as i32 - 1)) as usize;
+            for j in 0..e {
+                want[i * e + j] = (b[t * e + j] + th_c[t * e + j]).tanh();
+            }
+        }
+        let h1 = m.client_fwd(&b, &th_c, &x); // cold: gather miss
+        let h2 = m.client_fwd(&b, &th_c, &x); // warm: gather hit
+        assert_eq!(h1, want);
+        assert_eq!(h2, want);
+        let st = m.cache_stats();
+        assert!(st.hits >= 1 && st.misses >= 1);
     }
 
     #[test]

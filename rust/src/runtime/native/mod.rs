@@ -8,19 +8,30 @@
 //! API when the XLA toolchain is available (it is not part of the offline
 //! vendor set).
 //!
-//! The engine is stateless per call and `Sync`: every model's fixed state
-//! (the vision feature banks) is built once at session construction, so
-//! worker threads can invoke entries concurrently with no locking on the
-//! hot path.
+//! The engine is `Sync`: every model's fixed state (the vision feature
+//! banks) is built once at session construction, and the per-model
+//! [`cache::FeatureCache`] of θ-independent projections is sharded behind
+//! its own locks, so worker threads invoke entries concurrently with no
+//! contention on the compute path.
+//!
+//! ## Zero-allocation execution
+//!
+//! [`Engine::execute_into`] is the primary path: inputs arrive as borrowed
+//! [`TensorRef`] views (no argument cloning) and outputs are written into
+//! a caller-owned `Vec<TensorValue>` whose buffers are reused across
+//! invocations. The allocating [`Engine::execute`] wrapper remains for
+//! cold paths and produces bit-identical results.
 
+pub mod cache;
 pub mod lm;
 pub mod vision;
 
 use crate::runtime::manifest::{EntrySpec, Manifest, VariantSpec};
-use crate::runtime::tensor::TensorValue;
+use crate::runtime::tensor::{TensorRef, TensorValue};
 use anyhow::{bail, Context, Result};
+use cache::CacheStats;
 use lm::{AuxKind, LmModel};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use vision::VisionModel;
 
 pub enum Model {
@@ -48,34 +59,82 @@ impl Engine {
             .with_context(|| format!("no native model for variant {variant}"))
     }
 
-    /// Execute one entry. Inputs are positional per `espec.inputs`; outputs
-    /// are returned positional per `espec.outputs`.
+    /// Aggregate feature-plan cache counters across all variant models.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut agg = CacheStats::default();
+        for m in self.models.values() {
+            let s = match m {
+                Model::Vision(v) => v.cache_stats(),
+                Model::Lm(l) => l.cache_stats(),
+            };
+            agg.hits += s.hits;
+            agg.misses += s.misses;
+            agg.bytes_avoided += s.bytes_avoided;
+        }
+        agg
+    }
+
+    /// Execute one entry (allocating wrapper). Inputs are positional per
+    /// `espec.inputs`; outputs are returned positional per `espec.outputs`.
     pub fn execute(
         &self,
         vspec: &VariantSpec,
         espec: &EntrySpec,
         inputs: &[TensorValue],
     ) -> Result<Vec<TensorValue>> {
-        let model = self.model(&vspec.name)?;
-        let args: HashMap<&str, &TensorValue> = espec
-            .inputs
-            .iter()
-            .zip(inputs)
-            .map(|(s, v)| (s.name.as_str(), v))
-            .collect();
-        let mut outs = match model {
-            Model::Vision(m) => exec_vision(m, &espec.name, &args)?,
-            Model::Lm(m) => exec_lm(m, vspec, &espec.name, &args)?,
-        };
-        let mut ordered = Vec::with_capacity(espec.outputs.len());
-        for spec in &espec.outputs {
-            let v = outs.remove(spec.name.as_str()).with_context(|| {
-                format!("{}/{}: engine missing output {}", vspec.name, espec.name, spec.name)
-            })?;
-            ordered.push(v);
-        }
-        Ok(ordered)
+        let refs: Vec<TensorRef> =
+            inputs.iter().map(|v| v.view()).collect();
+        let mut outs = Vec::new();
+        self.execute_into(vspec, espec, &refs, &mut outs)?;
+        Ok(outs)
     }
+
+    /// Execute one entry with borrowed inputs, writing outputs into
+    /// `outs` (positional per `espec.outputs`, buffers reused when the
+    /// slot already holds a vector). Bit-identical to [`Self::execute`].
+    pub fn execute_into(
+        &self,
+        vspec: &VariantSpec,
+        espec: &EntrySpec,
+        inputs: &[TensorRef<'_>],
+        outs: &mut Vec<TensorValue>,
+    ) -> Result<()> {
+        let model = self.model(&vspec.name)?;
+        // the exec arms write a fixed set of named outputs; an entry spec
+        // declaring more must fail loudly here, not silently hand back
+        // placeholder (or previously-reused) slots
+        if let Some(n) = produced_outputs(&espec.name) {
+            if espec.outputs.len() != n {
+                bail!(
+                    "{}/{}: manifest declares {} outputs but the native \
+                     engine produces {n}",
+                    vspec.name,
+                    espec.name,
+                    espec.outputs.len()
+                );
+            }
+        }
+        prepare_outs(espec, outs);
+        match model {
+            Model::Vision(m) => exec_vision(m, espec, inputs, outs),
+            Model::Lm(m) => exec_lm(m, vspec, espec, inputs, outs),
+        }
+    }
+}
+
+/// How many outputs the engine writes for each known entry (`None` for
+/// unknown names — the exec arms reject those themselves). Kept in sync
+/// with the exec arms; `artifacts::tests` asserts it covers every
+/// generated entry spec, so adding an entry without extending this table
+/// fails a test instead of silently skipping the stale-slot guard.
+pub(crate) fn produced_outputs(entry: &str) -> Option<usize> {
+    Some(match entry {
+        "local_loss" | "client_fwd" | "client_bp_step" | "aux_align"
+        | "hvp" => 1,
+        "zo_step" | "fo_step" | "server_step" | "eval_full" => 2,
+        "server_step_cutgrad" => 3,
+        _ => return None,
+    })
 }
 
 fn build_model(v: &VariantSpec) -> Result<Model> {
@@ -106,243 +165,391 @@ fn build_model(v: &VariantSpec) -> Result<Model> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// positional argument access (no marshalling maps on the hot path)
+// ---------------------------------------------------------------------------
+
+fn arg<'a>(
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'a>],
+    name: &str,
+) -> Result<TensorRef<'a>> {
+    for (spec, val) in espec.inputs.iter().zip(inputs) {
+        if spec.name == name {
+            return Ok(*val);
+        }
+    }
+    bail!("missing input {name}")
+}
+
 fn f32_arg<'a>(
-    args: &'a HashMap<&str, &TensorValue>,
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'a>],
     name: &str,
 ) -> Result<&'a [f32]> {
-    args.get(name)
-        .with_context(|| format!("missing input {name}"))?
-        .as_f32()
+    arg(espec, inputs, name)?.as_f32()
 }
 
 fn i32_arg<'a>(
-    args: &'a HashMap<&str, &TensorValue>,
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'a>],
     name: &str,
 ) -> Result<&'a [i32]> {
-    match args.get(name).with_context(|| format!("missing input {name}"))? {
-        TensorValue::I32(v) => Ok(v),
-        other => bail!("input {name}: expected i32, got {:?}", other.dtype()),
+    arg(espec, inputs, name)?.as_i32()
+}
+
+fn scalar_f32(
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'_>],
+    name: &str,
+) -> Result<f32> {
+    arg(espec, inputs, name)?.scalar_f32()
+}
+
+fn scalar_i32(
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'_>],
+    name: &str,
+) -> Result<i32> {
+    arg(espec, inputs, name)?.scalar_i32()
+}
+
+// ---------------------------------------------------------------------------
+// output slots (buffer-reusing)
+// ---------------------------------------------------------------------------
+
+/// Normalize `outs` to the entry's output arity, keeping any reusable
+/// buffers already present in the slots.
+fn prepare_outs(espec: &EntrySpec, outs: &mut Vec<TensorValue>) {
+    outs.truncate(espec.outputs.len());
+    while outs.len() < espec.outputs.len() {
+        outs.push(TensorValue::ScalarF32(0.0));
     }
 }
 
-fn scalar_f32(args: &HashMap<&str, &TensorValue>, name: &str) -> Result<f32> {
-    args.get(name)
-        .with_context(|| format!("missing input {name}"))?
-        .scalar_f32()
-}
-
-fn scalar_i32(args: &HashMap<&str, &TensorValue>, name: &str) -> Result<i32> {
-    match args.get(name).with_context(|| format!("missing input {name}"))? {
-        TensorValue::ScalarI32(s) => Ok(*s),
-        TensorValue::I32(v) if v.len() == 1 => Ok(v[0]),
-        other => bail!("input {name}: expected i32 scalar, got len {}", other.len()),
+/// Borrow the f32 vector behind an output slot, converting the slot in
+/// place if it held something else. The callee sizes and fills it.
+fn out_f32_vec(outs: &mut [TensorValue], idx: usize) -> &mut Vec<f32> {
+    if !matches!(outs[idx], TensorValue::F32(_)) {
+        outs[idx] = TensorValue::F32(Vec::new());
+    }
+    match &mut outs[idx] {
+        TensorValue::F32(v) => v,
+        _ => unreachable!("slot was just normalized to F32"),
     }
 }
+
+/// Move the f32 vector out of a slot (leaving a scalar placeholder) so two
+/// vector outputs can be filled without aliasing the slot array.
+fn take_f32_buf(outs: &mut [TensorValue], idx: usize) -> Vec<f32> {
+    match std::mem::replace(&mut outs[idx], TensorValue::ScalarF32(0.0)) {
+        TensorValue::F32(v) => v,
+        _ => Vec::new(),
+    }
+}
+
+fn set_scalar_f32(outs: &mut [TensorValue], idx: usize, v: f32) {
+    outs[idx] = TensorValue::ScalarF32(v);
+}
+
+/// The server_step / server_step_cutgrad slot choreography shared by both
+/// tasks: resolve the θ_s/loss/(g_smashed) slots, lend the callee a cut
+/// buffer taken from its slot when the entry wants one, write everything
+/// back. `step(cut, theta_out)` returns the loss.
+fn run_server_step(
+    espec: &EntrySpec,
+    outs: &mut Vec<TensorValue>,
+    step: impl FnOnce(Option<&mut Vec<f32>>, &mut Vec<f32>) -> f32,
+) -> Result<()> {
+    let want = espec.name == "server_step_cutgrad";
+    let ti = espec.output_pos("theta_s")?;
+    let li = espec.output_pos("loss")?;
+    let gi = if want {
+        Some(espec.output_pos("g_smashed")?)
+    } else {
+        None
+    };
+    let mut cut_buf = match gi {
+        Some(gi) => take_f32_buf(outs, gi),
+        None => Vec::new(),
+    };
+    let loss = {
+        let cut = if want { Some(&mut cut_buf) } else { None };
+        step(cut, out_f32_vec(outs, ti))
+    };
+    if let Some(gi) = gi {
+        outs[gi] = TensorValue::F32(cut_buf);
+    }
+    set_scalar_f32(outs, li, loss);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// per-task dispatch
+// ---------------------------------------------------------------------------
 
 fn exec_vision(
     m: &VisionModel,
-    entry: &str,
-    args: &HashMap<&str, &TensorValue>,
-) -> Result<HashMap<&'static str, TensorValue>> {
-    let mut outs: HashMap<&'static str, TensorValue> = HashMap::new();
-    match entry {
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'_>],
+    outs: &mut Vec<TensorValue>,
+) -> Result<()> {
+    match espec.name.as_str() {
         "local_loss" => {
             let loss = m.local_loss(
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "x")?,
-                i32_arg(args, "y")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "x")?,
+                i32_arg(espec, inputs, "y")?,
             );
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, espec.output_pos("loss")?, loss);
         }
         "zo_step" => {
-            let (theta, loss) = m.zo_step(
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "x")?,
-                i32_arg(args, "y")?,
-                scalar_i32(args, "seed")?,
-                scalar_f32(args, "mu")?,
-                scalar_f32(args, "lr")?,
-                scalar_i32(args, "n_pert")?,
+            let ti = espec.output_pos("theta_l")?;
+            let li = espec.output_pos("loss")?;
+            let loss = m.zo_step_into(
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "x")?,
+                i32_arg(espec, inputs, "y")?,
+                scalar_i32(espec, inputs, "seed")?,
+                scalar_f32(espec, inputs, "mu")?,
+                scalar_f32(espec, inputs, "lr")?,
+                scalar_i32(espec, inputs, "n_pert")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, li, loss);
         }
         "fo_step" => {
-            let (theta, loss) = m.fo_step(
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "x")?,
-                i32_arg(args, "y")?,
-                scalar_f32(args, "lr")?,
+            let ti = espec.output_pos("theta_l")?;
+            let li = espec.output_pos("loss")?;
+            let loss = m.fo_step_into(
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "x")?,
+                i32_arg(espec, inputs, "y")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, li, loss);
         }
         "client_fwd" => {
-            let smashed =
-                m.client_fwd(f32_arg(args, "theta_c")?, f32_arg(args, "x")?);
-            outs.insert("smashed", TensorValue::F32(smashed));
+            let si = espec.output_pos("smashed")?;
+            m.client_fwd_into(
+                f32_arg(espec, inputs, "theta_c")?,
+                f32_arg(espec, inputs, "x")?,
+                out_f32_vec(outs, si),
+            );
         }
         "server_step" | "server_step_cutgrad" => {
-            let want = entry == "server_step_cutgrad";
-            let (theta, loss, cut) = m.server_step(
-                f32_arg(args, "theta_s")?,
-                f32_arg(args, "smashed")?,
-                i32_arg(args, "y")?,
-                scalar_f32(args, "lr")?,
-                want,
-            );
-            outs.insert("theta_s", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
-            if let Some(g) = cut {
-                outs.insert("g_smashed", TensorValue::F32(g));
-            }
+            let theta_s = f32_arg(espec, inputs, "theta_s")?;
+            let smashed = f32_arg(espec, inputs, "smashed")?;
+            let y = i32_arg(espec, inputs, "y")?;
+            let lr = scalar_f32(espec, inputs, "lr")?;
+            run_server_step(espec, outs, |cut, th| {
+                m.server_step_into(theta_s, smashed, y, lr, cut, th)
+            })?;
         }
         "client_bp_step" => {
-            let theta = m.client_bp_step(
-                f32_arg(args, "theta_c")?,
-                f32_arg(args, "x")?,
-                f32_arg(args, "g_smashed")?,
-                scalar_f32(args, "lr")?,
+            let ti = espec.output_pos("theta_c")?;
+            m.client_bp_step_into(
+                f32_arg(espec, inputs, "theta_c")?,
+                f32_arg(espec, inputs, "x")?,
+                f32_arg(espec, inputs, "g_smashed")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_c", TensorValue::F32(theta));
         }
         "aux_align" => {
-            let theta = m.aux_align(
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "smashed")?,
-                i32_arg(args, "y")?,
-                f32_arg(args, "g_smashed")?,
-                scalar_f32(args, "lr")?,
+            let ti = espec.output_pos("theta_l")?;
+            m.aux_align_into(
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "smashed")?,
+                i32_arg(espec, inputs, "y")?,
+                f32_arg(espec, inputs, "g_smashed")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
         }
         "eval_full" => {
             let (s1, s2) = m.eval(
-                f32_arg(args, "theta_c")?,
-                f32_arg(args, "theta_s")?,
-                f32_arg(args, "x")?,
-                i32_arg(args, "y")?,
+                f32_arg(espec, inputs, "theta_c")?,
+                f32_arg(espec, inputs, "theta_s")?,
+                f32_arg(espec, inputs, "x")?,
+                i32_arg(espec, inputs, "y")?,
             );
-            outs.insert("stat1", TensorValue::ScalarF32(s1));
-            outs.insert("stat2", TensorValue::ScalarF32(s2));
+            set_scalar_f32(outs, espec.output_pos("stat1")?, s1);
+            set_scalar_f32(outs, espec.output_pos("stat2")?, s2);
         }
         "hvp" => {
+            let hi = espec.output_pos("hv")?;
             let hv = m.hvp(
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "x")?,
-                i32_arg(args, "y")?,
-                f32_arg(args, "v")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "x")?,
+                i32_arg(espec, inputs, "y")?,
+                f32_arg(espec, inputs, "v")?,
             );
-            outs.insert("hv", TensorValue::F32(hv));
+            outs[hi] = TensorValue::F32(hv);
         }
         other => bail!("vision model has no entry {other}"),
     }
-    Ok(outs)
+    Ok(())
 }
 
 fn exec_lm(
     m: &LmModel,
     vspec: &VariantSpec,
-    entry: &str,
-    args: &HashMap<&str, &TensorValue>,
-) -> Result<HashMap<&'static str, TensorValue>> {
+    espec: &EntrySpec,
+    inputs: &[TensorRef<'_>],
+    outs: &mut Vec<TensorValue>,
+) -> Result<()> {
     let seq: usize = vspec.x_shape.iter().product::<usize>().max(1);
-    let base = f32_arg(args, "base")?;
-    let mut outs: HashMap<&'static str, TensorValue> = HashMap::new();
-    match entry {
+    let base = f32_arg(espec, inputs, "base")?;
+    match espec.name.as_str() {
         "local_loss" => {
             let loss = m.local_loss(
                 base,
-                f32_arg(args, "theta_l")?,
-                i32_arg(args, "x")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                i32_arg(espec, inputs, "x")?,
                 seq,
             );
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, espec.output_pos("loss")?, loss);
         }
         "zo_step" => {
-            let (theta, loss) = m.zo_step(
+            let ti = espec.output_pos("theta_l")?;
+            let li = espec.output_pos("loss")?;
+            let loss = m.zo_step_into(
                 base,
-                f32_arg(args, "theta_l")?,
-                i32_arg(args, "x")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                i32_arg(espec, inputs, "x")?,
                 seq,
-                scalar_i32(args, "seed")?,
-                scalar_f32(args, "mu")?,
-                scalar_f32(args, "lr")?,
-                scalar_i32(args, "n_pert")?,
+                scalar_i32(espec, inputs, "seed")?,
+                scalar_f32(espec, inputs, "mu")?,
+                scalar_f32(espec, inputs, "lr")?,
+                scalar_i32(espec, inputs, "n_pert")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, li, loss);
         }
         "fo_step" => {
-            let (theta, loss) = m.fo_step(
+            let ti = espec.output_pos("theta_l")?;
+            let li = espec.output_pos("loss")?;
+            let loss = m.fo_step_into(
                 base,
-                f32_arg(args, "theta_l")?,
-                i32_arg(args, "x")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                i32_arg(espec, inputs, "x")?,
                 seq,
-                scalar_f32(args, "lr")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
+            set_scalar_f32(outs, li, loss);
         }
         "client_fwd" => {
-            let smashed = m.client_fwd(
+            let si = espec.output_pos("smashed")?;
+            m.client_fwd_into(
                 base,
-                f32_arg(args, "theta_c")?,
-                i32_arg(args, "x")?,
+                f32_arg(espec, inputs, "theta_c")?,
+                i32_arg(espec, inputs, "x")?,
+                out_f32_vec(outs, si),
             );
-            outs.insert("smashed", TensorValue::F32(smashed));
         }
         "server_step" | "server_step_cutgrad" => {
-            let want = entry == "server_step_cutgrad";
-            let (theta, loss, cut) = m.server_step(
-                f32_arg(args, "theta_s")?,
-                f32_arg(args, "smashed")?,
-                i32_arg(args, "y")?,
-                seq,
-                scalar_f32(args, "lr")?,
-                want,
-            );
-            outs.insert("theta_s", TensorValue::F32(theta));
-            outs.insert("loss", TensorValue::ScalarF32(loss));
-            if let Some(g) = cut {
-                outs.insert("g_smashed", TensorValue::F32(g));
-            }
+            let theta_s = f32_arg(espec, inputs, "theta_s")?;
+            let smashed = f32_arg(espec, inputs, "smashed")?;
+            let y = i32_arg(espec, inputs, "y")?;
+            let lr = scalar_f32(espec, inputs, "lr")?;
+            run_server_step(espec, outs, |cut, th| {
+                m.server_step_into(theta_s, smashed, y, seq, lr, cut, th)
+            })?;
         }
         "client_bp_step" => {
-            let theta = m.client_bp_step(
+            let ti = espec.output_pos("theta_c")?;
+            m.client_bp_step_into(
                 base,
-                f32_arg(args, "theta_c")?,
-                i32_arg(args, "x")?,
-                f32_arg(args, "g_smashed")?,
-                scalar_f32(args, "lr")?,
+                f32_arg(espec, inputs, "theta_c")?,
+                i32_arg(espec, inputs, "x")?,
+                f32_arg(espec, inputs, "g_smashed")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_c", TensorValue::F32(theta));
         }
         "aux_align" => {
             // round driver sends the token batch as `y` for LM tasks
-            let theta = m.aux_align(
+            let ti = espec.output_pos("theta_l")?;
+            m.aux_align_into(
                 base,
-                f32_arg(args, "theta_l")?,
-                f32_arg(args, "smashed")?,
-                i32_arg(args, "y")?,
+                f32_arg(espec, inputs, "theta_l")?,
+                f32_arg(espec, inputs, "smashed")?,
+                i32_arg(espec, inputs, "y")?,
                 seq,
-                f32_arg(args, "g_smashed")?,
-                scalar_f32(args, "lr")?,
+                f32_arg(espec, inputs, "g_smashed")?,
+                scalar_f32(espec, inputs, "lr")?,
+                out_f32_vec(outs, ti),
             );
-            outs.insert("theta_l", TensorValue::F32(theta));
         }
         "eval_full" => {
             let (s1, s2) = m.eval(
                 base,
-                f32_arg(args, "theta_c")?,
-                f32_arg(args, "theta_s")?,
-                i32_arg(args, "x")?,
+                f32_arg(espec, inputs, "theta_c")?,
+                f32_arg(espec, inputs, "theta_s")?,
+                i32_arg(espec, inputs, "x")?,
                 seq,
             );
-            outs.insert("stat1", TensorValue::ScalarF32(s1));
-            outs.insert("stat2", TensorValue::ScalarF32(s2));
+            set_scalar_f32(outs, espec.output_pos("stat1")?, s1);
+            set_scalar_f32(outs, espec.output_pos("stat2")?, s2);
         }
         other => bail!("lm model has no entry {other}"),
     }
-    Ok(outs)
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn spec(name: &str) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: vec![2],
+            dtype: crate::runtime::manifest::DType::F32,
+        }
+    }
+
+    fn espec_with(outputs: &[&str]) -> EntrySpec {
+        EntrySpec {
+            name: "t".into(),
+            file: std::path::PathBuf::new(),
+            inputs: vec![spec("a"), spec("b")],
+            outputs: outputs.iter().map(|n| spec(n)).collect(),
+        }
+    }
+
+    #[test]
+    fn positional_args_resolve_by_name() {
+        let e = espec_with(&["o"]);
+        let va = [1.0f32, 2.0];
+        let vb = [3.0f32, 4.0];
+        let inputs = [TensorRef::F32(&va), TensorRef::F32(&vb)];
+        assert_eq!(f32_arg(&e, &inputs, "a").unwrap(), &va);
+        assert_eq!(f32_arg(&e, &inputs, "b").unwrap(), &vb);
+        assert!(f32_arg(&e, &inputs, "c").is_err());
+    }
+
+    #[test]
+    fn out_slots_reuse_and_normalize() {
+        let e = espec_with(&["o1", "o2"]);
+        let mut outs = vec![TensorValue::F32(vec![9.0; 4])];
+        prepare_outs(&e, &mut outs);
+        assert_eq!(outs.len(), 2);
+        {
+            let v = out_f32_vec(&mut outs, 0);
+            assert_eq!(v.len(), 4, "existing buffer kept for reuse");
+            v.clear();
+            v.extend_from_slice(&[1.0, 2.0]);
+        }
+        set_scalar_f32(&mut outs, 1, 7.0);
+        assert_eq!(outs[0].as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(outs[1].scalar_f32().unwrap(), 7.0);
+        // scalar slot converts to a vec slot on demand
+        let v = out_f32_vec(&mut outs, 1);
+        assert!(v.is_empty());
+    }
 }

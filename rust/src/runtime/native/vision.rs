@@ -16,8 +16,22 @@
 //! The local/server losses are `LOSS_SCALE · CE_mean`; the scale is part of
 //! the model definition (it sets the effective step size of both the ZO
 //! estimator and the FO updates under the configured learning rates).
+//!
+//! ## Hot path
+//!
+//! The feature projection (batch × q × 768 MACs) is the only θ-independent
+//! heavy stage, so it is memoized in a [`FeatureCache`] keyed by a content
+//! hash of `x`: the h local steps plus the upload `client_fwd` a client
+//! runs on one batch project it once. `zo_step_into` regenerates each
+//! probe's `u` from its counter-based seed in fixed chunks (perturb pass /
+//! update pass — the Remark-4 trick `zo::ZoSgd::alloc_free_step`
+//! demonstrates), so no per-probe vector is ever materialized and peak
+//! temporary memory is independent of `n_pert`. Every f32 reduction keeps
+//! the exact evaluation order of the original batch path, so cached and
+//! `_into` results are bit-identical to the allocating ones.
 
-use crate::zo::stream::{fold_seed, PerturbStream};
+use crate::runtime::native::cache::{self, CacheStats, FeatureCache};
+use crate::zo::stream::two_point_zo_into;
 
 pub const CLASSES: usize = 10;
 pub const PIXELS: usize = 768; // 16 x 16 x 3
@@ -34,6 +48,8 @@ pub struct VisionModel {
     tc: Vec<f32>,
     /// sin templates, q x PIXELS
     ts: Vec<f32>,
+    /// memoized θ-independent feature projections, keyed by content hash
+    cache: FeatureCache,
 }
 
 impl VisionModel {
@@ -70,7 +86,12 @@ impl VisionModel {
                 }
             }
         }
-        VisionModel { q, tc, ts }
+        VisionModel {
+            q,
+            tc,
+            ts,
+            cache: FeatureCache::new(),
+        }
     }
 
     pub fn nc(&self) -> usize {
@@ -87,6 +108,10 @@ impl VisionModel {
 
     pub fn ns(&self) -> usize {
         self.q * CLASSES + CLASSES
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Phase-invariant energy features: batch x q.
@@ -110,22 +135,35 @@ impl VisionModel {
         f
     }
 
-    /// h = f * s + b over a feature batch.
-    fn client_apply(&self, theta_c: &[f32], f: &[f32]) -> Vec<f32> {
+    /// Memoized [`Self::features`]: the projection is θ-independent, so one
+    /// batch's matrix is shared by every entry invoked on it.
+    fn features_cached(&self, x: &[f32]) -> std::sync::Arc<Vec<f32>> {
+        let key = cache::hash_f32(0x5EED_F00D ^ self.q as u64, x);
+        self.cache.get_or_compute(key, || self.features(x))
+    }
+
+    /// h = f * s + b over a feature batch, into a reused buffer.
+    fn client_apply_into(&self, theta_c: &[f32], f: &[f32], out: &mut Vec<f32>) {
         let batch = f.len() / self.q;
         let (s, b) = theta_c.split_at(self.q);
-        let mut h = vec![0.0f32; batch * self.q];
+        out.clear();
+        out.resize(batch * self.q, 0.0);
         for i in 0..batch {
             for j in 0..self.q {
-                h[i * self.q + j] = f[i * self.q + j] * s[j] + b[j];
+                out[i * self.q + j] = f[i * self.q + j] * s[j] + b[j];
             }
         }
-        h
+    }
+
+    pub fn client_fwd_into(&self, theta_c: &[f32], x: &[f32], out: &mut Vec<f32>) {
+        let f = self.features_cached(x);
+        self.client_apply_into(theta_c, &f, out);
     }
 
     pub fn client_fwd(&self, theta_c: &[f32], x: &[f32]) -> Vec<f32> {
-        let f = self.features(x);
-        self.client_apply(theta_c, &f)
+        let mut out = Vec::new();
+        self.client_fwd_into(theta_c, x, &mut out);
+        out
     }
 
     /// Linear head logits: batch x CLASSES from batch x q.
@@ -175,15 +213,61 @@ impl VisionModel {
         (loss / batch as f64, d)
     }
 
+    /// Scaled local loss over precomputed features, streamed one sample at
+    /// a time through the caller's row scratch — no batch-sized
+    /// temporaries. Per-row op order matches `client_apply`/`head`/`ce`
+    /// exactly, and the f64 loss accumulation runs in the same batch
+    /// order, so the result is bit-identical to the materialized path.
+    fn loss_rows(
+        &self,
+        theta_l: &[f32],
+        f: &[f32],
+        y: &[i32],
+        hrow: &mut [f32],
+        lrow: &mut [f32],
+    ) -> f32 {
+        let q = self.q;
+        let nc = self.nc();
+        let (s, bias) = theta_l[..nc].split_at(q);
+        let (wm, wb) = theta_l[nc..].split_at(q * CLASSES);
+        let batch = y.len();
+        let mut loss = 0.0f64;
+        for b in 0..batch {
+            let fb = &f[b * q..(b + 1) * q];
+            for j in 0..q {
+                hrow[j] = fb[j] * s[j] + bias[j];
+            }
+            lrow.copy_from_slice(wb);
+            for j in 0..q {
+                let hj = hrow[j];
+                let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    lrow[c] += hj * row[c];
+                }
+            }
+            let mut mx = f32::NEG_INFINITY;
+            for &v in lrow.iter() {
+                mx = mx.max(v);
+            }
+            let mut se = 0.0f32;
+            for &v in lrow.iter() {
+                se += (v - mx).exp();
+            }
+            let lse = mx + se.ln();
+            let yi = (y[b].clamp(0, CLASSES as i32 - 1)) as usize;
+            loss += (lse - lrow[yi]) as f64;
+        }
+        LOSS_SCALE * ((loss / batch as f64) as f32)
+    }
+
     fn loss_from_features(&self, theta_l: &[f32], f: &[f32], y: &[i32]) -> f32 {
-        let h = self.client_apply(&theta_l[..self.nc()], f);
-        let logits = self.head(&theta_l[self.nc()..], &h);
-        let (l, _) = self.ce(&logits, y);
-        LOSS_SCALE * l as f32
+        let mut hrow = vec![0.0f32; self.q];
+        let mut lrow = vec![0.0f32; CLASSES];
+        self.loss_rows(theta_l, f, y, &mut hrow, &mut lrow)
     }
 
     pub fn local_loss(&self, theta_l: &[f32], x: &[f32], y: &[i32]) -> f32 {
-        let f = self.features(x);
+        let f = self.features_cached(x);
         self.loss_from_features(theta_l, &f, y)
     }
 
@@ -192,7 +276,8 @@ impl VisionModel {
         let q = self.q;
         let nc = self.nc();
         let batch = y.len();
-        let h = self.client_apply(&theta_l[..nc], f);
+        let mut h = Vec::new();
+        self.client_apply_into(&theta_l[..nc], f, &mut h);
         let logits = self.head(&theta_l[nc..], &h);
         let (loss, d) = self.ce(&logits, y);
         let wm = &theta_l[nc..nc + q * CLASSES];
@@ -232,6 +317,26 @@ impl VisionModel {
         (LOSS_SCALE * loss as f32, g)
     }
 
+    /// One FO step on θ_l into a reused buffer; returns the loss at the
+    /// pre-update point.
+    pub fn fo_step_into(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let f = self.features_cached(x);
+        let (loss, g) = self.local_grad(theta_l, &f, y);
+        out.clear();
+        out.extend_from_slice(theta_l);
+        for i in 0..out.len() {
+            out[i] -= lr * g[i];
+        }
+        loss
+    }
+
     /// One FO step on θ_l; returns (θ_l', loss at the pre-update point).
     pub fn fo_step(
         &self,
@@ -240,17 +345,46 @@ impl VisionModel {
         y: &[i32],
         lr: f32,
     ) -> (Vec<f32>, f32) {
-        let f = self.features(x);
-        let (loss, g) = self.local_grad(theta_l, &f, y);
-        let mut th = theta_l.to_vec();
-        for i in 0..th.len() {
-            th[i] -= lr * g[i];
-        }
-        (th, loss)
+        let mut out = Vec::new();
+        let loss = self.fo_step_into(theta_l, x, y, lr, &mut out);
+        (out, loss)
     }
 
-    /// One two-point ZO step (Eq. 6) with `n_pert` probes; the perturbation
-    /// stream is counter-based, so results are independent of scheduling.
+    /// One two-point ZO step (Eq. 6) with `n_pert` probes into a reused
+    /// buffer — [`two_point_zo_into`] streams each probe's `u` in chunks
+    /// (zero per-probe allocations, temp memory independent of `n_pert`)
+    /// while this method supplies the cached-feature streamed loss. Same
+    /// value stream and same accumulation order as the materialized
+    /// formulation, hence bit-identical results.
+    pub fn zo_step_into(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        seed: i32,
+        mu: f32,
+        lr: f32,
+        n_pert: i32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let f = self.features_cached(x);
+        let mut hrow = vec![0.0f32; self.q];
+        let mut lrow = vec![0.0f32; CLASSES];
+        let base = self.loss_rows(theta_l, &f, y, &mut hrow, &mut lrow);
+        two_point_zo_into(
+            theta_l,
+            seed,
+            mu,
+            lr,
+            n_pert,
+            base,
+            |pert| self.loss_rows(pert, &f, y, &mut hrow, &mut lrow),
+            out,
+        );
+        base
+    }
+
+    /// One two-point ZO step (Eq. 6); see [`Self::zo_step_into`].
     pub fn zo_step(
         &self,
         theta_l: &[f32],
@@ -261,29 +395,60 @@ impl VisionModel {
         lr: f32,
         n_pert: i32,
     ) -> (Vec<f32>, f32) {
-        let f = self.features(x);
-        let d = theta_l.len();
-        let base = self.loss_from_features(theta_l, &f, y);
-        let n_pert = n_pert.max(1) as usize;
-        let mut delta = vec![0.0f32; d];
-        let mut pert = vec![0.0f32; d];
-        for k in 0..n_pert {
-            let u = PerturbStream::new(fold_seed(seed as u32, k as u32))
-                .take_vec(d);
-            for i in 0..d {
-                pert[i] = theta_l[i] + mu * u[i];
+        let mut out = Vec::new();
+        let loss =
+            self.zo_step_into(theta_l, x, y, seed, mu, lr, n_pert, &mut out);
+        (out, loss)
+    }
+
+    /// Server FO update on an uploaded smashed batch (Eq. 7) into reused
+    /// buffers. Returns the loss; fills `cut` with dL/d smashed if given.
+    pub fn server_step_into(
+        &self,
+        theta_s: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        lr: f32,
+        cut: Option<&mut Vec<f32>>,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let q = self.q;
+        let batch = y.len();
+        let logits = self.head(theta_s, smashed);
+        let (loss, d) = self.ce(&logits, y);
+        out.clear();
+        out.extend_from_slice(theta_s);
+        for b in 0..batch {
+            let hb = &smashed[b * q..(b + 1) * q];
+            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            for j in 0..q {
+                let row = &mut out[j * CLASSES..(j + 1) * CLASSES];
+                for c in 0..CLASSES {
+                    row[c] -= lr * LOSS_SCALE * hb[j] * db[c];
+                }
             }
-            let lp = self.loss_from_features(&pert, &f, y);
-            let gscale = (lp - base) / mu * (lr / n_pert as f32);
-            for i in 0..d {
-                delta[i] -= gscale * u[i];
+            let off = q * CLASSES;
+            for c in 0..CLASSES {
+                out[off + c] -= lr * LOSS_SCALE * db[c];
             }
         }
-        let mut th = theta_l.to_vec();
-        for i in 0..d {
-            th[i] += delta[i];
+        if let Some(g) = cut {
+            let wm = &theta_s[..q * CLASSES];
+            g.clear();
+            g.resize(batch * q, 0.0);
+            for b in 0..batch {
+                let db = &d[b * CLASSES..(b + 1) * CLASSES];
+                for j in 0..q {
+                    let row = &wm[j * CLASSES..(j + 1) * CLASSES];
+                    let mut s = 0.0f32;
+                    for c in 0..CLASSES {
+                        s += db[c] * row[c];
+                    }
+                    g[b * q + j] = LOSS_SCALE * s;
+                }
+            }
         }
-        (th, base)
+        LOSS_SCALE * loss as f32
     }
 
     /// Server FO update on an uploaded smashed batch (Eq. 7). Returns
@@ -296,44 +461,41 @@ impl VisionModel {
         lr: f32,
         want_cutgrad: bool,
     ) -> (Vec<f32>, f32, Option<Vec<f32>>) {
+        let mut out = Vec::new();
+        let mut cut = Vec::new();
+        let loss = self.server_step_into(
+            theta_s,
+            smashed,
+            y,
+            lr,
+            if want_cutgrad { Some(&mut cut) } else { None },
+            &mut out,
+        );
+        (out, loss, if want_cutgrad { Some(cut) } else { None })
+    }
+
+    /// Client backprop step from a relayed cut gradient (SFLV1/V2).
+    pub fn client_bp_step_into(
+        &self,
+        theta_c: &[f32],
+        x: &[f32],
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) {
         let q = self.q;
-        let batch = y.len();
-        let logits = self.head(theta_s, smashed);
-        let (loss, d) = self.ce(&logits, y);
-        let mut th = theta_s.to_vec();
+        let f = self.features_cached(x);
+        let batch = f.len() / q;
+        out.clear();
+        out.extend_from_slice(theta_c);
         for b in 0..batch {
-            let hb = &smashed[b * q..(b + 1) * q];
-            let db = &d[b * CLASSES..(b + 1) * CLASSES];
+            let gb = &g_smashed[b * q..(b + 1) * q];
+            let fb = &f[b * q..(b + 1) * q];
             for j in 0..q {
-                let row = &mut th[j * CLASSES..(j + 1) * CLASSES];
-                for c in 0..CLASSES {
-                    row[c] -= lr * LOSS_SCALE * hb[j] * db[c];
-                }
-            }
-            let off = q * CLASSES;
-            for c in 0..CLASSES {
-                th[off + c] -= lr * LOSS_SCALE * db[c];
+                out[j] -= lr * gb[j] * fb[j];
+                out[q + j] -= lr * gb[j];
             }
         }
-        let cut = if want_cutgrad {
-            let wm = &theta_s[..q * CLASSES];
-            let mut g = vec![0.0f32; batch * q];
-            for b in 0..batch {
-                let db = &d[b * CLASSES..(b + 1) * CLASSES];
-                for j in 0..q {
-                    let row = &wm[j * CLASSES..(j + 1) * CLASSES];
-                    let mut s = 0.0f32;
-                    for c in 0..CLASSES {
-                        s += db[c] * row[c];
-                    }
-                    g[b * q + j] = LOSS_SCALE * s;
-                }
-            }
-            Some(g)
-        } else {
-            None
-        };
-        (th, LOSS_SCALE * loss as f32, cut)
     }
 
     /// Client backprop step from a relayed cut gradient (SFLV1/V2).
@@ -344,31 +506,22 @@ impl VisionModel {
         g_smashed: &[f32],
         lr: f32,
     ) -> Vec<f32> {
-        let q = self.q;
-        let f = self.features(x);
-        let batch = f.len() / q;
-        let mut th = theta_c.to_vec();
-        for b in 0..batch {
-            let gb = &g_smashed[b * q..(b + 1) * q];
-            let fb = &f[b * q..(b + 1) * q];
-            for j in 0..q {
-                th[j] -= lr * gb[j] * fb[j];
-                th[q + j] -= lr * gb[j];
-            }
-        }
-        th
+        let mut out = Vec::new();
+        self.client_bp_step_into(theta_c, x, g_smashed, lr, &mut out);
+        out
     }
 
     /// FSL-SAGE aux alignment: one Gauss-Newton-style step moving the aux
     /// head's cut gradient toward the server's (δ̂ frozen).
-    pub fn aux_align(
+    pub fn aux_align_into(
         &self,
         theta_l: &[f32],
         smashed: &[f32],
         y: &[i32],
         g_smashed: &[f32],
         lr: f32,
-    ) -> Vec<f32> {
+        out: &mut Vec<f32>,
+    ) {
         let q = self.q;
         let nc = self.nc();
         let batch = y.len();
@@ -376,7 +529,8 @@ impl VisionModel {
         let (_, d) = self.ce(&logits, y);
         let wm = &theta_l[nc..nc + q * CLASSES];
         // g_aux[b,j] = LOSS_SCALE * sum_c d[b,c] W[j,c]
-        let mut th = theta_l.to_vec();
+        out.clear();
+        out.extend_from_slice(theta_l);
         for b in 0..batch {
             let db = &d[b * CLASSES..(b + 1) * CLASSES];
             let gs = &g_smashed[b * q..(b + 1) * q];
@@ -387,13 +541,25 @@ impl VisionModel {
                     ga += db[c] * row[c];
                 }
                 let diff = LOSS_SCALE * ga - gs[j];
-                let out = &mut th[nc + j * CLASSES..nc + (j + 1) * CLASSES];
+                let o = &mut out[nc + j * CLASSES..nc + (j + 1) * CLASSES];
                 for c in 0..CLASSES {
-                    out[c] -= lr * diff * LOSS_SCALE * db[c];
+                    o[c] -= lr * diff * LOSS_SCALE * db[c];
                 }
             }
         }
-        th
+    }
+
+    pub fn aux_align(
+        &self,
+        theta_l: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+    ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.aux_align_into(theta_l, smashed, y, g_smashed, lr, &mut out);
+        out
     }
 
     /// Assembled-model evaluation: (correct count, total) on a batch.
@@ -432,7 +598,7 @@ impl VisionModel {
         y: &[i32],
         v: &[f32],
     ) -> Vec<f32> {
-        let f = self.features(x);
+        let f = self.features_cached(x);
         let d = theta_l.len();
         let mut plus = theta_l.to_vec();
         let mut minus = theta_l.to_vec();
@@ -454,6 +620,7 @@ impl VisionModel {
 mod tests {
     use super::*;
     use crate::data::synth_vision;
+    use crate::zo::stream::{fold_seed, PerturbStream};
 
     fn model() -> VisionModel {
         VisionModel::new(36)
@@ -504,6 +671,37 @@ mod tests {
     }
 
     #[test]
+    fn cached_features_bit_identical_and_counted() {
+        let m = model();
+        let (x, _) = batch(16);
+        let direct = m.features(&x);
+        let c1 = m.features_cached(&x);
+        let c2 = m.features_cached(&x);
+        assert_eq!(&*c1, &direct);
+        assert_eq!(&*c2, &direct);
+        let st = m.cache_stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.bytes_avoided as usize, direct.len() * 4);
+    }
+
+    #[test]
+    fn streamed_loss_matches_materialized_path() {
+        let m = model();
+        let (x, y) = batch(32);
+        let th = init_theta(&m);
+        let f = m.features(&x);
+        // materialized reference: full h + logits + batch ce
+        let mut h = Vec::new();
+        m.client_apply_into(&th[..m.nc()], &f, &mut h);
+        let logits = m.head(&th[m.nc()..], &h);
+        let (l, _) = m.ce(&logits, &y);
+        let reference = LOSS_SCALE * ((l) as f32);
+        let streamed = m.loss_from_features(&th, &f, &y);
+        assert_eq!(streamed.to_bits(), reference.to_bits());
+    }
+
+    #[test]
     fn fo_step_descends() {
         let m = model();
         let (x, y) = batch(32);
@@ -528,6 +726,43 @@ mod tests {
         assert_eq!(la, lb);
         let (c, _) = m.zo_step(&th, &x, &y, 8, 1e-2, 1e-3, 1);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn chunked_zo_matches_materialized_reference() {
+        // reference: the pre-refactor formulation with a materialized u
+        // per probe (take_vec) and a separate delta vector
+        let m = model();
+        let (x, y) = batch(16);
+        let th = init_theta(&m);
+        let d = th.len();
+        let (seed, mu, lr, n_pert) = (0x5EED, 1e-2f32, 2e-3f32, 3usize);
+        let f = m.features(&x);
+        let base = m.loss_from_features(&th, &f, &y);
+        let mut delta = vec![0.0f32; d];
+        let mut pert = vec![0.0f32; d];
+        for k in 0..n_pert {
+            let u = PerturbStream::new(fold_seed(seed as u32, k as u32))
+                .take_vec(d);
+            for i in 0..d {
+                pert[i] = th[i] + mu * u[i];
+            }
+            let lp = m.loss_from_features(&pert, &f, &y);
+            let gscale = (lp - base) / mu * (lr / n_pert as f32);
+            for i in 0..d {
+                delta[i] -= gscale * u[i];
+            }
+        }
+        let mut want = th.clone();
+        for i in 0..d {
+            want[i] += delta[i];
+        }
+        let (got, lbase) =
+            m.zo_step(&th, &x, &y, seed, mu, lr, n_pert as i32);
+        assert_eq!(lbase.to_bits(), base.to_bits());
+        for i in 0..d {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "elem {i}");
+        }
     }
 
     #[test]

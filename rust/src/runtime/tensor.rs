@@ -4,6 +4,13 @@
 //! activations, gradients) or an `i32` batch (tokens/labels) or a scalar.
 //! `TensorValue` is that closed union; `runtime::Session` marshals it to/from
 //! `xla::Literal` using the entry's `TensorSpec` shapes.
+//!
+//! [`TensorRef`] is the borrowed mirror of `TensorValue` for the
+//! zero-allocation invoke path: callers that already own the backing
+//! buffers (the round driver's per-client θ, the loader's reused batch
+//! buffers, the frozen base blob) pass views instead of cloning a
+//! `Vec` per argument per step. `Session::invoke_into` takes `TensorRef`s
+//! and writes outputs into caller-owned `TensorValue` slots.
 
 use super::manifest::{DType, TensorSpec};
 use anyhow::{bail, Result};
@@ -91,6 +98,147 @@ impl TensorValue {
     }
 }
 
+/// Borrowed view of a [`TensorValue`] (scalars are `Copy`, so they are
+/// carried by value). The lifetime is the owning buffer's, which lets the
+/// round driver thread loader/θ/base buffers through `invoke_into` without
+/// per-step clones.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TensorRef<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> TensorRef<'a> {
+    pub fn dtype(self) -> DType {
+        match self {
+            TensorRef::F32(_) | TensorRef::ScalarF32(_) => DType::F32,
+            TensorRef::I32(_) | TensorRef::ScalarI32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(self) -> usize {
+        match self {
+            TensorRef::F32(v) => v.len(),
+            TensorRef::I32(v) => v.len(),
+            _ => 1,
+        }
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(self) -> Result<&'a [f32]> {
+        match self {
+            TensorRef::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(self) -> Result<&'a [i32]> {
+        match self {
+            TensorRef::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn scalar_f32(self) -> Result<f32> {
+        match self {
+            TensorRef::ScalarF32(s) => Ok(s),
+            TensorRef::F32(v) if v.len() == 1 => Ok(v[0]),
+            other => bail!("expected f32 scalar, got len {}", other.len()),
+        }
+    }
+
+    pub fn scalar_i32(self) -> Result<i32> {
+        match self {
+            TensorRef::ScalarI32(s) => Ok(s),
+            TensorRef::I32(v) if v.len() == 1 => Ok(v[0]),
+            other => bail!("expected i32 scalar, got len {}", other.len()),
+        }
+    }
+
+    /// Validate value against a spec (shape product + dtype) — mirrors
+    /// [`TensorValue::check`] exactly.
+    pub fn check(self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {}: dtype mismatch (got {:?}, want {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        let want = spec.elems();
+        let scalar = matches!(
+            self,
+            TensorRef::ScalarF32(_) | TensorRef::ScalarI32(_)
+        );
+        if scalar {
+            if !spec.shape.is_empty() {
+                bail!("input {}: scalar given for shaped tensor", spec.name);
+            }
+        } else if self.len() != want {
+            bail!(
+                "input {}: length mismatch (got {}, want {} = {:?})",
+                spec.name,
+                self.len(),
+                want,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize an owned copy (cold paths only).
+    pub fn to_value(self) -> TensorValue {
+        match self {
+            TensorRef::F32(v) => TensorValue::F32(v.to_vec()),
+            TensorRef::I32(v) => TensorValue::I32(v.to_vec()),
+            TensorRef::ScalarF32(s) => TensorValue::ScalarF32(s),
+            TensorRef::ScalarI32(s) => TensorValue::ScalarI32(s),
+        }
+    }
+}
+
+impl TensorValue {
+    /// Borrow this value as a [`TensorRef`].
+    pub fn view(&self) -> TensorRef<'_> {
+        match self {
+            TensorValue::F32(v) => TensorRef::F32(v),
+            TensorValue::I32(v) => TensorRef::I32(v),
+            TensorValue::ScalarF32(s) => TensorRef::ScalarF32(*s),
+            TensorValue::ScalarI32(s) => TensorRef::ScalarI32(*s),
+        }
+    }
+}
+
+impl<'a> From<&'a [f32]> for TensorRef<'a> {
+    fn from(v: &'a [f32]) -> Self {
+        TensorRef::F32(v)
+    }
+}
+
+impl<'a> From<&'a [i32]> for TensorRef<'a> {
+    fn from(v: &'a [i32]) -> Self {
+        TensorRef::I32(v)
+    }
+}
+
+impl From<f32> for TensorRef<'_> {
+    fn from(v: f32) -> Self {
+        TensorRef::ScalarF32(v)
+    }
+}
+
+impl From<i32> for TensorRef<'_> {
+    fn from(v: i32) -> Self {
+        TensorRef::ScalarI32(v)
+    }
+}
+
 impl From<Vec<f32>> for TensorValue {
     fn from(v: Vec<f32>) -> Self {
         TensorValue::F32(v)
@@ -151,5 +299,26 @@ mod tests {
         let s: TensorValue = 3.5f32.into();
         assert_eq!(s.scalar_f32().unwrap(), 3.5);
         assert!(s.as_f32().is_err());
+    }
+
+    #[test]
+    fn refs_mirror_values() {
+        let v = TensorValue::F32(vec![1.0, 2.0, 3.0]);
+        let r = v.view();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(r.check(&spec("x", &[3], DType::F32)).is_ok());
+        assert!(r.check(&spec("x", &[4], DType::F32)).is_err());
+        assert_eq!(r.to_value(), v);
+
+        let s = TensorValue::ScalarI32(7).view();
+        assert_eq!(s.scalar_i32().unwrap(), 7);
+        assert!(s.check(&spec("n", &[], DType::I32)).is_ok());
+        assert!(s.as_i32().is_err());
+
+        let buf = [4i32, 5];
+        let t: TensorRef = (&buf[..]).into();
+        assert_eq!(t.as_i32().unwrap(), &[4, 5]);
+        assert!(t.scalar_i32().is_err());
     }
 }

@@ -7,22 +7,27 @@
 
 pub mod stream;
 
-use stream::PerturbStream;
+use stream::{for_each_chunk, PerturbStream};
 
 /// Two-point ZO-SGD on an analytic objective f: R^d -> R.
 ///
 /// Mirrors the paper's Eq. (2) estimator with Gaussian directions:
 ///   g_hat = (f(θ + μu) - f(θ)) / μ * u.
-/// `step` regenerates u from the seed in fixed-size chunks, so peak extra
-/// memory is O(chunk), not O(d) — the Remark-4 trick, measurable in
-/// `alloc_free_step`.
-/// The objective is `Sync` so one optimizer can be shared across the
-/// parallel round engine's worker threads (each thread steps its own θ).
+/// `alloc_free_step` regenerates u from the seed in fixed-size chunks, so
+/// peak extra memory is O(chunk), not O(d) — the Remark-4 trick.
+/// `step_materialized` keeps its u/pert buffers as optimizer-held scratch
+/// reused across steps (so the theory benches measure the estimator, not
+/// the allocator), which is why it takes `&mut self`; threads sharing one
+/// objective each hold their own optimizer and step their own θ.
 pub struct ZoSgd<F: Fn(&[f32]) -> f32 + Sync> {
     pub f: F,
     pub mu: f32,
     pub lr: f32,
     pub chunk: usize,
+    /// scratch for `step_materialized`'s u vector, reused across steps
+    scratch_u: Vec<f32>,
+    /// scratch for `step_materialized`'s perturbed θ, reused across steps
+    scratch_pert: Vec<f32>,
 }
 
 impl<F: Fn(&[f32]) -> f32 + Sync> ZoSgd<F> {
@@ -32,65 +37,57 @@ impl<F: Fn(&[f32]) -> f32 + Sync> ZoSgd<F> {
             mu,
             lr,
             chunk: 4096,
+            scratch_u: Vec::new(),
+            scratch_pert: Vec::new(),
         }
     }
 
-    /// One ZO step, materializing u (baseline implementation).
-    pub fn step_materialized(&self, theta: &mut [f32], seed: u32) -> f32 {
+    /// One ZO step, materializing u into optimizer-held scratch (baseline
+    /// implementation; allocation-free after the first call).
+    pub fn step_materialized(&mut self, theta: &mut [f32], seed: u32) -> f32 {
         let d = theta.len();
-        let u: Vec<f32> = PerturbStream::new(seed).take_vec(d);
-        let mut pert: Vec<f32> = theta.to_vec();
+        self.scratch_u.clear();
+        self.scratch_u.resize(d, 0.0);
+        PerturbStream::new(seed).fill(&mut self.scratch_u);
+        self.scratch_pert.clear();
+        self.scratch_pert.extend_from_slice(theta);
         for i in 0..d {
-            pert[i] += self.mu * u[i];
+            self.scratch_pert[i] += self.mu * self.scratch_u[i];
         }
-        let lp = (self.f)(&pert);
+        let lp = (self.f)(&self.scratch_pert);
         let lb = (self.f)(theta);
         let scale = (lp - lb) / self.mu * self.lr;
         for i in 0..d {
-            theta[i] -= scale * u[i];
+            theta[i] -= scale * self.scratch_u[i];
         }
         lb
     }
 
-    /// One ZO step with chunked perturbation regeneration: u is produced
-    /// twice from the seed (perturb pass, update pass) and never stored
-    /// beyond `chunk` elements. Numerically identical to
-    /// `step_materialized` because the stream is counter-based.
+    /// One ZO step with chunked perturbation regeneration
+    /// ([`stream::for_each_chunk`]): u is produced twice from the seed
+    /// (perturb pass, update pass) and never stored beyond `chunk`
+    /// elements. Numerically identical to `step_materialized` because the
+    /// stream is counter-based.
     pub fn alloc_free_step(&self, theta: &mut [f32], seed: u32) -> f32 {
         let lb = (self.f)(theta);
+        let mut buf = vec![0.0f32; self.chunk.max(1)];
         // pass 1: perturb in place
-        self.apply_perturbation(theta, seed, self.mu);
+        for_each_chunk(seed, theta.len(), &mut buf, |off, u| {
+            for i in 0..u.len() {
+                theta[off + i] += self.mu * u[i];
+            }
+        });
         let lp = (self.f)(theta);
         // pass 2: un-perturb and apply the update in one sweep
         let g_scale = (lp - lb) / self.mu;
         let step = self.lr * g_scale;
-        let mut stream = PerturbStream::new(seed);
-        let mut buf = vec![0.0f32; self.chunk];
-        let mut off = 0;
-        while off < theta.len() {
-            let n = self.chunk.min(theta.len() - off);
-            stream.fill(&mut buf[..n]);
-            for i in 0..n {
-                theta[off + i] -= (self.mu + step) * buf[i];
+        for_each_chunk(seed, theta.len(), &mut buf, |off, u| {
+            for i in 0..u.len() {
+                theta[off + i] -= (self.mu + step) * u[i];
                 // -mu*u undoes the probe perturbation; -step*u is the update
             }
-            off += n;
-        }
+        });
         lb
-    }
-
-    fn apply_perturbation(&self, theta: &mut [f32], seed: u32, scale: f32) {
-        let mut stream = PerturbStream::new(seed);
-        let mut buf = vec![0.0f32; self.chunk];
-        let mut off = 0;
-        while off < theta.len() {
-            let n = self.chunk.min(theta.len() - off);
-            stream.fill(&mut buf[..n]);
-            for i in 0..n {
-                theta[off + i] += scale * buf[i];
-            }
-            off += n;
-        }
     }
 }
 
@@ -106,7 +103,7 @@ mod tests {
     fn zo_sgd_converges_on_quadratic() {
         // ZO-SGD stability needs lr < ~2/d (the estimator's variance is
         // d-amplified); d=64 here, so lr=0.005 sits inside the region.
-        let opt = ZoSgd::new(quadratic, 1e-3, 0.005);
+        let mut opt = ZoSgd::new(quadratic, 1e-3, 0.005);
         let mut theta: Vec<f32> =
             (0..64).map(|i| (i as f32 / 32.0) - 1.0).collect();
         let f0 = quadratic(&theta);
@@ -122,7 +119,7 @@ mod tests {
         // the streamed path reconstructs theta as (θ+μu)-(μ+step)u, whose
         // f32 rounding differs from θ-step·u by ulps; with a stable lr the
         // trajectories stay within loose tolerance
-        let opt = ZoSgd::new(quadratic, 1e-3, 1e-3);
+        let mut opt = ZoSgd::new(quadratic, 1e-3, 1e-3);
         let mut a: Vec<f32> = (0..500).map(|i| (i as f32).sin()).collect();
         let mut b = a.clone();
         for s in 0..20 {
@@ -150,6 +147,35 @@ mod tests {
              paths",
             num / den
         );
+    }
+
+    #[test]
+    fn materialized_scratch_reuse_does_not_change_results() {
+        // the optimizer-held scratch must be invisible: every step matches
+        // a reference that allocates u/pert fresh
+        let mu = 1e-3f32;
+        let lr = 1e-3f32;
+        let mut opt = ZoSgd::new(quadratic, mu, lr);
+        let mut a: Vec<f32> =
+            (0..100).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut b = a.clone();
+        for s in 0..5 {
+            let d = b.len();
+            let u = PerturbStream::new(s).take_vec(d);
+            let mut pert = b.clone();
+            for i in 0..d {
+                pert[i] += mu * u[i];
+            }
+            let lp = quadratic(&pert);
+            let lb = quadratic(&b);
+            let scale = (lp - lb) / mu * lr;
+            for i in 0..d {
+                b[i] -= scale * u[i];
+            }
+            let got = opt.step_materialized(&mut a, s);
+            assert_eq!(got.to_bits(), lb.to_bits(), "loss at step {s}");
+        }
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -40,6 +40,79 @@ pub fn fold_seed(seed: u32, k: u32) -> u32 {
     hash_u32(seed, k.wrapping_add(0x517C_C1B7))
 }
 
+/// Default chunk size (elements) for streamed regeneration loops — the
+/// value only sizes the scratch buffer; it never changes results.
+pub const ZO_CHUNK: usize = 1024;
+
+/// Drive `apply(offset, values)` over the seed's stream positions
+/// `[0, d)` in chunk-sized pieces, regenerating values into `chunk`
+/// instead of materializing the full vector — the Remark-4 O(chunk)
+/// pattern shared by `ZoSgd::alloc_free_step` and the native models'
+/// `zo_step` probes. The visit order equals a single `take_vec(d)`.
+pub fn for_each_chunk(
+    seed: u32,
+    d: usize,
+    chunk: &mut [f32],
+    mut apply: impl FnMut(usize, &[f32]),
+) {
+    assert!(d == 0 || !chunk.is_empty(), "empty chunk buffer");
+    let mut stream = PerturbStream::new(seed);
+    let mut off = 0;
+    while off < d {
+        let n = chunk.len().min(d - off);
+        stream.fill(&mut chunk[..n]);
+        apply(off, &chunk[..n]);
+        off += n;
+    }
+}
+
+/// Two-point ZO update with chunked probe regeneration — the exact
+/// choreography shared by the native models' `zo_step` entries. `out` is
+/// cleared and doubles as the delta accumulator until the final
+/// `θ + delta` sweep; each probe's `u` is regenerated twice (perturb
+/// pass, update pass) via [`for_each_chunk`], so no per-probe vector is
+/// materialized and temporary memory is O(d + chunk) regardless of
+/// `n_pert`. Every value stream and accumulation order matches the
+/// materialized-u formulation bit for bit (pinned by the models'
+/// `chunked_zo_matches_materialized_reference` tests).
+pub fn two_point_zo_into(
+    theta: &[f32],
+    seed: i32,
+    mu: f32,
+    lr: f32,
+    n_pert: i32,
+    base_loss: f32,
+    mut probe_loss: impl FnMut(&[f32]) -> f32,
+    out: &mut Vec<f32>,
+) {
+    let d = theta.len();
+    let n_pert = n_pert.max(1) as usize;
+    out.clear();
+    out.resize(d, 0.0);
+    let mut pert = vec![0.0f32; d];
+    let mut chunk = vec![0.0f32; ZO_CHUNK.min(d.max(1))];
+    for k in 0..n_pert {
+        let sub = fold_seed(seed as u32, k as u32);
+        // pass 1: perturb in chunks
+        for_each_chunk(sub, d, &mut chunk, |off, u| {
+            for i in 0..u.len() {
+                pert[off + i] = theta[off + i] + mu * u[i];
+            }
+        });
+        let lp = probe_loss(&pert);
+        let gscale = (lp - base_loss) / mu * (lr / n_pert as f32);
+        // pass 2: regenerate the same stream and accumulate the update
+        for_each_chunk(sub, d, &mut chunk, |off, u| {
+            for i in 0..u.len() {
+                out[off + i] -= gscale * u[i];
+            }
+        });
+    }
+    for i in 0..d {
+        out[i] = theta[i] + out[i];
+    }
+}
+
 /// Sequential reader over the stream.
 pub struct PerturbStream {
     seed: u32,
@@ -97,6 +170,18 @@ mod tests {
         assert!((var - 1.0).abs() < 0.02, "var {var}");
         // bounded support of Irwin-Hall(4)
         assert!(xs.iter().all(|x| x.abs() <= 2.0 * 3f32.sqrt() + 1e-5));
+    }
+
+    #[test]
+    fn chunked_visit_matches_take_vec() {
+        let want = PerturbStream::new(33).take_vec(100);
+        let mut got = vec![0.0f32; 100];
+        let mut chunk = vec![0.0f32; 7]; // deliberately non-divisor
+        for_each_chunk(33, 100, &mut chunk, |off, u| {
+            got[off..off + u.len()].copy_from_slice(u);
+        });
+        assert_eq!(got, want);
+        for_each_chunk(34, 0, &mut [], |_, _| panic!("d=0 must not visit"));
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Allocation profile of the zero-allocation invoke path.
+//!
+//! A counting global allocator measures the bytes allocated inside single
+//! `invoke_into` calls. Two properties are pinned:
+//!
+//! * `zo_step` temporary allocation is **independent of `n_pert`** — the
+//!   chunked probe streaming never materializes a per-probe vector, so
+//!   16 probes allocate the same handful of scratch buffers as 1;
+//! * with a warm feature cache, a `zo_step` invocation allocates far less
+//!   than the parameter+feature footprint it used to clone per call.
+//!
+//! This file holds exactly one test so no concurrent test pollutes the
+//! global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use heron_sfl::golden;
+use heron_sfl::runtime::tensor::{TensorRef, TensorValue};
+use heron_sfl::runtime::Session;
+
+fn bytes_now() -> u64 {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+#[test]
+fn zo_step_allocation_independent_of_n_pert() {
+    let session = Session::open_default().expect("session");
+    for variant in ["cnn_c1", "gpt2nano_c1_a1"] {
+        let v = session.manifest.variant(variant).unwrap().clone();
+        let espec = v.entry("zo_step").unwrap().clone();
+        let pert_idx = espec
+            .inputs
+            .iter()
+            .position(|s| s.name == "n_pert")
+            .expect("zo_step has n_pert");
+        let mut inputs: Vec<TensorValue> = espec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                golden::bench_input(&session, variant, spec, i, &v.task)
+                    .unwrap()
+            })
+            .collect();
+
+        let mut outs: Vec<TensorValue> = Vec::new();
+        let mut measure = |n_pert: i32, outs: &mut Vec<TensorValue>| {
+            inputs[pert_idx] = TensorValue::ScalarI32(n_pert);
+            let refs: Vec<TensorRef> =
+                inputs.iter().map(|t| t.view()).collect();
+            // warm: populate the feature cache and size every scratch /
+            // slot buffer for this probe count
+            session
+                .invoke_into(variant, "zo_step", &refs, outs)
+                .expect("warm invoke");
+            let before = bytes_now();
+            session
+                .invoke_into(variant, "zo_step", &refs, outs)
+                .expect("measured invoke");
+            bytes_now() - before
+        };
+
+        let one = measure(1, &mut outs);
+        let many = measure(16, &mut outs);
+        // d parameters * 4 bytes is the per-probe cost the old
+        // implementation paid 16x; the chunked path must not scale
+        let d_bytes = (v.size_local() * 4) as u64;
+        assert!(
+            many <= one + 4096,
+            "{variant}: zo_step allocations scale with n_pert \
+             (1 probe: {one} B, 16 probes: {many} B)"
+        );
+        assert!(
+            many < one + 15 * d_bytes,
+            "{variant}: 16-probe step allocated {many} B vs {one} B — \
+             per-probe vectors are back"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Bit-identity of the zero-allocation invoke path.
+//!
+//! `Session::invoke_into` (borrowed inputs, reused output slots) and the
+//! feature-plan cache may change *when* work happens and *where* results
+//! land, but never a single output bit. This suite pins that contract:
+//!
+//! * every entry of every variant produces byte-identical outputs through
+//!   `invoke` (cold), `invoke` again (cache-hit), and `invoke_into` with
+//!   dirty, wrong-arity output slots (twice, to exercise buffer reuse);
+//! * the HERON (round, client, step) trajectory is bit-identical at
+//!   1/4/8 workers while the cache is live, and the run records hits;
+//! * `Session::warmup` rejects entry names the variant does not provide.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::golden;
+use heron_sfl::runtime::tensor::{TensorRef, TensorValue};
+
+mod common;
+use common::with_session;
+
+/// Assert two tensor values are byte-for-byte identical (f32 compared on
+/// bit patterns, so even NaN payloads or signed zeros would be caught).
+fn assert_bits_eq(a: &TensorValue, b: &TensorValue, ctx: &str) {
+    match (a, b) {
+        (TensorValue::F32(x), TensorValue::F32(y)) => {
+            assert_eq!(x.len(), y.len(), "{ctx}: f32 length");
+            for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "{ctx}: f32[{i}] {u} vs {v}"
+                );
+            }
+        }
+        (TensorValue::I32(x), TensorValue::I32(y)) => {
+            assert_eq!(x, y, "{ctx}: i32 payload");
+        }
+        (TensorValue::ScalarF32(x), TensorValue::ScalarF32(y)) => {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: scalar {x} vs {y}");
+        }
+        (TensorValue::ScalarI32(x), TensorValue::ScalarI32(y)) => {
+            assert_eq!(x, y, "{ctx}: scalar i32");
+        }
+        (a, b) => panic!("{ctx}: variant mismatch {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn invoke_into_and_cache_bit_identical_for_every_entry() {
+    with_session(|s| {
+        for (vname, v) in &s.manifest.variants {
+            for (ename, espec) in &v.entries {
+                let ctx = format!("{vname}/{ename}");
+                let inputs: Vec<TensorValue> = espec
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, spec)| {
+                        golden::bench_input(s, vname, spec, i, &v.task)
+                            .unwrap()
+                    })
+                    .collect();
+                // cold invoke (first touch may be a cache miss), then a
+                // warm one (hit path) — must match exactly
+                let cold = s.invoke(vname, ename, &inputs).unwrap();
+                let warm = s.invoke(vname, ename, &inputs).unwrap();
+                assert_eq!(cold.len(), espec.outputs.len(), "{ctx}: arity");
+                for (i, (a, b)) in cold.iter().zip(&warm).enumerate() {
+                    assert_bits_eq(a, b, &format!("{ctx} warm out{i}"));
+                }
+                // invoke_into with deliberately dirty, wrong-arity slots
+                let refs: Vec<TensorRef> =
+                    inputs.iter().map(|t| t.view()).collect();
+                let mut outs = vec![
+                    TensorValue::F32(vec![9.25; 3]),
+                    TensorValue::ScalarI32(-7),
+                    TensorValue::I32(vec![1, 2]),
+                    TensorValue::F32(Vec::new()),
+                ];
+                s.invoke_into(vname, ename, &refs, &mut outs).unwrap();
+                assert_eq!(outs.len(), espec.outputs.len(), "{ctx}: arity");
+                for (i, (a, b)) in cold.iter().zip(&outs).enumerate() {
+                    assert_bits_eq(a, b, &format!("{ctx} into out{i}"));
+                }
+                // second invoke_into reuses the slot buffers in place
+                s.invoke_into(vname, ename, &refs, &mut outs).unwrap();
+                for (i, (a, b)) in cold.iter().zip(&outs).enumerate() {
+                    assert_bits_eq(a, b, &format!("{ctx} reuse out{i}"));
+                }
+            }
+        }
+    })
+}
+
+fn heron_cfg(workers: usize) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: Algorithm::Heron,
+        n_clients: 6,
+        rounds: 2,
+        local_steps: 2,
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 2,
+        dataset_size: 1024,
+        eval_every: 1,
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cached_trajectory_bit_identical_across_worker_counts() {
+    // the fingerprint covers θ_l, θ_s, every per-step loss, and the eval
+    // metrics — any cache- or scratch-induced divergence shows up here
+    let fp = |workers: usize| {
+        with_session(|s| {
+            let mut d = Driver::new(s, heron_cfg(workers)).unwrap();
+            let rec = d.run(&format!("bitid-w{workers}")).unwrap();
+            let losses: Vec<f64> =
+                rec.rounds.iter().map(|r| r.train_loss).collect();
+            let metrics: Vec<f64> =
+                rec.rounds.iter().map(|r| r.eval_metric).collect();
+            (d.theta_l.clone(), d.theta_s.clone(), losses, metrics)
+        })
+    };
+    let base = fp(1);
+    for workers in [4, 8] {
+        let other = fp(workers);
+        assert_eq!(base.0, other.0, "theta_l differs at workers={workers}");
+        assert_eq!(base.1, other.1, "theta_s differs at workers={workers}");
+        assert_eq!(base.2, other.2, "losses differ at workers={workers}");
+        assert_eq!(base.3, other.3, "metrics differ at workers={workers}");
+    }
+    // the runs above reused batches (uploads + repeated eval), so the
+    // feature-plan cache must have observed traffic and scored hits
+    with_session(|s| {
+        let st = s.stats();
+        assert!(
+            st.feature_cache_hits > 0,
+            "expected feature-cache hits, got {st:?}"
+        );
+        assert!(st.feature_cache_misses > 0, "cache never missed? {st:?}");
+        assert!(st.alloc_avoided_bytes > 0);
+        let rate = st.feature_cache_hit_rate();
+        assert!((0.0..=1.0).contains(&rate));
+    });
+}
+
+#[test]
+fn warmup_rejects_unknown_entries() {
+    with_session(|s| {
+        assert!(s.warmup("cnn_c1", &["zo_step", "client_fwd"]).is_ok());
+        let err = s.warmup("cnn_c1", &["zo_stpe"]); // typo'd entry
+        assert!(err.is_err(), "typo'd entry must not warm up");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("zo_stpe"), "error should name the entry: {msg}");
+        // entry that exists for cnn_c1 but not for the reduced cnn_c2
+        assert!(s.warmup("cnn_c2", &["server_step_cutgrad"]).is_err());
+        assert!(s.warmup("no_such_variant", &["zo_step"]).is_err());
+    })
+}
