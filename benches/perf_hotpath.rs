@@ -86,6 +86,22 @@ fn main() -> Result<()> {
         std::hint::black_box(&xs);
     });
 
+    // wire codec: encode+decode one 64k-param ModelSync frame (the
+    // dominant message of a networked round) — serialization must stay
+    // negligible next to the model math it ships
+    let theta: Vec<f32> = PerturbStream::new(11).take_vec(1 << 16);
+    let sync = heron_sfl::net::Msg::ModelSync {
+        round: 1,
+        client: 0,
+        theta,
+    };
+    b.run("wire_roundtrip_modelsync_64k", || {
+        let frame = heron_sfl::net::wire::encode_frame(&sync);
+        let (msg, _) =
+            heron_sfl::net::wire::decode_frame(&frame).expect("decode");
+        std::hint::black_box(&msg);
+    });
+
     Bench::header("runtime entries (cnn_c1, batch 32)");
     let variant = "cnn_c1";
     session.warmup(

@@ -39,6 +39,10 @@ pub struct RunConfig {
     pub eval_holdout: u64,
     /// host worker threads for the parallel client phase (0 = all cores)
     pub workers: usize,
+    /// Main-Server queue capacity override (0 = auto: N·(h/k + 1), which
+    /// never drops; nonzero bounds the queue so backpressure drops — and,
+    /// on the networked path, typed NACKs — become observable)
+    pub queue_capacity: usize,
 }
 
 impl Default for RunConfig {
@@ -63,6 +67,7 @@ impl Default for RunConfig {
             eval_every: 1,
             eval_holdout: 1 << 20,
             workers: 0,
+            queue_capacity: 0,
         }
     }
 }
@@ -134,6 +139,8 @@ impl RunConfig {
             "data_seed" => self.data_seed = v.parse()?,
             "run_seed" | "seed" => self.run_seed = v.parse()?,
             "eval_every" => self.eval_every = v.parse()?,
+            "eval_holdout" => self.eval_holdout = v.parse()?,
+            "queue_capacity" => self.queue_capacity = v.parse()?,
             // non-config CLI flags pass through silently
             _ => {}
         }
@@ -161,6 +168,44 @@ impl RunConfig {
         }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Serialize as a JSON object whose values are the *exact* strings
+    /// [`Self::apply_kv`] parses back, so `from_json(to_json(cfg))`
+    /// reproduces every field bit-for-bit (Rust's `{}` float formatting is
+    /// shortest-roundtrip, and integer fields go through `to_string`).
+    /// The networked `Assign` handshake ships configs this way — a remote
+    /// client must reconstruct the server's run parameters exactly or the
+    /// bit-identity contract of the wire protocol breaks.
+    pub fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![
+            ("variant", Value::str(&self.variant)),
+            ("algorithm", Value::str(self.algorithm.name())),
+            ("n_clients", Value::str(&self.n_clients.to_string())),
+            ("participation", Value::str(&self.participation.to_string())),
+            ("rounds", Value::str(&self.rounds.to_string())),
+            ("local_steps", Value::str(&self.local_steps.to_string())),
+            ("upload_every", Value::str(&self.upload_every.to_string())),
+            ("align_every", Value::str(&self.align_every.to_string())),
+            ("lr_client", Value::str(&self.lr_client.to_string())),
+            ("lr_server", Value::str(&self.lr_server.to_string())),
+            ("mu", Value::str(&self.mu.to_string())),
+            ("n_pert", Value::str(&self.n_pert.to_string())),
+            ("dataset_size", Value::str(&self.dataset_size.to_string())),
+            ("data_seed", Value::str(&self.data_seed.to_string())),
+            ("run_seed", Value::str(&self.run_seed.to_string())),
+            ("eval_every", Value::str(&self.eval_every.to_string())),
+            ("eval_holdout", Value::str(&self.eval_holdout.to_string())),
+            ("workers", Value::str(&self.workers.to_string())),
+            ("queue_capacity", Value::str(&self.queue_capacity.to_string())),
+        ];
+        match self.scheme {
+            Scheme::Iid => pairs.push(("iid", Value::str("true"))),
+            Scheme::Dirichlet { alpha } => {
+                pairs.push(("alpha", Value::str(&alpha.to_string())))
+            }
+        }
+        Value::obj(pairs)
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -243,6 +288,56 @@ mod tests {
         let mut c = RunConfig::default();
         c.mu = -1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_exactly() {
+        let mut cfg = RunConfig {
+            variant: "gpt2micro_c2_a1".into(),
+            algorithm: Algorithm::FslSage,
+            n_clients: 7,
+            participation: 0.37,
+            lr_client: 1.7e-3,
+            lr_server: 3.3e-4,
+            mu: 0.012345,
+            n_pert: 3,
+            scheme: Scheme::Dirichlet { alpha: 0.31 },
+            dataset_size: 2048,
+            data_seed: 123456789,
+            run_seed: 987654321,
+            eval_holdout: (1 << 21) + 17,
+            queue_capacity: 5,
+            ..Default::default()
+        };
+        for _ in 0..2 {
+            let json = cfg.to_json().to_string();
+            let back =
+                RunConfig::from_json(&crate::util::json::parse(&json).unwrap())
+                    .unwrap();
+            assert_eq!(back.variant, cfg.variant);
+            assert_eq!(back.algorithm, cfg.algorithm);
+            assert_eq!(back.n_clients, cfg.n_clients);
+            assert_eq!(back.participation.to_bits(), cfg.participation.to_bits());
+            assert_eq!(back.lr_client.to_bits(), cfg.lr_client.to_bits());
+            assert_eq!(back.lr_server.to_bits(), cfg.lr_server.to_bits());
+            assert_eq!(back.mu.to_bits(), cfg.mu.to_bits());
+            assert_eq!(back.n_pert, cfg.n_pert);
+            match (back.scheme, cfg.scheme) {
+                (
+                    Scheme::Dirichlet { alpha: a },
+                    Scheme::Dirichlet { alpha: b },
+                ) => assert_eq!(a.to_bits(), b.to_bits()),
+                (Scheme::Iid, Scheme::Iid) => {}
+                other => panic!("scheme mismatch: {other:?}"),
+            }
+            assert_eq!(back.dataset_size, cfg.dataset_size);
+            assert_eq!(back.data_seed, cfg.data_seed);
+            assert_eq!(back.run_seed, cfg.run_seed);
+            assert_eq!(back.eval_holdout, cfg.eval_holdout);
+            assert_eq!(back.queue_capacity, cfg.queue_capacity);
+            // second lap exercises the IID branch
+            cfg.scheme = Scheme::Iid;
+        }
     }
 
     #[test]

@@ -22,6 +22,31 @@
 
 use crate::coordinator::server_queue::QueueStats;
 
+/// Measured wire traffic for one round of a *networked* run (frame bytes
+/// actually serialized onto the transport, server-side view). All-zero
+/// for in-process runs — the run summary prints these next to the
+/// analytic `CostBook` bytes so the two accountings can be compared.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireRoundStats {
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+}
+
+impl WireRoundStats {
+    /// Per-field difference `self - earlier` (cumulative counters →
+    /// per-round deltas).
+    pub fn since(&self, earlier: &WireRoundStats) -> WireRoundStats {
+        WireRoundStats {
+            bytes_sent: self.bytes_sent - earlier.bytes_sent,
+            bytes_recv: self.bytes_recv - earlier.bytes_recv,
+            frames_sent: self.frames_sent - earlier.frames_sent,
+            frames_recv: self.frames_recv - earlier.frames_recv,
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceProfile {
     /// sustained client compute, FLOP/s (edge device)
@@ -68,6 +93,8 @@ pub struct RoundTiming {
     pub host_makespan: f64,
     /// Main-Server queue occupancy/backpressure for this round
     pub queue: QueueStats,
+    /// measured wire traffic for this round (networked runs only)
+    pub wire: WireRoundStats,
 }
 
 impl RoundTiming {
@@ -129,6 +156,7 @@ pub struct RoundSim {
     sync_bytes: u64,
     workers: usize,
     queue_stats: QueueStats,
+    wire: WireRoundStats,
 }
 
 impl RoundSim {
@@ -141,6 +169,7 @@ impl RoundSim {
             sync_bytes: 0,
             workers: n_clients.max(1),
             queue_stats: QueueStats::default(),
+            wire: WireRoundStats::default(),
         }
     }
 
@@ -152,6 +181,11 @@ impl RoundSim {
     /// Record the Main-Server queue statistics observed this round.
     pub fn record_queue(&mut self, stats: QueueStats) {
         self.queue_stats = stats;
+    }
+
+    /// Record the measured wire traffic for this round (networked runs).
+    pub fn record_wire(&mut self, wire: WireRoundStats) {
+        self.wire = wire;
     }
 
     pub fn lane(&self) -> ClientLane {
@@ -222,6 +256,7 @@ impl RoundSim {
             workers: self.workers,
             host_makespan,
             queue: self.queue_stats,
+            wire: self.wire,
         }
     }
 }

@@ -1,0 +1,475 @@
+//! Client-side local phase (substrate S10b): the per-client state and the
+//! decoupled/locked step loops, shared by the in-process round driver
+//! (`coordinator::round`) and the networked client endpoint
+//! (`net::client`).
+//!
+//! The functions here are the *single* implementation of what a client
+//! does between two model syncs. Both execution modes call them with the
+//! same inputs in the same order, which is what makes a TCP-loopback run
+//! bit-identical to `Driver::run_round`:
+//!
+//! * per-step randomness is `step_seed(run_seed, round, client, step)` —
+//!   no ambient RNG, so it does not matter which process computes it;
+//! * every entry invocation goes through the same `Session` code path
+//!   (`invoke_into` on the hot loop, `Call` on the cold locked exchange);
+//! * smashed uploads leave through the [`SmashedSink`] abstraction — the
+//!   in-process sink is the Main-Server's [`ServerQueue`], the networked
+//!   sink encodes a `SmashedBatch` wire message — and the server re-sorts
+//!   by `(round, client, step)` either way.
+
+use crate::coordinator::accounting::CostBook;
+use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::eventsim::{ClientLane, DeviceProfile};
+use crate::coordinator::round::OptState;
+use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
+use crate::data::loader::{Loader, Task};
+use crate::data::partition::Partition;
+use crate::runtime::manifest::{EntrySpec, VariantSpec};
+use crate::runtime::tensor::{TensorRef, TensorValue};
+use crate::runtime::{Call, Session};
+use crate::util::rng::mix64;
+use anyhow::{bail, Context, Result};
+
+/// Everything a client owns across rounds: its data shard's loader, its
+/// optimizer states, and the last uploaded batch (FSL-SAGE alignment).
+pub struct ClientState {
+    pub loader: Loader,
+    pub opt_local: OptState,
+    /// SFLV1/V2: separate optimizer for θ_c-only backprop updates
+    pub opt_client: OptState,
+    pub shard_weight: f64,
+    /// last uploaded batch (FSL-SAGE alignment needs it)
+    pub last_upload: Option<(Vec<f32>, Vec<i32>, Vec<i32>)>, // smashed, y, x
+}
+
+/// Build the full client-state table for a run. Deterministic in
+/// `(variant, cfg)` — the driver and every networked client process build
+/// byte-identical loaders/partitions from the same config, so a remote
+/// client stepping its own state produces the exact trajectory the
+/// in-process run would have.
+pub fn build_client_states(
+    v: &VariantSpec,
+    cfg: &RunConfig,
+    task: Task,
+) -> Vec<ClientState> {
+    let (nc, nl) = (v.size_client, v.size_local());
+    let part = match task {
+        Task::Vision => Partition::vision(
+            cfg.data_seed,
+            cfg.dataset_size,
+            cfg.n_clients,
+            cfg.scheme,
+        ),
+        Task::Lm => Partition::text(
+            cfg.data_seed,
+            cfg.dataset_size,
+            cfg.n_clients,
+            cfg.scheme,
+        ),
+    };
+    let total: usize = part.sizes().iter().sum();
+    part.clients
+        .iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            let shard = if shard.is_empty() {
+                vec![(i as u64) % cfg.dataset_size] // degenerate shard fallback
+            } else {
+                shard.clone()
+            };
+            let w = shard.len() as f64 / total.max(1) as f64;
+            ClientState {
+                loader: Loader::new(
+                    task,
+                    cfg.data_seed,
+                    shard,
+                    v.batch,
+                    mix64(cfg.run_seed, 0x10AD ^ i as u64),
+                ),
+                opt_local: OptState::new(v.opt_state, nl),
+                opt_client: OptState::new(v.opt_state, nc),
+                shard_weight: w,
+                last_upload: None,
+            }
+        })
+        .collect()
+}
+
+/// Read-only context shared by all client worker threads (or remote
+/// client processes) during the decoupled fan-out phase.
+pub struct LocalCtx<'a> {
+    pub session: &'a Session,
+    pub cfg: &'a RunConfig,
+    pub book: &'a CostBook,
+    pub base: Option<&'a [f32]>,
+    pub task: Task,
+    pub round_idx: usize,
+    pub profile: DeviceProfile,
+    pub nc: usize,
+}
+
+/// What one client's local phase produces, merged at the round barrier in
+/// participant order.
+pub struct LocalOutcome {
+    pub ci: usize,
+    pub theta: Vec<f32>,
+    pub losses: Vec<f64>,
+    /// per-step ZO seeds (the lean `ZoUpdate` wire record; FO algorithms
+    /// carry the same counter-derived stream positions)
+    pub seeds: Vec<i32>,
+    pub comm_bytes: u64,
+    pub flops: u64,
+    pub lane: ClientLane,
+}
+
+/// Where a client's smashed uploads go. In-process this is the
+/// Main-Server's [`ServerQueue`]; over the network it is a framed
+/// `SmashedBatch` message (acknowledged, so capacity drops surface as
+/// typed NACKs). Returns `false` when the batch was dropped.
+pub trait SmashedSink: Sync {
+    fn push_smashed(&self, batch: SmashedBatch) -> bool;
+}
+
+impl SmashedSink for ServerQueue {
+    fn push_smashed(&self, batch: SmashedBatch) -> bool {
+        self.push(batch)
+    }
+}
+
+pub fn loader_batch_xy(task: Task, loader: &Loader) -> (TensorValue, Vec<i32>) {
+    match task {
+        Task::Vision => (
+            TensorValue::F32(loader.xs_f32.clone()),
+            loader.ys.clone(),
+        ),
+        Task::Lm => (
+            TensorValue::I32(loader.xs_i32.clone()),
+            loader.xs_i32.clone(),
+        ),
+    }
+}
+
+pub fn step_seed(cfg: &RunConfig, round_idx: usize, client: usize, step: usize) -> i32 {
+    mix64(
+        cfg.run_seed,
+        (round_idx as u64) << 24 | (client as u64) << 12 | step as u64,
+    ) as i32
+}
+
+/// Borrow the loader's reused batch buffer as the entry's `x` input.
+fn x_ref(task: Task, loader: &Loader) -> TensorRef<'_> {
+    match task {
+        Task::Vision => TensorRef::F32(&loader.xs_f32),
+        Task::Lm => TensorRef::I32(&loader.xs_i32),
+    }
+}
+
+/// Borrow the loader's target buffer (LM entries take the token batch).
+fn y_slice(task: Task, loader: &Loader) -> &[i32] {
+    match task {
+        Task::Vision => &loader.ys,
+        Task::Lm => &loader.xs_i32,
+    }
+}
+
+/// Build the positional input list for `espec` from named borrowed
+/// buffers. Scalars travel by value; a spec input with no binding (e.g.
+/// optimizer-state tensors the native manifest never emits) is an error.
+pub fn bind_entry_inputs<'a>(
+    espec: &EntrySpec,
+    named: &[(&str, TensorRef<'a>)],
+) -> Result<Vec<TensorRef<'a>>> {
+    let mut out = Vec::with_capacity(espec.inputs.len());
+    for spec in &espec.inputs {
+        let r = named
+            .iter()
+            .find(|(n, _)| *n == spec.name)
+            .map(|(_, r)| *r)
+            .with_context(|| {
+                format!("{}: no binding for input {}", espec.name, spec.name)
+            })?;
+        out.push(r);
+    }
+    Ok(out)
+}
+
+/// One client's full local phase (h steps + uploads), self-contained so it
+/// can run on any worker thread or in a remote client process. Mutates
+/// only this client's state; all cross-client effects go through the
+/// smashed sink and the returned outcome.
+///
+/// The loop is allocation-lean: every input is a borrowed view (θ, the
+/// loader's batch buffers, the frozen base), outputs land in the two
+/// scratch arenas below, and the updated θ is swapped out of its slot —
+/// the same two parameter buffers ping-pong through all h steps.
+pub fn client_local_phase(
+    ctx: &LocalCtx,
+    ci: usize,
+    cs: &mut ClientState,
+    mut theta: Vec<f32>,
+    sink: &dyn SmashedSink,
+) -> Result<LocalOutcome> {
+    let mut lane = ClientLane::new(&ctx.profile);
+    let mut losses = Vec::with_capacity(ctx.cfg.local_steps);
+    let mut seeds = Vec::with_capacity(ctx.cfg.local_steps);
+    let mut comm_bytes = 0u64;
+    let mut flops = 0u64;
+    let zo = ctx.cfg.algorithm == Algorithm::Heron;
+    let entry = if zo { "zo_step" } else { "fo_step" };
+    if !matches!(cs.opt_local, OptState::None) {
+        bail!(
+            "local phase: stateful optimizers are not wired through the \
+             native entries (manifest opt_state must be 0)"
+        );
+    }
+    let vspec = ctx.session.variant(&ctx.cfg.variant)?;
+    let step_espec = vspec.entry(entry)?;
+    let fwd_espec = vspec.entry("client_fwd")?;
+    let ti = step_espec.output_pos("theta_l")?;
+    let li = step_espec.output_pos("loss")?;
+    let si = fwd_espec.output_pos("smashed")?;
+    // per-client scratch arenas, reused across all h steps
+    let mut outs: Vec<TensorValue> = Vec::new();
+    let mut fwd_outs: Vec<TensorValue> = Vec::new();
+
+    for step in 1..=ctx.cfg.local_steps {
+        cs.loader.next_batch();
+        let seed = step_seed(ctx.cfg, ctx.round_idx, ci, step);
+        seeds.push(seed);
+        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(8);
+        if let Some(b) = ctx.base {
+            named.push(("base", TensorRef::F32(b)));
+        }
+        named.push(("theta_l", TensorRef::F32(&theta)));
+        named.push(("x", x_ref(ctx.task, &cs.loader)));
+        named.push(("y", TensorRef::I32(y_slice(ctx.task, &cs.loader))));
+        named.push(("lr", TensorRef::ScalarF32(ctx.cfg.lr_client)));
+        if zo {
+            named.push(("seed", TensorRef::ScalarI32(seed)));
+            named.push(("mu", TensorRef::ScalarF32(ctx.cfg.mu)));
+            named.push((
+                "n_pert",
+                TensorRef::ScalarI32(ctx.cfg.n_pert as i32),
+            ));
+        }
+        let inputs = bind_entry_inputs(step_espec, &named)?;
+        ctx.session
+            .invoke_into(&ctx.cfg.variant, entry, &inputs, &mut outs)?;
+        match &mut outs[ti] {
+            TensorValue::F32(v) => std::mem::swap(&mut theta, v),
+            other => bail!(
+                "{entry}: theta_l output has wrong dtype {:?}",
+                other.dtype()
+            ),
+        }
+        losses.push(outs[li].scalar_f32()? as f64);
+        flops += ctx.book.flops_per_step;
+        lane.compute(ctx.book.flops_per_step);
+
+        if step % ctx.cfg.upload_every == 0 {
+            upload_smashed(
+                ctx,
+                ci,
+                cs,
+                &theta,
+                fwd_espec,
+                si,
+                step,
+                sink,
+                &mut lane,
+                &mut comm_bytes,
+                &mut fwd_outs,
+            )?;
+        }
+    }
+    Ok(LocalOutcome {
+        ci,
+        theta,
+        losses,
+        seeds,
+        comm_bytes,
+        flops,
+        lane,
+    })
+}
+
+fn upload_smashed(
+    ctx: &LocalCtx,
+    ci: usize,
+    cs: &mut ClientState,
+    theta: &[f32],
+    fwd_espec: &EntrySpec,
+    smashed_idx: usize,
+    step: usize,
+    sink: &dyn SmashedSink,
+    lane: &mut ClientLane,
+    comm_bytes: &mut u64,
+    fwd_outs: &mut Vec<TensorValue>,
+) -> Result<()> {
+    let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(3);
+    if let Some(b) = ctx.base {
+        named.push(("base", TensorRef::F32(b)));
+    }
+    named.push(("theta_c", TensorRef::F32(&theta[..ctx.nc])));
+    named.push(("x", x_ref(ctx.task, &cs.loader)));
+    let inputs = bind_entry_inputs(fwd_espec, &named)?;
+    ctx.session.invoke_into(
+        &ctx.cfg.variant,
+        "client_fwd",
+        &inputs,
+        fwd_outs,
+    )?;
+    // the sink owns the smashed batch, so move it out of its slot (the
+    // slot re-grows a buffer on the next upload)
+    let smashed = match std::mem::replace(
+        &mut fwd_outs[smashed_idx],
+        TensorValue::ScalarF32(0.0),
+    ) {
+        TensorValue::F32(v) => v,
+        other => bail!(
+            "client_fwd: smashed output has wrong dtype {:?}",
+            other.dtype()
+        ),
+    };
+    // the upload forward is part of the protocol but NOT an extra
+    // training cost in Table I (the paper's accounting charges the ZO /
+    // FO step); we still charge its flops to the client sim for latency
+    lane.compute(
+        (ctx.book.flops_per_step / (ctx.cfg.n_pert as u64 + 1)).max(1),
+    );
+    *comm_bytes += ctx.book.comm_per_step(true);
+    lane.upload(ctx.book.smashed_bytes);
+    let targets = y_slice(ctx.task, &cs.loader).to_vec();
+    // only the FSL-SAGE alignment ever reads last_upload — don't pay a
+    // full smashed-batch copy per upload on the other algorithms
+    if ctx.cfg.algorithm == Algorithm::FslSage {
+        let x_i32 = match ctx.task {
+            Task::Lm => cs.loader.xs_i32.clone(),
+            Task::Vision => Vec::new(),
+        };
+        cs.last_upload =
+            Some((smashed.clone(), targets.clone(), x_i32));
+    }
+    sink.push_smashed(SmashedBatch {
+        client: ci,
+        round: ctx.round_idx,
+        step,
+        smashed,
+        targets,
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// locked exchange (SFLV1/V2) — client half
+// ---------------------------------------------------------------------------
+
+/// Client forward to the cut layer on the loader's current batch.
+/// Returns the smashed activations (cold `Call` path — the locked
+/// exchange is the baselines' bottleneck by design, not ours).
+pub fn locked_client_fwd(
+    session: &Session,
+    variant: &str,
+    base: Option<&[f32]>,
+    theta_c: &[f32],
+    x: &TensorValue,
+) -> Result<Vec<f32>> {
+    let mut c = Call::new(session, variant, "client_fwd");
+    if let Some(b) = base {
+        c = c.arg("base", b.to_vec());
+    }
+    let mut outs = c
+        .arg("theta_c", theta_c.to_vec())
+        .arg("x", x.clone())
+        .run()?;
+    outs.remove("smashed").context("smashed")?.into_f32()
+}
+
+/// Client backprop step from the relayed cut gradient. Returns the
+/// updated θ_c and threads the client optimizer state.
+pub fn locked_client_bp(
+    session: &Session,
+    variant: &str,
+    base: Option<&[f32]>,
+    theta_c: &[f32],
+    opt_c: &mut OptState,
+    x: TensorValue,
+    g_smashed: Vec<f32>,
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let mut c = Call::new(session, variant, "client_bp_step");
+    if let Some(b) = base {
+        c = c.arg("base", b.to_vec());
+    }
+    c = c.arg("theta_c", theta_c.to_vec());
+    if let OptState::Adam { m, v, t } = &*opt_c {
+        c = c
+            .arg("opt_m", m.clone())
+            .arg("opt_v", v.clone())
+            .arg("opt_t", *t);
+    }
+    let mut outs = c
+        .arg("x", x)
+        .arg("g_smashed", g_smashed)
+        .arg("lr", lr)
+        .run()?;
+    let new_c = outs
+        .remove("theta_c")
+        .context("bp theta_c")?
+        .into_f32()?;
+    take_opt(&mut outs, opt_c)?;
+    Ok(new_c)
+}
+
+/// FSL-SAGE: realign the aux head of `theta` against the server's cut
+/// gradient for the client's last uploaded batch. Runs on whichever
+/// process holds `last_upload` (the driver in-process, the remote client
+/// over the wire) — same entry, same inputs, same bits.
+pub fn aux_align_apply(
+    session: &Session,
+    variant: &str,
+    base: Option<&[f32]>,
+    theta: Vec<f32>,
+    smashed: Vec<f32>,
+    y: Vec<i32>,
+    g_smashed: Vec<f32>,
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let mut c = Call::new(session, variant, "aux_align");
+    if let Some(b) = base {
+        c = c.arg("base", b.to_vec());
+    }
+    let mut outs = c
+        .arg("theta_l", theta)
+        .arg("smashed", smashed)
+        .arg("y", TensorValue::I32(y))
+        .arg("g_smashed", g_smashed)
+        .arg("lr", lr)
+        .run()?;
+    outs.remove("theta_l")
+        .context("aux_align theta_l")?
+        .into_f32()
+}
+
+/// Thread Adam state out of an entry's outputs (no-op for `OptState::None`).
+pub fn take_opt(
+    outs: &mut std::collections::HashMap<String, TensorValue>,
+    opt: &mut OptState,
+) -> Result<()> {
+    if let OptState::Adam { m, v, t } = opt {
+        *m = outs
+            .remove("opt_m")
+            .context("opt_m output")?
+            .into_f32()?;
+        *v = outs
+            .remove("opt_v")
+            .context("opt_v output")?
+            .into_f32()?;
+        *t = outs
+            .remove("opt_t")
+            .context("opt_t output")?
+            .scalar_f32()?;
+    }
+    Ok(())
+}

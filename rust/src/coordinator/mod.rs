@@ -2,6 +2,8 @@
 //!
 //! * [`algorithms`] — the algorithm family (HERON, CSE-FSL, FSL-SAGE,
 //!   SFLV1/V2-SplitLoRA)
+//! * [`local`] — the client-side local phase, shared by the in-process
+//!   driver and the networked client endpoint (`net::client`)
 //! * [`round`] — the four-stage round driver over the AOT runtime
 //! * [`aggregator`] — Fed-Server FedAvg (Eq. 8)
 //! * [`server_queue`] — Main-Server sequential smashed-data queue (Eq. 7)
@@ -14,5 +16,6 @@ pub mod aggregator;
 pub mod algorithms;
 pub mod config;
 pub mod eventsim;
+pub mod local;
 pub mod round;
 pub mod server_queue;

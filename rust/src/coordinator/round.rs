@@ -37,6 +37,16 @@
 //! batch waits on a server round-trip), so there is no decoupled client
 //! phase to parallelize without changing the algorithm.
 //!
+//! ## Shared phases, two execution modes
+//!
+//! The client-side step loops live in [`crate::coordinator::local`] and
+//! the server-side round phases are the public(-in-crate) methods below
+//! ([`Driver::server_drain`], [`Driver::locked_server_exchange`],
+//! [`Driver::absorb_outcome`], [`Driver::finish_round`]). `run_round`
+//! composes them in-process; the networked dispatcher (`net::server`)
+//! composes the *same* methods around wire messages, which is why a
+//! TCP-loopback run is bit-identical to the in-process trajectory.
+//!
 //! ## Zero-allocation hot loop
 //!
 //! The decoupled local phase and the server drain run through
@@ -45,28 +55,25 @@
 //! blob, and outputs land in per-client scratch arenas whose buffers are
 //! reused across all h steps (the updated θ is *swapped* out of its slot,
 //! not copied). The driver itself allocates nothing parameter-sized per
-//! step — the old path cloned θ, base, x, and y into every `Call` — and
-//! the models allocate no per-probe vectors (their remaining per-call
-//! scratch is a bounded handful of buffers). Results are bit-identical
-//! to the allocating `Call` path, which the cold branches (SFLV1/V2
-//! locked exchange, alignment, eval) still use.
+//! step, and the models allocate no per-probe vectors. Results are
+//! bit-identical to the allocating `Call` path, which the cold branches
+//! (SFLV1/V2 locked exchange, alignment, eval) still use.
 
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::aggregator::fedavg_into;
 use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::config::RunConfig;
-use crate::coordinator::eventsim::{
-    ClientLane, DeviceProfile, RoundSim, RoundTiming,
+use crate::coordinator::eventsim::{DeviceProfile, RoundSim, RoundTiming};
+use crate::coordinator::local::{
+    self, build_client_states, ClientState, LocalCtx, LocalOutcome,
 };
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
-use crate::data::loader::{Loader, Task};
-use crate::data::partition::Partition;
+use crate::data::loader::Task;
 use crate::metrics::{RoundRecord, RunRecord};
-use crate::runtime::manifest::EntrySpec;
 use crate::runtime::tensor::{TensorRef, TensorValue};
 use crate::runtime::{Call, Session};
 use crate::util::pool;
-use crate::util::rng::{mix64, Xoshiro256pp};
+use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, Context, Result};
 
 /// Adam state threading through the step entries ((m, v, t) or stateless).
@@ -88,40 +95,6 @@ impl OptState {
             }
         }
     }
-}
-
-struct ClientState {
-    loader: Loader,
-    opt_local: OptState,
-    /// SFLV1/V2: separate optimizer for θ_c-only backprop updates
-    opt_client: OptState,
-    shard_weight: f64,
-    /// last uploaded batch (FSL-SAGE alignment needs it)
-    last_upload: Option<(Vec<f32>, Vec<i32>, Vec<i32>)>, // smashed, y, x
-}
-
-/// Read-only context shared by all client worker threads during the
-/// decoupled fan-out phase.
-struct LocalCtx<'a> {
-    session: &'a Session,
-    cfg: &'a RunConfig,
-    book: &'a CostBook,
-    base: Option<&'a [f32]>,
-    task: Task,
-    round_idx: usize,
-    profile: DeviceProfile,
-    nc: usize,
-}
-
-/// What one client's local phase produces, merged at the round barrier in
-/// participant order.
-struct LocalOutcome {
-    ci: usize,
-    theta: Vec<f32>,
-    losses: Vec<f64>,
-    comm_bytes: u64,
-    flops: u64,
-    lane: ClientLane,
 }
 
 pub struct Driver<'s> {
@@ -176,47 +149,7 @@ impl<'s> Driver<'s> {
             bail!("init blob sizes disagree with manifest");
         }
 
-        let part = match task {
-            Task::Vision => Partition::vision(
-                cfg.data_seed,
-                cfg.dataset_size,
-                cfg.n_clients,
-                cfg.scheme,
-            ),
-            Task::Lm => Partition::text(
-                cfg.data_seed,
-                cfg.dataset_size,
-                cfg.n_clients,
-                cfg.scheme,
-            ),
-        };
-        let total: usize = part.sizes().iter().sum();
-        let clients = part
-            .clients
-            .iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                let shard = if shard.is_empty() {
-                    vec![(i as u64) % cfg.dataset_size] // degenerate shard fallback
-                } else {
-                    shard.clone()
-                };
-                let w = shard.len() as f64 / total.max(1) as f64;
-                ClientState {
-                    loader: Loader::new(
-                        task,
-                        cfg.data_seed,
-                        shard,
-                        v.batch,
-                        mix64(cfg.run_seed, 0x10AD ^ i as u64),
-                    ),
-                    opt_local: OptState::new(v.opt_state, nl),
-                    opt_client: OptState::new(v.opt_state, nc),
-                    shard_weight: w,
-                    last_upload: None,
-                }
-            })
-            .collect();
+        let clients = build_client_states(&v, &cfg, task);
 
         let server_replicas = if cfg.algorithm == Algorithm::SflV1 {
             (0..cfg.n_clients)
@@ -256,58 +189,40 @@ impl<'s> Driver<'s> {
             .warmup(&self.cfg.variant, self.cfg.algorithm.required_entries())
     }
 
-    fn call<'a>(&'a self, entry: &'a str) -> Call<'a> {
-        let mut c = Call::new(self.session, &self.cfg.variant, entry);
-        if let Some(b) = &self.base {
-            c = c.arg("base", b.clone());
-        }
-        c
-    }
-
-    fn opt_args<'a>(mut c: Call<'a>, opt: &OptState) -> Call<'a> {
-        if let OptState::Adam { m, v, t } = opt {
-            c = c
-                .arg("opt_m", m.clone())
-                .arg("opt_v", v.clone())
-                .arg("opt_t", *t);
-        }
-        c
-    }
-
-    fn take_opt(
-        outs: &mut std::collections::HashMap<String, TensorValue>,
-        opt: &mut OptState,
-    ) -> Result<()> {
-        if let OptState::Adam { m, v, t } = opt {
-            *m = outs
-                .remove("opt_m")
-                .context("opt_m output")?
-                .into_f32()?;
-            *v = outs
-                .remove("opt_v")
-                .context("opt_v output")?
-                .into_f32()?;
-            *t = outs
-                .remove("opt_t")
-                .context("opt_t output")?
-                .scalar_f32()?;
-        }
-        Ok(())
+    pub fn round_index(&self) -> usize {
+        self.round_idx
     }
 
     fn batch_xy(&self, client: usize) -> (TensorValue, Vec<i32>) {
-        loader_batch_xy(self.task, &self.clients[client].loader)
+        local::loader_batch_xy(self.task, &self.clients[client].loader)
+    }
+
+    /// The fresh event-sim accumulator for one round.
+    pub fn new_sim(&self) -> RoundSim {
+        RoundSim::new(&self.profile, self.cfg.n_clients)
+    }
+
+    /// The Main-Server queue for one round: capacity `N·(h/k + 1)` (never
+    /// drops under the synchronous protocol) unless the config pins an
+    /// explicit bound (`queue_capacity`, used by backpressure/failure
+    /// injection — dropped batches surface in `QueueStats` and, on the
+    /// networked path, as typed NACKs to the uploading client).
+    pub fn round_queue(&self, n_participants: usize) -> ServerQueue {
+        let cap = if self.cfg.queue_capacity > 0 {
+            self.cfg.queue_capacity
+        } else {
+            n_participants
+                * (self.cfg.local_steps / self.cfg.upload_every + 1)
+        };
+        ServerQueue::new(cap)
     }
 
     /// One full communication round. Returns the train-loss mean over all
     /// local steps.
     pub fn run_round(&mut self) -> Result<f64> {
         let participants = self.sample_participants();
-        let mut sim = RoundSim::new(&self.profile, self.cfg.n_clients);
-        let queue = ServerQueue::new(
-            participants.len()
-                * (self.cfg.local_steps / self.cfg.upload_every + 1),
-        );
+        let mut sim = self.new_sim();
+        let queue = self.round_queue(participants.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
 
@@ -333,90 +248,12 @@ impl<'s> Driver<'s> {
             }
         }
 
-        // ---- server phase: drain queued smashed batches (Eq. 7) ----
-        // The concurrent queue is drained at the barrier in deterministic
-        // (round, client, step) order, which matches the order a purely
-        // sequential client loop would have produced.
-        if self.cfg.algorithm.is_decoupled() {
-            let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
-            for b in queue.drain_sorted() {
-                let want_cutgrad = self.cfg.algorithm == Algorithm::FslSage
-                    && b.step % (self.cfg.upload_every * self.cfg.align_every)
-                        == 0;
-                let g = self.server_consume(&b, want_cutgrad, &mut sim)?;
-                if let Some(g_sm) = g {
-                    sage_feedback.push((b.client, g_sm));
-                }
-            }
-            // FSL-SAGE: clients align their aux model against the returned
-            // cut gradients (one alignment per feedback message)
-            for (ci, g_sm) in sage_feedback {
-                self.comm_bytes += self.book.comm_per_alignment();
-                sim.client_download(ci, self.book.comm_per_alignment());
-                if let Some(pos) =
-                    updated.iter().position(|(c, _)| *c == ci)
-                {
-                    let (sm, y, _x) = self.clients[ci]
-                        .last_upload
-                        .clone()
-                        .context("sage alignment without upload")?;
-                    let theta = updated[pos].1.clone();
-                    let mut outs = self
-                        .call("aux_align")
-                        .arg("theta_l", theta)
-                        .arg("smashed", sm)
-                        .arg("y", TensorValue::I32(y))
-                        .arg("g_smashed", g_sm)
-                        .arg("lr", self.cfg.lr_client)
-                        .run()?;
-                    updated[pos].1 = outs
-                        .remove("theta_l")
-                        .context("aux_align theta_l")?
-                        .into_f32()?;
-                }
-            }
-        }
-        sim.record_queue(queue.stats());
-
-        // ---- aggregation (Fed-Server, Eq. 8) ----
-        if !updated.is_empty() {
-            let refs: Vec<&[f32]> =
-                updated.iter().map(|(_, t)| t.as_slice()).collect();
-            let weights: Vec<f64> = updated
-                .iter()
-                .map(|(c, _)| self.clients[*c].shard_weight.max(1e-9))
-                .collect();
-            fedavg_into(&refs, &weights, &mut self.agg_buf);
-            if self.cfg.algorithm.is_decoupled() {
-                self.theta_l.copy_from_slice(&self.agg_buf);
-            } else {
-                // SFLV1/V2: only θ_c is client-trained; aux stays at init
-                self.theta_l[..self.nc]
-                    .copy_from_slice(&self.agg_buf[..self.nc]);
-            }
-        }
-
-        // SFLV1: aggregate the per-client server replicas into all replicas
-        if self.cfg.algorithm == Algorithm::SflV1 {
-            let refs: Vec<&[f32]> = participants
-                .iter()
-                .map(|&c| self.server_replicas[c].0.as_slice())
-                .collect();
-            let w = vec![1.0; refs.len()];
-            let mut mean = vec![0.0f32; self.ns];
-            fedavg_into(&refs, &w, &mut mean);
-            self.theta_s.copy_from_slice(&mean);
-            for (rep, _) in &mut self.server_replicas {
-                rep.copy_from_slice(&mean);
-            }
-        }
-
-        self.timings.push(sim.finish());
-        self.round_idx += 1;
-        Ok(losses.iter().sum::<f64>() / losses.len().max(1) as f64)
+        let feedback = self.server_drain(&queue, &mut sim)?;
+        self.apply_alignment_local(feedback, &mut updated, &mut sim)?;
+        Ok(self.finish_round(&participants, updated, sim, &losses))
     }
 
-    fn sample_participants(&mut self) -> Vec<usize> {
+    pub fn sample_participants(&mut self) -> Vec<usize> {
         let k = self.cfg.participants_per_round();
         let mut idx = self.rng.sample_indices(self.cfg.n_clients, k);
         idx.sort_unstable();
@@ -456,24 +293,47 @@ impl<'s> Driver<'s> {
             .filter(|(ci, _)| participants.binary_search(ci).is_ok())
             .collect();
         let results = pool::run_jobs(eff, jobs, |(ci, state)| {
-            client_local_phase(&ctx, ci, state, theta0.clone(), queue)
+            local::client_local_phase(&ctx, ci, state, theta0.clone(), queue)
         });
         for res in results {
-            let out = res?;
-            losses.extend(out.losses);
-            self.comm_bytes +=
-                out.comm_bytes + self.book.comm_per_round_sync();
-            self.flops_client += out.flops;
-            sim.merge_lane(out.ci, &out.lane);
-            sim.sync(self.book.comm_per_round_sync());
-            updated.push((out.ci, out.theta));
+            self.absorb_outcome(res?, sim, losses, updated);
         }
         Ok(())
     }
 
+    /// Merge one client's local-phase outcome into the round's driver-side
+    /// accounting, in the order outcomes are presented (participant order
+    /// at the barrier — both execution modes preserve it).
+    pub(crate) fn absorb_outcome(
+        &mut self,
+        out: LocalOutcome,
+        sim: &mut RoundSim,
+        losses: &mut Vec<f64>,
+        updated: &mut Vec<(usize, Vec<f32>)>,
+    ) {
+        let LocalOutcome {
+            ci,
+            theta,
+            losses: step_losses,
+            seeds: _,
+            comm_bytes,
+            flops,
+            lane,
+        } = out;
+        losses.extend(step_losses);
+        self.comm_bytes += comm_bytes + self.book.comm_per_round_sync();
+        self.flops_client += flops;
+        sim.merge_lane(ci, &lane);
+        sim.sync(self.book.comm_per_round_sync());
+        updated.push((ci, theta));
+    }
+
     // ---- locked local phase (SFLV1/V2) -----------------------------------
 
-    /// Traditional SFL (V1/V2): every batch runs the locked exchange.
+    /// Traditional SFL (V1/V2): every batch runs the locked exchange. The
+    /// client half (cut forward, backprop) lives in `coordinator::local`;
+    /// the server half is [`Self::locked_server_exchange`] — the same
+    /// split the networked path runs over the wire.
     fn local_phase_locked(
         &mut self,
         ci: usize,
@@ -485,96 +345,179 @@ impl<'s> Driver<'s> {
             &mut self.clients[ci].opt_client,
             OptState::None,
         );
-        let server_fwd_flops = self.variant_server_flops();
         for _step in 1..=self.cfg.local_steps {
             self.clients[ci].loader.next_batch();
             let (x, y) = self.batch_xy(ci);
             // client forward to the cut layer
-            let mut outs = self
-                .call("client_fwd")
-                .arg("theta_c", theta[..self.nc].to_vec())
-                .arg("x", x.clone())
-                .run()?;
-            let smashed = outs
-                .remove("smashed")
-                .context("smashed")?
-                .into_f32()?;
-            let fwd = self.book.flops_per_step / 3; // 1 of 3F_c is the fwd
-            self.flops_client += fwd;
-            sim.client_compute(ci, fwd);
-            self.comm_bytes += self.book.smashed_bytes;
-            sim.client_upload(ci, self.book.smashed_bytes);
-
-            // server step on this client's replica (V1) or the shared model
-            // (V2); returns the cut gradient
-            let (theta_s, opt_s) = match self.cfg.algorithm {
-                Algorithm::SflV1 => {
-                    let (t, o) = &mut self.server_replicas[ci];
-                    (t, o)
-                }
-                _ => (&mut self.theta_s, &mut self.opt_server),
-            };
-            let mut souts = {
-                let mut c = Call::new(
-                    self.session,
-                    &self.cfg.variant,
-                    "server_step_cutgrad",
-                );
-                if let Some(b) = &self.base {
-                    c = c.arg("base", b.clone());
-                }
-                c = c.arg("theta_s", theta_s.clone());
-                if let OptState::Adam { m, v, t } = &*opt_s {
-                    c = c
-                        .arg("opt_m", m.clone())
-                        .arg("opt_v", v.clone())
-                        .arg("opt_t", *t);
-                }
-                c.arg("smashed", smashed)
-                    .arg("y", TensorValue::I32(y.clone()))
-                    .arg("lr", self.cfg.lr_server)
-                    .run()?
-            };
-            *theta_s = souts
-                .remove("theta_s")
-                .context("server theta_s")?
-                .into_f32()?;
-            Self::take_opt(&mut souts, opt_s)?;
-            losses.push(
-                souts.remove("loss").context("server loss")?.scalar_f32()?
-                    as f64,
-            );
-            let g_sm = souts
-                .remove("g_smashed")
-                .context("g_smashed")?
-                .into_f32()?;
-            // training lock: the client waits for the server's fwd+bwd
-            sim.client_blocked_on_server(ci, 3 * server_fwd_flops);
-            self.comm_bytes += self.book.cutgrad_bytes;
-            sim.client_download(ci, self.book.cutgrad_bytes);
-
+            let smashed = local::locked_client_fwd(
+                self.session,
+                &self.cfg.variant,
+                self.base.as_deref(),
+                &theta[..self.nc],
+                &x,
+            )?;
+            let (loss, g_sm) =
+                self.locked_server_exchange(ci, smashed, y, sim)?;
+            losses.push(loss);
             // client backprop from the relayed cut gradient
-            let mut bouts = Self::opt_args(
-                self.call("client_bp_step")
-                    .arg("theta_c", theta[..self.nc].to_vec()),
-                &opt_c,
-            )
-            .arg("x", x)
-            .arg("g_smashed", g_sm)
-            .arg("lr", self.cfg.lr_client)
-            .run()?;
-            let new_c = bouts
-                .remove("theta_c")
-                .context("bp theta_c")?
-                .into_f32()?;
+            let new_c = local::locked_client_bp(
+                self.session,
+                &self.cfg.variant,
+                self.base.as_deref(),
+                &theta[..self.nc],
+                &mut opt_c,
+                x,
+                g_sm,
+                self.cfg.lr_client,
+            )?;
             theta[..self.nc].copy_from_slice(&new_c);
-            Self::take_opt(&mut bouts, &mut opt_c)?;
-            let bwd = 2 * (self.book.flops_per_step / 3);
-            self.flops_client += bwd;
-            sim.client_compute(ci, bwd);
         }
         self.clients[ci].opt_client = opt_c;
         Ok(theta)
+    }
+
+    /// The Main-Server half of one locked exchange step: charges the
+    /// client's forward, the two-way smashed/cut-gradient transfer, the
+    /// training-lock wait, and the client's backward to the driver
+    /// counters, and runs the server FO step on this client's replica
+    /// (V1) or the shared model (V2). Returns `(loss, g_smashed)`.
+    pub(crate) fn locked_server_exchange(
+        &mut self,
+        ci: usize,
+        smashed: Vec<f32>,
+        y: Vec<i32>,
+        sim: &mut RoundSim,
+    ) -> Result<(f64, Vec<f32>)> {
+        let fwd = self.book.flops_per_step / 3; // 1 of 3F_c is the fwd
+        self.flops_client += fwd;
+        sim.client_compute(ci, fwd);
+        self.comm_bytes += self.book.smashed_bytes;
+        sim.client_upload(ci, self.book.smashed_bytes);
+
+        // server step on this client's replica (V1) or the shared model
+        // (V2); returns the cut gradient
+        let (theta_s, opt_s) = match self.cfg.algorithm {
+            Algorithm::SflV1 => {
+                let (t, o) = &mut self.server_replicas[ci];
+                (t, o)
+            }
+            _ => (&mut self.theta_s, &mut self.opt_server),
+        };
+        let mut souts = {
+            let mut c = Call::new(
+                self.session,
+                &self.cfg.variant,
+                "server_step_cutgrad",
+            );
+            if let Some(b) = &self.base {
+                c = c.arg("base", b.clone());
+            }
+            c = c.arg("theta_s", theta_s.clone());
+            if let OptState::Adam { m, v, t } = &*opt_s {
+                c = c
+                    .arg("opt_m", m.clone())
+                    .arg("opt_v", v.clone())
+                    .arg("opt_t", *t);
+            }
+            c.arg("smashed", smashed)
+                .arg("y", TensorValue::I32(y))
+                .arg("lr", self.cfg.lr_server)
+                .run()?
+        };
+        *theta_s = souts
+            .remove("theta_s")
+            .context("server theta_s")?
+            .into_f32()?;
+        local::take_opt(&mut souts, opt_s)?;
+        let loss = souts
+            .remove("loss")
+            .context("server loss")?
+            .scalar_f32()? as f64;
+        let g_sm = souts
+            .remove("g_smashed")
+            .context("g_smashed")?
+            .into_f32()?;
+        // training lock: the client waits for the server's fwd+bwd
+        sim.client_blocked_on_server(ci, 3 * self.variant_server_flops());
+        self.comm_bytes += self.book.cutgrad_bytes;
+        sim.client_download(ci, self.book.cutgrad_bytes);
+        let bwd = 2 * (self.book.flops_per_step / 3);
+        self.flops_client += bwd;
+        sim.client_compute(ci, bwd);
+        Ok((loss, g_sm))
+    }
+
+    // ---- server phase ------------------------------------------------------
+
+    /// Drain queued smashed batches (Eq. 7) at the round barrier in
+    /// deterministic `(round, client, step)` order, and record the queue's
+    /// occupancy stats into the sim. Returns FSL-SAGE cut-gradient
+    /// feedback `(client, g_smashed)` in drain order; empty for every
+    /// other algorithm (and for the locked baselines, whose queue is
+    /// empty by construction).
+    pub(crate) fn server_drain(
+        &mut self,
+        queue: &ServerQueue,
+        sim: &mut RoundSim,
+    ) -> Result<Vec<(usize, Vec<f32>)>> {
+        let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
+        if self.cfg.algorithm.is_decoupled() {
+            for b in queue.drain_sorted() {
+                let want_cutgrad = self.cfg.algorithm == Algorithm::FslSage
+                    && b.step % (self.cfg.upload_every * self.cfg.align_every)
+                        == 0;
+                let g = self.server_consume(&b, want_cutgrad, sim)?;
+                if let Some(g_sm) = g {
+                    sage_feedback.push((b.client, g_sm));
+                }
+            }
+        }
+        sim.record_queue(queue.stats());
+        Ok(sage_feedback)
+    }
+
+    /// Charge the per-alignment communication for one FSL-SAGE feedback
+    /// message (shared by the in-process and networked paths).
+    pub(crate) fn note_alignment_accounting(
+        &mut self,
+        ci: usize,
+        sim: &mut RoundSim,
+    ) {
+        self.comm_bytes += self.book.comm_per_alignment();
+        sim.client_download(ci, self.book.comm_per_alignment());
+    }
+
+    /// FSL-SAGE, in-process: clients align their aux model against the
+    /// returned cut gradients (one alignment per feedback message). The
+    /// networked dispatcher performs the same loop by relaying each
+    /// gradient to the owning client process instead.
+    pub(crate) fn apply_alignment_local(
+        &mut self,
+        feedback: Vec<(usize, Vec<f32>)>,
+        updated: &mut [(usize, Vec<f32>)],
+        sim: &mut RoundSim,
+    ) -> Result<()> {
+        for (ci, g_sm) in feedback {
+            self.note_alignment_accounting(ci, sim);
+            if let Some(pos) = updated.iter().position(|(c, _)| *c == ci) {
+                let (sm, y, _x) = self.clients[ci]
+                    .last_upload
+                    .clone()
+                    .context("sage alignment without upload")?;
+                let theta = updated[pos].1.clone();
+                updated[pos].1 = local::aux_align_apply(
+                    self.session,
+                    &self.cfg.variant,
+                    self.base.as_deref(),
+                    theta,
+                    sm,
+                    y,
+                    g_sm,
+                    self.cfg.lr_client,
+                )?;
+            }
+        }
+        Ok(())
     }
 
     /// Consume one queued smashed batch (Eq. 7) through the
@@ -608,7 +551,7 @@ impl<'s> Driver<'s> {
         named.push(("smashed", TensorRef::F32(&b.smashed)));
         named.push(("y", TensorRef::I32(&b.targets)));
         named.push(("lr", TensorRef::ScalarF32(self.cfg.lr_server)));
-        let inputs = bind_entry_inputs(espec, &named)?;
+        let inputs = local::bind_entry_inputs(espec, &named)?;
         session.invoke_into(
             &self.cfg.variant,
             entry,
@@ -638,6 +581,52 @@ impl<'s> Driver<'s> {
         } else {
             None
         })
+    }
+
+    /// Aggregation (Fed-Server, Eq. 8) + SFLV1 replica averaging + round
+    /// bookkeeping. Consumes the sim; returns the round's train-loss mean.
+    pub(crate) fn finish_round(
+        &mut self,
+        participants: &[usize],
+        updated: Vec<(usize, Vec<f32>)>,
+        sim: RoundSim,
+        losses: &[f64],
+    ) -> f64 {
+        if !updated.is_empty() {
+            let refs: Vec<&[f32]> =
+                updated.iter().map(|(_, t)| t.as_slice()).collect();
+            let weights: Vec<f64> = updated
+                .iter()
+                .map(|(c, _)| self.clients[*c].shard_weight.max(1e-9))
+                .collect();
+            fedavg_into(&refs, &weights, &mut self.agg_buf);
+            if self.cfg.algorithm.is_decoupled() {
+                self.theta_l.copy_from_slice(&self.agg_buf);
+            } else {
+                // SFLV1/V2: only θ_c is client-trained; aux stays at init
+                self.theta_l[..self.nc]
+                    .copy_from_slice(&self.agg_buf[..self.nc]);
+            }
+        }
+
+        // SFLV1: aggregate the per-client server replicas into all replicas
+        if self.cfg.algorithm == Algorithm::SflV1 {
+            let refs: Vec<&[f32]> = participants
+                .iter()
+                .map(|&c| self.server_replicas[c].0.as_slice())
+                .collect();
+            let w = vec![1.0; refs.len()];
+            let mut mean = vec![0.0f32; self.ns];
+            fedavg_into(&refs, &w, &mut mean);
+            self.theta_s.copy_from_slice(&mean);
+            for (rep, _) in &mut self.server_replicas {
+                rep.copy_from_slice(&mean);
+            }
+        }
+
+        self.timings.push(sim.finish());
+        self.round_idx += 1;
+        losses.iter().sum::<f64>() / losses.len().max(1) as f64
     }
 
     fn variant_server_flops(&self) -> u64 {
@@ -674,53 +663,67 @@ impl<'s> Driver<'s> {
                 (TensorValue::I32(xs.clone()), xs)
             }
         };
-        let outs = self
-            .call("eval_full")
+        let mut c = Call::new(self.session, &self.cfg.variant, "eval_full");
+        if let Some(b) = &self.base {
+            c = c.arg("base", b.clone());
+        }
+        let outs = c
             .arg("theta_c", self.theta_l[..self.nc].to_vec())
             .arg("theta_s", self.theta_s.clone())
             .arg("x", x)
             .arg("y", TensorValue::I32(y))
             .run()?;
-        let s1 = outs.get("stat1").context("stat1")?.scalar_f32()? as f64;
-        let s2 = outs.get("stat2").context("stat2")?.scalar_f32()? as f64;
+        let s1 = outs
+            .get("stat1")
+            .context("stat1")?
+            .scalar_f32()? as f64;
+        let s2 = outs
+            .get("stat2")
+            .context("stat2")?
+            .scalar_f32()? as f64;
         Ok(match self.task {
             Task::Vision => s1 / s2.max(1.0), // accuracy
             Task::Lm => (s1 / s2.max(1.0)).exp(), // perplexity
         })
     }
 
-    /// Run the configured number of rounds, recording curves.
-    pub fn run(&mut self, record_name: &str) -> Result<RunRecord> {
-        self.warmup()?;
-        let mut rec = RunRecord::new(record_name);
-        let t0 = std::time::Instant::now();
-        for round in 0..self.cfg.rounds {
-            let loss = self.run_round()?;
-            let eval_due = self.cfg.eval_every > 0
-                && (round % self.cfg.eval_every == 0
-                    || round + 1 == self.cfg.rounds);
-            let metric = if eval_due { self.evaluate()? } else { f64::NAN };
-            rec.push(RoundRecord {
-                round,
-                train_loss: loss,
-                eval_metric: metric,
-                comm_bytes_cum: self.comm_bytes,
-                wall_seconds: t0.elapsed().as_secs_f64(),
-            });
-            if eval_due {
-                log::info!(
-                    "[{}] round {round}: loss {loss:.4} metric {metric:.4} comm {}",
-                    record_name,
-                    crate::coordinator::accounting::fmt_bytes(self.comm_bytes)
-                );
-            }
+    /// Record one finished round into `rec` (eval cadence, curve point,
+    /// progress log) — shared verbatim by the in-process and networked
+    /// run loops so their records can only differ in wall-clock.
+    pub fn record_round(
+        &self,
+        rec: &mut RunRecord,
+        round: usize,
+        loss: f64,
+        t0: std::time::Instant,
+    ) -> Result<()> {
+        let eval_due = self.cfg.eval_every > 0
+            && (round % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds);
+        let metric = if eval_due { self.evaluate()? } else { f64::NAN };
+        rec.push(RoundRecord {
+            round,
+            train_loss: loss,
+            eval_metric: metric,
+            comm_bytes_cum: self.comm_bytes,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+        if eval_due {
+            log::info!(
+                "[{}] round {round}: loss {loss:.4} metric {metric:.4} comm {}",
+                rec.name,
+                crate::coordinator::accounting::fmt_bytes(self.comm_bytes)
+            );
         }
+        Ok(())
+    }
+
+    /// Write the end-of-run summary counters (analytic cost book, event
+    /// sim, queue, measured wire traffic) into the record.
+    pub fn finalize_record(&self, rec: &mut RunRecord) {
         rec.set("comm_bytes", self.comm_bytes as f64);
         rec.set("client_flops", self.flops_client as f64);
-        rec.set(
-            "peak_mem_bytes",
-            self.book.peak_mem_bytes as f64,
-        );
+        rec.set("peak_mem_bytes", self.book.peak_mem_bytes as f64);
         rec.set(
             "virtual_seconds",
             self.timings.iter().map(|t| t.total()).sum(),
@@ -748,231 +751,33 @@ impl<'s> Driver<'s> {
                 .map(|t| t.queue.max_depth as f64)
                 .fold(0.0, f64::max),
         );
-        Ok(rec)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// worker-thread client phase (decoupled algorithms)
-// ---------------------------------------------------------------------------
-
-fn loader_batch_xy(task: Task, loader: &Loader) -> (TensorValue, Vec<i32>) {
-    match task {
-        Task::Vision => (
-            TensorValue::F32(loader.xs_f32.clone()),
-            loader.ys.clone(),
-        ),
-        Task::Lm => (
-            TensorValue::I32(loader.xs_i32.clone()),
-            loader.xs_i32.clone(),
-        ),
-    }
-}
-
-fn step_seed(ctx: &LocalCtx, client: usize, step: usize) -> i32 {
-    mix64(
-        ctx.cfg.run_seed,
-        (ctx.round_idx as u64) << 24 | (client as u64) << 12 | step as u64,
-    ) as i32
-}
-
-/// Borrow the loader's reused batch buffer as the entry's `x` input.
-fn x_ref(task: Task, loader: &Loader) -> TensorRef<'_> {
-    match task {
-        Task::Vision => TensorRef::F32(&loader.xs_f32),
-        Task::Lm => TensorRef::I32(&loader.xs_i32),
-    }
-}
-
-/// Borrow the loader's target buffer (LM entries take the token batch).
-fn y_slice(task: Task, loader: &Loader) -> &[i32] {
-    match task {
-        Task::Vision => &loader.ys,
-        Task::Lm => &loader.xs_i32,
-    }
-}
-
-/// Build the positional input list for `espec` from named borrowed
-/// buffers. Scalars travel by value; a spec input with no binding (e.g.
-/// optimizer-state tensors the native manifest never emits) is an error.
-fn bind_entry_inputs<'a>(
-    espec: &EntrySpec,
-    named: &[(&str, TensorRef<'a>)],
-) -> Result<Vec<TensorRef<'a>>> {
-    let mut out = Vec::with_capacity(espec.inputs.len());
-    for spec in &espec.inputs {
-        let r = named
-            .iter()
-            .find(|(n, _)| *n == spec.name)
-            .map(|(_, r)| *r)
-            .with_context(|| {
-                format!("{}: no binding for input {}", espec.name, spec.name)
-            })?;
-        out.push(r);
-    }
-    Ok(out)
-}
-
-/// One client's full local phase (h steps + uploads), self-contained so it
-/// can run on any worker thread. Mutates only this client's state; all
-/// cross-client effects go through the concurrent queue and the returned
-/// outcome.
-///
-/// The loop is allocation-lean: every input is a borrowed view (θ, the
-/// loader's batch buffers, the frozen base), outputs land in the two
-/// scratch arenas below, and the updated θ is swapped out of its slot —
-/// the same two parameter buffers ping-pong through all h steps.
-fn client_local_phase(
-    ctx: &LocalCtx,
-    ci: usize,
-    cs: &mut ClientState,
-    mut theta: Vec<f32>,
-    queue: &ServerQueue,
-) -> Result<LocalOutcome> {
-    let mut lane = ClientLane::new(&ctx.profile);
-    let mut losses = Vec::with_capacity(ctx.cfg.local_steps);
-    let mut comm_bytes = 0u64;
-    let mut flops = 0u64;
-    let zo = ctx.cfg.algorithm == Algorithm::Heron;
-    let entry = if zo { "zo_step" } else { "fo_step" };
-    if !matches!(cs.opt_local, OptState::None) {
-        bail!(
-            "local phase: stateful optimizers are not wired through the \
-             native entries (manifest opt_state must be 0)"
+        rec.set(
+            "wire_bytes_sent",
+            self.timings.iter().map(|t| t.wire.bytes_sent as f64).sum(),
+        );
+        rec.set(
+            "wire_bytes_recv",
+            self.timings.iter().map(|t| t.wire.bytes_recv as f64).sum(),
+        );
+        rec.set(
+            "wire_frames",
+            self.timings
+                .iter()
+                .map(|t| (t.wire.frames_sent + t.wire.frames_recv) as f64)
+                .sum(),
         );
     }
-    let vspec = ctx.session.variant(&ctx.cfg.variant)?;
-    let step_espec = vspec.entry(entry)?;
-    let fwd_espec = vspec.entry("client_fwd")?;
-    let ti = step_espec.output_pos("theta_l")?;
-    let li = step_espec.output_pos("loss")?;
-    let si = fwd_espec.output_pos("smashed")?;
-    // per-client scratch arenas, reused across all h steps
-    let mut outs: Vec<TensorValue> = Vec::new();
-    let mut fwd_outs: Vec<TensorValue> = Vec::new();
 
-    for step in 1..=ctx.cfg.local_steps {
-        cs.loader.next_batch();
-        let seed = step_seed(ctx, ci, step);
-        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(8);
-        if let Some(b) = ctx.base {
-            named.push(("base", TensorRef::F32(b)));
+    /// Run the configured number of rounds, recording curves.
+    pub fn run(&mut self, record_name: &str) -> Result<RunRecord> {
+        self.warmup()?;
+        let mut rec = RunRecord::new(record_name);
+        let t0 = std::time::Instant::now();
+        for round in 0..self.cfg.rounds {
+            let loss = self.run_round()?;
+            self.record_round(&mut rec, round, loss, t0)?;
         }
-        named.push(("theta_l", TensorRef::F32(&theta)));
-        named.push(("x", x_ref(ctx.task, &cs.loader)));
-        named.push(("y", TensorRef::I32(y_slice(ctx.task, &cs.loader))));
-        named.push(("lr", TensorRef::ScalarF32(ctx.cfg.lr_client)));
-        if zo {
-            named.push(("seed", TensorRef::ScalarI32(seed)));
-            named.push(("mu", TensorRef::ScalarF32(ctx.cfg.mu)));
-            named.push((
-                "n_pert",
-                TensorRef::ScalarI32(ctx.cfg.n_pert as i32),
-            ));
-        }
-        let inputs = bind_entry_inputs(step_espec, &named)?;
-        ctx.session
-            .invoke_into(&ctx.cfg.variant, entry, &inputs, &mut outs)?;
-        match &mut outs[ti] {
-            TensorValue::F32(v) => std::mem::swap(&mut theta, v),
-            other => bail!(
-                "{entry}: theta_l output has wrong dtype {:?}",
-                other.dtype()
-            ),
-        }
-        losses.push(outs[li].scalar_f32()? as f64);
-        flops += ctx.book.flops_per_step;
-        lane.compute(ctx.book.flops_per_step);
-
-        if step % ctx.cfg.upload_every == 0 {
-            upload_smashed(
-                ctx,
-                ci,
-                cs,
-                &theta,
-                fwd_espec,
-                si,
-                step,
-                queue,
-                &mut lane,
-                &mut comm_bytes,
-                &mut fwd_outs,
-            )?;
-        }
+        self.finalize_record(&mut rec);
+        Ok(rec)
     }
-    Ok(LocalOutcome {
-        ci,
-        theta,
-        losses,
-        comm_bytes,
-        flops,
-        lane,
-    })
-}
-
-fn upload_smashed(
-    ctx: &LocalCtx,
-    ci: usize,
-    cs: &mut ClientState,
-    theta: &[f32],
-    fwd_espec: &EntrySpec,
-    smashed_idx: usize,
-    step: usize,
-    queue: &ServerQueue,
-    lane: &mut ClientLane,
-    comm_bytes: &mut u64,
-    fwd_outs: &mut Vec<TensorValue>,
-) -> Result<()> {
-    let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(3);
-    if let Some(b) = ctx.base {
-        named.push(("base", TensorRef::F32(b)));
-    }
-    named.push(("theta_c", TensorRef::F32(&theta[..ctx.nc])));
-    named.push(("x", x_ref(ctx.task, &cs.loader)));
-    let inputs = bind_entry_inputs(fwd_espec, &named)?;
-    ctx.session.invoke_into(
-        &ctx.cfg.variant,
-        "client_fwd",
-        &inputs,
-        fwd_outs,
-    )?;
-    // the queue owns the smashed batch, so move it out of its slot (the
-    // slot re-grows a buffer on the next upload)
-    let smashed = match std::mem::replace(
-        &mut fwd_outs[smashed_idx],
-        TensorValue::ScalarF32(0.0),
-    ) {
-        TensorValue::F32(v) => v,
-        other => bail!(
-            "client_fwd: smashed output has wrong dtype {:?}",
-            other.dtype()
-        ),
-    };
-    // the upload forward is part of the protocol but NOT an extra
-    // training cost in Table I (the paper's accounting charges the ZO /
-    // FO step); we still charge its flops to the client sim for latency
-    lane.compute(
-        (ctx.book.flops_per_step / (ctx.cfg.n_pert as u64 + 1)).max(1),
-    );
-    *comm_bytes += ctx.book.comm_per_step(true);
-    lane.upload(ctx.book.smashed_bytes);
-    let targets = y_slice(ctx.task, &cs.loader).to_vec();
-    // only the FSL-SAGE alignment ever reads last_upload — don't pay a
-    // full smashed-batch copy per upload on the other algorithms
-    if ctx.cfg.algorithm == Algorithm::FslSage {
-        let x_i32 = match ctx.task {
-            Task::Lm => cs.loader.xs_i32.clone(),
-            Task::Vision => Vec::new(),
-        };
-        cs.last_upload =
-            Some((smashed.clone(), targets.clone(), x_i32));
-    }
-    queue.push(SmashedBatch {
-        client: ci,
-        round: ctx.round_idx,
-        step,
-        smashed,
-        targets,
-    });
-    Ok(())
 }

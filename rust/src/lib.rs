@@ -17,6 +17,8 @@
 //! * [`runtime`] — artifact manifest + native execution engine
 //! * [`data`] — synthetic datasets + federated partitioning
 //! * [`coordinator`] — the SFL protocol: algorithms, rounds, accounting
+//! * [`net`] — wire protocol + transports for networked client↔server
+//!   runs (`serve`/`connect`), bit-identical to the in-process driver
 //! * [`metrics`] — run recording and reporting
 //! * [`zo`] — pure-Rust ZO reference + streaming perturbation (Remark 4)
 //! * [`analysis`] — Hessian spectrum tooling (Fig 7)
@@ -29,6 +31,7 @@ pub mod golden;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod util;
 pub mod zo;

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   run        — one training run (all config flags overridable)
+//!   serve      — run the experiment as a network server (framed TCP
+//!                protocol; clients attach with `connect`)
+//!   connect    — attach this process as a remote SFL client
 //!   list       — list artifact variants and their entries
 //!   validate   — execute golden cross-language checks over the artifacts
 //!   costs      — print the Table-I style cost book for a variant
@@ -28,6 +31,8 @@ fn main() {
         .unwrap_or("help");
     let res = match cmd {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "connect" => cmd_connect(&args),
         "list" => cmd_list(),
         "validate" => cmd_validate(&args),
         "costs" => cmd_costs(&args),
@@ -46,12 +51,17 @@ fn main() {
 fn print_help() {
     println!(
         "heron-sfl — hybrid ZO/FO split federated learning\n\n\
-         USAGE: heron-sfl <run|list|validate|costs|spectrum> [--key value ...]\n\n\
+         USAGE: heron-sfl <run|serve|connect|list|validate|costs|spectrum> [--key value ...]\n\n\
          run flags: --variant cnn_c1 --algo heron|cse|sage|sflv1|sflv2\n\
            --clients N --rounds R --h H --k K --mu MU --n_pert P\n\
            --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
            --workers W (client-phase worker threads; 0 = all cores)\n\
+           --queue_capacity Q (Main-Server queue bound; 0 = never drops)\n\
            --out results/dir (writes json+csv)\n\
+         serve flags: all run flags, plus\n\
+           --listen ADDR (default 127.0.0.1:7070; port 0 picks one)\n\
+           --conns N (client connections to wait for; default 2)\n\
+         connect flags: --addr ADDR (default 127.0.0.1:7070) --name NAME\n\
          costs flags: --variant V [--n_pert P]\n\
          spectrum flags: --variant cnn_c1 [--steps M] [--probes P]"
     );
@@ -93,6 +103,80 @@ fn cmd_run(args: &Args) -> Result<()> {
         st.exec_seconds,
         st.marshal_seconds,
         st.compile_seconds
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    let conns = args.get_usize("conns", 2);
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!(
+        "serving {} on {} — waiting for {conns} client connection(s)",
+        cfg.describe(),
+        listener.local_addr()?
+    );
+    let session = Session::open_default()?;
+    let report =
+        heron_sfl::net::serve_tcp(&session, cfg, listener, conns, "serve")?;
+    print_net_summary(&report);
+    if let Some(out) = args.get("out") {
+        report.record.save(std::path::Path::new(out))?;
+        println!("saved to {out}/serve.{{json,csv}}");
+    }
+    Ok(())
+}
+
+fn print_net_summary(report: &heron_sfl::net::NetReport) {
+    let rec = &report.record;
+    let curve: Vec<f64> = rec
+        .rounds
+        .iter()
+        .filter(|r| r.eval_metric.is_finite())
+        .map(|r| r.eval_metric)
+        .collect();
+    println!("metric curve: {}", sparkline(&curve, 60));
+    println!(
+        "final metric {:.4} over {} connection(s)",
+        curve.last().copied().unwrap_or(f64::NAN),
+        report.connections
+    );
+    // the whole point of heron-net: the analytic cost-book number next to
+    // the bytes that actually crossed the wire
+    println!(
+        "comm (analytic CostBook) {} | wire measured: {} sent, {} recv, {} frames | NACKs {}",
+        fmt_bytes(rec.summary["comm_bytes"] as u64),
+        fmt_bytes(report.wire.bytes_sent),
+        fmt_bytes(report.wire.bytes_recv),
+        report.wire.frames_sent + report.wire.frames_recv,
+        report.nacks_sent,
+    );
+}
+
+fn cmd_connect(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let name = args.get_or("name", "client");
+    let session = Session::open_default()?;
+    let transport = heron_sfl::net::TcpTransport::connect(addr)?;
+    println!("connected to {addr} as {name}");
+    let rep =
+        heron_sfl::net::run_client(&session, Box::new(transport), name)?;
+    println!(
+        "served clients {:?}: {} rounds, {} local phases | wire: {} sent, {} recv | NACKs {} | server said: {}",
+        rep.assigned,
+        rep.rounds,
+        rep.phases,
+        fmt_bytes(rep.wire.bytes_sent),
+        fmt_bytes(rep.wire.bytes_recv),
+        rep.nacks,
+        rep.shutdown_reason,
     );
     Ok(())
 }

@@ -1,0 +1,365 @@
+//! Networked client endpoint: drives the local ZO/FO phase of one or more
+//! logical clients against a remote `heron-sfl serve` dispatcher.
+//!
+//! The endpoint is deliberately thin: after the `Hello`/`Assign`
+//! handshake it reconstructs the *exact* run setup the server uses — the
+//! config arrives as exact-string JSON (`RunConfig::to_json`), the client
+//! states come from the same `build_client_states`, and every step runs
+//! the same `coordinator::local` functions the in-process driver fans out
+//! to its worker pool. The wire carries bit-exact f32 payloads, so the
+//! trajectory cannot diverge from `Driver::run_round`.
+//!
+//! Message handling is a single blocking loop:
+//!
+//! * `RoundBarrier` — remember `(round, participants)`.
+//! * `ModelSync{client: BROADCAST}` — decoupled fan-out: run
+//!   `client_local_phase` for each owned participant (ascending id), with
+//!   a sink that ships `Smashed` frames and blocks on the `UploadAck`
+//!   (counting typed NACKs); reply `ZoUpdate` (per-step seeds + loss
+//!   scalars), `ModelSync` (updated θ), `LocalDone` (analytic counters).
+//! * `ModelSync{client: ci}` — locked SFLV1/V2 phase for `ci`: per step,
+//!   cut forward → `Smashed` → wait `CutGrad` → backprop; then θ up.
+//! * `AlignGrad` — FSL-SAGE: `aux_align` against the stored last upload,
+//!   reply the realigned θ.
+//! * `RoundSummary` — bookkeeping; `Shutdown` — return the report.
+
+use crate::coordinator::accounting::CostBook;
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::eventsim::{DeviceProfile, WireRoundStats};
+use crate::coordinator::local::{
+    self, build_client_states, ClientState, LocalCtx, SmashedSink,
+};
+use crate::coordinator::round::OptState;
+use crate::coordinator::server_queue::SmashedBatch;
+use crate::data::loader::Task;
+use crate::net::transport::Transport;
+use crate::net::wire::{Msg, BROADCAST, VERSION};
+use crate::runtime::Session;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// End-of-run statistics from one client process.
+#[derive(Debug, Clone)]
+pub struct ClientReport {
+    pub name: String,
+    pub assigned: Vec<u32>,
+    /// rounds observed (RoundSummary count)
+    pub rounds: usize,
+    /// local phases executed (decoupled + locked)
+    pub phases: u64,
+    /// uploads rejected by the server queue (typed NACKs received)
+    pub nacks: u64,
+    pub wire: WireRoundStats,
+    pub shutdown_reason: String,
+}
+
+fn send(t: &Mutex<Box<dyn Transport>>, msg: &Msg) -> Result<()> {
+    t.lock().unwrap_or_else(|p| p.into_inner()).send(msg)
+}
+
+fn recv(t: &Mutex<Box<dyn Transport>>) -> Result<Option<Msg>> {
+    t.lock().unwrap_or_else(|p| p.into_inner()).recv()
+}
+
+/// The networked [`SmashedSink`]: every push is a `Smashed` frame with a
+/// blocking `UploadAck` round-trip; `accepted == false` (the server's
+/// typed NACK for a queue-capacity drop) is counted and reported back as
+/// "dropped", mirroring the in-process `ServerQueue::push` contract.
+struct NetSink<'a> {
+    t: &'a Mutex<Box<dyn Transport>>,
+    nacks: &'a AtomicU64,
+    err: Mutex<Option<anyhow::Error>>,
+}
+
+impl NetSink<'_> {
+    fn exchange(&self, b: SmashedBatch) -> Result<bool> {
+        let mut g = self.t.lock().unwrap_or_else(|p| p.into_inner());
+        g.send(&Msg::Smashed {
+            client: b.client as u32,
+            round: b.round as u32,
+            step: b.step as u32,
+            smashed: b.smashed,
+            targets: b.targets,
+        })?;
+        match g.recv()? {
+            Some(Msg::UploadAck { accepted, reason, .. }) => {
+                if !accepted {
+                    self.nacks.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("upload NACKed: {reason}");
+                }
+                Ok(accepted)
+            }
+            other => bail!("expected UploadAck, got {other:?}"),
+        }
+    }
+}
+
+impl SmashedSink for NetSink<'_> {
+    fn push_smashed(&self, b: SmashedBatch) -> bool {
+        // latch: after one failed exchange the transport is in an unknown
+        // state — never touch it again from this phase (a blocked recv
+        // here would deadlock client and server), just let the phase
+        // finish so the caller sees the stored error
+        {
+            let g = self.err.lock().unwrap_or_else(|p| p.into_inner());
+            if g.is_some() {
+                return false;
+            }
+        }
+        match self.exchange(b) {
+            Ok(accepted) => accepted,
+            Err(e) => {
+                *self.err.lock().unwrap_or_else(|p| p.into_inner()) = Some(e);
+                false
+            }
+        }
+    }
+}
+
+/// Connect-side entry point: handshake, then serve rounds until the
+/// dispatcher says `Shutdown`.
+pub fn run_client(
+    session: &Session,
+    transport: Box<dyn Transport>,
+    name: &str,
+) -> Result<ClientReport> {
+    let counters = transport.counters();
+    let t = Mutex::new(transport);
+    send(&t, &Msg::Hello { name: name.into(), protocol: VERSION as u32 })?;
+    let (assigned, cfg) = match recv(&t)? {
+        Some(Msg::Assign { client_ids, config }) => {
+            let v = crate::util::json::parse(&config)
+                .map_err(|e| anyhow::anyhow!("Assign config: {e}"))?;
+            (client_ids, RunConfig::from_json(&v)?)
+        }
+        Some(Msg::Shutdown { reason }) => bail!("server refused: {reason}"),
+        other => bail!("expected Assign, got {other:?}"),
+    };
+    log::info!(
+        "assigned clients {assigned:?}: {}",
+        cfg.describe()
+    );
+
+    let v = session.variant(&cfg.variant)?.clone();
+    let task = if v.task == "lm" { Task::Lm } else { Task::Vision };
+    let base = if v.size_base > 0 {
+        Some(v.blob("frozen_base")?)
+    } else {
+        None
+    };
+    let nc = v.size_client;
+    let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64);
+    session.warmup(&cfg.variant, cfg.algorithm.required_entries())?;
+    let mut states: Vec<ClientState> = build_client_states(&v, &cfg, task);
+    let profile = DeviceProfile::edge_default();
+
+    let nacks = AtomicU64::new(0);
+    let mut phases = 0u64;
+    let mut rounds = 0usize;
+    let mut barrier: Option<(u32, Vec<u32>)> = None;
+    // this round's θ per owned client (FSL-SAGE alignment reads/updates it)
+    let mut round_theta: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+
+    let shutdown_reason = loop {
+        let msg = match recv(&t)? {
+            Some(m) => m,
+            None => bail!("server closed the connection without Shutdown"),
+        };
+        match msg {
+            Msg::RoundBarrier { round, participants } => {
+                round_theta.clear();
+                barrier = Some((round, participants));
+            }
+            Msg::ModelSync { round, client, theta } if client == BROADCAST => {
+                // decoupled fan-out for every owned participant, in
+                // ascending client order (= participant order within this
+                // connection, matching the in-process job order)
+                let (bar_round, participants) = barrier
+                    .as_ref()
+                    .context("ModelSync before RoundBarrier")?;
+                if *bar_round != round {
+                    bail!("ModelSync round {round} != barrier {bar_round}");
+                }
+                let mine: Vec<usize> = assigned
+                    .iter()
+                    .map(|&c| c as usize)
+                    .filter(|c| participants.contains(&(*c as u32)))
+                    .collect();
+                let ctx = LocalCtx {
+                    session,
+                    cfg: &cfg,
+                    book: &book,
+                    base: base.as_deref(),
+                    task,
+                    round_idx: round as usize,
+                    profile,
+                    nc,
+                };
+                for ci in mine {
+                    let sink =
+                        NetSink { t: &t, nacks: &nacks, err: Mutex::new(None) };
+                    let out = local::client_local_phase(
+                        &ctx,
+                        ci,
+                        &mut states[ci],
+                        theta.clone(),
+                        &sink,
+                    )?;
+                    if let Some(e) =
+                        sink.err.lock().unwrap_or_else(|p| p.into_inner()).take()
+                    {
+                        return Err(e.context("smashed upload failed"));
+                    }
+                    phases += 1;
+                    send(&t, &Msg::ZoUpdate {
+                        client: ci as u32,
+                        round,
+                        seeds: out.seeds.clone(),
+                        scalars: out.losses.iter().map(|&l| l as f32).collect(),
+                    })?;
+                    send(&t, &Msg::ModelSync {
+                        client: ci as u32,
+                        round,
+                        theta: out.theta.clone(),
+                    })?;
+                    send(&t, &Msg::LocalDone {
+                        client: ci as u32,
+                        round,
+                        comm_bytes: out.comm_bytes,
+                        flops: out.flops,
+                        lane_time: out.lane.time,
+                        lane_idle: out.lane.idle,
+                    })?;
+                    round_theta.insert(ci, out.theta);
+                }
+            }
+            Msg::ModelSync { round, client, theta } => {
+                // locked SFLV1/V2 phase for one client
+                let ci = client as usize;
+                if !assigned.contains(&client) {
+                    bail!("locked kickoff for client {ci} not assigned here");
+                }
+                let theta_end = locked_phase(
+                    session, &t, &cfg, &mut states[ci], base.as_deref(), nc,
+                    task, ci, round, theta,
+                )?;
+                phases += 1;
+                send(&t, &Msg::ModelSync {
+                    client,
+                    round,
+                    theta: theta_end.clone(),
+                })?;
+                round_theta.insert(ci, theta_end);
+            }
+            Msg::AlignGrad { client, round, g } => {
+                if !assigned.contains(&client) {
+                    bail!("AlignGrad for client {client} not assigned here");
+                }
+                let ci = client as usize;
+                let (sm, y, _x) = states[ci]
+                    .last_upload
+                    .clone()
+                    .context("sage alignment without upload")?;
+                let theta = round_theta
+                    .get(&ci)
+                    .context("alignment before local phase")?
+                    .clone();
+                let new_theta = local::aux_align_apply(
+                    session,
+                    &cfg.variant,
+                    base.as_deref(),
+                    theta,
+                    sm,
+                    y,
+                    g,
+                    cfg.lr_client,
+                )?;
+                send(&t, &Msg::ModelSync {
+                    client,
+                    round,
+                    theta: new_theta.clone(),
+                })?;
+                round_theta.insert(ci, new_theta);
+            }
+            Msg::RoundSummary { round, train_loss, comm_bytes, wire_bytes } => {
+                rounds += 1;
+                log::info!(
+                    "round {round}: loss {train_loss:.4} | analytic comm {} | wire {}",
+                    crate::coordinator::accounting::fmt_bytes(comm_bytes),
+                    crate::coordinator::accounting::fmt_bytes(wire_bytes),
+                );
+            }
+            Msg::Shutdown { reason } => break reason,
+            other => bail!("unexpected {} from server", other.name()),
+        }
+    };
+
+    Ok(ClientReport {
+        name: name.into(),
+        assigned,
+        rounds,
+        phases,
+        nacks: nacks.load(Ordering::Relaxed),
+        wire: counters.snapshot(),
+        shutdown_reason,
+    })
+}
+
+/// The client half of the locked SFLV1/V2 exchange: per local step, cut
+/// forward → `Smashed` up → wait for the `CutGrad` → backprop with the
+/// relayed gradient (the training lock the decoupled methods remove).
+fn locked_phase(
+    session: &Session,
+    t: &Mutex<Box<dyn Transport>>,
+    cfg: &RunConfig,
+    cs: &mut ClientState,
+    base: Option<&[f32]>,
+    nc: usize,
+    task: Task,
+    ci: usize,
+    round: u32,
+    mut theta: Vec<f32>,
+) -> Result<Vec<f32>> {
+    let mut opt_c = std::mem::replace(&mut cs.opt_client, OptState::None);
+    for step in 1..=cfg.local_steps {
+        cs.loader.next_batch();
+        let (x, y) = local::loader_batch_xy(task, &cs.loader);
+        let smashed = local::locked_client_fwd(
+            session,
+            &cfg.variant,
+            base,
+            &theta[..nc],
+            &x,
+        )?;
+        send(t, &Msg::Smashed {
+            client: ci as u32,
+            round,
+            step: step as u32,
+            smashed,
+            targets: y,
+        })?;
+        let g = match recv(t)? {
+            Some(Msg::CutGrad { client, step: s, g, .. })
+                if client as usize == ci && s as usize == step =>
+            {
+                g
+            }
+            other => bail!("expected CutGrad for step {step}, got {other:?}"),
+        };
+        let new_c = local::locked_client_bp(
+            session,
+            &cfg.variant,
+            base,
+            &theta[..nc],
+            &mut opt_c,
+            x,
+            g,
+            cfg.lr_client,
+        )?;
+        theta[..nc].copy_from_slice(&new_c);
+    }
+    cs.opt_client = opt_c;
+    Ok(theta)
+}

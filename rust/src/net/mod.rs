@@ -1,0 +1,39 @@
+//! `heron-net` (substrate S20): a real wire protocol + pluggable
+//! transport layer for the SFL client↔server path.
+//!
+//! Until this subsystem existed, `comm_bytes` was a purely analytic
+//! counter (`coordinator::accounting`) — the reproduction never
+//! serialized a byte. `net` turns the byte accounting into a
+//! measurement:
+//!
+//! * [`wire`] — versioned, length-prefixed, CRC-32-checksummed binary
+//!   codec with typed messages for the full SFL protocol (`Hello/Assign`,
+//!   `ZoUpdate{seeds, scalars}`, `SmashedBatch`, `CutGradient`,
+//!   `ModelSync`, `RoundBarrier`/`RoundSummary`, typed `UploadAck`
+//!   NACKs). Hand-rolled little-endian layout, like `util::json` — the
+//!   crate is vendored-offline, so no serde.
+//! * [`transport`] — a blocking [`transport::Transport`] trait with an
+//!   in-memory loopback backend (still encodes/decodes every frame, so
+//!   tests measure real bytes) and a `std::net::TcpStream` backend.
+//! * [`server`] — the dispatcher: accepts N client connections and
+//!   bridges decoded messages into the existing `ServerQueue` +
+//!   `Driver` round engine (`heron-sfl serve`).
+//! * [`client`] — the remote client endpoint driving the local ZO/FO
+//!   phase (`heron-sfl connect`).
+//!
+//! The contract (pinned by `rust/tests/net_loopback.rs`): for every
+//! algorithm, a networked run is **bit-identical** to the in-process
+//! `Driver::run_round` trajectory — same per-round losses, metrics,
+//! analytic comm bytes, and final parameters — while the run summary
+//! additionally reports the *measured* wire traffic next to the analytic
+//! `CostBook` numbers.
+
+pub mod client;
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use client::{run_client, ClientReport};
+pub use server::{serve_tcp, serve_transports, NetReport};
+pub use transport::{loopback_pair, TcpTransport, Transport};
+pub use wire::{Msg, WireError, VERSION};

@@ -1,0 +1,548 @@
+//! Networked Main/Fed-Server dispatcher: accepts N client connections and
+//! bridges decoded wire messages into the *existing* round engine
+//! (`ServerQueue` + `Driver::server_drain`/`finish_round`).
+//!
+//! ## Orchestration
+//!
+//! One reader thread per connection decodes frames and pushes them into a
+//! shared event queue; the orchestrator thread owns every write half and
+//! all server model state. Per round:
+//!
+//! 1. `RoundBarrier{round, participants}` to every connection, then the
+//!    θ_l broadcast (`ModelSync{client: BROADCAST}`) to each connection
+//!    that owns a participant (decoupled), or a per-client
+//!    `ModelSync{client: ci}` kickoff processed *sequentially* in
+//!    participant order (locked SFLV1/V2 — the training lock is the
+//!    baseline's defining property).
+//! 2. Decoupled uploads (`Smashed`) are pushed straight into the round's
+//!    [`ServerQueue`]; a capacity drop is answered with a typed NACK
+//!    (`UploadAck{accepted: false}`) and lands in `QueueStats::dropped`.
+//!    Locked uploads run [`Driver::locked_server_exchange`] and reply
+//!    with a `CutGrad`.
+//! 3. Once every participant's `ZoUpdate` + `ModelSync` + `LocalDone`
+//!    arrived, outcomes are absorbed **in participant order** — the same
+//!    barrier-merge the in-process fan-out performs — then the queue is
+//!    drained in `(round, client, step)` order and FSL-SAGE feedback is
+//!    relayed as `AlignGrad` round-trips.
+//! 4. `Driver::finish_round` aggregates (Eq. 8) exactly as in-process;
+//!    the round closes with a `RoundSummary` carrying the train loss,
+//!    the analytic comm bytes, and the measured wire bytes.
+//!
+//! Because every model-state mutation runs through the same `Driver`
+//! methods with inputs in the same order, a networked run is bit-identical
+//! to `Driver::run_round` (asserted for all five algorithms in
+//! `rust/tests/net_loopback.rs`).
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::eventsim::{ClientLane, DeviceProfile, WireRoundStats};
+use crate::coordinator::local::LocalOutcome;
+use crate::coordinator::round::Driver;
+use crate::coordinator::server_queue::SmashedBatch;
+use crate::metrics::RunRecord;
+use crate::net::transport::{RxHalf, Transport, TxHalf, WireCounters};
+use crate::net::wire::{Msg, BROADCAST, VERSION};
+use crate::runtime::Session;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// What a completed networked run hands back to the caller.
+pub struct NetReport {
+    pub record: RunRecord,
+    pub final_theta_l: Vec<f32>,
+    pub final_theta_s: Vec<f32>,
+    /// total measured traffic, server-side view, including handshake and
+    /// shutdown frames (per-round deltas live in `RoundTiming::wire`)
+    pub wire: WireRoundStats,
+    /// typed NACKs sent for queue-capacity drops
+    pub nacks_sent: u64,
+    /// connections served
+    pub connections: usize,
+}
+
+/// Accept `n_conns` TCP client connections and run the configured
+/// experiment over them.
+pub fn serve_tcp(
+    session: &Session,
+    cfg: RunConfig,
+    listener: std::net::TcpListener,
+    n_conns: usize,
+    record_name: &str,
+) -> Result<NetReport> {
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n_conns);
+    for i in 0..n_conns {
+        let (stream, addr) = listener.accept().context("accepting client")?;
+        log::info!("connection {i}/{n_conns} from {addr}");
+        transports
+            .push(Box::new(super::transport::TcpTransport::from_stream(stream)?));
+    }
+    serve_transports(session, cfg, transports, record_name)
+}
+
+/// Reader-thread → orchestrator event.
+enum Event {
+    Msg(Msg),
+    Closed,
+    Err(String),
+}
+
+struct Events {
+    q: Mutex<VecDeque<(usize, Event)>>,
+    cv: Condvar,
+}
+
+impl Events {
+    fn new() -> Self {
+        Events { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, conn: usize, ev: Event) {
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        g.push_back((conn, ev));
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> (usize, Event) {
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(ev) = g.pop_front() {
+                return ev;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Pop the next *message* event, turning closes/errors into errors.
+fn next_msg(events: &Events) -> Result<(usize, Msg)> {
+    match events.pop() {
+        (conn, Event::Msg(m)) => Ok((conn, m)),
+        (conn, Event::Closed) => {
+            bail!("connection {conn} closed mid-protocol")
+        }
+        (conn, Event::Err(e)) => bail!("connection {conn} failed: {e}"),
+    }
+}
+
+fn sum_counters(counters: &[Arc<WireCounters>]) -> WireRoundStats {
+    let mut total = WireRoundStats::default();
+    for c in counters {
+        let s = c.snapshot();
+        total.bytes_sent += s.bytes_sent;
+        total.bytes_recv += s.bytes_recv;
+        total.frames_sent += s.frames_sent;
+        total.frames_recv += s.frames_recv;
+    }
+    total
+}
+
+/// Run the full experiment over already-connected transports (the TCP
+/// path lands here after `accept`; loopback tests call it directly).
+/// Logical client ids are assigned round-robin across connections.
+pub fn serve_transports(
+    session: &Session,
+    cfg: RunConfig,
+    mut transports: Vec<Box<dyn Transport>>,
+    record_name: &str,
+) -> Result<NetReport> {
+    if transports.is_empty() {
+        bail!("serve: need at least one client connection");
+    }
+    cfg.validate()?;
+    let n_conns = transports.len();
+    let cfg_json = cfg.to_json().to_string();
+
+    // ---- handshake: Hello in, Assign out, ids round-robin ----
+    let mut owner = vec![0usize; cfg.n_clients]; // logical client -> conn
+    for (j, t) in transports.iter_mut().enumerate() {
+        match t.recv()? {
+            Some(Msg::Hello { name, protocol }) => {
+                if protocol != VERSION as u32 {
+                    let m = Msg::Shutdown {
+                        reason: format!(
+                            "protocol {protocol} unsupported (speak {VERSION})"
+                        ),
+                    };
+                    let _ = t.send(&m);
+                    bail!("conn {j} ({name}): protocol {protocol} unsupported");
+                }
+                log::info!("conn {j}: hello from {name} ({})", t.peer());
+            }
+            other => bail!("conn {j}: expected Hello, got {other:?}"),
+        }
+        let ids: Vec<u32> = (0..cfg.n_clients)
+            .filter(|i| i % n_conns == j)
+            .map(|i| {
+                owner[i] = j;
+                i as u32
+            })
+            .collect();
+        t.send(&Msg::Assign { client_ids: ids, config: cfg_json.clone() })?;
+    }
+
+    let counters: Vec<Arc<WireCounters>> =
+        transports.iter().map(|t| t.counters()).collect();
+
+    // ---- split and spawn reader threads ----
+    let mut txs: Vec<Box<dyn TxHalf>> = Vec::with_capacity(n_conns);
+    let mut rxs: Vec<Box<dyn RxHalf>> = Vec::with_capacity(n_conns);
+    for t in transports {
+        let (tx, rx) = t.split();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let events = Events::new();
+
+    let mut driver = Driver::new(session, cfg)?;
+    driver.warmup()?;
+
+    let mut report: Option<(RunRecord, u64)> = None;
+    let mut run_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        for (j, mut rx) in rxs.into_iter().enumerate() {
+            let events = &events;
+            scope.spawn(move || loop {
+                match rx.recv() {
+                    Ok(Some(m)) => events.push(j, Event::Msg(m)),
+                    Ok(None) => {
+                        events.push(j, Event::Closed);
+                        break;
+                    }
+                    Err(e) => {
+                        events.push(j, Event::Err(format!("{e:#}")));
+                        break;
+                    }
+                }
+            });
+        }
+
+        match run_rounds(
+            &mut driver,
+            &mut txs,
+            &events,
+            &owner,
+            &counters,
+            record_name,
+        ) {
+            Ok(r) => report = Some(r),
+            Err(e) => run_err = Some(e),
+        }
+
+        // End of run (or abort): tell every client to go home — this is
+        // also what unblocks the reader threads, since clients close
+        // their sockets once they see the Shutdown.
+        let reason = match &run_err {
+            None => "run complete".to_string(),
+            Some(e) => format!("server error: {e:#}"),
+        };
+        for tx in &mut txs {
+            let _ = tx.send(&Msg::Shutdown { reason: reason.clone() });
+        }
+        drop(txs); // loopback: closes the server→client pipes
+    });
+    if let Some(e) = run_err {
+        return Err(e);
+    }
+    let (record, nacks_sent) = report.expect("run produced no report");
+
+    Ok(NetReport {
+        record,
+        final_theta_l: driver.theta_l.clone(),
+        final_theta_s: driver.theta_s.clone(),
+        wire: sum_counters(&counters),
+        nacks_sent,
+        connections: n_conns,
+    })
+}
+
+/// Per-participant collection state for one decoupled round.
+#[derive(Default)]
+struct Collected {
+    losses: Option<Vec<f64>>,
+    seeds: Vec<i32>,
+    theta: Option<Vec<f32>>,
+    done: Option<(u64, u64, f64, f64)>, // comm, flops, lane_time, lane_idle
+}
+
+fn run_rounds(
+    driver: &mut Driver,
+    txs: &mut [Box<dyn TxHalf>],
+    events: &Events,
+    owner: &[usize],
+    counters: &[Arc<WireCounters>],
+    record_name: &str,
+) -> Result<(RunRecord, u64)> {
+    let n_conns = txs.len();
+    let mut rec = RunRecord::new(record_name);
+    let t0 = std::time::Instant::now();
+    let mut nacks_sent = 0u64;
+    let profile = DeviceProfile::edge_default();
+
+    for round in 0..driver.cfg.rounds {
+        let wire_before = sum_counters(counters);
+        let participants = driver.sample_participants();
+        let parts_u32: Vec<u32> =
+            participants.iter().map(|&c| c as u32).collect();
+        let mut sim = driver.new_sim();
+        let queue = driver.round_queue(participants.len());
+        let mut losses: Vec<f64> = Vec::new();
+        let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
+        let r32 = round as u32;
+
+        // broadcasts are built once and serialized per connection —
+        // never clone model-sized payloads per receiver
+        let barrier_msg =
+            Msg::RoundBarrier { round: r32, participants: parts_u32.clone() };
+        for tx in txs.iter_mut() {
+            tx.send(&barrier_msg)?;
+        }
+
+        if driver.cfg.algorithm.is_decoupled() {
+            // The real parallelism width is the client-process count.
+            sim.set_workers(n_conns.min(participants.len()).max(1));
+            let active: Vec<usize> = (0..n_conns)
+                .filter(|&j| participants.iter().any(|&c| owner[c] == j))
+                .collect();
+            let sync_msg = Msg::ModelSync {
+                round: r32,
+                client: BROADCAST,
+                theta: driver.theta_l.clone(),
+            };
+            for &j in &active {
+                txs[j].send(&sync_msg)?;
+            }
+
+            // ---- collect the fan-out: acks flow back per upload ----
+            let mut got: BTreeMap<usize, Collected> = BTreeMap::new();
+            let mut done_count = 0usize;
+            while done_count < participants.len() {
+                let (conn, msg) = next_msg(events)?;
+                match msg {
+                    Msg::Smashed { client, round: r, step, smashed, targets } => {
+                        check_round(r, r32, "Smashed")?;
+                        check_owned(owner, conn, client, "Smashed")?;
+                        let accepted = queue.push(SmashedBatch {
+                            client: client as usize,
+                            round: r as usize,
+                            step: step as usize,
+                            smashed,
+                            targets,
+                        });
+                        if !accepted {
+                            nacks_sent += 1;
+                        }
+                        txs[conn].send(&Msg::UploadAck {
+                            client,
+                            round: r,
+                            step,
+                            accepted,
+                            reason: if accepted {
+                                String::new()
+                            } else {
+                                "server queue at capacity".into()
+                            },
+                        })?;
+                    }
+                    Msg::ZoUpdate { client, round: r, seeds, scalars } => {
+                        check_round(r, r32, "ZoUpdate")?;
+                        let ci = check_owned(owner, conn, client, "ZoUpdate")?;
+                        let e = got.entry(ci).or_default();
+                        e.losses =
+                            Some(scalars.iter().map(|&l| l as f64).collect());
+                        e.seeds = seeds;
+                    }
+                    Msg::ModelSync { client, round: r, theta } => {
+                        check_round(r, r32, "ModelSync")?;
+                        let ci =
+                            check_owned(owner, conn, client, "ModelSync")?;
+                        got.entry(ci).or_default().theta = Some(theta);
+                    }
+                    Msg::LocalDone {
+                        client,
+                        round: r,
+                        comm_bytes,
+                        flops,
+                        lane_time,
+                        lane_idle,
+                    } => {
+                        check_round(r, r32, "LocalDone")?;
+                        let ci =
+                            check_owned(owner, conn, client, "LocalDone")?;
+                        let e = got.entry(ci).or_default();
+                        if e.done.is_some() {
+                            bail!("conn {conn}: duplicate LocalDone for {ci}");
+                        }
+                        e.done =
+                            Some((comm_bytes, flops, lane_time, lane_idle));
+                        done_count += 1;
+                    }
+                    other => bail!(
+                        "conn {conn}: unexpected {} during fan-out",
+                        other.name()
+                    ),
+                }
+            }
+
+            // ---- barrier merge, in participant order (as in-process) ----
+            for &ci in &participants {
+                let c = got.remove(&ci).with_context(|| {
+                    format!("client {ci} sent LocalDone data out of band")
+                })?;
+                let (comm_bytes, flops, lane_time, lane_idle) = c
+                    .done
+                    .with_context(|| format!("client {ci}: missing LocalDone"))?;
+                let mut lane = ClientLane::new(&profile);
+                lane.time = lane_time;
+                lane.idle = lane_idle;
+                let outcome = LocalOutcome {
+                    ci,
+                    theta: c
+                        .theta
+                        .with_context(|| format!("client {ci}: missing θ"))?,
+                    losses: c
+                        .losses
+                        .with_context(|| format!("client {ci}: missing losses"))?,
+                    seeds: c.seeds,
+                    comm_bytes,
+                    flops,
+                    lane,
+                };
+                driver.absorb_outcome(outcome, &mut sim, &mut losses, &mut updated);
+            }
+        } else {
+            // ---- locked SFLV1/V2: strictly sequential per participant ----
+            sim.set_workers(1);
+            for &ci in &participants {
+                txs[owner[ci]].send(&Msg::ModelSync {
+                    round: r32,
+                    client: ci as u32,
+                    theta: driver.theta_l.clone(),
+                })?;
+                let theta_end = loop {
+                    let (conn, msg) = next_msg(events)?;
+                    if conn != owner[ci] {
+                        bail!(
+                            "conn {conn}: traffic during client {ci}'s locked phase"
+                        );
+                    }
+                    match msg {
+                        Msg::Smashed {
+                            client,
+                            round: r,
+                            step,
+                            smashed,
+                            targets,
+                        } => {
+                            check_round(r, r32, "Smashed")?;
+                            check_client(client, ci, "Smashed")?;
+                            let (loss, g) = driver.locked_server_exchange(
+                                ci, smashed, targets, &mut sim,
+                            )?;
+                            losses.push(loss);
+                            txs[conn].send(&Msg::CutGrad {
+                                client,
+                                round: r,
+                                step,
+                                loss: loss as f32,
+                                g,
+                            })?;
+                        }
+                        Msg::ModelSync { client, round: r, theta } => {
+                            check_round(r, r32, "ModelSync")?;
+                            check_client(client, ci, "ModelSync")?;
+                            break theta;
+                        }
+                        other => bail!(
+                            "conn {conn}: unexpected {} during locked phase",
+                            other.name()
+                        ),
+                    }
+                };
+                driver.comm_bytes += driver.book.comm_per_round_sync();
+                sim.sync(driver.book.comm_per_round_sync());
+                updated.push((ci, theta_end));
+            }
+        }
+
+        // ---- server phase: drain in (round, client, step) order ----
+        let feedback = driver.server_drain(&queue, &mut sim)?;
+        for (ci, g) in feedback {
+            driver.note_alignment_accounting(ci, &mut sim);
+            let Some(pos) = updated.iter().position(|(c, _)| *c == ci) else {
+                continue;
+            };
+            txs[owner[ci]].send(&Msg::AlignGrad {
+                client: ci as u32,
+                round: r32,
+                g,
+            })?;
+            loop {
+                let (conn, msg) = next_msg(events)?;
+                match msg {
+                    Msg::ModelSync { client, round: r, theta }
+                        if conn == owner[ci] && client as usize == ci =>
+                    {
+                        check_round(r, r32, "align ModelSync")?;
+                        updated[pos].1 = theta;
+                        break;
+                    }
+                    other => bail!(
+                        "conn {conn}: unexpected {} during alignment",
+                        other.name()
+                    ),
+                }
+            }
+        }
+
+        // ---- close the round: summary out, then aggregate ----
+        let loss_preview =
+            losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        let cum = sum_counters(counters);
+        let summary_msg = Msg::RoundSummary {
+            round: r32,
+            train_loss: loss_preview,
+            comm_bytes: driver.comm_bytes,
+            wire_bytes: cum.bytes_sent + cum.bytes_recv,
+        };
+        for tx in txs.iter_mut() {
+            tx.send(&summary_msg)?;
+        }
+        sim.record_wire(sum_counters(counters).since(&wire_before));
+        let loss = driver.finish_round(&participants, updated, sim, &losses);
+        driver.record_round(&mut rec, round, loss, t0)?;
+    }
+
+    driver.finalize_record(&mut rec);
+    Ok((rec, nacks_sent))
+}
+
+fn check_round(got: u32, want: u32, what: &str) -> Result<()> {
+    if got != want {
+        bail!("{what}: round {got}, expected {want}");
+    }
+    Ok(())
+}
+
+/// Every client message is validated the same way: a bad round would
+/// silently change the drain order / collection slots, and an
+/// out-of-range or stolen client id would corrupt the merge (or panic
+/// the sim). Returns the validated client index.
+fn check_owned(
+    owner: &[usize],
+    conn: usize,
+    client: u32,
+    what: &str,
+) -> Result<usize> {
+    let ci = client as usize;
+    if ci >= owner.len() || owner[ci] != conn {
+        bail!("conn {conn}: {what} for client {ci} it does not own");
+    }
+    Ok(ci)
+}
+
+fn check_client(got: u32, want: usize, what: &str) -> Result<()> {
+    if got as usize != want {
+        bail!("{what}: client {got}, expected {want}");
+    }
+    Ok(())
+}

@@ -1,0 +1,786 @@
+//! Framed binary wire codec (substrate S20) for the SFL client↔server
+//! protocol — hand-rolled like `util::json` (serde/bincode are not in the
+//! offline vendor set).
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! | offset | size | field                                   |
+//! |-------:|-----:|-----------------------------------------|
+//! | 0      | 2    | magic `b"HN"`                            |
+//! | 2      | 1    | protocol version (`VERSION`)             |
+//! | 3      | 1    | message tag                              |
+//! | 4      | 4    | payload length `n` (u32)                 |
+//! | 8      | n    | payload (per-message field layout)       |
+//! | 8+n    | 4    | CRC-32 (poly 0xEDB88320) of bytes 0..8+n |
+//!
+//! Variable-length fields inside a payload are u32-length-prefixed;
+//! `f32`/`f64` travel as their IEEE-754 bit patterns, so model parameters
+//! cross the wire bit-exactly. Decoding never panics: truncation, bad
+//! magic/version/tag, checksum mismatch, and malformed payloads all come
+//! back as typed [`WireError`]s (property-tested against random
+//! corruption in `rust/tests/net_wire.rs`).
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"HN";
+/// Protocol version; bumped on any frame/payload layout change.
+pub const VERSION: u8 = 1;
+/// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
+pub const FRAME_OVERHEAD: u64 = 12;
+/// Upper bound on a payload (decoder rejects larger length fields before
+/// allocating — a corrupt length must not OOM the peer).
+pub const MAX_PAYLOAD: u32 = 1 << 28;
+/// `ModelSync.client` value for a server→clients broadcast.
+pub const BROADCAST: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Frame (or payload field) ends before its declared length.
+    Truncated,
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadTag(u8),
+    BadChecksum { want: u32, got: u32 },
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    TooLarge(u32),
+    /// Structurally invalid payload (bad lengths, trailing bytes, …).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (speak {VERSION})")
+            }
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::BadChecksum { want, got } => {
+                write!(f, "checksum mismatch: frame says {want:08x}, computed {got:08x}")
+            }
+            WireError::TooLarge(n) => {
+                write!(f, "payload length {n} exceeds cap {MAX_PAYLOAD}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE, poly 0xEDB88320) — table generated at compile time
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[n] = c;
+        n += 1;
+    }
+    t
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// Feed `data` into a running CRC state (start from `0xFFFF_FFFF`,
+/// finalize by XORing with `0xFFFF_FFFF`) — lets `read_frame` checksum
+/// header and payload from separate buffers without concatenating them.
+fn crc32_feed(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_feed(0xFFFF_FFFF, data) ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// The SFL protocol message set. One frame carries exactly one message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// client → server: first message on a fresh connection.
+    Hello { name: String, protocol: u32 },
+    /// server → client: logical client ids this process owns + the full
+    /// run config (exact-string JSON, see `RunConfig::to_json`).
+    Assign { client_ids: Vec<u32>, config: String },
+    /// server → clients: a round is starting; `participants` is the
+    /// sampled cohort (all connections learn it, participants act on it).
+    RoundBarrier { round: u32, participants: Vec<u32> },
+    /// Model parameters. Down: θ_l^t broadcast (`client == BROADCAST`) or
+    /// a locked-phase kickoff for one client; up: a client's updated θ_l.
+    ModelSync { round: u32, client: u32, theta: Vec<f32> },
+    /// client → server: the lean per-step ZO record — counter-derived
+    /// perturbation seeds plus one scalar (the step loss) per local step
+    /// (paper Remark 4; FO baselines report the same shape).
+    ZoUpdate { client: u32, round: u32, seeds: Vec<i32>, scalars: Vec<f32> },
+    /// client → server: one smashed-data upload (decoupled: enqueued for
+    /// the barrier drain; locked: answered by a `CutGrad`).
+    Smashed {
+        client: u32,
+        round: u32,
+        step: u32,
+        smashed: Vec<f32>,
+        targets: Vec<i32>,
+    },
+    /// server → client: locked-exchange reply — loss + cut gradient.
+    CutGrad { client: u32, round: u32, step: u32, loss: f32, g: Vec<f32> },
+    /// server → client: FSL-SAGE alignment feedback (cut gradient for the
+    /// client's last upload); answered by a `ModelSync` up.
+    AlignGrad { client: u32, round: u32, g: Vec<f32> },
+    /// server → client: receipt for a decoupled `Smashed` upload.
+    /// `accepted == false` is the typed NACK for a queue-capacity drop.
+    UploadAck {
+        client: u32,
+        round: u32,
+        step: u32,
+        accepted: bool,
+        reason: String,
+    },
+    /// client → server: one logical client's local phase is complete;
+    /// carries the client-side analytic accounting.
+    LocalDone {
+        client: u32,
+        round: u32,
+        comm_bytes: u64,
+        flops: u64,
+        lane_time: f64,
+        lane_idle: f64,
+    },
+    /// server → clients: round epilogue (train-loss mean, analytic comm,
+    /// measured wire bytes) — doubles as the next-round flow-control gate.
+    RoundSummary {
+        round: u32,
+        train_loss: f64,
+        comm_bytes: u64,
+        wire_bytes: u64,
+    },
+    /// server → clients: the run is over; close the connection.
+    Shutdown { reason: String },
+}
+
+impl Msg {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Assign { .. } => 2,
+            Msg::RoundBarrier { .. } => 3,
+            Msg::ModelSync { .. } => 4,
+            Msg::ZoUpdate { .. } => 5,
+            Msg::Smashed { .. } => 6,
+            Msg::CutGrad { .. } => 7,
+            Msg::AlignGrad { .. } => 8,
+            Msg::UploadAck { .. } => 9,
+            Msg::LocalDone { .. } => 10,
+            Msg::RoundSummary { .. } => 11,
+            Msg::Shutdown { .. } => 12,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Assign { .. } => "Assign",
+            Msg::RoundBarrier { .. } => "RoundBarrier",
+            Msg::ModelSync { .. } => "ModelSync",
+            Msg::ZoUpdate { .. } => "ZoUpdate",
+            Msg::Smashed { .. } => "Smashed",
+            Msg::CutGrad { .. } => "CutGrad",
+            Msg::AlignGrad { .. } => "AlignGrad",
+            Msg::UploadAck { .. } => "UploadAck",
+            Msg::LocalDone { .. } => "LocalDone",
+            Msg::RoundSummary { .. } => "RoundSummary",
+            Msg::Shutdown { .. } => "Shutdown",
+        }
+    }
+}
+
+const MIN_TAG: u8 = 1;
+const MAX_TAG: u8 = 12;
+
+// ---------------------------------------------------------------------------
+// payload writer
+// ---------------------------------------------------------------------------
+
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// payload reader (bounds-checked; never panics)
+// ---------------------------------------------------------------------------
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32, WireError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Validated element count for a length-prefixed vector: the declared
+    /// count must fit in the remaining bytes *before* anything allocates.
+    fn vec_len(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let remaining = self.b.len() - self.pos;
+        match n.checked_mul(elem_size) {
+            Some(bytes) if bytes <= remaining => Ok(n),
+            _ => Err(WireError::Malformed("vector length exceeds payload")),
+        }
+    }
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.vec_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("non-utf8 string"))
+    }
+    fn vec_u32(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.vec_len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn vec_i32(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.vec_len(4)?;
+        (0..n).map(|_| self.i32()).collect()
+    }
+    fn vec_f32(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.vec_len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::Malformed("trailing payload bytes"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------------
+
+fn encode_payload(msg: &Msg, w: &mut Wr) {
+    match msg {
+        Msg::Hello { name, protocol } => {
+            w.str(name);
+            w.u32(*protocol);
+        }
+        Msg::Assign { client_ids, config } => {
+            w.vec_u32(client_ids);
+            w.str(config);
+        }
+        Msg::RoundBarrier { round, participants } => {
+            w.u32(*round);
+            w.vec_u32(participants);
+        }
+        Msg::ModelSync { round, client, theta } => {
+            w.u32(*round);
+            w.u32(*client);
+            w.vec_f32(theta);
+        }
+        Msg::ZoUpdate { client, round, seeds, scalars } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.vec_i32(seeds);
+            w.vec_f32(scalars);
+        }
+        Msg::Smashed { client, round, step, smashed, targets } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.u32(*step);
+            w.vec_f32(smashed);
+            w.vec_i32(targets);
+        }
+        Msg::CutGrad { client, round, step, loss, g } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.u32(*step);
+            w.f32(*loss);
+            w.vec_f32(g);
+        }
+        Msg::AlignGrad { client, round, g } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.vec_f32(g);
+        }
+        Msg::UploadAck { client, round, step, accepted, reason } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.u32(*step);
+            w.u8(*accepted as u8);
+            w.str(reason);
+        }
+        Msg::LocalDone {
+            client,
+            round,
+            comm_bytes,
+            flops,
+            lane_time,
+            lane_idle,
+        } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.u64(*comm_bytes);
+            w.u64(*flops);
+            w.f64(*lane_time);
+            w.f64(*lane_idle);
+        }
+        Msg::RoundSummary { round, train_loss, comm_bytes, wire_bytes } => {
+            w.u32(*round);
+            w.f64(*train_loss);
+            w.u64(*comm_bytes);
+            w.u64(*wire_bytes);
+        }
+        Msg::Shutdown { reason } => {
+            w.str(reason);
+        }
+    }
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
+    let mut r = Rd { b: payload, pos: 0 };
+    let msg = match tag {
+        1 => Msg::Hello { name: r.str()?, protocol: r.u32()? },
+        2 => Msg::Assign { client_ids: r.vec_u32()?, config: r.str()? },
+        3 => Msg::RoundBarrier { round: r.u32()?, participants: r.vec_u32()? },
+        4 => Msg::ModelSync {
+            round: r.u32()?,
+            client: r.u32()?,
+            theta: r.vec_f32()?,
+        },
+        5 => Msg::ZoUpdate {
+            client: r.u32()?,
+            round: r.u32()?,
+            seeds: r.vec_i32()?,
+            scalars: r.vec_f32()?,
+        },
+        6 => Msg::Smashed {
+            client: r.u32()?,
+            round: r.u32()?,
+            step: r.u32()?,
+            smashed: r.vec_f32()?,
+            targets: r.vec_i32()?,
+        },
+        7 => Msg::CutGrad {
+            client: r.u32()?,
+            round: r.u32()?,
+            step: r.u32()?,
+            loss: r.f32()?,
+            g: r.vec_f32()?,
+        },
+        8 => Msg::AlignGrad {
+            client: r.u32()?,
+            round: r.u32()?,
+            g: r.vec_f32()?,
+        },
+        9 => Msg::UploadAck {
+            client: r.u32()?,
+            round: r.u32()?,
+            step: r.u32()?,
+            accepted: match r.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::Malformed("bool out of range")),
+            },
+            reason: r.str()?,
+        },
+        10 => Msg::LocalDone {
+            client: r.u32()?,
+            round: r.u32()?,
+            comm_bytes: r.u64()?,
+            flops: r.u64()?,
+            lane_time: r.f64()?,
+            lane_idle: r.f64()?,
+        },
+        11 => Msg::RoundSummary {
+            round: r.u32()?,
+            train_loss: r.f64()?,
+            comm_bytes: r.u64()?,
+            wire_bytes: r.u64()?,
+        },
+        12 => Msg::Shutdown { reason: r.str()? },
+        t => return Err(WireError::BadTag(t)),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+/// Encode one message as a complete frame (header + payload + CRC).
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    let mut w = Wr { buf: Vec::with_capacity(64) };
+    // header placeholder, then payload, then backfill the length
+    w.buf.extend_from_slice(&MAGIC);
+    w.u8(VERSION);
+    w.u8(msg.tag());
+    w.u32(0);
+    encode_payload(msg, &mut w);
+    let plen = (w.buf.len() - 8) as u32;
+    w.buf[4..8].copy_from_slice(&plen.to_le_bytes());
+    let crc = crc32(&w.buf);
+    w.buf.extend_from_slice(&crc.to_le_bytes());
+    w.buf
+}
+
+/// Decode one frame from the front of `buf`. Returns the message and the
+/// total frame size consumed. Never panics on hostile input.
+pub fn decode_frame(buf: &[u8]) -> Result<(Msg, usize), WireError> {
+    if buf.len() < 8 {
+        return Err(WireError::Truncated);
+    }
+    if buf[0..2] != MAGIC {
+        return Err(WireError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf[2] != VERSION {
+        return Err(WireError::BadVersion(buf[2]));
+    }
+    let tag = buf[3];
+    if !(MIN_TAG..=MAX_TAG).contains(&tag) {
+        return Err(WireError::BadTag(tag));
+    }
+    let plen = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if plen > MAX_PAYLOAD {
+        return Err(WireError::TooLarge(plen));
+    }
+    let total = 8 + plen as usize + 4;
+    if buf.len() < total {
+        return Err(WireError::Truncated);
+    }
+    let body = &buf[..8 + plen as usize];
+    let want =
+        u32::from_le_bytes(buf[8 + plen as usize..total].try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        return Err(WireError::BadChecksum { want, got });
+    }
+    let msg = decode_payload(tag, &buf[8..8 + plen as usize])?;
+    Ok((msg, total))
+}
+
+// ---------------------------------------------------------------------------
+// blocking stream I/O
+// ---------------------------------------------------------------------------
+
+/// `encode_frame` + sender-side payload cap: a frame no compliant
+/// decoder would accept must fail at the source, not at the receiver.
+pub fn encode_frame_checked(msg: &Msg) -> Result<Vec<u8>, WireError> {
+    let frame = encode_frame(msg);
+    let plen = frame.len() as u64 - FRAME_OVERHEAD;
+    if plen > MAX_PAYLOAD as u64 {
+        return Err(WireError::TooLarge(plen.min(u32::MAX as u64) as u32));
+    }
+    Ok(frame)
+}
+
+/// Write one framed message; returns the bytes put on the wire.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> std::io::Result<u64> {
+    let frame = encode_frame_checked(msg).map_err(wire_io)?;
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(frame.len() as u64)
+}
+
+/// Read one framed message (blocking). Returns `Ok(None)` on a clean EOF
+/// at a frame boundary (peer closed); mid-frame EOF and every codec
+/// violation surface as errors.
+pub fn read_frame(
+    r: &mut impl Read,
+) -> std::io::Result<Option<(Msg, u64)>> {
+    let mut header = [0u8; 8];
+    let mut filled = 0usize;
+    while filled < 8 {
+        let n = r.read(&mut header[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None); // clean close between frames
+            }
+            return Err(wire_io(WireError::Truncated));
+        }
+        filled += n;
+    }
+    if header[0..2] != MAGIC {
+        return Err(wire_io(WireError::BadMagic([header[0], header[1]])));
+    }
+    if header[2] != VERSION {
+        return Err(wire_io(WireError::BadVersion(header[2])));
+    }
+    let tag = header[3];
+    if !(MIN_TAG..=MAX_TAG).contains(&tag) {
+        return Err(wire_io(WireError::BadTag(tag)));
+    }
+    let plen = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if plen > MAX_PAYLOAD {
+        return Err(wire_io(WireError::TooLarge(plen)));
+    }
+    let mut rest = vec![0u8; plen as usize + 4];
+    r.read_exact(&mut rest).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            wire_io(WireError::Truncated)
+        } else {
+            e
+        }
+    })?;
+    let payload = &rest[..plen as usize];
+    let want =
+        u32::from_le_bytes(rest[plen as usize..].try_into().unwrap());
+    let got =
+        crc32_feed(crc32_feed(0xFFFF_FFFF, &header), payload) ^ 0xFFFF_FFFF;
+    if want != got {
+        return Err(wire_io(WireError::BadChecksum { want, got }));
+    }
+    let msg = decode_payload(tag, payload).map_err(wire_io)?;
+    Ok(Some((msg, FRAME_OVERHEAD + plen as u64)))
+}
+
+fn wire_io(e: WireError) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Msg> {
+        vec![
+            Msg::Hello { name: "edge-0".into(), protocol: 1 },
+            Msg::Assign {
+                client_ids: vec![0, 2, 4],
+                config: "{\"variant\": \"cnn_c1\"}".into(),
+            },
+            Msg::RoundBarrier { round: 3, participants: vec![1, 2] },
+            Msg::ModelSync {
+                round: 3,
+                client: BROADCAST,
+                theta: vec![1.5, -0.25, f32::MIN_POSITIVE],
+            },
+            Msg::ZoUpdate {
+                client: 2,
+                round: 3,
+                seeds: vec![-7, 12345],
+                scalars: vec![0.5, 2.25],
+            },
+            Msg::Smashed {
+                client: 1,
+                round: 0,
+                step: 2,
+                smashed: vec![0.0; 8],
+                targets: vec![3, 1, 4],
+            },
+            Msg::CutGrad {
+                client: 1,
+                round: 0,
+                step: 2,
+                loss: 2.75,
+                g: vec![-1.0, 1.0],
+            },
+            Msg::AlignGrad { client: 4, round: 9, g: vec![0.125] },
+            Msg::UploadAck {
+                client: 1,
+                round: 0,
+                step: 2,
+                accepted: false,
+                reason: "queue full".into(),
+            },
+            Msg::LocalDone {
+                client: 5,
+                round: 7,
+                comm_bytes: 1 << 40,
+                flops: 123456789,
+                lane_time: 0.75,
+                lane_idle: 0.0,
+            },
+            Msg::RoundSummary {
+                round: 7,
+                train_loss: 1.875,
+                comm_bytes: 4096,
+                wire_bytes: 5000,
+            },
+            Msg::Shutdown { reason: "done".into() },
+        ]
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the canonical CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for msg in samples() {
+            let frame = encode_frame(&msg);
+            let (back, used) = decode_frame(&frame).unwrap();
+            assert_eq!(used, frame.len(), "{}", msg.name());
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn tags_are_unique_and_in_range() {
+        let mut seen = std::collections::BTreeSet::new();
+        for msg in samples() {
+            assert!((MIN_TAG..=MAX_TAG).contains(&msg.tag()));
+            assert!(seen.insert(msg.tag()), "duplicate tag {}", msg.tag());
+        }
+        assert_eq!(seen.len(), (MAX_TAG - MIN_TAG + 1) as usize);
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        let frame = encode_frame(&samples()[4]);
+        for cut in 0..frame.len() {
+            let err = decode_frame(&frame[..cut]).unwrap_err();
+            assert_eq!(err, WireError::Truncated, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let frame = encode_frame(&samples()[3]);
+        // payload flip → checksum
+        let mut f = frame.clone();
+        f[10] ^= 0x40;
+        assert!(matches!(
+            decode_frame(&f).unwrap_err(),
+            WireError::BadChecksum { .. }
+        ));
+        // version byte → BadVersion (before checksum)
+        let mut f = frame.clone();
+        f[2] = 9;
+        assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadVersion(9));
+        // unknown tag → BadTag
+        let mut f = frame.clone();
+        f[3] = 200;
+        assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadTag(200));
+        // magic → BadMagic
+        let mut f = frame;
+        f[0] = b'X';
+        assert!(matches!(
+            decode_frame(&f).unwrap_err(),
+            WireError::BadMagic(_)
+        ));
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocating() {
+        let mut f = encode_frame(&samples()[0]);
+        f[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            decode_frame(&f).unwrap_err(),
+            WireError::TooLarge(MAX_PAYLOAD + 1)
+        );
+    }
+
+    #[test]
+    fn stream_io_roundtrips_and_counts_bytes() {
+        let mut buf: Vec<u8> = Vec::new();
+        let mut want_bytes = 0u64;
+        for msg in samples() {
+            want_bytes += write_frame(&mut buf, &msg).unwrap();
+        }
+        assert_eq!(want_bytes as usize, buf.len());
+        let mut cur = std::io::Cursor::new(buf);
+        let mut got = Vec::new();
+        let mut got_bytes = 0u64;
+        while let Some((m, n)) = read_frame(&mut cur).unwrap() {
+            got_bytes += n;
+            got.push(m);
+        }
+        assert_eq!(got, samples());
+        assert_eq!(got_bytes, want_bytes);
+    }
+
+    #[test]
+    fn mid_frame_eof_errors_clean_eof_is_none() {
+        let frame = encode_frame(&samples()[0]);
+        // EOF in the middle of a frame is a hard error...
+        let mut cur =
+            std::io::Cursor::new(frame[..frame.len() - 1].to_vec());
+        assert!(read_frame(&mut cur).is_err());
+        // ...but a close at a frame boundary is a clean end-of-stream.
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+    }
+}

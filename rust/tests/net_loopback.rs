@@ -1,0 +1,379 @@
+//! End-to-end tests of the `heron-net` subsystem over in-memory loopback
+//! transports (every frame still encodes/decodes, so byte counters
+//! measure the real wire format):
+//!
+//! * **bit-identity** — for every algorithm, a networked run (multiple
+//!   client "processes" on threads) reproduces the in-process
+//!   `Driver::run` trajectory bit for bit;
+//! * **accounting cross-check** — measured wire bytes per round equal the
+//!   analytic `CostBook` comm bytes plus an explicitly pinned protocol
+//!   overhead (frame headers, acks, barriers, targets, …), so silent
+//!   drift between `accounting.rs` and the real protocol fails a test;
+//! * **NACK failure injection** — a pinned queue capacity makes the
+//!   server drop uploads; the typed NACKs seen by clients must equal the
+//!   server-side drop count in `QueueStats`.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::net::transport::{loopback_pair, Transport};
+use heron_sfl::net::wire::FRAME_OVERHEAD;
+use heron_sfl::net::{run_client, serve_transports, ClientReport, NetReport};
+use heron_sfl::runtime::Session;
+
+mod common;
+use common::with_session;
+
+fn cfg(alg: Algorithm, n_clients: usize) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: alg,
+        n_clients,
+        rounds: 2,
+        local_steps: 4,
+        upload_every: 2,
+        align_every: 1, // FSL-SAGE: every upload produces cut-grad feedback
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        dataset_size: 1024,
+        eval_every: 1,
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+/// Run the experiment over `n_conns` loopback connections, clients on
+/// threads — the in-memory analogue of `serve` + N × `connect`.
+fn net_run(
+    session: &Session,
+    cfg: &RunConfig,
+    n_conns: usize,
+) -> (NetReport, Vec<ClientReport>) {
+    let mut server_ends: Vec<Box<dyn Transport>> = Vec::new();
+    let mut client_ends = Vec::new();
+    for _ in 0..n_conns {
+        let (s, c) = loopback_pair();
+        server_ends.push(Box::new(s));
+        client_ends.push(c);
+    }
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_transports(session, cfg.clone(), server_ends, "net")
+        });
+        let clients: Vec<_> = client_ends
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                scope.spawn(move || {
+                    run_client(session, Box::new(c), &format!("edge-{i}"))
+                })
+            })
+            .collect();
+        let report = server.join().expect("server panicked").expect("server");
+        let client_reports = clients
+            .into_iter()
+            .map(|h| h.join().expect("client panicked").expect("client"))
+            .collect();
+        (report, client_reports)
+    })
+}
+
+fn in_process(
+    session: &Session,
+    cfg: &RunConfig,
+) -> (heron_sfl::metrics::RunRecord, Vec<f32>, Vec<f32>) {
+    let mut driver = Driver::new(session, cfg.clone()).unwrap();
+    let rec = driver.run("inproc").unwrap();
+    (rec, driver.theta_l.clone(), driver.theta_s.clone())
+}
+
+fn assert_trajectories_match(alg: Algorithm, n_conns: usize, n_clients: usize) {
+    with_session(|s| {
+        let c = cfg(alg, n_clients);
+        let (rec, theta_l, theta_s) = in_process(s, &c);
+        let (net, _) = net_run(s, &c, n_conns);
+        let name = alg.name();
+        assert_eq!(
+            net.record.rounds.len(),
+            rec.rounds.len(),
+            "{name}: round count"
+        );
+        for (a, b) in rec.rounds.iter().zip(&net.record.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{name}: train loss, round {}",
+                a.round
+            );
+            assert_eq!(
+                a.eval_metric.to_bits(),
+                b.eval_metric.to_bits(),
+                "{name}: eval metric, round {}",
+                a.round
+            );
+            assert_eq!(
+                a.comm_bytes_cum, b.comm_bytes_cum,
+                "{name}: analytic comm, round {}",
+                a.round
+            );
+        }
+        assert_eq!(theta_l, net.final_theta_l, "{name}: θ_l");
+        assert_eq!(theta_s, net.final_theta_s, "{name}: θ_s");
+        assert_eq!(
+            rec.summary["comm_bytes"], net.record.summary["comm_bytes"],
+            "{name}: summary comm"
+        );
+        assert_eq!(
+            rec.summary["client_flops"], net.record.summary["client_flops"],
+            "{name}: summary flops"
+        );
+        // the networked run must actually have moved bytes
+        assert!(net.wire.bytes_sent > 0 && net.wire.bytes_recv > 0);
+        assert!(
+            net.record.summary["wire_bytes_sent"] > 0.0,
+            "{name}: per-round wire stats missing"
+        );
+        // in-process runs report zero measured wire traffic
+        assert_eq!(rec.summary["wire_bytes_sent"], 0.0);
+    });
+}
+
+#[test]
+fn heron_tcp_loopback_bit_identical_two_conns() {
+    // 4 logical clients round-robined over 2 client processes
+    assert_trajectories_match(Algorithm::Heron, 2, 4);
+}
+
+#[test]
+fn cse_fsl_bit_identical() {
+    assert_trajectories_match(Algorithm::CseFsl, 2, 4);
+}
+
+#[test]
+fn fsl_sage_bit_identical_including_alignment() {
+    assert_trajectories_match(Algorithm::FslSage, 2, 4);
+}
+
+#[test]
+fn sflv1_bit_identical_locked_path() {
+    assert_trajectories_match(Algorithm::SflV1, 2, 3);
+}
+
+#[test]
+fn sflv2_bit_identical_locked_path() {
+    assert_trajectories_match(Algorithm::SflV2, 2, 3);
+}
+
+#[test]
+fn partial_participation_keeps_identity_with_idle_conns() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 5);
+        c.participation = 0.6; // 3 of 5 participate; some conns sit idle
+        c.rounds = 3;
+        let (rec, theta_l, _) = in_process(s, &c);
+        let (net, _) = net_run(s, &c, 3);
+        for (a, b) in rec.rounds.iter().zip(&net.record.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
+        assert_eq!(theta_l, net.final_theta_l);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// accounting cross-check: measured wire bytes vs analytic CostBook
+// ---------------------------------------------------------------------------
+
+/// Expected measured bytes per round, derived from the protocol layout.
+/// Run with one logical client per connection so the θ broadcast maps
+/// 1:1 onto the analytic per-participant sync (with multiple clients per
+/// connection the broadcast amortizes and measured < analytic — that gap
+/// is the point of measuring).
+struct Expected {
+    sent: u64, // server -> clients
+    recv: u64, // clients -> server
+}
+
+fn expected_round_bytes(
+    s: &Session,
+    c: &RunConfig,
+    n_conns: usize,
+    align_msgs: u64,
+) -> Expected {
+    let v = s.variant(&c.variant).unwrap();
+    let nl = v.size_local() as u64;
+    let book = heron_sfl::coordinator::accounting::CostBook::new(
+        v,
+        c.algorithm,
+        c.n_pert as u64,
+    );
+    let p = c.n_clients as u64; // participation = 1.0 here
+    let conns = n_conns as u64;
+    let h = c.local_steps as u64;
+    let uploads = h / c.upload_every as u64;
+    let targets = v.batch as u64; // vision: one i32 label per sample
+    let f = FRAME_OVERHEAD;
+
+    let barrier = f + 8 + 4 * p; // round + vec<u32> participants
+    let summary = f + 28;
+    let model_down = f + 12 + 4 * nl; // round + client + vec<f32> θ
+    let model_up = model_down;
+    // ids(12) + two length-prefixed vectors (smashed f32s, target i32s)
+    let smashed = f + 20 + book.smashed_bytes + 4 * targets;
+    let ack = f + 17; // ids + bool + empty reason string
+    let zo_update = f + 8 + (4 + 4 * h) + (4 + 4 * h); // ids + seeds + scalars
+    let local_done = f + 40;
+    let cut_grad = f + 20 + book.cutgrad_bytes; // ids + loss + vec<f32> g
+    let align_grad = f + 12 + book.cutgrad_bytes; // ids + vec<f32> g
+
+    if c.algorithm.is_decoupled() {
+        Expected {
+            sent: conns * (barrier + summary)
+                + conns * model_down
+                + p * uploads * ack
+                + align_msgs * align_grad,
+            recv: p * uploads * smashed
+                + p * (zo_update + model_up + local_done)
+                + align_msgs * model_up,
+        }
+    } else {
+        Expected {
+            sent: conns * (barrier + summary)
+                + p * model_down // per-participant locked kickoff
+                + p * h * cut_grad,
+            recv: p * h * smashed + p * model_up,
+        }
+    }
+}
+
+#[test]
+fn measured_wire_bytes_match_analytic_plus_pinned_overhead() {
+    with_session(|s| {
+        for alg in Algorithm::all() {
+            let n_clients = 3;
+            let c = cfg(alg, n_clients);
+            let (net, _) = net_run(s, &c, n_clients); // 1 client per conn
+            let v = s.variant(&c.variant).unwrap();
+            let book = heron_sfl::coordinator::accounting::CostBook::new(
+                v,
+                c.algorithm,
+                c.n_pert as u64,
+            );
+            // FSL-SAGE emits one feedback per cut-grad upload: uploads at
+            // steps k, 2k, ... where step % (k * align_every) == 0
+            let uploads = (c.local_steps / c.upload_every) as u64;
+            let align_msgs = if alg == Algorithm::FslSage {
+                n_clients as u64 * uploads
+            } else {
+                0
+            };
+            let want = expected_round_bytes(s, &c, n_clients, align_msgs);
+
+            // the analytic CostBook number for the same round, from the
+            // same formulas the in-process counter uses
+            let p = n_clients as u64;
+            let analytic_round = match alg {
+                Algorithm::SflV1 | Algorithm::SflV2 => {
+                    p * (c.local_steps as u64
+                        * (book.smashed_bytes + book.cutgrad_bytes)
+                        + book.comm_per_round_sync())
+                }
+                _ => {
+                    p * (uploads * book.smashed_bytes
+                        + book.comm_per_round_sync())
+                        + align_msgs * book.cutgrad_bytes
+                }
+            };
+
+            for (round, t) in net.record.rounds.iter().enumerate() {
+                let delta = if round == 0 {
+                    t.comm_bytes_cum
+                } else {
+                    t.comm_bytes_cum
+                        - net.record.rounds[round - 1].comm_bytes_cum
+                };
+                assert_eq!(
+                    delta,
+                    analytic_round,
+                    "{}: analytic round formula drifted (round {round})",
+                    alg.name()
+                );
+            }
+
+            // measured per-round traffic (server view), recorded in the
+            // run summary as cumulative sums over RoundTiming.wire
+            let rounds = c.rounds as u64;
+            let measured_sent =
+                net.record.summary["wire_bytes_sent"] as u64;
+            let measured_recv =
+                net.record.summary["wire_bytes_recv"] as u64;
+            assert_eq!(
+                measured_sent,
+                want.sent * rounds,
+                "{}: server->client bytes (analytic {} + overhead {})",
+                alg.name(),
+                analytic_round,
+                want.sent as i64 - analytic_round as i64,
+            );
+            assert_eq!(
+                measured_recv,
+                want.recv * rounds,
+                "{}: client->server bytes",
+                alg.name()
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: queue capacity → typed NACKs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queue_drops_surface_as_typed_nacks() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 3);
+        c.upload_every = 1; // 4 uploads per client per round
+        c.queue_capacity = 2; // 12 uploads/round contend for 2 slots
+        let (net, clients) = net_run(s, &c, 3);
+        let dropped = net.record.summary["queue_dropped"] as u64;
+        assert!(dropped > 0, "capacity 2 must drop uploads");
+        assert_eq!(net.nacks_sent, dropped, "every drop sends one NACK");
+        let client_nacks: u64 = clients.iter().map(|r| r.nacks).sum();
+        assert_eq!(client_nacks, dropped, "every NACK reaches a client");
+        // conservation: every upload is either enqueued or dropped
+        let enqueued = net.record.summary["queue_enqueued"] as u64;
+        let total_uploads =
+            (c.n_clients * c.local_steps * c.rounds) as u64;
+        assert_eq!(enqueued + dropped, total_uploads);
+        // the run still completes every round
+        assert_eq!(net.record.rounds.len(), c.rounds);
+    });
+}
+
+#[test]
+fn client_reports_observe_the_run() {
+    with_session(|s| {
+        let c = cfg(Algorithm::Heron, 4);
+        let (net, clients) = net_run(s, &c, 2);
+        assert_eq!(net.connections, 2);
+        assert_eq!(clients.len(), 2);
+        for rep in &clients {
+            assert_eq!(rep.assigned.len(), 2, "round-robin assignment");
+            assert_eq!(rep.rounds, c.rounds);
+            assert_eq!(rep.phases, (c.rounds * 2) as u64);
+            assert_eq!(rep.shutdown_reason, "run complete");
+            assert!(rep.wire.bytes_sent > 0 && rep.wire.bytes_recv > 0);
+        }
+        // client-side and server-side byte counts agree (loopback is
+        // lossless): what clients sent is what the server received
+        let client_sent: u64 =
+            clients.iter().map(|r| r.wire.bytes_sent).sum();
+        let client_recv: u64 =
+            clients.iter().map(|r| r.wire.bytes_recv).sum();
+        assert_eq!(client_sent, net.wire.bytes_recv);
+        assert_eq!(client_recv, net.wire.bytes_sent);
+    });
+}

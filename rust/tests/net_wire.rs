@@ -1,0 +1,229 @@
+//! Property tests for the `heron-net` wire codec (`util::prop` substrate):
+//! encode/decode roundtrip for every message type under random contents,
+//! and *rejection — never a panic* on truncated frames, corrupted bytes,
+//! bad checksums, and unknown version/message tags.
+
+use heron_sfl::net::wire::{
+    self, decode_frame, encode_frame, Msg, WireError, MAX_PAYLOAD, VERSION,
+};
+use heron_sfl::util::prop::{self, Gen};
+
+fn arb_string(g: &mut Gen) -> String {
+    let n = g.usize_in(0..24);
+    (0..n)
+        .map(|_| {
+            // printable ascii plus some multibyte utf8
+            match g.usize_in(0..20) {
+                0 => 'λ',
+                1 => '†',
+                _ => (g.usize_in(0x20..0x7f) as u8) as char,
+            }
+        })
+        .collect()
+}
+
+fn arb_f32s(g: &mut Gen, max: usize) -> Vec<f32> {
+    g.vec_f32(0..max, -1e6..1e6)
+}
+
+fn arb_i32s(g: &mut Gen, max: usize) -> Vec<i32> {
+    let n = g.usize_in(0..max);
+    (0..n).map(|_| g.u64() as i32).collect()
+}
+
+fn arb_u32s(g: &mut Gen, max: usize) -> Vec<u32> {
+    let n = g.usize_in(0..max);
+    (0..n).map(|_| g.u64() as u32).collect()
+}
+
+/// One random message of a random type.
+fn arb_msg(g: &mut Gen) -> Msg {
+    match g.usize_in(0..12) {
+        0 => Msg::Hello { name: arb_string(g), protocol: g.u64() as u32 },
+        1 => Msg::Assign { client_ids: arb_u32s(g, 16), config: arb_string(g) },
+        2 => Msg::RoundBarrier {
+            round: g.u64() as u32,
+            participants: arb_u32s(g, 16),
+        },
+        3 => Msg::ModelSync {
+            round: g.u64() as u32,
+            client: g.u64() as u32,
+            theta: arb_f32s(g, 256),
+        },
+        4 => Msg::ZoUpdate {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            seeds: arb_i32s(g, 32),
+            scalars: arb_f32s(g, 32),
+        },
+        5 => Msg::Smashed {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            step: g.u64() as u32,
+            smashed: arb_f32s(g, 256),
+            targets: arb_i32s(g, 64),
+        },
+        6 => Msg::CutGrad {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            step: g.u64() as u32,
+            loss: g.f32_in(-100.0..100.0),
+            g: arb_f32s(g, 256),
+        },
+        7 => Msg::AlignGrad {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            g: arb_f32s(g, 256),
+        },
+        8 => Msg::UploadAck {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            step: g.u64() as u32,
+            accepted: g.bool(),
+            reason: arb_string(g),
+        },
+        9 => Msg::LocalDone {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            comm_bytes: g.u64(),
+            flops: g.u64(),
+            lane_time: g.f64_in(0.0..1e6),
+            lane_idle: g.f64_in(0.0..1e6),
+        },
+        10 => Msg::RoundSummary {
+            round: g.u64() as u32,
+            train_loss: g.f64_in(-10.0..10.0),
+            comm_bytes: g.u64(),
+            wire_bytes: g.u64(),
+        },
+        _ => Msg::Shutdown { reason: arb_string(g) },
+    }
+}
+
+#[test]
+fn roundtrip_every_message_type() {
+    prop::check(400, |g| {
+        let msg = arb_msg(g);
+        let frame = encode_frame(&msg);
+        let (back, used) = decode_frame(&frame)
+            .map_err(|e| format!("{}: decode failed: {e}", msg.name()))?;
+        prop::assert_prop!(used == frame.len(), "{}: partial consume", msg.name());
+        prop::assert_prop!(back == msg, "{}: roundtrip mismatch", msg.name());
+        // trailing bytes after a complete frame are the next frame's
+        // problem — decode must report the exact boundary
+        let mut stream = frame.clone();
+        stream.extend_from_slice(&frame);
+        let (_, used2) =
+            decode_frame(&stream).map_err(|e| format!("concat: {e}"))?;
+        prop::assert_prop!(used2 == frame.len(), "boundary detection");
+        Ok(())
+    });
+}
+
+#[test]
+fn nonfinite_payloads_roundtrip_bitwise() {
+    // NaN != NaN under PartialEq, so compare re-encoded bytes instead:
+    // the codec must preserve f32/f64 bit patterns exactly.
+    for bits in [0x7FC0_0001u32, 0x7F80_0000, 0xFF80_0000, 0x0000_0001] {
+        let msg = Msg::ModelSync {
+            round: 0,
+            client: 1,
+            theta: vec![f32::from_bits(bits), 1.0],
+        };
+        let frame = encode_frame(&msg);
+        let (back, _) = decode_frame(&frame).unwrap();
+        assert_eq!(encode_frame(&back), frame, "bits {bits:08x}");
+    }
+}
+
+#[test]
+fn truncation_always_rejected_never_panics() {
+    prop::check(300, |g| {
+        let msg = arb_msg(g);
+        let frame = encode_frame(&msg);
+        let cut = g.usize_in(0..frame.len());
+        match decode_frame(&frame[..cut]) {
+            Err(WireError::Truncated) => Ok(()),
+            Err(e) => Err(format!("{}: cut {cut} gave {e}", msg.name())),
+            Ok(_) => Err(format!("{}: truncated frame decoded", msg.name())),
+        }
+    });
+}
+
+#[test]
+fn random_single_byte_corruption_is_rejected() {
+    prop::check(400, |g| {
+        let msg = arb_msg(g);
+        let mut frame = encode_frame(&msg);
+        let pos = g.usize_in(0..frame.len());
+        let flip = (g.usize_in(1..256)) as u8; // never a no-op
+        frame[pos] ^= flip;
+        // decode must never panic; CRC-32 catches any single-byte flip
+        // that survives the structural header checks
+        prop::assert_prop!(
+            decode_frame(&frame).is_err(),
+            "{}: flip {flip:#x} at {pos} went undetected",
+            msg.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    prop::check(500, |g| {
+        let n = g.usize_in(0..200);
+        let bytes: Vec<u8> = (0..n).map(|_| g.u64() as u8).collect();
+        let _ = decode_frame(&bytes); // outcome irrelevant; must not panic
+        let mut cur = std::io::Cursor::new(bytes);
+        let _ = wire::read_frame(&mut cur);
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_version_and_tag_are_typed_errors() {
+    let frame = encode_frame(&Msg::Shutdown { reason: "x".into() });
+    for v in (0..=255u8).filter(|&v| v != VERSION) {
+        let mut f = frame.clone();
+        f[2] = v;
+        assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadVersion(v));
+    }
+    for tag in [0u8, 13, 42, 255] {
+        let mut f = frame.clone();
+        f[3] = tag;
+        assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadTag(tag));
+    }
+}
+
+#[test]
+fn hostile_length_fields_do_not_allocate_or_panic() {
+    // outer length: larger than the cap
+    let frame = encode_frame(&Msg::Hello { name: "h".into(), protocol: 1 });
+    let mut f = frame.clone();
+    f[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    assert_eq!(
+        decode_frame(&f).unwrap_err(),
+        WireError::TooLarge(MAX_PAYLOAD + 1)
+    );
+    // inner vector length: claims 1 GiB of f32s inside a tiny payload;
+    // must be rejected by the pre-allocation bound check (as Malformed),
+    // not by an OOM or a checksum-only failure. Build the frame by hand
+    // with a correct CRC so the length check is what trips.
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&3u32.to_le_bytes()); // round
+    payload.extend_from_slice(&7u32.to_le_bytes()); // client
+    payload.extend_from_slice(&(1u32 << 28).to_le_bytes()); // theta len (!)
+    let mut f = Vec::new();
+    f.extend_from_slice(&wire::MAGIC);
+    f.push(VERSION);
+    f.push(4); // ModelSync
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(&payload);
+    let crc = wire::crc32(&f);
+    f.extend_from_slice(&crc.to_le_bytes());
+    assert!(matches!(
+        decode_frame(&f).unwrap_err(),
+        WireError::Malformed(_)
+    ));
+}

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Diff an in-process run record against a networked (serve) record.
+
+The bit-identity contract of heron-net: per-round train_loss, eval_metric,
+and analytic comm_bytes_cum must match EXACTLY (float bit patterns
+included), as must the analytic summary counters. Wall-clock fields and
+measured wire counters are expected to differ and are reported, not
+compared.
+
+Usage: diff_net_metrics.py <inproc.json> <net.json>
+Exits non-zero on any mismatch.
+"""
+
+import json
+import struct
+import sys
+
+COMPARED_SUMMARY = ["comm_bytes", "client_flops", "peak_mem_bytes",
+                    "queue_enqueued", "queue_dropped"]
+
+
+def bits(x):
+    """f64 bit pattern — exact comparison, NaN-safe."""
+    return struct.pack("<d", float(x))
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    with open(sys.argv[1]) as f:
+        a = json.load(f)
+    with open(sys.argv[2]) as f:
+        b = json.load(f)
+
+    failures = []
+    ra, rb = a["rounds"], b["rounds"]
+    if len(ra) != len(rb):
+        failures.append(f"round count: {len(ra)} vs {len(rb)}")
+    for i, (x, y) in enumerate(zip(ra, rb)):
+        for key in ("train_loss", "eval_metric", "comm_bytes_cum"):
+            if bits(x[key]) != bits(y[key]):
+                failures.append(
+                    f"round {i} {key}: {x[key]!r} vs {y[key]!r}")
+    for key in COMPARED_SUMMARY:
+        x, y = a["summary"].get(key), b["summary"].get(key)
+        if x is None or y is None or bits(x) != bits(y):
+            failures.append(f"summary {key}: {x!r} vs {y!r}")
+
+    wire_sent = b["summary"].get("wire_bytes_sent", 0)
+    wire_recv = b["summary"].get("wire_bytes_recv", 0)
+    print(f"compared {len(ra)} rounds + {len(COMPARED_SUMMARY)} summary keys")
+    print(f"analytic comm_bytes: {a['summary'].get('comm_bytes'):.0f}")
+    print(f"measured wire bytes (networked run): "
+          f"{wire_sent:.0f} sent / {wire_recv:.0f} recv")
+
+    if failures:
+        print("\nMISMATCH — networked run diverged from in-process run:")
+        for line in failures:
+            print(f"  {line}")
+        sys.exit(1)
+    print("OK: networked trajectory is bit-identical to in-process")
+
+
+if __name__ == "__main__":
+    main()
