@@ -102,6 +102,22 @@ fn main() -> Result<()> {
         std::hint::black_box(&msg);
     });
 
+    // seeds-mode server replay: reconstruct θ' over 64k params from a
+    // recorded (seed, per-probe gscales) pair — the per-step server cost
+    // `--zo_wire seeds` trades for the eliminated θ upload
+    let theta64: Vec<f32> = PerturbStream::new(13).take_vec(1 << 16);
+    let gscales = [0.125f32, -0.0625];
+    let mut replay_out = Vec::new();
+    b.run("zo_replay_64k", || {
+        heron_sfl::zo::stream::replay_update(
+            &theta64,
+            0x5EED,
+            &gscales,
+            &mut replay_out,
+        );
+        std::hint::black_box(&replay_out);
+    });
+
     Bench::header("runtime entries (cnn_c1, batch 32)");
     let variant = "cnn_c1";
     session.warmup(

@@ -10,6 +10,7 @@
 //! two forwards for n_p = 2).
 
 use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::config::ZoWireMode;
 use crate::runtime::manifest::VariantSpec;
 
 pub const BYTES_F32: u64 = 4;
@@ -31,6 +32,13 @@ pub struct CostBook {
     /// client peak memory bytes during a local update (per batch)
     pub peak_mem_bytes: u64,
     pub algorithm: Algorithm,
+    /// ZO probes per step (n_p) the book was built for
+    pub n_pert: u64,
+    /// wire mode the sync formula models (`theta` unless rebound via
+    /// [`Self::with_zo_wire`])
+    pub zo_wire: ZoWireMode,
+    /// local steps per round (h) — sizes the seeds-mode upload record
+    pub local_steps: u64,
 }
 
 impl CostBook {
@@ -75,7 +83,26 @@ impl CostBook {
             flops_per_step,
             peak_mem_bytes,
             algorithm: alg,
+            n_pert,
+            zo_wire: ZoWireMode::Theta,
+            local_steps: 0,
         }
+    }
+
+    /// Rebind the book to a `--zo_wire` mode. `Seeds` swaps the HERON
+    /// upload leg of the round sync for the per-step
+    /// seed + per-probe-scalar record the server replays — the lean
+    /// numbers Table I's `2(|θc|+|θa|)` sync collapses to.
+    pub fn with_zo_wire(mut self, mode: ZoWireMode, local_steps: u64) -> Self {
+        self.zo_wire = mode;
+        self.local_steps = local_steps;
+        self
+    }
+
+    /// Bytes of the seeds-mode upload record for one round: per local
+    /// step, one i32 seed plus n_p f32 gradient scalars (paper Remark 4).
+    pub fn zo_record_bytes(&self) -> u64 {
+        self.local_steps * (BYTES_F32 + self.n_pert.max(1) * BYTES_F32)
     }
 
     /// Communication bytes for one client local step (paper Table I row,
@@ -92,10 +119,16 @@ impl CostBook {
     }
 
     /// Per-round model synchronization bytes (download init + upload
-    /// update).
+    /// update). In the HERON `seeds` wire mode the upload leg is the
+    /// replay record instead of θ_l — the measured wire bytes then drop
+    /// below the analytic theta-mode sync, which is the paper's title
+    /// claim end to end.
     pub fn comm_per_round_sync(&self) -> u64 {
         match self.algorithm {
             Algorithm::SflV1 | Algorithm::SflV2 => 2 * self.client_param_bytes,
+            Algorithm::Heron if self.zo_wire == ZoWireMode::Seeds => {
+                self.local_param_bytes + self.zo_record_bytes()
+            }
             _ => 2 * self.local_param_bytes,
         }
     }
@@ -248,6 +281,33 @@ mod tests {
         let cse = CostBook::new(&v, Algorithm::CseFsl, 1);
         assert_eq!(sfl.comm_per_round_sync(), 2 * 5000 * 4);
         assert_eq!(cse.comm_per_round_sync(), 2 * 5200 * 4);
+    }
+
+    #[test]
+    fn seeds_wire_mode_is_lean_and_exact() {
+        let v = fake_variant();
+        let h = 4u64;
+        let np = 2u64;
+        let theta = CostBook::new(&v, Algorithm::Heron, np);
+        let seeds = CostBook::new(&v, Algorithm::Heron, np)
+            .with_zo_wire(ZoWireMode::Seeds, h);
+        // exact lean formula: θ_l down + h·(seed + n_p scalars) up
+        assert_eq!(seeds.zo_record_bytes(), h * (4 + np * 4));
+        assert_eq!(
+            seeds.comm_per_round_sync(),
+            seeds.local_param_bytes + h * (4 + np * 4)
+        );
+        // strictly below the theta-mode 2(|θc|+|θa|) sync — and the
+        // upload leg alone beats a full θ_l upload
+        assert!(seeds.comm_per_round_sync() < theta.comm_per_round_sync());
+        assert!(seeds.zo_record_bytes() < seeds.local_param_bytes);
+        // other algorithms ignore the binding (no replay to speak of)
+        let cse = CostBook::new(&v, Algorithm::CseFsl, 1)
+            .with_zo_wire(ZoWireMode::Seeds, h);
+        assert_eq!(
+            cse.comm_per_round_sync(),
+            CostBook::new(&v, Algorithm::CseFsl, 1).comm_per_round_sync()
+        );
     }
 
     #[test]

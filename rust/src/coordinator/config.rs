@@ -8,6 +8,39 @@ use crate::util::json::Value;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// What HERON clients put on the wire after their local phase
+/// (`--zo_wire`). The θ trajectory is bit-identical in both modes
+/// (pinned in `rust/tests/net_loopback.rs`); only the upload payload and
+/// the comm accounting change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ZoWireMode {
+    /// Upload the updated θ_l (the general protocol; every algorithm).
+    #[default]
+    Theta,
+    /// HERON only: upload per-step `(seed, per-probe gradient scalars)`
+    /// and let the server *replay* the ZO update through
+    /// `zo::stream::replay_update` (paper §IV / Remark 4) — O(h·n_p)
+    /// floats up instead of |θ_c|+|θ_a|.
+    Seeds,
+}
+
+impl ZoWireMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ZoWireMode::Theta => "theta",
+            ZoWireMode::Seeds => "seeds",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "theta" => Some(ZoWireMode::Theta),
+            "seeds" | "seed" | "lean" => Some(ZoWireMode::Seeds),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// artifact variant (e.g. "cnn_c1", "gpt2micro_c2_a1")
@@ -43,6 +76,9 @@ pub struct RunConfig {
     /// never drops; nonzero bounds the queue so backpressure drops — and,
     /// on the networked path, typed NACKs — become observable)
     pub queue_capacity: usize,
+    /// HERON upload wire mode: `theta` (full θ_l up) or `seeds`
+    /// (seed + per-probe scalars up, server replays the update)
+    pub zo_wire: ZoWireMode,
 }
 
 impl Default for RunConfig {
@@ -68,6 +104,7 @@ impl Default for RunConfig {
             eval_holdout: 1 << 20,
             workers: 0,
             queue_capacity: 0,
+            zo_wire: ZoWireMode::Theta,
         }
     }
 }
@@ -89,6 +126,15 @@ impl RunConfig {
         }
         if self.dataset_size < self.n_clients as u64 {
             bail!("dataset smaller than client count");
+        }
+        if self.zo_wire == ZoWireMode::Seeds
+            && self.algorithm != Algorithm::Heron
+        {
+            bail!(
+                "--zo_wire seeds replays a ZO update record and therefore \
+                 requires the HERON algorithm (got {})",
+                self.algorithm.name()
+            );
         }
         Ok(())
     }
@@ -141,6 +187,10 @@ impl RunConfig {
             "eval_every" => self.eval_every = v.parse()?,
             "eval_holdout" => self.eval_holdout = v.parse()?,
             "queue_capacity" => self.queue_capacity = v.parse()?,
+            "zo_wire" => {
+                self.zo_wire = ZoWireMode::parse(v)
+                    .with_context(|| format!("unknown zo_wire mode {v}"))?
+            }
             // non-config CLI flags pass through silently
             _ => {}
         }
@@ -198,6 +248,7 @@ impl RunConfig {
             ("eval_holdout", Value::str(&self.eval_holdout.to_string())),
             ("workers", Value::str(&self.workers.to_string())),
             ("queue_capacity", Value::str(&self.queue_capacity.to_string())),
+            ("zo_wire", Value::str(self.zo_wire.name())),
         ];
         match self.scheme {
             Scheme::Iid => pairs.push(("iid", Value::str("true"))),
@@ -222,7 +273,7 @@ impl RunConfig {
             self.workers.to_string()
         };
         format!(
-            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | workers={w} | {:?}",
+            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | wire={} workers={w} | {:?}",
             self.algorithm.name(),
             self.variant,
             self.n_clients,
@@ -234,6 +285,7 @@ impl RunConfig {
             self.lr_server,
             self.mu,
             self.n_pert,
+            self.zo_wire.name(),
             self.scheme,
         )
     }
@@ -307,6 +359,7 @@ mod tests {
             run_seed: 987654321,
             eval_holdout: (1 << 21) + 17,
             queue_capacity: 5,
+            zo_wire: ZoWireMode::Theta,
             ..Default::default()
         };
         for _ in 0..2 {
@@ -335,9 +388,29 @@ mod tests {
             assert_eq!(back.run_seed, cfg.run_seed);
             assert_eq!(back.eval_holdout, cfg.eval_holdout);
             assert_eq!(back.queue_capacity, cfg.queue_capacity);
-            // second lap exercises the IID branch
+            assert_eq!(back.zo_wire, cfg.zo_wire);
+            // second lap exercises the IID branch + the seeds wire mode
             cfg.scheme = Scheme::Iid;
+            cfg.algorithm = Algorithm::Heron;
+            cfg.zo_wire = ZoWireMode::Seeds;
         }
+    }
+
+    #[test]
+    fn zo_wire_parses_and_gates_on_heron() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--zo_wire", "seeds"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.zo_wire, ZoWireMode::Seeds);
+        cfg.validate().unwrap(); // default algorithm is HERON
+        cfg.algorithm = Algorithm::CseFsl;
+        assert!(cfg.validate().is_err(), "seeds mode requires HERON");
+        cfg.zo_wire = ZoWireMode::Theta;
+        cfg.validate().unwrap();
+        assert!(ZoWireMode::parse("nope").is_none());
+        assert_eq!(ZoWireMode::parse("lean"), Some(ZoWireMode::Seeds));
     }
 
     #[test]

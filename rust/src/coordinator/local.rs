@@ -10,8 +10,11 @@
 //!
 //! * per-step randomness is `step_seed(run_seed, round, client, step)` —
 //!   no ambient RNG, so it does not matter which process computes it;
-//! * every entry invocation goes through the same `Session` code path
-//!   (`invoke_into` on the hot loop, `Call` on the cold locked exchange);
+//! * every model call goes through the typed
+//!   [`crate::runtime::api::ClientRuntime`] surface resolved from the
+//!   same `Session` — no entry-name strings, no per-call argument
+//!   marshalling, and the ZO step hands back its per-probe
+//!   [`ZoStepRecord`] (the lean `--zo_wire seeds` upload);
 //! * smashed uploads leave through the [`SmashedSink`] abstraction — the
 //!   in-process sink is the Main-Server's [`ServerQueue`], the networked
 //!   sink encodes a `SmashedBatch` wire message — and the server re-sorts
@@ -25,11 +28,12 @@ use crate::coordinator::round::OptState;
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::{Loader, Task};
 use crate::data::partition::Partition;
-use crate::runtime::manifest::{EntrySpec, VariantSpec};
+use crate::runtime::api::{ClientRuntime, ZoArgs, ZoStepRecord};
+use crate::runtime::manifest::VariantSpec;
 use crate::runtime::tensor::{TensorRef, TensorValue};
-use crate::runtime::{Call, Session};
+use crate::runtime::Session;
 use crate::util::rng::mix64;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Everything a client owns across rounds: its data shard's loader, its
 /// optimizer states, and the last uploaded batch (FSL-SAGE alignment).
@@ -118,6 +122,12 @@ pub struct LocalOutcome {
     /// per-step ZO seeds (the lean `ZoUpdate` wire record; FO algorithms
     /// carry the same counter-derived stream positions)
     pub seeds: Vec<i32>,
+    /// per-step, per-probe gradient scalars, flattened `h × n_p`
+    /// (HERON only; empty for FO algorithms). Together with `seeds`
+    /// this is the full `--zo_wire seeds` replay record: any holder of
+    /// the round's broadcast θ reproduces `theta` bit-identically via
+    /// `zo::replay_trajectory`.
+    pub gscales: Vec<f32>,
     pub comm_bytes: u64,
     pub flops: u64,
     pub lane: ClientLane,
@@ -173,36 +183,15 @@ fn y_slice(task: Task, loader: &Loader) -> &[i32] {
     }
 }
 
-/// Build the positional input list for `espec` from named borrowed
-/// buffers. Scalars travel by value; a spec input with no binding (e.g.
-/// optimizer-state tensors the native manifest never emits) is an error.
-pub fn bind_entry_inputs<'a>(
-    espec: &EntrySpec,
-    named: &[(&str, TensorRef<'a>)],
-) -> Result<Vec<TensorRef<'a>>> {
-    let mut out = Vec::with_capacity(espec.inputs.len());
-    for spec in &espec.inputs {
-        let r = named
-            .iter()
-            .find(|(n, _)| *n == spec.name)
-            .map(|(_, r)| *r)
-            .with_context(|| {
-                format!("{}: no binding for input {}", espec.name, spec.name)
-            })?;
-        out.push(r);
-    }
-    Ok(out)
-}
-
 /// One client's full local phase (h steps + uploads), self-contained so it
 /// can run on any worker thread or in a remote client process. Mutates
 /// only this client's state; all cross-client effects go through the
 /// smashed sink and the returned outcome.
 ///
 /// The loop is allocation-lean: every input is a borrowed view (θ, the
-/// loader's batch buffers, the frozen base), outputs land in the two
-/// scratch arenas below, and the updated θ is swapped out of its slot —
-/// the same two parameter buffers ping-pong through all h steps.
+/// loader's batch buffers, the frozen base), the updated θ ping-pongs
+/// between `theta` and the `out` arena (a swap, never a copy), and the
+/// ZO probe record reuses one [`ZoStepRecord`] across all h steps.
 pub fn client_local_phase(
     ctx: &LocalCtx,
     ci: usize,
@@ -213,73 +202,68 @@ pub fn client_local_phase(
     let mut lane = ClientLane::new(&ctx.profile);
     let mut losses = Vec::with_capacity(ctx.cfg.local_steps);
     let mut seeds = Vec::with_capacity(ctx.cfg.local_steps);
+    let mut gscales = Vec::new();
     let mut comm_bytes = 0u64;
     let mut flops = 0u64;
     let zo = ctx.cfg.algorithm == Algorithm::Heron;
-    let entry = if zo { "zo_step" } else { "fo_step" };
     if !matches!(cs.opt_local, OptState::None) {
         bail!(
             "local phase: stateful optimizers are not wired through the \
-             native entries (manifest opt_state must be 0)"
+             typed runtime (manifest opt_state must be 0)"
         );
     }
-    let vspec = ctx.session.variant(&ctx.cfg.variant)?;
-    let step_espec = vspec.entry(entry)?;
-    let fwd_espec = vspec.entry("client_fwd")?;
-    let ti = step_espec.output_pos("theta_l")?;
-    let li = step_espec.output_pos("loss")?;
-    let si = fwd_espec.output_pos("smashed")?;
+    let rt = ctx.session.client_runtime(&ctx.cfg.variant)?;
     // per-client scratch arenas, reused across all h steps
-    let mut outs: Vec<TensorValue> = Vec::new();
-    let mut fwd_outs: Vec<TensorValue> = Vec::new();
+    let mut out: Vec<f32> = Vec::new();
+    let mut fwd_out: Vec<f32> = Vec::new();
+    let mut rec = ZoStepRecord::default();
+    if zo {
+        gscales.reserve(ctx.cfg.local_steps * ctx.cfg.n_pert.max(1));
+    }
 
     for step in 1..=ctx.cfg.local_steps {
         cs.loader.next_batch();
         let seed = step_seed(ctx.cfg, ctx.round_idx, ci, step);
         seeds.push(seed);
-        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(8);
-        if let Some(b) = ctx.base {
-            named.push(("base", TensorRef::F32(b)));
-        }
-        named.push(("theta_l", TensorRef::F32(&theta)));
-        named.push(("x", x_ref(ctx.task, &cs.loader)));
-        named.push(("y", TensorRef::I32(y_slice(ctx.task, &cs.loader))));
-        named.push(("lr", TensorRef::ScalarF32(ctx.cfg.lr_client)));
-        if zo {
-            named.push(("seed", TensorRef::ScalarI32(seed)));
-            named.push(("mu", TensorRef::ScalarF32(ctx.cfg.mu)));
-            named.push((
-                "n_pert",
-                TensorRef::ScalarI32(ctx.cfg.n_pert as i32),
-            ));
-        }
-        let inputs = bind_entry_inputs(step_espec, &named)?;
-        ctx.session
-            .invoke_into(&ctx.cfg.variant, entry, &inputs, &mut outs)?;
-        match &mut outs[ti] {
-            TensorValue::F32(v) => std::mem::swap(&mut theta, v),
-            other => bail!(
-                "{entry}: theta_l output has wrong dtype {:?}",
-                other.dtype()
-            ),
-        }
-        losses.push(outs[li].scalar_f32()? as f64);
+        let x = x_ref(ctx.task, &cs.loader);
+        let y = y_slice(ctx.task, &cs.loader);
+        let loss = if zo {
+            rt.zo_step(
+                ctx.base,
+                &theta,
+                x,
+                y,
+                ZoArgs {
+                    seed,
+                    mu: ctx.cfg.mu,
+                    lr: ctx.cfg.lr_client,
+                    n_pert: ctx.cfg.n_pert as i32,
+                },
+                &mut out,
+                &mut rec,
+            )?;
+            gscales.extend_from_slice(&rec.gscales);
+            rec.loss
+        } else {
+            rt.fo_step(ctx.base, &theta, x, y, ctx.cfg.lr_client, &mut out)?
+        };
+        std::mem::swap(&mut theta, &mut out);
+        losses.push(loss as f64);
         flops += ctx.book.flops_per_step;
         lane.compute(ctx.book.flops_per_step);
 
         if step % ctx.cfg.upload_every == 0 {
             upload_smashed(
                 ctx,
+                rt,
                 ci,
                 cs,
                 &theta,
-                fwd_espec,
-                si,
                 step,
                 sink,
                 &mut lane,
                 &mut comm_bytes,
-                &mut fwd_outs,
+                &mut fwd_out,
             )?;
         }
     }
@@ -288,50 +272,35 @@ pub fn client_local_phase(
         theta,
         losses,
         seeds,
+        gscales,
         comm_bytes,
         flops,
         lane,
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn upload_smashed(
     ctx: &LocalCtx,
+    rt: &dyn ClientRuntime,
     ci: usize,
     cs: &mut ClientState,
     theta: &[f32],
-    fwd_espec: &EntrySpec,
-    smashed_idx: usize,
     step: usize,
     sink: &dyn SmashedSink,
     lane: &mut ClientLane,
     comm_bytes: &mut u64,
-    fwd_outs: &mut Vec<TensorValue>,
+    fwd_out: &mut Vec<f32>,
 ) -> Result<()> {
-    let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(3);
-    if let Some(b) = ctx.base {
-        named.push(("base", TensorRef::F32(b)));
-    }
-    named.push(("theta_c", TensorRef::F32(&theta[..ctx.nc])));
-    named.push(("x", x_ref(ctx.task, &cs.loader)));
-    let inputs = bind_entry_inputs(fwd_espec, &named)?;
-    ctx.session.invoke_into(
-        &ctx.cfg.variant,
-        "client_fwd",
-        &inputs,
-        fwd_outs,
+    rt.client_fwd(
+        ctx.base,
+        &theta[..ctx.nc],
+        x_ref(ctx.task, &cs.loader),
+        fwd_out,
     )?;
-    // the sink owns the smashed batch, so move it out of its slot (the
-    // slot re-grows a buffer on the next upload)
-    let smashed = match std::mem::replace(
-        &mut fwd_outs[smashed_idx],
-        TensorValue::ScalarF32(0.0),
-    ) {
-        TensorValue::F32(v) => v,
-        other => bail!(
-            "client_fwd: smashed output has wrong dtype {:?}",
-            other.dtype()
-        ),
-    };
+    // the sink owns the smashed batch, so move it out of the arena (the
+    // buffer re-grows on the next upload)
+    let smashed = std::mem::take(fwd_out);
     // the upload forward is part of the protocol but NOT an extra
     // training cost in Table I (the paper's accounting charges the ZO /
     // FO step); we still charge its flops to the client sim for latency
@@ -366,8 +335,8 @@ fn upload_smashed(
 // ---------------------------------------------------------------------------
 
 /// Client forward to the cut layer on the loader's current batch.
-/// Returns the smashed activations (cold `Call` path — the locked
-/// exchange is the baselines' bottleneck by design, not ours).
+/// Returns the smashed activations (cold path — the locked exchange is
+/// the baselines' bottleneck by design, not ours).
 pub fn locked_client_fwd(
     session: &Session,
     variant: &str,
@@ -375,19 +344,17 @@ pub fn locked_client_fwd(
     theta_c: &[f32],
     x: &TensorValue,
 ) -> Result<Vec<f32>> {
-    let mut c = Call::new(session, variant, "client_fwd");
-    if let Some(b) = base {
-        c = c.arg("base", b.to_vec());
-    }
-    let mut outs = c
-        .arg("theta_c", theta_c.to_vec())
-        .arg("x", x.clone())
-        .run()?;
-    outs.remove("smashed").context("smashed")?.into_f32()
+    let rt = session.client_runtime(variant)?;
+    let mut out = Vec::new();
+    rt.client_fwd(base, theta_c, x.view(), &mut out)?;
+    Ok(out)
 }
 
 /// Client backprop step from the relayed cut gradient. Returns the
-/// updated θ_c and threads the client optimizer state.
+/// updated θ_c. The native manifests are stateless (`opt_state == 0`),
+/// so a live Adam state here means a foreign manifest the typed runtime
+/// cannot thread — fail loudly instead of silently dropping it.
+#[allow(clippy::too_many_arguments)]
 pub fn locked_client_bp(
     session: &Session,
     variant: &str,
@@ -398,34 +365,23 @@ pub fn locked_client_bp(
     g_smashed: Vec<f32>,
     lr: f32,
 ) -> Result<Vec<f32>> {
-    let mut c = Call::new(session, variant, "client_bp_step");
-    if let Some(b) = base {
-        c = c.arg("base", b.to_vec());
+    if !matches!(opt_c, OptState::None) {
+        bail!(
+            "locked client bp: stateful optimizers are not wired through \
+             the typed runtime (manifest opt_state must be 0)"
+        );
     }
-    c = c.arg("theta_c", theta_c.to_vec());
-    if let OptState::Adam { m, v, t } = &*opt_c {
-        c = c
-            .arg("opt_m", m.clone())
-            .arg("opt_v", v.clone())
-            .arg("opt_t", *t);
-    }
-    let mut outs = c
-        .arg("x", x)
-        .arg("g_smashed", g_smashed)
-        .arg("lr", lr)
-        .run()?;
-    let new_c = outs
-        .remove("theta_c")
-        .context("bp theta_c")?
-        .into_f32()?;
-    take_opt(&mut outs, opt_c)?;
-    Ok(new_c)
+    let rt = session.client_runtime(variant)?;
+    let mut out = Vec::new();
+    rt.client_bp_step(base, theta_c, x.view(), &g_smashed, lr, &mut out)?;
+    Ok(out)
 }
 
 /// FSL-SAGE: realign the aux head of `theta` against the server's cut
 /// gradient for the client's last uploaded batch. Runs on whichever
 /// process holds `last_upload` (the driver in-process, the remote client
-/// over the wire) — same entry, same inputs, same bits.
+/// over the wire) — same model method, same inputs, same bits.
+#[allow(clippy::too_many_arguments)]
 pub fn aux_align_apply(
     session: &Session,
     variant: &str,
@@ -436,40 +392,8 @@ pub fn aux_align_apply(
     g_smashed: Vec<f32>,
     lr: f32,
 ) -> Result<Vec<f32>> {
-    let mut c = Call::new(session, variant, "aux_align");
-    if let Some(b) = base {
-        c = c.arg("base", b.to_vec());
-    }
-    let mut outs = c
-        .arg("theta_l", theta)
-        .arg("smashed", smashed)
-        .arg("y", TensorValue::I32(y))
-        .arg("g_smashed", g_smashed)
-        .arg("lr", lr)
-        .run()?;
-    outs.remove("theta_l")
-        .context("aux_align theta_l")?
-        .into_f32()
-}
-
-/// Thread Adam state out of an entry's outputs (no-op for `OptState::None`).
-pub fn take_opt(
-    outs: &mut std::collections::HashMap<String, TensorValue>,
-    opt: &mut OptState,
-) -> Result<()> {
-    if let OptState::Adam { m, v, t } = opt {
-        *m = outs
-            .remove("opt_m")
-            .context("opt_m output")?
-            .into_f32()?;
-        *v = outs
-            .remove("opt_v")
-            .context("opt_v output")?
-            .into_f32()?;
-        *t = outs
-            .remove("opt_t")
-            .context("opt_t output")?
-            .scalar_f32()?;
-    }
-    Ok(())
+    let rt = session.client_runtime(variant)?;
+    let mut out = Vec::new();
+    rt.aux_align(base, &theta, &smashed, &y, &g_smashed, lr, &mut out)?;
+    Ok(out)
 }

@@ -47,17 +47,22 @@
 //! composes the *same* methods around wire messages, which is why a
 //! TCP-loopback run is bit-identical to the in-process trajectory.
 //!
-//! ## Zero-allocation hot loop
+//! ## Typed zero-allocation hot loop
 //!
-//! The decoupled local phase and the server drain run through
-//! [`Session::invoke_into`]: inputs are borrowed [`TensorRef`] views of
-//! the loader's reused batch buffers, the client's θ, and the frozen base
-//! blob, and outputs land in per-client scratch arenas whose buffers are
-//! reused across all h steps (the updated θ is *swapped* out of its slot,
-//! not copied). The driver itself allocates nothing parameter-sized per
-//! step, and the models allocate no per-probe vectors. Results are
-//! bit-identical to the allocating `Call` path, which the cold branches
-//! (SFLV1/V2 locked exchange, alignment, eval) still use.
+//! Every model call — the decoupled local phase, the server drain, the
+//! locked exchange, alignment, eval — goes through the typed
+//! [`crate::runtime::api::ClientRuntime`] surface resolved once per
+//! phase from the session: no entry-name strings, no per-call argument
+//! binding, concrete types end to end (the acceptance contract is that
+//! no `invoke`/`invoke_into` with a hard-coded entry name remains in
+//! `coordinator/` or `net/`). Inputs are borrowed views of the loader's
+//! reused batch buffers, the client's θ, and the frozen base blob;
+//! outputs land in per-client scratch arenas reused across all h steps
+//! (the updated θ is *swapped* between two ping-pong buffers, never
+//! copied). The driver allocates nothing parameter-sized per step, and
+//! the models allocate no per-probe vectors. Results are bit-identical
+//! to the name-based `Session::invoke` path, which remains for artifact
+//! validation and analysis tooling.
 
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::aggregator::fedavg_into;
@@ -70,8 +75,8 @@ use crate::coordinator::local::{
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::Task;
 use crate::metrics::{RoundRecord, RunRecord};
-use crate::runtime::tensor::{TensorRef, TensorValue};
-use crate::runtime::{Call, Session};
+use crate::runtime::tensor::TensorValue;
+use crate::runtime::Session;
 use crate::util::pool;
 use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, Context, Result};
@@ -119,8 +124,9 @@ pub struct Driver<'s> {
     round_idx: usize,
     // reusable aggregation buffer
     agg_buf: Vec<f32>,
-    // reusable output slots for the server-phase invoke_into calls
-    inv_outs: Vec<TensorValue>,
+    // reusable server-phase arenas: θ_s' ping-pong + cut-gradient buffer
+    srv_out: Vec<f32>,
+    srv_cut: Vec<f32>,
 }
 
 impl<'s> Driver<'s> {
@@ -162,7 +168,8 @@ impl<'s> Driver<'s> {
         let opt_state = v.opt_state;
         Ok(Driver {
             session,
-            book: CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64),
+            book: CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
+                .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64),
             task,
             base,
             theta_l,
@@ -179,7 +186,8 @@ impl<'s> Driver<'s> {
             ns,
             round_idx: 0,
             agg_buf: vec![0.0; nl],
-            inv_outs: Vec::new(),
+            srv_out: Vec::new(),
+            srv_cut: Vec::new(),
             cfg,
         })
     }
@@ -315,7 +323,11 @@ impl<'s> Driver<'s> {
             ci,
             theta,
             losses: step_losses,
+            // in-process the client's θ is absorbed directly; the seeds +
+            // gscales replay record is exercised by the networked
+            // `--zo_wire seeds` path (pinned equal in net_loopback tests)
             seeds: _,
+            gscales: _,
             comm_bytes,
             flops,
             lane,
@@ -396,6 +408,7 @@ impl<'s> Driver<'s> {
 
         // server step on this client's replica (V1) or the shared model
         // (V2); returns the cut gradient
+        let rt = self.session.client_runtime(&self.cfg.variant)?;
         let (theta_s, opt_s) = match self.cfg.algorithm {
             Algorithm::SflV1 => {
                 let (t, o) = &mut self.server_replicas[ci];
@@ -403,40 +416,24 @@ impl<'s> Driver<'s> {
             }
             _ => (&mut self.theta_s, &mut self.opt_server),
         };
-        let mut souts = {
-            let mut c = Call::new(
-                self.session,
-                &self.cfg.variant,
-                "server_step_cutgrad",
+        if !matches!(opt_s, OptState::None) {
+            bail!(
+                "locked server exchange: stateful optimizers are not wired \
+                 through the typed runtime (manifest opt_state must be 0)"
             );
-            if let Some(b) = &self.base {
-                c = c.arg("base", b.clone());
-            }
-            c = c.arg("theta_s", theta_s.clone());
-            if let OptState::Adam { m, v, t } = &*opt_s {
-                c = c
-                    .arg("opt_m", m.clone())
-                    .arg("opt_v", v.clone())
-                    .arg("opt_t", *t);
-            }
-            c.arg("smashed", smashed)
-                .arg("y", TensorValue::I32(y))
-                .arg("lr", self.cfg.lr_server)
-                .run()?
-        };
-        *theta_s = souts
-            .remove("theta_s")
-            .context("server theta_s")?
-            .into_f32()?;
-        local::take_opt(&mut souts, opt_s)?;
-        let loss = souts
-            .remove("loss")
-            .context("server loss")?
-            .scalar_f32()? as f64;
-        let g_sm = souts
-            .remove("g_smashed")
-            .context("g_smashed")?
-            .into_f32()?;
+        }
+        let mut new_s = Vec::new();
+        let mut g_sm = Vec::new();
+        let loss = rt.server_step(
+            self.base.as_deref(),
+            theta_s,
+            &smashed,
+            &y,
+            self.cfg.lr_server,
+            Some(&mut g_sm),
+            &mut new_s,
+        )? as f64;
+        *theta_s = new_s;
         // training lock: the client waits for the server's fwd+bwd
         sim.client_blocked_on_server(ci, 3 * self.variant_server_flops());
         self.comm_bytes += self.book.cutgrad_bytes;
@@ -520,9 +517,10 @@ impl<'s> Driver<'s> {
         Ok(())
     }
 
-    /// Consume one queued smashed batch (Eq. 7) through the
-    /// zero-allocation invoke path: borrowed inputs, outputs into the
-    /// driver's reused slot vector, θ_s swapped (not copied) back.
+    /// Consume one queued smashed batch (Eq. 7) through the typed
+    /// runtime: borrowed inputs, θ_s' into the driver's reused arena and
+    /// swapped (not copied) back, the cut gradient moved out of its
+    /// reused buffer only on cut-grad steps.
     fn server_consume(
         &mut self,
         b: &SmashedBatch,
@@ -532,52 +530,29 @@ impl<'s> Driver<'s> {
         if !matches!(self.opt_server, OptState::None) {
             bail!(
                 "server drain: stateful optimizers are not wired through \
-                 the native entries (manifest opt_state must be 0)"
+                 the typed runtime (manifest opt_state must be 0)"
             );
         }
-        let entry = if want_cutgrad {
-            "server_step_cutgrad"
+        let rt = self.session.client_runtime(&self.cfg.variant)?;
+        let cut = if want_cutgrad {
+            Some(&mut self.srv_cut)
         } else {
-            "server_step"
+            None
         };
-        let session = self.session;
-        let espec = session.variant(&self.cfg.variant)?.entry(entry)?;
-        let ti = espec.output_pos("theta_s")?;
-        let mut named: Vec<(&str, TensorRef)> = Vec::with_capacity(5);
-        if let Some(base) = self.base.as_deref() {
-            named.push(("base", TensorRef::F32(base)));
-        }
-        named.push(("theta_s", TensorRef::F32(&self.theta_s)));
-        named.push(("smashed", TensorRef::F32(&b.smashed)));
-        named.push(("y", TensorRef::I32(&b.targets)));
-        named.push(("lr", TensorRef::ScalarF32(self.cfg.lr_server)));
-        let inputs = local::bind_entry_inputs(espec, &named)?;
-        session.invoke_into(
-            &self.cfg.variant,
-            entry,
-            &inputs,
-            &mut self.inv_outs,
+        rt.server_step(
+            self.base.as_deref(),
+            &self.theta_s,
+            &b.smashed,
+            &b.targets,
+            self.cfg.lr_server,
+            cut,
+            &mut self.srv_out,
         )?;
-        match &mut self.inv_outs[ti] {
-            TensorValue::F32(v) => std::mem::swap(&mut self.theta_s, v),
-            other => bail!(
-                "{entry}: theta_s output has wrong dtype {:?}",
-                other.dtype()
-            ),
-        }
+        std::mem::swap(&mut self.theta_s, &mut self.srv_out);
         sim.server_compute(3 * self.variant_server_flops());
         Ok(if want_cutgrad {
-            let gi = espec.output_pos("g_smashed")?;
-            match std::mem::replace(
-                &mut self.inv_outs[gi],
-                TensorValue::ScalarF32(0.0),
-            ) {
-                TensorValue::F32(v) => Some(v),
-                other => bail!(
-                    "{entry}: g_smashed output has wrong dtype {:?}",
-                    other.dtype()
-                ),
-            }
+            // the caller owns the gradient; the buffer re-grows next time
+            Some(std::mem::take(&mut self.srv_cut))
         } else {
             None
         })
@@ -663,24 +638,15 @@ impl<'s> Driver<'s> {
                 (TensorValue::I32(xs.clone()), xs)
             }
         };
-        let mut c = Call::new(self.session, &self.cfg.variant, "eval_full");
-        if let Some(b) = &self.base {
-            c = c.arg("base", b.clone());
-        }
-        let outs = c
-            .arg("theta_c", self.theta_l[..self.nc].to_vec())
-            .arg("theta_s", self.theta_s.clone())
-            .arg("x", x)
-            .arg("y", TensorValue::I32(y))
-            .run()?;
-        let s1 = outs
-            .get("stat1")
-            .context("stat1")?
-            .scalar_f32()? as f64;
-        let s2 = outs
-            .get("stat2")
-            .context("stat2")?
-            .scalar_f32()? as f64;
+        let rt = self.session.client_runtime(&self.cfg.variant)?;
+        let (s1, s2) = rt.eval_full(
+            self.base.as_deref(),
+            &self.theta_l[..self.nc],
+            &self.theta_s,
+            x.view(),
+            &y,
+        )?;
+        let (s1, s2) = (s1 as f64, s2 as f64);
         Ok(match self.task {
             Task::Vision => s1 / s2.max(1.0), // accuracy
             Task::Lm => (s1 / s2.max(1.0)).exp(), // perplexity

@@ -57,6 +57,8 @@ fn print_help() {
            --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
            --workers W (client-phase worker threads; 0 = all cores)\n\
            --queue_capacity Q (Main-Server queue bound; 0 = never drops)\n\
+           --zo_wire theta|seeds (HERON upload: full θ_l, or the lean\n\
+             seed+per-probe-scalar record the server replays)\n\
            --out results/dir (writes json+csv)\n\
          serve flags: all run flags, plus\n\
            --listen ADDR (default 127.0.0.1:7070; port 0 picks one)\n\
@@ -97,12 +99,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("saved to {out}/run.{{json,csv}}");
     }
     let st = session.stats();
+    // the training hot path runs through the typed ClientRuntime surface,
+    // which bypasses the per-invoke counters — these totals cover the
+    // name-based entry path (artifact/golden validation) plus the engine
+    // build and the feature-plan cache, not the step loop itself
     log::info!(
-        "runtime: {} invocations, exec {:.2}s, marshal {:.2}s, compile {:.2}s",
+        "session: compile {:.2}s | name-based entries: {} invocations, \
+         exec {:.2}s, marshal {:.2}s | feature cache: {} hits / {} misses",
+        st.compile_seconds,
         st.invocations,
         st.exec_seconds,
         st.marshal_seconds,
-        st.compile_seconds
+        st.feature_cache_hits,
+        st.feature_cache_misses,
     );
     Ok(())
 }

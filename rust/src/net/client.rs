@@ -16,7 +16,9 @@
 //!   `client_local_phase` for each owned participant (ascending id), with
 //!   a sink that ships `Smashed` frames and blocks on the `UploadAck`
 //!   (counting typed NACKs); reply `ZoUpdate` (per-step seeds + loss
-//!   scalars), `ModelSync` (updated θ), `LocalDone` (analytic counters).
+//!   scalars — plus the per-probe `gscales` in `--zo_wire seeds` mode,
+//!   which then **replaces** the θ upload), `ModelSync` (updated θ,
+//!   `theta` mode only), `LocalDone` (analytic counters).
 //! * `ModelSync{client: ci}` — locked SFLV1/V2 phase for `ci`: per step,
 //!   cut forward → `Smashed` → wait `CutGrad` → backprop; then θ up.
 //! * `AlignGrad` — FSL-SAGE: `aux_align` against the stored last upload,
@@ -24,7 +26,7 @@
 //! * `RoundSummary` — bookkeeping; `Shutdown` — return the report.
 
 use crate::coordinator::accounting::CostBook;
-use crate::coordinator::config::RunConfig;
+use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::eventsim::{DeviceProfile, WireRoundStats};
 use crate::coordinator::local::{
     self, build_client_states, ClientState, LocalCtx, SmashedSink,
@@ -150,7 +152,8 @@ pub fn run_client(
         None
     };
     let nc = v.size_client;
-    let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64);
+    let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
+        .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64);
     session.warmup(&cfg.variant, cfg.algorithm.required_entries())?;
     let mut states: Vec<ClientState> = build_client_states(&v, &cfg, task);
     let profile = DeviceProfile::edge_default();
@@ -213,17 +216,28 @@ pub fn run_client(
                         return Err(e.context("smashed upload failed"));
                     }
                     phases += 1;
+                    // the lean seeds mode replaces the θ upload with the
+                    // per-probe replay record; the server reconstructs θ
+                    // bit-identically from (seed, gscales)
+                    let lean = cfg.zo_wire == ZoWireMode::Seeds;
                     send(&t, &Msg::ZoUpdate {
                         client: ci as u32,
                         round,
                         seeds: out.seeds.clone(),
                         scalars: out.losses.iter().map(|&l| l as f32).collect(),
+                        gscales: if lean {
+                            out.gscales.clone()
+                        } else {
+                            Vec::new()
+                        },
                     })?;
-                    send(&t, &Msg::ModelSync {
-                        client: ci as u32,
-                        round,
-                        theta: out.theta.clone(),
-                    })?;
+                    if !lean {
+                        send(&t, &Msg::ModelSync {
+                            client: ci as u32,
+                            round,
+                            theta: out.theta.clone(),
+                        })?;
+                    }
                     send(&t, &Msg::LocalDone {
                         client: ci as u32,
                         round,

@@ -8,7 +8,7 @@
 //!
 //! * [`wire`] — versioned, length-prefixed, CRC-32-checksummed binary
 //!   codec with typed messages for the full SFL protocol (`Hello/Assign`,
-//!   `ZoUpdate{seeds, scalars}`, `SmashedBatch`, `CutGradient`,
+//!   `ZoUpdate{seeds, scalars, gscales}`, `SmashedBatch`, `CutGradient`,
 //!   `ModelSync`, `RoundBarrier`/`RoundSummary`, typed `UploadAck`
 //!   NACKs). Hand-rolled little-endian layout, like `util::json` — the
 //!   crate is vendored-offline, so no serde.
@@ -27,6 +27,14 @@
 //! analytic comm bytes, and final parameters — while the run summary
 //! additionally reports the *measured* wire traffic next to the analytic
 //! `CostBook` numbers.
+//!
+//! The lean `--zo_wire seeds` mode (HERON only) is the subsystem's
+//! headline: clients upload `ZoUpdate{seeds, gscales}` — one i32 seed
+//! plus n_p gradient scalars per local step — instead of the full θ_l,
+//! and the dispatcher replays the ZO update server-side
+//! (`zo::replay_trajectory`). The trajectory stays bit-identical to
+//! `theta` mode while the measured client→server bytes drop *below* the
+//! analytic `2(|θc|+|θa|)` ModelSync cost of Table I.
 
 pub mod client;
 pub mod server;

@@ -23,7 +23,13 @@
 //!    arrived, outcomes are absorbed **in participant order** — the same
 //!    barrier-merge the in-process fan-out performs — then the queue is
 //!    drained in `(round, client, step)` order and FSL-SAGE feedback is
-//!    relayed as `AlignGrad` round-trips.
+//!    relayed as `AlignGrad` round-trips. In `--zo_wire seeds` mode no
+//!    `ModelSync` comes back up at all: the `ZoUpdate` carries the
+//!    per-probe gradient scalars and the dispatcher *replays* each
+//!    client's h ZO steps from the broadcast θ
+//!    (`zo::replay_trajectory`), after pinning the record shape and the
+//!    counter-derived step seeds — bit-identical to the uploaded θ by
+//!    construction.
 //! 4. `Driver::finish_round` aggregates (Eq. 8) exactly as in-process;
 //!    the round closes with a `RoundSummary` carrying the train loss,
 //!    the analytic comm bytes, and the measured wire bytes.
@@ -33,9 +39,9 @@
 //! to `Driver::run_round` (asserted for all five algorithms in
 //! `rust/tests/net_loopback.rs`).
 
-use crate::coordinator::config::RunConfig;
+use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::eventsim::{ClientLane, DeviceProfile, WireRoundStats};
-use crate::coordinator::local::LocalOutcome;
+use crate::coordinator::local::{self, LocalOutcome};
 use crate::coordinator::round::Driver;
 use crate::coordinator::server_queue::SmashedBatch;
 use crate::metrics::RunRecord;
@@ -260,8 +266,51 @@ pub fn serve_transports(
 struct Collected {
     losses: Option<Vec<f64>>,
     seeds: Vec<i32>,
+    /// flattened h × n_p per-probe gradient scalars (seeds wire mode)
+    gscales: Vec<f32>,
     theta: Option<Vec<f32>>,
     done: Option<(u64, u64, f64, f64)>, // comm, flops, lane_time, lane_idle
+}
+
+/// Reconstruct one client's end-of-phase θ from its lean wire record
+/// (`--zo_wire seeds`): validate the record shape, check every step seed
+/// against the counter derivation the client must have used (a client
+/// cannot steer the replay off the deterministic trajectory), then
+/// replay h ZO updates from the round's broadcast θ. Bit-identical to
+/// the θ the client would have uploaded in `theta` mode.
+fn replay_theta(
+    cfg: &RunConfig,
+    round: usize,
+    ci: usize,
+    theta0: &[f32],
+    c: &Collected,
+) -> Result<Vec<f32>> {
+    let h = cfg.local_steps;
+    let np = cfg.n_pert.max(1);
+    if c.seeds.len() != h {
+        bail!(
+            "client {ci}: seeds-mode record has {} seeds, expected {h}",
+            c.seeds.len()
+        );
+    }
+    if c.gscales.len() != h * np {
+        bail!(
+            "client {ci}: seeds-mode record has {} gscales, expected {}",
+            c.gscales.len(),
+            h * np
+        );
+    }
+    for (s, &seed) in c.seeds.iter().enumerate() {
+        let want = local::step_seed(cfg, round, ci, s + 1);
+        if seed != want {
+            bail!(
+                "client {ci}: step {} seed {seed} != derived {want}",
+                s + 1
+            );
+        }
+    }
+    crate::zo::replay_trajectory(theta0, &c.seeds, np, &c.gscales)
+        .context("replaying seeds-mode update")
 }
 
 fn run_rounds(
@@ -300,6 +349,10 @@ fn run_rounds(
         if driver.cfg.algorithm.is_decoupled() {
             // The real parallelism width is the client-process count.
             sim.set_workers(n_conns.min(participants.len()).max(1));
+            let lean = driver.cfg.zo_wire == ZoWireMode::Seeds;
+            // seeds mode: keep the broadcast θ — it is the replay origin
+            let theta0: Vec<f32> =
+                if lean { driver.theta_l.clone() } else { Vec::new() };
             let active: Vec<usize> = (0..n_conns)
                 .filter(|&j| participants.iter().any(|&c| owner[c] == j))
                 .collect();
@@ -343,13 +396,14 @@ fn run_rounds(
                             },
                         })?;
                     }
-                    Msg::ZoUpdate { client, round: r, seeds, scalars } => {
+                    Msg::ZoUpdate { client, round: r, seeds, scalars, gscales } => {
                         check_round(r, r32, "ZoUpdate")?;
                         let ci = check_owned(owner, conn, client, "ZoUpdate")?;
                         let e = got.entry(ci).or_default();
                         e.losses =
                             Some(scalars.iter().map(|&l| l as f64).collect());
                         e.seeds = seeds;
+                        e.gscales = gscales;
                     }
                     Msg::ModelSync { client, round: r, theta } => {
                         check_round(r, r32, "ModelSync")?;
@@ -385,7 +439,7 @@ fn run_rounds(
 
             // ---- barrier merge, in participant order (as in-process) ----
             for &ci in &participants {
-                let c = got.remove(&ci).with_context(|| {
+                let mut c = got.remove(&ci).with_context(|| {
                     format!("client {ci} sent LocalDone data out of band")
                 })?;
                 let (comm_bytes, flops, lane_time, lane_idle) = c
@@ -394,15 +448,28 @@ fn run_rounds(
                 let mut lane = ClientLane::new(&profile);
                 lane.time = lane_time;
                 lane.idle = lane_idle;
+                // theta mode: the client uploaded θ. seeds mode: no θ
+                // ever crossed the wire — replay it from the record.
+                let theta = match (c.theta.take(), lean) {
+                    (Some(_), true) => bail!(
+                        "client {ci}: unexpected θ upload in seeds wire mode"
+                    ),
+                    (Some(t), false) => t,
+                    (None, true) => {
+                        replay_theta(&driver.cfg, round, ci, &theta0, &c)?
+                    }
+                    (None, false) => {
+                        bail!("client {ci}: missing θ")
+                    }
+                };
                 let outcome = LocalOutcome {
                     ci,
-                    theta: c
-                        .theta
-                        .with_context(|| format!("client {ci}: missing θ"))?,
+                    theta,
                     losses: c
                         .losses
                         .with_context(|| format!("client {ci}: missing losses"))?,
                     seeds: c.seeds,
+                    gscales: c.gscales,
                     comm_bytes,
                     flops,
                     lane,

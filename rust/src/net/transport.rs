@@ -373,6 +373,7 @@ mod tests {
             round: 1,
             seeds: vec![42],
             scalars: vec![1.25],
+            gscales: vec![0.5, -0.5],
         };
         c.send(&msg).unwrap();
         assert_eq!(c.recv().unwrap().unwrap(), msg);

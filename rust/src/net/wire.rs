@@ -26,7 +26,9 @@ use std::io::{Read, Write};
 /// First two bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"HN";
 /// Protocol version; bumped on any frame/payload layout change.
-pub const VERSION: u8 = 1;
+/// v2: `ZoUpdate` gained the per-probe `gscales` vector (the
+/// `--zo_wire seeds` replay record).
+pub const VERSION: u8 = 2;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -131,8 +133,19 @@ pub enum Msg {
     ModelSync { round: u32, client: u32, theta: Vec<f32> },
     /// client → server: the lean per-step ZO record — counter-derived
     /// perturbation seeds plus one scalar (the step loss) per local step
-    /// (paper Remark 4; FO baselines report the same shape).
-    ZoUpdate { client: u32, round: u32, seeds: Vec<i32>, scalars: Vec<f32> },
+    /// (paper Remark 4; FO baselines report the same shape). In
+    /// `--zo_wire seeds` mode `gscales` additionally carries the
+    /// flattened `h × n_p` per-probe gradient scalars and **replaces the
+    /// θ upload entirely**: the server replays the update through
+    /// `zo::replay_trajectory`, bit-identical to the client's own θ.
+    /// Empty in `theta` mode.
+    ZoUpdate {
+        client: u32,
+        round: u32,
+        seeds: Vec<i32>,
+        scalars: Vec<f32>,
+        gscales: Vec<f32>,
+    },
     /// client → server: one smashed-data upload (decoupled: enqueued for
     /// the barrier drain; locked: answered by a `CutGrad`).
     Smashed {
@@ -360,11 +373,12 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*client);
             w.vec_f32(theta);
         }
-        Msg::ZoUpdate { client, round, seeds, scalars } => {
+        Msg::ZoUpdate { client, round, seeds, scalars, gscales } => {
             w.u32(*client);
             w.u32(*round);
             w.vec_i32(seeds);
             w.vec_f32(scalars);
+            w.vec_f32(gscales);
         }
         Msg::Smashed { client, round, step, smashed, targets } => {
             w.u32(*client);
@@ -435,6 +449,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             round: r.u32()?,
             seeds: r.vec_i32()?,
             scalars: r.vec_f32()?,
+            gscales: r.vec_f32()?,
         },
         6 => Msg::Smashed {
             client: r.u32()?,
@@ -639,6 +654,7 @@ mod tests {
                 round: 3,
                 seeds: vec![-7, 12345],
                 scalars: vec![0.5, 2.25],
+                gscales: vec![0.125, -0.0625, 1.5, -2.0],
             },
             Msg::Smashed {
                 client: 1,

@@ -1,0 +1,386 @@
+//! Typed client-runtime API (substrate S22): the object-safe trait the
+//! coordinator's hot path drives instead of stringly-typed entry
+//! invocation.
+//!
+//! Until this layer existed, every training step funneled through
+//! `Session::invoke_into(variant, "zo_step", &[...])`: entry names were
+//! free strings, arguments were positional `TensorRef`s bound by name at
+//! runtime, and outputs came back as dynamically-typed slots the caller
+//! had to down-cast. That surface could not expose what the lean wire
+//! mode needs — the per-probe `(l⁺ − l)/μ · (lr/n_p)` gradient scalars
+//! that `zo::stream::two_point_zo_into`'s second pass computes — because
+//! the `zo_step` entry only declares `(theta_l, loss)` outputs.
+//!
+//! [`ClientRuntime`] is the typed replacement: one method per protocol
+//! step, fixed argument lists, concrete return types. It is implemented
+//! by both native models (`VisionModel`, `LmModel`) and resolved per
+//! variant via [`crate::runtime::Session::client_runtime`]. `zo_step`
+//! returns a [`ZoStepRecord`] carrying the base loss *and* the per-probe
+//! gradient scalars, which is exactly the `ZoUpdate{seeds, gscales}`
+//! payload of the `--zo_wire seeds` replay mode (HERON-SFL §IV, Remark
+//! 4): the server reproduces `θ'` bit-identically from `(seed, gscales)`
+//! via [`crate::zo::stream::replay_update`] without the client ever
+//! uploading parameters.
+//!
+//! The trait is also the single source of truth for what each manifest
+//! entry looks like: [`ENTRY_SIGS`] lists the canonical input/output
+//! names per entry, derived from the trait's method signatures, and
+//! [`check_entry_spec`] validates every manifest entry against it at
+//! `Session::new` — a drifted manifest (stale slot count, renamed
+//! output, unknown entry) fails at session construction instead of at
+//! first invoke. The engine's per-invoke arity guard is derived from the
+//! same table, so the two can never disagree.
+//!
+//! `Session` (and its `invoke`/`invoke_into`/`Call` surface) remains the
+//! artifact/golden loader and the cross-language validation path; the
+//! trait is the training hot path.
+
+use crate::runtime::manifest::EntrySpec;
+use crate::runtime::tensor::TensorRef;
+use anyhow::{anyhow, bail, Result};
+
+/// Scalar arguments of one two-point ZO step (paper Eq. 6).
+#[derive(Debug, Clone, Copy)]
+pub struct ZoArgs {
+    /// counter-derived step seed (`coordinator::local::step_seed`)
+    pub seed: i32,
+    /// perturbation step size μ
+    pub mu: f32,
+    /// client learning rate
+    pub lr: f32,
+    /// probes per step (n_p); clamped to ≥ 1
+    pub n_pert: i32,
+}
+
+/// What one ZO step produces besides the updated θ: the lean wire record
+/// (paper Remark 4). `(seed, gscales)` is sufficient for any holder of
+/// the pre-step θ to replay the update bit-identically —
+/// `zo::stream::replay_update` regenerates each probe's direction `u_k`
+/// from `fold_seed(seed, k)` and applies `θ' = θ − Σ_k gscales[k]·u_k`.
+#[derive(Debug, Clone, Default)]
+pub struct ZoStepRecord {
+    /// loss at the pre-update point (the shared base evaluation)
+    pub loss: f32,
+    /// the step's perturbation seed
+    pub seed: i32,
+    /// per-probe gradient scalars `(l⁺_k − l)/μ · (lr/n_p)`, length
+    /// `max(1, n_pert)`; the buffer is reused across steps
+    pub gscales: Vec<f32>,
+}
+
+/// Flat-parameter layout of a split model variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThetaLayout {
+    /// client partition |θ_c|
+    pub nc: usize,
+    /// auxiliary head |θ_a|
+    pub na: usize,
+    /// server partition |θ_s|
+    pub ns: usize,
+    /// frozen base size (0 when the variant has none)
+    pub nb: usize,
+}
+
+impl ThetaLayout {
+    /// |θ_l| = |θ_c| + |θ_a| — the client-held trainable vector.
+    pub fn nl(&self) -> usize {
+        self.nc + self.na
+    }
+}
+
+/// The typed, object-safe runtime surface one model variant exposes to
+/// the coordinator. Batch tensors cross as [`TensorRef`] views (vision
+/// batches are f32 pixels, LM batches are i32 tokens); parameters are
+/// plain `&[f32]` slices; outputs land in caller-owned reused `Vec`s.
+/// Every method is bit-identical to the corresponding manifest entry —
+/// both dispatch to the same model code.
+pub trait ClientRuntime: Sync {
+    /// Parameter layout (sizes agree with the manifest's size contract).
+    fn layout(&self) -> ThetaLayout;
+
+    /// One two-point ZO step on θ_l (Eq. 6): writes θ' into `out` and
+    /// fills `rec` with the base loss + per-probe gradient scalars.
+    #[allow(clippy::too_many_arguments)]
+    fn zo_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        zo: ZoArgs,
+        out: &mut Vec<f32>,
+        rec: &mut ZoStepRecord,
+    ) -> Result<()>;
+
+    /// One FO step on θ_l; writes θ' into `out`, returns the pre-update
+    /// loss.
+    fn fo_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<f32>;
+
+    /// Client forward to the cut layer; writes the smashed activations
+    /// into `out`.
+    fn client_fwd(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Server FO update on an uploaded smashed batch (Eq. 7); writes θ_s'
+    /// into `out`, fills `cut` with ∂L/∂smashed when given, returns the
+    /// loss.
+    #[allow(clippy::too_many_arguments)]
+    fn server_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_s: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        lr: f32,
+        cut: Option<&mut Vec<f32>>,
+        out: &mut Vec<f32>,
+    ) -> Result<f32>;
+
+    /// Client backprop step from a relayed cut gradient (SFLV1/V2).
+    #[allow(clippy::too_many_arguments)]
+    fn client_bp_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// FSL-SAGE aux alignment against the server's cut gradient.
+    #[allow(clippy::too_many_arguments)]
+    fn aux_align(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Assembled-model evaluation: `(stat1, stat2)` — vision
+    /// (correct, total), LM (NLL sum, token count).
+    fn eval_full(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        theta_s: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+    ) -> Result<(f32, f32)>;
+}
+
+// ---------------------------------------------------------------------------
+// canonical entry signatures
+// ---------------------------------------------------------------------------
+
+/// The canonical manifest shape of one entry: input names (after the
+/// optional leading `base` blob) and output names, both in declaration
+/// order. Derived from the [`ClientRuntime`] method signatures (plus the
+/// cold `local_loss`/`hvp` analysis entries), and consumed by
+/// [`check_entry_spec`] and the engine's output-arity guard.
+#[derive(Debug, Clone, Copy)]
+pub struct EntrySig {
+    pub name: &'static str,
+    /// required inputs, in order, excluding the optional leading `base`
+    pub inputs: &'static [&'static str],
+    /// outputs, in order
+    pub outputs: &'static [&'static str],
+}
+
+/// Every entry the native runtime knows how to execute.
+pub const ENTRY_SIGS: &[EntrySig] = &[
+    EntrySig {
+        name: "local_loss",
+        inputs: &["theta_l", "x", "y"],
+        outputs: &["loss"],
+    },
+    EntrySig {
+        name: "zo_step",
+        inputs: &["theta_l", "x", "y", "seed", "mu", "lr", "n_pert"],
+        outputs: &["theta_l", "loss"],
+    },
+    EntrySig {
+        name: "fo_step",
+        inputs: &["theta_l", "x", "y", "lr"],
+        outputs: &["theta_l", "loss"],
+    },
+    EntrySig {
+        name: "client_fwd",
+        inputs: &["theta_c", "x"],
+        outputs: &["smashed"],
+    },
+    EntrySig {
+        name: "server_step",
+        inputs: &["theta_s", "smashed", "y", "lr"],
+        outputs: &["theta_s", "loss"],
+    },
+    EntrySig {
+        name: "server_step_cutgrad",
+        inputs: &["theta_s", "smashed", "y", "lr"],
+        outputs: &["theta_s", "loss", "g_smashed"],
+    },
+    EntrySig {
+        name: "client_bp_step",
+        inputs: &["theta_c", "x", "g_smashed", "lr"],
+        outputs: &["theta_c"],
+    },
+    EntrySig {
+        name: "aux_align",
+        inputs: &["theta_l", "smashed", "y", "g_smashed", "lr"],
+        outputs: &["theta_l"],
+    },
+    EntrySig {
+        name: "eval_full",
+        inputs: &["theta_c", "theta_s", "x", "y"],
+        outputs: &["stat1", "stat2"],
+    },
+    EntrySig {
+        name: "hvp",
+        inputs: &["theta_l", "x", "y", "v"],
+        outputs: &["hv"],
+    },
+];
+
+/// The canonical signature of a named entry, if the typed API knows it.
+pub fn entry_sig(name: &str) -> Option<&'static EntrySig> {
+    ENTRY_SIGS.iter().find(|s| s.name == name)
+}
+
+/// Validate one manifest entry against its canonical signature. Called
+/// for every entry of every variant at `Session::new`, so a drifted
+/// manifest — an entry the runtime does not implement, a stale output
+/// slot, a renamed or reordered tensor — fails at session construction
+/// with a precise message instead of producing placeholder slots (or a
+/// late bail) at first invoke.
+pub fn check_entry_spec(variant: &str, espec: &EntrySpec) -> Result<()> {
+    let sig = entry_sig(&espec.name).ok_or_else(|| {
+        anyhow!(
+            "{variant}/{}: entry is unknown to the typed runtime API \
+             (manifest drift?)",
+            espec.name
+        )
+    })?;
+    let outs: Vec<&str> =
+        espec.outputs.iter().map(|s| s.name.as_str()).collect();
+    if outs != sig.outputs {
+        bail!(
+            "{variant}/{}: manifest outputs {outs:?} do not match the \
+             typed signature {:?}",
+            espec.name,
+            sig.outputs
+        );
+    }
+    let mut ins: Vec<&str> =
+        espec.inputs.iter().map(|s| s.name.as_str()).collect();
+    if ins.first() == Some(&"base") {
+        ins.remove(0);
+    }
+    if ins != sig.inputs {
+        bail!(
+            "{variant}/{}: manifest inputs {ins:?} do not match the typed \
+             signature {:?} (+ optional leading `base`)",
+            espec.name,
+            sig.inputs
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+    use std::path::PathBuf;
+
+    fn spec(name: &str) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: vec![2],
+            dtype: DType::F32,
+        }
+    }
+
+    fn espec(name: &str, ins: &[&str], outs: &[&str]) -> EntrySpec {
+        EntrySpec {
+            name: name.into(),
+            file: PathBuf::new(),
+            inputs: ins.iter().map(|n| spec(n)).collect(),
+            outputs: outs.iter().map(|n| spec(n)).collect(),
+        }
+    }
+
+    #[test]
+    fn sigs_are_unique_and_resolvable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in ENTRY_SIGS {
+            assert!(seen.insert(s.name), "duplicate sig {}", s.name);
+            assert!(!s.outputs.is_empty(), "{}: no outputs", s.name);
+            assert!(std::ptr::eq(entry_sig(s.name).unwrap(), s));
+        }
+        assert!(entry_sig("zo_step_v2").is_none());
+    }
+
+    #[test]
+    fn check_accepts_canonical_with_and_without_base() {
+        let ok = espec(
+            "zo_step",
+            &["theta_l", "x", "y", "seed", "mu", "lr", "n_pert"],
+            &["theta_l", "loss"],
+        );
+        check_entry_spec("v", &ok).unwrap();
+        let ok_base = espec(
+            "zo_step",
+            &["base", "theta_l", "x", "y", "seed", "mu", "lr", "n_pert"],
+            &["theta_l", "loss"],
+        );
+        check_entry_spec("v", &ok_base).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_every_drift_class() {
+        // unknown entry
+        let e = espec("zo_step_v2", &["theta_l"], &["theta_l"]);
+        assert!(check_entry_spec("v", &e).is_err());
+        // stale extra output slot
+        let e = espec(
+            "fo_step",
+            &["theta_l", "x", "y", "lr"],
+            &["theta_l", "loss", "grad_norm"],
+        );
+        assert!(check_entry_spec("v", &e).is_err());
+        // renamed output
+        let e = espec(
+            "client_fwd",
+            &["theta_c", "x"],
+            &["activations"],
+        );
+        assert!(check_entry_spec("v", &e).is_err());
+        // reordered inputs
+        let e = espec(
+            "client_fwd",
+            &["x", "theta_c"],
+            &["smashed"],
+        );
+        assert!(check_entry_spec("v", &e).is_err());
+        // missing input
+        let e = espec("client_fwd", &["theta_c"], &["smashed"]);
+        assert!(check_entry_spec("v", &e).is_err());
+    }
+}

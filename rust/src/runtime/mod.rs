@@ -12,27 +12,32 @@
 //! set; the `Session` surface is backend-agnostic so it can return behind
 //! a feature gate without touching callers.
 //!
-//! Two invocation paths exist, bit-identical by construction:
+//! Three invocation paths exist, bit-identical by construction:
 //!
-//! * [`Session::invoke`] — owned `TensorValue` in, fresh `Vec` out. The
-//!   original convenience path; still what cold callers use.
+//! * [`Session::client_runtime`] — the typed [`api::ClientRuntime`]
+//!   trait surface: one method per protocol step, concrete argument and
+//!   return types, per-probe ZO records. This is what the coordinator's
+//!   hot path drives; the manifest is validated against the trait's
+//!   canonical signatures at [`Session::new`].
+//! * [`Session::invoke`] — name-based entries, owned `TensorValue` in,
+//!   fresh `Vec` out. The artifact/golden validation path.
 //! * [`Session::invoke_into`] — borrowed [`TensorRef`] views in, outputs
 //!   written into a caller-owned slot vector whose buffers are reused
-//!   across calls. The round driver threads per-client scratch arenas
-//!   through this so the h-step hot loop allocates no parameter-sized
-//!   temporaries.
+//!   across calls.
 //!
 //! `Session` is `Sync`: the manifest and engine are immutable after
 //! construction and the runtime statistics sit behind a mutex, so the
 //! parallel round driver can invoke entries from worker threads
 //! concurrently.
 
+pub mod api;
 pub mod artifacts;
 pub mod manifest;
 pub mod native;
 pub mod tensor;
 
 use anyhow::{bail, Context, Result};
+use api::ClientRuntime;
 use manifest::{Manifest, VariantSpec};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -112,6 +117,20 @@ impl Session {
 
     pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
         self.manifest.variant(name)
+    }
+
+    /// The typed runtime surface for one variant — what the coordinator's
+    /// hot path drives instead of name-based entry invocation (see
+    /// [`api::ClientRuntime`]). Dispatches straight to the native model;
+    /// the manifest was validated against the trait's signatures at
+    /// construction, so no per-call name/shape marshalling remains.
+    /// (Typed calls bypass the `RuntimeStats` invocation counters; the
+    /// feature-plan cache counters live in the models and keep counting.)
+    pub fn client_runtime(&self, variant: &str) -> Result<&dyn ClientRuntime> {
+        Ok(match self.engine.model(variant)? {
+            native::Model::Vision(m) => m,
+            native::Model::Lm(m) => m,
+        })
     }
 
     /// Validate that the given entries exist for the variant (the AOT

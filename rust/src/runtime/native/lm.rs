@@ -27,8 +27,11 @@
 //! allocation-free [`Self::aux_loss`] path; all op orders match the
 //! materialized formulation bit for bit.
 
+use crate::runtime::api::{ClientRuntime, ThetaLayout, ZoArgs, ZoStepRecord};
 use crate::runtime::native::cache::{self, CacheStats, FeatureCache};
+use crate::runtime::tensor::TensorRef;
 use crate::zo::stream::two_point_zo_into;
+use anyhow::{Context, Result};
 
 pub const VOCAB: usize = 96;
 
@@ -55,6 +58,10 @@ impl AuxKind {
 pub struct LmModel {
     pub e: usize,
     pub aux: AuxKind,
+    /// tokens per record — fixes the batch geometry for the typed
+    /// [`ClientRuntime`] surface (the entry path still threads it
+    /// per call, with the same value)
+    pub seq: usize,
     /// memoized θ-independent E0 row gathers, keyed by batch content hash
     cache: FeatureCache,
 }
@@ -72,10 +79,11 @@ struct CeOut {
 }
 
 impl LmModel {
-    pub fn new(e: usize, aux: AuxKind) -> Self {
+    pub fn new(e: usize, aux: AuxKind, seq: usize) -> Self {
         LmModel {
             e,
             aux,
+            seq,
             cache: FeatureCache::new(),
         }
     }
@@ -414,8 +422,11 @@ impl LmModel {
     /// seed in fixed chunks (perturb pass / update pass), so temporary
     /// memory is O(d + chunk) regardless of `n_pert` and no per-probe
     /// vector is allocated; the value stream and accumulation order match
-    /// the materialized formulation bit for bit.
-    pub fn zo_step_into(
+    /// the materialized formulation bit for bit. `record_gscale` observes
+    /// each probe's gradient scalar (the lean wire record) without
+    /// changing any arithmetic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zo_step_probes_into(
         &self,
         base: &[f32],
         theta_l: &[f32],
@@ -426,6 +437,7 @@ impl LmModel {
         lr: f32,
         n_pert: i32,
         out: &mut Vec<f32>,
+        record_gscale: impl FnMut(f32),
     ) -> f32 {
         let nc = self.nc();
         let mut h = Vec::new();
@@ -448,8 +460,28 @@ impl LmModel {
                 self.aux_loss(&pert[nc..], &h, x, seq, &mut logits, &mut z1)
             },
             out,
+            record_gscale,
         );
         lbase
+    }
+
+    /// [`Self::zo_step_probes_into`] without the probe record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zo_step_into(
+        &self,
+        base: &[f32],
+        theta_l: &[f32],
+        x: &[i32],
+        seq: usize,
+        seed: i32,
+        mu: f32,
+        lr: f32,
+        n_pert: i32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        self.zo_step_probes_into(
+            base, theta_l, x, seq, seed, mu, lr, n_pert, out, |_| {},
+        )
     }
 
     /// ZO step on θ_l against the aux-head mean loss.
@@ -774,6 +806,163 @@ impl LmModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// typed runtime surface
+// ---------------------------------------------------------------------------
+
+/// The LM split model cannot run without its frozen base table.
+fn req_base(base: Option<&[f32]>) -> Result<&[f32]> {
+    base.context("lm runtime requires the frozen base blob")
+}
+
+impl ClientRuntime for LmModel {
+    fn layout(&self) -> ThetaLayout {
+        ThetaLayout {
+            nc: self.nc(),
+            na: self.na(),
+            ns: self.ns(),
+            nb: self.nc(),
+        }
+    }
+
+    fn zo_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        zo: ZoArgs,
+        out: &mut Vec<f32>,
+        rec: &mut ZoStepRecord,
+    ) -> Result<()> {
+        let base = req_base(base)?;
+        let x = x.as_i32()?;
+        let _ = y; // LM targets are the shifted tokens inside x
+        rec.seed = zo.seed;
+        rec.gscales.clear();
+        let gs = &mut rec.gscales;
+        rec.loss = self.zo_step_probes_into(
+            base,
+            theta_l,
+            x,
+            self.seq,
+            zo.seed,
+            zo.mu,
+            zo.lr,
+            zo.n_pert,
+            out,
+            |g| gs.push(g),
+        );
+        Ok(())
+    }
+
+    fn fo_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let _ = y;
+        Ok(self.fo_step_into(
+            req_base(base)?,
+            theta_l,
+            x.as_i32()?,
+            self.seq,
+            lr,
+            out,
+        ))
+    }
+
+    fn client_fwd(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.client_fwd_into(req_base(base)?, theta_c, x.as_i32()?, out);
+        Ok(())
+    }
+
+    fn server_step(
+        &self,
+        _base: Option<&[f32]>,
+        theta_s: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        lr: f32,
+        cut: Option<&mut Vec<f32>>,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        // y is the token batch (targets derived in-model by shifting)
+        Ok(self.server_step_into(theta_s, smashed, y, self.seq, lr, cut, out))
+    }
+
+    fn client_bp_step(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.client_bp_step_into(
+            req_base(base)?,
+            theta_c,
+            x.as_i32()?,
+            g_smashed,
+            lr,
+            out,
+        );
+        Ok(())
+    }
+
+    fn aux_align(
+        &self,
+        base: Option<&[f32]>,
+        theta_l: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.aux_align_into(
+            req_base(base)?,
+            theta_l,
+            smashed,
+            y,
+            self.seq,
+            g_smashed,
+            lr,
+            out,
+        );
+        Ok(())
+    }
+
+    fn eval_full(
+        &self,
+        base: Option<&[f32]>,
+        theta_c: &[f32],
+        theta_s: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let _ = y;
+        Ok(self.eval(
+            req_base(base)?,
+            theta_c,
+            theta_s,
+            x.as_i32()?,
+            self.seq,
+        ))
+    }
+}
+
 /// (nll, softmax probs) for one logits row and target index.
 fn log_softmax_nll(logits: &[f32], target: usize) -> (f32, Vec<f32>) {
     let mut mx = f32::NEG_INFINITY;
@@ -821,7 +1010,7 @@ mod tests {
     }
 
     fn model() -> LmModel {
-        LmModel::new(16, AuxKind::Linear)
+        LmModel::new(16, AuxKind::Linear, SEQ)
     }
 
     #[test]
@@ -910,9 +1099,62 @@ mod tests {
     }
 
     #[test]
+    fn zo_probe_record_replays_bitwise() {
+        let m = model();
+        let b = base(16);
+        let x = synth_text::batch(42, 0, 2);
+        let th: Vec<f32> = PerturbStream::new(fold_seed(0x7E57, 4))
+            .take_vec(m.nl())
+            .into_iter()
+            .map(|v| v * 0.05)
+            .collect();
+        let (seed, mu, lr, np) = (0x1EAF, 1e-2f32, 1e-3f32, 2i32);
+        let mut out = Vec::new();
+        let mut gs = Vec::new();
+        let lbase = m.zo_step_probes_into(
+            &b, &th, &x, SEQ, seed, mu, lr, np, &mut out, |g| gs.push(g),
+        );
+        let (want, lwant) = m.zo_step(&b, &th, &x, SEQ, seed, mu, lr, np);
+        assert_eq!(lbase.to_bits(), lwant.to_bits());
+        assert_eq!(out, want);
+        assert_eq!(gs.len(), np as usize);
+        let mut replayed = Vec::new();
+        crate::zo::stream::replay_update(&th, seed, &gs, &mut replayed);
+        assert_eq!(replayed, want);
+        // typed trait surface: same step, same record
+        let mut rec = ZoStepRecord::default();
+        let mut tout = Vec::new();
+        ClientRuntime::zo_step(
+            &m,
+            Some(&b),
+            &th,
+            TensorRef::I32(&x),
+            &x,
+            ZoArgs { seed, mu, lr, n_pert: np },
+            &mut tout,
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(tout, want);
+        assert_eq!(rec.gscales, gs);
+        // the base blob is not optional for the LM runtime
+        assert!(ClientRuntime::zo_step(
+            &m,
+            None,
+            &th,
+            TensorRef::I32(&x),
+            &x,
+            ZoArgs { seed, mu, lr, n_pert: np },
+            &mut tout,
+            &mut rec,
+        )
+        .is_err());
+    }
+
+    #[test]
     fn aux_loss_matches_aux_ce_mean_for_all_kinds() {
         for aux in [AuxKind::Bias, AuxKind::Linear, AuxKind::Mlp(8)] {
-            let m = LmModel::new(16, aux);
+            let m = LmModel::new(16, aux, SEQ);
             let b = base(16);
             let x = synth_text::batch(7, 0, 2);
             let wa: Vec<f32> = PerturbStream::new(fold_seed(0xA0A, 3))

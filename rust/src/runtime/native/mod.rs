@@ -44,10 +44,18 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build per-variant models from the manifest's size contract.
+    /// Build per-variant models from the manifest's size contract, after
+    /// validating every declared entry against the typed API's canonical
+    /// signatures ([`crate::runtime::api::ENTRY_SIGS`]). A drifted
+    /// manifest — an unknown entry, a stale/renamed/reordered tensor —
+    /// fails here, at session construction, instead of producing a
+    /// stale-slot hazard (or a late bail) at first invoke.
     pub fn new(manifest: &Manifest) -> Result<Self> {
         let mut models = BTreeMap::new();
         for (name, v) in &manifest.variants {
+            for espec in v.entries.values() {
+                crate::runtime::api::check_entry_spec(name, espec)?;
+            }
             models.insert(name.clone(), build_model(v)?);
         }
         Ok(Engine { models })
@@ -123,18 +131,13 @@ impl Engine {
 }
 
 /// How many outputs the engine writes for each known entry (`None` for
-/// unknown names — the exec arms reject those themselves). Kept in sync
-/// with the exec arms; `artifacts::tests` asserts it covers every
-/// generated entry spec, so adding an entry without extending this table
-/// fails a test instead of silently skipping the stale-slot guard.
+/// unknown names — the exec arms reject those themselves). Derived from
+/// the typed API's signature table, the same source `Engine::new` uses
+/// to validate the manifest — the per-invoke guard and the construction
+/// check can never disagree. `artifacts::tests` asserts the table covers
+/// every generated entry spec.
 pub(crate) fn produced_outputs(entry: &str) -> Option<usize> {
-    Some(match entry {
-        "local_loss" | "client_fwd" | "client_bp_step" | "aux_align"
-        | "hvp" => 1,
-        "zo_step" | "fo_step" | "server_step" | "eval_full" => 2,
-        "server_step_cutgrad" => 3,
-        _ => return None,
-    })
+    crate::runtime::api::entry_sig(entry).map(|s| s.outputs.len())
 }
 
 fn build_model(v: &VariantSpec) -> Result<Model> {
@@ -149,6 +152,7 @@ fn build_model(v: &VariantSpec) -> Result<Model> {
         if e == 0 || v.size_client != e * lm::VOCAB {
             bail!("variant {}: bad lm client size {}", v.name, v.size_client);
         }
+        let seq: usize = v.x_shape.iter().product::<usize>().max(1);
         let aux = if v.size_aux == AuxKind::Bias.size(e) {
             AuxKind::Bias
         } else if v.size_aux == AuxKind::Linear.size(e) {
@@ -161,7 +165,7 @@ fn build_model(v: &VariantSpec) -> Result<Model> {
             }
             AuxKind::Mlp(k)
         };
-        Ok(Model::Lm(LmModel::new(e, aux)))
+        Ok(Model::Lm(LmModel::new(e, aux, seq)))
     }
 }
 

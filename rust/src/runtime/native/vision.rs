@@ -30,8 +30,11 @@
 //! the exact evaluation order of the original batch path, so cached and
 //! `_into` results are bit-identical to the allocating ones.
 
+use crate::runtime::api::{ClientRuntime, ThetaLayout, ZoArgs, ZoStepRecord};
 use crate::runtime::native::cache::{self, CacheStats, FeatureCache};
+use crate::runtime::tensor::TensorRef;
 use crate::zo::stream::two_point_zo_into;
+use anyhow::Result;
 
 pub const CLASSES: usize = 10;
 pub const PIXELS: usize = 768; // 16 x 16 x 3
@@ -355,8 +358,11 @@ impl VisionModel {
     /// (zero per-probe allocations, temp memory independent of `n_pert`)
     /// while this method supplies the cached-feature streamed loss. Same
     /// value stream and same accumulation order as the materialized
-    /// formulation, hence bit-identical results.
-    pub fn zo_step_into(
+    /// formulation, hence bit-identical results. `record_gscale` observes
+    /// each probe's gradient scalar (the lean wire record); recording
+    /// changes nothing numerically.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zo_step_probes_into(
         &self,
         theta_l: &[f32],
         x: &[f32],
@@ -366,6 +372,7 @@ impl VisionModel {
         lr: f32,
         n_pert: i32,
         out: &mut Vec<f32>,
+        record_gscale: impl FnMut(f32),
     ) -> f32 {
         let f = self.features_cached(x);
         let mut hrow = vec![0.0f32; self.q];
@@ -380,8 +387,27 @@ impl VisionModel {
             base,
             |pert| self.loss_rows(pert, &f, y, &mut hrow, &mut lrow),
             out,
+            record_gscale,
         );
         base
+    }
+
+    /// [`Self::zo_step_probes_into`] without the probe record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn zo_step_into(
+        &self,
+        theta_l: &[f32],
+        x: &[f32],
+        y: &[i32],
+        seed: i32,
+        mu: f32,
+        lr: f32,
+        n_pert: i32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        self.zo_step_probes_into(
+            theta_l, x, y, seed, mu, lr, n_pert, out, |_| {},
+        )
     }
 
     /// One two-point ZO step (Eq. 6); see [`Self::zo_step_into`].
@@ -616,6 +642,123 @@ impl VisionModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// typed runtime surface
+// ---------------------------------------------------------------------------
+
+impl ClientRuntime for VisionModel {
+    fn layout(&self) -> ThetaLayout {
+        ThetaLayout {
+            nc: self.nc(),
+            na: self.na(),
+            ns: self.ns(),
+            nb: 0,
+        }
+    }
+
+    fn zo_step(
+        &self,
+        _base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        zo: ZoArgs,
+        out: &mut Vec<f32>,
+        rec: &mut ZoStepRecord,
+    ) -> Result<()> {
+        let x = x.as_f32()?;
+        rec.seed = zo.seed;
+        rec.gscales.clear();
+        let gs = &mut rec.gscales;
+        rec.loss = self.zo_step_probes_into(
+            theta_l,
+            x,
+            y,
+            zo.seed,
+            zo.mu,
+            zo.lr,
+            zo.n_pert,
+            out,
+            |g| gs.push(g),
+        );
+        Ok(())
+    }
+
+    fn fo_step(
+        &self,
+        _base: Option<&[f32]>,
+        theta_l: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        Ok(self.fo_step_into(theta_l, x.as_f32()?, y, lr, out))
+    }
+
+    fn client_fwd(
+        &self,
+        _base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.client_fwd_into(theta_c, x.as_f32()?, out);
+        Ok(())
+    }
+
+    fn server_step(
+        &self,
+        _base: Option<&[f32]>,
+        theta_s: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        lr: f32,
+        cut: Option<&mut Vec<f32>>,
+        out: &mut Vec<f32>,
+    ) -> Result<f32> {
+        Ok(self.server_step_into(theta_s, smashed, y, lr, cut, out))
+    }
+
+    fn client_bp_step(
+        &self,
+        _base: Option<&[f32]>,
+        theta_c: &[f32],
+        x: TensorRef<'_>,
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.client_bp_step_into(theta_c, x.as_f32()?, g_smashed, lr, out);
+        Ok(())
+    }
+
+    fn aux_align(
+        &self,
+        _base: Option<&[f32]>,
+        theta_l: &[f32],
+        smashed: &[f32],
+        y: &[i32],
+        g_smashed: &[f32],
+        lr: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.aux_align_into(theta_l, smashed, y, g_smashed, lr, out);
+        Ok(())
+    }
+
+    fn eval_full(
+        &self,
+        _base: Option<&[f32]>,
+        theta_c: &[f32],
+        theta_s: &[f32],
+        x: TensorRef<'_>,
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        Ok(self.eval(theta_c, theta_s, x.as_f32()?, y))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,6 +906,46 @@ mod tests {
         for i in 0..d {
             assert_eq!(got[i].to_bits(), want[i].to_bits(), "elem {i}");
         }
+    }
+
+    #[test]
+    fn zo_probe_record_replays_bitwise() {
+        let m = model();
+        let (x, y) = batch(16);
+        let th = init_theta(&m);
+        let (seed, mu, lr, np) = (0x5EED, 1e-2f32, 2e-3f32, 3i32);
+        let mut out = Vec::new();
+        let mut gs = Vec::new();
+        let base = m.zo_step_probes_into(
+            &th, &x, &y, seed, mu, lr, np, &mut out, |g| gs.push(g),
+        );
+        // recording is invisible to the step itself
+        let (want, lbase) = m.zo_step(&th, &x, &y, seed, mu, lr, np);
+        assert_eq!(base.to_bits(), lbase.to_bits());
+        assert_eq!(out, want);
+        assert_eq!(gs.len(), np as usize);
+        // (seed, gscales) alone reproduce θ' bit for bit
+        let mut replayed = Vec::new();
+        crate::zo::stream::replay_update(&th, seed, &gs, &mut replayed);
+        assert_eq!(replayed, want);
+        // and the typed trait surface agrees with the direct call
+        let mut rec = ZoStepRecord::default();
+        let mut tout = Vec::new();
+        ClientRuntime::zo_step(
+            &m,
+            None,
+            &th,
+            TensorRef::F32(&x),
+            &y,
+            ZoArgs { seed, mu, lr, n_pert: np },
+            &mut tout,
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(tout, want);
+        assert_eq!(rec.loss.to_bits(), base.to_bits());
+        assert_eq!(rec.gscales, gs);
+        assert_eq!(rec.seed, seed);
     }
 
     #[test]

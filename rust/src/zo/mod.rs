@@ -9,6 +9,38 @@ pub mod stream;
 
 use stream::{for_each_chunk, PerturbStream};
 
+/// Replay a full local phase from its lean wire record (`--zo_wire
+/// seeds`): starting at the round's broadcast `theta0`, apply each
+/// step's [`stream::replay_update`] in order — `seeds[s]` with the
+/// per-step slice `gscales[s·n_p .. (s+1)·n_p]`. Returns `None` when the
+/// record is inconsistent (`gscales.len() != seeds.len() · max(1, n_p)`)
+/// so a malformed client upload is a typed server error, never a panic.
+/// The result is bit-identical to the client's own h-step trajectory
+/// (pinned end-to-end in `rust/tests/net_loopback.rs`).
+pub fn replay_trajectory(
+    theta0: &[f32],
+    seeds: &[i32],
+    n_pert: usize,
+    gscales: &[f32],
+) -> Option<Vec<f32>> {
+    let np = n_pert.max(1);
+    if gscales.len() != seeds.len() * np {
+        return None;
+    }
+    let mut cur = theta0.to_vec();
+    let mut next = Vec::with_capacity(theta0.len());
+    for (s, &seed) in seeds.iter().enumerate() {
+        stream::replay_update(
+            &cur,
+            seed,
+            &gscales[s * np..(s + 1) * np],
+            &mut next,
+        );
+        std::mem::swap(&mut cur, &mut next);
+    }
+    Some(cur)
+}
+
 /// Two-point ZO-SGD on an analytic objective f: R^d -> R.
 ///
 /// Mirrors the paper's Eq. (2) estimator with Gaussian directions:
@@ -176,6 +208,27 @@ mod tests {
             assert_eq!(got.to_bits(), lb.to_bits(), "loss at step {s}");
         }
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn replay_trajectory_validates_record_shape() {
+        let theta0 = vec![0.5f32; 32];
+        // consistent record: 2 steps x 3 probes
+        let gs = vec![0.01f32; 6];
+        let out = replay_trajectory(&theta0, &[1, 2], 3, &gs).unwrap();
+        assert_eq!(out.len(), 32);
+        assert_ne!(out, theta0);
+        // step-by-step equivalence with the single-step primitive
+        let mut s1 = Vec::new();
+        stream::replay_update(&theta0, 1, &gs[0..3], &mut s1);
+        let mut s2 = Vec::new();
+        stream::replay_update(&s1, 2, &gs[3..6], &mut s2);
+        assert_eq!(out, s2);
+        // inconsistent record: rejected, not panicked
+        assert!(replay_trajectory(&theta0, &[1, 2], 3, &gs[..5]).is_none());
+        assert!(replay_trajectory(&theta0, &[1], 3, &gs).is_none());
+        // n_pert = 0 clamps to 1 like the estimator does
+        assert!(replay_trajectory(&theta0, &[1, 2], 0, &gs[..2]).is_some());
     }
 
     #[test]

@@ -66,6 +66,37 @@ pub fn for_each_chunk(
     }
 }
 
+/// The update pass of one probe: accumulate `out[i] -= gscale · u_k[i]`
+/// over probe k's regenerated stream. Shared verbatim by
+/// [`two_point_zo_into`] (live training) and [`replay_update`]
+/// (server-side seeds-mode replay), which is what makes the replay
+/// bit-identical by construction — both paths run this exact loop with
+/// the same `(sub_seed, gscale)` pairs in the same order.
+#[inline]
+fn accumulate_probe(
+    sub_seed: u32,
+    gscale: f32,
+    d: usize,
+    chunk: &mut [f32],
+    out: &mut [f32],
+) {
+    for_each_chunk(sub_seed, d, chunk, |off, u| {
+        for i in 0..u.len() {
+            out[off + i] -= gscale * u[i];
+        }
+    });
+}
+
+/// The `θ + delta` finalization sweep shared by [`two_point_zo_into`]
+/// and [`replay_update`] — like [`accumulate_probe`], shared so the
+/// replay's bit-identity is structural, not by-convention.
+#[inline]
+fn finalize_update(theta: &[f32], out: &mut [f32]) {
+    for i in 0..theta.len() {
+        out[i] = theta[i] + out[i];
+    }
+}
+
 /// Two-point ZO update with chunked probe regeneration — the exact
 /// choreography shared by the native models' `zo_step` entries. `out` is
 /// cleared and doubles as the delta accumulator until the final
@@ -75,6 +106,12 @@ pub fn for_each_chunk(
 /// `n_pert`. Every value stream and accumulation order matches the
 /// materialized-u formulation bit for bit (pinned by the models'
 /// `chunked_zo_matches_materialized_reference` tests).
+///
+/// `record_gscale` observes each probe's gradient scalar
+/// `(l⁺_k − l)/μ · (lr/n_p)` as it is computed — the lean `ZoUpdate`
+/// wire record (Remark 4). Pass `|_| {}` to discard; recording changes
+/// no arithmetic and allocates nothing here.
+#[allow(clippy::too_many_arguments)]
 pub fn two_point_zo_into(
     theta: &[f32],
     seed: i32,
@@ -84,6 +121,7 @@ pub fn two_point_zo_into(
     base_loss: f32,
     mut probe_loss: impl FnMut(&[f32]) -> f32,
     out: &mut Vec<f32>,
+    mut record_gscale: impl FnMut(f32),
 ) {
     let d = theta.len();
     let n_pert = n_pert.max(1) as usize;
@@ -101,16 +139,37 @@ pub fn two_point_zo_into(
         });
         let lp = probe_loss(&pert);
         let gscale = (lp - base_loss) / mu * (lr / n_pert as f32);
+        record_gscale(gscale);
         // pass 2: regenerate the same stream and accumulate the update
-        for_each_chunk(sub, d, &mut chunk, |off, u| {
-            for i in 0..u.len() {
-                out[off + i] -= gscale * u[i];
-            }
-        });
+        accumulate_probe(sub, gscale, d, &mut chunk, out);
     }
-    for i in 0..d {
-        out[i] = theta[i] + out[i];
+    finalize_update(theta, out);
+}
+
+/// Server-side replay of a recorded two-point ZO step (the
+/// `--zo_wire seeds` lean protocol, HERON-SFL §IV): reconstruct `θ'`
+/// from `(seed, per-probe gscales)` without evaluating a single loss.
+/// The probe count is `gscales.len()`; each direction `u_k` is
+/// regenerated from `fold_seed(seed, k)` and applied through the same
+/// [`accumulate_probe`] loop [`two_point_zo_into`] uses, followed by the
+/// same `θ + delta` sweep — so a replay from a faithfully transmitted
+/// record (f32 bit patterns preserved, which the wire codec guarantees)
+/// is bit-identical to the client's own update.
+pub fn replay_update(
+    theta: &[f32],
+    seed: i32,
+    gscales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let d = theta.len();
+    out.clear();
+    out.resize(d, 0.0);
+    let mut chunk = vec![0.0f32; ZO_CHUNK.min(d.max(1))];
+    for (k, &gscale) in gscales.iter().enumerate() {
+        let sub = fold_seed(seed as u32, k as u32);
+        accumulate_probe(sub, gscale, d, &mut chunk, out);
     }
+    finalize_update(theta, out);
 }
 
 /// Sequential reader over the stream.
@@ -182,6 +241,77 @@ mod tests {
         });
         assert_eq!(got, want);
         for_each_chunk(34, 0, &mut [], |_, _| panic!("d=0 must not visit"));
+    }
+
+    #[test]
+    fn replay_reproduces_two_point_update_bitwise() {
+        // objective: smooth deterministic function of θ
+        let f = |t: &[f32]| {
+            t.iter()
+                .enumerate()
+                .map(|(i, &v)| v * v * (1.0 + (i as f32) * 1e-3))
+                .sum::<f32>()
+        };
+        let theta: Vec<f32> =
+            (0..777).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let (seed, mu, lr, n_pert) = (0x5EED, 1e-2f32, 3e-3f32, 3i32);
+        let base = f(&theta);
+        let mut live = Vec::new();
+        let mut gscales = Vec::new();
+        two_point_zo_into(
+            &theta,
+            seed,
+            mu,
+            lr,
+            n_pert,
+            base,
+            |p| f(p),
+            &mut live,
+            |g| gscales.push(g),
+        );
+        assert_eq!(gscales.len(), n_pert as usize);
+        // replay from the record alone — no objective in sight
+        let mut replayed = Vec::new();
+        replay_update(&theta, seed, &gscales, &mut replayed);
+        assert_eq!(live.len(), replayed.len());
+        for i in 0..live.len() {
+            assert_eq!(
+                live[i].to_bits(),
+                replayed[i].to_bits(),
+                "elem {i}"
+            );
+        }
+        // dirty output buffer must not leak into a second replay
+        let mut again = vec![9.0f32; 3];
+        replay_update(&theta, seed, &gscales, &mut again);
+        assert_eq!(again, replayed);
+    }
+
+    #[test]
+    fn recording_does_not_change_the_update() {
+        let f = |t: &[f32]| t.iter().map(|v| v * v).sum::<f32>();
+        let theta: Vec<f32> =
+            (0..200).map(|i| ((i as f32) * 0.11).cos()).collect();
+        let base = f(&theta);
+        let mut plain = Vec::new();
+        two_point_zo_into(
+            &theta, 7, 1e-2, 1e-3, 2, base, |p| f(p), &mut plain, |_| {},
+        );
+        let mut recorded = Vec::new();
+        let mut gs = Vec::new();
+        two_point_zo_into(
+            &theta,
+            7,
+            1e-2,
+            1e-3,
+            2,
+            base,
+            |p| f(p),
+            &mut recorded,
+            |g| gs.push(g),
+        );
+        assert_eq!(plain, recorded);
+        assert_eq!(gs.len(), 2);
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //!   server drop uploads; the typed NACKs seen by clients must equal the
 //!   server-side drop count in `QueueStats`.
 
+use heron_sfl::coordinator::accounting::CostBook;
 use heron_sfl::coordinator::algorithms::Algorithm;
-use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
 use heron_sfl::coordinator::round::Driver;
 use heron_sfl::net::transport::{loopback_pair, Transport};
 use heron_sfl::net::wire::FRAME_OVERHEAD;
@@ -216,6 +217,11 @@ fn expected_round_bytes(
     let targets = v.batch as u64; // vision: one i32 label per sample
     let f = FRAME_OVERHEAD;
 
+    let lean = c.zo_wire == ZoWireMode::Seeds;
+    // seeds mode ships the flattened h x n_p per-probe scalars; theta
+    // mode ships an empty gscales vector (4-byte length prefix only)
+    let gs_elems = if lean { h * c.n_pert.max(1) as u64 } else { 0 };
+
     let barrier = f + 8 + 4 * p; // round + vec<u32> participants
     let summary = f + 28;
     let model_down = f + 12 + 4 * nl; // round + client + vec<f32> θ
@@ -223,19 +229,24 @@ fn expected_round_bytes(
     // ids(12) + two length-prefixed vectors (smashed f32s, target i32s)
     let smashed = f + 20 + book.smashed_bytes + 4 * targets;
     let ack = f + 17; // ids + bool + empty reason string
-    let zo_update = f + 8 + (4 + 4 * h) + (4 + 4 * h); // ids + seeds + scalars
+    // ids + seeds + scalars + gscales
+    let zo_update =
+        f + 8 + (4 + 4 * h) + (4 + 4 * h) + (4 + 4 * gs_elems);
     let local_done = f + 40;
     let cut_grad = f + 20 + book.cutgrad_bytes; // ids + loss + vec<f32> g
     let align_grad = f + 12 + book.cutgrad_bytes; // ids + vec<f32> g
 
     if c.algorithm.is_decoupled() {
+        // seeds mode: the ZoUpdate record replaces the θ upload entirely
+        let model_ups = if lean { 0 } else { p };
         Expected {
             sent: conns * (barrier + summary)
                 + conns * model_down
                 + p * uploads * ack
                 + align_msgs * align_grad,
             recv: p * uploads * smashed
-                + p * (zo_update + model_up + local_done)
+                + p * (zo_update + local_done)
+                + model_ups * model_up
                 + align_msgs * model_up,
         }
     } else {
@@ -322,6 +333,165 @@ fn measured_wire_bytes_match_analytic_plus_pinned_overhead() {
                 want.recv * rounds,
                 "{}: client->server bytes",
                 alg.name()
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// lean wire mode (--zo_wire seeds): replayed trajectory + lean bytes
+// ---------------------------------------------------------------------------
+
+/// `seeds` vs `theta` wire modes: byte-identical θ trajectories (the
+/// server-side replay is exact), and the seeds run is additionally
+/// bit-identical to an in-process run of the same config — analytic
+/// accounting included.
+fn assert_seeds_mode_bit_identical(variant: &str, n_clients: usize) {
+    with_session(|s| {
+        let mut c_theta = cfg(Algorithm::Heron, n_clients);
+        c_theta.variant = variant.into();
+        c_theta.n_pert = 2;
+        let mut c_seeds = c_theta.clone();
+        c_seeds.zo_wire = ZoWireMode::Seeds;
+        let (net_t, _) = net_run(s, &c_theta, 2);
+        let (net_s, _) = net_run(s, &c_seeds, 2);
+        assert_eq!(
+            net_t.final_theta_l, net_s.final_theta_l,
+            "{variant}: replayed θ_l diverged"
+        );
+        assert_eq!(
+            net_t.final_theta_s, net_s.final_theta_s,
+            "{variant}: θ_s diverged"
+        );
+        for (a, b) in net_t.record.rounds.iter().zip(&net_s.record.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{variant}: train loss, round {}",
+                a.round
+            );
+            assert_eq!(
+                a.eval_metric.to_bits(),
+                b.eval_metric.to_bits(),
+                "{variant}: eval metric, round {}",
+                a.round
+            );
+        }
+        // lean analytic accounting: the seeds run moves (and books)
+        // strictly fewer bytes than the theta run
+        assert!(
+            net_s.record.summary["comm_bytes"]
+                < net_t.record.summary["comm_bytes"],
+            "{variant}: seeds-mode analytic comm is not lean"
+        );
+        assert!(
+            net_s.wire.bytes_recv < net_t.wire.bytes_recv,
+            "{variant}: seeds-mode measured upload is not lean"
+        );
+        // and the seeds net run == the in-process run of the same config,
+        // bit for bit, analytic counters included
+        let (rec, theta_l, theta_s) = in_process(s, &c_seeds);
+        assert_eq!(theta_l, net_s.final_theta_l, "{variant}: θ_l");
+        assert_eq!(theta_s, net_s.final_theta_s, "{variant}: θ_s");
+        for (a, b) in rec.rounds.iter().zip(&net_s.record.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
+    });
+}
+
+#[test]
+fn zo_wire_seeds_bit_identical_vision() {
+    assert_seeds_mode_bit_identical("cnn_c1", 4);
+}
+
+#[test]
+fn zo_wire_seeds_bit_identical_lm() {
+    assert_seeds_mode_bit_identical("gpt2nano_c1_a1", 3);
+}
+
+/// The title claim, measured: with `--zo_wire seeds` the bytes clients
+/// actually put on the wire per round sit strictly below the analytic
+/// `2(|θc|+|θa|)` ModelSync cost of Table I — below even ONE direction
+/// of it, for the whole cohort combined, frame overhead included.
+#[test]
+fn seeds_mode_upload_beats_model_sync_cost() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 3);
+        c.zo_wire = ZoWireMode::Seeds;
+        c.local_steps = 3;
+        c.upload_every = 4; // no smashed uploads this round shape
+        c.n_pert = 2;
+        let (net, _) = net_run(s, &c, 3);
+        let v = s.variant(&c.variant).unwrap();
+        let nl_bytes = (v.size_local() * 4) as u64;
+        let rounds = c.rounds as u64;
+        let per_round_up =
+            net.record.summary["wire_bytes_recv"] as u64 / rounds;
+        assert!(
+            per_round_up < 2 * nl_bytes,
+            "measured c→s {per_round_up} B/round >= analytic sync {} B",
+            2 * nl_bytes
+        );
+        assert!(
+            per_round_up < nl_bytes,
+            "measured c→s {per_round_up} B/round should beat even one \
+             θ_l upload ({nl_bytes} B)"
+        );
+        // the trajectory is still the real one: losses move
+        assert_eq!(net.record.rounds.len(), c.rounds);
+    });
+}
+
+/// Accounting cross-check for the lean mode: measured `ZoUpdate{seeds}`
+/// traffic equals the analytic per-probe scalar count plus the pinned
+/// per-message overhead formula, and the CostBook round formula matches
+/// the recorded analytic deltas exactly.
+#[test]
+fn measured_seeds_wire_bytes_match_formula() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 3);
+        c.zo_wire = ZoWireMode::Seeds;
+        c.n_pert = 2;
+        let n_clients = 3;
+        let (net, _) = net_run(s, &c, n_clients); // 1 client per conn
+        let want = expected_round_bytes(s, &c, n_clients, 0);
+        let rounds = c.rounds as u64;
+        assert_eq!(
+            net.record.summary["wire_bytes_sent"] as u64,
+            want.sent * rounds,
+            "server->client bytes"
+        );
+        assert_eq!(
+            net.record.summary["wire_bytes_recv"] as u64,
+            want.recv * rounds,
+            "client->server bytes"
+        );
+        // analytic CostBook round formula with the lean sync
+        let v = s.variant(&c.variant).unwrap();
+        let book = CostBook::new(v, c.algorithm, c.n_pert as u64)
+            .with_zo_wire(c.zo_wire, c.local_steps as u64);
+        let p = n_clients as u64;
+        let uploads = (c.local_steps / c.upload_every) as u64;
+        let analytic_round =
+            p * (uploads * book.smashed_bytes + book.comm_per_round_sync());
+        // the lean sync is literally θ_l down + h·(seed + n_p scalars) up
+        assert_eq!(
+            book.comm_per_round_sync(),
+            (v.size_local() * 4) as u64
+                + c.local_steps as u64 * (4 + 4 * c.n_pert as u64)
+        );
+        for (round, t) in net.record.rounds.iter().enumerate() {
+            let delta = if round == 0 {
+                t.comm_bytes_cum
+            } else {
+                t.comm_bytes_cum
+                    - net.record.rounds[round - 1].comm_bytes_cum
+            };
+            assert_eq!(
+                delta, analytic_round,
+                "analytic lean round formula drifted (round {round})"
             );
         }
     });

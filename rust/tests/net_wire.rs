@@ -55,6 +55,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             round: g.u64() as u32,
             seeds: arb_i32s(g, 32),
             scalars: arb_f32s(g, 32),
+            gscales: arb_f32s(g, 64),
         },
         5 => Msg::Smashed {
             client: g.u64() as u32,

@@ -1,0 +1,224 @@
+//! The typed `ClientRuntime` surface (runtime/api.rs):
+//!
+//! * trait calls are bit-identical to the name-based entry path for the
+//!   step methods the coordinator drives;
+//! * `zo_step` hands back the per-probe gradient scalars, and
+//!   `(seed, gscales)` alone replays θ' bit-identically
+//!   (`zo::stream::replay_update`) — the `--zo_wire seeds` contract;
+//! * a drifted manifest (stale output slot, renamed tensor, unknown
+//!   entry, reordered inputs) fails at `Session::new`, not at first
+//!   invoke — the stale-slot hazard class is closed at the root.
+
+use heron_sfl::golden;
+use heron_sfl::runtime::api::{ZoArgs, ZoStepRecord};
+use heron_sfl::runtime::tensor::TensorValue;
+use heron_sfl::runtime::Session;
+use heron_sfl::zo::stream::replay_update;
+
+mod common;
+use common::with_session;
+
+/// Pull a named input out of the golden input list for an entry.
+fn named_input(
+    s: &Session,
+    variant: &str,
+    entry: &str,
+    name: &str,
+) -> Option<TensorValue> {
+    let v = s.manifest.variant(variant).unwrap();
+    let espec = v.entry(entry).unwrap();
+    espec
+        .inputs
+        .iter()
+        .position(|sp| sp.name == name)
+        .map(|i| {
+            golden::bench_input(s, variant, &espec.inputs[i], i, &v.task)
+                .unwrap()
+        })
+}
+
+fn as_i32_vec(v: TensorValue) -> Vec<i32> {
+    match v {
+        TensorValue::I32(x) => x,
+        other => panic!("expected i32 tensor, got {other:?}"),
+    }
+}
+
+#[test]
+fn typed_zo_step_matches_entry_and_replays_bitwise() {
+    with_session(|s| {
+        for variant in ["cnn_c1", "gpt2nano_c1_a1"] {
+            let v = s.manifest.variant(variant).unwrap().clone();
+            let espec = v.entry("zo_step").unwrap().clone();
+            let inputs: Vec<TensorValue> = espec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, sp)| {
+                    golden::bench_input(s, variant, sp, i, &v.task).unwrap()
+                })
+                .collect();
+            let entry_outs = s.invoke(variant, "zo_step", &inputs).unwrap();
+            let ti = espec.output_pos("theta_l").unwrap();
+            let li = espec.output_pos("loss").unwrap();
+            let want_theta = entry_outs[ti].as_f32().unwrap();
+            let want_loss = entry_outs[li].scalar_f32().unwrap();
+
+            // rebuild the same arguments for the typed call
+            let get = |n: &str| named_input(s, variant, "zo_step", n);
+            let base: Option<Vec<f32>> =
+                get("base").map(|b| b.into_f32().unwrap());
+            let theta = get("theta_l").unwrap().into_f32().unwrap();
+            let x = get("x").unwrap();
+            let y = as_i32_vec(get("y").unwrap());
+            let seed = match get("seed").unwrap() {
+                TensorValue::ScalarI32(v) => v,
+                TensorValue::I32(v) => v[0],
+                other => panic!("seed: {other:?}"),
+            };
+            let mu = get("mu").unwrap().scalar_f32().unwrap();
+            let lr = get("lr").unwrap().scalar_f32().unwrap();
+            let n_pert = match get("n_pert").unwrap() {
+                TensorValue::ScalarI32(v) => v,
+                TensorValue::I32(v) => v[0],
+                other => panic!("n_pert: {other:?}"),
+            };
+
+            let rt = s.client_runtime(variant).unwrap();
+            let layout = rt.layout();
+            assert_eq!(layout.nl(), v.size_local(), "{variant}: layout");
+            assert_eq!(layout.ns, v.size_server);
+            assert_eq!(layout.nb, v.size_base);
+
+            let mut out = Vec::new();
+            let mut rec = ZoStepRecord::default();
+            rt.zo_step(
+                base.as_deref(),
+                &theta,
+                x.view(),
+                &y,
+                ZoArgs { seed, mu, lr, n_pert },
+                &mut out,
+                &mut rec,
+            )
+            .unwrap();
+
+            // typed == entry, bit for bit
+            assert_eq!(out.len(), want_theta.len(), "{variant}: θ' length");
+            for (i, (a, b)) in out.iter().zip(want_theta).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{variant}: θ'[{i}]");
+            }
+            assert_eq!(
+                rec.loss.to_bits(),
+                want_loss.to_bits(),
+                "{variant}: loss"
+            );
+            assert_eq!(rec.seed, seed);
+            assert_eq!(
+                rec.gscales.len(),
+                n_pert.max(1) as usize,
+                "{variant}: one gscale per probe"
+            );
+
+            // the lean record alone replays the update bit for bit
+            let mut replayed = Vec::new();
+            replay_update(&theta, seed, &rec.gscales, &mut replayed);
+            assert_eq!(replayed.len(), out.len());
+            for (i, (a, b)) in replayed.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{variant}: replay[{i}]"
+                );
+            }
+        }
+    })
+}
+
+#[test]
+fn typed_eval_matches_entry() {
+    with_session(|s| {
+        for variant in ["cnn_c1", "gpt2micro_c2_a1"] {
+            let v = s.manifest.variant(variant).unwrap().clone();
+            let espec = v.entry("eval_full").unwrap().clone();
+            let inputs: Vec<TensorValue> = espec
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, sp)| {
+                    golden::bench_input(s, variant, sp, i, &v.task).unwrap()
+                })
+                .collect();
+            let outs = s.invoke(variant, "eval_full", &inputs).unwrap();
+            let want1 = outs[0].scalar_f32().unwrap();
+            let want2 = outs[1].scalar_f32().unwrap();
+            let get = |n: &str| named_input(s, variant, "eval_full", n);
+            let base: Option<Vec<f32>> =
+                get("base").map(|b| b.into_f32().unwrap());
+            let theta_c = get("theta_c").unwrap().into_f32().unwrap();
+            let theta_s = get("theta_s").unwrap().into_f32().unwrap();
+            let x = get("x").unwrap();
+            let y = as_i32_vec(get("y").unwrap());
+            let rt = s.client_runtime(variant).unwrap();
+            let (s1, s2) = rt
+                .eval_full(base.as_deref(), &theta_c, &theta_s, x.view(), &y)
+                .unwrap();
+            assert_eq!(s1.to_bits(), want1.to_bits(), "{variant}: stat1");
+            assert_eq!(s2.to_bits(), want2.to_bits(), "{variant}: stat2");
+        }
+    })
+}
+
+#[test]
+fn drifted_manifest_fails_at_session_new() {
+    with_session(|s| {
+        // a faithful clone still constructs
+        Session::new(s.manifest.clone()).unwrap();
+
+        // stale extra output slot (the PR-2 hazard, now caught at new)
+        let mut m = s.manifest.clone();
+        {
+            let v = m.variants.get_mut("cnn_c1").unwrap();
+            let e = v.entries.get_mut("zo_step").unwrap();
+            let extra = e.outputs[0].clone();
+            e.outputs.push(extra);
+        }
+        let err = format!("{:#}", Session::new(m).unwrap_err());
+        assert!(err.contains("zo_step"), "should name the entry: {err}");
+
+        // renamed output
+        let mut m = s.manifest.clone();
+        m.variants
+            .get_mut("cnn_c1")
+            .unwrap()
+            .entries
+            .get_mut("fo_step")
+            .unwrap()
+            .outputs[0]
+            .name = "theta".into();
+        assert!(Session::new(m).is_err());
+
+        // unknown entry name
+        let mut m = s.manifest.clone();
+        {
+            let v = m.variants.get_mut("cnn_c1").unwrap();
+            let mut bogus = v.entries.get("zo_step").unwrap().clone();
+            bogus.name = "zo_step_v2".into();
+            v.entries.insert("zo_step_v2".into(), bogus);
+        }
+        let err = format!("{:#}", Session::new(m).unwrap_err());
+        assert!(err.contains("zo_step_v2"), "{err}");
+
+        // dropped input
+        let mut m = s.manifest.clone();
+        m.variants
+            .get_mut("cnn_c1")
+            .unwrap()
+            .entries
+            .get_mut("client_fwd")
+            .unwrap()
+            .inputs
+            .pop();
+        assert!(Session::new(m).is_err());
+    })
+}

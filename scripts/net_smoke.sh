@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# One networked smoke run: `heron-sfl serve` + 2 `connect` client
+# processes over localhost TCP. Shared by the CI net-smoke legs (theta
+# and --zo_wire seeds) so the retry/wait choreography lives in one place.
+#
+# Usage: net_smoke.sh <port> <out_dir> [extra serve/run flags...]
+set -euo pipefail
+
+PORT=$1
+OUT=$2
+shift 2
+
+BIN=${BIN:-target/release/heron-sfl}
+CONFIG=${CONFIG:-configs/net_smoke.json}
+
+"$BIN" serve --config "$CONFIG" "$@" \
+  --listen "127.0.0.1:$PORT" --conns 2 --out "$OUT" &
+SERVER=$!
+
+# no port probe — the server treats any accepted socket as a client
+# connection, so the clients themselves retry instead
+retry_connect() {
+  for _ in $(seq 1 60); do
+    if "$BIN" connect --addr "127.0.0.1:$PORT" --name "$1"; then
+      return 0
+    fi
+    sleep 1
+  done
+  return 1
+}
+
+retry_connect edge-0 &
+C0=$!
+retry_connect edge-1 &
+C1=$!
+wait "$C0" "$C1" "$SERVER"
