@@ -22,6 +22,7 @@ use heron_sfl::bench_harness::{fmt_ns, Bench, Measurement};
 use heron_sfl::coordinator::aggregator::fedavg_into;
 use heron_sfl::coordinator::config::RunConfig;
 use heron_sfl::coordinator::round::Driver;
+use heron_sfl::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use heron_sfl::data::synth_vision;
 use heron_sfl::golden;
 use heron_sfl::runtime::{RuntimeStats, Session};
@@ -118,6 +119,28 @@ fn main() -> Result<()> {
         std::hint::black_box(&replay_out);
     });
 
+    // stream-drain queue mechanics: 16 × 4096-f32 smashed batches (64k
+    // elements) through the bounded MPSC — push + arrival-order FIFO pop,
+    // the per-round queue work `--drain stream` adds to the hot path
+    let payload: Vec<f32> = PerturbStream::new(17).take_vec(4096);
+    b.run("stream_drain_64k", || {
+        let q = ServerQueue::new(32);
+        for step in 1..=16usize {
+            q.push(SmashedBatch {
+                client: 0,
+                round: 0,
+                step,
+                smashed: payload.clone(),
+                targets: vec![0; 32],
+            });
+        }
+        let mut elems = 0usize;
+        while let Some(batch) = q.pop() {
+            elems += batch.smashed.len();
+        }
+        std::hint::black_box(elems);
+    });
+
     Bench::header("runtime entries (cnn_c1, batch 32)");
     let variant = "cnn_c1";
     session.warmup(
@@ -165,6 +188,18 @@ fn main() -> Result<()> {
         "  -> feature cache, one steady-state HERON round: {round_hits} \
          hits / {round_misses} misses ({:.1}% hit rate)",
         100.0 * round_hits as f64 / (round_hits + round_misses).max(1) as f64
+    );
+    // the drain-policy comparison for that round, from the event-sim's
+    // arrival-driven server schedule (recorded into bench_report.json)
+    let (mk_barrier, mk_stream) = driver
+        .timings
+        .last()
+        .map(|t| (t.server_makespan_barrier, t.server_makespan_stream))
+        .unwrap_or((0.0, 0.0));
+    println!(
+        "  -> simulated server makespan: barrier {mk_barrier:.3}s vs \
+         stream {mk_stream:.3}s ({:.1}% lower pipelined)",
+        100.0 * (1.0 - mk_stream / mk_barrier.max(1e-12))
     );
 
     // ---- parallel round engine: sequential vs worker-pool wall clock ----
@@ -230,6 +265,8 @@ fn main() -> Result<()> {
             &st,
             round_hits,
             round_misses,
+            mk_barrier,
+            mk_stream,
         )?;
         println!("wrote JSON report to {path}");
     }
@@ -252,6 +289,8 @@ fn write_report(
     st: &RuntimeStats,
     round_hits: u64,
     round_misses: u64,
+    mk_barrier: f64,
+    mk_stream: f64,
 ) -> Result<()> {
     let benchmarks: Vec<Value> = results
         .iter()
@@ -291,6 +330,11 @@ fn write_report(
             "alloc_avoided_bytes",
             Value::Num(st.alloc_avoided_bytes as f64),
         ),
+        // event-sim drain-policy comparison for one steady-state round:
+        // virtual server completion under the barrier schedule vs
+        // arrival-order mid-round consumption (`--drain stream`)
+        ("server_makespan_barrier_seconds", Value::Num(mk_barrier)),
+        ("server_makespan_stream_seconds", Value::Num(mk_stream)),
     ]);
     std::fs::write(path, report.to_string_pretty())?;
     Ok(())

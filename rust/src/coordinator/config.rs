@@ -2,6 +2,7 @@
 //! and dotted CLI overrides.
 
 use crate::coordinator::algorithms::Algorithm;
+use crate::coordinator::drain::{DrainConfigError, DrainMode};
 use crate::data::partition::Scheme;
 use crate::util::cli::Args;
 use crate::util::json::Value;
@@ -79,6 +80,10 @@ pub struct RunConfig {
     /// HERON upload wire mode: `theta` (full θ_l up) or `seeds`
     /// (seed + per-probe scalars up, server replays the update)
     pub zo_wire: ZoWireMode,
+    /// Server drain policy: `barrier` (Eq. 7 order at the round barrier,
+    /// bit-identical — the default) or `stream` (arrival-order
+    /// consumption mid-round, decoupled algorithms only)
+    pub drain: DrainMode,
 }
 
 impl Default for RunConfig {
@@ -105,6 +110,7 @@ impl Default for RunConfig {
             workers: 0,
             queue_capacity: 0,
             zo_wire: ZoWireMode::Theta,
+            drain: DrainMode::Barrier,
         }
     }
 }
@@ -135,6 +141,26 @@ impl RunConfig {
                  requires the HERON algorithm (got {})",
                 self.algorithm.name()
             );
+        }
+        // `--drain stream` needs the decoupled upload queue: the locked
+        // baselines (SFLV1/V2) answer every smashed upload synchronously
+        // inside the training lock, so there is nothing to stream.
+        //
+        // `--drain stream` + `--zo_wire seeds` is deliberately ALLOWED:
+        // the seeds replay reconstructs each client's θ_l from the
+        // round's *broadcast* θ and the client's own (seed, gscales)
+        // record — it never reads the smashed queue, so replay ordering
+        // does not require the barrier (pinned bit-identical across
+        // drain modes in `rust/tests/drain_stream.rs`).
+        if self.drain == DrainMode::Stream && !self.algorithm.is_decoupled()
+        {
+            return Err(anyhow::Error::new(DrainConfigError {
+                drain: self.drain,
+                algorithm: self.algorithm.name(),
+                reason: "the locked baselines have no decoupled upload \
+                         queue to consume mid-round (every smashed batch \
+                         is answered inside the per-step training lock)",
+            }));
         }
         Ok(())
     }
@@ -190,6 +216,10 @@ impl RunConfig {
             "zo_wire" => {
                 self.zo_wire = ZoWireMode::parse(v)
                     .with_context(|| format!("unknown zo_wire mode {v}"))?
+            }
+            "drain" => {
+                self.drain = DrainMode::parse(v)
+                    .with_context(|| format!("unknown drain mode {v}"))?
             }
             // non-config CLI flags pass through silently
             _ => {}
@@ -249,6 +279,7 @@ impl RunConfig {
             ("workers", Value::str(&self.workers.to_string())),
             ("queue_capacity", Value::str(&self.queue_capacity.to_string())),
             ("zo_wire", Value::str(self.zo_wire.name())),
+            ("drain", Value::str(self.drain.name())),
         ];
         match self.scheme {
             Scheme::Iid => pairs.push(("iid", Value::str("true"))),
@@ -273,7 +304,7 @@ impl RunConfig {
             self.workers.to_string()
         };
         format!(
-            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | wire={} workers={w} | {:?}",
+            "{} on {} | N={} part={:.0}% rounds={} h={} k={} | lr_c={} lr_s={} mu={} np={} | wire={} drain={} workers={w} | {:?}",
             self.algorithm.name(),
             self.variant,
             self.n_clients,
@@ -286,6 +317,7 @@ impl RunConfig {
             self.mu,
             self.n_pert,
             self.zo_wire.name(),
+            self.drain.name(),
             self.scheme,
         )
     }
@@ -389,10 +421,13 @@ mod tests {
             assert_eq!(back.eval_holdout, cfg.eval_holdout);
             assert_eq!(back.queue_capacity, cfg.queue_capacity);
             assert_eq!(back.zo_wire, cfg.zo_wire);
+            assert_eq!(back.drain, cfg.drain);
             // second lap exercises the IID branch + the seeds wire mode
+            // + the stream drain policy
             cfg.scheme = Scheme::Iid;
             cfg.algorithm = Algorithm::Heron;
             cfg.zo_wire = ZoWireMode::Seeds;
+            cfg.drain = DrainMode::Stream;
         }
     }
 
@@ -411,6 +446,52 @@ mod tests {
         cfg.validate().unwrap();
         assert!(ZoWireMode::parse("nope").is_none());
         assert_eq!(ZoWireMode::parse("lean"), Some(ZoWireMode::Seeds));
+    }
+
+    #[test]
+    fn drain_flag_parses_and_gates_on_decoupled() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--drain", "stream"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.drain, DrainMode::Stream);
+        // decoupled algorithms stream fine — HERON (default) included
+        cfg.validate().unwrap();
+        cfg.algorithm = Algorithm::FslSage;
+        cfg.validate().unwrap();
+        // the locked baselines are rejected with the *typed* error
+        for alg in [Algorithm::SflV1, Algorithm::SflV2] {
+            cfg.algorithm = alg;
+            let err = cfg.validate().unwrap_err();
+            let typed = err
+                .downcast_ref::<DrainConfigError>()
+                .expect("stream+locked must carry a DrainConfigError");
+            assert_eq!(typed.drain, DrainMode::Stream);
+            assert_eq!(typed.algorithm, alg.name());
+            // barrier mode stays valid for the same algorithm
+            let mut ok = cfg.clone();
+            ok.drain = DrainMode::Barrier;
+            ok.validate().unwrap();
+        }
+        assert!(DrainMode::parse("nope").is_none());
+    }
+
+    #[test]
+    fn stream_drain_composes_with_seeds_wire_mode() {
+        // The decision of record: seeds replay reads only the round's
+        // broadcast θ plus the client's own record — it never touches
+        // the smashed queue — so stream drain does NOT invalidate it.
+        let mut cfg = RunConfig::default();
+        cfg.algorithm = Algorithm::Heron;
+        cfg.zo_wire = ZoWireMode::Seeds;
+        cfg.drain = DrainMode::Stream;
+        cfg.validate().unwrap();
+        // and the inverse gates still hold independently
+        cfg.algorithm = Algorithm::CseFsl;
+        assert!(cfg.validate().is_err(), "seeds still requires HERON");
+        cfg.zo_wire = ZoWireMode::Theta;
+        cfg.validate().unwrap(); // cse + stream + theta is fine
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Pluggable server drain policy (substrate S23): *when* the Main-Server
+//! consumes queued smashed uploads, and in *what order*.
+//!
+//! The paper's Eq. (7) server phase is a barrier drain: every upload of
+//! the round is held until all participants finish their local phase,
+//! then consumed in deterministic `(round, client, step)` order. That is
+//! bit-reproducible but leaves the (compute-rich, FO) server idle while
+//! slow ZO clients finish — exactly the straggler regime AdaptSFL
+//! (arXiv:2403.13101) targets. The `stream` policy trades the
+//! bit-identity contract for latency: uploads are consumed in **arrival
+//! order, mid-round**, overlapping the client phase with the server's FO
+//! steps (SFLV2-style pipelining).
+//!
+//! Both execution modes go through the same two hooks:
+//!
+//! * [`DrainPolicy::take_ready`] — the mid-round probe. Called whenever
+//!   new uploads may have arrived (after each wire event on the
+//!   networked dispatcher; continuously by the in-process consumer
+//!   loop). `barrier` releases nothing; `stream` releases everything
+//!   currently queued, FIFO.
+//! * [`DrainPolicy::take_at_barrier`] — the round barrier. `barrier`
+//!   performs the full Eq. (7) sorted drain; `stream` hands over
+//!   whatever stragglers remain, still in arrival order.
+//!
+//! What each mode guarantees:
+//!
+//! | | `barrier` (default) | `stream` |
+//! |---|---|---|
+//! | θ_s update order | Eq. (7): `(round, client, step)` | arrival order |
+//! | trajectory | bit-identical for any worker/connection count | θ_l + per-step losses still bit-identical for HERON/CSE-FSL (the client phase is θ_s-independent); θ_s, eval metrics — and FSL-SAGE's aligned θ_l, which feeds on mid-round cut gradients — depend on the arrival order |
+//! | server idle | waits for the slowest client | consumes mid-round |
+//! | algorithms | all | decoupled only (HERON, CSE-FSL, FSL-SAGE) |
+//!
+//! `--zo_wire seeds` composes with `stream`: the server-side ZO replay
+//! reconstructs each client's θ_l from the *round broadcast* θ and the
+//! client's own `(seed, gscales)` record — it never reads the smashed
+//! queue, so replay ordering does not require the barrier (enforced
+//! decision of `RunConfig::validate`; pinned in
+//! `rust/tests/drain_stream.rs`). The locked baselines (SFLV1/V2) have
+//! no decoupled queue to stream from — `stream` is rejected for them
+//! with a typed [`DrainConfigError`].
+
+use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
+use std::fmt;
+
+/// Which drain policy a run executes (`--drain`, config key `drain`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DrainMode {
+    /// Hold every upload until the round barrier; consume in Eq. (7)
+    /// `(round, client, step)` order. Bit-identical to the sequential
+    /// reference for any worker/connection count.
+    #[default]
+    Barrier,
+    /// Consume uploads in arrival order, mid-round, overlapping the
+    /// client phase with the server FO steps.
+    Stream,
+}
+
+impl DrainMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrainMode::Barrier => "barrier",
+            DrainMode::Stream => "stream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" | "eq7" | "sorted" => Some(DrainMode::Barrier),
+            "stream" | "streaming" | "arrival" => Some(DrainMode::Stream),
+            _ => None,
+        }
+    }
+
+    /// The policy object for this mode (stateless, so `'static`).
+    pub fn policy(&self) -> &'static dyn DrainPolicy {
+        match self {
+            DrainMode::Barrier => &BarrierDrain,
+            DrainMode::Stream => &StreamDrain,
+        }
+    }
+}
+
+/// Typed rejection for a `--drain` / algorithm / wire-mode combination
+/// the engine cannot honor. Carried inside `anyhow::Error` by
+/// `RunConfig::validate` so callers can `downcast_ref` it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DrainConfigError {
+    pub drain: DrainMode,
+    /// `Algorithm::name()` of the offending algorithm
+    pub algorithm: &'static str,
+    pub reason: &'static str,
+}
+
+impl fmt::Display for DrainConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "--drain {} is incompatible with {}: {}",
+            self.drain.name(),
+            self.algorithm,
+            self.reason
+        )
+    }
+}
+
+impl std::error::Error for DrainConfigError {}
+
+/// The consumption schedule over the Main-Server queue. Implementations
+/// are stateless; all queue state lives in [`ServerQueue`].
+pub trait DrainPolicy: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Does consumption overlap the client phase? (Drives the
+    /// in-process round engine's consumer-thread setup and the
+    /// networked client's choice of upload message.)
+    fn streams(&self) -> bool;
+
+    /// Mid-round probe: the batches the server may consume *now*, in
+    /// this policy's consumption order.
+    fn take_ready(&self, queue: &ServerQueue) -> Vec<SmashedBatch>;
+
+    /// Round barrier: the remaining batches, in this policy's
+    /// consumption order. Everything, for `barrier`; stragglers the
+    /// mid-round probes missed, for `stream`.
+    fn take_at_barrier(&self, queue: &ServerQueue) -> Vec<SmashedBatch>;
+}
+
+/// Eq. (7): nothing mid-round, everything sorted at the barrier.
+pub struct BarrierDrain;
+
+impl DrainPolicy for BarrierDrain {
+    fn name(&self) -> &'static str {
+        "barrier"
+    }
+
+    fn streams(&self) -> bool {
+        false
+    }
+
+    fn take_ready(&self, _queue: &ServerQueue) -> Vec<SmashedBatch> {
+        Vec::new()
+    }
+
+    fn take_at_barrier(&self, queue: &ServerQueue) -> Vec<SmashedBatch> {
+        queue.drain_sorted()
+    }
+}
+
+/// Arrival order, mid-round (SFLV2-style pipelining).
+pub struct StreamDrain;
+
+impl DrainPolicy for StreamDrain {
+    fn name(&self) -> &'static str {
+        "stream"
+    }
+
+    fn streams(&self) -> bool {
+        true
+    }
+
+    fn take_ready(&self, queue: &ServerQueue) -> Vec<SmashedBatch> {
+        queue.drain_fifo()
+    }
+
+    fn take_at_barrier(&self, queue: &ServerQueue) -> Vec<SmashedBatch> {
+        queue.drain_fifo()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(client: usize, round: usize, step: usize) -> SmashedBatch {
+        SmashedBatch {
+            client,
+            round,
+            step,
+            smashed: vec![0.0; 2],
+            targets: vec![1],
+        }
+    }
+
+    fn fill(q: &ServerQueue) {
+        // deliberately out of (round, client, step) order
+        q.push(batch(2, 0, 1));
+        q.push(batch(0, 0, 2));
+        q.push(batch(1, 0, 1));
+        q.push(batch(0, 0, 1));
+    }
+
+    fn keys(batches: &[SmashedBatch]) -> Vec<(usize, usize, usize)> {
+        batches.iter().map(|b| (b.round, b.client, b.step)).collect()
+    }
+
+    #[test]
+    fn barrier_releases_nothing_mid_round_and_sorts_at_barrier() {
+        let q = ServerQueue::new(16);
+        fill(&q);
+        let p = DrainMode::Barrier.policy();
+        assert!(!p.streams());
+        assert!(p.take_ready(&q).is_empty());
+        assert_eq!(q.len(), 4, "mid-round probe must not consume");
+        assert_eq!(
+            keys(&p.take_at_barrier(&q)),
+            vec![(0, 0, 1), (0, 0, 2), (0, 1, 1), (0, 2, 1)]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn stream_releases_arrival_order_mid_round() {
+        let q = ServerQueue::new(16);
+        fill(&q);
+        let p = DrainMode::Stream.policy();
+        assert!(p.streams());
+        assert_eq!(
+            keys(&p.take_ready(&q)),
+            vec![(0, 2, 1), (0, 0, 2), (0, 1, 1), (0, 0, 1)],
+            "stream consumes in arrival (FIFO) order"
+        );
+        assert!(q.is_empty());
+        // stragglers after the probe still come out in arrival order
+        q.push(batch(3, 0, 1));
+        q.push(batch(1, 0, 2));
+        assert_eq!(
+            keys(&p.take_at_barrier(&q)),
+            vec![(0, 3, 1), (0, 1, 2)]
+        );
+    }
+
+    #[test]
+    fn mode_parse_and_names() {
+        assert_eq!(DrainMode::parse("barrier"), Some(DrainMode::Barrier));
+        assert_eq!(DrainMode::parse("STREAM"), Some(DrainMode::Stream));
+        assert_eq!(DrainMode::parse("arrival"), Some(DrainMode::Stream));
+        assert_eq!(DrainMode::parse("nope"), None);
+        assert_eq!(DrainMode::default(), DrainMode::Barrier);
+        assert_eq!(DrainMode::Stream.policy().name(), "stream");
+        assert_eq!(DrainMode::Barrier.policy().name(), "barrier");
+    }
+
+    #[test]
+    fn typed_error_formats() {
+        let e = DrainConfigError {
+            drain: DrainMode::Stream,
+            algorithm: "SFLV2",
+            reason: "locked baselines have no decoupled upload queue",
+        };
+        let s = e.to_string();
+        assert!(s.contains("stream") && s.contains("SFLV2"), "{s}");
+    }
+}

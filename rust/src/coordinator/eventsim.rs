@@ -19,6 +19,28 @@
 //! makespan estimate (`host_makespan`) — the greedy least-loaded schedule
 //! of the per-client virtual compute over `workers` lanes — so virtual-time
 //! accounting can be compared against observed wall-clock parallelism.
+//!
+//! ## Arrival-time-driven server occupancy (`--drain` comparison)
+//!
+//! Every queued smashed upload is stamped with the uploading client's
+//! virtual lane time ([`ClientLane::upload_queued`] in-process; the
+//! `SmashedSeq` wire message's `sent_at` on the networked path). From
+//! those arrivals and the round's total server busy time the simulator
+//! derives, for *every* round regardless of which policy actually ran:
+//!
+//! * `server_makespan_barrier` — server completion when consumption
+//!   waits for the round barrier: `client_phase + Σ per-batch cost`;
+//! * `server_makespan_stream` — completion when consuming in arrival
+//!   order mid-round: `t ← max(t, arrival) + cost` over the
+//!   arrival-sorted events (the server starts as soon as the first
+//!   upload lands, so stream ≤ barrier, strictly under skewed or
+//!   mid-round arrivals);
+//! * `queue_wait_{barrier,stream}` — summed virtual time batches sit in
+//!   the queue before service begins, under each schedule.
+//!
+//! Per-client latency skew (slow stragglers vs fast devices) is modeled
+//! with [`RoundSim::set_client_speed`], which scales a client's whole
+//! lane (compute and link) when it merges.
 
 use crate::coordinator::server_queue::QueueStats;
 
@@ -95,6 +117,20 @@ pub struct RoundTiming {
     pub queue: QueueStats,
     /// measured wire traffic for this round (networked runs only)
     pub wire: WireRoundStats,
+    /// server completion time (virtual s) if consumption waits for the
+    /// round barrier: `client_phase + server busy time`
+    pub server_makespan_barrier: f64,
+    /// server completion time (virtual s) when consuming queued uploads
+    /// in arrival order mid-round; equals the barrier makespan when no
+    /// arrival events were recorded (locked algorithms, or a networked
+    /// barrier run where `sent_at` never crosses the wire)
+    pub server_makespan_stream: f64,
+    /// summed virtual time batches wait in the queue before service
+    /// begins, under the barrier schedule (arrival-sorted service from
+    /// the barrier onward)
+    pub queue_wait_barrier: f64,
+    /// same, under the arrival-order mid-round schedule
+    pub queue_wait_stream: f64,
 }
 
 impl RoundTiming {
@@ -111,6 +147,10 @@ pub struct ClientLane {
     profile: DeviceProfile,
     pub time: f64,
     pub idle: f64,
+    /// virtual times at which this lane's *queued* uploads reach the
+    /// server (stamped by [`Self::upload_queued`]; drives the drain
+    /// policy makespan comparison)
+    pub arrivals: Vec<f64>,
 }
 
 impl ClientLane {
@@ -119,6 +159,7 @@ impl ClientLane {
             profile: *profile,
             time: 0.0,
             idle: 0.0,
+            arrivals: Vec::new(),
         }
     }
 
@@ -128,6 +169,23 @@ impl ClientLane {
 
     pub fn upload(&mut self, bytes: u64) {
         self.time += bytes as f64 / self.profile.uplink_bps + self.profile.rtt;
+    }
+
+    /// An upload that lands in the Main-Server queue: charges the
+    /// transfer like [`Self::upload`] and records the completion time as
+    /// the batch's server-side arrival event.
+    pub fn upload_queued(&mut self, bytes: u64) {
+        self.upload(bytes);
+        self.mark_arrival();
+    }
+
+    /// Record the lane's current time as a server-side arrival event.
+    /// Callers that must first learn whether the queue *accepted* the
+    /// upload (a dropped batch is never serviced, so it must not enter
+    /// the server-occupancy schedule) charge [`Self::upload`] and then
+    /// call this on success.
+    pub fn mark_arrival(&mut self) {
+        self.arrivals.push(self.time);
     }
 
     pub fn download(&mut self, bytes: u64) {
@@ -152,7 +210,12 @@ pub struct RoundSim {
     profile: DeviceProfile,
     client_times: Vec<f64>,
     client_idle: Vec<f64>,
+    /// per-client device speed factor (1.0 = the profile as-is; 0.5 = a
+    /// straggler running at half speed). Applied when a lane merges.
+    client_speed: Vec<f64>,
     server_time: f64,
+    /// virtual arrival times of queued uploads at the server
+    arrivals: Vec<f64>,
     sync_bytes: u64,
     workers: usize,
     queue_stats: QueueStats,
@@ -165,12 +228,31 @@ impl RoundSim {
             profile: *profile,
             client_times: vec![0.0; n_clients],
             client_idle: vec![0.0; n_clients],
+            client_speed: vec![1.0; n_clients],
             server_time: 0.0,
+            arrivals: Vec::new(),
             sync_bytes: 0,
             workers: n_clients.max(1),
             queue_stats: QueueStats::default(),
             wire: WireRoundStats::default(),
         }
+    }
+
+    /// Skew one client's device speed: its whole lane (compute and
+    /// link) is divided by `factor` at merge time, so `0.5` makes the
+    /// client a 2× straggler. Whole-lane scaling means locked-phase
+    /// server waits are scaled too — fine for the decoupled regime this
+    /// knob models.
+    pub fn set_client_speed(&mut self, client: usize, factor: f64) {
+        self.client_speed[client] = factor.max(1e-9);
+    }
+
+    /// Record a queued upload's server-side arrival at an externally
+    /// measured virtual time (networked path: the `SmashedSeq` frame's
+    /// `sent_at`). The in-process path records arrivals through
+    /// [`ClientLane::upload_queued`] + [`Self::merge_lane`] instead.
+    pub fn upload_arrival(&mut self, at: f64) {
+        self.arrivals.push(at);
     }
 
     /// Record the host worker-pool width used for this round.
@@ -192,10 +274,14 @@ impl RoundSim {
         ClientLane::new(&self.profile)
     }
 
-    /// Merge a worker-thread lane into this client's virtual-time account.
+    /// Merge a worker-thread lane into this client's virtual-time
+    /// account, applying the client's speed factor to every duration
+    /// (and therefore to its upload arrival events).
     pub fn merge_lane(&mut self, client: usize, lane: &ClientLane) {
-        self.client_times[client] += lane.time;
-        self.client_idle[client] += lane.idle;
+        let s = self.client_speed[client];
+        self.client_times[client] += lane.time / s;
+        self.client_idle[client] += lane.idle / s;
+        self.arrivals.extend(lane.arrivals.iter().map(|a| a / s));
     }
 
     // The per-event formulas live once, in ClientLane; the sequential
@@ -248,6 +334,8 @@ impl RoundSim {
             / n
             + self.profile.rtt;
         let host_makespan = makespan(&self.client_times, self.workers);
+        let (server_makespan_barrier, server_makespan_stream, wb, ws) =
+            server_schedules(client_phase, self.server_time, self.arrivals);
         RoundTiming {
             client_phase,
             server_phase: self.server_time,
@@ -257,8 +345,51 @@ impl RoundSim {
             host_makespan,
             queue: self.queue_stats,
             wire: self.wire,
+            server_makespan_barrier,
+            server_makespan_stream,
+            queue_wait_barrier: wb,
+            queue_wait_stream: ws,
         }
     }
+}
+
+/// The barrier-vs-stream server schedules over one round's upload
+/// arrival events. Both assume a uniform per-batch service cost
+/// (`server_time / n_events` — true for the Eq. (7) FO step, which costs
+/// the same forward+backward for every batch) and arrival-sorted service
+/// order. Returns `(barrier_makespan, stream_makespan, barrier_wait,
+/// stream_wait)`; with no recorded arrivals the stream schedule
+/// degenerates to the barrier one.
+fn server_schedules(
+    client_phase: f64,
+    server_time: f64,
+    mut arrivals: Vec<f64>,
+) -> (f64, f64, f64, f64) {
+    let barrier = client_phase + server_time;
+    if arrivals.is_empty() {
+        return (barrier, barrier, 0.0, 0.0);
+    }
+    // total_cmp: never panics — non-finite garbage (rejected at the wire
+    // ingress, but belt-and-braces here) sorts to an end instead of
+    // crashing the round accounting
+    arrivals.sort_by(f64::total_cmp);
+    let per = server_time / arrivals.len() as f64;
+    // barrier: service starts at the round barrier (client_phase; every
+    // arrival precedes it by construction), one batch after another
+    let mut wait_barrier = 0.0;
+    for (i, &a) in arrivals.iter().enumerate() {
+        wait_barrier += client_phase + i as f64 * per - a;
+    }
+    // stream: the server takes each batch as soon as it is free and the
+    // batch has arrived
+    let mut t = 0.0f64;
+    let mut wait_stream = 0.0;
+    for &a in &arrivals {
+        let start = t.max(a);
+        wait_stream += start - a;
+        t = start + per;
+    }
+    (barrier, t, wait_barrier, wait_stream)
 }
 
 /// Greedy least-loaded schedule of `times` over `lanes` workers, assigning
@@ -379,6 +510,106 @@ mod tests {
         assert!((makespan(&times, 2) - 2.0).abs() < 1e-12);
         // skewed loads balance greedily
         assert!((makespan(&[3.0, 1.0, 1.0, 1.0], 2) - 3.0).abs() < 1e-12);
+    }
+
+    /// The drain-policy comparison on a hand-computed 2-client / 3-step
+    /// schedule with skewed per-client latencies (the stream-drain test
+    /// fixture): client 0 at full speed, client 1 a 2× straggler.
+    ///
+    /// Per client (before skew), with the profile above: each step costs
+    /// 1 s of compute (1e9 FLOPs at 1e9 FLOP/s) and is followed by a
+    /// queued upload of 1e6 B (1 s at 1e6 B/s + 0.01 rtt). So one lane is
+    ///   step1 → 1.00, up1 done 2.01   (arrival 2.01)
+    ///   step2 → 3.01, up2 done 4.02   (arrival 4.02)
+    ///   step3 → 5.02, up3 done 6.03   (arrival 6.03)
+    /// Client 1 at speed 0.5 doubles everything: arrivals 4.02, 8.04,
+    /// 12.06; lane total 12.06 = client_phase.
+    ///
+    /// Server: 6 batches × 1e12 FLOPs at 1e12 FLOP/s = 1 s each
+    /// (server_time 6 s).
+    ///
+    /// barrier: starts at the barrier (12.06), runs 6 s → makespan 18.06.
+    /// stream (arrival-sorted 2.01, 4.02, 4.02, 6.03, 8.04, 12.06):
+    ///   t = 3.01, 5.02, 6.02, 7.03, 9.04, 13.06 → makespan 13.06,
+    /// strictly below the barrier schedule — the pipelining win.
+    #[test]
+    fn skewed_two_client_three_step_schedule_hand_computed() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 2);
+        sim.set_client_speed(1, 0.5); // the straggler fixture
+        for ci in 0..2usize {
+            let mut lane = sim.lane();
+            for _ in 0..3 {
+                lane.compute(1_000_000_000);
+                lane.upload_queued(1_000_000);
+            }
+            sim.merge_lane(ci, &lane);
+        }
+        for _ in 0..6 {
+            sim.server_compute(1_000_000_000_000);
+        }
+        let t = sim.finish();
+        let eps = 1e-9;
+        assert!((t.client_phase - 12.06).abs() < eps, "{}", t.client_phase);
+        assert!((t.server_phase - 6.0).abs() < eps);
+        assert!(
+            (t.server_makespan_barrier - 18.06).abs() < eps,
+            "barrier {}",
+            t.server_makespan_barrier
+        );
+        assert!(
+            (t.server_makespan_stream - 13.06).abs() < eps,
+            "stream {}",
+            t.server_makespan_stream
+        );
+        assert!(
+            t.server_makespan_stream < t.server_makespan_barrier,
+            "pipelined consumption must strictly beat the barrier"
+        );
+        // queue waits, hand-computed over the same schedules: barrier
+        // service starts 12.06, 13.06, …, 17.06 (sum 87.36) minus the
+        // arrivals (2.01+4.02+4.02+6.03+8.04+12.06 = 36.18) → 51.18.
+        assert!((t.queue_wait_barrier - 51.18).abs() < 1e-6,
+            "barrier wait {}", t.queue_wait_barrier);
+        // stream starts: 2.01, 4.02, 5.02, 6.03, 8.04, 12.06 → waits
+        // 0 + 0 + 1.00 + 0 + 0 + 0 = 1.00.
+        assert!((t.queue_wait_stream - 1.0).abs() < 1e-6,
+            "stream wait {}", t.queue_wait_stream);
+    }
+
+    /// Both drain schedules without skew and with uniform mid-round
+    /// arrivals: stream still strictly wins because the server starts
+    /// before the barrier; with NO recorded arrivals (locked algorithms)
+    /// the two schedules coincide.
+    #[test]
+    fn stream_schedule_degenerates_without_arrivals() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 2);
+        sim.client_compute(0, 2_000_000_000);
+        sim.server_compute(3_000_000_000_000);
+        let t = sim.finish();
+        assert_eq!(t.server_makespan_barrier, t.server_makespan_stream);
+        assert!((t.server_makespan_barrier - 5.0).abs() < 1e-9);
+        assert_eq!(t.queue_wait_barrier, 0.0);
+        assert_eq!(t.queue_wait_stream, 0.0);
+    }
+
+    #[test]
+    fn upload_arrival_feeds_the_stream_schedule() {
+        // the networked path records arrivals directly (SmashedSeq
+        // sent_at) — equivalent to lane-merged arrivals
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 1);
+        let mut lane = sim.lane();
+        lane.compute(4_000_000_000); // client busy 4 s
+        sim.merge_lane(0, &lane);
+        sim.upload_arrival(1.0);
+        sim.upload_arrival(2.0);
+        sim.server_compute(2_000_000_000_000); // 2 batches x 1 s
+        let t = sim.finish();
+        assert!((t.server_makespan_barrier - 6.0).abs() < 1e-9);
+        // stream: start 1.0 → done 2.0; start 2.0 → done 3.0
+        assert!((t.server_makespan_stream - 3.0).abs() < 1e-9);
     }
 
     #[test]

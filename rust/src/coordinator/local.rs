@@ -133,16 +133,39 @@ pub struct LocalOutcome {
     pub lane: ClientLane,
 }
 
+/// Per-upload metadata for the server's drain policy, stamped by
+/// [`upload_smashed`] next to the batch itself:
+///
+/// * `seq` — the client's per-round upload index (1-based, strictly
+///   increasing). In `--drain stream` the networked dispatcher rejects
+///   gaps or reordering, so an out-of-order transport cannot silently
+///   reshuffle the arrival-order consumption schedule.
+/// * `sent_at` — the client's virtual lane time when the upload leaves
+///   the device; drives the event-sim's arrival-order server schedule
+///   on the networked path (in-process, the same value flows through
+///   [`ClientLane::mark_arrival`] and the barrier lane merge — recorded
+///   only when the queue accepted the upload, since dropped batches are
+///   never serviced).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UploadTag {
+    pub seq: usize,
+    pub sent_at: f64,
+}
+
 /// Where a client's smashed uploads go. In-process this is the
 /// Main-Server's [`ServerQueue`]; over the network it is a framed
-/// `SmashedBatch` message (acknowledged, so capacity drops surface as
-/// typed NACKs). Returns `false` when the batch was dropped.
+/// `Smashed` (barrier) or `SmashedSeq` (stream) message (acknowledged,
+/// so capacity drops surface as typed NACKs). Returns `false` when the
+/// batch was dropped.
 pub trait SmashedSink: Sync {
-    fn push_smashed(&self, batch: SmashedBatch) -> bool;
+    fn push_smashed(&self, batch: SmashedBatch, tag: UploadTag) -> bool;
 }
 
 impl SmashedSink for ServerQueue {
-    fn push_smashed(&self, batch: SmashedBatch) -> bool {
+    /// The in-process queue is FIFO, so the arrival order IS the push
+    /// order and the tag carries no extra information here (arrival
+    /// times reach the sim through the client's lane instead).
+    fn push_smashed(&self, batch: SmashedBatch, _tag: UploadTag) -> bool {
         self.push(batch)
     }
 }
@@ -320,13 +343,24 @@ fn upload_smashed(
         cs.last_upload =
             Some((smashed.clone(), targets.clone(), x_i32));
     }
-    sink.push_smashed(SmashedBatch {
-        client: ci,
-        round: ctx.round_idx,
-        step,
-        smashed,
-        targets,
-    });
+    let accepted = sink.push_smashed(
+        SmashedBatch {
+            client: ci,
+            round: ctx.round_idx,
+            step,
+            smashed,
+            targets,
+        },
+        UploadTag {
+            seq: step / ctx.cfg.upload_every,
+            sent_at: lane.time,
+        },
+    );
+    // only accepted uploads become server-side work: a dropped batch
+    // must not enter the arrival-driven occupancy schedule
+    if accepted {
+        lane.mark_arrival();
+    }
     Ok(())
 }
 

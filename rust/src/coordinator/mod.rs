@@ -7,6 +7,7 @@
 //! * [`round`] — the four-stage round driver over the AOT runtime
 //! * [`aggregator`] — Fed-Server FedAvg (Eq. 8)
 //! * [`server_queue`] — Main-Server sequential smashed-data queue (Eq. 7)
+//! * [`drain`] — pluggable server drain policy (`--drain barrier|stream`)
 //! * [`accounting`] — Table I/II/III resource cost models
 //! * [`eventsim`] — virtual-time latency / training-lock simulator
 //! * [`config`] — experiment configuration
@@ -15,6 +16,7 @@ pub mod accounting;
 pub mod aggregator;
 pub mod algorithms;
 pub mod config;
+pub mod drain;
 pub mod eventsim;
 pub mod local;
 pub mod round;

@@ -37,6 +37,24 @@
 //! batch waits on a server round-trip), so there is no decoupled client
 //! phase to parallelize without changing the algorithm.
 //!
+//! ## Drain policies (`--drain barrier|stream`)
+//!
+//! *When* the Main-Server consumes the queued uploads is pluggable
+//! ([`crate::coordinator::drain`]). The default `barrier` policy holds
+//! everything to the round barrier and drains in Eq. (7) order —
+//! bit-identical for any worker count. The `stream` policy overlaps the
+//! phases: the fan-out produces from a spawned thread while the driver
+//! thread consumes the queue in arrival order mid-round
+//! ([`Driver::server_pump`] is the same mid-round hook for the
+//! networked dispatcher). For HERON and CSE-FSL the θ_l trajectory,
+//! per-step losses, and all analytic accounting stay bit-identical —
+//! the client phase never reads θ_s — while θ_s (and the eval metric)
+//! absorbs batches in arrival order. FSL-SAGE's alignment feedback is a
+//! cut gradient of the *mid-round* θ_s, so under `stream` its aligned
+//! θ_l inherits the arrival order too. Either way, stream trades the
+//! bit-identity contract for server-side latency (measured by the
+//! event-sim's `server_makespan_{barrier,stream}` comparison).
+//!
 //! ## Shared phases, two execution modes
 //!
 //! The client-side step loops live in [`crate::coordinator::local`] and
@@ -75,11 +93,13 @@ use crate::coordinator::local::{
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::Task;
 use crate::metrics::{RoundRecord, RunRecord};
+use crate::runtime::api::ClientRuntime;
 use crate::runtime::tensor::TensorValue;
 use crate::runtime::Session;
 use crate::util::pool;
 use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Adam state threading through the step entries ((m, v, t) or stateless).
 #[derive(Debug, Clone)]
@@ -233,6 +253,9 @@ impl<'s> Driver<'s> {
         let queue = self.round_queue(participants.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
+        // FSL-SAGE cut-gradient feedback; the stream drain policy fills
+        // it mid-round, the barrier policy entirely at `server_drain`
+        let mut feedback: Vec<(usize, Vec<f32>)> = Vec::new();
 
         if self.cfg.algorithm.is_decoupled() {
             self.local_fanout(
@@ -241,6 +264,7 @@ impl<'s> Driver<'s> {
                 &mut sim,
                 &mut losses,
                 &mut updated,
+                &mut feedback,
             )?;
         } else {
             // SFLV1/V2: the per-step training lock serializes each client
@@ -256,7 +280,7 @@ impl<'s> Driver<'s> {
             }
         }
 
-        let feedback = self.server_drain(&queue, &mut sim)?;
+        feedback.extend(self.server_drain(&queue, &mut sim)?);
         self.apply_alignment_local(feedback, &mut updated, &mut sim)?;
         Ok(self.finish_round(&participants, updated, sim, &losses))
     }
@@ -272,6 +296,17 @@ impl<'s> Driver<'s> {
 
     /// Fan the participants' local phases out across the worker pool and
     /// merge outcomes at the barrier in participant order.
+    ///
+    /// Under the `barrier` drain policy the queue just fills up here;
+    /// under `stream` this thread doubles as the Main-Server consumer:
+    /// the pool produces from a spawned thread while the driver pops the
+    /// queue in arrival order and runs the Eq. (7) FO step on each batch
+    /// mid-round — the client phase and the server phase overlap, which
+    /// is the whole point of `--drain stream`. Client-side results stay
+    /// bit-identical either way (the local phases never read θ_s); only
+    /// the order θ_s absorbs batches — and therefore θ_s itself and any
+    /// cut-gradient feedback — follows arrival order instead of the
+    /// deterministic sorted order.
     fn local_fanout(
         &mut self,
         participants: &[usize],
@@ -279,30 +314,112 @@ impl<'s> Driver<'s> {
         sim: &mut RoundSim,
         losses: &mut Vec<f64>,
         updated: &mut Vec<(usize, Vec<f32>)>,
+        feedback: &mut Vec<(usize, Vec<f32>)>,
     ) -> Result<()> {
         let eff = pool::effective_workers(self.cfg.workers, participants.len());
         sim.set_workers(eff);
         let theta0 = self.theta_l.clone();
+        let stream = self.cfg.drain.policy().streams();
+        let srv_step_flops = 3 * self.variant_server_flops();
+        if stream && !matches!(self.opt_server, OptState::None) {
+            bail!(
+                "stream drain: stateful optimizers are not wired through \
+                 the typed runtime (manifest opt_state must be 0)"
+            );
+        }
+        // Disjoint field borrows: the client jobs take &mut clients, the
+        // streaming consumer takes the server-phase arenas, and the
+        // shared context borrows the rest immutably.
+        let this = &mut *self;
         let ctx = LocalCtx {
-            session: self.session,
-            cfg: &self.cfg,
-            book: &self.book,
-            base: self.base.as_deref(),
-            task: self.task,
-            round_idx: self.round_idx,
-            profile: self.profile,
-            nc: self.nc,
+            session: this.session,
+            cfg: &this.cfg,
+            book: &this.book,
+            base: this.base.as_deref(),
+            task: this.task,
+            round_idx: this.round_idx,
+            profile: this.profile,
+            nc: this.nc,
         };
-        // Disjoint &mut borrows of the participating client states.
-        let jobs: Vec<(usize, &mut ClientState)> = self
+        let jobs: Vec<(usize, &mut ClientState)> = this
             .clients
             .iter_mut()
             .enumerate()
             .filter(|(ci, _)| participants.binary_search(ci).is_ok())
             .collect();
-        let results = pool::run_jobs(eff, jobs, |(ci, state)| {
-            local::client_local_phase(&ctx, ci, state, theta0.clone(), queue)
-        });
+        let results: Vec<Result<LocalOutcome>> = if !stream {
+            pool::run_jobs(eff, jobs, |(ci, state)| {
+                local::client_local_phase(&ctx, ci, state, theta0.clone(), queue)
+            })
+        } else {
+            let rt = this.session.client_runtime(&this.cfg.variant)?;
+            let base = this.base.as_deref();
+            let cfg = &this.cfg;
+            let theta_s = &mut this.theta_s;
+            let srv_out = &mut this.srv_out;
+            let srv_cut = &mut this.srv_cut;
+            let producers_done = AtomicBool::new(false);
+            std::thread::scope(
+                |scope| -> Result<Vec<Result<LocalOutcome>>> {
+                    let done = &producers_done;
+                    let producer = scope.spawn(move || {
+                        let r = pool::run_jobs(eff, jobs, |(ci, state)| {
+                            local::client_local_phase(
+                                &ctx,
+                                ci,
+                                state,
+                                theta0.clone(),
+                                queue,
+                            )
+                        });
+                        done.store(true, Ordering::Release);
+                        r
+                    });
+                    // mid-round consumption through the same DrainPolicy
+                    // hook the networked dispatcher uses, until the
+                    // fan-out is done AND the queue is dry
+                    let policy = cfg.drain.policy();
+                    loop {
+                        let batches = policy.take_ready(queue);
+                        if batches.is_empty() {
+                            if producers_done.load(Ordering::Acquire)
+                                && queue.is_empty()
+                            {
+                                break;
+                            }
+                            // park briefly instead of spinning: the gaps
+                            // between uploads span whole local steps, and
+                            // burning a core here would steal throughput
+                            // from the very fan-out this mode overlaps
+                            // with. 50 µs of added wake-up latency is
+                            // noise next to a model step.
+                            std::thread::sleep(
+                                std::time::Duration::from_micros(50),
+                            );
+                            continue;
+                        }
+                        for b in batches {
+                            let want = wants_cutgrad(cfg, b.step);
+                            let g = consume_smashed(
+                                rt,
+                                base,
+                                theta_s,
+                                srv_out,
+                                srv_cut,
+                                cfg.lr_server,
+                                &b,
+                                want,
+                            )?;
+                            sim.server_compute(srv_step_flops);
+                            if let Some(g_sm) = g {
+                                feedback.push((b.client, g_sm));
+                            }
+                        }
+                    }
+                    Ok(producer.join().expect("client fan-out panicked"))
+                },
+            )?
+        };
         for res in results {
             self.absorb_outcome(res?, sim, losses, updated);
         }
@@ -446,12 +563,15 @@ impl<'s> Driver<'s> {
 
     // ---- server phase ------------------------------------------------------
 
-    /// Drain queued smashed batches (Eq. 7) at the round barrier in
-    /// deterministic `(round, client, step)` order, and record the queue's
-    /// occupancy stats into the sim. Returns FSL-SAGE cut-gradient
-    /// feedback `(client, g_smashed)` in drain order; empty for every
-    /// other algorithm (and for the locked baselines, whose queue is
-    /// empty by construction).
+    /// Barrier-time consumption through the configured
+    /// [`crate::coordinator::drain::DrainPolicy`]:
+    /// `barrier` drains everything in deterministic `(round, client,
+    /// step)` Eq. (7) order; `stream` consumes only the stragglers the
+    /// mid-round probes missed (usually none), in arrival order. Also
+    /// records the queue's occupancy stats into the sim. Returns
+    /// FSL-SAGE cut-gradient feedback `(client, g_smashed)` in
+    /// consumption order; empty for every other algorithm (and for the
+    /// locked baselines, whose queue is empty by construction).
     pub(crate) fn server_drain(
         &mut self,
         queue: &ServerQueue,
@@ -459,18 +579,43 @@ impl<'s> Driver<'s> {
     ) -> Result<Vec<(usize, Vec<f32>)>> {
         let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
         if self.cfg.algorithm.is_decoupled() {
-            for b in queue.drain_sorted() {
-                let want_cutgrad = self.cfg.algorithm == Algorithm::FslSage
-                    && b.step % (self.cfg.upload_every * self.cfg.align_every)
-                        == 0;
-                let g = self.server_consume(&b, want_cutgrad, sim)?;
-                if let Some(g_sm) = g {
-                    sage_feedback.push((b.client, g_sm));
-                }
-            }
+            let batches = self.cfg.drain.policy().take_at_barrier(queue);
+            self.consume_batches(batches, sim, &mut sage_feedback)?;
         }
         sim.record_queue(queue.stats());
         Ok(sage_feedback)
+    }
+
+    /// Mid-round consumption tick (the networked dispatcher calls this
+    /// between wire events): hand whatever the drain policy releases —
+    /// everything currently queued under `stream`, nothing under
+    /// `barrier` — to the Eq. (7) server step. Returns the number of
+    /// batches consumed.
+    pub(crate) fn server_pump(
+        &mut self,
+        queue: &ServerQueue,
+        sim: &mut RoundSim,
+        feedback: &mut Vec<(usize, Vec<f32>)>,
+    ) -> Result<usize> {
+        let batches = self.cfg.drain.policy().take_ready(queue);
+        let n = batches.len();
+        self.consume_batches(batches, sim, feedback)?;
+        Ok(n)
+    }
+
+    fn consume_batches(
+        &mut self,
+        batches: Vec<SmashedBatch>,
+        sim: &mut RoundSim,
+        feedback: &mut Vec<(usize, Vec<f32>)>,
+    ) -> Result<()> {
+        for b in batches {
+            let want_cutgrad = wants_cutgrad(&self.cfg, b.step);
+            if let Some(g_sm) = self.server_consume(&b, want_cutgrad, sim)? {
+                feedback.push((b.client, g_sm));
+            }
+        }
+        Ok(())
     }
 
     /// Charge the per-alignment communication for one FSL-SAGE feedback
@@ -534,28 +679,18 @@ impl<'s> Driver<'s> {
             );
         }
         let rt = self.session.client_runtime(&self.cfg.variant)?;
-        let cut = if want_cutgrad {
-            Some(&mut self.srv_cut)
-        } else {
-            None
-        };
-        rt.server_step(
+        let g = consume_smashed(
+            rt,
             self.base.as_deref(),
-            &self.theta_s,
-            &b.smashed,
-            &b.targets,
-            self.cfg.lr_server,
-            cut,
+            &mut self.theta_s,
             &mut self.srv_out,
+            &mut self.srv_cut,
+            self.cfg.lr_server,
+            b,
+            want_cutgrad,
         )?;
-        std::mem::swap(&mut self.theta_s, &mut self.srv_out);
         sim.server_compute(3 * self.variant_server_flops());
-        Ok(if want_cutgrad {
-            // the caller owns the gradient; the buffer re-grows next time
-            Some(std::mem::take(&mut self.srv_cut))
-        } else {
-            None
-        })
+        Ok(g)
     }
 
     /// Aggregation (Fed-Server, Eq. 8) + SFLV1 replica averaging + round
@@ -675,8 +810,17 @@ impl<'s> Driver<'s> {
             wall_seconds: t0.elapsed().as_secs_f64(),
         });
         if eval_due {
+            // per-round queue high watermark (occupancy gauge): what
+            // `queue_capacity` must cover. Barrier mode peaks at the
+            // full round's upload count; stream mode stays lower
+            // because consumption overlaps the fan-out.
+            let q_hwm = self
+                .timings
+                .last()
+                .map(|t| t.queue.max_depth)
+                .unwrap_or(0);
             log::info!(
-                "[{}] round {round}: loss {loss:.4} metric {metric:.4} comm {}",
+                "[{}] round {round}: loss {loss:.4} metric {metric:.4} comm {} q\u{2191}{q_hwm}",
                 rec.name,
                 crate::coordinator::accounting::fmt_bytes(self.comm_bytes)
             );
@@ -717,6 +861,35 @@ impl<'s> Driver<'s> {
                 .map(|t| t.queue.max_depth as f64)
                 .fold(0.0, f64::max),
         );
+        // per-round occupancy high watermark, averaged over the run —
+        // the gauge to size `queue_capacity` with (especially in stream
+        // mode, where mid-round consumption keeps the depth low)
+        rec.set(
+            "queue_hwm_mean",
+            self.timings
+                .iter()
+                .map(|t| t.queue.max_depth as f64)
+                .sum::<f64>()
+                / self.timings.len().max(1) as f64,
+        );
+        // the drain-policy comparison: virtual server completion under
+        // the barrier schedule vs arrival-order mid-round consumption
+        rec.set(
+            "server_makespan_barrier_seconds",
+            self.timings.iter().map(|t| t.server_makespan_barrier).sum(),
+        );
+        rec.set(
+            "server_makespan_stream_seconds",
+            self.timings.iter().map(|t| t.server_makespan_stream).sum(),
+        );
+        rec.set(
+            "queue_wait_barrier_seconds",
+            self.timings.iter().map(|t| t.queue_wait_barrier).sum(),
+        );
+        rec.set(
+            "queue_wait_stream_seconds",
+            self.timings.iter().map(|t| t.queue_wait_stream).sum(),
+        );
         rec.set(
             "wire_bytes_sent",
             self.timings.iter().map(|t| t.wire.bytes_sent as f64).sum(),
@@ -746,4 +919,51 @@ impl<'s> Driver<'s> {
         self.finalize_record(&mut rec);
         Ok(rec)
     }
+}
+
+/// Does this upload step owe FSL-SAGE a cut gradient? (Alignment fires
+/// every `align_every`-th upload.)
+fn wants_cutgrad(cfg: &RunConfig, step: usize) -> bool {
+    cfg.algorithm == Algorithm::FslSage
+        && step % (cfg.upload_every * cfg.align_every) == 0
+}
+
+/// One Eq. (7) server FO step on a queued batch. Free-standing (no
+/// `&mut Driver`) so the streaming fan-out can run it on the driver
+/// thread while `LocalCtx` and the client jobs hold borrows of the
+/// driver's other fields. θ_s' lands in the reused `srv_out` arena and
+/// is swapped — never copied — back; the cut gradient is moved out of
+/// its reused buffer only when requested.
+#[allow(clippy::too_many_arguments)]
+fn consume_smashed(
+    rt: &dyn ClientRuntime,
+    base: Option<&[f32]>,
+    theta_s: &mut Vec<f32>,
+    srv_out: &mut Vec<f32>,
+    srv_cut: &mut Vec<f32>,
+    lr_server: f32,
+    b: &SmashedBatch,
+    want_cutgrad: bool,
+) -> Result<Option<Vec<f32>>> {
+    let cut = if want_cutgrad {
+        Some(&mut *srv_cut)
+    } else {
+        None
+    };
+    rt.server_step(
+        base,
+        theta_s.as_slice(),
+        &b.smashed,
+        &b.targets,
+        lr_server,
+        cut,
+        srv_out,
+    )?;
+    std::mem::swap(theta_s, srv_out);
+    Ok(if want_cutgrad {
+        // the caller owns the gradient; the buffer re-grows next time
+        Some(std::mem::take(srv_cut))
+    } else {
+        None
+    })
 }

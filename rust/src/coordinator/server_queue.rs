@@ -97,6 +97,17 @@ impl ServerQueue {
         out
     }
 
+    /// Arrival-order drain: remove everything currently queued, FIFO —
+    /// the mid-round consumption step of the `stream` drain policy. One
+    /// lock acquisition for the whole snapshot, so a concurrent producer
+    /// cannot interleave *into* the returned prefix.
+    pub fn drain_fifo(&self) -> Vec<SmashedBatch> {
+        let mut g = self.lock();
+        let out: Vec<SmashedBatch> = g.queue.drain(..).collect();
+        g.stats.processed += out.len() as u64;
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.lock().queue.len()
     }
@@ -186,6 +197,23 @@ mod tests {
         );
         assert!(q.is_empty());
         assert_eq!(q.stats().processed, 5);
+    }
+
+    #[test]
+    fn drain_fifo_preserves_arrival_order_and_counts() {
+        let q = ServerQueue::new(16);
+        q.push(batch_at(2, 0, 1));
+        q.push(batch_at(0, 0, 2));
+        q.push(batch_at(1, 0, 1));
+        let order: Vec<(usize, usize, usize)> = q
+            .drain_fifo()
+            .iter()
+            .map(|b| (b.round, b.client, b.step))
+            .collect();
+        assert_eq!(order, vec![(0, 2, 1), (0, 0, 2), (0, 1, 1)]);
+        assert!(q.is_empty());
+        assert_eq!(q.stats().processed, 3);
+        assert!(q.drain_fifo().is_empty());
     }
 
     #[test]

@@ -59,6 +59,8 @@ fn print_help() {
            --queue_capacity Q (Main-Server queue bound; 0 = never drops)\n\
            --zo_wire theta|seeds (HERON upload: full θ_l, or the lean\n\
              seed+per-probe-scalar record the server replays)\n\
+           --drain barrier|stream (server consumption: deterministic\n\
+             Eq.-7 barrier drain, or arrival-order mid-round pipelining)\n\
            --out results/dir (writes json+csv)\n\
          serve flags: all run flags, plus\n\
            --listen ADDR (default 127.0.0.1:7070; port 0 picks one)\n\

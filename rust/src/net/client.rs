@@ -14,7 +14,9 @@
 //! * `RoundBarrier` — remember `(round, participants)`.
 //! * `ModelSync{client: BROADCAST}` — decoupled fan-out: run
 //!   `client_local_phase` for each owned participant (ascending id), with
-//!   a sink that ships `Smashed` frames and blocks on the `UploadAck`
+//!   a sink that ships `Smashed` frames (`SmashedSeq`, carrying the
+//!   per-round upload sequence number + virtual send time, in `--drain
+//!   stream` runs) and blocks on the `UploadAck`
 //!   (counting typed NACKs); reply `ZoUpdate` (per-step seeds + loss
 //!   scalars — plus the per-probe `gscales` in `--zo_wire seeds` mode,
 //!   which then **replaces** the θ upload), `ModelSync` (updated θ,
@@ -27,9 +29,10 @@
 
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::config::{RunConfig, ZoWireMode};
+use crate::coordinator::drain::DrainMode;
 use crate::coordinator::eventsim::{DeviceProfile, WireRoundStats};
 use crate::coordinator::local::{
-    self, build_client_states, ClientState, LocalCtx, SmashedSink,
+    self, build_client_states, ClientState, LocalCtx, SmashedSink, UploadTag,
 };
 use crate::coordinator::round::OptState;
 use crate::coordinator::server_queue::SmashedBatch;
@@ -65,26 +68,45 @@ fn recv(t: &Mutex<Box<dyn Transport>>) -> Result<Option<Msg>> {
     t.lock().unwrap_or_else(|p| p.into_inner()).recv()
 }
 
-/// The networked [`SmashedSink`]: every push is a `Smashed` frame with a
+/// The networked [`SmashedSink`]: every push is a framed upload with a
 /// blocking `UploadAck` round-trip; `accepted == false` (the server's
 /// typed NACK for a queue-capacity drop) is counted and reported back as
-/// "dropped", mirroring the in-process `ServerQueue::push` contract.
+/// "dropped", mirroring the in-process `ServerQueue::push` contract. In
+/// a `--drain stream` run the upload travels as `SmashedSeq` — the
+/// barrier `Smashed` layout extended with the per-round sequence number
+/// and virtual send time the dispatcher's arrival-order consumption
+/// validates and measures.
 struct NetSink<'a> {
     t: &'a Mutex<Box<dyn Transport>>,
     nacks: &'a AtomicU64,
     err: Mutex<Option<anyhow::Error>>,
+    /// `--drain stream`: ship `SmashedSeq` instead of `Smashed`
+    stream: bool,
 }
 
 impl NetSink<'_> {
-    fn exchange(&self, b: SmashedBatch) -> Result<bool> {
+    fn exchange(&self, b: SmashedBatch, tag: UploadTag) -> Result<bool> {
         let mut g = self.t.lock().unwrap_or_else(|p| p.into_inner());
-        g.send(&Msg::Smashed {
-            client: b.client as u32,
-            round: b.round as u32,
-            step: b.step as u32,
-            smashed: b.smashed,
-            targets: b.targets,
-        })?;
+        let msg = if self.stream {
+            Msg::SmashedSeq {
+                client: b.client as u32,
+                round: b.round as u32,
+                step: b.step as u32,
+                seq: tag.seq as u32,
+                sent_at: tag.sent_at,
+                smashed: b.smashed,
+                targets: b.targets,
+            }
+        } else {
+            Msg::Smashed {
+                client: b.client as u32,
+                round: b.round as u32,
+                step: b.step as u32,
+                smashed: b.smashed,
+                targets: b.targets,
+            }
+        };
+        g.send(&msg)?;
         match g.recv()? {
             Some(Msg::UploadAck { accepted, reason, .. }) => {
                 if !accepted {
@@ -99,7 +121,7 @@ impl NetSink<'_> {
 }
 
 impl SmashedSink for NetSink<'_> {
-    fn push_smashed(&self, b: SmashedBatch) -> bool {
+    fn push_smashed(&self, b: SmashedBatch, tag: UploadTag) -> bool {
         // latch: after one failed exchange the transport is in an unknown
         // state — never touch it again from this phase (a blocked recv
         // here would deadlock client and server), just let the phase
@@ -110,7 +132,7 @@ impl SmashedSink for NetSink<'_> {
                 return false;
             }
         }
-        match self.exchange(b) {
+        match self.exchange(b, tag) {
             Ok(accepted) => accepted,
             Err(e) => {
                 *self.err.lock().unwrap_or_else(|p| p.into_inner()) = Some(e);
@@ -201,8 +223,12 @@ pub fn run_client(
                     nc,
                 };
                 for ci in mine {
-                    let sink =
-                        NetSink { t: &t, nacks: &nacks, err: Mutex::new(None) };
+                    let sink = NetSink {
+                        t: &t,
+                        nacks: &nacks,
+                        err: Mutex::new(None),
+                        stream: cfg.drain == DrainMode::Stream,
+                    };
                     let out = local::client_local_phase(
                         &ctx,
                         ci,

@@ -14,11 +14,19 @@
 //!    `ModelSync{client: ci}` kickoff processed *sequentially* in
 //!    participant order (locked SFLV1/V2 — the training lock is the
 //!    baseline's defining property).
-//! 2. Decoupled uploads (`Smashed`) are pushed straight into the round's
-//!    [`ServerQueue`]; a capacity drop is answered with a typed NACK
+//! 2. Decoupled uploads (`Smashed`, or `SmashedSeq` in `--drain stream`
+//!    runs) are pushed straight into the round's [`ServerQueue`]; a
+//!    capacity drop is answered with a typed NACK
 //!    (`UploadAck{accepted: false}`) and lands in `QueueStats::dropped`.
-//!    Locked uploads run [`Driver::locked_server_exchange`] and reply
-//!    with a `CutGrad`.
+//!    In stream mode the orchestrator then immediately runs
+//!    [`Driver::server_pump`] — uploads are consumed **between events,
+//!    mid-round, in arrival order** instead of waiting for the barrier
+//!    (the dispatcher also validates each client's upload `seq` is
+//!    strictly increasing, so a reordering transport cannot silently
+//!    reshuffle the schedule, and feeds the frame's `sent_at` into the
+//!    event-sim's arrival-driven server-occupancy model). Locked
+//!    uploads run [`Driver::locked_server_exchange`] and reply with a
+//!    `CutGrad`.
 //! 3. Once every participant's `ZoUpdate` + `ModelSync` + `LocalDone`
 //!    arrived, outcomes are absorbed **in participant order** — the same
 //!    barrier-merge the in-process fan-out performs — then the queue is
@@ -40,6 +48,7 @@
 //! `rust/tests/net_loopback.rs`).
 
 use crate::coordinator::config::{RunConfig, ZoWireMode};
+use crate::coordinator::drain::DrainMode;
 use crate::coordinator::eventsim::{ClientLane, DeviceProfile, WireRoundStats};
 use crate::coordinator::local::{self, LocalOutcome};
 use crate::coordinator::round::Driver;
@@ -327,6 +336,8 @@ fn run_rounds(
     let mut nacks_sent = 0u64;
     let profile = DeviceProfile::edge_default();
 
+    let stream = driver.cfg.drain == DrainMode::Stream;
+
     for round in 0..driver.cfg.rounds {
         let wire_before = sum_counters(counters);
         let participants = driver.sample_participants();
@@ -336,6 +347,11 @@ fn run_rounds(
         let queue = driver.round_queue(participants.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
+        // feedback consumed mid-round by the stream drain policy; the
+        // barrier leftovers from `server_drain` are appended below
+        let mut feedback: Vec<(usize, Vec<f32>)> = Vec::new();
+        // per-client next expected upload seq for this round (stream)
+        let mut next_seq: BTreeMap<usize, u32> = BTreeMap::new();
         let r32 = round as u32;
 
         // broadcasts are built once and serialized per connection —
@@ -372,29 +388,78 @@ fn run_rounds(
                 let (conn, msg) = next_msg(events)?;
                 match msg {
                     Msg::Smashed { client, round: r, step, smashed, targets } => {
+                        if stream {
+                            bail!(
+                                "conn {conn}: plain Smashed in a --drain \
+                                 stream run (expected SmashedSeq)"
+                            );
+                        }
                         check_round(r, r32, "Smashed")?;
-                        check_owned(owner, conn, client, "Smashed")?;
-                        let accepted = queue.push(SmashedBatch {
-                            client: client as usize,
-                            round: r as usize,
-                            step: step as usize,
+                        let ci = check_owned(owner, conn, client, "Smashed")?;
+                        push_and_ack(
+                            &queue,
+                            &mut txs[conn],
+                            &mut nacks_sent,
+                            (ci, r32, step),
                             smashed,
                             targets,
-                        });
-                        if !accepted {
-                            nacks_sent += 1;
+                        )?;
+                    }
+                    Msg::SmashedSeq {
+                        client,
+                        round: r,
+                        step,
+                        seq,
+                        sent_at,
+                        smashed,
+                        targets,
+                    } => {
+                        if !stream {
+                            bail!(
+                                "conn {conn}: SmashedSeq outside a --drain \
+                                 stream run"
+                            );
                         }
-                        txs[conn].send(&Msg::UploadAck {
-                            client,
-                            round: r,
-                            step,
-                            accepted,
-                            reason: if accepted {
-                                String::new()
-                            } else {
-                                "server queue at capacity".into()
-                            },
-                        })?;
+                        check_round(r, r32, "SmashedSeq")?;
+                        let ci =
+                            check_owned(owner, conn, client, "SmashedSeq")?;
+                        let next = next_seq.entry(ci).or_insert(1);
+                        if seq != *next {
+                            bail!(
+                                "conn {conn}: client {ci} upload seq {seq}, \
+                                 expected {next} (reordered, duplicated or \
+                                 dropped frame)"
+                            );
+                        }
+                        *next += 1;
+                        // the sent_at timestamp feeds arithmetic (sort,
+                        // schedule folds) — reject non-finite garbage at
+                        // the ingress, like every other field check
+                        if !sent_at.is_finite() || sent_at < 0.0 {
+                            bail!(
+                                "conn {conn}: client {ci} upload sent_at \
+                                 {sent_at} is not a finite non-negative time"
+                            );
+                        }
+                        let accepted = push_and_ack(
+                            &queue,
+                            &mut txs[conn],
+                            &mut nacks_sent,
+                            (ci, r32, step),
+                            smashed,
+                            targets,
+                        )?;
+                        // arrival-driven server occupancy: only accepted
+                        // uploads become server work — a dropped batch is
+                        // never serviced, so it must not enter the
+                        // schedule
+                        if accepted {
+                            sim.upload_arrival(sent_at);
+                        }
+                        // pipelined mid-round consumption: drain in
+                        // arrival order between events instead of
+                        // holding everything to the round barrier
+                        driver.server_pump(&queue, &mut sim, &mut feedback)?;
                     }
                     Msg::ZoUpdate { client, round: r, seeds, scalars, gscales } => {
                         check_round(r, r32, "ZoUpdate")?;
@@ -531,8 +596,10 @@ fn run_rounds(
             }
         }
 
-        // ---- server phase: drain in (round, client, step) order ----
-        let feedback = driver.server_drain(&queue, &mut sim)?;
+        // ---- server phase: barrier drain (everything, Eq. 7 order) or
+        // stream-mode stragglers (arrival order) ----
+        let leftovers = driver.server_drain(&queue, &mut sim)?;
+        feedback.extend(leftovers);
         for (ci, g) in feedback {
             driver.note_alignment_accounting(ci, &mut sim);
             let Some(pos) = updated.iter().position(|(c, _)| *c == ci) else {
@@ -581,6 +648,44 @@ fn run_rounds(
 
     driver.finalize_record(&mut rec);
     Ok((rec, nacks_sent))
+}
+
+/// Push one decoded upload into the round queue and ack it over the
+/// owning connection (typed NACK on a capacity drop, counted in
+/// `nacks_sent`). Shared by the barrier (`Smashed`) and stream
+/// (`SmashedSeq`) arms so the drop/ack contract cannot diverge between
+/// drain modes. `ids` is `(client, round, step)`. Returns acceptance.
+fn push_and_ack(
+    queue: &crate::coordinator::server_queue::ServerQueue,
+    tx: &mut Box<dyn TxHalf>,
+    nacks_sent: &mut u64,
+    ids: (usize, u32, u32),
+    smashed: Vec<f32>,
+    targets: Vec<i32>,
+) -> Result<bool> {
+    let (ci, round, step) = ids;
+    let accepted = queue.push(SmashedBatch {
+        client: ci,
+        round: round as usize,
+        step: step as usize,
+        smashed,
+        targets,
+    });
+    if !accepted {
+        *nacks_sent += 1;
+    }
+    tx.send(&Msg::UploadAck {
+        client: ci as u32,
+        round,
+        step,
+        accepted,
+        reason: if accepted {
+            String::new()
+        } else {
+            "server queue at capacity".into()
+        },
+    })?;
+    Ok(accepted)
 }
 
 fn check_round(got: u32, want: u32, what: &str) -> Result<()> {

@@ -28,7 +28,12 @@ pub const MAGIC: [u8; 2] = *b"HN";
 /// Protocol version; bumped on any frame/payload layout change.
 /// v2: `ZoUpdate` gained the per-probe `gscales` vector (the
 /// `--zo_wire seeds` replay record).
-pub const VERSION: u8 = 2;
+/// v3: new `SmashedSeq` message (tag 13) — the `--drain stream` upload,
+/// a `Smashed` extended with the client's per-round sequence number and
+/// virtual send time. No existing payload layout changed (barrier-mode
+/// frames differ from v2 only in this header version byte), but v2 and
+/// v3 peers still refuse each other at the handshake, as for any bump.
+pub const VERSION: u8 = 3;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -155,6 +160,22 @@ pub enum Msg {
         smashed: Vec<f32>,
         targets: Vec<i32>,
     },
+    /// client → server (`--drain stream` runs only): a smashed upload
+    /// tagged for arrival-order consumption. `seq` is the client's
+    /// per-round upload index (1-based, strictly increasing — the
+    /// dispatcher rejects gaps or reordering, so a misbehaving
+    /// transport cannot silently reshuffle the consumption schedule);
+    /// `sent_at` is the client's virtual lane time at upload, feeding
+    /// the event-sim's arrival-driven server-occupancy schedule.
+    SmashedSeq {
+        client: u32,
+        round: u32,
+        step: u32,
+        seq: u32,
+        sent_at: f64,
+        smashed: Vec<f32>,
+        targets: Vec<i32>,
+    },
     /// server → client: locked-exchange reply — loss + cut gradient.
     CutGrad { client: u32, round: u32, step: u32, loss: f32, g: Vec<f32> },
     /// server → client: FSL-SAGE alignment feedback (cut gradient for the
@@ -206,6 +227,7 @@ impl Msg {
             Msg::LocalDone { .. } => 10,
             Msg::RoundSummary { .. } => 11,
             Msg::Shutdown { .. } => 12,
+            Msg::SmashedSeq { .. } => 13,
         }
     }
 
@@ -223,12 +245,13 @@ impl Msg {
             Msg::LocalDone { .. } => "LocalDone",
             Msg::RoundSummary { .. } => "RoundSummary",
             Msg::Shutdown { .. } => "Shutdown",
+            Msg::SmashedSeq { .. } => "SmashedSeq",
         }
     }
 }
 
 const MIN_TAG: u8 = 1;
-const MAX_TAG: u8 = 12;
+const MAX_TAG: u8 = 13;
 
 // ---------------------------------------------------------------------------
 // payload writer
@@ -387,6 +410,23 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.vec_f32(smashed);
             w.vec_i32(targets);
         }
+        Msg::SmashedSeq {
+            client,
+            round,
+            step,
+            seq,
+            sent_at,
+            smashed,
+            targets,
+        } => {
+            w.u32(*client);
+            w.u32(*round);
+            w.u32(*step);
+            w.u32(*seq);
+            w.f64(*sent_at);
+            w.vec_f32(smashed);
+            w.vec_i32(targets);
+        }
         Msg::CutGrad { client, round, step, loss, g } => {
             w.u32(*client);
             w.u32(*round);
@@ -496,6 +536,15 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             wire_bytes: r.u64()?,
         },
         12 => Msg::Shutdown { reason: r.str()? },
+        13 => Msg::SmashedSeq {
+            client: r.u32()?,
+            round: r.u32()?,
+            step: r.u32()?,
+            seq: r.u32()?,
+            sent_at: r.f64()?,
+            smashed: r.vec_f32()?,
+            targets: r.vec_i32()?,
+        },
         t => return Err(WireError::BadTag(t)),
     };
     r.finish()?;
@@ -661,6 +710,15 @@ mod tests {
                 round: 0,
                 step: 2,
                 smashed: vec![0.0; 8],
+                targets: vec![3, 1, 4],
+            },
+            Msg::SmashedSeq {
+                client: 1,
+                round: 0,
+                step: 2,
+                seq: 1,
+                sent_at: 3.5,
+                smashed: vec![0.25; 8],
                 targets: vec![3, 1, 4],
             },
             Msg::CutGrad {

@@ -1,0 +1,315 @@
+//! End-to-end tests of the `--drain stream` policy (pipelined mid-round
+//! server consumption) against the default barrier drain:
+//!
+//! * **client-side invariance** — the decoupled client phase never reads
+//!   θ_s, so θ_l, the per-step losses, and the analytic accounting are
+//!   bit-identical across drain policies (HERON); eval metrics (which
+//!   read θ_s) stay within tolerance;
+//! * **degenerate determinism** — with one worker the arrival order *is*
+//!   the Eq. (7) order, so stream is bit-identical to barrier outright;
+//! * **latency win** — the event-sim's arrival-driven schedule reports a
+//!   strictly lower server-side makespan for stream than for barrier
+//!   whenever uploads land mid-round (`upload_every < local_steps`);
+//! * **`--zo_wire seeds` composition** — the server-side replay reads
+//!   only the round broadcast θ plus the client's own record, so the
+//!   seeds trajectory is bit-identical across drain policies (the
+//!   decision `RunConfig::validate` encodes);
+//! * **typed rejection** — `stream` + a locked baseline fails validation
+//!   with a downcastable [`DrainConfigError`], in-process and networked.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
+use heron_sfl::coordinator::drain::{DrainConfigError, DrainMode};
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::metrics::RunRecord;
+use heron_sfl::net::transport::{loopback_pair, Transport};
+use heron_sfl::net::{run_client, serve_transports, NetReport};
+use heron_sfl::runtime::Session;
+
+mod common;
+use common::with_session;
+
+fn cfg(drain: DrainMode, workers: usize) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: Algorithm::Heron,
+        n_clients: 4,
+        rounds: 2,
+        local_steps: 4,
+        upload_every: 2, // uploads land mid-round -> stream can overlap
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        dataset_size: 1024,
+        eval_every: 1,
+        workers,
+        drain,
+        ..Default::default()
+    }
+}
+
+fn run(session: &Session, cfg: &RunConfig) -> (RunRecord, Vec<f32>, Vec<f32>) {
+    let mut driver = Driver::new(session, cfg.clone()).unwrap();
+    let rec = driver.run(cfg.drain.name()).unwrap();
+    (rec, driver.theta_l.clone(), driver.theta_s.clone())
+}
+
+/// serve + N connect over in-memory loopback (clients on threads).
+fn net_run(session: &Session, cfg: &RunConfig, n_conns: usize) -> NetReport {
+    let mut server_ends: Vec<Box<dyn Transport>> = Vec::new();
+    let mut client_ends = Vec::new();
+    for _ in 0..n_conns {
+        let (s, c) = loopback_pair();
+        server_ends.push(Box::new(s));
+        client_ends.push(c);
+    }
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_transports(session, cfg.clone(), server_ends, "net")
+        });
+        let clients: Vec<_> = client_ends
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                scope.spawn(move || {
+                    run_client(session, Box::new(c), &format!("edge-{i}"))
+                })
+            })
+            .collect();
+        let report = server.join().expect("server panicked").expect("server");
+        for h in clients {
+            h.join().expect("client panicked").expect("client");
+        }
+        report
+    })
+}
+
+/// One worker: jobs run in participant order, so uploads arrive in
+/// exactly the `(round, client, step)` order the barrier drain sorts
+/// into — stream mode must then be bit-identical end to end, θ_s and
+/// eval metrics included.
+#[test]
+fn stream_with_one_worker_is_bit_identical_to_barrier() {
+    with_session(|s| {
+        let (rec_b, tl_b, ts_b) = run(s, &cfg(DrainMode::Barrier, 1));
+        let (rec_s, tl_s, ts_s) = run(s, &cfg(DrainMode::Stream, 1));
+        assert_eq!(tl_b, tl_s, "θ_l");
+        assert_eq!(ts_b, ts_s, "θ_s (arrival order degenerates to Eq. 7)");
+        for (a, b) in rec_b.rounds.iter().zip(&rec_s.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
+    });
+}
+
+/// Multi-worker stream: arrival order races, so θ_s may differ — but
+/// everything the clients compute must not, and the eval metric stays
+/// within tolerance of the barrier reference on the vision model.
+#[test]
+fn stream_multiworker_client_side_bit_identical_loss_within_tolerance() {
+    with_session(|s| {
+        let (rec_b, tl_b, _) = run(s, &cfg(DrainMode::Barrier, 4));
+        let (rec_s, tl_s, _) = run(s, &cfg(DrainMode::Stream, 4));
+        assert_eq!(tl_b, tl_s, "θ_l must not depend on the drain policy");
+        for (a, b) in rec_b.rounds.iter().zip(&rec_s.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "train loss is client-side and θ_s-independent"
+            );
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            assert!(
+                (a.eval_metric - b.eval_metric).abs() < 0.05,
+                "round {}: eval {} (barrier) vs {} (stream)",
+                a.round,
+                a.eval_metric,
+                b.eval_metric
+            );
+            assert!(b.eval_metric.is_finite());
+        }
+        // summary invariants shared by both policies
+        assert_eq!(
+            rec_b.summary["comm_bytes"], rec_s.summary["comm_bytes"]
+        );
+        assert_eq!(
+            rec_b.summary["client_flops"], rec_s.summary["client_flops"]
+        );
+        assert_eq!(
+            rec_b.summary["queue_enqueued"],
+            rec_s.summary["queue_enqueued"],
+            "every upload is enqueued under either policy"
+        );
+        // mid-round consumption keeps the queue shallower: the per-round
+        // high watermark can only shrink vs the hold-everything barrier
+        assert_eq!(
+            rec_b.summary["queue_max_depth"],
+            (cfg(DrainMode::Barrier, 4).n_clients
+                * (cfg(DrainMode::Barrier, 4).local_steps
+                    / cfg(DrainMode::Barrier, 4).upload_every))
+                as f64,
+            "barrier holds the whole round's uploads"
+        );
+        assert!(
+            rec_s.summary["queue_max_depth"]
+                <= rec_b.summary["queue_max_depth"]
+        );
+        assert!(rec_s.summary["queue_hwm_mean"] >= 1.0);
+    });
+}
+
+/// The latency claim, measured by the event-sim: with uploads landing
+/// mid-round, the arrival-order schedule strictly beats the barrier
+/// schedule every round — and the executed drain mode does not change
+/// the simulated comparison (it is derived from the same arrivals).
+#[test]
+fn eventsim_reports_strictly_lower_stream_makespan() {
+    with_session(|s| {
+        for drain in [DrainMode::Barrier, DrainMode::Stream] {
+            let (rec, _, _) = run(s, &cfg(drain, 2));
+            assert!(
+                rec.summary["server_makespan_stream_seconds"]
+                    < rec.summary["server_makespan_barrier_seconds"],
+                "{}: stream {} !< barrier {}",
+                drain.name(),
+                rec.summary["server_makespan_stream_seconds"],
+                rec.summary["server_makespan_barrier_seconds"],
+            );
+            assert!(
+                rec.summary["queue_wait_stream_seconds"]
+                    < rec.summary["queue_wait_barrier_seconds"]
+            );
+        }
+    });
+}
+
+/// `--drain stream` + `--zo_wire seeds`: the replay runs from the round
+/// broadcast θ and the client's own record — never the smashed queue —
+/// so the full seeds trajectory is preserved under stream drain
+/// (client-side bitwise; θ_s keeps only the 1-worker pin).
+#[test]
+fn stream_composes_with_seeds_wire_mode_over_loopback() {
+    with_session(|s| {
+        let mut barrier = cfg(DrainMode::Barrier, 1);
+        barrier.zo_wire = ZoWireMode::Seeds;
+        barrier.n_pert = 2;
+        let mut stream = barrier.clone();
+        stream.drain = DrainMode::Stream;
+        barrier.validate().unwrap();
+        stream.validate().unwrap();
+        let net_b = net_run(s, &barrier, 2);
+        let net_s = net_run(s, &stream, 2);
+        assert_eq!(
+            net_b.final_theta_l, net_s.final_theta_l,
+            "replayed θ_l must not depend on the drain policy"
+        );
+        for (a, b) in net_b.record.rounds.iter().zip(&net_s.record.rounds)
+        {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            assert!((a.eval_metric - b.eval_metric).abs() < 0.05);
+        }
+        // the stream run actually pipelined: arrivals were recorded and
+        // the simulated stream schedule beat the barrier schedule
+        assert!(
+            net_s.record.summary["server_makespan_stream_seconds"]
+                < net_s.record.summary["server_makespan_barrier_seconds"]
+        );
+    });
+}
+
+/// Networked stream run: seq-tagged uploads are consumed between
+/// events; the client-side trajectory still matches the in-process
+/// barrier reference bit for bit (HERON), and wire traffic flows.
+#[test]
+fn net_stream_two_conns_client_side_matches_in_process() {
+    with_session(|s| {
+        let (rec_b, tl_b, _) = run(s, &cfg(DrainMode::Barrier, 1));
+        let net = net_run(s, &cfg(DrainMode::Stream, 1), 2);
+        assert_eq!(tl_b, net.final_theta_l, "θ_l");
+        for (a, b) in rec_b.rounds.iter().zip(&net.record.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            assert!((a.eval_metric - b.eval_metric).abs() < 0.05);
+        }
+        assert!(net.wire.bytes_sent > 0 && net.wire.bytes_recv > 0);
+        assert_eq!(net.nacks_sent, 0);
+        assert!(
+            net.record.summary["server_makespan_stream_seconds"]
+                < net.record.summary["server_makespan_barrier_seconds"],
+            "SmashedSeq sent_at arrivals must drive the sim"
+        );
+    });
+}
+
+/// FSL-SAGE streams too: alignment feedback is generated mid-round from
+/// the pipelined θ_s, and the aligned θ_l feeds the NEXT round — so
+/// only the first round's losses are bit-comparable across policies
+/// (the documented trade). The accounting (message counts, bytes) stays
+/// deterministic throughout.
+#[test]
+fn fsl_sage_streams_with_mid_round_alignment() {
+    with_session(|s| {
+        let mut c = cfg(DrainMode::Stream, 2);
+        c.algorithm = Algorithm::FslSage;
+        c.align_every = 1;
+        let (rec, _, _) = run(s, &c);
+        let mut b = c.clone();
+        b.drain = DrainMode::Barrier;
+        let (rec_b, _, _) = run(s, &b);
+        assert_eq!(rec.rounds.len(), rec_b.rounds.len());
+        // round 0 starts from the same broadcast θ_l: losses bit-equal
+        assert_eq!(
+            rec.rounds[0].train_loss.to_bits(),
+            rec_b.rounds[0].train_loss.to_bits()
+        );
+        for (x, y) in rec.rounds.iter().zip(&rec_b.rounds) {
+            assert!(x.train_loss.is_finite());
+            assert_eq!(
+                x.comm_bytes_cum, y.comm_bytes_cum,
+                "alignment message counts are order-independent"
+            );
+        }
+    });
+}
+
+/// The typed rejection, both directions: locked baselines cannot
+/// stream (in-process and networked construction paths), while every
+/// decoupled algorithm can.
+#[test]
+fn locked_baselines_reject_stream_with_typed_error() {
+    with_session(|s| {
+        for alg in [Algorithm::SflV1, Algorithm::SflV2] {
+            let mut c = cfg(DrainMode::Stream, 1);
+            c.algorithm = alg;
+            let err = Driver::new(s, c.clone()).err().expect("must reject");
+            let typed = err
+                .downcast_ref::<DrainConfigError>()
+                .expect("DrainConfigError");
+            assert_eq!(typed.algorithm, alg.name());
+            // the networked dispatcher validates the same config
+            let (srv, _cli) = loopback_pair();
+            let res = serve_transports(
+                s,
+                c,
+                vec![Box::new(srv) as Box<dyn Transport>],
+                "reject",
+            );
+            assert!(
+                res.err()
+                    .expect("serve must reject")
+                    .downcast_ref::<DrainConfigError>()
+                    .is_some(),
+                "{}: serve path must carry the typed error",
+                alg.name()
+            );
+        }
+        for alg in [Algorithm::Heron, Algorithm::CseFsl, Algorithm::FslSage]
+        {
+            let mut c = cfg(DrainMode::Stream, 1);
+            c.algorithm = alg;
+            c.validate().unwrap();
+        }
+    });
+}

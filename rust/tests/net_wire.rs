@@ -38,7 +38,7 @@ fn arb_u32s(g: &mut Gen, max: usize) -> Vec<u32> {
 
 /// One random message of a random type.
 fn arb_msg(g: &mut Gen) -> Msg {
-    match g.usize_in(0..12) {
+    match g.usize_in(0..13) {
         0 => Msg::Hello { name: arb_string(g), protocol: g.u64() as u32 },
         1 => Msg::Assign { client_ids: arb_u32s(g, 16), config: arb_string(g) },
         2 => Msg::RoundBarrier {
@@ -96,6 +96,15 @@ fn arb_msg(g: &mut Gen) -> Msg {
             train_loss: g.f64_in(-10.0..10.0),
             comm_bytes: g.u64(),
             wire_bytes: g.u64(),
+        },
+        11 => Msg::SmashedSeq {
+            client: g.u64() as u32,
+            round: g.u64() as u32,
+            step: g.u64() as u32,
+            seq: g.u64() as u32,
+            sent_at: g.f64_in(0.0..1e6),
+            smashed: arb_f32s(g, 256),
+            targets: arb_i32s(g, 64),
         },
         _ => Msg::Shutdown { reason: arb_string(g) },
     }
@@ -190,7 +199,7 @@ fn unknown_version_and_tag_are_typed_errors() {
         f[2] = v;
         assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadVersion(v));
     }
-    for tag in [0u8, 13, 42, 255] {
+    for tag in [0u8, 14, 42, 255] {
         let mut f = frame.clone();
         f[3] = tag;
         assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadTag(tag));
