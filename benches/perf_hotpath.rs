@@ -92,6 +92,7 @@ fn main() -> Result<()> {
     // negligible next to the model math it ships
     let theta: Vec<f32> = PerturbStream::new(11).take_vec(1 << 16);
     let sync = heron_sfl::net::Msg::ModelSync {
+        lane: 0,
         round: 1,
         client: 0,
         theta,

@@ -1,0 +1,258 @@
+//! §serve-storm: event-core load benchmark (`cargo bench --bench
+//! serve_storm`, also reachable as `heron-sfl bench serve-storm`).
+//!
+//! Boots the real TCP dispatcher and sweeps the virtual-client count at a
+//! fixed socket budget: 16 connections × {1, 4, 64} lanes each, i.e. 16 →
+//! 1024 simulated edge devices through the same 16 sockets. Each point
+//! runs the storm workload (population 1024, cohort 64 per round, lean
+//! `--zo_wire seeds` uploads) to completion and reports rounds/sec plus
+//! the p99 per-round latency. The headline point — 1024 virtual clients
+//! on 16 sockets — is the tentpole property: client multiplexing through
+//! the sharded poll loops, no thread-per-reader.
+//!
+//! Set `BENCH_OUT=path.json` to merge the results into the shared
+//! `heron-sfl-bench-v1` report (perf_hotpath writes the same file; the
+//! merge replaces same-name entries and preserves everything else).
+//!
+//! Set `BENCH_BASELINE=path.json` to gate against a committed baseline:
+//! the run fails when `serve_storm_rounds_per_sec`, normalized by the
+//! `perturb_stream_fill_64k` machine-speed canary, regresses by more than
+//! 25%. A baseline marked `"provisional": true` (or one predating the
+//! storm keys) reports the comparison but never fails the run.
+
+use anyhow::{bail, Context, Result};
+use heron_sfl::bench_harness::{merge_report, Bench, Table};
+use heron_sfl::net::storm::{run_storm, storm_config, StormPoint};
+use heron_sfl::runtime::Session;
+use heron_sfl::util::json::{self, Value};
+use heron_sfl::zo::stream::PerturbStream;
+
+/// Same machine-speed canary as perf_hotpath: untouched by the net/event
+/// loop work, so baseline-vs-current ratios of (rounds/sec × canary)
+/// cancel host speed.
+const CANARY: &str = "perturb_stream_fill_64k";
+/// Fail the gate when normalized rounds/sec regresses >25%.
+const REGRESSION_LIMIT: f64 = 1.25;
+/// Socket budget for the whole sweep — the acceptance bar is ≥1000
+/// virtual clients through ≤16 sockets.
+const CONNS: usize = 16;
+const LANE_SWEEP: [usize; 3] = [1, 4, 64];
+
+fn main() -> Result<()> {
+    heron_sfl::util::logging::init();
+    let session = Session::open_default()?;
+    let mut b = Bench::new();
+
+    Bench::header("machine-speed canary");
+    let mut buf = vec![0.0f32; 1 << 16];
+    b.run(CANARY, || {
+        PerturbStream::new(7).fill(&mut buf);
+        std::hint::black_box(&buf);
+    });
+    let canary_ns = b.results().last().unwrap().mean_ns;
+
+    Bench::header(&format!(
+        "serve-storm sweep ({CONNS} sockets, population {})",
+        storm_config().n_clients
+    ));
+    let mut points: Vec<StormPoint> = Vec::new();
+    for lanes in LANE_SWEEP {
+        let p = run_storm(&session, storm_config(), CONNS, lanes)
+            .with_context(|| format!("storm point: {CONNS}x{lanes} lanes"))?;
+        println!(
+            "{:>5} virtual clients / {CONNS} sockets: {:.2} rounds/s, \
+             p99 round {:.1} ms, {} lanes complete, {} NACKs",
+            p.total_lanes,
+            p.rounds_per_sec,
+            p.p99_round_seconds * 1e3,
+            p.lanes_complete,
+            p.nacks,
+        );
+        points.push(p);
+    }
+
+    let mut t = Table::new(&[
+        "virtual clients",
+        "sockets",
+        "rounds/s",
+        "mean round (ms)",
+        "p99 round (ms)",
+        "lanes complete",
+        "NACKs",
+        "wire MB",
+    ]);
+    for p in &points {
+        t.row(vec![
+            p.total_lanes.to_string(),
+            p.conns.to_string(),
+            format!("{:.2}", p.rounds_per_sec),
+            format!("{:.1}", p.mean_round_seconds * 1e3),
+            format!("{:.1}", p.p99_round_seconds * 1e3),
+            p.lanes_complete.to_string(),
+            p.nacks.to_string(),
+            format!("{:.2}", p.wire_bytes as f64 / 1e6),
+        ]);
+    }
+    t.print("serve-storm: round throughput vs virtual-client count");
+
+    // headline = the densest point: 1024 virtual clients on 16 sockets
+    let head = points.last().expect("sweep is non-empty");
+    if head.total_lanes < 1000 {
+        bail!(
+            "storm sweep topped out at {} virtual clients — the tentpole \
+             bar is >=1000 through <={CONNS} sockets",
+            head.total_lanes
+        );
+    }
+    println!(
+        "\nheadline: {} virtual clients / {} sockets -> {:.2} rounds/s, \
+         p99 round {:.1} ms",
+        head.total_lanes,
+        head.conns,
+        head.rounds_per_sec,
+        head.p99_round_seconds * 1e3,
+    );
+
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let point_objs: Vec<Value> = points
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    ("conns", Value::Num(p.conns as f64)),
+                    ("lanes_per_conn", Value::Num(p.lanes_per_conn as f64)),
+                    ("total_lanes", Value::Num(p.total_lanes as f64)),
+                    ("rounds", Value::Num(p.rounds as f64)),
+                    ("wall_seconds", Value::Num(p.wall_seconds)),
+                    ("rounds_per_sec", Value::Num(p.rounds_per_sec)),
+                    (
+                        "mean_round_seconds",
+                        Value::Num(p.mean_round_seconds),
+                    ),
+                    ("p99_round_seconds", Value::Num(p.p99_round_seconds)),
+                    ("lanes_complete", Value::Num(p.lanes_complete as f64)),
+                    ("nacks", Value::Num(p.nacks as f64)),
+                    ("wire_bytes", Value::Num(p.wire_bytes as f64)),
+                ])
+            })
+            .collect();
+        merge_report(
+            &path,
+            b.results(),
+            &[
+                (
+                    "serve_storm_rounds_per_sec",
+                    Value::Num(head.rounds_per_sec),
+                ),
+                (
+                    "serve_storm_p99_round_latency_seconds",
+                    Value::Num(head.p99_round_seconds),
+                ),
+                (
+                    "serve_storm_virtual_clients",
+                    Value::Num(head.total_lanes as f64),
+                ),
+                ("serve_storm_conns", Value::Num(head.conns as f64)),
+                ("serve_storm_points", Value::Arr(point_objs)),
+            ],
+        )?;
+        println!("merged storm results into {path}");
+    }
+
+    if let Ok(baseline) = std::env::var("BENCH_BASELINE") {
+        compare_with_baseline(&baseline, head, canary_ns)?;
+    }
+
+    println!("\nserve_storm OK");
+    Ok(())
+}
+
+/// Gate the headline rounds/sec against the committed baseline. The
+/// metric is higher-is-better, so the normalized score is
+/// `rounds_per_sec × canary_mean_ns` (a slower host has a bigger canary
+/// and a smaller rounds/sec — the product cancels machine speed) and the
+/// run fails when `current/baseline` drops below `1/REGRESSION_LIMIT`.
+fn compare_with_baseline(
+    path: &str,
+    head: &StormPoint,
+    cur_canary_ns: f64,
+) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {path}"))?;
+    let base = json::parse(&text)
+        .with_context(|| format!("parsing baseline {path}"))?;
+    let provisional = base
+        .get("provisional")
+        .and_then(Value::as_bool)
+        .unwrap_or(false);
+    let base_rps = base
+        .get("serve_storm_rounds_per_sec")
+        .and_then(Value::as_f64);
+    let base_canary = base
+        .get("benchmarks")
+        .and_then(Value::as_arr)
+        .and_then(|arr| {
+            arr.iter().find(|e| {
+                e.get("name").and_then(Value::as_str) == Some(CANARY)
+            })
+        })
+        .and_then(|e| e.get("mean_ns"))
+        .and_then(Value::as_f64);
+    let (Some(base_rps), Some(base_canary)) = (base_rps, base_canary) else {
+        println!(
+            "\nbaseline {path} has no serve_storm keys (predates the storm \
+             bench) — skipping the storm gate; refresh it via the \
+             record-baseline workflow to arm this gate"
+        );
+        return Ok(());
+    };
+
+    let ratio = (head.rounds_per_sec * cur_canary_ns)
+        / (base_rps * base_canary.max(1.0)).max(1e-12);
+    println!("\n=== storm baseline comparison ({path}) ===");
+    println!(
+        "serve_storm_rounds_per_sec: baseline {base_rps:.2} -> current \
+         {:.2}  ({ratio:.2}x canary-normalized; >1 is faster)",
+        head.rounds_per_sec,
+    );
+
+    if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        if let Ok(mut fh) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(summary)
+        {
+            let _ = writeln!(
+                fh,
+                "### serve_storm vs `{path}`\n\n\
+                 | metric | baseline | current | ratio |\n\
+                 |---|---|---|---|\n\
+                 | rounds/s ({} virtual clients) | {base_rps:.2} | {:.2} | {ratio:.2}x normalized |\n\
+                 | p99 round latency | — | {:.1} ms | — |\n",
+                head.total_lanes,
+                head.rounds_per_sec,
+                head.p99_round_seconds * 1e3,
+            );
+        }
+    }
+
+    if ratio < 1.0 / REGRESSION_LIMIT {
+        if provisional {
+            println!(
+                "WARNING: storm throughput is {:.0}% below the provisional \
+                 baseline — not failing because {path} is estimated, not \
+                 measured; refresh via the record-baseline workflow to arm \
+                 the gate",
+                100.0 * (1.0 / ratio - 1.0),
+            );
+        } else {
+            bail!(
+                "serve_storm_rounds_per_sec regressed {:.0}% (normalized) \
+                 against {path} — limit is {:.0}%",
+                100.0 * (1.0 / ratio - 1.0),
+                100.0 * (REGRESSION_LIMIT - 1.0),
+            );
+        }
+    }
+    Ok(())
+}

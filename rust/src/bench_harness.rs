@@ -5,6 +5,7 @@
 //! Each measurement runs warmup iterations, then timed batches until the
 //! time budget is spent, and reports mean / p50 / p95 / stddev.
 
+use crate::util::json::{self, Value};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -124,6 +125,58 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// One measurement as a `heron-sfl-bench-v1` `benchmarks[]` entry —
+/// the exact shape `perf_hotpath`'s baseline gate reads back.
+pub fn measurement_json(m: &Measurement) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(&m.name)),
+        ("iters", Value::Num(m.iters as f64)),
+        ("mean_ns", Value::Num(m.mean_ns)),
+        ("p50_ns", Value::Num(m.p50_ns)),
+        ("p95_ns", Value::Num(m.p95_ns)),
+        ("std_ns", Value::Num(m.std_ns)),
+    ])
+}
+
+/// Merge measurements and extra top-level keys into the bench report at
+/// `path` (the `heron-sfl-bench-v1` schema the CI perf artifacts use),
+/// creating the file when absent. Entries in `benchmarks` with the same
+/// name are replaced and unrelated keys survive untouched, so several
+/// bench binaries (perf_hotpath, serve_storm) can share one `BENCH_OUT`
+/// artifact regardless of run order.
+pub fn merge_report(
+    path: &str,
+    measurements: &[Measurement],
+    extra: &[(&str, Value)],
+) -> anyhow::Result<()> {
+    let mut root: std::collections::BTreeMap<String, Value> =
+        match std::fs::read_to_string(path) {
+            Ok(text) => match json::parse(&text)? {
+                Value::Obj(m) => m,
+                _ => Default::default(),
+            },
+            Err(_) => Default::default(),
+        };
+    root.entry("schema".into())
+        .or_insert_with(|| Value::str("heron-sfl-bench-v1"));
+    let mut benches: Vec<Value> = match root.remove("benchmarks") {
+        Some(Value::Arr(a)) => a,
+        _ => Vec::new(),
+    };
+    for m in measurements {
+        benches.retain(|e| {
+            e.get("name").and_then(Value::as_str) != Some(&m.name)
+        });
+        benches.push(measurement_json(m));
+    }
+    root.insert("benchmarks".into(), Value::Arr(benches));
+    for (k, v) in extra {
+        root.insert((*k).to_string(), v.clone());
+    }
+    std::fs::write(path, Value::Obj(root).to_string_pretty())?;
+    Ok(())
+}
+
 /// Simple table printer shared by the paper-table benches.
 pub struct Table {
     pub headers: Vec<String>,
@@ -202,6 +255,44 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn merge_report_replaces_by_name_and_keeps_extras() {
+        let path = std::env::temp_dir()
+            .join(format!("heron_merge_{}.json", std::process::id()));
+        let p = path.to_str().unwrap();
+        let _ = std::fs::remove_file(p);
+        let m1 = Measurement {
+            name: "a".into(),
+            iters: 1,
+            mean_ns: 10.0,
+            p50_ns: 10.0,
+            p95_ns: 10.0,
+            std_ns: 0.0,
+        };
+        merge_report(p, &[m1.clone()], &[("extra_key", Value::Num(1.0))])
+            .unwrap();
+        // second write replaces "a", keeps extra_key, adds "b"
+        let m1b = Measurement { mean_ns: 20.0, ..m1.clone() };
+        let m2 = Measurement { name: "b".into(), ..m1.clone() };
+        merge_report(p, &[m1b, m2], &[("other", Value::str("x"))]).unwrap();
+        let v =
+            json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        assert_eq!(
+            v.get("schema").and_then(Value::as_str),
+            Some("heron-sfl-bench-v1")
+        );
+        let arr = v.get("benchmarks").and_then(Value::as_arr).unwrap();
+        assert_eq!(arr.len(), 2);
+        let a = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("a"))
+            .unwrap();
+        assert_eq!(a.get("mean_ns").and_then(Value::as_f64), Some(20.0));
+        assert_eq!(v.get("extra_key").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(v.get("other").and_then(Value::as_str), Some("x"));
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

@@ -188,7 +188,12 @@ impl RunConfig {
                 self.algorithm = Algorithm::parse(v)
                     .with_context(|| format!("unknown algorithm {v}"))?
             }
-            "clients" | "n_clients" => self.n_clients = v.parse()?,
+            // "population" is the cohort-scheduling view of the same
+            // field: N registered devices, of which `participation`
+            // samples a per-round cohort (storm presets use this name)
+            "clients" | "n_clients" | "population" => {
+                self.n_clients = v.parse()?
+            }
             "participation" => self.participation = v.parse()?,
             "rounds" => self.rounds = v.parse()?,
             "local_steps" | "h" => self.local_steps = v.parse()?,
@@ -346,6 +351,21 @@ mod tests {
         assert_eq!(cfg.rounds, 5);
         assert!(matches!(cfg.scheme, Scheme::Dirichlet { alpha } if (alpha - 0.3).abs() < 1e-12));
         assert!((cfg.mu - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn population_aliases_n_clients() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--population", "1024", "--participation", "0.0625"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.n_clients, 1024);
+        assert_eq!(cfg.participants_per_round(), 64);
+        let v = crate::util::json::parse(r#"{"population": 200}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&v).unwrap().n_clients, 200);
     }
 
     #[test]

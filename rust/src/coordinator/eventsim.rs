@@ -206,8 +206,20 @@ impl ClientLane {
 /// Accumulates per-client virtual time within one round, then folds into a
 /// `RoundTiming`. Owns a copy of the (small, Copy) device profile so the
 /// round driver can mutate itself while the sim is live.
+///
+/// The sim is **cohort-scoped**: per-client accumulators exist only for
+/// the round's sampled participants ([`Self::new_cohort`]), so one round
+/// of bookkeeping costs O(cohort) regardless of the registered
+/// population. The population size is still recorded separately because
+/// the sync-phase formula divides by it — cohort scoping is a memory
+/// bound, never a timing change.
 pub struct RoundSim {
     profile: DeviceProfile,
+    /// registered population size (the sync-phase divisor; kept apart
+    /// from the cohort so memory scoping cannot shift any timing)
+    population: usize,
+    /// cohort member → dense slot into the per-client vectors
+    slots: std::collections::BTreeMap<usize, usize>,
     client_times: Vec<f64>,
     client_idle: Vec<f64>,
     /// per-client device speed factor (1.0 = the profile as-is; 0.5 = a
@@ -223,19 +235,52 @@ pub struct RoundSim {
 }
 
 impl RoundSim {
+    /// Whole-population sim: every client id in `0..n_clients` is a
+    /// cohort member. Kept for full-participation rounds and tests; the
+    /// round drivers use [`Self::new_cohort`] with the sampled
+    /// participants.
     pub fn new(profile: &DeviceProfile, n_clients: usize) -> Self {
+        let cohort: Vec<usize> = (0..n_clients).collect();
+        Self::new_cohort(profile, &cohort, n_clients)
+    }
+
+    /// Cohort-scoped sim: per-client state is allocated only for the
+    /// listed participants (any client ids out of `0..population`), so
+    /// one round costs O(cohort) memory. Accounting calls for a client
+    /// outside the cohort panic — they would mean the round engine is
+    /// doing work for a client it never sampled.
+    pub fn new_cohort(
+        profile: &DeviceProfile,
+        cohort: &[usize],
+        population: usize,
+    ) -> Self {
+        let slots: std::collections::BTreeMap<usize, usize> = cohort
+            .iter()
+            .enumerate()
+            .map(|(slot, &ci)| (ci, slot))
+            .collect();
+        let n = slots.len();
         Self {
             profile: *profile,
-            client_times: vec![0.0; n_clients],
-            client_idle: vec![0.0; n_clients],
-            client_speed: vec![1.0; n_clients],
+            population,
+            slots,
+            client_times: vec![0.0; n],
+            client_idle: vec![0.0; n],
+            client_speed: vec![1.0; n],
             server_time: 0.0,
             arrivals: Vec::new(),
             sync_bytes: 0,
-            workers: n_clients.max(1),
+            workers: n.max(1),
             queue_stats: QueueStats::default(),
             wire: WireRoundStats::default(),
         }
+    }
+
+    fn slot(&self, client: usize) -> usize {
+        *self
+            .slots
+            .get(&client)
+            .unwrap_or_else(|| panic!("client {client} is not in this round's cohort"))
     }
 
     /// Skew one client's device speed: its whole lane (compute and
@@ -244,7 +289,8 @@ impl RoundSim {
     /// server waits are scaled too — fine for the decoupled regime this
     /// knob models.
     pub fn set_client_speed(&mut self, client: usize, factor: f64) {
-        self.client_speed[client] = factor.max(1e-9);
+        let s = self.slot(client);
+        self.client_speed[s] = factor.max(1e-9);
     }
 
     /// Record a queued upload's server-side arrival at an externally
@@ -278,9 +324,10 @@ impl RoundSim {
     /// account, applying the client's speed factor to every duration
     /// (and therefore to its upload arrival events).
     pub fn merge_lane(&mut self, client: usize, lane: &ClientLane) {
-        let s = self.client_speed[client];
-        self.client_times[client] += lane.time / s;
-        self.client_idle[client] += lane.idle / s;
+        let slot = self.slot(client);
+        let s = self.client_speed[slot];
+        self.client_times[slot] += lane.time / s;
+        self.client_idle[slot] += lane.idle / s;
         self.arrivals.extend(lane.arrivals.iter().map(|a| a / s));
     }
 
@@ -328,7 +375,9 @@ impl RoundSim {
             .iter()
             .cloned()
             .fold(0.0f64, f64::max);
-        let n = self.client_times.len().max(1) as f64;
+        // the sync broadcast amortizes over the whole registered
+        // population (pre-cohort behavior, preserved exactly)
+        let n = self.population.max(1) as f64;
         let sync_phase = self.sync_bytes as f64
             / self.profile.downlink_bps.min(self.profile.uplink_bps)
             / n
@@ -610,6 +659,50 @@ mod tests {
         assert!((t.server_makespan_barrier - 6.0).abs() < 1e-9);
         // stream: start 1.0 → done 2.0; start 2.0 → done 3.0
         assert!((t.server_makespan_stream - 3.0).abs() < 1e-9);
+    }
+
+    /// A cohort-scoped sim over the sampled participants produces the
+    /// exact `RoundTiming` a whole-population sim does: zeros for
+    /// non-participants never move a max, a sum, or the greedy makespan,
+    /// and the sync divisor is pinned to the population either way.
+    #[test]
+    fn cohort_sim_matches_whole_population_sim() {
+        let p = profile();
+        let mut full = RoundSim::new(&p, 100);
+        let mut cohort = RoundSim::new_cohort(&p, &[7, 42, 99], 100);
+        for sim in [&mut full, &mut cohort] {
+            sim.set_workers(2);
+            sim.set_client_speed(42, 0.5);
+            for &ci in &[7usize, 42, 99] {
+                let mut lane = sim.lane();
+                lane.compute(1_000_000_000);
+                lane.upload_queued(1_000_000);
+                sim.merge_lane(ci, &lane);
+            }
+            sim.server_compute(3_000_000_000_000);
+            sim.sync(1_000_000);
+        }
+        let (a, b) = (full.finish(), cohort.finish());
+        assert_eq!(a.client_phase.to_bits(), b.client_phase.to_bits());
+        assert_eq!(a.client_idle.to_bits(), b.client_idle.to_bits());
+        assert_eq!(a.sync_phase.to_bits(), b.sync_phase.to_bits());
+        assert_eq!(a.host_makespan.to_bits(), b.host_makespan.to_bits());
+        assert_eq!(
+            a.server_makespan_stream.to_bits(),
+            b.server_makespan_stream.to_bits()
+        );
+        assert_eq!(
+            a.queue_wait_barrier.to_bits(),
+            b.queue_wait_barrier.to_bits()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not in this round's cohort")]
+    fn accounting_outside_the_cohort_panics() {
+        let p = profile();
+        let mut sim = RoundSim::new_cohort(&p, &[1, 3], 8);
+        sim.client_compute(2, 1);
     }
 
     #[test]

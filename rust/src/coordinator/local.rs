@@ -47,57 +47,152 @@ pub struct ClientState {
     pub last_upload: Option<(Vec<f32>, Vec<i32>, Vec<i32>)>, // smashed, y, x
 }
 
-/// Build the full client-state table for a run. Deterministic in
+/// Lazily-materialized client-state table: the partition and per-client
+/// shard weights are computed up front (index lists and `f64`s —
+/// independent of the model size), but the model-sized [`ClientState`]
+/// (loader batch buffers, optimizer slots) is built only when a client
+/// first participates. Round state is therefore O(clients that ever ran)
+/// — O(cohort · rounds seen) — not O(registered population), which is
+/// what lets an orchestrator register a large population and sample a
+/// small per-round cohort from it.
+///
+/// Materialization is deterministic in `(variant, cfg, client id)` and
+/// independent of *when* it happens: a client built lazily in round 9 is
+/// byte-identical to one built eagerly at startup, because a loader only
+/// advances when that client steps. [`build_client_states`] is the eager
+/// wrapper over the same construction, so the two paths cannot diverge.
+pub struct ClientPool {
+    task: Task,
+    batch: usize,
+    nc: usize,
+    nl: usize,
+    opt_state: usize,
+    data_seed: u64,
+    run_seed: u64,
+    dataset_size: u64,
+    /// per-client dataset shards from the partition (index lists)
+    shards: Vec<Vec<u64>>,
+    /// per-client FedAvg weights (population-sized, but 8 B each)
+    weights: Vec<f64>,
+    states: std::collections::BTreeMap<usize, ClientState>,
+}
+
+impl ClientPool {
+    pub fn new(v: &VariantSpec, cfg: &RunConfig, task: Task) -> Self {
+        let part = match task {
+            Task::Vision => Partition::vision(
+                cfg.data_seed,
+                cfg.dataset_size,
+                cfg.n_clients,
+                cfg.scheme,
+            ),
+            Task::Lm => Partition::text(
+                cfg.data_seed,
+                cfg.dataset_size,
+                cfg.n_clients,
+                cfg.scheme,
+            ),
+        };
+        let total: usize = part.sizes().iter().sum();
+        let weights: Vec<f64> = part
+            .clients
+            .iter()
+            .map(|shard| shard.len() as f64 / total.max(1) as f64)
+            .collect();
+        Self {
+            task,
+            batch: v.batch,
+            nc: v.size_client,
+            nl: v.size_local(),
+            opt_state: v.opt_state,
+            data_seed: cfg.data_seed,
+            run_seed: cfg.run_seed,
+            dataset_size: cfg.dataset_size,
+            shards: part.clients,
+            weights,
+            states: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// Registered population size.
+    pub fn n(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// FedAvg weight for a client — never materializes its state.
+    pub fn shard_weight(&self, ci: usize) -> f64 {
+        self.weights[ci]
+    }
+
+    /// Number of client states actually materialized so far (the
+    /// O(cohort) claim made observable: a networked orchestrator keeps
+    /// this at zero, an in-process run at the number of distinct
+    /// participants).
+    pub fn built(&self) -> usize {
+        self.states.len()
+    }
+
+    fn build_state(&self, i: usize) -> ClientState {
+        let shard = if self.shards[i].is_empty() {
+            vec![(i as u64) % self.dataset_size] // degenerate shard fallback
+        } else {
+            self.shards[i].clone()
+        };
+        ClientState {
+            loader: Loader::new(
+                self.task,
+                self.data_seed,
+                shard,
+                self.batch,
+                mix64(self.run_seed, 0x10AD ^ i as u64),
+            ),
+            opt_local: OptState::new(self.opt_state, self.nl),
+            opt_client: OptState::new(self.opt_state, self.nc),
+            shard_weight: self.weights[i],
+            last_upload: None,
+        }
+    }
+
+    /// This client's state, materialized on first use.
+    pub fn state(&mut self, ci: usize) -> &mut ClientState {
+        if !self.states.contains_key(&ci) {
+            let s = self.build_state(ci);
+            self.states.insert(ci, s);
+        }
+        self.states.get_mut(&ci).expect("just inserted")
+    }
+
+    /// Materialize every listed client, then hand out disjoint mutable
+    /// borrows in ascending client order (the fan-out job order — the
+    /// same ascending order the eager `Vec` enumeration produced).
+    pub fn states_for(
+        &mut self,
+        clients: &[usize],
+    ) -> Vec<(usize, &mut ClientState)> {
+        for &ci in clients {
+            self.state(ci);
+        }
+        self.states
+            .iter_mut()
+            .filter(|(ci, _)| clients.binary_search(ci).is_ok())
+            .map(|(&ci, s)| (ci, s))
+            .collect()
+    }
+}
+
+/// Build the full client-state table for a run, eagerly. Deterministic in
 /// `(variant, cfg)` — the driver and every networked client process build
 /// byte-identical loaders/partitions from the same config, so a remote
 /// client stepping its own state produces the exact trajectory the
-/// in-process run would have.
+/// in-process run would have. Implemented as "materialize every client of
+/// a [`ClientPool`]" so the eager and lazy paths share one construction.
 pub fn build_client_states(
     v: &VariantSpec,
     cfg: &RunConfig,
     task: Task,
 ) -> Vec<ClientState> {
-    let (nc, nl) = (v.size_client, v.size_local());
-    let part = match task {
-        Task::Vision => Partition::vision(
-            cfg.data_seed,
-            cfg.dataset_size,
-            cfg.n_clients,
-            cfg.scheme,
-        ),
-        Task::Lm => Partition::text(
-            cfg.data_seed,
-            cfg.dataset_size,
-            cfg.n_clients,
-            cfg.scheme,
-        ),
-    };
-    let total: usize = part.sizes().iter().sum();
-    part.clients
-        .iter()
-        .enumerate()
-        .map(|(i, shard)| {
-            let shard = if shard.is_empty() {
-                vec![(i as u64) % cfg.dataset_size] // degenerate shard fallback
-            } else {
-                shard.clone()
-            };
-            let w = shard.len() as f64 / total.max(1) as f64;
-            ClientState {
-                loader: Loader::new(
-                    task,
-                    cfg.data_seed,
-                    shard,
-                    v.batch,
-                    mix64(cfg.run_seed, 0x10AD ^ i as u64),
-                ),
-                opt_local: OptState::new(v.opt_state, nl),
-                opt_client: OptState::new(v.opt_state, nc),
-                shard_weight: w,
-                last_upload: None,
-            }
-        })
-        .collect()
+    let pool = ClientPool::new(v, cfg, task);
+    (0..cfg.n_clients).map(|i| pool.build_state(i)).collect()
 }
 
 /// Read-only context shared by all client worker threads (or remote
@@ -137,9 +232,13 @@ pub struct LocalOutcome {
 /// [`upload_smashed`] next to the batch itself:
 ///
 /// * `seq` — the client's per-round upload index (1-based, strictly
-///   increasing). In `--drain stream` the networked dispatcher rejects
-///   gaps or reordering, so an out-of-order transport cannot silently
-///   reshuffle the arrival-order consumption schedule.
+///   increasing). The *wire* `SmashedSeq.seq` is stamped per connection
+///   lane by the networked sink instead (one strictly increasing counter
+///   across every upload the lane ships in a round); in `--drain stream`
+///   the dispatcher validates that counter keyed on `(conn, lane)`, so a
+///   reordering transport cannot silently reshuffle the arrival-order
+///   consumption schedule and multiplexed lanes on one socket cannot
+///   corrupt each other's ordering check.
 /// * `sent_at` — the client's virtual lane time when the upload leaves
 ///   the device; drives the event-sim's arrival-order server schedule
 ///   on the networked path (in-process, the same value flows through

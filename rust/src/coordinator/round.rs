@@ -88,7 +88,7 @@ use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::eventsim::{DeviceProfile, RoundSim, RoundTiming};
 use crate::coordinator::local::{
-    self, build_client_states, ClientState, LocalCtx, LocalOutcome,
+    self, ClientPool, ClientState, LocalCtx, LocalOutcome,
 };
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use crate::data::loader::Task;
@@ -131,9 +131,17 @@ pub struct Driver<'s> {
     pub theta_l: Vec<f32>,
     pub theta_s: Vec<f32>,
     opt_server: OptState,
-    /// SFLV1: per-client server replicas (θ_s, opt)
-    server_replicas: Vec<(Vec<f32>, OptState)>,
-    clients: Vec<ClientState>,
+    /// SFLV1: the value every server replica holds *between* rounds
+    /// (`finish_round` copies the participant average into all replicas,
+    /// so they are provably equal there). Per-participant replicas are
+    /// materialized lazily from this base during a round and dropped at
+    /// its end — O(cohort) model-sized state, not O(population).
+    replica_base: Vec<f32>,
+    /// SFLV1: replicas of this round's touched participants
+    server_replicas: std::collections::BTreeMap<usize, (Vec<f32>, OptState)>,
+    clients: ClientPool,
+    /// manifest optimizer-state flavor (lazy replica construction)
+    opt_state: usize,
     rng: Xoshiro256pp,
     pub comm_bytes: u64,
     pub flops_client: u64,
@@ -175,12 +183,13 @@ impl<'s> Driver<'s> {
             bail!("init blob sizes disagree with manifest");
         }
 
-        let clients = build_client_states(&v, &cfg, task);
+        // lazy pool: no client state is model-sized until a client
+        // actually participates (the networked orchestrator never
+        // materializes any)
+        let clients = ClientPool::new(&v, &cfg, task);
 
-        let server_replicas = if cfg.algorithm == Algorithm::SflV1 {
-            (0..cfg.n_clients)
-                .map(|_| (theta_s.clone(), OptState::new(v.opt_state, ns)))
-                .collect()
+        let replica_base = if cfg.algorithm == Algorithm::SflV1 {
+            theta_s.clone()
         } else {
             Vec::new()
         };
@@ -195,8 +204,10 @@ impl<'s> Driver<'s> {
             theta_l,
             theta_s,
             opt_server: OptState::new(opt_state, ns),
-            server_replicas,
+            replica_base,
+            server_replicas: std::collections::BTreeMap::new(),
             clients,
+            opt_state,
             rng: Xoshiro256pp::new(cfg.run_seed),
             comm_bytes: 0,
             flops_client: 0,
@@ -221,13 +232,11 @@ impl<'s> Driver<'s> {
         self.round_idx
     }
 
-    fn batch_xy(&self, client: usize) -> (TensorValue, Vec<i32>) {
-        local::loader_batch_xy(self.task, &self.clients[client].loader)
-    }
-
-    /// The fresh event-sim accumulator for one round.
-    pub fn new_sim(&self) -> RoundSim {
-        RoundSim::new(&self.profile, self.cfg.n_clients)
+    /// The fresh event-sim accumulator for one round, scoped to the
+    /// round's sampled cohort (per-client accounting is O(cohort), with
+    /// the population size kept only as the sync-phase divisor).
+    pub fn new_sim(&self, participants: &[usize]) -> RoundSim {
+        RoundSim::new_cohort(&self.profile, participants, self.cfg.n_clients)
     }
 
     /// The Main-Server queue for one round: capacity `N·(h/k + 1)` (never
@@ -249,7 +258,7 @@ impl<'s> Driver<'s> {
     /// local steps.
     pub fn run_round(&mut self) -> Result<f64> {
         let participants = self.sample_participants();
-        let mut sim = self.new_sim();
+        let mut sim = self.new_sim(&participants);
         let queue = self.round_queue(participants.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
@@ -341,12 +350,8 @@ impl<'s> Driver<'s> {
             profile: this.profile,
             nc: this.nc,
         };
-        let jobs: Vec<(usize, &mut ClientState)> = this
-            .clients
-            .iter_mut()
-            .enumerate()
-            .filter(|(ci, _)| participants.binary_search(ci).is_ok())
-            .collect();
+        let jobs: Vec<(usize, &mut ClientState)> =
+            this.clients.states_for(participants);
         let results: Vec<Result<LocalOutcome>> = if !stream {
             pool::run_jobs(eff, jobs, |(ci, state)| {
                 local::client_local_phase(&ctx, ci, state, theta0.clone(), queue)
@@ -471,12 +476,13 @@ impl<'s> Driver<'s> {
         losses: &mut Vec<f64>,
     ) -> Result<Vec<f32>> {
         let mut opt_c = std::mem::replace(
-            &mut self.clients[ci].opt_client,
+            &mut self.clients.state(ci).opt_client,
             OptState::None,
         );
         for _step in 1..=self.cfg.local_steps {
-            self.clients[ci].loader.next_batch();
-            let (x, y) = self.batch_xy(ci);
+            let cs = self.clients.state(ci);
+            cs.loader.next_batch();
+            let (x, y) = local::loader_batch_xy(self.task, &cs.loader);
             // client forward to the cut layer
             let smashed = local::locked_client_fwd(
                 self.session,
@@ -501,7 +507,7 @@ impl<'s> Driver<'s> {
             )?;
             theta[..self.nc].copy_from_slice(&new_c);
         }
-        self.clients[ci].opt_client = opt_c;
+        self.clients.state(ci).opt_client = opt_c;
         Ok(theta)
     }
 
@@ -528,8 +534,15 @@ impl<'s> Driver<'s> {
         let rt = self.session.client_runtime(&self.cfg.variant)?;
         let (theta_s, opt_s) = match self.cfg.algorithm {
             Algorithm::SflV1 => {
-                let (t, o) = &mut self.server_replicas[ci];
-                (t, o)
+                // lazy replica: between rounds every replica equals the
+                // averaged base, so cloning it on first touch is
+                // bit-identical to keeping N live replicas
+                let base = &self.replica_base;
+                let (os, ns) = (self.opt_state, self.ns);
+                let e = self.server_replicas.entry(ci).or_insert_with(|| {
+                    (base.clone(), OptState::new(os, ns))
+                });
+                (&mut e.0, &mut e.1)
             }
             _ => (&mut self.theta_s, &mut self.opt_server),
         };
@@ -642,7 +655,9 @@ impl<'s> Driver<'s> {
         for (ci, g_sm) in feedback {
             self.note_alignment_accounting(ci, sim);
             if let Some(pos) = updated.iter().position(|(c, _)| *c == ci) {
-                let (sm, y, _x) = self.clients[ci]
+                let (sm, y, _x) = self
+                    .clients
+                    .state(ci)
                     .last_upload
                     .clone()
                     .context("sage alignment without upload")?;
@@ -707,7 +722,7 @@ impl<'s> Driver<'s> {
                 updated.iter().map(|(_, t)| t.as_slice()).collect();
             let weights: Vec<f64> = updated
                 .iter()
-                .map(|(c, _)| self.clients[*c].shard_weight.max(1e-9))
+                .map(|(c, _)| self.clients.shard_weight(*c).max(1e-9))
                 .collect();
             fedavg_into(&refs, &weights, &mut self.agg_buf);
             if self.cfg.algorithm.is_decoupled() {
@@ -719,19 +734,30 @@ impl<'s> Driver<'s> {
             }
         }
 
-        // SFLV1: aggregate the per-client server replicas into all replicas
+        // SFLV1: aggregate the participants' server replicas, then fold
+        // the mean into the single between-round base. Copying the mean
+        // into every replica (the eager formulation) makes all replicas
+        // equal — so dropping the cohort's replicas and keeping one base
+        // is the same state in O(1) model-sized copies instead of O(N).
         if self.cfg.algorithm == Algorithm::SflV1 {
             let refs: Vec<&[f32]> = participants
                 .iter()
-                .map(|&c| self.server_replicas[c].0.as_slice())
+                .map(|&c| {
+                    self.server_replicas
+                        .get(&c)
+                        .map(|(t, _)| t.as_slice())
+                        // a participant that never touched its replica
+                        // (impossible with local_steps >= 1, but harmless)
+                        // still holds the between-round base
+                        .unwrap_or(self.replica_base.as_slice())
+                })
                 .collect();
             let w = vec![1.0; refs.len()];
             let mut mean = vec![0.0f32; self.ns];
             fedavg_into(&refs, &w, &mut mean);
             self.theta_s.copy_from_slice(&mean);
-            for (rep, _) in &mut self.server_replicas {
-                rep.copy_from_slice(&mean);
-            }
+            self.replica_base.copy_from_slice(&mean);
+            self.server_replicas.clear();
         }
 
         self.timings.push(sim.finish());
@@ -833,6 +859,10 @@ impl<'s> Driver<'s> {
     pub fn finalize_record(&self, rec: &mut RunRecord) {
         rec.set("comm_bytes", self.comm_bytes as f64);
         rec.set("client_flops", self.flops_client as f64);
+        // the O(cohort) memory claim, observable: model-sized client
+        // states this driver ever materialized (0 for a networked
+        // orchestrator; #distinct participants for an in-process run)
+        rec.set("client_states_built", self.clients.built() as f64);
         rec.set("peak_mem_bytes", self.book.peak_mem_bytes as f64);
         rec.set(
             "virtual_seconds",

@@ -4,7 +4,10 @@
 //!   run        — one training run (all config flags overridable)
 //!   serve      — run the experiment as a network server (framed TCP
 //!                protocol; clients attach with `connect`)
-//!   connect    — attach this process as a remote SFL client
+//!   connect    — attach this process as a remote SFL client; `--virtual N`
+//!                multiplexes N simulated edge devices through the socket
+//!   bench      — load benchmarks (`bench serve-storm`: TCP dispatcher +
+//!                multiplexed clients, rounds/sec and p99 round latency)
 //!   list       — list artifact variants and their entries
 //!   validate   — execute golden cross-language checks over the artifacts
 //!   costs      — print the Table-I style cost book for a variant
@@ -33,6 +36,7 @@ fn main() {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "connect" => cmd_connect(&args),
+        "bench" => cmd_bench(&args),
         "list" => cmd_list(),
         "validate" => cmd_validate(&args),
         "costs" => cmd_costs(&args),
@@ -51,7 +55,7 @@ fn main() {
 fn print_help() {
     println!(
         "heron-sfl — hybrid ZO/FO split federated learning\n\n\
-         USAGE: heron-sfl <run|serve|connect|list|validate|costs|spectrum> [--key value ...]\n\n\
+         USAGE: heron-sfl <run|serve|connect|bench|list|validate|costs|spectrum> [--key value ...]\n\n\
          run flags: --variant cnn_c1 --algo heron|cse|sage|sflv1|sflv2\n\
            --clients N --rounds R --h H --k K --mu MU --n_pert P\n\
            --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
@@ -66,6 +70,13 @@ fn print_help() {
            --listen ADDR (default 127.0.0.1:7070; port 0 picks one)\n\
            --conns N (client connections to wait for; default 2)\n\
          connect flags: --addr ADDR (default 127.0.0.1:7070) --name NAME\n\
+           --virtual N (multiplex N simulated edge devices — protocol\n\
+             lanes — through this one socket; default 1)\n\
+         bench serve-storm flags: all run flags (defaults to the storm\n\
+           preset: population 1024, cohort 64, seeds uploads), plus\n\
+           --conns N (sockets; default 16) --lanes L (virtual clients per\n\
+           socket; default 64) --out report.json (merge a\n\
+           heron-sfl-bench-v1 report)\n\
          costs flags: --variant V [--n_pert P]\n\
          spectrum flags: --variant cnn_c1 [--steps M] [--probes P]"
     );
@@ -174,11 +185,16 @@ fn print_net_summary(report: &heron_sfl::net::NetReport) {
 fn cmd_connect(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070");
     let name = args.get_or("name", "client");
+    let lanes = args.get_usize("virtual", 1);
     let session = Session::open_default()?;
     let transport = heron_sfl::net::TcpTransport::connect(addr)?;
-    println!("connected to {addr} as {name}");
-    let rep =
-        heron_sfl::net::run_client(&session, Box::new(transport), name)?;
+    println!("connected to {addr} as {name} ({lanes} virtual client(s))");
+    let rep = heron_sfl::net::run_client_virtual(
+        &session,
+        Box::new(transport),
+        name,
+        lanes,
+    )?;
     println!(
         "served clients {:?}: {} rounds, {} local phases | wire: {} sent, {} recv | NACKs {} | server said: {}",
         rep.assigned,
@@ -189,6 +205,87 @@ fn cmd_connect(args: &Args) -> Result<()> {
         rep.nacks,
         rep.shutdown_reason,
     );
+    // one line per multiplexed run for the CI smoke to grep: every lane
+    // either ran a local phase or legitimately owned no clients
+    println!(
+        "{}/{} lanes complete",
+        heron_sfl::net::storm::lanes_complete(&rep),
+        rep.lanes,
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("serve-storm") => cmd_bench_serve_storm(args),
+        other => bail!(
+            "unknown bench mode {other:?} — try `heron-sfl bench serve-storm` \
+             (the full sweep lives in `cargo bench --bench serve_storm`)"
+        ),
+    }
+}
+
+/// One storm point from the CLI: real TCP dispatcher + `--conns` sockets
+/// × `--lanes` virtual clients each, reporting round throughput and tail
+/// latency. The fixed 3-point sweep with the baseline gate lives in
+/// `benches/serve_storm.rs`; this mode is for ad-hoc sizing runs and the
+/// CI smoke.
+fn cmd_bench_serve_storm(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => heron_sfl::net::storm_config(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    let conns = args.get_usize("conns", 16);
+    let lanes = args.get_usize("lanes", 64);
+    println!(
+        "storm point: {} | {conns} socket(s) x {lanes} lane(s) = {} virtual clients",
+        cfg.describe(),
+        conns * lanes,
+    );
+    let session = Session::open_default()?;
+    let p = heron_sfl::net::run_storm(&session, cfg, conns, lanes)?;
+    println!(
+        "{} virtual clients / {} sockets: {:.2} rounds/s | mean round {:.1} ms | p99 round {:.1} ms",
+        p.total_lanes,
+        p.conns,
+        p.rounds_per_sec,
+        p.mean_round_seconds * 1e3,
+        p.p99_round_seconds * 1e3,
+    );
+    println!(
+        "{}/{} lanes complete | NACKs {} | wire {}",
+        p.lanes_complete,
+        p.total_lanes,
+        p.nacks,
+        fmt_bytes(p.wire_bytes),
+    );
+    if let Some(out) = args.get("out") {
+        heron_sfl::bench_harness::merge_report(
+            out,
+            &[],
+            &[
+                (
+                    "serve_storm_rounds_per_sec",
+                    heron_sfl::util::json::Value::Num(p.rounds_per_sec),
+                ),
+                (
+                    "serve_storm_p99_round_latency_seconds",
+                    heron_sfl::util::json::Value::Num(p.p99_round_seconds),
+                ),
+                (
+                    "serve_storm_virtual_clients",
+                    heron_sfl::util::json::Value::Num(p.total_lanes as f64),
+                ),
+                (
+                    "serve_storm_conns",
+                    heron_sfl::util::json::Value::Num(p.conns as f64),
+                ),
+            ],
+        )?;
+        println!("merged storm point into {out}");
+    }
     Ok(())
 }
 

@@ -1,26 +1,41 @@
 //! Networked client endpoint: drives the local ZO/FO phase of one or more
 //! logical clients against a remote `heron-sfl serve` dispatcher.
 //!
+//! One connection can multiplex many **virtual clients**: `connect
+//! --virtual N` declares N lanes in its `Hello` and receives one
+//! `Assign{lane, ..}` per lane, so N simulated edge devices ride a
+//! single socket. Every upload is stamped with its lane id and (in
+//! `--drain stream` runs) a per-lane strictly-increasing sequence
+//! number, which is what lets the dispatcher validate ordering per
+//! `(conn, lane)` instead of per connection. Per-client model state is
+//! materialized lazily ([`ClientPool`]) on first participation, so a
+//! storm client fronting thousands of registered-but-rarely-sampled
+//! devices does not pay O(population) memory up front.
+//!
 //! The endpoint is deliberately thin: after the `Hello`/`Assign`
 //! handshake it reconstructs the *exact* run setup the server uses — the
-//! config arrives as exact-string JSON (`RunConfig::to_json`), the client
-//! states come from the same `build_client_states`, and every step runs
-//! the same `coordinator::local` functions the in-process driver fans out
-//! to its worker pool. The wire carries bit-exact f32 payloads, so the
-//! trajectory cannot diverge from `Driver::run_round`.
+//! config arrives as exact-string JSON (`RunConfig::to_json`, identical
+//! across all lanes), the client states come from the same
+//! [`ClientPool`] construction, and every step runs the same
+//! `coordinator::local` functions the in-process driver fans out to its
+//! worker pool. The wire carries bit-exact f32 payloads, so the
+//! trajectory cannot diverge from `Driver::run_round` — however the
+//! clients are spread over sockets and lanes.
 //!
 //! Message handling is a single blocking loop:
 //!
-//! * `RoundBarrier` — remember `(round, participants)`.
+//! * `RoundBarrier` — remember `(round, participants)`, reset the
+//!   per-lane upload sequence counters.
 //! * `ModelSync{client: BROADCAST}` — decoupled fan-out: run
-//!   `client_local_phase` for each owned participant (ascending id), with
-//!   a sink that ships `Smashed` frames (`SmashedSeq`, carrying the
-//!   per-round upload sequence number + virtual send time, in `--drain
-//!   stream` runs) and blocks on the `UploadAck`
-//!   (counting typed NACKs); reply `ZoUpdate` (per-step seeds + loss
-//!   scalars — plus the per-probe `gscales` in `--zo_wire seeds` mode,
-//!   which then **replaces** the θ upload), `ModelSync` (updated θ,
-//!   `theta` mode only), `LocalDone` (analytic counters).
+//!   `client_local_phase` for each owned participant (ascending id
+//!   across all lanes, matching the in-process job order), with a sink
+//!   that ships `Smashed` frames (`SmashedSeq`, carrying the lane's
+//!   upload sequence number + virtual send time, in `--drain stream`
+//!   runs) and blocks on the `UploadAck` (counting typed NACKs per
+//!   lane); reply `ZoUpdate` (per-step seeds + loss scalars — plus the
+//!   per-probe `gscales` in `--zo_wire seeds` mode, which then
+//!   **replaces** the θ upload), `ModelSync` (updated θ, `theta` mode
+//!   only), `LocalDone` (analytic counters).
 //! * `ModelSync{client: ci}` — locked SFLV1/V2 phase for `ci`: per step,
 //!   cut forward → `Smashed` → wait `CutGrad` → backprop; then θ up.
 //! * `AlignGrad` — FSL-SAGE: `aux_align` against the stored last upload,
@@ -32,7 +47,7 @@ use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::drain::DrainMode;
 use crate::coordinator::eventsim::{DeviceProfile, WireRoundStats};
 use crate::coordinator::local::{
-    self, build_client_states, ClientState, LocalCtx, SmashedSink, UploadTag,
+    self, ClientPool, ClientState, LocalCtx, SmashedSink, UploadTag,
 };
 use crate::coordinator::round::OptState;
 use crate::coordinator::server_queue::SmashedBatch;
@@ -42,7 +57,7 @@ use crate::net::wire::{Msg, BROADCAST, VERSION};
 use crate::runtime::Session;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// End-of-run statistics from one client process.
@@ -50,12 +65,20 @@ use std::sync::Mutex;
 pub struct ClientReport {
     pub name: String,
     pub assigned: Vec<u32>,
+    /// virtual-client lanes driven through this connection
+    pub lanes: usize,
+    /// logical clients assigned to each lane
+    pub lane_clients: Vec<usize>,
     /// rounds observed (RoundSummary count)
     pub rounds: usize,
-    /// local phases executed (decoupled + locked)
+    /// local phases executed (decoupled + locked), all lanes
     pub phases: u64,
+    /// local phases executed per lane
+    pub lane_phases: Vec<u64>,
     /// uploads rejected by the server queue (typed NACKs received)
     pub nacks: u64,
+    /// typed NACKs received per lane
+    pub lane_nacks: Vec<u64>,
     pub wire: WireRoundStats,
     pub shutdown_reason: String,
 }
@@ -73,11 +96,17 @@ fn recv(t: &Mutex<Box<dyn Transport>>) -> Result<Option<Msg>> {
 /// typed NACK for a queue-capacity drop) is counted and reported back as
 /// "dropped", mirroring the in-process `ServerQueue::push` contract. In
 /// a `--drain stream` run the upload travels as `SmashedSeq` — the
-/// barrier `Smashed` layout extended with the per-round sequence number
-/// and virtual send time the dispatcher's arrival-order consumption
-/// validates and measures.
+/// barrier `Smashed` layout extended with the **lane's** per-round
+/// upload sequence number (stamped here, continuous across every client
+/// the lane runs this round — the exact counter the dispatcher validates
+/// per `(conn, lane)`) and the virtual send time.
 struct NetSink<'a> {
     t: &'a Mutex<Box<dyn Transport>>,
+    /// local lane id this phase runs on; stamped into every upload
+    lane: u32,
+    /// the lane's per-round upload counter (shared across the lane's
+    /// clients, reset at each RoundBarrier)
+    seq: &'a AtomicU32,
     nacks: &'a AtomicU64,
     err: Mutex<Option<anyhow::Error>>,
     /// `--drain stream`: ship `SmashedSeq` instead of `Smashed`
@@ -89,16 +118,18 @@ impl NetSink<'_> {
         let mut g = self.t.lock().unwrap_or_else(|p| p.into_inner());
         let msg = if self.stream {
             Msg::SmashedSeq {
+                lane: self.lane,
                 client: b.client as u32,
                 round: b.round as u32,
                 step: b.step as u32,
-                seq: tag.seq as u32,
+                seq: self.seq.fetch_add(1, Ordering::Relaxed) + 1,
                 sent_at: tag.sent_at,
                 smashed: b.smashed,
                 targets: b.targets,
             }
         } else {
             Msg::Smashed {
+                lane: self.lane,
                 client: b.client as u32,
                 round: b.round as u32,
                 step: b.step as u32,
@@ -142,27 +173,79 @@ impl SmashedSink for NetSink<'_> {
     }
 }
 
-/// Connect-side entry point: handshake, then serve rounds until the
-/// dispatcher says `Shutdown`.
+/// Connect-side entry point: handshake with a single lane, then serve
+/// rounds until the dispatcher says `Shutdown`.
 pub fn run_client(
     session: &Session,
     transport: Box<dyn Transport>,
     name: &str,
 ) -> Result<ClientReport> {
+    run_client_virtual(session, transport, name, 1)
+}
+
+/// Connect-side entry point multiplexing `lanes` virtual clients over
+/// one connection (`connect --virtual N`): the `Hello` declares the lane
+/// count, one `Assign` arrives per lane, and every upload is stamped
+/// with its lane. Per-client model state materializes lazily on first
+/// participation.
+pub fn run_client_virtual(
+    session: &Session,
+    transport: Box<dyn Transport>,
+    name: &str,
+    lanes: usize,
+) -> Result<ClientReport> {
+    if lanes == 0 {
+        bail!("connect: need at least one lane");
+    }
     let counters = transport.counters();
     let t = Mutex::new(transport);
-    send(&t, &Msg::Hello { name: name.into(), protocol: VERSION as u32 })?;
-    let (assigned, cfg) = match recv(&t)? {
-        Some(Msg::Assign { client_ids, config }) => {
-            let v = crate::util::json::parse(&config)
-                .map_err(|e| anyhow::anyhow!("Assign config: {e}"))?;
-            (client_ids, RunConfig::from_json(&v)?)
+    send(&t, &Msg::Hello {
+        name: name.into(),
+        protocol: VERSION as u32,
+        lanes: lanes as u32,
+    })?;
+
+    // one Assign per declared lane, in lane order; every lane carries
+    // the identical exact-string config
+    let mut assigned: Vec<u32> = Vec::new();
+    let mut lane_of: BTreeMap<usize, u32> = BTreeMap::new();
+    let mut cfg_json: Option<String> = None;
+    for k in 0..lanes as u32 {
+        match recv(&t)? {
+            Some(Msg::Assign { lane, client_ids, config }) => {
+                if lane != k {
+                    bail!("Assign for lane {lane}, expected lane {k}");
+                }
+                match &cfg_json {
+                    None => cfg_json = Some(config),
+                    Some(first) if *first == config => {}
+                    Some(_) => {
+                        bail!("lane {k}: config differs from lane 0's")
+                    }
+                }
+                for &ci in &client_ids {
+                    if lane_of.insert(ci as usize, k).is_some() {
+                        bail!("client {ci} assigned to two lanes");
+                    }
+                }
+                assigned.extend(client_ids);
+            }
+            Some(Msg::Shutdown { reason }) => bail!("server refused: {reason}"),
+            other => bail!("expected Assign for lane {k}, got {other:?}"),
         }
-        Some(Msg::Shutdown { reason }) => bail!("server refused: {reason}"),
-        other => bail!("expected Assign, got {other:?}"),
+    }
+    let cfg = {
+        let raw = cfg_json.expect("at least one lane");
+        let v = crate::util::json::parse(&raw)
+            .map_err(|e| anyhow::anyhow!("Assign config: {e}"))?;
+        RunConfig::from_json(&v)?
     };
+    let lane_clients: Vec<usize> = (0..lanes)
+        .map(|k| lane_of.values().filter(|&&l| l as usize == k).count())
+        .collect();
     log::info!(
-        "assigned clients {assigned:?}: {}",
+        "assigned {} clients over {lanes} lane(s): {}",
+        assigned.len(),
         cfg.describe()
     );
 
@@ -177,10 +260,17 @@ pub fn run_client(
     let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
         .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64);
     session.warmup(&cfg.variant, cfg.algorithm.required_entries())?;
-    let mut states: Vec<ClientState> = build_client_states(&v, &cfg, task);
+    // lazy: a lane's client state is built the first time that client is
+    // actually sampled into a cohort — a storm client fronting a large
+    // population never materializes the absentees
+    let mut pool = ClientPool::new(&v, &cfg, task);
     let profile = DeviceProfile::edge_default();
 
-    let nacks = AtomicU64::new(0);
+    let lane_nacks: Vec<AtomicU64> =
+        (0..lanes).map(|_| AtomicU64::new(0)).collect();
+    let lane_seq: Vec<AtomicU32> =
+        (0..lanes).map(|_| AtomicU32::new(0)).collect();
+    let mut lane_phases: Vec<u64> = vec![0; lanes];
     let mut phases = 0u64;
     let mut rounds = 0usize;
     let mut barrier: Option<(u32, Vec<u32>)> = None;
@@ -195,23 +285,31 @@ pub fn run_client(
         match msg {
             Msg::RoundBarrier { round, participants } => {
                 round_theta.clear();
+                // the upload seq is a per-round, per-lane counter
+                for s in &lane_seq {
+                    s.store(0, Ordering::Relaxed);
+                }
                 barrier = Some((round, participants));
             }
-            Msg::ModelSync { round, client, theta } if client == BROADCAST => {
+            Msg::ModelSync { round, client, theta, .. }
+                if client == BROADCAST =>
+            {
                 // decoupled fan-out for every owned participant, in
-                // ascending client order (= participant order within this
-                // connection, matching the in-process job order)
+                // ascending client order across ALL lanes (= the
+                // in-process job order; lane assignment interleaves ids,
+                // so the union must be re-sorted)
                 let (bar_round, participants) = barrier
                     .as_ref()
                     .context("ModelSync before RoundBarrier")?;
                 if *bar_round != round {
                     bail!("ModelSync round {round} != barrier {bar_round}");
                 }
-                let mine: Vec<usize> = assigned
+                let mut mine: Vec<usize> = assigned
                     .iter()
                     .map(|&c| c as usize)
                     .filter(|c| participants.contains(&(*c as u32)))
                     .collect();
+                mine.sort_unstable();
                 let ctx = LocalCtx {
                     session,
                     cfg: &cfg,
@@ -223,16 +321,19 @@ pub fn run_client(
                     nc,
                 };
                 for ci in mine {
+                    let lane = lane_of[&ci];
                     let sink = NetSink {
                         t: &t,
-                        nacks: &nacks,
+                        lane,
+                        seq: &lane_seq[lane as usize],
+                        nacks: &lane_nacks[lane as usize],
                         err: Mutex::new(None),
                         stream: cfg.drain == DrainMode::Stream,
                     };
                     let out = local::client_local_phase(
                         &ctx,
                         ci,
-                        &mut states[ci],
+                        pool.state(ci),
                         theta.clone(),
                         &sink,
                     )?;
@@ -242,11 +343,13 @@ pub fn run_client(
                         return Err(e.context("smashed upload failed"));
                     }
                     phases += 1;
+                    lane_phases[lane as usize] += 1;
                     // the lean seeds mode replaces the θ upload with the
                     // per-probe replay record; the server reconstructs θ
                     // bit-identically from (seed, gscales)
                     let lean = cfg.zo_wire == ZoWireMode::Seeds;
                     send(&t, &Msg::ZoUpdate {
+                        lane,
                         client: ci as u32,
                         round,
                         seeds: out.seeds.clone(),
@@ -259,12 +362,14 @@ pub fn run_client(
                     })?;
                     if !lean {
                         send(&t, &Msg::ModelSync {
+                            lane,
                             client: ci as u32,
                             round,
                             theta: out.theta.clone(),
                         })?;
                     }
                     send(&t, &Msg::LocalDone {
+                        lane,
                         client: ci as u32,
                         round,
                         comm_bytes: out.comm_bytes,
@@ -275,18 +380,35 @@ pub fn run_client(
                     round_theta.insert(ci, out.theta);
                 }
             }
-            Msg::ModelSync { round, client, theta } => {
+            Msg::ModelSync { lane, round, client, theta } => {
                 // locked SFLV1/V2 phase for one client
                 let ci = client as usize;
-                if !assigned.contains(&client) {
+                let Some(&own) = lane_of.get(&ci) else {
                     bail!("locked kickoff for client {ci} not assigned here");
+                };
+                if lane != own {
+                    bail!(
+                        "locked kickoff for client {ci} on lane {lane}, \
+                         assigned to lane {own}"
+                    );
                 }
                 let theta_end = locked_phase(
-                    session, &t, &cfg, &mut states[ci], base.as_deref(), nc,
-                    task, ci, round, theta,
+                    session,
+                    &t,
+                    &cfg,
+                    pool.state(ci),
+                    base.as_deref(),
+                    nc,
+                    task,
+                    ci,
+                    lane,
+                    round,
+                    theta,
                 )?;
                 phases += 1;
+                lane_phases[lane as usize] += 1;
                 send(&t, &Msg::ModelSync {
+                    lane,
                     client,
                     round,
                     theta: theta_end.clone(),
@@ -294,11 +416,12 @@ pub fn run_client(
                 round_theta.insert(ci, theta_end);
             }
             Msg::AlignGrad { client, round, g } => {
-                if !assigned.contains(&client) {
-                    bail!("AlignGrad for client {client} not assigned here");
-                }
                 let ci = client as usize;
-                let (sm, y, _x) = states[ci]
+                let Some(&lane) = lane_of.get(&ci) else {
+                    bail!("AlignGrad for client {client} not assigned here");
+                };
+                let (sm, y, _x) = pool
+                    .state(ci)
                     .last_upload
                     .clone()
                     .context("sage alignment without upload")?;
@@ -317,6 +440,7 @@ pub fn run_client(
                     cfg.lr_client,
                 )?;
                 send(&t, &Msg::ModelSync {
+                    lane,
                     client,
                     round,
                     theta: new_theta.clone(),
@@ -336,12 +460,18 @@ pub fn run_client(
         }
     };
 
+    let lane_nacks: Vec<u64> =
+        lane_nacks.iter().map(|n| n.load(Ordering::Relaxed)).collect();
     Ok(ClientReport {
         name: name.into(),
         assigned,
+        lanes,
+        lane_clients,
         rounds,
         phases,
-        nacks: nacks.load(Ordering::Relaxed),
+        lane_phases,
+        nacks: lane_nacks.iter().sum(),
+        lane_nacks,
         wire: counters.snapshot(),
         shutdown_reason,
     })
@@ -350,6 +480,7 @@ pub fn run_client(
 /// The client half of the locked SFLV1/V2 exchange: per local step, cut
 /// forward → `Smashed` up → wait for the `CutGrad` → backprop with the
 /// relayed gradient (the training lock the decoupled methods remove).
+#[allow(clippy::too_many_arguments)]
 fn locked_phase(
     session: &Session,
     t: &Mutex<Box<dyn Transport>>,
@@ -359,6 +490,7 @@ fn locked_phase(
     nc: usize,
     task: Task,
     ci: usize,
+    lane: u32,
     round: u32,
     mut theta: Vec<f32>,
 ) -> Result<Vec<f32>> {
@@ -374,6 +506,7 @@ fn locked_phase(
             &x,
         )?;
         send(t, &Msg::Smashed {
+            lane,
             client: ci as u32,
             round,
             step: step as u32,

@@ -15,11 +15,22 @@
 //! * [`transport`] — a blocking [`transport::Transport`] trait with an
 //!   in-memory loopback backend (still encodes/decodes every frame, so
 //!   tests measure real bytes) and a `std::net::TcpStream` backend.
-//! * [`server`] — the dispatcher: accepts N client connections and
-//!   bridges decoded messages into the existing `ServerQueue` +
-//!   `Driver` round engine (`heron-sfl serve`).
+//! * [`poller`] — the event-driven reception core (v4): a small sharded
+//!   set of poll loops own the non-blocking read sides of every
+//!   connection, parse frames incrementally into per-connection
+//!   reassembly buffers, and feed one event queue owned by the
+//!   orchestrator.
+//! * [`server`] — the orchestrator: accepts N client connections (each
+//!   multiplexing any number of virtual-client *lanes*) and bridges
+//!   poller events into the existing `ServerQueue` + `Driver` round
+//!   engine (`heron-sfl serve`).
 //! * [`client`] — the remote client endpoint driving the local ZO/FO
-//!   phase (`heron-sfl connect`).
+//!   phase (`heron-sfl connect`); `connect --virtual N` drives N
+//!   simulated edge devices through one socket.
+//! * [`storm`] — the serve-storm load generator (`bench serve-storm` +
+//!   CI's `serve-storm-smoke`): real TCP dispatcher + multiplexed
+//!   clients, measuring rounds/sec and p99 round latency vs the
+//!   virtual-client count.
 //!
 //! The contract (pinned by `rust/tests/net_loopback.rs`): for every
 //! algorithm, a networked run is **bit-identical** to the in-process
@@ -37,11 +48,14 @@
 //! analytic `2(|θc|+|θa|)` ModelSync cost of Table I.
 
 pub mod client;
+pub mod poller;
 pub mod server;
+pub mod storm;
 pub mod transport;
 pub mod wire;
 
-pub use client::{run_client, ClientReport};
+pub use client::{run_client, run_client_virtual, ClientReport};
 pub use server::{serve_tcp, serve_transports, NetReport};
+pub use storm::{run_storm, storm_config, StormPoint};
 pub use transport::{loopback_pair, TcpTransport, Transport};
 pub use wire::{Msg, WireError, VERSION};

@@ -1,12 +1,42 @@
-//! Networked Main/Fed-Server dispatcher: accepts N client connections and
-//! bridges decoded wire messages into the *existing* round engine
+//! Networked Main/Fed-Server dispatcher: accepts N client connections —
+//! each multiplexing any number of virtual-client *lanes* — and bridges
+//! decoded wire messages into the *existing* round engine
 //! (`ServerQueue` + `Driver::server_drain`/`finish_round`).
 //!
-//! ## Orchestration
+//! ## Event-driven reception core (v4)
 //!
-//! One reader thread per connection decodes frames and pushes them into a
-//! shared event queue; the orchestrator thread owns every write half and
-//! all server model state. Per round:
+//! Connections are no longer owned by one reader thread each. After the
+//! blocking `Hello`/`Assign` handshake every transport is split into a
+//! write half (owned by the orchestrator) and a non-blocking
+//! [`crate::net::poller::PollSource`]; the sources are sharded
+//! round-robin over a small fixed set of poll loops
+//! ([`crate::net::poller::poll_shard`], `DEFAULT_SHARDS` threads total —
+//! not per connection). Each loop sweeps its connections, reads whatever
+//! bytes are available, reassembles frames incrementally in
+//! per-connection buffers, and pushes decoded messages into the single
+//! [`crate::net::poller::EventQueue`] the orchestrator consumes. A
+//! thousand mostly-idle connections therefore cost a thousand reassembly
+//! buffers, not a thousand parked threads.
+//!
+//! ## Client multiplexing and cohort scheduling
+//!
+//! `Hello{lanes}` declares how many virtual clients ride the connection;
+//! the dispatcher derives one global lane index over all connections and
+//! assigns logical client `i` to global lane `i % total_lanes` (which
+//! degenerates to the classic `i % n_conns` round-robin when every
+//! connection runs a single lane). One `Assign{lane, ..}` goes out per
+//! lane, and every client→server upload is stamped with its lane, so
+//! ownership is validated per `(conn, lane)` — a lane cannot speak for a
+//! client that rides a different lane of the *same* socket.
+//!
+//! Per round the driver samples a cohort from the registered population
+//! and holds round state only for it: the event-sim is cohort-scoped,
+//! the driver's lazy client pool materializes per-client state only on
+//! first touch (the networked server itself touches none), and SFLV1
+//! server replicas exist only for the round's participants. Orchestrator
+//! round state is O(cohort), not O(population).
+//!
+//! ## Orchestration
 //!
 //! 1. `RoundBarrier{round, participants}` to every connection, then the
 //!    θ_l broadcast (`ModelSync{client: BROADCAST}`) to each connection
@@ -21,9 +51,10 @@
 //!    In stream mode the orchestrator then immediately runs
 //!    [`Driver::server_pump`] — uploads are consumed **between events,
 //!    mid-round, in arrival order** instead of waiting for the barrier
-//!    (the dispatcher also validates each client's upload `seq` is
-//!    strictly increasing, so a reordering transport cannot silently
-//!    reshuffle the schedule, and feeds the frame's `sent_at` into the
+//!    (the dispatcher also validates each upload `seq` is strictly
+//!    increasing **per `(conn, lane)`** — keying by connection alone
+//!    would let two lanes multiplexed on one socket trip each other's
+//!    ordering check — and feeds the frame's `sent_at` into the
 //!    event-sim's arrival-driven server-occupancy model). Locked
 //!    uploads run [`Driver::locked_server_exchange`] and reply with a
 //!    `CutGrad`.
@@ -44,8 +75,9 @@
 //!
 //! Because every model-state mutation runs through the same `Driver`
 //! methods with inputs in the same order, a networked run is bit-identical
-//! to `Driver::run_round` (asserted for all five algorithms in
-//! `rust/tests/net_loopback.rs`).
+//! to `Driver::run_round` regardless of how clients are multiplexed over
+//! sockets (asserted for all five algorithms — per-connection *and*
+//! lane-multiplexed — in `rust/tests/net_loopback.rs`).
 
 use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::drain::DrainMode;
@@ -54,12 +86,20 @@ use crate::coordinator::local::{self, LocalOutcome};
 use crate::coordinator::round::Driver;
 use crate::coordinator::server_queue::SmashedBatch;
 use crate::metrics::RunRecord;
-use crate::net::transport::{RxHalf, Transport, TxHalf, WireCounters};
+use crate::net::poller::{
+    poll_shard, shard_conns, Event, EventQueue, PollConn, DEFAULT_SHARDS,
+};
+use crate::net::transport::{Transport, TxHalf, WireCounters};
 use crate::net::wire::{Msg, BROADCAST, VERSION};
 use crate::runtime::Session;
 use anyhow::{bail, Context, Result};
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Sanity cap on a single connection's declared lane count: a corrupt
+/// or hostile `Hello` must not make the dispatcher allocate unbounded
+/// per-lane state before the run even starts.
+const MAX_LANES_PER_CONN: u32 = 1 << 20;
 
 /// What a completed networked run hands back to the caller.
 pub struct NetReport {
@@ -73,6 +113,8 @@ pub struct NetReport {
     pub nacks_sent: u64,
     /// connections served
     pub connections: usize,
+    /// virtual-client lanes served, summed over all connections
+    pub lanes: usize,
 }
 
 /// Accept `n_conns` TCP client connections and run the configured
@@ -94,42 +136,16 @@ pub fn serve_tcp(
     serve_transports(session, cfg, transports, record_name)
 }
 
-/// Reader-thread → orchestrator event.
-enum Event {
-    Msg(Msg),
-    Closed,
-    Err(String),
-}
-
-struct Events {
-    q: Mutex<VecDeque<(usize, Event)>>,
-    cv: Condvar,
-}
-
-impl Events {
-    fn new() -> Self {
-        Events { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
-    }
-
-    fn push(&self, conn: usize, ev: Event) {
-        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
-        g.push_back((conn, ev));
-        self.cv.notify_one();
-    }
-
-    fn pop(&self) -> (usize, Event) {
-        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
-        loop {
-            if let Some(ev) = g.pop_front() {
-                return ev;
-            }
-            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
-        }
-    }
+/// Which connection — and which virtual lane on it — owns a logical
+/// client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LaneAddr {
+    conn: usize,
+    lane: u32,
 }
 
 /// Pop the next *message* event, turning closes/errors into errors.
-fn next_msg(events: &Events) -> Result<(usize, Msg)> {
+fn next_msg(events: &EventQueue) -> Result<(usize, Msg)> {
     match events.pop() {
         (conn, Event::Msg(m)) => Ok((conn, m)),
         (conn, Event::Closed) => {
@@ -153,7 +169,9 @@ fn sum_counters(counters: &[Arc<WireCounters>]) -> WireRoundStats {
 
 /// Run the full experiment over already-connected transports (the TCP
 /// path lands here after `accept`; loopback tests call it directly).
-/// Logical client ids are assigned round-robin across connections.
+/// Logical client `i` belongs to global lane `i % total_lanes` — a
+/// round-robin over every lane of every connection, which collapses to
+/// the classic `i % n_conns` when each connection declares one lane.
 pub fn serve_transports(
     session: &Session,
     cfg: RunConfig,
@@ -167,11 +185,13 @@ pub fn serve_transports(
     let n_conns = transports.len();
     let cfg_json = cfg.to_json().to_string();
 
-    // ---- handshake: Hello in, Assign out, ids round-robin ----
-    let mut owner = vec![0usize; cfg.n_clients]; // logical client -> conn
+    // ---- handshake pass 1: every Hello, for the lane declarations.
+    // Lane→client assignment needs the GLOBAL lane count, so no Assign
+    // can go out before every connection has said hello.
+    let mut lanes_per_conn: Vec<u32> = Vec::with_capacity(n_conns);
     for (j, t) in transports.iter_mut().enumerate() {
         match t.recv()? {
-            Some(Msg::Hello { name, protocol }) => {
+            Some(Msg::Hello { name, protocol, lanes }) => {
                 if protocol != VERSION as u32 {
                     let m = Msg::Shutdown {
                         reason: format!(
@@ -181,32 +201,64 @@ pub fn serve_transports(
                     let _ = t.send(&m);
                     bail!("conn {j} ({name}): protocol {protocol} unsupported");
                 }
-                log::info!("conn {j}: hello from {name} ({})", t.peer());
+                if lanes == 0 || lanes > MAX_LANES_PER_CONN {
+                    let m = Msg::Shutdown {
+                        reason: format!("lane count {lanes} out of range"),
+                    };
+                    let _ = t.send(&m);
+                    bail!("conn {j} ({name}): lane count {lanes} out of range");
+                }
+                log::info!(
+                    "conn {j}: hello from {name} ({}), {lanes} lane(s)",
+                    t.peer()
+                );
+                lanes_per_conn.push(lanes);
             }
             other => bail!("conn {j}: expected Hello, got {other:?}"),
         }
-        let ids: Vec<u32> = (0..cfg.n_clients)
-            .filter(|i| i % n_conns == j)
-            .map(|i| {
-                owner[i] = j;
-                i as u32
-            })
-            .collect();
-        t.send(&Msg::Assign { client_ids: ids, config: cfg_json.clone() })?;
+    }
+
+    // global lane index: conn j's lanes occupy [off_j, off_j + lanes_j)
+    let total_lanes: usize = lanes_per_conn.iter().map(|&l| l as usize).sum();
+    let mut lane_addr: Vec<LaneAddr> = Vec::with_capacity(total_lanes);
+    for (j, &l) in lanes_per_conn.iter().enumerate() {
+        for k in 0..l {
+            lane_addr.push(LaneAddr { conn: j, lane: k });
+        }
+    }
+    let owner: Vec<LaneAddr> =
+        (0..cfg.n_clients).map(|i| lane_addr[i % total_lanes]).collect();
+
+    // ---- handshake pass 2: one Assign per lane, in local lane order ----
+    let mut next_global = 0usize;
+    for (j, t) in transports.iter_mut().enumerate() {
+        for k in 0..lanes_per_conn[j] {
+            let ids: Vec<u32> = (0..cfg.n_clients)
+                .filter(|&i| i % total_lanes == next_global)
+                .map(|i| i as u32)
+                .collect();
+            t.send(&Msg::Assign {
+                lane: k,
+                client_ids: ids,
+                config: cfg_json.clone(),
+            })?;
+            next_global += 1;
+        }
     }
 
     let counters: Vec<Arc<WireCounters>> =
         transports.iter().map(|t| t.counters()).collect();
 
-    // ---- split and spawn reader threads ----
+    // ---- split: write halves stay with the orchestrator, read sides
+    // become non-blocking poll sources sharded over a few poll loops ----
     let mut txs: Vec<Box<dyn TxHalf>> = Vec::with_capacity(n_conns);
-    let mut rxs: Vec<Box<dyn RxHalf>> = Vec::with_capacity(n_conns);
-    for t in transports {
-        let (tx, rx) = t.split();
+    let mut pconns: Vec<PollConn> = Vec::with_capacity(n_conns);
+    for (j, t) in transports.into_iter().enumerate() {
+        let (tx, src) = t.poll_split();
         txs.push(tx);
-        rxs.push(rx);
+        pconns.push(PollConn { conn: j, src, counters: counters[j].clone() });
     }
-    let events = Events::new();
+    let events = EventQueue::new();
 
     let mut driver = Driver::new(session, cfg)?;
     driver.warmup()?;
@@ -214,21 +266,9 @@ pub fn serve_transports(
     let mut report: Option<(RunRecord, u64)> = None;
     let mut run_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
-        for (j, mut rx) in rxs.into_iter().enumerate() {
+        for shard in shard_conns(pconns, DEFAULT_SHARDS) {
             let events = &events;
-            scope.spawn(move || loop {
-                match rx.recv() {
-                    Ok(Some(m)) => events.push(j, Event::Msg(m)),
-                    Ok(None) => {
-                        events.push(j, Event::Closed);
-                        break;
-                    }
-                    Err(e) => {
-                        events.push(j, Event::Err(format!("{e:#}")));
-                        break;
-                    }
-                }
-            });
+            scope.spawn(move || poll_shard(shard, events));
         }
 
         match run_rounds(
@@ -236,6 +276,7 @@ pub fn serve_transports(
             &mut txs,
             &events,
             &owner,
+            total_lanes,
             &counters,
             record_name,
         ) {
@@ -244,8 +285,8 @@ pub fn serve_transports(
         }
 
         // End of run (or abort): tell every client to go home — this is
-        // also what unblocks the reader threads, since clients close
-        // their sockets once they see the Shutdown.
+        // also what unblocks the poll loops, since clients close their
+        // sockets once they see the Shutdown.
         let reason = match &run_err {
             None => "run complete".to_string(),
             Some(e) => format!("server error: {e:#}"),
@@ -267,6 +308,7 @@ pub fn serve_transports(
         wire: sum_counters(&counters),
         nacks_sent,
         connections: n_conns,
+        lanes: total_lanes,
     })
 }
 
@@ -325,8 +367,9 @@ fn replay_theta(
 fn run_rounds(
     driver: &mut Driver,
     txs: &mut [Box<dyn TxHalf>],
-    events: &Events,
-    owner: &[usize],
+    events: &EventQueue,
+    owner: &[LaneAddr],
+    total_lanes: usize,
     counters: &[Arc<WireCounters>],
     record_name: &str,
 ) -> Result<(RunRecord, u64)> {
@@ -343,15 +386,18 @@ fn run_rounds(
         let participants = driver.sample_participants();
         let parts_u32: Vec<u32> =
             participants.iter().map(|&c| c as u32).collect();
-        let mut sim = driver.new_sim();
+        let mut sim = driver.new_sim(&participants);
         let queue = driver.round_queue(participants.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut updated: Vec<(usize, Vec<f32>)> = Vec::new();
         // feedback consumed mid-round by the stream drain policy; the
         // barrier leftovers from `server_drain` are appended below
         let mut feedback: Vec<(usize, Vec<f32>)> = Vec::new();
-        // per-client next expected upload seq for this round (stream)
-        let mut next_seq: BTreeMap<usize, u32> = BTreeMap::new();
+        // next expected upload seq for this round, per (conn, lane) —
+        // two lanes multiplexed on one socket interleave their uploads
+        // arbitrarily, so keying by connection alone would reject valid
+        // traffic while accepting cross-lane reordering
+        let mut next_seq: BTreeMap<(usize, u32), u32> = BTreeMap::new();
         let r32 = round as u32;
 
         // broadcasts are built once and serialized per connection —
@@ -370,9 +416,10 @@ fn run_rounds(
             let theta0: Vec<f32> =
                 if lean { driver.theta_l.clone() } else { Vec::new() };
             let active: Vec<usize> = (0..n_conns)
-                .filter(|&j| participants.iter().any(|&c| owner[c] == j))
+                .filter(|&j| participants.iter().any(|&c| owner[c].conn == j))
                 .collect();
             let sync_msg = Msg::ModelSync {
+                lane: BROADCAST,
                 round: r32,
                 client: BROADCAST,
                 theta: driver.theta_l.clone(),
@@ -387,7 +434,14 @@ fn run_rounds(
             while done_count < participants.len() {
                 let (conn, msg) = next_msg(events)?;
                 match msg {
-                    Msg::Smashed { client, round: r, step, smashed, targets } => {
+                    Msg::Smashed {
+                        lane,
+                        client,
+                        round: r,
+                        step,
+                        smashed,
+                        targets,
+                    } => {
                         if stream {
                             bail!(
                                 "conn {conn}: plain Smashed in a --drain \
@@ -395,7 +449,8 @@ fn run_rounds(
                             );
                         }
                         check_round(r, r32, "Smashed")?;
-                        let ci = check_owned(owner, conn, client, "Smashed")?;
+                        let ci =
+                            check_owned(owner, conn, lane, client, "Smashed")?;
                         push_and_ack(
                             &queue,
                             &mut txs[conn],
@@ -406,6 +461,7 @@ fn run_rounds(
                         )?;
                     }
                     Msg::SmashedSeq {
+                        lane,
                         client,
                         round: r,
                         step,
@@ -421,14 +477,15 @@ fn run_rounds(
                             );
                         }
                         check_round(r, r32, "SmashedSeq")?;
-                        let ci =
-                            check_owned(owner, conn, client, "SmashedSeq")?;
-                        let next = next_seq.entry(ci).or_insert(1);
+                        let ci = check_owned(
+                            owner, conn, lane, client, "SmashedSeq",
+                        )?;
+                        let next = next_seq.entry((conn, lane)).or_insert(1);
                         if seq != *next {
                             bail!(
-                                "conn {conn}: client {ci} upload seq {seq}, \
-                                 expected {next} (reordered, duplicated or \
-                                 dropped frame)"
+                                "conn {conn} lane {lane}: upload seq {seq} \
+                                 for client {ci}, expected {next} (reordered, \
+                                 duplicated or dropped frame)"
                             );
                         }
                         *next += 1;
@@ -461,22 +518,31 @@ fn run_rounds(
                         // holding everything to the round barrier
                         driver.server_pump(&queue, &mut sim, &mut feedback)?;
                     }
-                    Msg::ZoUpdate { client, round: r, seeds, scalars, gscales } => {
+                    Msg::ZoUpdate {
+                        lane,
+                        client,
+                        round: r,
+                        seeds,
+                        scalars,
+                        gscales,
+                    } => {
                         check_round(r, r32, "ZoUpdate")?;
-                        let ci = check_owned(owner, conn, client, "ZoUpdate")?;
+                        let ci =
+                            check_owned(owner, conn, lane, client, "ZoUpdate")?;
                         let e = got.entry(ci).or_default();
                         e.losses =
                             Some(scalars.iter().map(|&l| l as f64).collect());
                         e.seeds = seeds;
                         e.gscales = gscales;
                     }
-                    Msg::ModelSync { client, round: r, theta } => {
+                    Msg::ModelSync { lane, client, round: r, theta } => {
                         check_round(r, r32, "ModelSync")?;
                         let ci =
-                            check_owned(owner, conn, client, "ModelSync")?;
+                            check_owned(owner, conn, lane, client, "ModelSync")?;
                         got.entry(ci).or_default().theta = Some(theta);
                     }
                     Msg::LocalDone {
+                        lane,
                         client,
                         round: r,
                         comm_bytes,
@@ -486,7 +552,7 @@ fn run_rounds(
                     } => {
                         check_round(r, r32, "LocalDone")?;
                         let ci =
-                            check_owned(owner, conn, client, "LocalDone")?;
+                            check_owned(owner, conn, lane, client, "LocalDone")?;
                         let e = got.entry(ci).or_default();
                         if e.done.is_some() {
                             bail!("conn {conn}: duplicate LocalDone for {ci}");
@@ -545,20 +611,23 @@ fn run_rounds(
             // ---- locked SFLV1/V2: strictly sequential per participant ----
             sim.set_workers(1);
             for &ci in &participants {
-                txs[owner[ci]].send(&Msg::ModelSync {
+                let addr = owner[ci];
+                txs[addr.conn].send(&Msg::ModelSync {
+                    lane: addr.lane,
                     round: r32,
                     client: ci as u32,
                     theta: driver.theta_l.clone(),
                 })?;
                 let theta_end = loop {
                     let (conn, msg) = next_msg(events)?;
-                    if conn != owner[ci] {
+                    if conn != addr.conn {
                         bail!(
                             "conn {conn}: traffic during client {ci}'s locked phase"
                         );
                     }
                     match msg {
                         Msg::Smashed {
+                            lane,
                             client,
                             round: r,
                             step,
@@ -566,6 +635,7 @@ fn run_rounds(
                             targets,
                         } => {
                             check_round(r, r32, "Smashed")?;
+                            check_owned(owner, conn, lane, client, "Smashed")?;
                             check_client(client, ci, "Smashed")?;
                             let (loss, g) = driver.locked_server_exchange(
                                 ci, smashed, targets, &mut sim,
@@ -579,8 +649,9 @@ fn run_rounds(
                                 g,
                             })?;
                         }
-                        Msg::ModelSync { client, round: r, theta } => {
+                        Msg::ModelSync { lane, client, round: r, theta } => {
                             check_round(r, r32, "ModelSync")?;
+                            check_owned(owner, conn, lane, client, "ModelSync")?;
                             check_client(client, ci, "ModelSync")?;
                             break theta;
                         }
@@ -605,7 +676,8 @@ fn run_rounds(
             let Some(pos) = updated.iter().position(|(c, _)| *c == ci) else {
                 continue;
             };
-            txs[owner[ci]].send(&Msg::AlignGrad {
+            let addr = owner[ci];
+            txs[addr.conn].send(&Msg::AlignGrad {
                 client: ci as u32,
                 round: r32,
                 g,
@@ -613,9 +685,16 @@ fn run_rounds(
             loop {
                 let (conn, msg) = next_msg(events)?;
                 match msg {
-                    Msg::ModelSync { client, round: r, theta }
-                        if conn == owner[ci] && client as usize == ci =>
+                    Msg::ModelSync { lane, client, round: r, theta }
+                        if conn == addr.conn && client as usize == ci =>
                     {
+                        if lane != addr.lane {
+                            bail!(
+                                "conn {conn}: align ModelSync for client {ci} \
+                                 on lane {lane}, owned by lane {}",
+                                addr.lane
+                            );
+                        }
                         check_round(r, r32, "align ModelSync")?;
                         updated[pos].1 = theta;
                         break;
@@ -647,6 +726,10 @@ fn run_rounds(
     }
 
     driver.finalize_record(&mut rec);
+    // multiplexing topology, for tooling that diffs a networked run
+    // against an in-process one (`scripts/diff_net_metrics.py --virtual`)
+    rec.set("net_conns", n_conns as f64);
+    rec.set("net_lanes", total_lanes as f64);
     Ok((rec, nacks_sent))
 }
 
@@ -698,16 +781,27 @@ fn check_round(got: u32, want: u32, what: &str) -> Result<()> {
 /// Every client message is validated the same way: a bad round would
 /// silently change the drain order / collection slots, and an
 /// out-of-range or stolen client id would corrupt the merge (or panic
-/// the sim). Returns the validated client index.
+/// the sim). Ownership is per `(conn, lane)` — the stamped lane must be
+/// the one the client was assigned to, so lanes multiplexed on the same
+/// socket cannot speak for each other. Returns the validated client
+/// index.
 fn check_owned(
-    owner: &[usize],
+    owner: &[LaneAddr],
     conn: usize,
+    lane: u32,
     client: u32,
     what: &str,
 ) -> Result<usize> {
     let ci = client as usize;
-    if ci >= owner.len() || owner[ci] != conn {
+    if ci >= owner.len() || owner[ci].conn != conn {
         bail!("conn {conn}: {what} for client {ci} it does not own");
+    }
+    if owner[ci].lane != lane {
+        bail!(
+            "conn {conn}: {what} for client {ci} stamped lane {lane}, \
+             owned by lane {}",
+            owner[ci].lane
+        );
     }
     Ok(ci)
 }

@@ -1,0 +1,225 @@
+//! serve-storm: the event-core load generator behind `bench serve-storm`
+//! and the CI `serve-storm-smoke` job.
+//!
+//! One storm point boots a real TCP dispatcher (`serve_tcp` on an
+//! ephemeral localhost port), attaches `conns` client processes each
+//! multiplexing `lanes_per_conn` virtual clients
+//! (`run_client_virtual`), runs the configured experiment to completion,
+//! and reports round throughput (rounds/sec) plus the p99 per-round
+//! latency (nearest-rank over the per-round wall-clock deltas the run
+//! record already carries). Sweeping `lanes_per_conn` with `conns`
+//! fixed is how the bench shows the tentpole property: a thousand
+//! virtual clients ride ≤16 sockets through the sharded poll loops
+//! without a thousand reader threads.
+//!
+//! The storm workload is deliberately the *real* protocol — the same
+//! `Driver`, the same wire codec, the same bit-identity contract — not
+//! a synthetic echo loop, so a regression here is a regression users
+//! would feel in `serve`/`connect`.
+
+use crate::coordinator::config::{RunConfig, ZoWireMode};
+use crate::net::client::{run_client_virtual, ClientReport};
+use crate::net::server::{serve_tcp, NetReport};
+use crate::net::transport::TcpTransport;
+use crate::runtime::Session;
+use anyhow::{Context, Result};
+
+/// The workload `configs/serve_storm.json` encodes (kept in sync by
+/// `repo_presets_load_and_validate` + the storm preset test): a large
+/// registered population, a small sampled cohort, one lean local step —
+/// round orchestration dominates, model math stays light enough for CI.
+pub fn storm_config() -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        n_clients: 1024,
+        participation: 0.0625, // cohort of 64 per round
+        rounds: 3,
+        local_steps: 1,
+        upload_every: 1,
+        // no eval inside the timed loop — the bench measures protocol
+        // round throughput, not the eval entry
+        eval_every: 0,
+        // lean uploads: seeds + per-probe scalars instead of full θ_l
+        zo_wire: ZoWireMode::Seeds,
+        ..RunConfig::default()
+    }
+}
+
+/// One measured storm point.
+#[derive(Debug, Clone)]
+pub struct StormPoint {
+    pub conns: usize,
+    pub lanes_per_conn: usize,
+    /// total virtual clients = conns × lanes_per_conn
+    pub total_lanes: usize,
+    pub rounds: usize,
+    pub wall_seconds: f64,
+    pub rounds_per_sec: f64,
+    pub mean_round_seconds: f64,
+    /// nearest-rank p99 over the per-round wall-clock deltas
+    pub p99_round_seconds: f64,
+    /// lanes that either ran a local phase or owned no clients at all
+    pub lanes_complete: usize,
+    pub nacks: u64,
+    /// total measured wire traffic, server-side view
+    pub wire_bytes: u64,
+}
+
+/// Nearest-rank percentile (`p` in [0, 1]) over an ascending-sorted
+/// slice. Returns 0 for an empty slice.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// A lane is complete when it ran at least one local phase, or never
+/// owned a client in the first place (population < total lanes).
+pub fn lanes_complete(rep: &ClientReport) -> usize {
+    (0..rep.lanes)
+        .filter(|&k| rep.lane_clients[k] == 0 || rep.lane_phases[k] > 0)
+        .count()
+}
+
+/// Run one storm point: serve `cfg` over TCP on an ephemeral localhost
+/// port and drive it with `conns` clients × `lanes_per_conn` virtual
+/// lanes each.
+pub fn run_storm(
+    session: &Session,
+    cfg: RunConfig,
+    conns: usize,
+    lanes_per_conn: usize,
+) -> Result<StormPoint> {
+    cfg.validate()?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .context("binding storm listener")?;
+    let addr = listener.local_addr()?.to_string();
+    let rounds = cfg.rounds;
+
+    let mut server_out: Option<Result<NetReport>> = None;
+    let mut client_out: Vec<Result<ClientReport>> = Vec::new();
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_tcp(session, cfg.clone(), listener, conns, "storm")
+        });
+        let clients: Vec<_> = (0..conns)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let t = TcpTransport::connect(&addr)?;
+                    run_client_virtual(
+                        session,
+                        Box::new(t),
+                        &format!("storm-{i}"),
+                        lanes_per_conn,
+                    )
+                })
+            })
+            .collect();
+        server_out = Some(server.join().expect("storm server panicked"));
+        client_out = clients
+            .into_iter()
+            .map(|h| h.join().expect("storm client panicked"))
+            .collect();
+    });
+    let report = server_out.expect("storm server never ran")?;
+    let reports: Vec<ClientReport> =
+        client_out.into_iter().collect::<Result<_>>()?;
+
+    let rec = &report.record;
+    let wall = rec.rounds.last().map(|r| r.wall_seconds).unwrap_or(0.0);
+    let mut lat: Vec<f64> = Vec::with_capacity(rec.rounds.len());
+    let mut prev = 0.0;
+    for r in &rec.rounds {
+        lat.push((r.wall_seconds - prev).max(0.0));
+        prev = r.wall_seconds;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = lat.iter().sum::<f64>() / lat.len().max(1) as f64;
+
+    Ok(StormPoint {
+        conns,
+        lanes_per_conn,
+        total_lanes: report.lanes,
+        rounds,
+        wall_seconds: wall,
+        rounds_per_sec: rounds as f64 / wall.max(1e-12),
+        mean_round_seconds: mean,
+        p99_round_seconds: percentile_nearest_rank(&lat, 0.99),
+        lanes_complete: reports.iter().map(lanes_complete).sum(),
+        nacks: report.nacks_sent,
+        wire_bytes: report.wire.bytes_sent + report.wire.bytes_recv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentile() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v, 0.99), 99.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 100.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.5), 50.0);
+        assert_eq!(percentile_nearest_rank(&[2.5], 0.99), 2.5);
+        assert_eq!(percentile_nearest_rank(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn storm_config_is_valid_and_cohort_sized() {
+        let cfg = storm_config();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.n_clients, 1024);
+        assert_eq!(cfg.participants_per_round(), 64);
+        assert_eq!(cfg.eval_every, 0, "no eval inside the timed loop");
+    }
+
+    /// `configs/serve_storm.json` must stay the on-disk spelling of
+    /// `storm_config()` — `bench serve-storm --config` and the in-code
+    /// default may not drift apart.
+    #[test]
+    fn storm_preset_matches_storm_config() {
+        let mut dir = std::env::current_dir().unwrap();
+        loop {
+            if dir.join("configs").exists() {
+                break;
+            }
+            assert!(dir.pop(), "configs/ not found above cwd");
+        }
+        let loaded =
+            RunConfig::load(&dir.join("configs/serve_storm.json")).unwrap();
+        let code = storm_config();
+        assert_eq!(loaded.variant, code.variant);
+        assert_eq!(loaded.n_clients, code.n_clients);
+        assert_eq!(loaded.participation, code.participation);
+        assert_eq!(loaded.rounds, code.rounds);
+        assert_eq!(loaded.local_steps, code.local_steps);
+        assert_eq!(loaded.upload_every, code.upload_every);
+        assert_eq!(loaded.eval_every, code.eval_every);
+        assert_eq!(loaded.zo_wire, code.zo_wire);
+        assert_eq!(loaded.algorithm.name(), code.algorithm.name());
+    }
+
+    #[test]
+    fn lanes_complete_counts_idle_unowned_lanes() {
+        let rep = ClientReport {
+            name: "t".into(),
+            assigned: vec![0, 1],
+            lanes: 3,
+            lane_clients: vec![1, 1, 0],
+            rounds: 1,
+            phases: 1,
+            lane_phases: vec![1, 0, 0],
+            nacks: 0,
+            lane_nacks: vec![0, 0, 0],
+            wire: Default::default(),
+            shutdown_reason: "run complete".into(),
+        };
+        // lane 0 worked, lane 2 owns nobody — lane 1 owned a client but
+        // never ran a phase, so it is NOT complete
+        assert_eq!(lanes_complete(&rep), 2);
+    }
+}

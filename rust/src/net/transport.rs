@@ -14,10 +14,11 @@
 //! measured-traffic reporting.
 
 use crate::coordinator::eventsim::WireRoundStats;
+use crate::net::poller::{Fill, PollSource};
 use crate::net::wire::{self, Msg};
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -38,7 +39,11 @@ impl WireCounters {
         self.frames_sent.fetch_add(1, Ordering::Relaxed);
     }
 
-    fn note_recv(&self, bytes: u64) {
+    /// One received frame of `bytes` total size. `pub(crate)` so the
+    /// event-driven poller (`net::poller`), which decodes frames out of
+    /// raw reassembly buffers, can account them on the same counters as
+    /// the blocking `RxHalf` path.
+    pub(crate) fn note_recv(&self, bytes: u64) {
         self.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
         self.frames_recv.fetch_add(1, Ordering::Relaxed);
     }
@@ -65,6 +70,13 @@ pub trait Transport: Send {
     fn counters(&self) -> Arc<WireCounters>;
     fn peer(&self) -> String;
     fn split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn RxHalf>);
+    /// Split into a send half plus a **non-blocking byte source** for the
+    /// event-driven server poller (`net::poller`). Unlike [`split`], the
+    /// receive side stops being frame-granular: the poller reads raw
+    /// bytes into per-connection reassembly buffers and decodes frames
+    /// incrementally. Any bytes the blocking handshake path buffered but
+    /// did not consume must carry over into the source.
+    fn poll_split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn PollSource>);
 }
 
 pub trait TxHalf: Send {
@@ -120,11 +132,28 @@ impl Pipe {
         }
     }
 
+    /// Non-blocking pop for the poller path: a frame if one is queued,
+    /// otherwise whether the pipe is merely empty or closed for good.
+    fn try_pop(&self) -> TryPop {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        match g.frames.pop_front() {
+            Some(f) => TryPop::Frame(f),
+            None if g.closed => TryPop::Closed,
+            None => TryPop::Empty,
+        }
+    }
+
     fn close(&self) {
         let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
         g.closed = true;
         self.cv.notify_all();
     }
+}
+
+enum TryPop {
+    Frame(Vec<u8>),
+    Empty,
+    Closed,
 }
 
 pub struct LoopbackTx {
@@ -169,6 +198,34 @@ impl RxHalf for LoopbackRx {
     }
 }
 
+/// Poller-side view of a loopback receive pipe: serves the queued
+/// *encoded frame bytes* in arbitrary-size chunks, so the server's
+/// reassembly path is exercised end to end even in-memory.
+pub struct LoopbackSource {
+    pipe: Arc<Pipe>,
+    pending: Vec<u8>,
+    off: usize,
+}
+
+impl PollSource for LoopbackSource {
+    fn fill(&mut self, buf: &mut [u8]) -> std::io::Result<Fill> {
+        if self.off == self.pending.len() {
+            match self.pipe.try_pop() {
+                TryPop::Frame(f) => {
+                    self.pending = f;
+                    self.off = 0;
+                }
+                TryPop::Empty => return Ok(Fill::WouldBlock),
+                TryPop::Closed => return Ok(Fill::Eof),
+            }
+        }
+        let n = buf.len().min(self.pending.len() - self.off);
+        buf[..n].copy_from_slice(&self.pending[self.off..self.off + n]);
+        self.off += n;
+        Ok(Fill::Bytes(n))
+    }
+}
+
 /// In-memory transport endpoint; see [`loopback_pair`].
 pub struct LoopbackTransport {
     tx: LoopbackTx,
@@ -196,6 +253,15 @@ impl Transport for LoopbackTransport {
 
     fn split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn RxHalf>) {
         (Box::new(self.tx), Box::new(self.rx))
+    }
+
+    fn poll_split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn PollSource>) {
+        let src = LoopbackSource {
+            pipe: self.rx.pipe.clone(),
+            pending: Vec::new(),
+            off: 0,
+        };
+        (Box::new(self.tx), Box::new(src))
     }
 }
 
@@ -253,6 +319,78 @@ impl RxHalf for TcpRx {
                 Ok(Some(msg))
             }
             None => Ok(None),
+        }
+    }
+}
+
+/// Write half used after `poll_split`. Because `poll_split` flips the
+/// shared socket to non-blocking mode (`try_clone` duplicates the fd, so
+/// `O_NONBLOCK` applies to both directions), sends here loop over raw
+/// `write` calls and absorb `WouldBlock` with a short park instead of
+/// relying on `write_all`.
+pub struct NbTcpTx {
+    stream: TcpStream,
+    counters: Arc<WireCounters>,
+}
+
+impl TxHalf for NbTcpTx {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let frame = wire::encode_frame_checked(msg)
+            .with_context(|| format!("tcp: encoding {}", msg.name()))?;
+        let mut off = 0usize;
+        while off < frame.len() {
+            match self.stream.write(&frame[off..]) {
+                Ok(0) => bail!("tcp: peer closed mid-write"),
+                Ok(n) => off += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("tcp: sending {}", msg.name())
+                    })
+                }
+            }
+        }
+        self.counters.note_sent(frame.len() as u64);
+        Ok(())
+    }
+}
+
+/// Poller-side view of a TCP read half: non-blocking reads, preceded by
+/// whatever the handshake-era `BufReader` had already buffered.
+pub struct TcpSource {
+    stream: TcpStream,
+    carry: Vec<u8>,
+    off: usize,
+}
+
+impl PollSource for TcpSource {
+    fn fill(&mut self, buf: &mut [u8]) -> std::io::Result<Fill> {
+        if self.off < self.carry.len() {
+            let n = buf.len().min(self.carry.len() - self.off);
+            buf[..n].copy_from_slice(&self.carry[self.off..self.off + n]);
+            self.off += n;
+            if self.off == self.carry.len() {
+                self.carry.clear();
+                self.off = 0;
+            }
+            return Ok(Fill::Bytes(n));
+        }
+        match self.stream.read(buf) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => Ok(Fill::Bytes(n)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                Ok(Fill::WouldBlock)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                Ok(Fill::WouldBlock)
+            }
+            Err(e) => Err(e),
         }
     }
 }
@@ -318,6 +456,24 @@ impl Transport for TcpTransport {
     fn split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn RxHalf>) {
         (Box::new(self.tx), Box::new(self.rx))
     }
+
+    fn poll_split(self: Box<Self>) -> (Box<dyn TxHalf>, Box<dyn PollSource>) {
+        // Carry over anything the handshake's BufReader consumed off the
+        // socket but did not hand out yet — those bytes never reappear
+        // on the raw fd.
+        let mut reader = self.rx.reader;
+        let carry = reader.buffer().to_vec();
+        let stream = reader.into_inner();
+        // Shared fd: this flips *both* directions to non-blocking, which
+        // NbTcpTx is written for.
+        let _ = stream.set_nonblocking(true);
+        // write_frame flushes after every send, so the BufWriter holds
+        // no unflushed handshake bytes here.
+        let (tx_stream, _) = self.tx.writer.into_parts();
+        let tx = NbTcpTx { stream: tx_stream, counters: self.counters.clone() };
+        let src = TcpSource { stream, carry, off: 0 };
+        (Box::new(tx), Box::new(src))
+    }
 }
 
 #[cfg(test)]
@@ -327,7 +483,7 @@ mod tests {
     #[test]
     fn loopback_roundtrip_and_counters() {
         let (mut a, mut b) = loopback_pair();
-        let msg = Msg::Hello { name: "x".into(), protocol: 1 };
+        let msg = Msg::Hello { name: "x".into(), protocol: 1, lanes: 1 };
         a.send(&msg).unwrap();
         let got = b.recv().unwrap().unwrap();
         assert_eq!(got, msg);
@@ -369,6 +525,7 @@ mod tests {
         });
         let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
         let msg = Msg::ZoUpdate {
+            lane: 0,
             client: 0,
             round: 1,
             seeds: vec![42],

@@ -33,7 +33,15 @@ pub const MAGIC: [u8; 2] = *b"HN";
 /// virtual send time. No existing payload layout changed (barrier-mode
 /// frames differ from v2 only in this header version byte), but v2 and
 /// v3 peers still refuse each other at the handshake, as for any bump.
-pub const VERSION: u8 = 3;
+/// v4: client multiplexing — one connection can carry many virtual
+/// clients ("lanes"). `Hello` declares the connection's lane count,
+/// `Assign` is sent once per lane and names it, and every client→server
+/// upload (`ModelSync`, `ZoUpdate`, `Smashed`, `SmashedSeq`,
+/// `LocalDone`) is stamped with the originating `lane` so the server
+/// can validate ownership and upload sequencing per `(connection,
+/// lane)`, not per connection. A classic single-client connection is
+/// simply `lanes == 1`, lane id 0.
+pub const VERSION: u8 = 4;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -125,17 +133,21 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// The SFL protocol message set. One frame carries exactly one message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    /// client → server: first message on a fresh connection.
-    Hello { name: String, protocol: u32 },
-    /// server → client: logical client ids this process owns + the full
-    /// run config (exact-string JSON, see `RunConfig::to_json`).
-    Assign { client_ids: Vec<u32>, config: String },
+    /// client → server: first message on a fresh connection. `lanes` is
+    /// the number of virtual clients this connection multiplexes (v4);
+    /// a plain `connect` declares 1.
+    Hello { name: String, protocol: u32, lanes: u32 },
+    /// server → client: logical client ids one lane owns + the full run
+    /// config (exact-string JSON, see `RunConfig::to_json`). Sent once
+    /// per declared lane, in lane order.
+    Assign { lane: u32, client_ids: Vec<u32>, config: String },
     /// server → clients: a round is starting; `participants` is the
     /// sampled cohort (all connections learn it, participants act on it).
     RoundBarrier { round: u32, participants: Vec<u32> },
-    /// Model parameters. Down: θ_l^t broadcast (`client == BROADCAST`) or
-    /// a locked-phase kickoff for one client; up: a client's updated θ_l.
-    ModelSync { round: u32, client: u32, theta: Vec<f32> },
+    /// Model parameters. Down: θ_l^t broadcast (`client == BROADCAST`,
+    /// `lane == BROADCAST`) or a locked-phase kickoff for one client;
+    /// up: a client's updated θ_l, stamped with its lane.
+    ModelSync { lane: u32, round: u32, client: u32, theta: Vec<f32> },
     /// client → server: the lean per-step ZO record — counter-derived
     /// perturbation seeds plus one scalar (the step loss) per local step
     /// (paper Remark 4; FO baselines report the same shape). In
@@ -145,6 +157,7 @@ pub enum Msg {
     /// `zo::replay_trajectory`, bit-identical to the client's own θ.
     /// Empty in `theta` mode.
     ZoUpdate {
+        lane: u32,
         client: u32,
         round: u32,
         seeds: Vec<i32>,
@@ -154,6 +167,7 @@ pub enum Msg {
     /// client → server: one smashed-data upload (decoupled: enqueued for
     /// the barrier drain; locked: answered by a `CutGrad`).
     Smashed {
+        lane: u32,
         client: u32,
         round: u32,
         step: u32,
@@ -168,6 +182,7 @@ pub enum Msg {
     /// `sent_at` is the client's virtual lane time at upload, feeding
     /// the event-sim's arrival-driven server-occupancy schedule.
     SmashedSeq {
+        lane: u32,
         client: u32,
         round: u32,
         step: u32,
@@ -193,6 +208,7 @@ pub enum Msg {
     /// client → server: one logical client's local phase is complete;
     /// carries the client-side analytic accounting.
     LocalDone {
+        lane: u32,
         client: u32,
         round: u32,
         comm_bytes: u64,
@@ -379,11 +395,13 @@ impl<'a> Rd<'a> {
 
 fn encode_payload(msg: &Msg, w: &mut Wr) {
     match msg {
-        Msg::Hello { name, protocol } => {
+        Msg::Hello { name, protocol, lanes } => {
             w.str(name);
             w.u32(*protocol);
+            w.u32(*lanes);
         }
-        Msg::Assign { client_ids, config } => {
+        Msg::Assign { lane, client_ids, config } => {
+            w.u32(*lane);
             w.vec_u32(client_ids);
             w.str(config);
         }
@@ -391,19 +409,22 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*round);
             w.vec_u32(participants);
         }
-        Msg::ModelSync { round, client, theta } => {
+        Msg::ModelSync { lane, round, client, theta } => {
+            w.u32(*lane);
             w.u32(*round);
             w.u32(*client);
             w.vec_f32(theta);
         }
-        Msg::ZoUpdate { client, round, seeds, scalars, gscales } => {
+        Msg::ZoUpdate { lane, client, round, seeds, scalars, gscales } => {
+            w.u32(*lane);
             w.u32(*client);
             w.u32(*round);
             w.vec_i32(seeds);
             w.vec_f32(scalars);
             w.vec_f32(gscales);
         }
-        Msg::Smashed { client, round, step, smashed, targets } => {
+        Msg::Smashed { lane, client, round, step, smashed, targets } => {
+            w.u32(*lane);
             w.u32(*client);
             w.u32(*round);
             w.u32(*step);
@@ -411,6 +432,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.vec_i32(targets);
         }
         Msg::SmashedSeq {
+            lane,
             client,
             round,
             step,
@@ -419,6 +441,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             smashed,
             targets,
         } => {
+            w.u32(*lane);
             w.u32(*client);
             w.u32(*round);
             w.u32(*step);
@@ -447,6 +470,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.str(reason);
         }
         Msg::LocalDone {
+            lane,
             client,
             round,
             comm_bytes,
@@ -454,6 +478,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             lane_time,
             lane_idle,
         } => {
+            w.u32(*lane);
             w.u32(*client);
             w.u32(*round);
             w.u64(*comm_bytes);
@@ -476,15 +501,25 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
 fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
     let mut r = Rd { b: payload, pos: 0 };
     let msg = match tag {
-        1 => Msg::Hello { name: r.str()?, protocol: r.u32()? },
-        2 => Msg::Assign { client_ids: r.vec_u32()?, config: r.str()? },
+        1 => Msg::Hello {
+            name: r.str()?,
+            protocol: r.u32()?,
+            lanes: r.u32()?,
+        },
+        2 => Msg::Assign {
+            lane: r.u32()?,
+            client_ids: r.vec_u32()?,
+            config: r.str()?,
+        },
         3 => Msg::RoundBarrier { round: r.u32()?, participants: r.vec_u32()? },
         4 => Msg::ModelSync {
+            lane: r.u32()?,
             round: r.u32()?,
             client: r.u32()?,
             theta: r.vec_f32()?,
         },
         5 => Msg::ZoUpdate {
+            lane: r.u32()?,
             client: r.u32()?,
             round: r.u32()?,
             seeds: r.vec_i32()?,
@@ -492,6 +527,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             gscales: r.vec_f32()?,
         },
         6 => Msg::Smashed {
+            lane: r.u32()?,
             client: r.u32()?,
             round: r.u32()?,
             step: r.u32()?,
@@ -522,6 +558,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             reason: r.str()?,
         },
         10 => Msg::LocalDone {
+            lane: r.u32()?,
             client: r.u32()?,
             round: r.u32()?,
             comm_bytes: r.u64()?,
@@ -537,6 +574,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
         },
         12 => Msg::Shutdown { reason: r.str()? },
         13 => Msg::SmashedSeq {
+            lane: r.u32()?,
             client: r.u32()?,
             round: r.u32()?,
             step: r.u32()?,
@@ -687,18 +725,21 @@ mod tests {
 
     fn samples() -> Vec<Msg> {
         vec![
-            Msg::Hello { name: "edge-0".into(), protocol: 1 },
+            Msg::Hello { name: "edge-0".into(), protocol: 1, lanes: 64 },
             Msg::Assign {
+                lane: 7,
                 client_ids: vec![0, 2, 4],
                 config: "{\"variant\": \"cnn_c1\"}".into(),
             },
             Msg::RoundBarrier { round: 3, participants: vec![1, 2] },
             Msg::ModelSync {
+                lane: BROADCAST,
                 round: 3,
                 client: BROADCAST,
                 theta: vec![1.5, -0.25, f32::MIN_POSITIVE],
             },
             Msg::ZoUpdate {
+                lane: 1,
                 client: 2,
                 round: 3,
                 seeds: vec![-7, 12345],
@@ -706,6 +747,7 @@ mod tests {
                 gscales: vec![0.125, -0.0625, 1.5, -2.0],
             },
             Msg::Smashed {
+                lane: 0,
                 client: 1,
                 round: 0,
                 step: 2,
@@ -713,6 +755,7 @@ mod tests {
                 targets: vec![3, 1, 4],
             },
             Msg::SmashedSeq {
+                lane: 3,
                 client: 1,
                 round: 0,
                 step: 2,
@@ -737,6 +780,7 @@ mod tests {
                 reason: "queue full".into(),
             },
             Msg::LocalDone {
+                lane: 2,
                 client: 5,
                 round: 7,
                 comm_bytes: 1 << 40,

@@ -19,7 +19,10 @@ use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
 use heron_sfl::coordinator::round::Driver;
 use heron_sfl::net::transport::{loopback_pair, Transport};
 use heron_sfl::net::wire::FRAME_OVERHEAD;
-use heron_sfl::net::{run_client, serve_transports, ClientReport, NetReport};
+use heron_sfl::net::{
+    run_client, run_client_virtual, serve_transports, ClientReport,
+    NetReport,
+};
 use heron_sfl::runtime::Session;
 
 mod common;
@@ -69,6 +72,48 @@ fn net_run(
             .map(|(i, c)| {
                 scope.spawn(move || {
                     run_client(session, Box::new(c), &format!("edge-{i}"))
+                })
+            })
+            .collect();
+        let report = server.join().expect("server panicked").expect("server");
+        let client_reports = clients
+            .into_iter()
+            .map(|h| h.join().expect("client panicked").expect("client"))
+            .collect();
+        (report, client_reports)
+    })
+}
+
+/// Like [`net_run`], but each connection multiplexes `lanes` virtual
+/// clients through its single transport (`connect --virtual lanes`).
+fn net_run_virtual(
+    session: &Session,
+    cfg: &RunConfig,
+    n_conns: usize,
+    lanes: usize,
+) -> (NetReport, Vec<ClientReport>) {
+    let mut server_ends: Vec<Box<dyn Transport>> = Vec::new();
+    let mut client_ends = Vec::new();
+    for _ in 0..n_conns {
+        let (s, c) = loopback_pair();
+        server_ends.push(Box::new(s));
+        client_ends.push(c);
+    }
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_transports(session, cfg.clone(), server_ends, "net")
+        });
+        let clients: Vec<_> = client_ends
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                scope.spawn(move || {
+                    run_client_virtual(
+                        session,
+                        Box::new(c),
+                        &format!("mux-{i}"),
+                        lanes,
+                    )
                 })
             })
             .collect();
@@ -224,15 +269,17 @@ fn expected_round_bytes(
 
     let barrier = f + 8 + 4 * p; // round + vec<u32> participants
     let summary = f + 28;
-    let model_down = f + 12 + 4 * nl; // round + client + vec<f32> θ
+    // v4: every routed frame carries the 4-byte lane id up front
+    let model_down = f + 16 + 4 * nl; // lane + round + client + vec<f32> θ
     let model_up = model_down;
-    // ids(12) + two length-prefixed vectors (smashed f32s, target i32s)
-    let smashed = f + 20 + book.smashed_bytes + 4 * targets;
+    // ids(16, lane included) + two length-prefixed vectors (smashed
+    // f32s, target i32s)
+    let smashed = f + 24 + book.smashed_bytes + 4 * targets;
     let ack = f + 17; // ids + bool + empty reason string
-    // ids + seeds + scalars + gscales
+    // ids (lane + client + round) + seeds + scalars + gscales
     let zo_update =
-        f + 8 + (4 + 4 * h) + (4 + 4 * h) + (4 + 4 * gs_elems);
-    let local_done = f + 40;
+        f + 12 + (4 + 4 * h) + (4 + 4 * h) + (4 + 4 * gs_elems);
+    let local_done = f + 44;
     let cut_grad = f + 20 + book.cutgrad_bytes; // ids + loss + vec<f32> g
     let align_grad = f + 12 + book.cutgrad_bytes; // ids + vec<f32> g
 
@@ -520,6 +567,134 @@ fn queue_drops_surface_as_typed_nacks() {
         assert_eq!(enqueued + dropped, total_uploads);
         // the run still completes every round
         assert_eq!(net.record.rounds.len(), c.rounds);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// client multiplexing (v4 lanes): one socket, many virtual clients
+// ---------------------------------------------------------------------------
+
+/// The v4 pin: spreading the cohort over protocol *lanes* instead of
+/// sockets changes nothing observable. For every algorithm, a 2-socket ×
+/// 2-lane multiplexed run is bit-identical to the per-connection run
+/// (4 sockets × 1 lane) AND to the in-process driver — trajectory,
+/// final parameters, and analytic accounting included.
+#[test]
+fn multiplexed_lanes_bit_identical_for_every_algorithm() {
+    with_session(|s| {
+        for alg in Algorithm::all() {
+            let n_clients = if alg.is_decoupled() { 4 } else { 3 };
+            let c = cfg(alg, n_clients);
+            let name = alg.name();
+            let (rec, theta_l, theta_s) = in_process(s, &c);
+            let (mux, mux_clients) = net_run_virtual(s, &c, 2, 2);
+            let (flat, _) = net_run(s, &c, 4);
+            assert_eq!(mux.lanes, 4, "{name}: 2 conns x 2 lanes");
+            assert_eq!(mux.connections, 2);
+            for rep in &mux_clients {
+                assert_eq!(rep.lanes, 2);
+                assert_eq!(
+                    rep.lane_clients.iter().sum::<usize>(),
+                    rep.assigned.len(),
+                    "{name}: every assigned client sits on some lane"
+                );
+            }
+            for (a, b) in rec.rounds.iter().zip(&mux.record.rounds) {
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{name}: train loss vs in-process, round {}",
+                    a.round
+                );
+                assert_eq!(
+                    a.eval_metric.to_bits(),
+                    b.eval_metric.to_bits(),
+                    "{name}: eval vs in-process, round {}",
+                    a.round
+                );
+                assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            }
+            assert_eq!(theta_l, mux.final_theta_l, "{name}: θ_l");
+            assert_eq!(theta_s, mux.final_theta_s, "{name}: θ_s");
+            // and identical to the same cohort spread over 4 sockets
+            assert_eq!(flat.lanes, 4);
+            assert_eq!(
+                flat.final_theta_l, mux.final_theta_l,
+                "{name}: θ_l, lanes vs sockets"
+            );
+            assert_eq!(flat.final_theta_s, mux.final_theta_s);
+            for (a, b) in
+                flat.record.rounds.iter().zip(&mux.record.rounds)
+            {
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+                assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+                assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            }
+        }
+    });
+}
+
+/// Failure injection on a multiplexed socket: two lanes race a full
+/// server queue. Every drop surfaces as a typed NACK on the lane that
+/// uploaded it, the per-lane counters sum to the server's drop count,
+/// and the run still completes every round.
+#[test]
+fn two_lanes_one_socket_race_full_queue() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 4);
+        c.upload_every = 1; // 4 uploads per client per round
+        c.queue_capacity = 2; // 16 uploads/round contend for 2 slots
+        let (net, clients) = net_run_virtual(s, &c, 1, 2);
+        assert_eq!(net.connections, 1);
+        assert_eq!(net.lanes, 2);
+        let dropped = net.record.summary["queue_dropped"] as u64;
+        assert!(dropped > 0, "capacity 2 must drop uploads");
+        assert_eq!(net.nacks_sent, dropped, "every drop sends one NACK");
+        let rep = &clients[0];
+        assert_eq!(rep.lane_nacks.len(), 2);
+        assert_eq!(
+            rep.lane_nacks.iter().sum::<u64>(),
+            dropped,
+            "NACKs land on the lane that uploaded"
+        );
+        // both lanes own clients and both worked every round
+        assert_eq!(rep.lane_clients, vec![2, 2]);
+        assert!(rep.lane_phases.iter().all(|&p| p == (c.rounds * 2) as u64));
+        assert_eq!(net.record.rounds.len(), c.rounds);
+    });
+}
+
+/// The `(conn, lane)` seq-validation regression pin: in `--drain stream`
+/// runs every upload travels as `SmashedSeq` with a per-lane sequence
+/// number starting at 1 — two lanes interleaving on ONE socket therefore
+/// both send seq 1, 2, ... and a dispatcher that keyed the counter on
+/// the connection alone would reject the second lane's first upload as a
+/// replay. The run must complete with zero NACKs and the client-side
+/// trajectory must still match the in-process barrier reference bitwise.
+#[test]
+fn interleaved_lane_seqs_validate_per_lane_not_per_conn() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 4);
+        c.drain = heron_sfl::coordinator::drain::DrainMode::Stream;
+        let (rec, theta_l, _) = in_process(
+            s,
+            &RunConfig {
+                drain: heron_sfl::coordinator::drain::DrainMode::Barrier,
+                ..c.clone()
+            },
+        );
+        let (net, clients) = net_run_virtual(s, &c, 1, 2);
+        assert_eq!(net.lanes, 2);
+        assert_eq!(net.nacks_sent, 0);
+        assert_eq!(clients[0].nacks, 0);
+        assert_eq!(net.record.rounds.len(), c.rounds);
+        // client side is drain-independent (see drain_stream.rs): the
+        // seq-accepted stream run reproduces the barrier θ_l bit for bit
+        assert_eq!(theta_l, net.final_theta_l, "θ_l");
+        for (a, b) in rec.rounds.iter().zip(&net.record.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
     });
 }
 

@@ -39,18 +39,28 @@ fn arb_u32s(g: &mut Gen, max: usize) -> Vec<u32> {
 /// One random message of a random type.
 fn arb_msg(g: &mut Gen) -> Msg {
     match g.usize_in(0..13) {
-        0 => Msg::Hello { name: arb_string(g), protocol: g.u64() as u32 },
-        1 => Msg::Assign { client_ids: arb_u32s(g, 16), config: arb_string(g) },
+        0 => Msg::Hello {
+            name: arb_string(g),
+            protocol: g.u64() as u32,
+            lanes: g.u64() as u32,
+        },
+        1 => Msg::Assign {
+            lane: g.u64() as u32,
+            client_ids: arb_u32s(g, 16),
+            config: arb_string(g),
+        },
         2 => Msg::RoundBarrier {
             round: g.u64() as u32,
             participants: arb_u32s(g, 16),
         },
         3 => Msg::ModelSync {
+            lane: g.u64() as u32,
             round: g.u64() as u32,
             client: g.u64() as u32,
             theta: arb_f32s(g, 256),
         },
         4 => Msg::ZoUpdate {
+            lane: g.u64() as u32,
             client: g.u64() as u32,
             round: g.u64() as u32,
             seeds: arb_i32s(g, 32),
@@ -58,6 +68,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             gscales: arb_f32s(g, 64),
         },
         5 => Msg::Smashed {
+            lane: g.u64() as u32,
             client: g.u64() as u32,
             round: g.u64() as u32,
             step: g.u64() as u32,
@@ -84,6 +95,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             reason: arb_string(g),
         },
         9 => Msg::LocalDone {
+            lane: g.u64() as u32,
             client: g.u64() as u32,
             round: g.u64() as u32,
             comm_bytes: g.u64(),
@@ -98,6 +110,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             wire_bytes: g.u64(),
         },
         11 => Msg::SmashedSeq {
+            lane: g.u64() as u32,
             client: g.u64() as u32,
             round: g.u64() as u32,
             step: g.u64() as u32,
@@ -136,6 +149,7 @@ fn nonfinite_payloads_roundtrip_bitwise() {
     // the codec must preserve f32/f64 bit patterns exactly.
     for bits in [0x7FC0_0001u32, 0x7F80_0000, 0xFF80_0000, 0x0000_0001] {
         let msg = Msg::ModelSync {
+            lane: 0,
             round: 0,
             client: 1,
             theta: vec![f32::from_bits(bits), 1.0],
@@ -209,7 +223,11 @@ fn unknown_version_and_tag_are_typed_errors() {
 #[test]
 fn hostile_length_fields_do_not_allocate_or_panic() {
     // outer length: larger than the cap
-    let frame = encode_frame(&Msg::Hello { name: "h".into(), protocol: 1 });
+    let frame = encode_frame(&Msg::Hello {
+        name: "h".into(),
+        protocol: 1,
+        lanes: 1,
+    });
     let mut f = frame.clone();
     f[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
     assert_eq!(
@@ -221,6 +239,7 @@ fn hostile_length_fields_do_not_allocate_or_panic() {
     // not by an OOM or a checksum-only failure. Build the frame by hand
     // with a correct CRC so the length check is what trips.
     let mut payload = Vec::new();
+    payload.extend_from_slice(&0u32.to_le_bytes()); // lane
     payload.extend_from_slice(&3u32.to_le_bytes()); // round
     payload.extend_from_slice(&7u32.to_le_bytes()); // client
     payload.extend_from_slice(&(1u32 << 28).to_le_bytes()); // theta len (!)

@@ -14,7 +14,14 @@ counters must STILL match bitwise (the client phase never reads
 theta_s); eval_metric is compared within a tolerance instead, and the
 event-sim must report a strictly lower stream makespan than barrier.
 
+With --virtual N the networked run multiplexed N virtual clients
+(protocol lanes) through its socket(s): the net record must report
+exactly N lanes (summary key net_lanes) plus a net_conns count, and the
+bit-identity checks above must hold regardless — lanes are a transport
+detail, not a semantic one.
+
 Usage: diff_net_metrics.py <inproc.json> <net.json> [--stream]
+       [--virtual N]
 Exits non-zero on any mismatch.
 """
 
@@ -33,8 +40,17 @@ def bits(x):
 
 
 def main():
-    args = [a for a in sys.argv[1:] if a != "--stream"]
-    stream = "--stream" in sys.argv[1:]
+    argv = sys.argv[1:]
+    virtual = None
+    if "--virtual" in argv:
+        i = argv.index("--virtual")
+        try:
+            virtual = int(argv[i + 1])
+        except (IndexError, ValueError):
+            sys.exit("--virtual needs an integer lane count")
+        del argv[i:i + 2]
+    args = [a for a in argv if a != "--stream"]
+    stream = "--stream" in argv
     if len(args) != 2:
         sys.exit(__doc__)
     with open(args[0]) as f:
@@ -66,6 +82,22 @@ def main():
         x, y = a["summary"].get(key), b["summary"].get(key)
         if x is None or y is None or bits(x) != bits(y):
             failures.append(f"summary {key}: {x!r} vs {y!r}")
+
+    if virtual is not None:
+        # multiplexed run: the dispatcher records how many protocol lanes
+        # the cohort rode in on — every lane of the requested fan-out must
+        # have registered, over however many sockets were used
+        lanes = b["summary"].get("net_lanes")
+        conns = b["summary"].get("net_conns")
+        if lanes != virtual:
+            failures.append(
+                f"summary net_lanes: {lanes!r} vs requested {virtual}")
+        if not conns or conns <= 0 or conns > virtual:
+            failures.append(
+                f"summary net_conns: {conns!r} (want 1..{virtual})")
+        else:
+            print(f"multiplexed: {lanes} virtual clients over "
+                  f"{conns:.0f} socket(s)")
 
     wire_sent = b["summary"].get("wire_bytes_sent", 0)
     wire_recv = b["summary"].get("wire_bytes_recv", 0)

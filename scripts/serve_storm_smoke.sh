@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# serve-storm smoke choreography: one `heron-sfl serve` + one `connect
+# --virtual N` client multiplexing N virtual clients (protocol lanes)
+# through a single localhost socket. Asserts the client reported every
+# lane complete ("N/N lanes complete"); the bit-identity diff against an
+# in-process run is the caller's job (diff_net_metrics.py --virtual N).
+#
+# Usage: serve_storm_smoke.sh <port> <out_dir> <virtual_lanes> [extra serve/run flags...]
+set -euo pipefail
+
+PORT=$1
+OUT=$2
+LANES=$3
+shift 3
+
+BIN=${BIN:-target/release/heron-sfl}
+CONFIG=${CONFIG:-configs/net_smoke.json}
+
+mkdir -p "$OUT"
+
+"$BIN" serve --config "$CONFIG" "$@" \
+  --listen "127.0.0.1:$PORT" --conns 1 --out "$OUT" &
+SERVER=$!
+
+# no port probe — the server treats any accepted socket as a client
+# connection, so the client itself retries instead (same choreography as
+# net_smoke.sh)
+retry_connect() {
+  for _ in $(seq 1 60); do
+    if "$BIN" connect --addr "127.0.0.1:$PORT" --name mux-edge \
+        --virtual "$LANES" | tee "$OUT/connect.log"; then
+      return 0
+    fi
+    sleep 1
+  done
+  return 1
+}
+
+retry_connect
+wait "$SERVER"
+
+# every requested lane must have either run a local phase or owned no
+# clients — a stuck lane fails the job here
+grep -q "^${LANES}/${LANES} lanes complete$" "$OUT/connect.log"
+echo "serve-storm smoke: ${LANES}/${LANES} lanes complete"
