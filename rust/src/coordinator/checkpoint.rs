@@ -1,0 +1,613 @@
+//! Checksummed checkpoint/restore (substrate S27): the server's full
+//! round-trajectory state, serialized every `--checkpoint_every` rounds
+//! to a versioned on-disk format in the `net::wire` idiom — magic,
+//! version byte, length-prefixed payload, trailing CRC-32 — with no
+//! serde (not in the offline vendor set).
+//!
+//! ## What a checkpoint holds
+//!
+//! Everything `Driver` needs to continue the run as if it had never
+//! stopped, **bit-identically** for the stateless-optimizer variants:
+//!
+//! * the exact-string config JSON (`RunConfig::to_json`) — restore
+//!   refuses a checkpoint whose config differs from the one the server
+//!   was launched with, byte for byte, the same equality contract the
+//!   networked `Assign` handshake uses;
+//! * the driver state: round index, the participant-sampling RNG's raw
+//!   256-bit state, θ_l / θ_s / the SFLV1 replica base, the server
+//!   optimizer state, the cumulative analytic counters, and every
+//!   finished round's [`RoundTiming`] (the end-of-run summary sums over
+//!   all of them);
+//! * the rounds recorded so far (`RoundRecord` curve points) so the
+//!   restored run's output file carries the full curve;
+//! * per-client completed-phase counts, which the restored server hands
+//!   to freshly connecting clients via `Assign.phases` so they
+//!   fast-forward their data streams to the exact batch an
+//!   uninterrupted client would read next.
+//!
+//! Client-side optimizer state (Adam `m`/`v`) is **not** captured — the
+//! bit-identical-restore contract covers the stateless-optimizer
+//! variants (`opt_state == 0`, which includes every HERON
+//! configuration; the networked path already requires it).
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! | offset | size | field                                    |
+//! |-------:|-----:|------------------------------------------|
+//! | 0      | 2    | magic `b"HC"`                             |
+//! | 2      | 1    | format version ([`CKPT_VERSION`])         |
+//! | 3      | 1    | reserved (0)                              |
+//! | 4      | 8    | payload length `n` (u64)                  |
+//! | 12     | n    | payload (field layout below)              |
+//! | 12+n   | 4    | CRC-32 (poly 0xEDB88320) of bytes 0..12+n |
+//!
+//! Writes are atomic: the frame goes to `<path>.tmp` and is renamed
+//! into place, so a crash mid-write (the chaos harness kill-9s the
+//! server on purpose) can never leave a truncated file at the
+//! checkpoint path — the previous checkpoint survives intact, and the
+//! CRC catches any corruption that slips through anyway.
+
+use crate::coordinator::eventsim::{RoundTiming, WireRoundStats};
+use crate::coordinator::round::OptState;
+use crate::coordinator::server_queue::QueueStats;
+use crate::metrics::RoundRecord;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// First two bytes of every checkpoint file.
+pub const CKPT_MAGIC: [u8; 2] = *b"HC";
+/// Format version; bumped on any layout change. A restore refuses a
+/// version it does not speak — silently misreading state would be far
+/// worse than failing loudly.
+pub const CKPT_VERSION: u8 = 1;
+/// Header bytes before the payload: magic + version + reserved + u64 len.
+const CKPT_HEADER: usize = 12;
+/// Upper bound on a payload (the decoder rejects larger length fields
+/// before allocating — a corrupt length must not OOM the restore path).
+pub const MAX_CKPT_PAYLOAD: u64 = 1 << 32;
+
+/// The `Driver`'s complete resumable state (see
+/// `Driver::export_state` / `Driver::import_state`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriverState {
+    /// next round index to run
+    pub round_idx: u64,
+    /// raw xoshiro256++ state of the participant-sampling RNG
+    pub rng: [u64; 4],
+    pub theta_l: Vec<f32>,
+    pub theta_s: Vec<f32>,
+    /// SFLV1 between-round replica base (empty for other algorithms)
+    pub replica_base: Vec<f32>,
+    pub opt_server: OptState,
+    pub comm_bytes: u64,
+    pub flops_client: u64,
+    /// every finished round's event-sim timing (the run summary sums
+    /// over all of them, so a restored run's summary is bit-identical)
+    pub timings: Vec<RoundTiming>,
+}
+
+/// One on-disk checkpoint: config identity + driver state + the curve
+/// recorded so far + per-client completed-phase counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// exact-string `RunConfig::to_json` of the run this state belongs to
+    pub cfg_json: String,
+    pub state: DriverState,
+    /// curve points of the rounds already finished
+    pub rounds: Vec<RoundRecord>,
+    /// client id → completed local phases (only nonzero entries are
+    /// stored; feeds `Assign.phases` after a restore)
+    pub phases: BTreeMap<usize, u64>,
+}
+
+// ---------------------------------------------------------------------------
+// payload writer / reader (the wire idiom, with u64 lengths for blobs)
+// ---------------------------------------------------------------------------
+
+struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            bail!("checkpoint payload truncated");
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// Validated element count: the declared count must fit in the
+    /// remaining bytes *before* anything allocates.
+    fn len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let remaining = (self.b.len() - self.pos) as u64;
+        match n.checked_mul(elem_size as u64) {
+            Some(bytes) if bytes <= remaining => Ok(n as usize),
+            _ => bail!("checkpoint vector length exceeds payload"),
+        }
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .context("checkpoint string is not utf-8")
+    }
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+    fn finish(self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("checkpoint has trailing payload bytes");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// field encoders
+// ---------------------------------------------------------------------------
+
+fn put_opt_state(w: &mut Wr, o: &OptState) {
+    match o {
+        OptState::None => w.u8(0),
+        OptState::Adam { m, v, t } => {
+            w.u8(1);
+            w.vec_f32(m);
+            w.vec_f32(v);
+            w.f64(*t as f64);
+        }
+    }
+}
+
+fn get_opt_state(r: &mut Rd) -> Result<OptState> {
+    match r.u8()? {
+        0 => Ok(OptState::None),
+        1 => Ok(OptState::Adam {
+            m: r.vec_f32()?,
+            v: r.vec_f32()?,
+            t: r.f64()? as f32,
+        }),
+        t => bail!("unknown optimizer-state tag {t}"),
+    }
+}
+
+fn put_timing(w: &mut Wr, t: &RoundTiming) {
+    w.f64(t.client_phase);
+    w.f64(t.server_phase);
+    w.f64(t.sync_phase);
+    w.f64(t.client_idle);
+    w.u64(t.workers as u64);
+    w.f64(t.host_makespan);
+    w.u64(t.queue.enqueued);
+    w.u64(t.queue.processed);
+    w.u64(t.queue.dropped);
+    w.u64(t.queue.max_depth as u64);
+    w.u64(t.wire.bytes_sent);
+    w.u64(t.wire.bytes_recv);
+    w.u64(t.wire.frames_sent);
+    w.u64(t.wire.frames_recv);
+    w.f64(t.server_makespan_barrier);
+    w.f64(t.server_makespan_stream);
+    w.f64(t.queue_wait_barrier);
+    w.f64(t.queue_wait_stream);
+    w.u64(t.cut_clients.len() as u64);
+    for &c in &t.cut_clients {
+        w.u64(c as u64);
+    }
+}
+
+fn get_timing(r: &mut Rd) -> Result<RoundTiming> {
+    let mut t = RoundTiming {
+        client_phase: r.f64()?,
+        server_phase: r.f64()?,
+        sync_phase: r.f64()?,
+        client_idle: r.f64()?,
+        workers: r.u64()? as usize,
+        host_makespan: r.f64()?,
+        queue: QueueStats::default(),
+        wire: WireRoundStats::default(),
+        server_makespan_barrier: 0.0,
+        server_makespan_stream: 0.0,
+        queue_wait_barrier: 0.0,
+        queue_wait_stream: 0.0,
+        cut_clients: Vec::new(),
+    };
+    t.queue = QueueStats {
+        enqueued: r.u64()?,
+        processed: r.u64()?,
+        dropped: r.u64()?,
+        max_depth: r.u64()? as usize,
+    };
+    t.wire = WireRoundStats {
+        bytes_sent: r.u64()?,
+        bytes_recv: r.u64()?,
+        frames_sent: r.u64()?,
+        frames_recv: r.u64()?,
+    };
+    t.server_makespan_barrier = r.f64()?;
+    t.server_makespan_stream = r.f64()?;
+    t.queue_wait_barrier = r.f64()?;
+    t.queue_wait_stream = r.f64()?;
+    let n = r.len(8)?;
+    t.cut_clients = (0..n)
+        .map(|_| r.u64().map(|c| c as usize))
+        .collect::<Result<_>>()?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize a checkpoint to its complete on-disk byte image (header +
+/// payload + CRC).
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut w = Wr { buf: Vec::with_capacity(256) };
+    w.buf.extend_from_slice(&CKPT_MAGIC);
+    w.u8(CKPT_VERSION);
+    w.u8(0); // reserved
+    w.u64(0); // length backfilled below
+    w.str(&ck.cfg_json);
+    let s = &ck.state;
+    w.u64(s.round_idx);
+    for &x in &s.rng {
+        w.u64(x);
+    }
+    w.vec_f32(&s.theta_l);
+    w.vec_f32(&s.theta_s);
+    w.vec_f32(&s.replica_base);
+    put_opt_state(&mut w, &s.opt_server);
+    w.u64(s.comm_bytes);
+    w.u64(s.flops_client);
+    w.u64(s.timings.len() as u64);
+    for t in &s.timings {
+        put_timing(&mut w, t);
+    }
+    w.u64(ck.rounds.len() as u64);
+    for rr in &ck.rounds {
+        w.u64(rr.round as u64);
+        w.f64(rr.train_loss);
+        w.f64(rr.eval_metric);
+        w.u64(rr.comm_bytes_cum);
+        w.f64(rr.wall_seconds);
+    }
+    w.u64(ck.phases.len() as u64);
+    for (&ci, &n) in &ck.phases {
+        w.u64(ci as u64);
+        w.u64(n);
+    }
+    let plen = (w.buf.len() - CKPT_HEADER) as u64;
+    w.buf[4..12].copy_from_slice(&plen.to_le_bytes());
+    let crc = crate::net::wire::crc32(&w.buf);
+    w.buf.extend_from_slice(&crc.to_le_bytes());
+    w.buf
+}
+
+/// Decode a checkpoint from its on-disk byte image, validating magic,
+/// version, length, and CRC before touching any payload field.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    if bytes.len() < CKPT_HEADER + 4 {
+        bail!("checkpoint file truncated ({} bytes)", bytes.len());
+    }
+    if bytes[0..2] != CKPT_MAGIC {
+        bail!("not a checkpoint file (bad magic {:02x?})", &bytes[0..2]);
+    }
+    if bytes[2] != CKPT_VERSION {
+        bail!(
+            "checkpoint format version {} (this build speaks {})",
+            bytes[2],
+            CKPT_VERSION
+        );
+    }
+    let plen = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    if plen > MAX_CKPT_PAYLOAD {
+        bail!("checkpoint payload length {plen} exceeds cap");
+    }
+    let total = CKPT_HEADER + plen as usize + 4;
+    if bytes.len() != total {
+        bail!(
+            "checkpoint length mismatch: header says {total} bytes, file has {}",
+            bytes.len()
+        );
+    }
+    let body = &bytes[..CKPT_HEADER + plen as usize];
+    let want = u32::from_le_bytes(bytes[total - 4..].try_into().unwrap());
+    let got = crate::net::wire::crc32(body);
+    if want != got {
+        bail!("checkpoint checksum mismatch: file says {want:08x}, computed {got:08x}");
+    }
+    let mut r = Rd { b: &body[CKPT_HEADER..], pos: 0 };
+    let cfg_json = r.str()?;
+    let round_idx = r.u64()?;
+    let mut rng = [0u64; 4];
+    for slot in &mut rng {
+        *slot = r.u64()?;
+    }
+    let theta_l = r.vec_f32()?;
+    let theta_s = r.vec_f32()?;
+    let replica_base = r.vec_f32()?;
+    let opt_server = get_opt_state(&mut r)?;
+    let comm_bytes = r.u64()?;
+    let flops_client = r.u64()?;
+    // element-size lower bounds keep a corrupt count from allocating
+    // beyond the payload it claims to describe
+    let n_t = r.len(8)?;
+    let mut timings = Vec::with_capacity(n_t);
+    for _ in 0..n_t {
+        timings.push(get_timing(&mut r)?);
+    }
+    let n_r = r.len(40)?;
+    let mut rounds = Vec::with_capacity(n_r);
+    for _ in 0..n_r {
+        rounds.push(RoundRecord {
+            round: r.u64()? as usize,
+            train_loss: r.f64()?,
+            eval_metric: r.f64()?,
+            comm_bytes_cum: r.u64()?,
+            wall_seconds: r.f64()?,
+        });
+    }
+    let n_p = r.len(16)?;
+    let mut phases = BTreeMap::new();
+    for _ in 0..n_p {
+        let ci = r.u64()? as usize;
+        let n = r.u64()?;
+        phases.insert(ci, n);
+    }
+    r.finish()?;
+    Ok(Checkpoint {
+        cfg_json,
+        state: DriverState {
+            round_idx,
+            rng,
+            theta_l,
+            theta_s,
+            replica_base,
+            opt_server,
+            comm_bytes,
+            flops_client,
+            timings,
+        },
+        rounds,
+        phases,
+    })
+}
+
+/// Write a checkpoint to `path` **atomically**: the frame goes to
+/// `<path>.tmp` first and is renamed into place, so a crash at any
+/// point leaves either the previous checkpoint or the new one — never
+/// a partial file.
+pub fn save(ck: &Checkpoint, path: &Path) -> Result<()> {
+    let bytes = encode(ck);
+    let tmp = path.with_extension("tmp");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| {
+                format!("creating checkpoint dir {}", dir.display())
+            })?;
+        }
+    }
+    {
+        let mut f = std::fs::File::create(&tmp).with_context(|| {
+            format!("creating checkpoint temp file {}", tmp.display())
+        })?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming checkpoint into place at {}", path.display())
+    })?;
+    Ok(())
+}
+
+/// Read and validate a checkpoint from `path`.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("decoding checkpoint {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut timing = RoundTiming {
+            client_phase: 1.5,
+            server_phase: 0.25,
+            sync_phase: 0.125,
+            client_idle: 0.0625,
+            workers: 4,
+            host_makespan: 2.0,
+            ..RoundTiming::default()
+        };
+        timing.queue = QueueStats {
+            enqueued: 12,
+            processed: 12,
+            dropped: 0,
+            max_depth: 7,
+        };
+        timing.wire = WireRoundStats {
+            bytes_sent: 1 << 20,
+            bytes_recv: 1 << 18,
+            frames_sent: 99,
+            frames_recv: 42,
+        };
+        timing.server_makespan_barrier = 3.5;
+        timing.server_makespan_stream = 2.75;
+        timing.queue_wait_barrier = 10.0;
+        timing.queue_wait_stream = 0.5;
+        timing.cut_clients = vec![3, 11];
+        Checkpoint {
+            cfg_json: "{\"variant\": \"cnn_c1\"}".into(),
+            state: DriverState {
+                round_idx: 2,
+                rng: [1, u64::MAX, 0, 0xDEAD_BEEF],
+                theta_l: vec![1.0, -0.5, f32::MIN_POSITIVE],
+                theta_s: vec![0.25; 5],
+                replica_base: Vec::new(),
+                opt_server: OptState::None,
+                comm_bytes: 1 << 33,
+                flops_client: 123_456_789,
+                timings: vec![timing],
+            },
+            rounds: vec![
+                RoundRecord {
+                    round: 0,
+                    train_loss: 2.25,
+                    eval_metric: 0.5,
+                    comm_bytes_cum: 4096,
+                    wall_seconds: 0.75,
+                },
+                RoundRecord {
+                    round: 1,
+                    train_loss: 2.0,
+                    eval_metric: f64::NAN, // off-cadence round
+                    comm_bytes_cum: 8192,
+                    wall_seconds: 1.5,
+                },
+            ],
+            phases: [(0usize, 2u64), (3, 1)].into_iter().collect(),
+        }
+    }
+
+    /// NaN-tolerant equality (eval_metric is NaN off the eval cadence;
+    /// f64s travel as bit patterns so NaN payloads roundtrip exactly).
+    fn assert_roundtrip(ck: &Checkpoint) {
+        let back = decode(&encode(ck)).unwrap();
+        assert_eq!(back.cfg_json, ck.cfg_json);
+        assert_eq!(back.state.round_idx, ck.state.round_idx);
+        assert_eq!(back.state.rng, ck.state.rng);
+        assert_eq!(back.state.theta_l, ck.state.theta_l);
+        assert_eq!(back.state.theta_s, ck.state.theta_s);
+        assert_eq!(back.state.replica_base, ck.state.replica_base);
+        assert_eq!(back.state.opt_server, ck.state.opt_server);
+        assert_eq!(back.state.comm_bytes, ck.state.comm_bytes);
+        assert_eq!(back.state.flops_client, ck.state.flops_client);
+        assert_eq!(back.state.timings.len(), ck.state.timings.len());
+        for (a, b) in back.state.timings.iter().zip(&ck.state.timings) {
+            assert_eq!(a.client_phase.to_bits(), b.client_phase.to_bits());
+            assert_eq!(a.queue, b.queue);
+            assert_eq!(a.wire, b.wire);
+            assert_eq!(a.cut_clients, b.cut_clients);
+            assert_eq!(
+                a.queue_wait_stream.to_bits(),
+                b.queue_wait_stream.to_bits()
+            );
+        }
+        assert_eq!(back.rounds.len(), ck.rounds.len());
+        for (a, b) in back.rounds.iter().zip(&ck.rounds) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits());
+        }
+        assert_eq!(back.phases, ck.phases);
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly_including_nan_metrics() {
+        assert_roundtrip(&sample());
+    }
+
+    #[test]
+    fn adam_opt_state_roundtrips() {
+        let mut ck = sample();
+        ck.state.opt_server = OptState::Adam {
+            m: vec![0.5, -0.25],
+            v: vec![0.125, 0.0625],
+            t: 17.0,
+        };
+        assert_roundtrip(&ck);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = encode(&sample());
+        // flip a payload bit → checksum
+        let mut f = bytes.clone();
+        f[CKPT_HEADER + 3] ^= 0x10;
+        let e = decode(&f).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+        // truncation → length mismatch (never a partial parse)
+        let e = decode(&bytes[..bytes.len() - 5]).unwrap_err().to_string();
+        assert!(e.contains("length mismatch"), "{e}");
+        // bad magic
+        let mut f = bytes.clone();
+        f[0] = b'X';
+        let e = decode(&f).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+        // future version
+        let mut f = bytes;
+        f[2] = 99;
+        let e = decode(&f).unwrap_err().to_string();
+        assert!(e.contains("version 99"), "{e}");
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_validates() {
+        let dir = std::env::temp_dir().join(format!(
+            "heron_ckpt_test_{}_{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").len()
+        ));
+        let path = dir.join("state.ckpt");
+        let ck = sample();
+        save(&ck, &path).unwrap();
+        // the temp file must be gone — only the renamed target remains
+        assert!(!path.with_extension("tmp").exists());
+        let back = load(&path).unwrap();
+        assert_eq!(back.cfg_json, ck.cfg_json);
+        assert_eq!(back.state.rng, ck.state.rng);
+        // overwrite with a later checkpoint; load sees the new one
+        let mut later = ck.clone();
+        later.state.round_idx = 5;
+        save(&later, &path).unwrap();
+        assert_eq!(load(&path).unwrap().state.round_idx, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

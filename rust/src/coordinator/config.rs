@@ -84,6 +84,16 @@ pub struct RunConfig {
     /// bit-identical — the default) or `stream` (arrival-order
     /// consumption mid-round, decoupled algorithms only)
     pub drain: DrainMode,
+    /// Straggler cutoff: per-round deadline in milliseconds after which
+    /// the round finalizes with the contributions it has (0 = wait
+    /// forever, the pre-deadline behavior — bit-identical to runs built
+    /// before the flag existed). Wall-clock on the wire path,
+    /// virtual-time against the event-sim lane clocks in-process. A
+    /// cut-off client is excluded whole: its queued uploads are
+    /// discarded at the barrier and its θ never enters FedAvg, so the
+    /// cutoff is client-granular and deterministic (see
+    /// `coordinator::drain`).
+    pub round_deadline_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -111,6 +121,7 @@ impl Default for RunConfig {
             queue_capacity: 0,
             zo_wire: ZoWireMode::Theta,
             drain: DrainMode::Barrier,
+            round_deadline_ms: 0,
         }
     }
 }
@@ -170,6 +181,20 @@ impl RunConfig {
             .clamp(1, self.n_clients)
     }
 
+    /// The straggler deadline as *virtual* seconds (the in-process
+    /// interpretation: event-sim lane clocks). `None` when unset.
+    pub fn virtual_deadline(&self) -> Option<f64> {
+        (self.round_deadline_ms > 0)
+            .then(|| self.round_deadline_ms as f64 / 1e3)
+    }
+
+    /// The straggler deadline as a *wall-clock* duration (the wire-path
+    /// interpretation). `None` when unset.
+    pub fn wall_deadline(&self) -> Option<std::time::Duration> {
+        (self.round_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.round_deadline_ms))
+    }
+
     /// Apply `--key value` overrides (dotted keys accepted for
     /// discoverability; the last path segment decides).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
@@ -225,6 +250,9 @@ impl RunConfig {
             "drain" => {
                 self.drain = DrainMode::parse(v)
                     .with_context(|| format!("unknown drain mode {v}"))?
+            }
+            "round_deadline_ms" | "deadline_ms" => {
+                self.round_deadline_ms = v.parse()?
             }
             // non-config CLI flags pass through silently
             _ => {}
@@ -285,6 +313,10 @@ impl RunConfig {
             ("queue_capacity", Value::str(&self.queue_capacity.to_string())),
             ("zo_wire", Value::str(self.zo_wire.name())),
             ("drain", Value::str(self.drain.name())),
+            (
+                "round_deadline_ms",
+                Value::str(&self.round_deadline_ms.to_string()),
+            ),
         ];
         match self.scheme {
             Scheme::Iid => pairs.push(("iid", Value::str("true"))),
@@ -412,6 +444,7 @@ mod tests {
             eval_holdout: (1 << 21) + 17,
             queue_capacity: 5,
             zo_wire: ZoWireMode::Theta,
+            round_deadline_ms: 1500,
             ..Default::default()
         };
         for _ in 0..2 {
@@ -442,6 +475,7 @@ mod tests {
             assert_eq!(back.queue_capacity, cfg.queue_capacity);
             assert_eq!(back.zo_wire, cfg.zo_wire);
             assert_eq!(back.drain, cfg.drain);
+            assert_eq!(back.round_deadline_ms, cfg.round_deadline_ms);
             // second lap exercises the IID branch + the seeds wire mode
             // + the stream drain policy
             cfg.scheme = Scheme::Iid;
@@ -512,6 +546,25 @@ mod tests {
         assert!(cfg.validate().is_err(), "seeds still requires HERON");
         cfg.zo_wire = ZoWireMode::Theta;
         cfg.validate().unwrap(); // cse + stream + theta is fine
+    }
+
+    #[test]
+    fn round_deadline_parses_and_converts() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.round_deadline_ms, 0, "default is unset");
+        assert_eq!(cfg.virtual_deadline(), None);
+        assert_eq!(cfg.wall_deadline(), None);
+        let args = Args::parse_from(
+            ["--round_deadline_ms", "2500"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.round_deadline_ms, 2500);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.virtual_deadline(), Some(2.5));
+        assert_eq!(
+            cfg.wall_deadline(),
+            Some(std::time::Duration::from_millis(2500))
+        );
     }
 
     #[test]

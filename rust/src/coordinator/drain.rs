@@ -39,6 +39,20 @@
 //! `rust/tests/drain_stream.rs`). The locked baselines (SFLV1/V2) have
 //! no decoupled queue to stream from — `stream` is rejected for them
 //! with a typed [`DrainConfigError`].
+//!
+//! ## Straggler cutoff (`--round_deadline_ms`)
+//!
+//! A round deadline extends the barrier hook with a *cut set*: the
+//! clients the deadline (or a mid-round disconnect) excluded from the
+//! round. [`DrainPolicy::take_at_barrier_cut`] consumes the barrier
+//! batches minus anything a cut-off client queued — the cutoff is
+//! **client-granular**: a client either contributes its whole round
+//! (uploads + θ) or nothing, so the surviving drain stays deterministic
+//! under `barrier`. With an empty cut set the hook IS
+//! `take_at_barrier`, which is how bit-identity with deadline-free runs
+//! is preserved. Under `stream`, batches a mid-round probe already
+//! consumed before the cut stand — arrival-order consumption is already
+//! outside the bit-identity contract.
 
 use crate::coordinator::server_queue::{ServerQueue, SmashedBatch};
 use std::fmt;
@@ -124,6 +138,27 @@ pub trait DrainPolicy: Sync {
     /// consumption order. Everything, for `barrier`; stragglers the
     /// mid-round probes missed, for `stream`.
     fn take_at_barrier(&self, queue: &ServerQueue) -> Vec<SmashedBatch>;
+
+    /// Round barrier under a straggler cutoff: [`Self::take_at_barrier`]
+    /// minus every batch a cut-off client queued (discarded, and still
+    /// counted as `processed` by the queue's own drain accounting —
+    /// cut-off is a consumption decision, not a queue drop). With an
+    /// empty cut set this is *exactly* `take_at_barrier`, byte for byte
+    /// — the bit-identity hinge for deadline-free rounds.
+    fn take_at_barrier_cut(
+        &self,
+        queue: &ServerQueue,
+        cut: &std::collections::BTreeSet<usize>,
+    ) -> Vec<SmashedBatch> {
+        let batches = self.take_at_barrier(queue);
+        if cut.is_empty() {
+            return batches;
+        }
+        batches
+            .into_iter()
+            .filter(|b| !cut.contains(&b.client))
+            .collect()
+    }
 }
 
 /// Eq. (7): nothing mid-round, everything sorted at the barrier.
@@ -228,6 +263,37 @@ mod tests {
             keys(&p.take_at_barrier(&q)),
             vec![(0, 3, 1), (0, 1, 2)]
         );
+    }
+
+    #[test]
+    fn barrier_cut_with_empty_set_is_take_at_barrier() {
+        let q = ServerQueue::new(16);
+        fill(&q);
+        let p = DrainMode::Barrier.policy();
+        let cut = std::collections::BTreeSet::new();
+        assert_eq!(
+            keys(&p.take_at_barrier_cut(&q, &cut)),
+            vec![(0, 0, 1), (0, 0, 2), (0, 1, 1), (0, 2, 1)],
+            "empty cut set must be exactly take_at_barrier"
+        );
+    }
+
+    #[test]
+    fn cut_clients_batches_are_discarded_in_both_policies() {
+        for mode in [DrainMode::Barrier, DrainMode::Stream] {
+            let q = ServerQueue::new(16);
+            fill(&q);
+            let cut: std::collections::BTreeSet<usize> =
+                [0usize].into_iter().collect();
+            let out = mode.policy().take_at_barrier_cut(&q, &cut);
+            assert!(
+                out.iter().all(|b| b.client != 0),
+                "{}: client 0 was cut off",
+                mode.name()
+            );
+            assert_eq!(out.len(), 2, "{}: two surviving batches", mode.name());
+            assert!(q.is_empty(), "cut batches leave the queue too");
+        }
     }
 
     #[test]

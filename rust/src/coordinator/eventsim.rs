@@ -131,6 +131,12 @@ pub struct RoundTiming {
     pub queue_wait_barrier: f64,
     /// same, under the arrival-order mid-round schedule
     pub queue_wait_stream: f64,
+    /// participants cut off this round — by the straggler deadline
+    /// (`--round_deadline_ms`) or a mid-round disconnect. A cut client
+    /// contributed nothing: its queued uploads were discarded at the
+    /// barrier and its θ never entered FedAvg. Empty for every round of
+    /// a deadline-free, churn-free run.
+    pub cut_clients: Vec<usize>,
 }
 
 impl RoundTiming {
@@ -232,6 +238,8 @@ pub struct RoundSim {
     workers: usize,
     queue_stats: QueueStats,
     wire: WireRoundStats,
+    /// participants cut off this round (deadline or disconnect)
+    cut: Vec<usize>,
 }
 
 impl RoundSim {
@@ -273,6 +281,7 @@ impl RoundSim {
             workers: n.max(1),
             queue_stats: QueueStats::default(),
             wire: WireRoundStats::default(),
+            cut: Vec::new(),
         }
     }
 
@@ -314,6 +323,15 @@ impl RoundSim {
     /// Record the measured wire traffic for this round (networked runs).
     pub fn record_wire(&mut self, wire: WireRoundStats) {
         self.wire = wire;
+    }
+
+    /// Record a participant the straggler deadline (or a mid-round
+    /// disconnect) cut from this round. The client must be a cohort
+    /// member — cutting a client the round never sampled would mean the
+    /// round engine lost track of its own cohort.
+    pub fn record_cutoff(&mut self, client: usize) {
+        let _ = self.slot(client);
+        self.cut.push(client);
     }
 
     pub fn lane(&self) -> ClientLane {
@@ -369,12 +387,14 @@ impl RoundSim {
         self.sync_bytes += bytes_per_client;
     }
 
-    pub fn finish(self) -> RoundTiming {
+    pub fn finish(mut self) -> RoundTiming {
         let client_phase = self
             .client_times
             .iter()
             .cloned()
             .fold(0.0f64, f64::max);
+        self.cut.sort_unstable();
+        self.cut.dedup();
         // the sync broadcast amortizes over the whole registered
         // population (pre-cohort behavior, preserved exactly)
         let n = self.population.max(1) as f64;
@@ -398,6 +418,7 @@ impl RoundSim {
             server_makespan_stream,
             queue_wait_barrier: wb,
             queue_wait_stream: ws,
+            cut_clients: self.cut,
         }
     }
 }
@@ -703,6 +724,25 @@ mod tests {
         let p = profile();
         let mut sim = RoundSim::new_cohort(&p, &[1, 3], 8);
         sim.client_compute(2, 1);
+    }
+
+    #[test]
+    fn cutoffs_recorded_sorted_and_deduped() {
+        let p = profile();
+        let mut sim = RoundSim::new_cohort(&p, &[3, 7, 11], 20);
+        sim.record_cutoff(11);
+        sim.record_cutoff(3);
+        sim.record_cutoff(11); // deadline + disconnect can both cut
+        let t = sim.finish();
+        assert_eq!(t.cut_clients, vec![3, 11]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in this round's cohort")]
+    fn cutoff_outside_the_cohort_panics() {
+        let p = profile();
+        let mut sim = RoundSim::new_cohort(&p, &[1], 4);
+        sim.record_cutoff(2);
     }
 
     #[test]

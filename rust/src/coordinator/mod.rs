@@ -11,10 +11,12 @@
 //! * [`accounting`] — Table I/II/III resource cost models
 //! * [`eventsim`] — virtual-time latency / training-lock simulator
 //! * [`config`] — experiment configuration
+//! * [`checkpoint`] — checksummed checkpoint/restore of the round driver
 
 pub mod accounting;
 pub mod aggregator;
 pub mod algorithms;
+pub mod checkpoint;
 pub mod config;
 pub mod drain;
 pub mod eventsim;

@@ -99,6 +99,7 @@ use crate::runtime::Session;
 use crate::util::pool;
 use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Adam state threading through the step entries ((m, v, t) or stateless).
@@ -256,6 +257,15 @@ impl<'s> Driver<'s> {
 
     /// One full communication round. Returns the train-loss mean over all
     /// local steps.
+    ///
+    /// With `--round_deadline_ms` set, the decoupled path applies the
+    /// straggler cutoff in *virtual time*: a participant whose event-sim
+    /// lane finishes past the deadline is cut whole — queued uploads
+    /// discarded at the barrier, θ excluded from FedAvg, losses and
+    /// analytic counters uncharged — and recorded in the round's
+    /// [`RoundTiming::cut_clients`]. The locked baselines (SFLV1/V2)
+    /// ignore the deadline: their per-step training lock co-executes the
+    /// server, so there is no asynchronous wait to cut.
     pub fn run_round(&mut self) -> Result<f64> {
         let participants = self.sample_participants();
         let mut sim = self.new_sim(&participants);
@@ -265,6 +275,8 @@ impl<'s> Driver<'s> {
         // FSL-SAGE cut-gradient feedback; the stream drain policy fills
         // it mid-round, the barrier policy entirely at `server_drain`
         let mut feedback: Vec<(usize, Vec<f32>)> = Vec::new();
+        // participants the straggler deadline excluded this round
+        let mut cut: BTreeSet<usize> = BTreeSet::new();
 
         if self.cfg.algorithm.is_decoupled() {
             self.local_fanout(
@@ -274,6 +286,7 @@ impl<'s> Driver<'s> {
                 &mut losses,
                 &mut updated,
                 &mut feedback,
+                &mut cut,
             )?;
         } else {
             // SFLV1/V2: the per-step training lock serializes each client
@@ -289,7 +302,13 @@ impl<'s> Driver<'s> {
             }
         }
 
-        feedback.extend(self.server_drain(&queue, &mut sim)?);
+        feedback.extend(self.server_drain_cut(&queue, &cut, &mut sim)?);
+        if !cut.is_empty() {
+            // a mid-round (stream) probe may have produced alignment
+            // feedback for a client the deadline then cut — a cut client
+            // receives nothing
+            feedback.retain(|(c, _)| !cut.contains(c));
+        }
         self.apply_alignment_local(feedback, &mut updated, &mut sim)?;
         Ok(self.finish_round(&participants, updated, sim, &losses))
     }
@@ -324,6 +343,7 @@ impl<'s> Driver<'s> {
         losses: &mut Vec<f64>,
         updated: &mut Vec<(usize, Vec<f32>)>,
         feedback: &mut Vec<(usize, Vec<f32>)>,
+        cut: &mut BTreeSet<usize>,
     ) -> Result<()> {
         let eff = pool::effective_workers(self.cfg.workers, participants.len());
         sim.set_workers(eff);
@@ -425,8 +445,22 @@ impl<'s> Driver<'s> {
                 },
             )?
         };
+        // straggler cutoff (virtual time): a lane that finishes past the
+        // deadline is excluded whole. The comparison is strict (`>`), so
+        // a deadline placed exactly at the slowest lane's finish time
+        // cuts nobody — and stays bitwise identical to no deadline at
+        // all (pinned in `rust/tests/drain_stream.rs`).
+        let deadline = self.cfg.virtual_deadline();
         for res in results {
-            self.absorb_outcome(res?, sim, losses, updated);
+            let out = res?;
+            if let Some(d) = deadline {
+                if out.lane.time > d {
+                    sim.record_cutoff(out.ci);
+                    cut.insert(out.ci);
+                    continue;
+                }
+            }
+            self.absorb_outcome(out, sim, losses, updated);
         }
         Ok(())
     }
@@ -590,9 +624,23 @@ impl<'s> Driver<'s> {
         queue: &ServerQueue,
         sim: &mut RoundSim,
     ) -> Result<Vec<(usize, Vec<f32>)>> {
+        self.server_drain_cut(queue, &BTreeSet::new(), sim)
+    }
+
+    /// [`Self::server_drain`] under a straggler cutoff: batches queued by
+    /// cut-off clients are discarded at the barrier
+    /// ([`crate::coordinator::drain::DrainPolicy::take_at_barrier_cut`]).
+    /// An empty cut set is exactly the plain barrier drain.
+    pub(crate) fn server_drain_cut(
+        &mut self,
+        queue: &ServerQueue,
+        cut: &BTreeSet<usize>,
+        sim: &mut RoundSim,
+    ) -> Result<Vec<(usize, Vec<f32>)>> {
         let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
         if self.cfg.algorithm.is_decoupled() {
-            let batches = self.cfg.drain.policy().take_at_barrier(queue);
+            let batches =
+                self.cfg.drain.policy().take_at_barrier_cut(queue, cut);
             self.consume_batches(batches, sim, &mut sage_feedback)?;
         }
         sim.record_queue(queue.stats());
@@ -763,6 +811,74 @@ impl<'s> Driver<'s> {
         self.timings.push(sim.finish());
         self.round_idx += 1;
         losses.iter().sum::<f64>() / losses.len().max(1) as f64
+    }
+
+    // ---- checkpoint/restore ------------------------------------------------
+
+    /// Snapshot everything needed to continue this run from the next
+    /// round boundary (see [`crate::coordinator::checkpoint`]). Taken
+    /// *between* rounds, where the SFLV1 per-participant replicas are
+    /// provably folded into `replica_base` (cleared by
+    /// [`Self::finish_round`]), so the cohort replicas never need to be
+    /// captured.
+    pub fn export_state(&self) -> crate::coordinator::checkpoint::DriverState {
+        crate::coordinator::checkpoint::DriverState {
+            round_idx: self.round_idx as u64,
+            rng: self.rng.state(),
+            theta_l: self.theta_l.clone(),
+            theta_s: self.theta_s.clone(),
+            replica_base: self.replica_base.clone(),
+            opt_server: self.opt_server.clone(),
+            comm_bytes: self.comm_bytes,
+            flops_client: self.flops_client,
+            timings: self.timings.clone(),
+        }
+    }
+
+    /// Adopt a [`Self::export_state`] snapshot: the driver continues at
+    /// `state.round_idx` with the exact RNG stream, parameters,
+    /// optimizer state, and accumulated accounting the saved run had —
+    /// bit-identical continuation for the stateless-optimizer variants
+    /// (client-side Adam state is outside the checkpoint's scope).
+    /// Rejects a snapshot whose parameter shapes disagree with this
+    /// driver's manifest — restoring across configs is a config error,
+    /// not a truncation waiting to happen.
+    pub fn import_state(
+        &mut self,
+        state: crate::coordinator::checkpoint::DriverState,
+    ) -> Result<()> {
+        if state.theta_l.len() != self.theta_l.len() {
+            bail!(
+                "checkpoint theta_l has {} params, manifest wants {}",
+                state.theta_l.len(),
+                self.theta_l.len()
+            );
+        }
+        if state.theta_s.len() != self.theta_s.len() {
+            bail!(
+                "checkpoint theta_s has {} params, manifest wants {}",
+                state.theta_s.len(),
+                self.theta_s.len()
+            );
+        }
+        if state.replica_base.len() != self.replica_base.len() {
+            bail!(
+                "checkpoint replica base has {} params, manifest wants {}",
+                state.replica_base.len(),
+                self.replica_base.len()
+            );
+        }
+        self.round_idx = state.round_idx as usize;
+        self.rng = Xoshiro256pp::from_state(state.rng);
+        self.theta_l = state.theta_l;
+        self.theta_s = state.theta_s;
+        self.replica_base = state.replica_base;
+        self.opt_server = state.opt_server;
+        self.comm_bytes = state.comm_bytes;
+        self.flops_client = state.flops_client;
+        self.timings = state.timings;
+        self.server_replicas.clear();
+        Ok(())
     }
 
     fn variant_server_flops(&self) -> u64 {

@@ -66,12 +66,23 @@ fn print_help() {
            --drain barrier|stream (server consumption: deterministic\n\
              Eq.-7 barrier drain, or arrival-order mid-round pipelining)\n\
            --out results/dir (writes json+csv)\n\
+           --round_deadline_ms D (straggler cutoff: finalize each round\n\
+             with whatever uploads arrived within D ms — wall-clock on\n\
+             the wire path, virtual time in the in-process event-sim;\n\
+             0 = wait forever, bit-identical to pre-deadline builds)\n\
          serve flags: all run flags, plus\n\
            --listen ADDR (default 127.0.0.1:7070; port 0 picks one)\n\
            --conns N (client connections to wait for; default 2)\n\
+           --checkpoint_every K (write a checkpoint every K rounds)\n\
+           --checkpoint_path FILE (CRC-checksummed checkpoint file;\n\
+             also written on SIGINT/SIGTERM before the clean Shutdown)\n\
+           --restore FILE (resume a checkpointed run; finishes\n\
+             bit-identical to the uninterrupted run)\n\
          connect flags: --addr ADDR (default 127.0.0.1:7070) --name NAME\n\
            --virtual N (multiplex N simulated edge devices — protocol\n\
              lanes — through this one socket; default 1)\n\
+           (a client that reconnects to a live server takes over a dead\n\
+             connection's lane block and fast-forwards to the open round)\n\
          bench serve-storm flags: all run flags (defaults to the storm\n\
            preset: population 1024, cohort 64, seeds uploads), plus\n\
            --conns N (sockets; default 16) --lanes L (virtual clients per\n\
@@ -145,9 +156,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.describe(),
         listener.local_addr()?
     );
+    let opts = heron_sfl::net::ServeOptions {
+        checkpoint_every: args.get_usize("checkpoint_every", 0),
+        checkpoint_path: args
+            .get("checkpoint_path")
+            .map(std::path::PathBuf::from),
+        restore: args.get("restore").map(std::path::PathBuf::from),
+        halt_after: 0,
+        watch_signals: true,
+        rejoin: true,
+    };
+    // ^C / SIGTERM become a final checkpoint + clean Shutdown broadcast
+    heron_sfl::util::signal::reset();
+    heron_sfl::util::signal::install();
     let session = Session::open_default()?;
-    let report =
-        heron_sfl::net::serve_tcp(&session, cfg, listener, conns, "serve")?;
+    let report = heron_sfl::net::serve_tcp_opts(
+        &session, cfg, listener, conns, "serve", opts,
+    )?;
     print_net_summary(&report);
     if let Some(out) = args.get("out") {
         report.record.save(std::path::Path::new(out))?;
@@ -180,6 +205,15 @@ fn print_net_summary(report: &heron_sfl::net::NetReport) {
         report.wire.frames_sent + report.wire.frames_recv,
         report.nacks_sent,
     );
+    if report.disconnects > 0 || report.clients_cut > 0 {
+        println!(
+            "churn: {} disconnect(s) ({} mid-frame) | {} client slot(s) cut \
+             from rounds",
+            report.disconnects,
+            report.mid_frame_disconnects,
+            report.clients_cut,
+        );
+    }
 }
 
 fn cmd_connect(args: &Args) -> Result<()> {

@@ -83,6 +83,29 @@ pub struct ClientReport {
     pub shutdown_reason: String,
 }
 
+/// Marker error: the server said `Shutdown` while this endpoint was in
+/// the middle of an exchange (e.g. blocked on an `UploadAck`). It
+/// unwinds the phase like any error but the main loop recognizes it and
+/// turns it into a *clean* exit — a server that checkpoints and shuts
+/// down mid-round must not make its clients exit non-zero.
+#[derive(Debug)]
+struct CleanShutdown(String);
+
+impl std::fmt::Display for CleanShutdown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server shutdown: {}", self.0)
+    }
+}
+
+impl std::error::Error for CleanShutdown {}
+
+/// If `e` is (or wraps) a [`CleanShutdown`], the shutdown reason.
+fn as_shutdown(e: &anyhow::Error) -> Option<String> {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<CleanShutdown>())
+        .map(|s| s.0.clone())
+}
+
 fn send(t: &Mutex<Box<dyn Transport>>, msg: &Msg) -> Result<()> {
     t.lock().unwrap_or_else(|p| p.into_inner()).send(msg)
 }
@@ -145,6 +168,9 @@ impl NetSink<'_> {
                     log::warn!("upload NACKed: {reason}");
                 }
                 Ok(accepted)
+            }
+            Some(Msg::Shutdown { reason }) => {
+                Err(anyhow::Error::new(CleanShutdown(reason)))
             }
             other => bail!("expected UploadAck, got {other:?}"),
         }
@@ -210,9 +236,20 @@ pub fn run_client_virtual(
     let mut assigned: Vec<u32> = Vec::new();
     let mut lane_of: BTreeMap<usize, u32> = BTreeMap::new();
     let mut cfg_json: Option<String> = None;
+    // restore/rejoin handshake: the round the run resumes at, plus how
+    // many local phases each assigned client has already completed —
+    // the fast-forward distance for its data stream
+    let mut resume_round = 0u32;
+    let mut phase_done: BTreeMap<usize, u32> = BTreeMap::new();
     for k in 0..lanes as u32 {
         match recv(&t)? {
-            Some(Msg::Assign { lane, client_ids, config }) => {
+            Some(Msg::Assign {
+                lane,
+                client_ids,
+                config,
+                rejoin_round,
+                phases,
+            }) => {
                 if lane != k {
                     bail!("Assign for lane {lane}, expected lane {k}");
                 }
@@ -223,10 +260,25 @@ pub fn run_client_virtual(
                         bail!("lane {k}: config differs from lane 0's")
                     }
                 }
-                for &ci in &client_ids {
+                if k > 0 && rejoin_round != resume_round {
+                    bail!(
+                        "lane {k}: rejoin round {rejoin_round} differs from \
+                         lane 0's {resume_round}"
+                    );
+                }
+                resume_round = rejoin_round;
+                if phases.len() != client_ids.len() {
+                    bail!(
+                        "lane {k}: {} phase counts for {} clients",
+                        phases.len(),
+                        client_ids.len()
+                    );
+                }
+                for (&ci, &n) in client_ids.iter().zip(&phases) {
                     if lane_of.insert(ci as usize, k).is_some() {
                         bail!("client {ci} assigned to two lanes");
                     }
+                    phase_done.insert(ci as usize, n);
                 }
                 assigned.extend(client_ids);
             }
@@ -266,6 +318,24 @@ pub fn run_client_virtual(
     let mut pool = ClientPool::new(&v, &cfg, task);
     let profile = DeviceProfile::edge_default();
 
+    // restore/rejoin fast-forward: an uninterrupted client would have
+    // consumed `phases × local_steps` batches per client by now, and the
+    // loader is a deterministic stream — skipping exactly that many
+    // batches puts every data stream on the batch the resumed round
+    // would read, which is what keeps a restored run bit-identical
+    if resume_round > 0 {
+        log::info!("resuming at round {resume_round}; fast-forwarding loaders");
+    }
+    for (&ci, &n) in &phase_done {
+        if n == 0 {
+            continue;
+        }
+        let cs = pool.state(ci);
+        for _ in 0..(n as usize) * cfg.local_steps {
+            cs.loader.next_batch();
+        }
+    }
+
     let lane_nacks: Vec<AtomicU64> =
         (0..lanes).map(|_| AtomicU64::new(0)).collect();
     let lane_seq: Vec<AtomicU32> =
@@ -277,7 +347,7 @@ pub fn run_client_virtual(
     // this round's θ per owned client (FSL-SAGE alignment reads/updates it)
     let mut round_theta: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
 
-    let shutdown_reason = loop {
+    let shutdown_reason = 'main: loop {
         let msg = match recv(&t)? {
             Some(m) => m,
             None => bail!("server closed the connection without Shutdown"),
@@ -340,6 +410,11 @@ pub fn run_client_virtual(
                     if let Some(e) =
                         sink.err.lock().unwrap_or_else(|p| p.into_inner()).take()
                     {
+                        // a Shutdown that landed mid-upload is a clean
+                        // end of run, not a failure
+                        if let Some(reason) = as_shutdown(&e) {
+                            break 'main reason;
+                        }
                         return Err(e.context("smashed upload failed"));
                     }
                     phases += 1;
@@ -392,7 +467,7 @@ pub fn run_client_virtual(
                          assigned to lane {own}"
                     );
                 }
-                let theta_end = locked_phase(
+                let theta_end = match locked_phase(
                     session,
                     &t,
                     &cfg,
@@ -404,7 +479,13 @@ pub fn run_client_virtual(
                     lane,
                     round,
                     theta,
-                )?;
+                ) {
+                    Ok(th) => th,
+                    Err(e) => match as_shutdown(&e) {
+                        Some(reason) => break 'main reason,
+                        None => return Err(e),
+                    },
+                };
                 phases += 1;
                 lane_phases[lane as usize] += 1;
                 send(&t, &Msg::ModelSync {
@@ -518,6 +599,9 @@ fn locked_phase(
                 if client as usize == ci && s as usize == step =>
             {
                 g
+            }
+            Some(Msg::Shutdown { reason }) => {
+                return Err(anyhow::Error::new(CleanShutdown(reason)));
             }
             other => bail!("expected CutGrad for step {step}, got {other:?}"),
         };

@@ -39,6 +39,17 @@
 //! additionally reports the *measured* wire traffic next to the analytic
 //! `CostBook` numbers.
 //!
+//! Fault tolerance (v5): the dispatcher survives the real world —
+//! `--round_deadline_ms` cuts stragglers at a wall-clock round deadline,
+//! a vanished peer is a typed [`poller::Event::PeerDisconnected`] whose
+//! clients are cut from the open round (and whose lane block a
+//! reconnecting client can take over between rounds, with
+//! `Assign{rejoin_round, phases}` fast-forwarding its data streams),
+//! and [`ServeOptions`] adds CRC-checksummed checkpoint/restore
+//! (`coordinator::checkpoint`) plus a SIGINT/SIGTERM → final checkpoint
+//! + clean `Shutdown` path. Pinned by `rust/tests/chaos.rs` and
+//! `scripts/chaos_smoke.sh`.
+//!
 //! The lean `--zo_wire seeds` mode (HERON only) is the subsystem's
 //! headline: clients upload `ZoUpdate{seeds, gscales}` — one i32 seed
 //! plus n_p gradient scalars per local step — instead of the full θ_l,
@@ -55,7 +66,10 @@ pub mod transport;
 pub mod wire;
 
 pub use client::{run_client, run_client_virtual, ClientReport};
-pub use server::{serve_tcp, serve_transports, NetReport};
+pub use server::{
+    serve_tcp, serve_tcp_opts, serve_transports, serve_transports_opts,
+    NetReport, ServeOptions,
+};
 pub use storm::{run_storm, storm_config, StormPoint};
 pub use transport::{loopback_pair, TcpTransport, Transport};
 pub use wire::{Msg, WireError, VERSION};

@@ -105,7 +105,19 @@ pub enum Event {
     Msg(Msg),
     /// Peer closed cleanly at a frame boundary.
     Closed,
-    /// Read error, codec violation, or mid-frame disconnect.
+    /// Peer vanished — EOF mid-frame or a transport read error — the
+    /// first-class churn signal. `mid_frame` distinguishes a kill in
+    /// the middle of an upload from one between frames; `pending` is
+    /// how many partial-frame bytes died with it. The dispatcher marks
+    /// the connection's lanes dead, drops its clients from the open
+    /// round, and NACKs nothing retroactively.
+    PeerDisconnected {
+        mid_frame: bool,
+        pending: usize,
+        detail: String,
+    },
+    /// Codec violation (bad magic/version/tag, checksum mismatch,
+    /// oversized length): the peer is alive but speaking garbage.
     Err(String),
 }
 
@@ -135,6 +147,35 @@ impl EventQueue {
                 return ev;
             }
             g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Pop with a wait bound: `None` after `timeout` with no event. The
+    /// dispatcher uses this when a round deadline or a shutdown flag
+    /// needs periodic re-checking; with neither armed it stays on the
+    /// plain [`Self::pop`], whose behavior is unchanged.
+    pub fn pop_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<(usize, Event)> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(ev) = g.pop_front() {
+                return Some(ev);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            g = guard;
+            if res.timed_out() && g.is_empty() {
+                return None;
+            }
         }
     }
 }
@@ -183,13 +224,48 @@ pub fn shard_conns(conns: Vec<PollConn>, shards: usize) -> Vec<Vec<PollConn>> {
 /// has reached EOF or a hard error. Frame bytes are accounted on each
 /// connection's [`WireCounters`] exactly like the blocking receive
 /// path, so measured-wire reporting is unchanged.
-pub fn poll_shard(mut conns: Vec<PollConn>, events: &EventQueue) {
+pub fn poll_shard(conns: Vec<PollConn>, events: &EventQueue) {
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    poll_shard_adopt(conns, events, None, &stop);
+}
+
+/// [`poll_shard`] plus mid-run adoption: each sweep drains `inbox` —
+/// connections the dispatcher re-accepted after a peer died and
+/// re-handshook between rounds — into the live set. With an inbox the
+/// loop does not exit when its last connection dies (a rejoiner may
+/// be on the way); it parks until `stop` is raised at end of run.
+pub fn poll_shard_adopt(
+    mut conns: Vec<PollConn>,
+    events: &EventQueue,
+    inbox: Option<&Mutex<Vec<PollConn>>>,
+    stop: &std::sync::atomic::AtomicBool,
+) {
+    use std::sync::atomic::Ordering;
     let mut reasm: Vec<Reassembly> =
         conns.iter().map(|_| Reassembly::new()).collect();
     let mut live = vec![true; conns.len()];
     let mut n_live = conns.len();
     let mut scratch = vec![0u8; SCRATCH];
-    while n_live > 0 {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(ib) = inbox {
+            let mut g = ib.lock().unwrap_or_else(|p| p.into_inner());
+            for c in g.drain(..) {
+                conns.push(c);
+                reasm.push(Reassembly::new());
+                live.push(true);
+                n_live += 1;
+            }
+        }
+        if n_live == 0 {
+            if inbox.is_none() {
+                return;
+            }
+            std::thread::sleep(IDLE_PARK);
+            continue;
+        }
         let mut progress = false;
         for i in 0..conns.len() {
             if !live[i] {
@@ -222,13 +298,17 @@ pub fn poll_shard(mut conns: Vec<PollConn>, events: &EventQueue) {
                         if reasm[i].is_empty() {
                             events.push(conns[i].conn, Event::Closed);
                         } else {
+                            let pending = reasm[i].pending();
                             events.push(
                                 conns[i].conn,
-                                Event::Err(format!(
-                                    "connection closed mid-frame \
-                                     ({} bytes of partial frame)",
-                                    reasm[i].pending()
-                                )),
+                                Event::PeerDisconnected {
+                                    mid_frame: true,
+                                    pending,
+                                    detail: format!(
+                                        "connection closed mid-frame \
+                                         ({pending} bytes of partial frame)"
+                                    ),
+                                },
                             );
                         }
                         live[i] = false;
@@ -236,9 +316,14 @@ pub fn poll_shard(mut conns: Vec<PollConn>, events: &EventQueue) {
                         break;
                     }
                     Err(e) => {
+                        let pending = reasm[i].pending();
                         events.push(
                             conns[i].conn,
-                            Event::Err(format!("read error: {e}")),
+                            Event::PeerDisconnected {
+                                mid_frame: pending > 0,
+                                pending,
+                                detail: format!("read error: {e}"),
+                            },
                         );
                         live[i] = false;
                         n_live -= 1;
@@ -272,7 +357,7 @@ mod tests {
 
     fn msgs() -> Vec<Msg> {
         vec![
-            Msg::Hello { name: "edge".into(), protocol: 4, lanes: 2 },
+            Msg::Hello { name: "edge".into(), protocol: 5, lanes: 2 },
             Msg::ZoUpdate {
                 lane: 0,
                 client: 0,
@@ -399,8 +484,13 @@ mod tests {
             match events.pop() {
                 (0, Event::Msg(msg)) => got0.push(msg),
                 (0, Event::Closed) => closed0 = true,
-                (7, Event::Err(e)) => {
-                    assert!(e.contains("mid-frame"), "{e}");
+                (
+                    7,
+                    Event::PeerDisconnected { mid_frame, pending, detail },
+                ) => {
+                    assert!(mid_frame, "half a frame was buffered");
+                    assert!(pending > 0);
+                    assert!(detail.contains("mid-frame"), "{detail}");
                     err7 = true;
                 }
                 (c, _) => panic!("unexpected event from conn {c}"),
@@ -431,6 +521,21 @@ mod tests {
         match events.pop() {
             (3, Event::Err(_)) => {}
             _ => panic!("garbage must surface as a typed error"),
+        }
+    }
+
+    #[test]
+    fn pop_timeout_times_out_idle_and_delivers_queued() {
+        let q = EventQueue::new();
+        let t0 = std::time::Instant::now();
+        assert!(q
+            .pop_timeout(std::time::Duration::from_millis(20))
+            .is_none());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+        q.push(5, Event::Closed);
+        match q.pop_timeout(std::time::Duration::from_millis(20)) {
+            Some((5, Event::Closed)) => {}
+            _ => panic!("queued event must come back before the timeout"),
         }
     }
 

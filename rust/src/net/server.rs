@@ -36,6 +36,44 @@
 //! server replicas exist only for the round's participants. Orchestrator
 //! round state is O(cohort), not O(population).
 //!
+//! ## Fault tolerance (v5)
+//!
+//! Three failure modes are first-class, not run-killers:
+//!
+//! * **Straggler cutoff** — with `--round_deadline_ms` set, the
+//!   decoupled collect loop waits at most that much *wall-clock* time
+//!   per round (the in-process driver applies the same knob in
+//!   *virtual* event-sim time); participants that have not delivered
+//!   `LocalDone` by the deadline are cut: their queued uploads are
+//!   discarded at the barrier ([`crate::coordinator::drain`], straggler
+//!   cutoff), their θ is excluded from FedAvg, and their late traffic
+//!   is tolerated — uploads get a typed NACK so the straggler is never
+//!   wedged on an ack, everything else is dropped. With the flag unset
+//!   the loop uses the plain blocking pop and behaves bit-identically
+//!   to a deadline-free build.
+//! * **Typed churn** — the poller surfaces a vanished peer as
+//!   [`Event::PeerDisconnected`]; the dispatcher marks that
+//!   connection's lanes dead, cuts its clients from the open round
+//!   (finalizing early — possibly empty — if the cohort empties), and
+//!   NACKs nothing retroactively. A connection that reconnects while
+//!   the run is live (`serve` keeps accepting) is re-handshaken
+//!   *between rounds*: it takes over a dead connection's lane block
+//!   and its `Assign` carries `rejoin_round` plus per-client
+//!   completed-phase counts, so it never replays a stale round and its
+//!   data streams fast-forward to the exact batch an uninterrupted
+//!   client would read next. Locked SFLV1/V2 keep the strict
+//!   fail-stop behavior — the training lock is the baseline's defining
+//!   property and churn-tolerance would change what is being measured.
+//! * **Checkpoint/restore** — every `--checkpoint_every` rounds the
+//!   driver state is serialized to a CRC-checksummed file
+//!   ([`crate::coordinator::checkpoint`]); `serve --restore <path>`
+//!   resumes at the checkpointed round and finishes **bit-identically**
+//!   to an uninterrupted run for the stateless-optimizer variants
+//!   (asserted in `rust/tests/chaos.rs` and kill-9'd for real by
+//!   `scripts/chaos_smoke.sh`). On SIGINT/SIGTERM the server writes a
+//!   final checkpoint at the last round boundary and broadcasts a clean
+//!   `Shutdown`, so `^C` is a restorable exit, not a lost run.
+//!
 //! ## Orchestration
 //!
 //! 1. `RoundBarrier{round, participants}` to every connection, then the
@@ -59,13 +97,14 @@
 //!    uploads run [`Driver::locked_server_exchange`] and reply with a
 //!    `CutGrad`.
 //! 3. Once every participant's `ZoUpdate` + `ModelSync` + `LocalDone`
-//!    arrived, outcomes are absorbed **in participant order** — the same
-//!    barrier-merge the in-process fan-out performs — then the queue is
-//!    drained in `(round, client, step)` order and FSL-SAGE feedback is
-//!    relayed as `AlignGrad` round-trips. In `--zo_wire seeds` mode no
-//!    `ModelSync` comes back up at all: the `ZoUpdate` carries the
-//!    per-probe gradient scalars and the dispatcher *replays* each
-//!    client's h ZO steps from the broadcast θ
+//!    arrived (or the participant was cut), outcomes are absorbed **in
+//!    participant order** — the same barrier-merge the in-process
+//!    fan-out performs — then the queue is drained in `(round, client,
+//!    step)` order with cut clients' leftovers discarded, and FSL-SAGE
+//!    feedback is relayed as `AlignGrad` round-trips. In `--zo_wire
+//!    seeds` mode no `ModelSync` comes back up at all: the `ZoUpdate`
+//!    carries the per-probe gradient scalars and the dispatcher
+//!    *replays* each client's h ZO steps from the broadcast θ
 //!    (`zo::replay_trajectory`), after pinning the record shape and the
 //!    counter-derived step seeds — bit-identical to the uploaded θ by
 //!    construction.
@@ -79,27 +118,65 @@
 //! sockets (asserted for all five algorithms — per-connection *and*
 //! lane-multiplexed — in `rust/tests/net_loopback.rs`).
 
+use crate::coordinator::checkpoint::{self, Checkpoint};
 use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::drain::DrainMode;
-use crate::coordinator::eventsim::{ClientLane, DeviceProfile, WireRoundStats};
+use crate::coordinator::eventsim::{
+    ClientLane, DeviceProfile, RoundSim, WireRoundStats,
+};
 use crate::coordinator::local::{self, LocalOutcome};
 use crate::coordinator::round::Driver;
 use crate::coordinator::server_queue::SmashedBatch;
-use crate::metrics::RunRecord;
+use crate::metrics::{RoundRecord, RunRecord};
 use crate::net::poller::{
-    poll_shard, shard_conns, Event, EventQueue, PollConn, DEFAULT_SHARDS,
+    poll_shard_adopt, shard_conns, Event, EventQueue, PollConn, DEFAULT_SHARDS,
 };
 use crate::net::transport::{Transport, TxHalf, WireCounters};
 use crate::net::wire::{Msg, BROADCAST, VERSION};
 use crate::runtime::Session;
+use crate::util::signal;
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Sanity cap on a single connection's declared lane count: a corrupt
 /// or hostile `Hello` must not make the dispatcher allocate unbounded
 /// per-lane state before the run even starts.
 const MAX_LANES_PER_CONN: u32 = 1 << 20;
+
+/// How long the late-join acceptor parks between polls of its
+/// non-blocking listener, and how often an armed collect loop wakes to
+/// re-check the shutdown flag.
+const POLL_TICK: Duration = Duration::from_millis(50);
+
+/// Fault-tolerance knobs for a `serve` run. `Default` turns every one
+/// of them off, which pins the pre-v5 behavior bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Write a checkpoint every this many completed rounds (0 = never).
+    pub checkpoint_every: usize,
+    /// Where checkpoints go (required for any checkpoint to be written).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this checkpoint instead of starting at round 0.
+    pub restore: Option<PathBuf>,
+    /// Fault-injection hook: checkpoint and abort the run with an error
+    /// after this many completed rounds (0 = off) — the in-process
+    /// chaos harness's stand-in for `kill -9`.
+    pub halt_after: usize,
+    /// Poll [`signal::requested`] and turn SIGINT/SIGTERM into a final
+    /// checkpoint plus a clean `Shutdown` broadcast.
+    pub watch_signals: bool,
+    /// Keep accepting TCP connections after the run starts so a killed
+    /// client can rejoin a dead connection's lane block between rounds.
+    pub rejoin: bool,
+}
+
+/// Parked transports from the late-join acceptor, awaiting their
+/// between-rounds handshake.
+type JoinInbox = Mutex<Vec<Box<dyn Transport>>>;
 
 /// What a completed networked run hands back to the caller.
 pub struct NetReport {
@@ -115,6 +192,12 @@ pub struct NetReport {
     pub connections: usize,
     /// virtual-client lanes served, summed over all connections
     pub lanes: usize,
+    /// connections lost mid-run (`Event::PeerDisconnected` or a failed
+    /// send), and how many of those died mid-frame
+    pub disconnects: u64,
+    pub mid_frame_disconnects: u64,
+    /// participant slots cut out of rounds (deadline or churn)
+    pub clients_cut: u64,
 }
 
 /// Accept `n_conns` TCP client connections and run the configured
@@ -126,6 +209,27 @@ pub fn serve_tcp(
     n_conns: usize,
     record_name: &str,
 ) -> Result<NetReport> {
+    serve_tcp_opts(
+        session,
+        cfg,
+        listener,
+        n_conns,
+        record_name,
+        ServeOptions::default(),
+    )
+}
+
+/// [`serve_tcp`] with fault-tolerance options. With `opts.rejoin` the
+/// listener stays open for the whole run: late connections are parked
+/// by an acceptor thread and adopted by the dispatcher between rounds.
+pub fn serve_tcp_opts(
+    session: &Session,
+    cfg: RunConfig,
+    listener: std::net::TcpListener,
+    n_conns: usize,
+    record_name: &str,
+    opts: ServeOptions,
+) -> Result<NetReport> {
     let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n_conns);
     for i in 0..n_conns {
         let (stream, addr) = listener.accept().context("accepting client")?;
@@ -133,7 +237,62 @@ pub fn serve_tcp(
         transports
             .push(Box::new(super::transport::TcpTransport::from_stream(stream)?));
     }
-    serve_transports(session, cfg, transports, record_name)
+    if !opts.rejoin {
+        return serve_transports_inner(
+            session, cfg, transports, record_name, &opts, None,
+        );
+    }
+    listener
+        .set_nonblocking(true)
+        .context("setting listener non-blocking for the rejoin acceptor")?;
+    let inbox: Arc<JoinInbox> = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let inbox = Arc::clone(&inbox);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, addr)) => {
+                        match super::transport::TcpTransport::from_stream(stream)
+                        {
+                            Ok(t) => {
+                                log::info!(
+                                    "late connection from {addr} parked for \
+                                     rejoin"
+                                );
+                                inbox
+                                    .lock()
+                                    .unwrap_or_else(|p| p.into_inner())
+                                    .push(Box::new(t) as Box<dyn Transport>);
+                            }
+                            Err(e) => log::warn!(
+                                "late connection from {addr}: {e:#}"
+                            ),
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(POLL_TICK);
+                    }
+                    Err(e) => {
+                        log::warn!("rejoin accept failed: {e:#}");
+                        std::thread::sleep(POLL_TICK);
+                    }
+                }
+            }
+        })
+    };
+    let out = serve_transports_inner(
+        session,
+        cfg,
+        transports,
+        record_name,
+        &opts,
+        Some(&inbox),
+    );
+    stop.store(true, Ordering::SeqCst);
+    let _ = acceptor.join();
+    out
 }
 
 /// Which connection — and which virtual lane on it — owns a logical
@@ -144,12 +303,17 @@ struct LaneAddr {
     lane: u32,
 }
 
-/// Pop the next *message* event, turning closes/errors into errors.
+/// Pop the next *message* event, turning closes/errors into errors —
+/// the fail-stop view the locked SFLV1/V2 path keeps (churn tolerance
+/// would change what the locked baselines measure).
 fn next_msg(events: &EventQueue) -> Result<(usize, Msg)> {
     match events.pop() {
         (conn, Event::Msg(m)) => Ok((conn, m)),
         (conn, Event::Closed) => {
             bail!("connection {conn} closed mid-protocol")
+        }
+        (conn, Event::PeerDisconnected { detail, .. }) => {
+            bail!("connection {conn} dropped mid-protocol: {detail}")
         }
         (conn, Event::Err(e)) => bail!("connection {conn} failed: {e}"),
     }
@@ -175,8 +339,38 @@ fn sum_counters(counters: &[Arc<WireCounters>]) -> WireRoundStats {
 pub fn serve_transports(
     session: &Session,
     cfg: RunConfig,
+    transports: Vec<Box<dyn Transport>>,
+    record_name: &str,
+) -> Result<NetReport> {
+    serve_transports_inner(
+        session,
+        cfg,
+        transports,
+        record_name,
+        &ServeOptions::default(),
+        None,
+    )
+}
+
+/// [`serve_transports`] with fault-tolerance options (the in-process
+/// chaos harness drives halt/restore/deadline through this).
+pub fn serve_transports_opts(
+    session: &Session,
+    cfg: RunConfig,
+    transports: Vec<Box<dyn Transport>>,
+    record_name: &str,
+    opts: &ServeOptions,
+) -> Result<NetReport> {
+    serve_transports_inner(session, cfg, transports, record_name, opts, None)
+}
+
+fn serve_transports_inner(
+    session: &Session,
+    cfg: RunConfig,
     mut transports: Vec<Box<dyn Transport>>,
     record_name: &str,
+    opts: &ServeOptions,
+    joiners: Option<&JoinInbox>,
 ) -> Result<NetReport> {
     if transports.is_empty() {
         bail!("serve: need at least one client connection");
@@ -184,6 +378,36 @@ pub fn serve_transports(
     cfg.validate()?;
     let n_conns = transports.len();
     let cfg_json = cfg.to_json().to_string();
+
+    // ---- restore: the checkpoint is loaded BEFORE the handshake — the
+    // Assign frames carry the restart round and the per-client phase
+    // counts the fresh clients fast-forward by.
+    let restored: Option<Checkpoint> = match &opts.restore {
+        None => None,
+        Some(path) => {
+            let ck = checkpoint::load(path)?;
+            if ck.cfg_json != cfg_json {
+                bail!(
+                    "checkpoint at {} was taken under a different config \
+                     (byte-for-byte mismatch); a restored run must continue \
+                     the exact experiment it checkpointed",
+                    path.display()
+                );
+            }
+            log::info!(
+                "restoring from {} at round {}",
+                path.display(),
+                ck.state.round_idx
+            );
+            Some(ck)
+        }
+    };
+    let start_round =
+        restored.as_ref().map_or(0, |c| c.state.round_idx as usize);
+    let phase_counts: BTreeMap<usize, u64> =
+        restored.as_ref().map(|c| c.phases.clone()).unwrap_or_default();
+    let prior_rounds: Vec<RoundRecord> =
+        restored.as_ref().map(|c| c.rounds.clone()).unwrap_or_default();
 
     // ---- handshake pass 1: every Hello, for the lane declarations.
     // Lane→client assignment needs the GLOBAL lane count, so no Assign
@@ -237,16 +461,19 @@ pub fn serve_transports(
                 .filter(|&i| i % total_lanes == next_global)
                 .map(|i| i as u32)
                 .collect();
+            let phases = phase_vec(&ids, &phase_counts);
             t.send(&Msg::Assign {
                 lane: k,
                 client_ids: ids,
                 config: cfg_json.clone(),
+                rejoin_round: start_round as u32,
+                phases,
             })?;
             next_global += 1;
         }
     }
 
-    let counters: Vec<Arc<WireCounters>> =
+    let mut counters: Vec<Arc<WireCounters>> =
         transports.iter().map(|t| t.counters()).collect();
 
     // ---- split: write halves stay with the orchestrator, read sides
@@ -259,57 +486,99 @@ pub fn serve_transports(
         pconns.push(PollConn { conn: j, src, counters: counters[j].clone() });
     }
     let events = EventQueue::new();
+    // rejoined connections are parked here for a running poll shard to
+    // adopt; the flag releases shards parked on an empty inbox at exit
+    let shard_inbox: Mutex<Vec<PollConn>> = Mutex::new(Vec::new());
+    let shard_stop = AtomicBool::new(false);
 
     let mut driver = Driver::new(session, cfg)?;
     driver.warmup()?;
+    if let Some(ck) = restored {
+        driver.import_state(ck.state)?;
+    }
 
-    let mut report: Option<(RunRecord, u64)> = None;
+    let mut outcome: Option<RoundsOutcome> = None;
     let mut run_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
         for shard in shard_conns(pconns, DEFAULT_SHARDS) {
             let events = &events;
-            scope.spawn(move || poll_shard(shard, events));
+            let inbox = joiners.map(|_| &shard_inbox);
+            let stop = &shard_stop;
+            scope.spawn(move || poll_shard_adopt(shard, events, inbox, stop));
         }
 
+        let mut ctx = RoundsCtx {
+            txs: &mut txs,
+            events: &events,
+            owner: &owner,
+            lanes_per_conn: &lanes_per_conn,
+            total_lanes,
+            counters: &mut counters,
+            opts,
+            cfg_json: &cfg_json,
+            joiners,
+            shard_inbox: &shard_inbox,
+        };
         match run_rounds(
             &mut driver,
-            &mut txs,
-            &events,
-            &owner,
-            total_lanes,
-            &counters,
+            &mut ctx,
+            start_round,
+            prior_rounds,
+            phase_counts,
             record_name,
         ) {
-            Ok(r) => report = Some(r),
+            Ok(o) => outcome = Some(o),
             Err(e) => run_err = Some(e),
         }
 
         // End of run (or abort): tell every client to go home — this is
         // also what unblocks the poll loops, since clients close their
         // sockets once they see the Shutdown.
-        let reason = match &run_err {
-            None => "run complete".to_string(),
-            Some(e) => format!("server error: {e:#}"),
+        let reason = match (&run_err, &outcome) {
+            (Some(e), _) => format!("server error: {e:#}"),
+            (None, Some(o)) => o
+                .stop_reason
+                .clone()
+                .unwrap_or_else(|| "run complete".to_string()),
+            (None, None) => "run complete".to_string(),
         };
-        for tx in &mut txs {
+        for tx in txs.iter_mut() {
             let _ = tx.send(&Msg::Shutdown { reason: reason.clone() });
         }
         drop(txs); // loopback: closes the server→client pipes
+        shard_stop.store(true, Ordering::SeqCst);
     });
     if let Some(e) = run_err {
         return Err(e);
     }
-    let (record, nacks_sent) = report.expect("run produced no report");
+    let o = outcome.expect("run produced no report");
 
     Ok(NetReport {
-        record,
+        record: o.rec,
         final_theta_l: driver.theta_l.clone(),
         final_theta_s: driver.theta_s.clone(),
         wire: sum_counters(&counters),
-        nacks_sent,
+        nacks_sent: o.nacks_sent,
         connections: n_conns,
         lanes: total_lanes,
+        disconnects: o.churn.disconnects,
+        mid_frame_disconnects: o.churn.mid_frame,
+        clients_cut: o.churn.clients_cut,
     })
+}
+
+/// The `Assign.phases` vector for a lane's client list: completed local
+/// phases per client, for the loader fast-forward after restore/rejoin.
+fn phase_vec(ids: &[u32], phase_counts: &BTreeMap<usize, u64>) -> Vec<u32> {
+    ids.iter()
+        .map(|&i| {
+            phase_counts
+                .get(&(i as usize))
+                .copied()
+                .unwrap_or(0)
+                .min(u32::MAX as u64) as u32
+        })
+        .collect()
 }
 
 /// Per-participant collection state for one decoupled round.
@@ -321,6 +590,39 @@ struct Collected {
     gscales: Vec<f32>,
     theta: Option<Vec<f32>>,
     done: Option<(u64, u64, f64, f64)>, // comm, flops, lane_time, lane_idle
+}
+
+/// Churn accounting for one run, surfaced as summary keys
+/// (`net_disconnects`, `net_mid_frame`, `clients_cut`) and
+/// [`NetReport`] fields.
+#[derive(Default)]
+struct Churn {
+    disconnects: u64,
+    mid_frame: u64,
+    clients_cut: u64,
+}
+
+/// Everything `run_rounds` borrows from the serve setup.
+struct RoundsCtx<'a> {
+    txs: &'a mut Vec<Box<dyn TxHalf>>,
+    events: &'a EventQueue,
+    owner: &'a [LaneAddr],
+    lanes_per_conn: &'a [u32],
+    total_lanes: usize,
+    counters: &'a mut Vec<Arc<WireCounters>>,
+    opts: &'a ServeOptions,
+    cfg_json: &'a str,
+    joiners: Option<&'a JoinInbox>,
+    shard_inbox: &'a Mutex<Vec<PollConn>>,
+}
+
+struct RoundsOutcome {
+    rec: RunRecord,
+    nacks_sent: u64,
+    churn: Churn,
+    /// set when the run ended early but cleanly (signal shutdown);
+    /// becomes the `Shutdown` reason instead of "run complete"
+    stop_reason: Option<String>,
 }
 
 /// Reconstruct one client's end-of-phase θ from its lean wire record
@@ -364,25 +666,228 @@ fn replay_theta(
         .context("replaying seeds-mode update")
 }
 
+/// An older round stamp is late traffic from a straggler that was cut
+/// at a deadline and is only now finishing its phase — tolerated so one
+/// slow client cannot wedge the protocol. A *future* round is always a
+/// violation. Returns whether the message is late (caller drops it).
+fn late_round(got: u32, now: u32, what: &str) -> Result<bool> {
+    if got > now {
+        bail!("{what}: round {got} is ahead of the open round {now}");
+    }
+    Ok(got < now)
+}
+
+/// NACK an upload that arrived past its round's deadline — the uploader
+/// blocks on its ack, so dropping it silently would wedge the client.
+fn late_nack(
+    tx: &mut Box<dyn TxHalf>,
+    ci: usize,
+    round: u32,
+    step: u32,
+) -> Result<()> {
+    tx.send(&Msg::UploadAck {
+        client: ci as u32,
+        round,
+        step,
+        accepted: false,
+        reason: "arrived after the round deadline".into(),
+    })
+}
+
+/// Mark `conn` dead and cut every participant it owns out of the open
+/// round. Participants that already finished are dropped too: their
+/// alignment round-trip and summary can no longer reach the peer, so
+/// their θ must not enter this round's aggregate. Idempotent.
+#[allow(clippy::too_many_arguments)]
+fn cut_conn(
+    conn: usize,
+    why: &str,
+    mid_frame: bool,
+    round: usize,
+    participants: &[usize],
+    owner: &[LaneAddr],
+    dead: &mut [bool],
+    done: &mut BTreeSet<usize>,
+    cut: &mut BTreeSet<usize>,
+    sim: &mut RoundSim,
+    churn: &mut Churn,
+) {
+    if dead[conn] {
+        return;
+    }
+    dead[conn] = true;
+    churn.disconnects += 1;
+    if mid_frame {
+        churn.mid_frame += 1;
+    }
+    log::warn!("conn {conn} lost in round {round} ({why}); cutting its clients");
+    for &ci in participants {
+        if owner[ci].conn != conn {
+            continue;
+        }
+        done.remove(&ci);
+        if cut.insert(ci) {
+            sim.record_cutoff(ci);
+            churn.clients_cut += 1;
+        }
+    }
+}
+
+/// Write a checkpoint of the driver's current (round-boundary) state.
+/// A no-op without a configured checkpoint path.
+fn write_checkpoint(
+    driver: &Driver,
+    opts: &ServeOptions,
+    cfg_json: &str,
+    rec: &RunRecord,
+    phase_counts: &BTreeMap<usize, u64>,
+) -> Result<()> {
+    let Some(path) = &opts.checkpoint_path else {
+        return Ok(());
+    };
+    let ck = Checkpoint {
+        cfg_json: cfg_json.to_string(),
+        state: driver.export_state(),
+        rounds: rec.rounds.clone(),
+        phases: phase_counts.clone(),
+    };
+    checkpoint::save(&ck, path)?;
+    log::info!(
+        "checkpoint at round {} -> {}",
+        driver.round_index(),
+        path.display()
+    );
+    Ok(())
+}
+
+/// Between rounds, hand every transport the late-join acceptor parked
+/// its handshake and a dead connection's lane block. A rejoiner must
+/// declare the same lane count as the slot it takes over; its `Assign`
+/// carries the next round index (`rejoin_round`) and per-client phase
+/// counts so it never replays a stale round. The connection index is
+/// reused — the poller emitted the old peer's disconnect as its *last*
+/// event, so no stale event can be misattributed to the adoptee.
+#[allow(clippy::too_many_arguments)]
+fn adopt_joiners(
+    ctx: &mut RoundsCtx,
+    dead: &mut [bool],
+    round: usize,
+    phase_counts: &BTreeMap<usize, u64>,
+) -> Result<()> {
+    let Some(inbox) = ctx.joiners else {
+        return Ok(());
+    };
+    let pending: Vec<Box<dyn Transport>> = {
+        let mut g = inbox.lock().unwrap_or_else(|p| p.into_inner());
+        std::mem::take(&mut *g)
+    };
+    'next: for mut t in pending {
+        let (name, protocol, lanes) = match t.recv() {
+            Ok(Some(Msg::Hello { name, protocol, lanes })) => {
+                (name, protocol, lanes)
+            }
+            Ok(other) => {
+                log::warn!("rejoin: expected Hello, got {other:?}; dropping");
+                continue;
+            }
+            Err(e) => {
+                log::warn!("rejoin handshake failed: {e:#}");
+                continue;
+            }
+        };
+        if protocol != VERSION as u32 {
+            let _ = t.send(&Msg::Shutdown {
+                reason: format!(
+                    "protocol {protocol} unsupported (speak {VERSION})"
+                ),
+            });
+            continue;
+        }
+        let Some(j) = (0..dead.len())
+            .find(|&j| dead[j] && ctx.lanes_per_conn[j] == lanes)
+        else {
+            let _ = t.send(&Msg::Shutdown {
+                reason: format!("no dead {lanes}-lane slot to rejoin"),
+            });
+            log::warn!("rejoin from {name}: no dead {lanes}-lane slot");
+            continue;
+        };
+        let off: usize =
+            ctx.lanes_per_conn[..j].iter().map(|&l| l as usize).sum();
+        for k in 0..lanes {
+            let g = off + k as usize;
+            let ids: Vec<u32> = (0..ctx.owner.len())
+                .filter(|&i| i % ctx.total_lanes == g)
+                .map(|i| i as u32)
+                .collect();
+            let phases = phase_vec(&ids, phase_counts);
+            if let Err(e) = t.send(&Msg::Assign {
+                lane: k,
+                client_ids: ids,
+                config: ctx.cfg_json.to_string(),
+                rejoin_round: round as u32,
+                phases,
+            }) {
+                log::warn!("rejoin assign to {name} failed: {e:#}");
+                continue 'next;
+            }
+        }
+        let c = t.counters();
+        let (tx, src) = t.poll_split();
+        ctx.txs[j] = tx;
+        // the dead peer's counter Arc stays in the vec, frozen — so the
+        // cumulative wire sums (and per-round `since` deltas) stay
+        // monotone across the swap
+        ctx.counters.push(c.clone());
+        dead[j] = false;
+        ctx.shard_inbox
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(PollConn { conn: j, src, counters: c });
+        log::info!(
+            "conn {j}: {name} rejoined at round {round} ({lanes} lane(s))"
+        );
+    }
+    Ok(())
+}
+
 fn run_rounds(
     driver: &mut Driver,
-    txs: &mut [Box<dyn TxHalf>],
-    events: &EventQueue,
-    owner: &[LaneAddr],
-    total_lanes: usize,
-    counters: &[Arc<WireCounters>],
+    ctx: &mut RoundsCtx,
+    start_round: usize,
+    prior_rounds: Vec<RoundRecord>,
+    mut phase_counts: BTreeMap<usize, u64>,
     record_name: &str,
-) -> Result<(RunRecord, u64)> {
-    let n_conns = txs.len();
+) -> Result<RoundsOutcome> {
+    let n_conns = ctx.txs.len();
     let mut rec = RunRecord::new(record_name);
-    let t0 = std::time::Instant::now();
+    rec.rounds = prior_rounds;
+    let t0 = Instant::now();
     let mut nacks_sent = 0u64;
     let profile = DeviceProfile::edge_default();
+    let mut dead = vec![false; n_conns];
+    let mut churn = Churn::default();
+    let mut stop_reason: Option<String> = None;
 
     let stream = driver.cfg.drain == DrainMode::Stream;
+    let wall_deadline = driver.cfg.wall_deadline();
 
-    for round in 0..driver.cfg.rounds {
-        let wire_before = sum_counters(counters);
+    'rounds: for round in start_round..driver.cfg.rounds {
+        // graceful shutdown between rounds: the driver sits exactly at a
+        // round boundary, so this state is the restorable one
+        if ctx.opts.watch_signals && signal::requested() {
+            write_checkpoint(driver, ctx.opts, ctx.cfg_json, &rec, &phase_counts)?;
+            log::info!("signal: final checkpoint written, shutting down");
+            stop_reason = Some(format!(
+                "server shutting down on signal before round {round} \
+                 (checkpointed)"
+            ));
+            rec.set("interrupted", 1.0);
+            break 'rounds;
+        }
+        adopt_joiners(ctx, &mut dead, round, &phase_counts)?;
+
+        let wire_before = sum_counters(ctx.counters);
         let participants = driver.sample_participants();
         let parts_u32: Vec<u32> =
             participants.iter().map(|&c| c as u32).collect();
@@ -399,16 +904,52 @@ fn run_rounds(
         // traffic while accepting cross-lane reordering
         let mut next_seq: BTreeMap<(usize, u32), u32> = BTreeMap::new();
         let r32 = round as u32;
+        // participants cut from this round (deadline or churn): their
+        // queued uploads are discarded at the barrier, their θ never
+        // enters FedAvg, and their late traffic is tolerated
+        let mut cut: BTreeSet<usize> = BTreeSet::new();
 
         // broadcasts are built once and serialized per connection —
         // never clone model-sized payloads per receiver
         let barrier_msg =
             Msg::RoundBarrier { round: r32, participants: parts_u32.clone() };
-        for tx in txs.iter_mut() {
-            tx.send(&barrier_msg)?;
+        let mut send_failed: Vec<usize> = Vec::new();
+        for (j, tx) in ctx.txs.iter_mut().enumerate() {
+            if dead[j] {
+                continue;
+            }
+            if let Err(e) = tx.send(&barrier_msg) {
+                log::warn!("conn {j}: barrier send failed: {e:#}");
+                send_failed.push(j);
+            }
+        }
+        if !driver.cfg.algorithm.is_decoupled() && !send_failed.is_empty() {
+            bail!(
+                "connection {} lost at the round {round} barrier (locked \
+                 baselines run fail-stop)",
+                send_failed[0]
+            );
         }
 
         if driver.cfg.algorithm.is_decoupled() {
+            // clients of dead (or just-lost) connections can never
+            // answer this round — cut them up front
+            for j in 0..n_conns {
+                if send_failed.contains(&j) && !dead[j] {
+                    dead[j] = true;
+                    churn.disconnects += 1;
+                }
+                if !dead[j] {
+                    continue;
+                }
+                for &ci in &participants {
+                    if ctx.owner[ci].conn == j && cut.insert(ci) {
+                        sim.record_cutoff(ci);
+                        churn.clients_cut += 1;
+                    }
+                }
+            }
+
             // The real parallelism width is the client-process count.
             sim.set_workers(n_conns.min(participants.len()).max(1));
             let lean = driver.cfg.zo_wire == ZoWireMode::Seeds;
@@ -416,7 +957,10 @@ fn run_rounds(
             let theta0: Vec<f32> =
                 if lean { driver.theta_l.clone() } else { Vec::new() };
             let active: Vec<usize> = (0..n_conns)
-                .filter(|&j| participants.iter().any(|&c| owner[c].conn == j))
+                .filter(|&j| {
+                    !dead[j]
+                        && participants.iter().any(|&c| ctx.owner[c].conn == j)
+                })
                 .collect();
             let sync_msg = Msg::ModelSync {
                 lane: BROADCAST,
@@ -425,14 +969,119 @@ fn run_rounds(
                 theta: driver.theta_l.clone(),
             };
             for &j in &active {
-                txs[j].send(&sync_msg)?;
+                if let Err(e) = ctx.txs[j].send(&sync_msg) {
+                    cut_conn(
+                        j,
+                        &format!("model sync send failed: {e:#}"),
+                        false,
+                        round,
+                        &participants,
+                        ctx.owner,
+                        &mut dead,
+                        &mut BTreeSet::new(),
+                        &mut cut,
+                        &mut sim,
+                        &mut churn,
+                    );
+                }
             }
 
             // ---- collect the fan-out: acks flow back per upload ----
+            // The straggler cutoff clock starts at the barrier; with no
+            // deadline and no signal watching the loop uses the plain
+            // blocking pop — behavior bit-identical to a deadline-free
+            // build.
+            let deadline_at = wall_deadline.map(|d| Instant::now() + d);
+            let needs_poll =
+                deadline_at.is_some() || ctx.opts.watch_signals;
             let mut got: BTreeMap<usize, Collected> = BTreeMap::new();
-            let mut done_count = 0usize;
-            while done_count < participants.len() {
-                let (conn, msg) = next_msg(events)?;
+            let mut done: BTreeSet<usize> = BTreeSet::new();
+            while done.len() + cut.len() < participants.len() {
+                if ctx.opts.watch_signals && signal::requested() {
+                    // abandon the open round; the newest on-disk
+                    // checkpoint (a round boundary) is the restore point
+                    log::info!("signal: abandoning open round {round}");
+                    stop_reason = Some(format!(
+                        "server shutting down on signal during round {round} \
+                         (restore from the last checkpoint)"
+                    ));
+                    rec.set("interrupted", 1.0);
+                    break 'rounds;
+                }
+                let ev = if needs_poll {
+                    let wait = deadline_at
+                        .map(|t| t.saturating_duration_since(Instant::now()))
+                        .unwrap_or(POLL_TICK)
+                        .min(POLL_TICK)
+                        .max(Duration::from_millis(1));
+                    match ctx.events.pop_timeout(wait) {
+                        Some(ev) => ev,
+                        None => {
+                            if let Some(t) = deadline_at {
+                                if Instant::now() >= t {
+                                    // straggler cutoff: finalize with
+                                    // the uploads we have
+                                    for &ci in &participants {
+                                        if !done.contains(&ci)
+                                            && cut.insert(ci)
+                                        {
+                                            sim.record_cutoff(ci);
+                                            churn.clients_cut += 1;
+                                            log::warn!(
+                                                "round {round}: client {ci} \
+                                                 cut at the deadline"
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            continue;
+                        }
+                    }
+                } else {
+                    ctx.events.pop()
+                };
+                let (conn, msg) = match ev {
+                    (conn, Event::Msg(m)) => (conn, m),
+                    (conn, Event::Closed) => {
+                        cut_conn(
+                            conn,
+                            "closed",
+                            false,
+                            round,
+                            &participants,
+                            ctx.owner,
+                            &mut dead,
+                            &mut done,
+                            &mut cut,
+                            &mut sim,
+                            &mut churn,
+                        );
+                        continue;
+                    }
+                    (
+                        conn,
+                        Event::PeerDisconnected { mid_frame, detail, .. },
+                    ) => {
+                        cut_conn(
+                            conn,
+                            &detail,
+                            mid_frame,
+                            round,
+                            &participants,
+                            ctx.owner,
+                            &mut dead,
+                            &mut done,
+                            &mut cut,
+                            &mut sim,
+                            &mut churn,
+                        );
+                        continue;
+                    }
+                    (conn, Event::Err(e)) => {
+                        bail!("connection {conn} failed: {e}")
+                    }
+                };
                 match msg {
                     Msg::Smashed {
                         lane,
@@ -448,17 +1097,50 @@ fn run_rounds(
                                  stream run (expected SmashedSeq)"
                             );
                         }
-                        check_round(r, r32, "Smashed")?;
                         let ci =
-                            check_owned(owner, conn, lane, client, "Smashed")?;
-                        push_and_ack(
+                            check_owned(ctx.owner, conn, lane, client, "Smashed")?;
+                        if late_round(r, r32, "Smashed")? || cut.contains(&ci) {
+                            if late_nack(&mut ctx.txs[conn], ci, r, step)
+                                .is_err()
+                            {
+                                cut_conn(
+                                    conn,
+                                    "late-ack send failed",
+                                    false,
+                                    round,
+                                    &participants,
+                                    ctx.owner,
+                                    &mut dead,
+                                    &mut done,
+                                    &mut cut,
+                                    &mut sim,
+                                    &mut churn,
+                                );
+                            }
+                            continue;
+                        }
+                        if let Err(e) = push_and_ack(
                             &queue,
-                            &mut txs[conn],
+                            &mut ctx.txs[conn],
                             &mut nacks_sent,
                             (ci, r32, step),
                             smashed,
                             targets,
-                        )?;
+                        ) {
+                            cut_conn(
+                                conn,
+                                &format!("ack send failed: {e:#}"),
+                                false,
+                                round,
+                                &participants,
+                                ctx.owner,
+                                &mut dead,
+                                &mut done,
+                                &mut cut,
+                                &mut sim,
+                                &mut churn,
+                            );
+                        }
                     }
                     Msg::SmashedSeq {
                         lane,
@@ -476,36 +1158,84 @@ fn run_rounds(
                                  stream run"
                             );
                         }
-                        check_round(r, r32, "SmashedSeq")?;
                         let ci = check_owned(
-                            owner, conn, lane, client, "SmashedSeq",
+                            ctx.owner, conn, lane, client, "SmashedSeq",
                         )?;
-                        let next = next_seq.entry((conn, lane)).or_insert(1);
-                        if seq != *next {
-                            bail!(
-                                "conn {conn} lane {lane}: upload seq {seq} \
-                                 for client {ci}, expected {next} (reordered, \
-                                 duplicated or dropped frame)"
-                            );
+                        let late = late_round(r, r32, "SmashedSeq")?;
+                        if !late {
+                            // current-round frames consume the lane's seq
+                            // slot whether or not the client was cut —
+                            // the stream interleaves cut and live clients
+                            // multiplexed on one lane, so skipping a cut
+                            // client's slot would trip the next live
+                            // client's ordering check
+                            let next =
+                                next_seq.entry((conn, lane)).or_insert(1);
+                            if seq != *next {
+                                bail!(
+                                    "conn {conn} lane {lane}: upload seq \
+                                     {seq} for client {ci}, expected {next} \
+                                     (reordered, duplicated or dropped frame)"
+                                );
+                            }
+                            *next += 1;
+                            // the sent_at timestamp feeds arithmetic (sort,
+                            // schedule folds) — reject non-finite garbage at
+                            // the ingress, like every other field check
+                            if !sent_at.is_finite() || sent_at < 0.0 {
+                                bail!(
+                                    "conn {conn}: client {ci} upload sent_at \
+                                     {sent_at} is not a finite non-negative \
+                                     time"
+                                );
+                            }
                         }
-                        *next += 1;
-                        // the sent_at timestamp feeds arithmetic (sort,
-                        // schedule folds) — reject non-finite garbage at
-                        // the ingress, like every other field check
-                        if !sent_at.is_finite() || sent_at < 0.0 {
-                            bail!(
-                                "conn {conn}: client {ci} upload sent_at \
-                                 {sent_at} is not a finite non-negative time"
-                            );
+                        if late || cut.contains(&ci) {
+                            if late_nack(&mut ctx.txs[conn], ci, r, step)
+                                .is_err()
+                            {
+                                cut_conn(
+                                    conn,
+                                    "late-ack send failed",
+                                    false,
+                                    round,
+                                    &participants,
+                                    ctx.owner,
+                                    &mut dead,
+                                    &mut done,
+                                    &mut cut,
+                                    &mut sim,
+                                    &mut churn,
+                                );
+                            }
+                            continue;
                         }
-                        let accepted = push_and_ack(
+                        let accepted = match push_and_ack(
                             &queue,
-                            &mut txs[conn],
+                            &mut ctx.txs[conn],
                             &mut nacks_sent,
                             (ci, r32, step),
                             smashed,
                             targets,
-                        )?;
+                        ) {
+                            Ok(a) => a,
+                            Err(e) => {
+                                cut_conn(
+                                    conn,
+                                    &format!("ack send failed: {e:#}"),
+                                    false,
+                                    round,
+                                    &participants,
+                                    ctx.owner,
+                                    &mut dead,
+                                    &mut done,
+                                    &mut cut,
+                                    &mut sim,
+                                    &mut churn,
+                                );
+                                continue;
+                            }
+                        };
                         // arrival-driven server occupancy: only accepted
                         // uploads become server work — a dropped batch is
                         // never serviced, so it must not enter the
@@ -526,9 +1256,12 @@ fn run_rounds(
                         scalars,
                         gscales,
                     } => {
-                        check_round(r, r32, "ZoUpdate")?;
                         let ci =
-                            check_owned(owner, conn, lane, client, "ZoUpdate")?;
+                            check_owned(ctx.owner, conn, lane, client, "ZoUpdate")?;
+                        if late_round(r, r32, "ZoUpdate")? || cut.contains(&ci)
+                        {
+                            continue;
+                        }
                         let e = got.entry(ci).or_default();
                         e.losses =
                             Some(scalars.iter().map(|&l| l as f64).collect());
@@ -536,9 +1269,13 @@ fn run_rounds(
                         e.gscales = gscales;
                     }
                     Msg::ModelSync { lane, client, round: r, theta } => {
-                        check_round(r, r32, "ModelSync")?;
                         let ci =
-                            check_owned(owner, conn, lane, client, "ModelSync")?;
+                            check_owned(ctx.owner, conn, lane, client, "ModelSync")?;
+                        if late_round(r, r32, "ModelSync")?
+                            || cut.contains(&ci)
+                        {
+                            continue;
+                        }
                         got.entry(ci).or_default().theta = Some(theta);
                     }
                     Msg::LocalDone {
@@ -550,16 +1287,20 @@ fn run_rounds(
                         lane_time,
                         lane_idle,
                     } => {
-                        check_round(r, r32, "LocalDone")?;
                         let ci =
-                            check_owned(owner, conn, lane, client, "LocalDone")?;
+                            check_owned(ctx.owner, conn, lane, client, "LocalDone")?;
+                        if late_round(r, r32, "LocalDone")?
+                            || cut.contains(&ci)
+                        {
+                            continue;
+                        }
                         let e = got.entry(ci).or_default();
                         if e.done.is_some() {
                             bail!("conn {conn}: duplicate LocalDone for {ci}");
                         }
                         e.done =
                             Some((comm_bytes, flops, lane_time, lane_idle));
-                        done_count += 1;
+                        done.insert(ci);
                     }
                     other => bail!(
                         "conn {conn}: unexpected {} during fan-out",
@@ -568,8 +1309,12 @@ fn run_rounds(
                 }
             }
 
-            // ---- barrier merge, in participant order (as in-process) ----
+            // ---- barrier merge, in participant order (as in-process);
+            // cut participants contribute nothing ----
             for &ci in &participants {
+                if cut.contains(&ci) {
+                    continue;
+                }
                 let mut c = got.remove(&ci).with_context(|| {
                     format!("client {ci} sent LocalDone data out of band")
                 })?;
@@ -611,15 +1356,24 @@ fn run_rounds(
             // ---- locked SFLV1/V2: strictly sequential per participant ----
             sim.set_workers(1);
             for &ci in &participants {
-                let addr = owner[ci];
-                txs[addr.conn].send(&Msg::ModelSync {
+                if ctx.opts.watch_signals && signal::requested() {
+                    log::info!("signal: abandoning open round {round}");
+                    stop_reason = Some(format!(
+                        "server shutting down on signal during round {round} \
+                         (restore from the last checkpoint)"
+                    ));
+                    rec.set("interrupted", 1.0);
+                    break 'rounds;
+                }
+                let addr = ctx.owner[ci];
+                ctx.txs[addr.conn].send(&Msg::ModelSync {
                     lane: addr.lane,
                     round: r32,
                     client: ci as u32,
                     theta: driver.theta_l.clone(),
                 })?;
                 let theta_end = loop {
-                    let (conn, msg) = next_msg(events)?;
+                    let (conn, msg) = next_msg(ctx.events)?;
                     if conn != addr.conn {
                         bail!(
                             "conn {conn}: traffic during client {ci}'s locked phase"
@@ -635,13 +1389,13 @@ fn run_rounds(
                             targets,
                         } => {
                             check_round(r, r32, "Smashed")?;
-                            check_owned(owner, conn, lane, client, "Smashed")?;
+                            check_owned(ctx.owner, conn, lane, client, "Smashed")?;
                             check_client(client, ci, "Smashed")?;
                             let (loss, g) = driver.locked_server_exchange(
                                 ci, smashed, targets, &mut sim,
                             )?;
                             losses.push(loss);
-                            txs[conn].send(&Msg::CutGrad {
+                            ctx.txs[conn].send(&Msg::CutGrad {
                                 client,
                                 round: r,
                                 step,
@@ -651,7 +1405,7 @@ fn run_rounds(
                         }
                         Msg::ModelSync { lane, client, round: r, theta } => {
                             check_round(r, r32, "ModelSync")?;
-                            check_owned(owner, conn, lane, client, "ModelSync")?;
+                            check_owned(ctx.owner, conn, lane, client, "ModelSync")?;
                             check_client(client, ci, "ModelSync")?;
                             break theta;
                         }
@@ -668,26 +1422,66 @@ fn run_rounds(
         }
 
         // ---- server phase: barrier drain (everything, Eq. 7 order) or
-        // stream-mode stragglers (arrival order) ----
-        let leftovers = driver.server_drain(&queue, &mut sim)?;
-        feedback.extend(leftovers);
+        // stream-mode stragglers (arrival order); cut clients' queued
+        // batches are discarded, and their mid-round feedback (stream)
+        // is dropped — exactly the in-process cutoff semantics ----
+        feedback.extend(driver.server_drain_cut(&queue, &cut, &mut sim)?);
+        if !cut.is_empty() {
+            feedback.retain(|(c, _)| !cut.contains(c));
+        }
         for (ci, g) in feedback {
             driver.note_alignment_accounting(ci, &mut sim);
             let Some(pos) = updated.iter().position(|(c, _)| *c == ci) else {
                 continue;
             };
-            let addr = owner[ci];
-            txs[addr.conn].send(&Msg::AlignGrad {
+            let addr = ctx.owner[ci];
+            if dead[addr.conn] {
+                continue;
+            }
+            if let Err(e) = ctx.txs[addr.conn].send(&Msg::AlignGrad {
                 client: ci as u32,
                 round: r32,
                 g,
-            })?;
+            }) {
+                log::warn!(
+                    "conn {}: align send failed: {e:#}; alignment for \
+                     client {ci} lost",
+                    addr.conn
+                );
+                dead[addr.conn] = true;
+                churn.disconnects += 1;
+                continue;
+            }
             loop {
-                let (conn, msg) = next_msg(events)?;
+                let (conn, ev) = ctx.events.pop();
+                let msg = match ev {
+                    Event::Msg(m) => m,
+                    Event::Closed
+                    | Event::PeerDisconnected { .. } => {
+                        if !dead[conn] {
+                            dead[conn] = true;
+                            churn.disconnects += 1;
+                        }
+                        if conn == addr.conn {
+                            // peer died mid-alignment: its merged θ
+                            // stands un-aligned
+                            log::warn!(
+                                "conn {conn} lost during client {ci}'s \
+                                 alignment"
+                            );
+                            break;
+                        }
+                        continue;
+                    }
+                    Event::Err(e) => bail!("connection {conn} failed: {e}"),
+                };
                 match msg {
                     Msg::ModelSync { lane, client, round: r, theta }
                         if conn == addr.conn && client as usize == ci =>
                     {
+                        if late_round(r, r32, "align ModelSync")? {
+                            continue;
+                        }
                         if lane != addr.lane {
                             bail!(
                                 "conn {conn}: align ModelSync for client {ci} \
@@ -695,10 +1489,31 @@ fn run_rounds(
                                 addr.lane
                             );
                         }
-                        check_round(r, r32, "align ModelSync")?;
                         updated[pos].1 = theta;
                         break;
                     }
+                    // every live participant is done once alignment
+                    // starts, so an upload arriving now — even one
+                    // stamped with the open round — is a cut straggler's
+                    // traffic: NACK it (the uploader blocks on its ack),
+                    // drop the rest
+                    Msg::Smashed { client, round: r, step, .. }
+                    | Msg::SmashedSeq { client, round: r, step, .. }
+                        if r <= r32 =>
+                    {
+                        let cc = client as usize;
+                        if !dead[conn]
+                            && late_nack(&mut ctx.txs[conn], cc, r, step)
+                                .is_err()
+                        {
+                            dead[conn] = true;
+                            churn.disconnects += 1;
+                        }
+                    }
+                    Msg::ZoUpdate { round: r, .. }
+                    | Msg::ModelSync { round: r, .. }
+                    | Msg::LocalDone { round: r, .. }
+                        if r <= r32 => {}
                     other => bail!(
                         "conn {conn}: unexpected {} during alignment",
                         other.name()
@@ -710,27 +1525,61 @@ fn run_rounds(
         // ---- close the round: summary out, then aggregate ----
         let loss_preview =
             losses.iter().sum::<f64>() / losses.len().max(1) as f64;
-        let cum = sum_counters(counters);
+        let cum = sum_counters(ctx.counters);
         let summary_msg = Msg::RoundSummary {
             round: r32,
             train_loss: loss_preview,
             comm_bytes: driver.comm_bytes,
             wire_bytes: cum.bytes_sent + cum.bytes_recv,
         };
-        for tx in txs.iter_mut() {
-            tx.send(&summary_msg)?;
+        for (j, tx) in ctx.txs.iter_mut().enumerate() {
+            if dead[j] {
+                continue;
+            }
+            if let Err(e) = tx.send(&summary_msg) {
+                log::warn!("conn {j}: summary send failed: {e:#}");
+                dead[j] = true;
+                churn.disconnects += 1;
+            }
         }
-        sim.record_wire(sum_counters(counters).since(&wire_before));
+        sim.record_wire(sum_counters(ctx.counters).since(&wire_before));
         let loss = driver.finish_round(&participants, updated, sim, &losses);
         driver.record_round(&mut rec, round, loss, t0)?;
+        // phase accounting: every sampled participant was told to run a
+        // local phase, so every one advanced its data stream by
+        // `local_steps` batches — cut or not (the cut happens server
+        // side; the client still consumes its batches). This is what
+        // `Assign.phases` hands to restored/rejoined clients.
+        for &ci in &participants {
+            *phase_counts.entry(ci).or_insert(0) += 1;
+        }
+        let completed = round + 1;
+        let due = ctx.opts.checkpoint_every > 0
+            && completed % ctx.opts.checkpoint_every == 0;
+        let halting =
+            ctx.opts.halt_after > 0 && completed >= ctx.opts.halt_after;
+        if due || halting {
+            write_checkpoint(driver, ctx.opts, ctx.cfg_json, &rec, &phase_counts)?;
+        }
+        if halting {
+            bail!(
+                "halted by fault-injection hook after round {round} \
+                 (state checkpointed)"
+            );
+        }
     }
 
     driver.finalize_record(&mut rec);
     // multiplexing topology, for tooling that diffs a networked run
     // against an in-process one (`scripts/diff_net_metrics.py --virtual`)
     rec.set("net_conns", n_conns as f64);
-    rec.set("net_lanes", total_lanes as f64);
-    Ok((rec, nacks_sent))
+    rec.set("net_lanes", ctx.total_lanes as f64);
+    // churn accounting: all zero on a healthy run, so these keys never
+    // perturb a bit-identity diff
+    rec.set("net_disconnects", churn.disconnects as f64);
+    rec.set("net_mid_frame", churn.mid_frame as f64);
+    rec.set("clients_cut", churn.clients_cut as f64);
+    Ok(RoundsOutcome { rec, nacks_sent, churn, stop_reason })
 }
 
 /// Push one decoded upload into the round queue and ack it over the

@@ -41,7 +41,15 @@ pub const MAGIC: [u8; 2] = *b"HN";
 /// can validate ownership and upload sequencing per `(connection,
 /// lane)`, not per connection. A classic single-client connection is
 /// simply `lanes == 1`, lane id 0.
-pub const VERSION: u8 = 4;
+/// v5: churn + restore — `Assign` gains `rejoin_round` (the round index
+/// the connection joins at: 0 for a fresh run, the current round for a
+/// mid-run rejoin or a `--restore`d server) and `phases` (per assigned
+/// client, how many completed local phases to fast-forward its data
+/// stream by, so a rejoining/restored client resumes the exact batch
+/// sequence an uninterrupted one would see). Both fields are decoded
+/// unconditionally — v4 and v5 peers refuse each other at the
+/// handshake, as for any bump.
+pub const VERSION: u8 = 5;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -139,8 +147,20 @@ pub enum Msg {
     Hello { name: String, protocol: u32, lanes: u32 },
     /// server → client: logical client ids one lane owns + the full run
     /// config (exact-string JSON, see `RunConfig::to_json`). Sent once
-    /// per declared lane, in lane order.
-    Assign { lane: u32, client_ids: Vec<u32>, config: String },
+    /// per declared lane, in lane order. `rejoin_round` is the round
+    /// index this connection joins at (0 for a fresh run; the open
+    /// round for a mid-run rejoin; the restored round after
+    /// `serve --restore`) — a rejoining client must never replay a
+    /// stale round. `phases` carries, per entry of `client_ids`, the
+    /// number of completed local phases to fast-forward that client's
+    /// data stream by (all zeros for a fresh run).
+    Assign {
+        lane: u32,
+        client_ids: Vec<u32>,
+        config: String,
+        rejoin_round: u32,
+        phases: Vec<u32>,
+    },
     /// server → clients: a round is starting; `participants` is the
     /// sampled cohort (all connections learn it, participants act on it).
     RoundBarrier { round: u32, participants: Vec<u32> },
@@ -400,10 +420,12 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*protocol);
             w.u32(*lanes);
         }
-        Msg::Assign { lane, client_ids, config } => {
+        Msg::Assign { lane, client_ids, config, rejoin_round, phases } => {
             w.u32(*lane);
             w.vec_u32(client_ids);
             w.str(config);
+            w.u32(*rejoin_round);
+            w.vec_u32(phases);
         }
         Msg::RoundBarrier { round, participants } => {
             w.u32(*round);
@@ -510,6 +532,8 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             lane: r.u32()?,
             client_ids: r.vec_u32()?,
             config: r.str()?,
+            rejoin_round: r.u32()?,
+            phases: r.vec_u32()?,
         },
         3 => Msg::RoundBarrier { round: r.u32()?, participants: r.vec_u32()? },
         4 => Msg::ModelSync {
@@ -730,6 +754,8 @@ mod tests {
                 lane: 7,
                 client_ids: vec![0, 2, 4],
                 config: "{\"variant\": \"cnn_c1\"}".into(),
+                rejoin_round: 2,
+                phases: vec![1, 0, 2],
             },
             Msg::RoundBarrier { round: 3, participants: vec![1, 2] },
             Msg::ModelSync {

@@ -40,6 +40,17 @@ impl Xoshiro256pp {
         Self { s: st }
     }
 
+    /// Export the raw 256-bit state (checkpoint/restore: a restored RNG
+    /// continues the exact sequence the saved one would have produced).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an RNG from a [`Self::state`] export.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -163,6 +174,18 @@ mod tests {
     fn xoshiro_deterministic() {
         let mut a = Xoshiro256pp::new(7);
         let mut b = Xoshiro256pp::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_sequence() {
+        let mut a = Xoshiro256pp::new(7);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let mut b = Xoshiro256pp::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

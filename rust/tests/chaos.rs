@@ -1,0 +1,363 @@
+//! Chaos gate: the fault-tolerance acceptance tests for the networked
+//! dispatcher (`net::server` v5).
+//!
+//! * **kill a client mid-round** — a connection that vanishes after the
+//!   round broadcast (simulated `kill -9`: the transport is dropped with
+//!   no protocol goodbye) is cut from the open round, typed-counted
+//!   (`net_disconnects`), and the run finishes every remaining round
+//!   with the surviving cohort.
+//! * **mute straggler + wall deadline** — `--round_deadline_ms` on the
+//!   wire path: a client that handshakes but never uploads is cut at
+//!   the wall-clock deadline every round; the run never wedges and the
+//!   cut roster lands in `clients_cut`.
+//! * **kill-and-restore the server** — `halt_after` (the in-process
+//!   stand-in for `kill -9`, exercised for real by
+//!   `scripts/chaos_smoke.sh`) aborts the run right after a checkpoint;
+//!   a fresh server restoring from that checkpoint with fresh clients
+//!   finishes **bit-identically** to an uninterrupted reference run.
+//! * **signal shutdown** — a pending SIGINT/SIGTERM (raised via the
+//!   test hook `signal::request`) turns into a final checkpoint plus a
+//!   clean `Shutdown` broadcast; clients exit zero, the checkpoint
+//!   loads.
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::checkpoint;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::net::transport::{loopback_pair, Transport};
+use heron_sfl::net::wire::VERSION;
+use heron_sfl::net::{
+    run_client, serve_transports, serve_transports_opts, ClientReport, Msg,
+    NetReport, ServeOptions,
+};
+use heron_sfl::runtime::Session;
+use heron_sfl::util::signal;
+
+mod common;
+use common::with_session;
+
+fn chaos_cfg(rounds: usize) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: Algorithm::Heron,
+        n_clients: 4,
+        rounds,
+        local_steps: 4,
+        upload_every: 2,
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        dataset_size: 1024,
+        eval_every: 1,
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+/// serve + `n_conns` well-behaved `run_client`s over loopback, with
+/// fault-tolerance options on the server side. Returns the server's
+/// result and every client's report (clients must always exit cleanly —
+/// even when the server aborts, its epilogue broadcasts `Shutdown`).
+fn net_serve(
+    session: &Session,
+    cfg: &RunConfig,
+    n_conns: usize,
+    opts: ServeOptions,
+) -> (anyhow::Result<NetReport>, Vec<ClientReport>) {
+    let mut server_ends: Vec<Box<dyn Transport>> = Vec::new();
+    let mut client_ends = Vec::new();
+    for _ in 0..n_conns {
+        let (s, c) = loopback_pair();
+        server_ends.push(Box::new(s));
+        client_ends.push(c);
+    }
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            serve_transports_opts(session, cfg.clone(), server_ends, "chaos", &opts)
+        });
+        let clients: Vec<_> = client_ends
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                scope.spawn(move || {
+                    run_client(session, Box::new(c), &format!("edge-{i}"))
+                })
+            })
+            .collect();
+        let res = server.join().expect("server panicked");
+        let reports = clients
+            .into_iter()
+            .map(|h| h.join().expect("client panicked").expect("client"))
+            .collect();
+        (res, reports)
+    })
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("heron_chaos_{tag}_{}.ckpt", std::process::id()))
+}
+
+/// A connection that dies mid-round with no goodbye: the server must cut
+/// its clients from the open round, keep the survivors' round intact,
+/// finish every remaining round, and report the churn in typed summary
+/// keys — never abort the run.
+#[test]
+fn client_killed_mid_round_is_cut_and_the_run_completes() {
+    with_session(|s| {
+        let cfg = chaos_cfg(3);
+        let (srv0, cli0) = loopback_pair();
+        let (srv1, cli1) = loopback_pair();
+        let ends: Vec<Box<dyn Transport>> =
+            vec![Box::new(srv0), Box::new(srv1)];
+        let (report, good) = std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_transports(s, cfg.clone(), ends, "chaos-kill")
+            });
+            let good = scope
+                .spawn(|| run_client(s, Box::new(cli0), "survivor"));
+            let flaky = scope.spawn(move || {
+                // handshake like a real client, then vanish right after
+                // the first round's model broadcast — a kill -9, not a
+                // protocol goodbye
+                let mut t: Box<dyn Transport> = Box::new(cli1);
+                t.send(&Msg::Hello {
+                    name: "flaky".into(),
+                    protocol: VERSION as u32,
+                    lanes: 1,
+                })
+                .expect("hello");
+                loop {
+                    match t.recv().expect("recv") {
+                        Some(Msg::ModelSync { .. }) | None => break,
+                        Some(_) => continue,
+                    }
+                }
+                // drop(t): the socket just disappears
+            });
+            let report = server
+                .join()
+                .expect("server panicked")
+                .expect("server must survive a killed client");
+            flaky.join().expect("flaky client panicked");
+            let good = good
+                .join()
+                .expect("client panicked")
+                .expect("surviving client");
+            (report, good)
+        });
+
+        assert_eq!(
+            report.record.rounds.len(),
+            cfg.rounds,
+            "every round must finalize despite the kill"
+        );
+        assert!(report.disconnects >= 1, "the kill is typed and counted");
+        // conn 1 owned clients 1 and 3: cut in the open round, and cut
+        // up front in every later round
+        assert_eq!(report.clients_cut, (2 * cfg.rounds) as u64);
+        assert!(report.record.summary["net_disconnects"] >= 1.0);
+        assert_eq!(
+            report.record.summary["clients_cut"],
+            (2 * cfg.rounds) as f64
+        );
+        for r in &report.record.rounds {
+            assert!(r.train_loss.is_finite());
+        }
+        // the survivor saw the whole run and a clean shutdown
+        assert_eq!(good.rounds, cfg.rounds);
+        assert_eq!(good.shutdown_reason, "run complete");
+    });
+}
+
+/// A mute straggler under a wall-clock round deadline: it handshakes and
+/// listens but never uploads. Without the deadline the round would wait
+/// forever; with it, the server finalizes each round with the uploads it
+/// has and cuts the mute clients — every round, without wedging.
+#[test]
+fn mute_straggler_is_cut_at_the_wall_deadline_every_round() {
+    with_session(|s| {
+        let mut cfg = chaos_cfg(2);
+        cfg.round_deadline_ms = 1500; // generous for the loopback survivor
+        cfg.validate().unwrap();
+        let (srv0, cli0) = loopback_pair();
+        let (srv1, cli1) = loopback_pair();
+        let ends: Vec<Box<dyn Transport>> =
+            vec![Box::new(srv0), Box::new(srv1)];
+        let (report, good) = std::thread::scope(|scope| {
+            let server = scope.spawn(|| {
+                serve_transports(s, cfg.clone(), ends, "chaos-deadline")
+            });
+            let good =
+                scope.spawn(|| run_client(s, Box::new(cli0), "prompt"));
+            let mute = scope.spawn(move || {
+                let mut t: Box<dyn Transport> = Box::new(cli1);
+                t.send(&Msg::Hello {
+                    name: "mute".into(),
+                    protocol: VERSION as u32,
+                    lanes: 1,
+                })
+                .expect("hello");
+                // listen politely, upload nothing, leave on Shutdown
+                loop {
+                    match t.recv().expect("recv") {
+                        Some(Msg::Shutdown { .. }) | None => break,
+                        Some(_) => continue,
+                    }
+                }
+            });
+            let report = server
+                .join()
+                .expect("server panicked")
+                .expect("server must cut the mute straggler, not hang");
+            mute.join().expect("mute client panicked");
+            let good = good
+                .join()
+                .expect("client panicked")
+                .expect("prompt client");
+            (report, good)
+        });
+
+        assert_eq!(report.record.rounds.len(), cfg.rounds);
+        assert_eq!(
+            report.clients_cut,
+            (2 * cfg.rounds) as u64,
+            "clients 1 and 3 cut at the deadline every round"
+        );
+        assert_eq!(report.disconnects, 0, "the mute peer never disconnected");
+        assert_eq!(good.rounds, cfg.rounds);
+    });
+}
+
+/// The restore contract: kill the server right after a checkpoint
+/// (`halt_after`, the in-process `kill -9`), bring up a fresh server
+/// from that checkpoint with fresh clients, and the finished run is
+/// **bit-identical** to a never-interrupted reference — per-round train
+/// losses, eval metrics, analytic comm bytes, and both final models.
+#[test]
+fn killed_and_restored_server_finishes_bit_identical() {
+    with_session(|s| {
+        let cfg = chaos_cfg(4);
+        let ckpt = ckpt_path("restore");
+        let _ = std::fs::remove_file(&ckpt);
+
+        // leg A: the uninterrupted reference
+        let (a, _) = net_serve(s, &cfg, 2, ServeOptions::default());
+        let a = a.expect("reference run");
+
+        // leg B1: checkpoint every 2 rounds, crash right after round 2
+        let (b1, b1_clients) = net_serve(s, &cfg, 2, ServeOptions {
+            checkpoint_every: 2,
+            checkpoint_path: Some(ckpt.clone()),
+            halt_after: 2,
+            ..Default::default()
+        });
+        let err = b1.err().expect("halt_after must abort the run");
+        assert!(
+            format!("{err:#}").contains("halted"),
+            "unexpected abort: {err:#}"
+        );
+        assert!(ckpt.exists(), "the crash happened after the checkpoint");
+        // even an aborted server says goodbye: clients exit clean
+        for c in &b1_clients {
+            assert_eq!(c.rounds, 2);
+        }
+
+        // leg B2: fresh server + fresh clients, restored from the
+        // checkpoint — the clients fast-forward their data streams from
+        // the Assign's phase counts
+        let (b2, _) = net_serve(s, &cfg, 2, ServeOptions {
+            restore: Some(ckpt.clone()),
+            ..Default::default()
+        });
+        let b2 = b2.expect("restored run");
+
+        assert_eq!(b2.record.rounds.len(), cfg.rounds);
+        assert_eq!(a.final_theta_l, b2.final_theta_l, "θ_l");
+        assert_eq!(a.final_theta_s, b2.final_theta_s, "θ_s");
+        for (x, y) in a.record.rounds.iter().zip(&b2.record.rounds) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(
+                x.train_loss.to_bits(),
+                y.train_loss.to_bits(),
+                "round {} train loss",
+                x.round
+            );
+            assert_eq!(
+                x.eval_metric.to_bits(),
+                y.eval_metric.to_bits(),
+                "round {} eval metric",
+                x.round
+            );
+            assert_eq!(x.comm_bytes_cum, y.comm_bytes_cum);
+        }
+        let _ = std::fs::remove_file(&ckpt);
+    });
+}
+
+/// A restore under the wrong config must refuse loudly — continuing a
+/// checkpoint into a different experiment would silently corrupt it.
+#[test]
+fn restore_refuses_a_config_mismatch() {
+    with_session(|s| {
+        let cfg = chaos_cfg(2);
+        let ckpt = ckpt_path("mismatch");
+        let _ = std::fs::remove_file(&ckpt);
+        let (r, _) = net_serve(s, &cfg, 1, ServeOptions {
+            checkpoint_every: 1,
+            checkpoint_path: Some(ckpt.clone()),
+            halt_after: 1,
+            ..Default::default()
+        });
+        assert!(r.is_err());
+        assert!(ckpt.exists());
+
+        let mut other = cfg.clone();
+        other.lr_client = 5e-3; // different experiment
+        let (r2, _) = net_serve(s, &other, 1, ServeOptions {
+            restore: Some(ckpt.clone()),
+            ..Default::default()
+        });
+        let err = r2.err().expect("mismatched restore must fail");
+        assert!(
+            format!("{err:#}").contains("different config"),
+            "unexpected error: {err:#}"
+        );
+        let _ = std::fs::remove_file(&ckpt);
+    });
+}
+
+/// A pending shutdown signal (raised through the safe test hook) makes
+/// `serve` write a final boundary checkpoint, broadcast a clean
+/// `Shutdown`, and return Ok — an interrupted run is a restorable exit,
+/// not an error.
+#[test]
+fn signal_request_checkpoints_and_shuts_down_cleanly() {
+    with_session(|s| {
+        let cfg = chaos_cfg(5);
+        let ckpt = ckpt_path("signal");
+        let _ = std::fs::remove_file(&ckpt);
+        signal::reset();
+        signal::request(); // pending before round 0: deterministic
+        let (r, clients) = net_serve(s, &cfg, 2, ServeOptions {
+            checkpoint_path: Some(ckpt.clone()),
+            watch_signals: true,
+            ..Default::default()
+        });
+        signal::reset();
+        let rep = r.expect("signal shutdown is clean, not an error");
+        assert_eq!(rep.record.rounds.len(), 0, "stopped before round 0");
+        assert_eq!(rep.record.summary.get("interrupted"), Some(&1.0));
+        for c in &clients {
+            assert!(
+                c.shutdown_reason.contains("signal"),
+                "client saw: {}",
+                c.shutdown_reason
+            );
+        }
+        let ck = checkpoint::load(&ckpt).expect("final checkpoint loads");
+        assert_eq!(ck.state.round_idx, 0);
+        assert_eq!(ck.cfg_json, cfg.to_json().to_string());
+        let _ = std::fs::remove_file(&ckpt);
+    });
+}

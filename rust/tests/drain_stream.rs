@@ -15,7 +15,13 @@
 //!   seeds trajectory is bit-identical across drain policies (the
 //!   decision `RunConfig::validate` encodes);
 //! * **typed rejection** — `stream` + a locked baseline fails validation
-//!   with a downcastable [`DrainConfigError`], in-process and networked.
+//!   with a downcastable [`DrainConfigError`], in-process and networked;
+//! * **straggler cutoff edges** — `--round_deadline_ms` with zero
+//!   surviving uploads finalizes the round empty (θ untouched, run
+//!   continues); a deadline at/past the slowest lane cuts nobody and is
+//!   bitwise identical to no deadline at all (the comparison is strict
+//!   `>`); and the cutoff composes with `--drain stream` (mid-round
+//!   consumed batches stand, cut θ never enters FedAvg).
 
 use heron_sfl::coordinator::algorithms::Algorithm;
 use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
@@ -271,6 +277,108 @@ fn fsl_sage_streams_with_mid_round_alignment() {
                 "alignment message counts are order-independent"
             );
         }
+    });
+}
+
+/// Deadline edge: a cutoff below even one message's RTT (1 ms virtual
+/// vs the profile's 20 ms rtt floor) cuts every participant every
+/// round. The round must still finalize — empty — and the run must
+/// keep going: θ_l never moves (no θ entered FedAvg), the cut roster
+/// is recorded per round, and the next round samples normally.
+#[test]
+fn deadline_cutting_everyone_finalizes_empty_rounds() {
+    with_session(|s| {
+        let mut c = cfg(DrainMode::Barrier, 2);
+        c.round_deadline_ms = 1;
+        c.validate().unwrap();
+        let mut driver = Driver::new(s, c.clone()).unwrap();
+        let init_theta = driver.theta_l.clone();
+        let rec = driver.run("cut-all").unwrap();
+        assert_eq!(rec.rounds.len(), c.rounds, "every round finalized");
+        assert_eq!(driver.timings.len(), c.rounds);
+        for t in &driver.timings {
+            assert_eq!(
+                t.cut_clients.len(),
+                c.n_clients,
+                "all participants cut at the deadline"
+            );
+        }
+        assert_eq!(driver.theta_l, init_theta, "empty FedAvg leaves θ_l");
+        for r in &rec.rounds {
+            // mean over zero surviving losses is 0, never NaN
+            assert!(r.train_loss.is_finite());
+            assert!(r.eval_metric.is_finite());
+        }
+    });
+}
+
+/// Deadline edge: the cut comparison is strict (`>`), so the tightest
+/// representable deadline at/above the slowest lane's finish time cuts
+/// nobody — and the whole run stays **bitwise identical** to the
+/// deadline-free reference (the bit-identity contract the flag must
+/// preserve when it never fires).
+#[test]
+fn deadline_at_the_slowest_lane_cuts_nobody_and_stays_bitwise() {
+    with_session(|s| {
+        let base = cfg(DrainMode::Barrier, 2);
+        let mut dref = Driver::new(s, base.clone()).unwrap();
+        let rec_ref = dref.run("no-deadline").unwrap();
+        let slowest = dref
+            .timings
+            .iter()
+            .map(|t| t.client_phase)
+            .fold(0.0f64, f64::max);
+        let mut c = base.clone();
+        c.round_deadline_ms = (slowest * 1e3).ceil() as u64;
+        assert!(c.round_deadline_ms > 0);
+        let mut d2 = Driver::new(s, c).unwrap();
+        let rec2 = d2.run("deadline-edge").unwrap();
+        assert_eq!(dref.theta_l, d2.theta_l, "θ_l");
+        assert_eq!(dref.theta_s, d2.theta_s, "θ_s");
+        for (a, b) in rec_ref.rounds.iter().zip(&rec2.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
+        for t in &d2.timings {
+            assert!(t.cut_clients.is_empty(), "strict > cuts nobody at the edge");
+        }
+    });
+}
+
+/// Deadline × `--drain stream`: a deadline that never fires leaves the
+/// stream run bitwise untouched, and an aggressive one composes with
+/// pipelined consumption — batches the server already consumed
+/// mid-round stand (θ_s is allowed to have moved), but a cut client's θ
+/// never enters FedAvg and the run completes every round.
+#[test]
+fn stream_drain_composes_with_the_deadline_cutoff() {
+    with_session(|s| {
+        let mut quiet = cfg(DrainMode::Stream, 1);
+        quiet.round_deadline_ms = 3_600_000; // 1h virtual: never fires
+        let (rec_q, tl_q, ts_q) = run(s, &quiet);
+        let (rec_0, tl_0, ts_0) = run(s, &cfg(DrainMode::Stream, 1));
+        assert_eq!(tl_q, tl_0, "unfired deadline must not perturb θ_l");
+        assert_eq!(ts_q, ts_0, "unfired deadline must not perturb θ_s");
+        for (a, b) in rec_q.rounds.iter().zip(&rec_0.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+        }
+
+        let mut hard = cfg(DrainMode::Stream, 2);
+        hard.round_deadline_ms = 1;
+        let mut d = Driver::new(s, hard.clone()).unwrap();
+        let init = d.theta_l.clone();
+        let rec = d.run("stream-cut").unwrap();
+        assert_eq!(rec.rounds.len(), hard.rounds);
+        for t in &d.timings {
+            assert_eq!(
+                t.cut_clients,
+                (0..hard.n_clients).collect::<Vec<_>>(),
+                "sorted cut roster covers the whole cohort"
+            );
+        }
+        assert_eq!(d.theta_l, init, "cut θ never enters FedAvg");
     });
 }
 

@@ -48,6 +48,8 @@ fn arb_msg(g: &mut Gen) -> Msg {
             lane: g.u64() as u32,
             client_ids: arb_u32s(g, 16),
             config: arb_string(g),
+            rejoin_round: g.u64() as u32,
+            phases: arb_u32s(g, 16),
         },
         2 => Msg::RoundBarrier {
             round: g.u64() as u32,

@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Chaos smoke: the fault-tolerance gate over real localhost TCP
+# (`rust/tests/chaos.rs` pins the same contracts in-process; this script
+# is the kill -9 version). Three legs, one config:
+#
+#   leg A  reference   serve + 2 connect, no faults -> reference record
+#   leg B  client kill kill -9 one connect mid-run; a replacement
+#                      reconnects, takes over the dead lane block, and
+#                      the server finishes every round, reporting the
+#                      churn in typed summary keys (net_disconnects,
+#                      clients_cut)
+#   leg C  server kill kill -9 the server right after its first on-disk
+#                      checkpoint; `serve --restore` with fresh clients
+#                      finishes the run BIT-IDENTICAL to leg A
+#                      (scripts/diff_net_metrics.py, exact float bits)
+#
+# Usage: chaos_smoke.sh <port> <out_dir>
+set -euo pipefail
+
+PORT=$1
+OUT=$2
+BIN=${BIN:-target/release/heron-sfl}
+CONFIG=${CONFIG:-configs/heron_chaos.json}
+mkdir -p "$OUT/ref" "$OUT/churn" "$OUT/restore"
+
+# no port probe — the clients themselves retry until the server listens
+retry_connect() {
+  for _ in $(seq 1 120); do
+    if "$BIN" connect --addr "127.0.0.1:$PORT" --name "$1"; then
+      return 0
+    fi
+    sleep 1
+  done
+  return 1
+}
+
+wait_for_file() {
+  for _ in $(seq 1 240); do
+    if [ -f "$1" ]; then return 0; fi
+    sleep 0.25
+  done
+  echo "timed out waiting for $1" >&2
+  return 1
+}
+
+echo "== chaos leg A: uninterrupted reference =="
+"$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \
+  --out "$OUT/ref" &
+SERVER=$!
+retry_connect ref-0 &
+C0=$!
+retry_connect ref-1 &
+C1=$!
+wait "$C0" "$C1" "$SERVER"
+
+echo "== chaos leg B: kill -9 a client mid-run, a replacement rejoins =="
+"$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \
+  --checkpoint_every 1 --checkpoint_path "$OUT/churn/progress.ckpt" \
+  --out "$OUT/churn" &
+SERVER=$!
+retry_connect steady &
+C0=$!
+# the doomed client gets no retry wrapper — it exists to be killed
+"$BIN" connect --addr "127.0.0.1:$PORT" --name doomed &
+DOOMED=$!
+# round 1's checkpoint on disk == the run is well past the handshake
+wait_for_file "$OUT/churn/progress.ckpt"
+kill -9 "$DOOMED" 2>/dev/null || true
+wait "$DOOMED" 2>/dev/null || true
+# the replacement takes over the dead connection's lane block between
+# rounds (Assign{rejoin_round, phases} fast-forwards its data streams)
+retry_connect revived &
+C2=$!
+wait "$C0" "$C2" "$SERVER"
+python3 - "$OUT/churn/serve.json" <<'EOF'
+import json, sys
+rec = json.load(open(sys.argv[1]))
+s = rec["summary"]
+assert s.get("net_disconnects", 0) >= 1, "the kill was never seen as churn"
+assert s.get("clients_cut", 0) >= 1, "the dead lanes were never cut"
+print(f"churn leg: {s['net_disconnects']:.0f} disconnect(s), "
+      f"{s['clients_cut']:.0f} client slot(s) cut, "
+      f"{len(rec['rounds'])} rounds finalized")
+EOF
+
+echo "== chaos leg C: kill -9 the server after a checkpoint, restore =="
+rm -f "$OUT/restore/server.ckpt"
+"$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \
+  --checkpoint_every 1 --checkpoint_path "$OUT/restore/server.ckpt" &
+SERVER=$!
+( retry_connect first-0 || true ) &
+C0=$!
+( retry_connect first-1 || true ) &
+C1=$!
+wait_for_file "$OUT/restore/server.ckpt"
+kill -9 "$SERVER" 2>/dev/null || true
+wait "$SERVER" 2>/dev/null || true
+# reap the first cohort before the restored server opens the port again,
+# so the fresh clients are the only ones competing for the 2 slots
+kill -9 "$C0" "$C1" 2>/dev/null || true
+pkill -9 -f "connect --addr 127.0.0.1:$PORT" 2>/dev/null || true
+wait "$C0" "$C1" 2>/dev/null || true
+"$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \
+  --restore "$OUT/restore/server.ckpt" --out "$OUT/restore" &
+SERVER=$!
+retry_connect second-0 &
+C0=$!
+retry_connect second-1 &
+C1=$!
+wait "$C0" "$C1" "$SERVER"
+python3 scripts/diff_net_metrics.py \
+  "$OUT/ref/serve.json" "$OUT/restore/serve.json"
+echo "chaos smoke OK: churn survived, restore bit-identical"
