@@ -36,9 +36,17 @@ const CANARY: &str = "perturb_stream_fill_64k";
 const ROUND: &str = "heron_full_round";
 /// Fail the baseline gate when the normalized round mean regresses >25%.
 const REGRESSION_LIMIT: f64 = 1.25;
+/// 64k disabled `span!` sites must stay within this multiple of the 64k
+/// stream-fill canary — a machine-independent ceiling on the "telemetry
+/// off" cost (one relaxed atomic load per site).
+const TELEMETRY: &str = "telemetry_disabled_64k";
+const TELEMETRY_LIMIT: f64 = 8.0;
 
 fn main() -> Result<()> {
     heron_sfl::util::logging::init();
+    // metrics registry on for the whole run (the report dumps it below);
+    // spans stay OFF — `telemetry_disabled_64k` measures exactly that path
+    heron_sfl::telemetry::enable_metrics();
     let session = Session::open_default()?;
     let mut b = Bench::new();
 
@@ -54,6 +62,33 @@ fn main() -> Result<()> {
         "  -> {:.2} M elems/s",
         (1 << 16) as f64 / m.mean_secs() / 1e6
     );
+    let canary_ns = m.mean_ns;
+
+    // the flight recorder with no trace writer installed: 64k span sites
+    // per iteration, each one relaxed AtomicBool load + branch
+    b.run(TELEMETRY, || {
+        let mut acc = 0u64;
+        for i in 0..(1u64 << 16) {
+            let _s = heron_sfl::span!("bench_site", i = i);
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+    });
+    let tel_ns = b.results().last().unwrap().mean_ns;
+    println!(
+        "  -> disabled telemetry: {} per 64k span sites \
+         ({:.2}x canary, limit {TELEMETRY_LIMIT}x)",
+        fmt_ns(tel_ns),
+        tel_ns / canary_ns.max(1.0),
+    );
+    if tel_ns > canary_ns.max(1.0) * TELEMETRY_LIMIT {
+        bail!(
+            "{TELEMETRY} mean {} exceeds {TELEMETRY_LIMIT}x the {CANARY} \
+             canary ({}) — the disabled span path grew a clock read or lock",
+            fmt_ns(tel_ns),
+            fmt_ns(canary_ns),
+        );
+    }
 
     // ZO-SGD quadratic steps: materialized (optimizer-held scratch) vs
     // streamed (O(chunk) regeneration)
@@ -269,6 +304,20 @@ fn main() -> Result<()> {
             mk_barrier,
             mk_stream,
         )?;
+        // dump the live metrics registry (counters/histograms the bench
+        // itself populated — queue waits, client step counters, runtime
+        // totals) into the same report under a `registry.` prefix
+        st.publish_registry();
+        let snap = heron_sfl::telemetry::registry::snapshot();
+        if !snap.is_empty() {
+            let owned: Vec<(String, Value)> = snap
+                .into_iter()
+                .map(|(k, v)| (format!("registry.{k}"), Value::Num(v)))
+                .collect();
+            let extras: Vec<(&str, Value)> =
+                owned.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+            heron_sfl::bench_harness::merge_report(&path, &[], &extras)?;
+        }
         println!("wrote JSON report to {path}");
     }
 
@@ -407,6 +456,26 @@ fn compare_with_baseline(
         "sequential-vs-parallel speedup: baseline {base_speedup:.2}x -> \
          current {speedup:.2}x (delta {speedup_delta:+.2}x)"
     );
+    // informational only — the hard ceiling on disabled-telemetry cost is
+    // the inline canary-multiple gate above; pre-telemetry baselines
+    // simply lack the key
+    match bench_mean(&base, TELEMETRY) {
+        Ok(base_tel) => {
+            let cur_tel = cur(TELEMETRY)?;
+            let tel_norm = (base_tel / base_canary)
+                / (cur_tel / cur_canary).max(1e-12);
+            println!(
+                "{TELEMETRY}: baseline {} -> current {} \
+                 ({tel_norm:.2}x canary-normalized)",
+                fmt_ns(base_tel),
+                fmt_ns(cur_tel),
+            );
+        }
+        Err(_) => println!(
+            "note: baseline lacks {TELEMETRY} — refresh it with \
+             BENCH_OUT={path} cargo bench --bench perf_hotpath to record"
+        ),
+    }
 
     if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
         use std::io::Write;

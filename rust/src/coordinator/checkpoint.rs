@@ -422,6 +422,7 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
 /// a partial file.
 pub fn save(ck: &Checkpoint, path: &Path) -> Result<()> {
     let bytes = encode(ck);
+    let _s = crate::span!("checkpoint_write", bytes = bytes.len());
     let tmp = path.with_extension("tmp");
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {

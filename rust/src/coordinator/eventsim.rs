@@ -145,6 +145,47 @@ impl RoundTiming {
     }
 }
 
+/// Mirror run-level aggregates of the per-round timings into the
+/// telemetry registry (`eventsim.*` / `net.*` gauges). Absolute sets —
+/// idempotent, called at finalize time by the round driver and the
+/// networked dispatcher.
+pub fn publish_timings_registry(timings: &[RoundTiming]) {
+    use crate::telemetry::registry::gauge;
+    gauge("eventsim.rounds").set(timings.len() as f64);
+    gauge("eventsim.virtual_seconds")
+        .set(timings.iter().map(|t| t.total()).sum());
+    gauge("eventsim.client_idle_seconds")
+        .set(timings.iter().map(|t| t.client_idle).sum());
+    gauge("eventsim.host_makespan_seconds")
+        .set(timings.iter().map(|t| t.host_makespan).sum());
+    gauge("eventsim.server_makespan_barrier_seconds")
+        .set(timings.iter().map(|t| t.server_makespan_barrier).sum());
+    gauge("eventsim.server_makespan_stream_seconds")
+        .set(timings.iter().map(|t| t.server_makespan_stream).sum());
+    gauge("eventsim.cut_clients")
+        .set(timings.iter().map(|t| t.cut_clients.len() as f64).sum());
+    let q = |f: fn(&QueueStats) -> f64| -> f64 {
+        timings.iter().map(|t| f(&t.queue)).sum()
+    };
+    gauge("queue.enqueued").set(q(|s| s.enqueued as f64));
+    gauge("queue.processed").set(q(|s| s.processed as f64));
+    gauge("queue.dropped").set(q(|s| s.dropped as f64));
+    gauge("queue.max_depth").set(
+        timings
+            .iter()
+            .map(|t| t.queue.max_depth as f64)
+            .fold(0.0, f64::max),
+    );
+    gauge("net.bytes_sent")
+        .set(timings.iter().map(|t| t.wire.bytes_sent as f64).sum());
+    gauge("net.bytes_recv")
+        .set(timings.iter().map(|t| t.wire.bytes_recv as f64).sum());
+    gauge("net.frames_sent")
+        .set(timings.iter().map(|t| t.wire.frames_sent as f64).sum());
+    gauge("net.frames_recv")
+        .set(timings.iter().map(|t| t.wire.frames_recv as f64).sum());
+}
+
 /// Per-client virtual-time accumulator usable from a worker thread: owns a
 /// copy of the (small, Copy) device profile and accumulates one client's
 /// lane locally, to be merged into the round sim at the barrier.

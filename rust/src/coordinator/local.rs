@@ -342,6 +342,7 @@ pub fn client_local_phase(
     if zo {
         gscales.reserve(ctx.cfg.local_steps * ctx.cfg.n_pert.max(1));
     }
+    let _phase = crate::span!("local_phase", client = ci, round = ctx.round_idx);
 
     for step in 1..=ctx.cfg.local_steps {
         cs.loader.next_batch();
@@ -350,6 +351,7 @@ pub fn client_local_phase(
         let x = x_ref(ctx.task, &cs.loader);
         let y = y_slice(ctx.task, &cs.loader);
         let loss = if zo {
+            let _s = crate::span!("zo_step", client = ci, step = step);
             rt.zo_step(
                 ctx.base,
                 &theta,
@@ -367,6 +369,7 @@ pub fn client_local_phase(
             gscales.extend_from_slice(&rec.gscales);
             rec.loss
         } else {
+            let _s = crate::span!("fo_step", client = ci, step = step);
             rt.fo_step(ctx.base, &theta, x, y, ctx.cfg.lr_client, &mut out)?
         };
         std::mem::swap(&mut theta, &mut out);
@@ -387,6 +390,15 @@ pub fn client_local_phase(
                 &mut comm_bytes,
                 &mut fwd_out,
             )?;
+        }
+    }
+    if crate::telemetry::metrics_enabled() {
+        use crate::telemetry::registry::counter;
+        counter("client.local_steps").add(losses.len() as u64);
+        if zo {
+            // one gscale per probe per step — the probe count is exactly
+            // the lean-upload payload the paper's Remark 4 counts
+            counter("client.zo.probes").add(gscales.len() as u64);
         }
     }
     Ok(LocalOutcome {
@@ -414,6 +426,7 @@ fn upload_smashed(
     comm_bytes: &mut u64,
     fwd_out: &mut Vec<f32>,
 ) -> Result<()> {
+    let _s = crate::span!("upload_smashed", client = ci, step = step);
     rt.client_fwd(
         ctx.base,
         &theta[..ctx.nc],

@@ -267,6 +267,7 @@ impl<'s> Driver<'s> {
     /// ignore the deadline: their per-step training lock co-executes the
     /// server, so there is no asynchronous wait to cut.
     pub fn run_round(&mut self) -> Result<f64> {
+        let _round_span = crate::span!("round", round = self.round_idx);
         let participants = self.sample_participants();
         let mut sim = self.new_sim(&participants);
         let queue = self.round_queue(participants.len());
@@ -639,6 +640,7 @@ impl<'s> Driver<'s> {
     ) -> Result<Vec<(usize, Vec<f32>)>> {
         let mut sage_feedback: Vec<(usize, Vec<f32>)> = Vec::new();
         if self.cfg.algorithm.is_decoupled() {
+            let _s = crate::span!("server_drain", round = self.round_idx);
             let batches =
                 self.cfg.drain.policy().take_at_barrier_cut(queue, cut);
             self.consume_batches(batches, sim, &mut sage_feedback)?;
@@ -1051,6 +1053,17 @@ impl<'s> Driver<'s> {
                 .map(|t| (t.wire.frames_sent + t.wire.frames_recv) as f64)
                 .sum(),
         );
+        // Telemetry dump: mirror the stats structs into the registry and
+        // fold the whole registry into the summary. Gated so a run with
+        // no telemetry flags emits byte-identical records to builds that
+        // predate the flight recorder.
+        if crate::telemetry::metrics_enabled() {
+            self.session.stats().publish_registry();
+            crate::coordinator::eventsim::publish_timings_registry(
+                &self.timings,
+            );
+            crate::telemetry::registry::export_into(&mut rec.summary);
+        }
     }
 
     /// Run the configured number of rounds, recording curves.
@@ -1091,6 +1104,7 @@ fn consume_smashed(
     b: &SmashedBatch,
     want_cutgrad: bool,
 ) -> Result<Option<Vec<f32>>> {
+    let _s = crate::span!("server_consume", client = b.client, step = b.step);
     let cut = if want_cutgrad {
         Some(&mut *srv_cut)
     } else {

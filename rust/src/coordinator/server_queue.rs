@@ -34,9 +34,44 @@ pub struct QueueStats {
     pub max_depth: usize,
 }
 
+impl QueueStats {
+    /// Mirror the counters into the telemetry registry (`queue.*`
+    /// gauges). Absolute sets, so re-publishing is idempotent.
+    pub fn publish_registry(&self) {
+        use crate::telemetry::registry::gauge;
+        gauge("queue.enqueued").set(self.enqueued as f64);
+        gauge("queue.processed").set(self.processed as f64);
+        gauge("queue.dropped").set(self.dropped as f64);
+        gauge("queue.max_depth").set(self.max_depth as f64);
+    }
+}
+
 struct Inner {
     queue: VecDeque<SmashedBatch>,
+    /// Enqueue timestamps (µs since the telemetry epoch), parallel to
+    /// `queue`. Only populated while telemetry metrics are enabled;
+    /// consumers pop defensively so a mid-run enable cannot misalign
+    /// waits by more than the already-queued prefix.
+    enq_us: VecDeque<u64>,
     stats: QueueStats,
+}
+
+impl Inner {
+    /// Observe queue-wait for `n` just-removed batches against the
+    /// `queue.wait_us` histogram (+ a trace instant per batch).
+    fn observe_waits(&mut self, n: usize) {
+        if n == 0 || self.enq_us.is_empty() {
+            return;
+        }
+        let now = crate::telemetry::now_us();
+        let hist = crate::telemetry::registry::histogram("queue.wait_us");
+        for _ in 0..n.min(self.enq_us.len()) {
+            let t = self.enq_us.pop_front().unwrap();
+            let wait = now.saturating_sub(t);
+            hist.observe(wait);
+            crate::telemetry::instant("queue_wait", "us", wait);
+        }
+    }
 }
 
 /// Bounded multi-producer queue. All methods take `&self`, so worker
@@ -51,6 +86,7 @@ impl ServerQueue {
         Self {
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
+                enq_us: VecDeque::new(),
                 stats: QueueStats::default(),
             }),
             capacity: capacity.max(1),
@@ -69,6 +105,9 @@ impl ServerQueue {
             return false;
         }
         g.queue.push_back(batch);
+        if crate::telemetry::metrics_enabled() {
+            g.enq_us.push_back(crate::telemetry::now_us());
+        }
         g.stats.enqueued += 1;
         let depth = g.queue.len();
         g.stats.max_depth = g.stats.max_depth.max(depth);
@@ -82,6 +121,7 @@ impl ServerQueue {
         let b = g.queue.pop_front();
         if b.is_some() {
             g.stats.processed += 1;
+            g.observe_waits(1);
         }
         b
     }
@@ -94,6 +134,7 @@ impl ServerQueue {
         let mut out: Vec<SmashedBatch> = g.queue.drain(..).collect();
         out.sort_by_key(|b| (b.round, b.client, b.step));
         g.stats.processed += out.len() as u64;
+        g.observe_waits(out.len());
         out
     }
 
@@ -105,6 +146,7 @@ impl ServerQueue {
         let mut g = self.lock();
         let out: Vec<SmashedBatch> = g.queue.drain(..).collect();
         g.stats.processed += out.len() as u64;
+        g.observe_waits(out.len());
         out
     }
 

@@ -20,6 +20,8 @@
 //! * [`net`] — wire protocol + transports for networked client↔server
 //!   runs (`serve`/`connect`), bit-identical to the in-process driver
 //! * [`metrics`] — run recording and reporting
+//! * [`telemetry`] — flight recorder: spans (`span!`), the global
+//!   metrics registry, and Chrome-trace export (`--trace_out`)
 //! * [`zo`] — pure-Rust ZO reference + streaming perturbation (Remark 4)
 //! * [`analysis`] — Hessian spectrum tooling (Fig 7)
 //! * [`bench_harness`] — statistical micro-benchmark runner
@@ -33,5 +35,6 @@ pub mod experiments;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod zo;

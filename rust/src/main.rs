@@ -12,6 +12,12 @@
 //!   validate   — execute golden cross-language checks over the artifacts
 //!   costs      — print the Table-I style cost book for a variant
 //!   spectrum   — Hessian eigenvalue density of the client local loss (Fig 7)
+//!   report     — summarize a `--trace_out` flight-recorder trace
+//!
+//! `run`, `serve`, `connect`, and `bench serve-storm` all accept
+//! `--trace_out t.json` (Chrome/Perfetto trace + metrics registry);
+//! `serve`/`run` additionally accept `--stats_every N` for periodic
+//! one-line registry snapshots.
 
 use anyhow::{bail, Context, Result};
 use heron_sfl::analysis::lanczos;
@@ -41,6 +47,7 @@ fn main() {
         "validate" => cmd_validate(&args),
         "costs" => cmd_costs(&args),
         "spectrum" => cmd_spectrum(&args),
+        "report" => cmd_report(&args),
         _ => {
             print_help();
             Ok(())
@@ -89,8 +96,45 @@ fn print_help() {
            socket; default 64) --out report.json (merge a\n\
            heron-sfl-bench-v1 report)\n\
          costs flags: --variant V [--n_pert P]\n\
-         spectrum flags: --variant cnn_c1 [--steps M] [--probes P]"
+         spectrum flags: --variant cnn_c1 [--steps M] [--probes P]\n\
+         observability (run/serve/connect/bench serve-storm):\n\
+           --trace_out t.json (Chrome trace-event JSON — load in Perfetto\n\
+             or summarize with `heron-sfl report t.json`; also dumps the\n\
+             metrics registry into the run summary)\n\
+           --stats_every N (serve/run: log a one-line registry snapshot\n\
+             every N rounds)\n\
+         report: heron-sfl report t.json (per-phase time breakdown +\n\
+           histogram table from a recorded trace)"
     );
+}
+
+/// `--trace_out FILE` starts the flight recorder (spans + metrics) for
+/// this process; `--stats_every N` alone still enables the metrics
+/// registry so the periodic snapshots have data. Returns true when a
+/// trace file was installed and needs [`trace::shutdown`] at exit.
+fn telemetry_from_args(args: &Args, process: &str) -> Result<bool> {
+    if args.get_usize("stats_every", 0) > 0 {
+        heron_sfl::telemetry::enable_metrics();
+    }
+    if let Some(path) = args.get("trace_out") {
+        heron_sfl::telemetry::trace::install(path, process)?;
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+fn telemetry_finish(traced: bool) -> Result<()> {
+    if traced {
+        heron_sfl::telemetry::trace::shutdown()?;
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: heron-sfl report <trace.json>");
+    };
+    heron_sfl::telemetry::trace::report(path)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -101,9 +145,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.apply_args(args)?;
     cfg.validate()?;
     log::info!("{}", cfg.describe());
+    let traced = telemetry_from_args(args, "heron-sfl run")?;
     let session = Session::open_default()?;
     let mut driver = Driver::new(&session, cfg.clone())?;
     let rec = driver.run("run")?;
+    telemetry_finish(traced)?;
     let curve: Vec<f64> = rec
         .rounds
         .iter()
@@ -165,7 +211,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         halt_after: 0,
         watch_signals: true,
         rejoin: true,
+        stats_every: args.get_usize("stats_every", 0),
     };
+    let traced = telemetry_from_args(args, "heron-sfl serve")?;
     // ^C / SIGTERM become a final checkpoint + clean Shutdown broadcast
     heron_sfl::util::signal::reset();
     heron_sfl::util::signal::install();
@@ -173,6 +221,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let report = heron_sfl::net::serve_tcp_opts(
         &session, cfg, listener, conns, "serve", opts,
     )?;
+    telemetry_finish(traced)?;
     print_net_summary(&report);
     if let Some(out) = args.get("out") {
         report.record.save(std::path::Path::new(out))?;
@@ -220,6 +269,7 @@ fn cmd_connect(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7070");
     let name = args.get_or("name", "client");
     let lanes = args.get_usize("virtual", 1);
+    let traced = telemetry_from_args(args, "heron-sfl connect")?;
     let session = Session::open_default()?;
     let transport = heron_sfl::net::TcpTransport::connect(addr)?;
     println!("connected to {addr} as {name} ({lanes} virtual client(s))");
@@ -229,6 +279,7 @@ fn cmd_connect(args: &Args) -> Result<()> {
         name,
         lanes,
     )?;
+    telemetry_finish(traced)?;
     println!(
         "served clients {:?}: {} rounds, {} local phases | wire: {} sent, {} recv | NACKs {} | server said: {}",
         rep.assigned,
@@ -278,8 +329,10 @@ fn cmd_bench_serve_storm(args: &Args) -> Result<()> {
         cfg.describe(),
         conns * lanes,
     );
+    let traced = telemetry_from_args(args, "heron-sfl serve-storm")?;
     let session = Session::open_default()?;
     let p = heron_sfl::net::run_storm(&session, cfg, conns, lanes)?;
+    telemetry_finish(traced)?;
     println!(
         "{} virtual clients / {} sockets: {:.2} rounds/s | mean round {:.1} ms | p99 round {:.1} ms",
         p.total_lanes,

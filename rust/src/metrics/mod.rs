@@ -116,31 +116,60 @@ impl RunRecord {
 
     pub fn save(&self, dir: &Path) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
+        let stem = safe_file_stem(&self.name);
         std::fs::write(
-            dir.join(format!("{}.json", self.name)),
+            dir.join(format!("{stem}.json")),
             self.to_json().to_string_pretty(),
         )?;
-        std::fs::write(dir.join(format!("{}.csv", self.name)), self.to_csv())
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())
+    }
+}
+
+/// Sanitize a run name into a file stem: commas, quotes, path
+/// separators, and other shell/CSV-hostile bytes become `_`, so a run
+/// named `a,b"c/d` cannot corrupt the CSV next to it or escape the
+/// output directory. Empty names fall back to `"run"`.
+pub fn safe_file_stem(name: &str) -> String {
+    let cleaned: String = name
+        .chars()
+        .map(|c| match c {
+            ',' | '"' | '\'' | '/' | '\\' | ':' | '\n' | '\r' | '\t' => '_',
+            c if (c as u32) < 0x20 => '_',
+            c => c,
+        })
+        .collect();
+    if cleaned.is_empty() {
+        "run".to_string()
+    } else {
+        cleaned
     }
 }
 
 /// Render an ASCII sparkline of a series (used by examples to show curves
 /// in the terminal).
 pub fn sparkline(values: &[f64], width: usize) -> String {
-    if values.is_empty() {
+    if values.is_empty() || width == 0 {
         return String::new();
     }
     const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
-    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let finite = values.iter().cloned().filter(|v| v.is_finite());
+    let lo = finite.clone().fold(f64::INFINITY, f64::min);
+    let hi = finite.fold(f64::NEG_INFINITY, f64::max);
     let span = (hi - lo).max(1e-12);
     let step = (values.len() as f64 / width as f64).max(1.0);
     let mut out = String::new();
     let mut i = 0.0;
     while (i as usize) < values.len() && out.chars().count() < width {
         let v = values[i as usize];
-        let b = (((v - lo) / span) * 7.0).round() as usize;
-        out.push(BARS[b.min(7)]);
+        // NaN (and an all-NaN series, where lo stays +inf) clamps to the
+        // low bucket instead of poisoning the index cast
+        let scaled = ((v - lo) / span) * 7.0;
+        let b = if scaled.is_finite() {
+            (scaled.round().max(0.0) as usize).min(7)
+        } else {
+            0
+        };
+        out.push(BARS[b]);
         i += step;
     }
     out
@@ -207,5 +236,43 @@ mod tests {
     fn sparkline_renders() {
         let s = sparkline(&[0.0, 0.5, 1.0], 3);
         assert_eq!(s.chars().count(), 3);
+    }
+
+    #[test]
+    fn sparkline_zero_width_is_empty() {
+        assert_eq!(sparkline(&[0.0, 1.0, 2.0], 0), "");
+    }
+
+    #[test]
+    fn sparkline_clamps_nan_to_low_bucket() {
+        let s = sparkline(&[f64::NAN, 0.0, 1.0], 3);
+        assert_eq!(s.chars().count(), 3);
+        assert_eq!(s.chars().next(), Some('▁'));
+        // all-NaN series must not panic either
+        let all = sparkline(&[f64::NAN, f64::NAN], 2);
+        assert_eq!(all, "▁▁");
+    }
+
+    #[test]
+    fn safe_file_stem_escapes_hostile_names() {
+        assert_eq!(safe_file_stem("plain-name_1"), "plain-name_1");
+        assert_eq!(safe_file_stem("a,b\"c/d"), "a_b_c_d");
+        assert_eq!(safe_file_stem("up\\..:down\n"), "up_.._down_");
+        assert_eq!(safe_file_stem(""), "run");
+    }
+
+    #[test]
+    fn save_with_hostile_name_stays_in_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "heron_metrics_test_{}",
+            std::process::id()
+        ));
+        let mut r = rec();
+        r.name = "evil,name\"quoted/slashed".to_string();
+        r.save(&dir).unwrap();
+        let stem = safe_file_stem(&r.name);
+        assert!(dir.join(format!("{stem}.json")).exists());
+        assert!(dir.join(format!("{stem}.csv")).exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -138,6 +138,7 @@ struct NetSink<'a> {
 
 impl NetSink<'_> {
     fn exchange(&self, b: SmashedBatch, tag: UploadTag) -> Result<bool> {
+        let (up_client, up_step) = (b.client, b.step);
         let mut g = self.t.lock().unwrap_or_else(|p| p.into_inner());
         let msg = if self.stream {
             Msg::SmashedSeq {
@@ -161,6 +162,7 @@ impl NetSink<'_> {
             }
         };
         g.send(&msg)?;
+        let _ack = crate::span!("upload_ack_wait", client = up_client, step = up_step);
         match g.recv()? {
             Some(Msg::UploadAck { accepted, reason, .. }) => {
                 if !accepted {
@@ -223,6 +225,7 @@ pub fn run_client_virtual(
     if lanes == 0 {
         bail!("connect: need at least one lane");
     }
+    crate::telemetry::trace::set_thread_label(&format!("client-{name}"));
     let counters = transport.counters();
     let t = Mutex::new(transport);
     send(&t, &Msg::Hello {
@@ -380,6 +383,7 @@ pub fn run_client_virtual(
                     .filter(|c| participants.contains(&(*c as u32)))
                     .collect();
                 mine.sort_unstable();
+                let _round_span = crate::span!("client_round", round = round);
                 let ctx = LocalCtx {
                     session,
                     cfg: &cfg,
@@ -467,6 +471,8 @@ pub fn run_client_virtual(
                          assigned to lane {own}"
                     );
                 }
+                let _round_span =
+                    crate::span!("client_round", round = round, client = client);
                 let theta_end = match locked_phase(
                     session,
                     &t,

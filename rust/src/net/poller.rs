@@ -345,6 +345,8 @@ fn drain_frames(
 ) -> Result<(), WireError> {
     while let Some((msg, used)) = reasm.next_frame()? {
         conn.counters.note_recv(used as u64);
+        crate::telemetry::note_rx(msg.tag(), used as u64);
+        crate::telemetry::instant("wire_recv", "tag", msg.tag() as u64);
         events.push(conn.conn, Event::Msg(msg));
     }
     Ok(())

@@ -172,6 +172,9 @@ pub struct ServeOptions {
     /// Keep accepting TCP connections after the run starts so a killed
     /// client can rejoin a dead connection's lane block between rounds.
     pub rejoin: bool,
+    /// Log a one-line telemetry-registry snapshot every this many
+    /// completed rounds (0 = never). Implies the metrics registry.
+    pub stats_every: usize,
 }
 
 /// Parked transports from the late-join acceptor, awaiting their
@@ -500,11 +503,18 @@ fn serve_transports_inner(
     let mut outcome: Option<RoundsOutcome> = None;
     let mut run_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
-        for shard in shard_conns(pconns, DEFAULT_SHARDS) {
+        for (si, shard) in
+            shard_conns(pconns, DEFAULT_SHARDS).into_iter().enumerate()
+        {
             let events = &events;
             let inbox = joiners.map(|_| &shard_inbox);
             let stop = &shard_stop;
-            scope.spawn(move || poll_shard_adopt(shard, events, inbox, stop));
+            scope.spawn(move || {
+                crate::telemetry::trace::set_thread_label(&format!(
+                    "poll-shard-{si}"
+                ));
+                poll_shard_adopt(shard, events, inbox, stop)
+            });
         }
 
         let mut ctx = RoundsCtx {
@@ -872,7 +882,9 @@ fn run_rounds(
     let stream = driver.cfg.drain == DrainMode::Stream;
     let wall_deadline = driver.cfg.wall_deadline();
 
+    crate::telemetry::trace::set_thread_label("orchestrator");
     'rounds: for round in start_round..driver.cfg.rounds {
+        let _round_span = crate::span!("round", round = round);
         // graceful shutdown between rounds: the driver sits exactly at a
         // round boundary, so this state is the restorable one
         if ctx.opts.watch_signals && signal::requested() {
@@ -1554,6 +1566,18 @@ fn run_rounds(
             *phase_counts.entry(ci).or_insert(0) += 1;
         }
         let completed = round + 1;
+        if ctx.opts.stats_every > 0 && completed % ctx.opts.stats_every == 0 {
+            // refresh the gauges the registry only mirrors at finalize,
+            // then log the whole registry as one k=v line
+            driver.session.stats().publish_registry();
+            crate::coordinator::eventsim::publish_timings_registry(
+                &driver.timings,
+            );
+            log::info!(
+                "[stats] round {round}: {}",
+                crate::telemetry::registry::snapshot_line()
+            );
+        }
         let due = ctx.opts.checkpoint_every > 0
             && completed % ctx.opts.checkpoint_every == 0;
         let halting =
@@ -1569,6 +1593,22 @@ fn run_rounds(
         }
     }
 
+    // server-side totals into the registry BEFORE finalize_record folds
+    // the registry into the summary (gated inside: metrics off = no-op
+    // lookups never happen)
+    if crate::telemetry::metrics_enabled() {
+        use crate::telemetry::registry::gauge;
+        let cum = sum_counters(ctx.counters);
+        gauge("net.total.bytes_sent").set(cum.bytes_sent as f64);
+        gauge("net.total.bytes_recv").set(cum.bytes_recv as f64);
+        gauge("net.total.frames_sent").set(cum.frames_sent as f64);
+        gauge("net.total.frames_recv").set(cum.frames_recv as f64);
+        gauge("net.conns").set(n_conns as f64);
+        gauge("net.lanes").set(ctx.total_lanes as f64);
+        gauge("net.nacks_sent").set(nacks_sent as f64);
+        gauge("net.disconnects").set(churn.disconnects as f64);
+        gauge("net.clients_cut").set(churn.clients_cut as f64);
+    }
     driver.finalize_record(&mut rec);
     // multiplexing topology, for tooling that diffs a networked run
     // against an in-process one (`scripts/diff_net_metrics.py --virtual`)

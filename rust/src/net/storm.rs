@@ -139,6 +139,18 @@ pub fn run_storm(
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = lat.iter().sum::<f64>() / lat.len().max(1) as f64;
 
+    if crate::telemetry::metrics_enabled() {
+        use crate::telemetry::registry::gauge;
+        gauge("storm.conns").set(conns as f64);
+        gauge("storm.lanes_per_conn").set(lanes_per_conn as f64);
+        gauge("storm.rounds_per_sec").set(rounds as f64 / wall.max(1e-12));
+        gauge("storm.p99_round_seconds")
+            .set(percentile_nearest_rank(&lat, 0.99));
+        gauge("storm.nacks").set(report.nacks_sent as f64);
+        gauge("storm.wire_bytes")
+            .set((report.wire.bytes_sent + report.wire.bytes_recv) as f64);
+    }
+
     Ok(StormPoint {
         conns,
         lanes_per_conn,

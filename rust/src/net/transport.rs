@@ -169,11 +169,14 @@ impl Drop for LoopbackTx {
 
 impl TxHalf for LoopbackTx {
     fn send(&mut self, msg: &Msg) -> Result<()> {
+        let tag = msg.tag();
         let frame = wire::encode_frame_checked(msg)
             .with_context(|| format!("loopback: encoding {}", msg.name()))?;
         let n = frame.len() as u64;
+        let _s = crate::span!("wire_send", tag = tag, bytes = n);
         self.pipe.push(frame)?;
         self.counters.note_sent(n);
+        crate::telemetry::note_tx(tag, n);
         Ok(())
     }
 }
@@ -194,6 +197,8 @@ impl RxHalf for LoopbackRx {
             bail!("loopback: frame has {} trailing bytes", frame.len() - used);
         }
         self.counters.note_recv(used as u64);
+        crate::telemetry::note_rx(msg.tag(), used as u64);
+        crate::telemetry::instant("wire_recv", "tag", msg.tag() as u64);
         Ok(Some(msg))
     }
 }
@@ -299,9 +304,11 @@ pub struct TcpTx {
 
 impl TxHalf for TcpTx {
     fn send(&mut self, msg: &Msg) -> Result<()> {
+        let _s = crate::span!("wire_send", tag = msg.tag());
         let n = wire::write_frame(&mut self.writer, msg)
             .with_context(|| format!("tcp: sending {}", msg.name()))?;
         self.counters.note_sent(n);
+        crate::telemetry::note_tx(msg.tag(), n);
         Ok(())
     }
 }
@@ -316,6 +323,8 @@ impl RxHalf for TcpRx {
         match wire::read_frame(&mut self.reader).context("tcp: reading frame")? {
             Some((msg, n)) => {
                 self.counters.note_recv(n);
+                crate::telemetry::note_rx(msg.tag(), n);
+                crate::telemetry::instant("wire_recv", "tag", msg.tag() as u64);
                 Ok(Some(msg))
             }
             None => Ok(None),
@@ -337,6 +346,8 @@ impl TxHalf for NbTcpTx {
     fn send(&mut self, msg: &Msg) -> Result<()> {
         let frame = wire::encode_frame_checked(msg)
             .with_context(|| format!("tcp: encoding {}", msg.name()))?;
+        let _s =
+            crate::span!("wire_send", tag = msg.tag(), bytes = frame.len());
         let mut off = 0usize;
         while off < frame.len() {
             match self.stream.write(&frame[off..]) {
@@ -357,6 +368,7 @@ impl TxHalf for NbTcpTx {
             }
         }
         self.counters.note_sent(frame.len() as u64);
+        crate::telemetry::note_tx(msg.tag(), frame.len() as u64);
         Ok(())
     }
 }

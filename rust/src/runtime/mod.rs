@@ -73,6 +73,24 @@ impl RuntimeStats {
             self.feature_cache_hits as f64 / total as f64
         }
     }
+
+    /// Mirror the counters into the telemetry registry (`runtime.*`
+    /// gauges). Absolute sets, so re-publishing is idempotent.
+    pub fn publish_registry(&self) {
+        use crate::telemetry::registry::gauge;
+        gauge("runtime.invocations").set(self.invocations as f64);
+        gauge("runtime.exec_seconds").set(self.exec_seconds);
+        gauge("runtime.marshal_seconds").set(self.marshal_seconds);
+        gauge("runtime.compile_seconds").set(self.compile_seconds);
+        gauge("runtime.bytes_in").set(self.bytes_in as f64);
+        gauge("runtime.bytes_out").set(self.bytes_out as f64);
+        gauge("runtime.feature_cache_hits")
+            .set(self.feature_cache_hits as f64);
+        gauge("runtime.feature_cache_misses")
+            .set(self.feature_cache_misses as f64);
+        gauge("runtime.alloc_avoided_bytes")
+            .set(self.alloc_avoided_bytes as f64);
+    }
 }
 
 pub struct Session {

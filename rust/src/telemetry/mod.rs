@@ -1,0 +1,317 @@
+//! Flight-recorder telemetry (substrate S28): spans, a unified metrics
+//! registry, and Chrome-trace export — dependency-free (std only).
+//!
+//! Three pieces, one switchboard:
+//!
+//! * [`registry`] — a global namespace of lock-free atomic counters,
+//!   gauges, and fixed-bucket histograms (p50/p90/p99 via bucket
+//!   interpolation). The existing ad-hoc stats structs
+//!   (`RuntimeStats`, `QueueStats`, `WireRoundStats`, `NetReport`)
+//!   publish into it at finalize time, so every summary key flows
+//!   through one typed namespace (`runtime.*`, `queue.*`, `net.*`,
+//!   `eventsim.*`) and lands in `RunRecord.summary` /
+//!   `bench_report.json` when telemetry is on.
+//! * [`trace`] — span recording: per-thread ring buffers drained by a
+//!   background writer thread into Chrome trace-event JSON
+//!   (`--trace_out t.jsonl`, loadable in Perfetto / `chrome://tracing`),
+//!   plus the `heron-sfl report` per-phase breakdown reader.
+//! * this module — the [`span!`] macro, the shared monotonic clock the
+//!   stderr logger also stamps from, and the two enable flags.
+//!
+//! ## The contract
+//!
+//! Instrumentation is **bit-invisible**: a span never touches an RNG,
+//! never reads or writes a model float, and never reorders work — it
+//! only reads the monotonic clock and pushes integers into a
+//! thread-local ring. `rust/tests/telemetry.rs` pins traced == untraced
+//! bit-identity for all five algorithms.
+//!
+//! It is also **near-free when disabled**: the off path of
+//! [`Span::enter`] is a single relaxed [`AtomicBool`] load and a branch
+//! — no clock read, no allocation (`telemetry_disabled_64k` in
+//! `benches/perf_hotpath.rs` gates this at a multiple of the
+//! stream-fill canary).
+//!
+//! Two independent switches:
+//!
+//! * **spans** (`spans_enabled`) — flipped by [`trace::install`] when a
+//!   `--trace_out` writer exists to drain the rings;
+//! * **metrics** (`metrics_enabled`) — flipped by [`enable_metrics`]
+//!   (any telemetry flag: `--trace_out`, `--stats_every`); gates the
+//!   per-message-tag wire counters and the registry dump into run
+//!   summaries, so a no-flags run emits byte-identical output to a
+//!   build that predates this module.
+
+pub mod registry;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static SPANS_ON: AtomicBool = AtomicBool::new(false);
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+
+/// Are spans being recorded? One relaxed load — THE disabled-path cost.
+#[inline(always)]
+pub fn spans_enabled() -> bool {
+    SPANS_ON.load(Ordering::Relaxed)
+}
+
+/// Is the metrics registry live (per-tag wire counters, summary dump)?
+#[inline(always)]
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Turn the metrics registry on (idempotent). `trace::install` calls
+/// this too — spans imply metrics.
+pub fn enable_metrics() {
+    METRICS_ON.store(true, Ordering::SeqCst);
+}
+
+pub(crate) fn set_spans(on: bool) {
+    SPANS_ON.store(on, Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------------------
+// the shared clock
+// ---------------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide telemetry epoch. The stderr logger and every span
+/// timestamp share it, so `[   3.21s I]` log lines line up with
+/// `ts=3210000` trace events.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`] (the `ts` unit of Chrome trace events).
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// An open span: records a Chrome complete event (`ph:"X"`) on drop.
+/// Construct via the [`span!`] macro. Holds only `&'static str`s and
+/// integers — never floats, never RNG state.
+pub struct Span {
+    rec: Option<SpanStart>,
+}
+
+struct SpanStart {
+    name: &'static str,
+    k1: &'static str,
+    v1: u64,
+    k2: &'static str,
+    v2: u64,
+    t0: u64,
+}
+
+impl Span {
+    /// Open a span. Disabled path: one relaxed load, no clock read.
+    #[inline]
+    pub fn enter(
+        name: &'static str,
+        k1: &'static str,
+        v1: u64,
+        k2: &'static str,
+        v2: u64,
+    ) -> Span {
+        if !spans_enabled() {
+            return Span { rec: None };
+        }
+        Span {
+            rec: Some(SpanStart { name, k1, v1, k2, v2, t0: now_us() }),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.rec.take() {
+            let end = now_us();
+            trace::record_complete(
+                s.name,
+                s.t0,
+                end.saturating_sub(s.t0),
+                s.k1,
+                s.v1,
+                s.k2,
+                s.v2,
+            );
+        }
+    }
+}
+
+/// Record an instant event (`ph:"i"`) — a point in time with one
+/// integer annotation, e.g. a queue-wait observation stamped at pop.
+#[inline]
+pub fn instant(name: &'static str, k1: &'static str, v1: u64) {
+    if !spans_enabled() {
+        return;
+    }
+    trace::record_instant(name, now_us(), k1, v1);
+}
+
+/// Open a span over a code region; bind the guard (`let _s = span!(…)`)
+/// so it closes at scope exit.
+///
+/// ```ignore
+/// let _s = span!("local_phase", client = ci, round = r);
+/// ```
+///
+/// Argument values are cast to `u64` — identifiers only, never model
+/// state.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::telemetry::Span::enter($name, "", 0, "", 0)
+    };
+    ($name:expr, $k1:ident = $v1:expr) => {
+        $crate::telemetry::Span::enter(
+            $name,
+            stringify!($k1),
+            $v1 as u64,
+            "",
+            0,
+        )
+    };
+    ($name:expr, $k1:ident = $v1:expr, $k2:ident = $v2:expr) => {
+        $crate::telemetry::Span::enter(
+            $name,
+            stringify!($k1),
+            $v1 as u64,
+            stringify!($k2),
+            $v2 as u64,
+        )
+    };
+}
+
+// ---------------------------------------------------------------------------
+// per-message-tag wire accounting (`net.tx.bytes.{msg}` …)
+// ---------------------------------------------------------------------------
+
+/// One direction of per-tag traffic: bytes + frames per message tag.
+struct TagCounters {
+    bytes: Vec<AtomicU64>,
+    frames: Vec<AtomicU64>,
+}
+
+impl TagCounters {
+    fn new() -> Self {
+        TagCounters {
+            bytes: (0..N_TAGS).map(|_| AtomicU64::new(0)).collect(),
+            frames: (0..N_TAGS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn note(&self, tag: u8, bytes: u64) {
+        let i = (tag as usize).min(N_TAGS - 1);
+        self.bytes[i].fetch_add(bytes, Ordering::Relaxed);
+        self.frames[i].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Slots for message tags 1..=13 plus an "unknown" overflow slot.
+const N_TAGS: usize = 15;
+
+static WIRE_TX: OnceLock<TagCounters> = OnceLock::new();
+static WIRE_RX: OnceLock<TagCounters> = OnceLock::new();
+
+/// Account one sent frame under its message tag. Gated on
+/// [`metrics_enabled`] so untraced runs pay one load.
+#[inline]
+pub fn note_tx(tag: u8, bytes: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    WIRE_TX.get_or_init(TagCounters::new).note(tag, bytes);
+}
+
+/// Account one received frame under its message tag.
+#[inline]
+pub fn note_rx(tag: u8, bytes: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    WIRE_RX.get_or_init(TagCounters::new).note(tag, bytes);
+}
+
+/// Human name for a wire message tag (`net::wire::Msg::tag` values).
+pub fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        1 => "hello",
+        2 => "assign",
+        3 => "round_barrier",
+        4 => "model_sync",
+        5 => "zo_update",
+        6 => "smashed",
+        7 => "cut_grad",
+        8 => "align_grad",
+        9 => "upload_ack",
+        10 => "local_done",
+        11 => "round_summary",
+        12 => "shutdown",
+        13 => "smashed_seq",
+        _ => "unknown",
+    }
+}
+
+/// Fold the per-tag wire counters into a snapshot map as
+/// `net.tx.bytes.{msg}` / `net.tx.frames.{msg}` (+ `rx`), skipping
+/// all-zero tags.
+pub(crate) fn wire_tags_into(
+    out: &mut std::collections::BTreeMap<String, f64>,
+) {
+    for (dir, cell) in [("tx", &WIRE_TX), ("rx", &WIRE_RX)] {
+        if let Some(tc) = cell.get() {
+            for tag in 0..N_TAGS {
+                let b = tc.bytes[tag].load(Ordering::Relaxed);
+                let f = tc.frames[tag].load(Ordering::Relaxed);
+                if b == 0 && f == 0 {
+                    continue;
+                }
+                let name = tag_name(tag as u8);
+                out.insert(format!("net.{dir}.bytes.{name}"), b as f64);
+                out.insert(format!("net.{dir}.frames.{name}"), f as f64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // entering/dropping must never panic, recorded or not (the flag
+        // may be flipped by a concurrently running trace test)
+        for i in 0..100u64 {
+            let _s = crate::span!("inert", i = i);
+        }
+        instant("inert_i", "x", 1);
+    }
+
+    #[test]
+    fn tag_names_cover_protocol() {
+        for t in 1..=13u8 {
+            assert_ne!(tag_name(t), "unknown", "tag {t} unnamed");
+        }
+        assert_eq!(tag_name(0), "unknown");
+        assert_eq!(tag_name(99), "unknown");
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,328 @@
+//! The global metrics registry: lock-free counters/gauges and
+//! fixed-bucket histograms behind one typed namespace.
+//!
+//! Handles are `Arc`s obtained once (registration takes a short mutex on
+//! the name map); every subsequent increment/observe is a relaxed atomic
+//! op — safe to call from any worker, poll shard, or lane thread.
+//! Counter *values* are therefore deterministic for a fixed workload
+//! regardless of thread interleaving (pinned across 1/4/8 workers in
+//! `rust/tests/telemetry.rs`).
+//!
+//! Histograms use power-of-two bucket bounds (microsecond-scaled on the
+//! latency paths): bucket `i` covers `[2^i, 2^(i+1))` (bucket 0 covers
+//! `[0, 2)`). Percentiles interpolate linearly inside the target bucket
+//! — exact enough for a p50/p90/p99 latency table without storing raw
+//! samples.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 value (stored as IEEE-754 bits in an AtomicU64).
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of power-of-two buckets: values up to 2^31 µs (~36 min) land
+/// in a real bucket, larger ones clamp into the last.
+pub const N_BUCKETS: usize = 32;
+
+/// Fixed-bucket histogram with lock-free observation.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Bucket index for a value: floor(log2(v)), clamped; 0 and 1 share
+/// bucket 0.
+fn bucket_of(v: u64) -> usize {
+    if v < 2 {
+        return 0;
+    }
+    ((63 - v.leading_zeros()) as usize).min(N_BUCKETS - 1)
+}
+
+/// Inclusive-exclusive bounds `[lo, hi)` of bucket `i`.
+fn bucket_bounds(i: usize) -> (f64, f64) {
+    let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+    let hi = (1u64 << (i + 1)) as f64;
+    (lo, hi)
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Percentile (`p` in [0, 1]) via linear interpolation inside the
+    /// bucket where the cumulative count crosses `p * count`. Returns 0
+    /// for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * n as f64).max(1.0);
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (target - cum as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        // only reachable with concurrent observers racing the scan
+        bucket_bounds(N_BUCKETS - 1).1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the registry
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// The process-global registry. All lookups go through the free
+/// functions below.
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+fn global() -> &'static Registry {
+    GLOBAL.get_or_init(|| Registry { inner: Mutex::new(Inner::default()) })
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Inner> {
+    global().inner.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Get-or-register a counter under `name` (e.g. `client.zo.probes`).
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut g = lock();
+    g.counters.entry(name.to_string()).or_default().clone()
+}
+
+/// Get-or-register a gauge.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut g = lock();
+    g.gauges.entry(name.to_string()).or_default().clone()
+}
+
+/// Get-or-register a histogram (microsecond-scaled by convention:
+/// `queue.wait_us`, `round.wall_us`, …).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut g = lock();
+    g.hists.entry(name.to_string()).or_default().clone()
+}
+
+/// One flat snapshot of every registered metric, plus the per-tag wire
+/// counters. Histograms expand to `.count`, `.mean`, `.p50`, `.p90`,
+/// `.p99`.
+pub fn snapshot() -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    {
+        let g = lock();
+        for (k, c) in &g.counters {
+            out.insert(k.clone(), c.get() as f64);
+        }
+        for (k, v) in &g.gauges {
+            out.insert(k.clone(), v.get());
+        }
+        for (k, h) in &g.hists {
+            out.insert(format!("{k}.count"), h.count() as f64);
+            out.insert(format!("{k}.mean"), h.mean());
+            out.insert(format!("{k}.p50"), h.percentile(0.50));
+            out.insert(format!("{k}.p90"), h.percentile(0.90));
+            out.insert(format!("{k}.p99"), h.percentile(0.99));
+        }
+    }
+    crate::telemetry::wire_tags_into(&mut out);
+    out
+}
+
+/// Merge the full snapshot into a run summary map (the
+/// `RunRecord.summary` dump). Call sites gate on
+/// [`crate::telemetry::metrics_enabled`] so flag-free runs emit
+/// byte-identical output.
+pub fn export_into(summary: &mut BTreeMap<String, f64>) {
+    for (k, v) in snapshot() {
+        summary.insert(k, v);
+    }
+}
+
+/// Compact one-line rendering of the snapshot (`serve --stats_every N`).
+/// Counters/gauges print as `k=v`; histograms as `k=p50/p99(count)`.
+pub fn snapshot_line() -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let g = lock();
+    for (k, c) in &g.counters {
+        parts.push(format!("{k}={}", c.get()));
+    }
+    for (k, v) in &g.gauges {
+        let x = v.get();
+        if x == x.trunc() && x.abs() < 1e15 {
+            parts.push(format!("{k}={}", x as i64));
+        } else {
+            parts.push(format!("{k}={x:.3}"));
+        }
+    }
+    for (k, h) in &g.hists {
+        parts.push(format!(
+            "{k}={:.0}/{:.0}us(n={})",
+            h.percentile(0.50),
+            h.percentile(0.99),
+            h.count()
+        ));
+    }
+    drop(g);
+    let mut line = parts.join(" ");
+    let mut wire = BTreeMap::new();
+    crate::telemetry::wire_tags_into(&mut wire);
+    let tx: f64 = wire
+        .iter()
+        .filter(|(k, _)| k.starts_with("net.tx.bytes."))
+        .map(|(_, v)| *v)
+        .sum();
+    let rx: f64 = wire
+        .iter()
+        .filter(|(k, _)| k.starts_with("net.rx.bytes."))
+        .map(|(_, v)| *v)
+        .sum();
+    if tx > 0.0 || rx > 0.0 {
+        if !line.is_empty() {
+            line.push(' ');
+        }
+        line.push_str(&format!("net.tx.bytes={tx:.0} net.rx.bytes={rx:.0}"));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = counter("test.reg.counter");
+        c.add(5);
+        c.inc();
+        assert_eq!(c.get(), 6);
+        // same name → same handle
+        counter("test.reg.counter").add(4);
+        assert_eq!(c.get(), 10);
+        let g = gauge("test.reg.gauge");
+        g.set(1.5);
+        assert_eq!(g.get(), 1.5);
+        let snap = snapshot();
+        assert_eq!(snap["test.reg.counter"], 10.0);
+        assert_eq!(snap["test.reg.gauge"], 1.5);
+    }
+
+    #[test]
+    fn bucket_index_and_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_bounds(0), (0.0, 2.0));
+        assert_eq!(bucket_bounds(3), (8.0, 16.0));
+    }
+
+    #[test]
+    fn histogram_percentiles_interpolate() {
+        let h = Histogram::default();
+        // 100 values in [4, 8): bucket 2 holds all of them
+        for _ in 0..100 {
+            h.observe(5);
+        }
+        assert_eq!(h.count(), 100);
+        // p50 target = 50th of 100 in [4,8): 4 + 0.5*4 = 6
+        assert!((h.percentile(0.5) - 6.0).abs() < 1e-9);
+        assert!((h.percentile(1.0) - 8.0).abs() < 1e-9);
+        let empty = Histogram::default();
+        assert_eq!(empty.percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_expands_histograms() {
+        let h = histogram("test.reg.hist_us");
+        h.observe(3);
+        let snap = snapshot();
+        assert!(snap.contains_key("test.reg.hist_us.count"));
+        assert!(snap.contains_key("test.reg.hist_us.p99"));
+        let line = snapshot_line();
+        assert!(line.contains("test.reg.hist_us="), "{line}");
+    }
+}

@@ -1,0 +1,468 @@
+//! Span recording and Chrome trace-event export.
+//!
+//! Producers push fixed-size events into a per-thread ring (flight
+//! recorder: when full, the oldest event is dropped and counted). A
+//! single writer thread sweeps every ring ~20×/s and appends one JSON
+//! event object per line to the `--trace_out` file.
+//!
+//! ## File format
+//!
+//! Chrome trace-event **JSON array format**: the first line is `[`,
+//! every event line ends with a comma, and a clean shutdown writes a
+//! final metadata event plus `]` — so a completed trace is strict JSON
+//! (`json.loads` works), while a trace cut short by a crash is still
+//! loadable by Perfetto / `chrome://tracing`, which tolerate the
+//! missing bracket. `scripts/check_trace.py` validates both shapes.
+//!
+//! Events are pushed at span *end* (guard drop), so within one ring —
+//! one `tid` — end timestamps (`ts + dur`) are monotone non-decreasing
+//! in file order. Nested spans therefore close inner-first, exactly the
+//! stacking Perfetto reconstructs.
+
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Events held per thread before the oldest is dropped (flight-recorder
+/// semantics; the writer sweeps far faster than rings fill in practice).
+const RING_CAP: usize = 1 << 13;
+
+/// Writer sweep interval.
+const SWEEP: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// One recorded event — integers and `&'static str`s only.
+enum Ev {
+    Complete {
+        name: &'static str,
+        ts: u64,
+        dur: u64,
+        k1: &'static str,
+        v1: u64,
+        k2: &'static str,
+        v2: u64,
+    },
+    Instant {
+        name: &'static str,
+        ts: u64,
+        k1: &'static str,
+        v1: u64,
+    },
+}
+
+struct RingInner {
+    events: VecDeque<Ev>,
+    dropped: u64,
+    /// optional thread label; emitted once as a `thread_name` metadata
+    /// event on the writer's next sweep
+    label: Option<String>,
+    label_emitted: bool,
+}
+
+struct Ring {
+    tid: u64,
+    inner: Mutex<RingInner>,
+}
+
+impl Ring {
+    fn push(&self, ev: Ev) {
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if g.events.len() >= RING_CAP {
+            g.events.pop_front();
+            g.dropped += 1;
+        }
+        g.events.push_back(ev);
+    }
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: std::sync::OnceLock<Mutex<Vec<Arc<Ring>>>> =
+        std::sync::OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static MY_RING: RefCell<Option<Arc<Ring>>> = const { RefCell::new(None) };
+}
+
+fn with_ring<F: FnOnce(&Ring)>(f: F) {
+    MY_RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let ring = Arc::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                inner: Mutex::new(RingInner {
+                    events: VecDeque::new(),
+                    dropped: 0,
+                    label: std::thread::current()
+                        .name()
+                        .map(|s| s.to_string()),
+                    label_emitted: false,
+                }),
+            });
+            rings()
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(ring.clone());
+            *slot = Some(ring);
+        }
+        f(slot.as_ref().unwrap());
+    });
+}
+
+pub(crate) fn record_complete(
+    name: &'static str,
+    ts: u64,
+    dur: u64,
+    k1: &'static str,
+    v1: u64,
+    k2: &'static str,
+    v2: u64,
+) {
+    with_ring(|r| r.push(Ev::Complete { name, ts, dur, k1, v1, k2, v2 }));
+}
+
+pub(crate) fn record_instant(
+    name: &'static str,
+    ts: u64,
+    k1: &'static str,
+    v1: u64,
+) {
+    with_ring(|r| r.push(Ev::Instant { name, ts, k1, v1 }));
+}
+
+/// Label the calling thread in the trace (Perfetto track name) —
+/// e.g. `"conn-shard-0"`, `"lane-3"`. No-op when spans are off.
+pub fn set_thread_label(label: &str) {
+    if !crate::telemetry::spans_enabled() {
+        return;
+    }
+    with_ring(|r| {
+        let mut g = r.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.label = Some(label.to_string());
+        g.label_emitted = false;
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the writer thread
+// ---------------------------------------------------------------------------
+
+struct WriterCtl {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<std::io::Result<std::fs::File>>,
+}
+
+fn writer_slot() -> &'static Mutex<Option<WriterCtl>> {
+    static W: std::sync::OnceLock<Mutex<Option<WriterCtl>>> =
+        std::sync::OnceLock::new();
+    W.get_or_init(|| Mutex::new(None))
+}
+
+fn esc(s: &str) -> String {
+    // names/labels are identifiers we control; Value::str handles the rest
+    Value::str(s).to_string()
+}
+
+/// Append every buffered event to `out`. Returns events written.
+fn drain_all(out: &mut impl std::io::Write) -> std::io::Result<u64> {
+    let list: Vec<Arc<Ring>> =
+        rings().lock().unwrap_or_else(|p| p.into_inner()).clone();
+    let mut written = 0u64;
+    for ring in list {
+        let mut g = ring.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if !g.label_emitted {
+            if let Some(label) = g.label.clone() {
+                writeln!(
+                    out,
+                    "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"ts\":0,\
+                     \"name\":\"thread_name\",\"args\":{{\"name\":{}}}}},",
+                    ring.tid,
+                    esc(&label),
+                )?;
+                g.label_emitted = true;
+            }
+        }
+        while let Some(ev) = g.events.pop_front() {
+            match ev {
+                Ev::Complete { name, ts, dur, k1, v1, k2, v2 } => {
+                    let mut args = String::new();
+                    if !k1.is_empty() {
+                        args.push_str(&format!("\"{k1}\":{v1}"));
+                    }
+                    if !k2.is_empty() {
+                        if !args.is_empty() {
+                            args.push(',');
+                        }
+                        args.push_str(&format!("\"{k2}\":{v2}"));
+                    }
+                    writeln!(
+                        out,
+                        "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{ts},\
+                         \"dur\":{dur},\"name\":{},\"args\":{{{args}}}}},",
+                        ring.tid,
+                        esc(name),
+                    )?;
+                }
+                Ev::Instant { name, ts, k1, v1 } => {
+                    let args = if k1.is_empty() {
+                        String::new()
+                    } else {
+                        format!("\"{k1}\":{v1}")
+                    };
+                    writeln!(
+                        out,
+                        "{{\"ph\":\"i\",\"pid\":1,\"tid\":{},\"ts\":{ts},\
+                         \"s\":\"t\",\"name\":{},\"args\":{{{args}}}}},",
+                        ring.tid,
+                        esc(name),
+                    )?;
+                }
+            }
+            written += 1;
+        }
+    }
+    Ok(written)
+}
+
+/// Install the trace writer: open `path` (creating parent dirs), start
+/// the drain thread, and enable spans + metrics. Errors if a writer is
+/// already installed.
+pub fn install(path: &str, process_name: &str) -> Result<()> {
+    let mut slot = writer_slot().lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_some() {
+        anyhow::bail!("trace writer already installed");
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let mut file = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {path}"))?;
+    writeln!(file, "[")?;
+    writeln!(
+        file,
+        "{{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\
+         \"name\":\"process_name\",\"args\":{{\"name\":{}}}}},",
+        esc(process_name),
+    )?;
+    // pin the epoch before any span can fire
+    let _ = crate::telemetry::epoch();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("telemetry-writer".into())
+        .spawn(move || -> std::io::Result<std::fs::File> {
+            let mut out = std::io::BufWriter::new(file);
+            loop {
+                std::thread::sleep(SWEEP);
+                drain_all(&mut out)?;
+                if stop2.load(Ordering::SeqCst) {
+                    // final sweep after producers saw the disabled flag
+                    drain_all(&mut out)?;
+                    out.flush()?;
+                    return out.into_inner().map_err(|e| e.into_error());
+                }
+            }
+        })
+        .context("spawning telemetry writer")?;
+    *slot = Some(WriterCtl { stop, handle });
+    drop(slot);
+    crate::telemetry::enable_metrics();
+    crate::telemetry::set_spans(true);
+    Ok(())
+}
+
+/// Disable spans, drain every ring, close the JSON array, and join the
+/// writer. Idempotent: a no-op when no writer is installed.
+pub fn shutdown() -> Result<()> {
+    let ctl = {
+        let mut slot =
+            writer_slot().lock().unwrap_or_else(|p| p.into_inner());
+        slot.take()
+    };
+    let Some(ctl) = ctl else {
+        return Ok(());
+    };
+    crate::telemetry::set_spans(false);
+    ctl.stop.store(true, Ordering::SeqCst);
+    let file = ctl
+        .handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("telemetry writer panicked"))?
+        .context("telemetry writer I/O")?;
+    let mut out = std::io::BufWriter::new(file);
+    let dropped: u64 = rings()
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .iter()
+        .map(|r| r.inner.lock().unwrap_or_else(|p| p.into_inner()).dropped)
+        .sum();
+    // last element carries no trailing comma, closing the strict array
+    writeln!(
+        out,
+        "{{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\
+         \"name\":\"trace_done\",\"args\":{{\"dropped\":{dropped}}}}}",
+    )?;
+    writeln!(out, "]")?;
+    out.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// `heron-sfl report`: per-phase breakdown of a trace file
+// ---------------------------------------------------------------------------
+
+/// Parse one trace line into a JSON value, tolerating the array
+/// scaffolding (`[`, `]`, trailing commas).
+fn parse_line(line: &str) -> Option<Value> {
+    let t = line.trim().trim_end_matches(',');
+    if t.is_empty() || t == "[" || t == "]" {
+        return None;
+    }
+    json::parse(t).ok()
+}
+
+/// Aggregated stats for one span name.
+struct Phase {
+    count: u64,
+    total_us: f64,
+    max_us: f64,
+    hist: crate::telemetry::registry::Histogram,
+}
+
+/// Read a `--trace_out` file and print the per-phase time breakdown +
+/// percentile table (`heron-sfl report t.jsonl`).
+pub fn report(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let mut phases: std::collections::BTreeMap<String, Phase> =
+        Default::default();
+    let mut events = 0u64;
+    let mut instants = 0u64;
+    let mut tids = std::collections::BTreeSet::new();
+    for line in text.lines() {
+        let Some(v) = parse_line(line) else { continue };
+        let ph = v.get("ph").and_then(Value::as_str).unwrap_or("");
+        if let Some(t) = v.get("tid").and_then(Value::as_i64) {
+            tids.insert(t);
+        }
+        match ph {
+            "X" => {
+                events += 1;
+                let name = v
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .unwrap_or("?")
+                    .to_string();
+                let dur =
+                    v.get("dur").and_then(Value::as_f64).unwrap_or(0.0);
+                let p = phases.entry(name).or_insert_with(|| Phase {
+                    count: 0,
+                    total_us: 0.0,
+                    max_us: 0.0,
+                    hist: Default::default(),
+                });
+                p.count += 1;
+                p.total_us += dur;
+                p.max_us = p.max_us.max(dur);
+                p.hist.observe(dur.max(0.0) as u64);
+            }
+            "i" => instants += 1,
+            _ => {}
+        }
+    }
+    if phases.is_empty() {
+        anyhow::bail!("no complete events (ph:\"X\") in {path}");
+    }
+    let mut rows: Vec<(&String, &Phase)> = phases.iter().collect();
+    rows.sort_by(|a, b| {
+        b.1.total_us
+            .partial_cmp(&a.1.total_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut t = crate::bench_harness::Table::new(&[
+        "phase", "count", "total", "mean", "p50", "p90", "p99", "max",
+    ]);
+    let fmt = |us: f64| crate::bench_harness::fmt_ns(us * 1e3);
+    for (name, p) in &rows {
+        t.row(vec![
+            (*name).clone(),
+            p.count.to_string(),
+            fmt(p.total_us),
+            fmt(p.total_us / p.count as f64),
+            fmt(p.hist.percentile(0.50)),
+            fmt(p.hist.percentile(0.90)),
+            fmt(p.hist.percentile(0.99)),
+            fmt(p.max_us),
+        ]);
+    }
+    t.print(&format!("per-phase time breakdown — {path}"));
+    println!(
+        "\n{events} span(s), {instants} instant event(s), {} thread track(s)",
+        tids.len(),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_tolerates_scaffolding() {
+        assert!(parse_line("[").is_none());
+        assert!(parse_line("]").is_none());
+        assert!(parse_line("").is_none());
+        let v = parse_line(
+            "{\"ph\":\"X\",\"pid\":1,\"tid\":3,\"ts\":10,\"dur\":5,\
+             \"name\":\"x\",\"args\":{}},",
+        )
+        .unwrap();
+        assert_eq!(v.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(v.get("dur").and_then(Value::as_f64), Some(5.0));
+    }
+
+    #[test]
+    fn install_record_shutdown_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "heron_trace_{}.jsonl",
+            std::process::id()
+        ));
+        let p = path.to_str().unwrap();
+        install(p, "unit-test").unwrap();
+        assert!(crate::telemetry::spans_enabled());
+        set_thread_label("test-thread");
+        {
+            let _s = crate::span!("unit_phase", client = 3u64, round = 1u64);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        crate::telemetry::instant("unit_instant", "wait_us", 42);
+        shutdown().unwrap();
+        assert!(!crate::telemetry::spans_enabled());
+        let text = std::fs::read_to_string(p).unwrap();
+        // strict JSON after a clean shutdown
+        let v = json::parse(&text).expect("closed trace parses as JSON");
+        let arr = v.as_arr().unwrap();
+        assert!(arr.iter().any(|e| {
+            e.get("name").and_then(Value::as_str) == Some("unit_phase")
+                && e.get("ph").and_then(Value::as_str) == Some("X")
+        }));
+        assert!(arr.iter().any(|e| {
+            e.get("name").and_then(Value::as_str) == Some("unit_instant")
+        }));
+        // report runs over it
+        report(p).unwrap();
+        // second install works after shutdown
+        install(p, "unit-test-2").unwrap();
+        shutdown().unwrap();
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,14 +1,18 @@
 //! Tiny stderr logger wired into the `log` facade.
 //!
-//! `RUST_LOG`-style filtering by level only (`error|warn|info|debug|trace`,
-//! default `info`).
+//! `RUST_LOG`-style filtering by level only
+//! (`off|error|warn|info|debug|trace`, default `info`). An unrecognized
+//! value warns once on stderr (naming the bad value) and falls back to
+//! `info` — `RUST_LOG=inf` silently meaning "info" hid typos for five
+//! PRs.
+//!
+//! Timestamps come from the telemetry clock ([`crate::telemetry::epoch`]),
+//! so a `[   3.21s I]` log line and a `ts=3210000` span in a
+//! `--trace_out` file refer to the same instant.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
-}
+struct StderrLogger;
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
@@ -19,7 +23,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = self.start.elapsed().as_secs_f64();
+        let t = crate::telemetry::epoch().elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "E",
             Level::Warn => "W",
@@ -33,21 +37,62 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse a `RUST_LOG` level value. `Err` carries the unrecognized input
+/// back for the one-time warning.
+pub fn parse_level(s: &str) -> Result<LevelFilter, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "none" => Ok(LevelFilter::Off),
+        "error" => Ok(LevelFilter::Error),
+        "warn" | "warning" => Ok(LevelFilter::Warn),
+        "info" => Ok(LevelFilter::Info),
+        "debug" => Ok(LevelFilter::Debug),
+        "trace" => Ok(LevelFilter::Trace),
+        other => Err(other.to_string()),
+    }
+}
+
 /// Install the logger once; later calls are no-ops.
 pub fn init() {
     static INIT: std::sync::Once = std::sync::Once::new();
     INIT.call_once(|| {
-        let level = match std::env::var("RUST_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        // pin the shared epoch before the first log line or span
+        let _ = crate::telemetry::epoch();
+        let level = match std::env::var("RUST_LOG") {
+            Ok(val) => match parse_level(&val) {
+                Ok(l) => l,
+                Err(bad) => {
+                    eprintln!(
+                        "warning: unrecognized RUST_LOG value {bad:?} — \
+                         expected off|error|warn|info|debug|trace; \
+                         defaulting to info"
+                    );
+                    LevelFilter::Info
+                }
+            },
+            Err(_) => LevelFilter::Info,
         };
-        let logger = Box::new(StderrLogger {
-            start: Instant::now(),
-        });
-        let _ = log::set_boxed_logger(logger);
+        let _ = log::set_boxed_logger(Box::new(StderrLogger));
         log::set_max_level(level);
     });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recognized_levels_parse() {
+        assert_eq!(parse_level("off"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("ERROR"), Ok(LevelFilter::Error));
+        assert_eq!(parse_level("warn"), Ok(LevelFilter::Warn));
+        assert_eq!(parse_level("info"), Ok(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Ok(LevelFilter::Debug));
+        assert_eq!(parse_level("trace"), Ok(LevelFilter::Trace));
+    }
+
+    #[test]
+    fn bad_level_names_the_value() {
+        assert_eq!(parse_level("inf"), Err("inf".to_string()));
+        assert_eq!(parse_level(""), Err("".to_string()));
+    }
 }

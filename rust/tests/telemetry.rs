@@ -1,0 +1,217 @@
+//! Telemetry integration tests: the observability layer must be
+//! *provably invisible* — traced and untraced runs produce bit-identical
+//! trajectories for every algorithm — while the registry stays
+//! deterministic across worker counts and the exported trace validates
+//! against `scripts/check_trace.py`.
+//!
+//! The telemetry flags, registry, and trace writer are process-global,
+//! so every test that touches them serializes on [`TELEMETRY_LOCK`].
+
+use heron_sfl::coordinator::algorithms::Algorithm;
+use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::round::Driver;
+use heron_sfl::telemetry::{self, registry};
+use std::sync::Mutex;
+
+mod common;
+use common::with_session;
+
+static TELEMETRY_LOCK: Mutex<()> = Mutex::new(());
+
+fn quick_cfg(alg: Algorithm) -> RunConfig {
+    RunConfig {
+        variant: "cnn_c1".into(),
+        algorithm: alg,
+        n_clients: 2,
+        rounds: 2,
+        local_steps: 2,
+        lr_client: 2e-3,
+        lr_server: 2e-3,
+        mu: 1e-2,
+        n_pert: 1,
+        dataset_size: 512,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+/// Everything deterministic a run produces, as exact bit patterns.
+fn run_fingerprint(alg: Algorithm, tag: &str) -> Vec<(u64, u64, u64)> {
+    with_session(|s| {
+        let mut d = Driver::new(s, quick_cfg(alg)).unwrap();
+        let rec = d.run(tag).unwrap();
+        rec.rounds
+            .iter()
+            .map(|r| {
+                (
+                    r.train_loss.to_bits(),
+                    r.eval_metric.to_bits(),
+                    r.comm_bytes_cum,
+                )
+            })
+            .collect()
+    })
+}
+
+#[test]
+fn histogram_percentiles_match_hand_computed() {
+    let h = registry::Histogram::default();
+    // three populated buckets: 50 samples at 1 ([0,2)), 30 at 10
+    // ([8,16)), 20 at 100 ([64,128))
+    for _ in 0..50 {
+        h.observe(1);
+    }
+    for _ in 0..30 {
+        h.observe(10);
+    }
+    for _ in 0..20 {
+        h.observe(100);
+    }
+    assert_eq!(h.count(), 100);
+    assert!((h.mean() - 23.5).abs() < 1e-9, "mean {}", h.mean());
+    // p10: target rank 10 of the 50 in [0,2) → 0 + (10/50)·2 = 0.4
+    assert!((h.percentile(0.10) - 0.4).abs() < 1e-9);
+    // p50: rank 50 exhausts bucket 0 exactly → its upper bound, 2.0
+    assert!((h.percentile(0.50) - 2.0).abs() < 1e-9);
+    // p90: rank 90; 80 precede bucket [64,128) → 64 + (10/20)·64 = 96
+    assert!((h.percentile(0.90) - 96.0).abs() < 1e-9);
+    // p99: 64 + (19/20)·64 = 124.8
+    assert!((h.percentile(0.99) - 124.8).abs() < 1e-9);
+}
+
+/// Counter *values* are workload-determined, not schedule-determined:
+/// the same run observes identical `client.*` counts whether the local
+/// phases run on 1, 4, or 8 worker threads.
+#[test]
+fn counters_deterministic_across_worker_counts() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    telemetry::enable_metrics();
+    let deltas: Vec<(f64, f64)> = [1usize, 4, 8]
+        .iter()
+        .map(|&w| {
+            let before = registry::snapshot();
+            with_session(|s| {
+                let mut cfg = quick_cfg(Algorithm::Heron);
+                cfg.workers = w;
+                let mut d = Driver::new(s, cfg).unwrap();
+                d.run(&format!("det-w{w}")).unwrap();
+            });
+            let after = registry::snapshot();
+            let delta = |k: &str| {
+                after.get(k).copied().unwrap_or(0.0)
+                    - before.get(k).copied().unwrap_or(0.0)
+            };
+            (delta("client.local_steps"), delta("client.zo.probes"))
+        })
+        .collect();
+    assert!(deltas[0].0 > 0.0, "no local steps recorded: {deltas:?}");
+    assert!(deltas[0].1 > 0.0, "no ZO probes recorded: {deltas:?}");
+    assert!(
+        deltas.iter().all(|d| *d == deltas[0]),
+        "counter deltas differ across worker counts: {deltas:?}"
+    );
+}
+
+/// With metrics on, the registry lands in `RunRecord.summary` under its
+/// dotted names.
+#[test]
+fn metrics_flow_into_run_summary() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    telemetry::enable_metrics();
+    let rec = with_session(|s| {
+        let mut d = Driver::new(s, quick_cfg(Algorithm::Heron)).unwrap();
+        d.run("summary-dump").unwrap()
+    });
+    for key in ["client.local_steps", "client.zo.probes", "runtime.invocations"]
+    {
+        assert!(
+            rec.summary.contains_key(key),
+            "summary lacks registry key {key}; keys: {:?}",
+            rec.summary.keys().collect::<Vec<_>>()
+        );
+    }
+}
+
+/// THE telemetry contract: recording spans must not perturb a single
+/// bit of any algorithm's trajectory.
+#[test]
+fn traced_runs_are_bit_identical() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let algs = [
+        Algorithm::Heron,
+        Algorithm::CseFsl,
+        Algorithm::FslSage,
+        Algorithm::SflV1,
+        Algorithm::SflV2,
+    ];
+    let reference: Vec<_> = algs
+        .iter()
+        .map(|&a| run_fingerprint(a, "untraced"))
+        .collect();
+
+    let path = std::env::temp_dir()
+        .join(format!("heron_bitid_{}.json", std::process::id()));
+    let p = path.to_str().unwrap();
+    telemetry::trace::install(p, "bitid-test").unwrap();
+    let traced: Vec<_> = algs
+        .iter()
+        .map(|&a| run_fingerprint(a, "traced"))
+        .collect();
+    telemetry::trace::shutdown().unwrap();
+
+    for (i, a) in algs.iter().enumerate() {
+        assert_eq!(
+            reference[i],
+            traced[i],
+            "{}: tracing changed the trajectory",
+            a.name()
+        );
+    }
+    // and the trace actually recorded the runs it rode along with
+    let text = std::fs::read_to_string(p).unwrap();
+    assert!(text.contains("\"local_phase\""), "trace missing local_phase");
+    assert!(text.contains("\"round\""), "trace missing round spans");
+    let _ = std::fs::remove_file(p);
+}
+
+/// The exported file passes the same schema checker CI runs
+/// (`scripts/check_trace.py --mode run`). Skips when python3 is absent.
+#[test]
+fn trace_schema_validates() {
+    let _g = TELEMETRY_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let path = std::env::temp_dir()
+        .join(format!("heron_schema_{}.json", std::process::id()));
+    let p = path.to_str().unwrap();
+    telemetry::trace::install(p, "schema-test").unwrap();
+    with_session(|s| {
+        let mut d = Driver::new(s, quick_cfg(Algorithm::Heron)).unwrap();
+        d.run("schema").unwrap();
+    });
+    telemetry::trace::shutdown().unwrap();
+
+    let mut dir = std::env::current_dir().unwrap();
+    loop {
+        if dir.join("scripts/check_trace.py").exists() {
+            break;
+        }
+        assert!(dir.pop(), "scripts/check_trace.py not found above cwd");
+    }
+    let script = dir.join("scripts/check_trace.py");
+    match std::process::Command::new("python3")
+        .arg(&script)
+        .arg(p)
+        .args(["--mode", "run"])
+        .output()
+    {
+        Ok(out) => assert!(
+            out.status.success(),
+            "check_trace.py rejected the trace:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr),
+        ),
+        Err(_) => {
+            eprintln!("python3 not found — skipping trace schema validation")
+        }
+    }
+    let _ = std::fs::remove_file(p);
+}

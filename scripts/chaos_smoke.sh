@@ -44,7 +44,11 @@ wait_for_file() {
 }
 
 echo "== chaos leg A: uninterrupted reference =="
+# the reference leg runs traced (--trace_out + per-round registry
+# snapshots) — telemetry must not perturb the record leg C is later
+# bit-diffed against, and the trace itself is schema-validated below
 "$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \
+  --trace_out "$OUT/ref/trace.json" --stats_every 1 \
   --out "$OUT/ref" &
 SERVER=$!
 retry_connect ref-0 &
@@ -52,6 +56,7 @@ C0=$!
 retry_connect ref-1 &
 C1=$!
 wait "$C0" "$C1" "$SERVER"
+python3 scripts/check_trace.py "$OUT/ref/trace.json" --mode serve
 
 echo "== chaos leg B: kill -9 a client mid-run, a replacement rejoins =="
 "$BIN" serve --config "$CONFIG" --listen "127.0.0.1:$PORT" --conns 2 \

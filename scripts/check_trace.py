@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Validate a heron-sfl `--trace_out` flight-recorder trace.
+
+The file is Chrome trace-event JSON array format: `[` on the first line,
+one comma-terminated event object per line, and — after a *clean*
+shutdown — a final `trace_done` metadata event plus `]`, making the file
+strict JSON. A trace cut short (crash, kill) is missing the closer but
+every complete line is still valid JSON; Perfetto tolerates that, and so
+does this checker (`--allow-truncated`).
+
+Checks:
+  * parses (strict JSON, or line-by-line when truncated)
+  * every event has ph/pid/tid/ts/name; ph:"X" events also have dur
+  * within one tid, end timestamps (ts + dur) are monotone non-decreasing
+    in file order (events are pushed at span end)
+  * the required span/instant names for the run mode are present
+    (`--mode serve` / `--mode run`); instants (ph:"i") satisfy a
+    requirement too — wire receives and queue waits are points, not spans
+  * a clean trace ends with the `trace_done` metadata event and reports
+    how many ring-buffer events were dropped
+
+Usage: check_trace.py trace.json [--mode serve|run] [--allow-truncated]
+Exits non-zero on any violation; prints a one-line summary on success.
+"""
+
+import json
+import sys
+
+REQUIRED = {
+    "serve": ["round", "wire_send", "wire_recv", "server_consume"],
+    "run": ["round", "local_phase", "zo_step", "server_consume"],
+    # connect side of a serve run: the client's own phases + wire traffic
+    "connect": ["client_round", "local_phase", "wire_send", "wire_recv"],
+}
+
+
+def load_events(path, allow_truncated):
+    with open(path) as f:
+        text = f.read()
+    try:
+        events = json.loads(text)
+        if not isinstance(events, list):
+            sys.exit(f"{path}: top-level JSON is not an array")
+        return events, True
+    except json.JSONDecodeError:
+        pass
+    # truncated trace: strip the array scaffolding and parse per line
+    events = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        t = line.strip().rstrip(",")
+        if not t or t in "[]":
+            continue
+        try:
+            events.append(json.loads(t))
+        except json.JSONDecodeError as e:
+            sys.exit(f"{path}:{ln}: unparseable event line: {e}")
+    if not allow_truncated:
+        sys.exit(f"{path}: not strict JSON (missing `]`?) — a clean "
+                 f"shutdown closes the array; pass --allow-truncated for "
+                 f"crash traces")
+    return events, False
+
+
+def main():
+    argv = sys.argv[1:]
+    mode = None
+    if "--mode" in argv:
+        i = argv.index("--mode")
+        try:
+            mode = argv[i + 1]
+        except IndexError:
+            sys.exit("--mode needs serve|run|connect")
+        if mode not in REQUIRED:
+            sys.exit(f"unknown --mode {mode!r} (serve|run|connect)")
+        del argv[i:i + 2]
+    allow_truncated = "--allow-truncated" in argv
+    argv = [a for a in argv if a != "--allow-truncated"]
+    if len(argv) != 1:
+        sys.exit(__doc__)
+    path = argv[0]
+
+    events, closed = load_events(path, allow_truncated)
+    if not events:
+        sys.exit(f"{path}: no events")
+
+    failures = []
+    names = set()
+    spans = instants = meta = 0
+    last_end = {}  # tid -> last (ts + dur) seen, per phase class
+    for i, e in enumerate(events):
+        for key in ("ph", "pid", "tid", "ts", "name"):
+            if key not in e:
+                failures.append(f"event {i}: missing {key!r}: {e}")
+                break
+        else:
+            ph = e["ph"]
+            if ph == "X":
+                spans += 1
+                if "dur" not in e:
+                    failures.append(f"event {i}: ph:X without dur: {e}")
+                    continue
+                names.add(e["name"])
+                tid = e["tid"]
+                end = e["ts"] + e["dur"]
+                if end < last_end.get(tid, 0):
+                    failures.append(
+                        f"event {i}: tid {tid} end {end} precedes prior "
+                        f"end {last_end[tid]} — rings emit at span end, "
+                        f"so per-tid end times must be monotone")
+                last_end[tid] = end
+            elif ph == "i":
+                instants += 1
+                names.add(e["name"])
+            elif ph == "M":
+                meta += 1
+        if len(failures) > 20:
+            break
+
+    if mode is not None:
+        for want in REQUIRED[mode]:
+            if want not in names:
+                failures.append(
+                    f"mode {mode}: required event name {want!r} absent "
+                    f"(saw: {', '.join(sorted(names)) or 'none'})")
+
+    done = [e for e in events
+            if e.get("ph") == "M" and e.get("name") == "trace_done"]
+    if closed and not done:
+        failures.append("strict-JSON trace lacks the trace_done closer")
+    dropped = done[0]["args"].get("dropped", 0) if done else 0
+    if dropped:
+        print(f"warning: {dropped} event(s) dropped by full ring buffers")
+
+    if failures:
+        print(f"{path}: INVALID trace:")
+        for line in failures:
+            print(f"  {line}")
+        sys.exit(1)
+    tids = {e["tid"] for e in events}
+    print(f"OK: {path}: {spans} span(s), {instants} instant(s), "
+          f"{meta} metadata event(s) over {len(tids)} track(s)"
+          + ("" if closed else " [truncated]")
+          + (f" [mode {mode}]" if mode else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,11 @@
 # and --zo_wire seeds) so the retry/wait choreography lives in one place.
 #
 # Usage: net_smoke.sh <port> <out_dir> [extra serve/run flags...]
+#
+# TRACE_DIR=dir — additionally record flight-recorder traces: the server
+# writes $TRACE_DIR/serve_trace.json (with --stats_every 1 snapshots in
+# its log) and the first client writes $TRACE_DIR/connect_trace.json,
+# both Chrome trace-event JSON for scripts/check_trace.py / Perfetto.
 set -euo pipefail
 
 PORT=$1
@@ -12,16 +17,24 @@ shift 2
 
 BIN=${BIN:-target/release/heron-sfl}
 CONFIG=${CONFIG:-configs/net_smoke.json}
+TRACE_DIR=${TRACE_DIR:-}
 
-"$BIN" serve --config "$CONFIG" "$@" \
+SERVE_TRACE=()
+if [ -n "$TRACE_DIR" ]; then
+  mkdir -p "$TRACE_DIR"
+  SERVE_TRACE=(--trace_out "$TRACE_DIR/serve_trace.json" --stats_every 1)
+fi
+
+"$BIN" serve --config "$CONFIG" "$@" ${SERVE_TRACE[@]+"${SERVE_TRACE[@]}"} \
   --listen "127.0.0.1:$PORT" --conns 2 --out "$OUT" &
 SERVER=$!
 
 # no port probe — the server treats any accepted socket as a client
-# connection, so the clients themselves retry instead
+# connection, so the clients themselves retry instead (a refused attempt
+# truncates its trace file; the successful attempt rewrites it whole)
 retry_connect() {
   for _ in $(seq 1 60); do
-    if "$BIN" connect --addr "127.0.0.1:$PORT" --name "$1"; then
+    if "$BIN" connect --addr "127.0.0.1:$PORT" --name "$1" "${@:2}"; then
       return 0
     fi
     sleep 1
@@ -29,7 +42,11 @@ retry_connect() {
   return 1
 }
 
-retry_connect edge-0 &
+if [ -n "$TRACE_DIR" ]; then
+  retry_connect edge-0 --trace_out "$TRACE_DIR/connect_trace.json" &
+else
+  retry_connect edge-0 &
+fi
 C0=$!
 retry_connect edge-1 &
 C1=$!
