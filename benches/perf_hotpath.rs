@@ -139,6 +139,18 @@ fn main() -> Result<()> {
         std::hint::black_box(&msg);
     });
 
+    // payload codec: int8-quantize one 64k-element smashed activation —
+    // the per-upload encode cost `--codec int8` adds on the client hot
+    // path (one max/min pass + one round/clamp pass over the tensor)
+    let smashed64: Vec<f32> = PerturbStream::new(19).take_vec(1 << 16);
+    b.run("codec_encode_64k", || {
+        let enc = heron_sfl::net::codec::encode(
+            heron_sfl::net::codec::Codec::Int8,
+            &smashed64,
+        );
+        std::hint::black_box(&enc);
+    });
+
     // seeds-mode server replay: reconstruct θ' over 64k params from a
     // recorded (seed, per-probe gscales) pair — the per-step server cost
     // `--zo_wire seeds` trades for the eliminated θ upload

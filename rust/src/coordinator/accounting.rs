@@ -11,6 +11,7 @@
 
 use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::config::ZoWireMode;
+use crate::net::codec::{self, Codec, GradCodec};
 use crate::runtime::manifest::VariantSpec;
 
 pub const BYTES_F32: u64 = 4;
@@ -39,6 +40,11 @@ pub struct CostBook {
     pub zo_wire: ZoWireMode,
     /// local steps per round (h) — sizes the seeds-mode upload record
     pub local_steps: u64,
+    /// smashed payload codec the byte formulas model (`f32` unless
+    /// rebound via [`Self::with_codec`])
+    pub codec: Codec,
+    /// cut-gradient payload codec (`f32` unless rebound)
+    pub grad_codec: GradCodec,
 }
 
 impl CostBook {
@@ -86,6 +92,8 @@ impl CostBook {
             n_pert,
             zo_wire: ZoWireMode::Theta,
             local_steps: 0,
+            codec: Codec::F32,
+            grad_codec: GradCodec::F32,
         }
     }
 
@@ -96,6 +104,27 @@ impl CostBook {
     pub fn with_zo_wire(mut self, mode: ZoWireMode, local_steps: u64) -> Self {
         self.zo_wire = mode;
         self.local_steps = local_steps;
+        self
+    }
+
+    /// Rebind the book to the run's payload codecs (`--codec` /
+    /// `--grad_codec`). A lossy smashed codec shrinks `smashed_bytes` to
+    /// its information bytes (`net::codec::info_bytes`) and a top-k
+    /// gradient codec shrinks `cutgrad_bytes` likewise; codec *headers*
+    /// are per-message overhead, accounted next to the frame envelope in
+    /// the measured-vs-analytic loopback cross-check
+    /// (`rust/tests/net_loopback.rs`). The default f32 pair leaves every
+    /// formula untouched, which is what pins pre-v6 byte accounting.
+    pub fn with_codec(mut self, codec: Codec, grad_codec: GradCodec) -> Self {
+        let n = self.smashed_bytes / BYTES_F32; // elements per payload
+        self.codec = codec;
+        self.grad_codec = grad_codec;
+        if codec != Codec::F32 {
+            self.smashed_bytes = codec::info_bytes(codec, n);
+        }
+        if grad_codec != GradCodec::F32 {
+            self.cutgrad_bytes = codec::info_bytes_grad(grad_codec, n);
+        }
         self
     }
 
@@ -316,5 +345,40 @@ mod tests {
         let z1 = CostBook::new(&v, Algorithm::Heron, 1);
         let z4 = CostBook::new(&v, Algorithm::Heron, 4);
         assert!(z4.flops_per_step > z1.flops_per_step * 2);
+    }
+
+    #[test]
+    fn codec_binding_shrinks_payload_formulas() {
+        let v = fake_variant();
+        let base = CostBook::new(&v, Algorithm::SflV2, 1);
+        let n = base.smashed_bytes / BYTES_F32; // elements per payload
+
+        // f32 is the identity: every formula is untouched
+        let f32b = CostBook::new(&v, Algorithm::SflV2, 1)
+            .with_codec(Codec::F32, GradCodec::F32);
+        assert_eq!(f32b.smashed_bytes, base.smashed_bytes);
+        assert_eq!(f32b.cutgrad_bytes, base.cutgrad_bytes);
+
+        // int8: one byte per element; int4: two elements per byte
+        let i8b = CostBook::new(&v, Algorithm::SflV2, 1)
+            .with_codec(Codec::Int8, GradCodec::F32);
+        assert_eq!(i8b.smashed_bytes, n);
+        assert_eq!(i8b.cutgrad_bytes, base.cutgrad_bytes);
+        let i4b = CostBook::new(&v, Algorithm::SflV2, 1)
+            .with_codec(Codec::Int4, GradCodec::F32);
+        assert_eq!(i4b.smashed_bytes, n.div_ceil(2));
+
+        // topk gradient: 8 bytes per surviving (index, value) pair,
+        // sized from the *uncompressed* element count even when the
+        // smashed leg is also quantized
+        let tk = CostBook::new(&v, Algorithm::SflV2, 1)
+            .with_codec(Codec::Int8, GradCodec::TopK(0.25));
+        let k = codec::topk_k(n as usize, 0.25) as u64;
+        assert_eq!(tk.smashed_bytes, n);
+        assert_eq!(tk.cutgrad_bytes, 8 * k);
+        assert!(tk.cutgrad_bytes < base.cutgrad_bytes);
+
+        // per-step comm folds the compressed legs in directly
+        assert_eq!(tk.comm_per_step(false), tk.smashed_bytes + tk.cutgrad_bytes);
     }
 }

@@ -4,6 +4,7 @@
 use crate::coordinator::algorithms::Algorithm;
 use crate::coordinator::drain::{DrainConfigError, DrainMode};
 use crate::data::partition::Scheme;
+use crate::net::codec::{Codec, GradCodec};
 use crate::util::cli::Args;
 use crate::util::json::Value;
 use anyhow::{bail, Context, Result};
@@ -94,6 +95,19 @@ pub struct RunConfig {
     /// cutoff is client-granular and deterministic (see
     /// `coordinator::drain`).
     pub round_deadline_ms: u64,
+    /// Payload codec for smashed-activation uploads (`--codec
+    /// {f32,int8,int4}`). `f32` (the default) is the identity envelope
+    /// and is pinned bit-identical to pre-codec behavior; the lossy
+    /// codecs trade accuracy for bytes (see `net::codec`). A negotiated
+    /// capability: clients advertise supported ids in `Hello.codecs`
+    /// and the dispatcher validates this pick against them.
+    pub codec: Codec,
+    /// Payload codec for the server→client `CutGradient` in the locked
+    /// baselines (`--grad_codec topk:<ratio>`). `f32` (default) is the
+    /// identity; `topk` ships only the k=⌈ratio·n⌉ largest-|g| entries
+    /// as (index, value) pairs. Gated to SFLV1/V2 — the decoupled
+    /// algorithms never ship a per-step cut gradient.
+    pub grad_codec: GradCodec,
 }
 
 impl Default for RunConfig {
@@ -122,6 +136,8 @@ impl Default for RunConfig {
             zo_wire: ZoWireMode::Theta,
             drain: DrainMode::Barrier,
             round_deadline_ms: 0,
+            codec: Codec::F32,
+            grad_codec: GradCodec::F32,
         }
     }
 }
@@ -172,6 +188,26 @@ impl RunConfig {
                          queue to consume mid-round (every smashed batch \
                          is answered inside the per-step training lock)",
             }));
+        }
+        if let GradCodec::TopK(ratio) = self.grad_codec {
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                bail!(
+                    "--grad_codec topk ratio must be in (0, 1], got {ratio}"
+                );
+            }
+            // Only the locked baselines ship a per-step CutGradient;
+            // the decoupled algorithms (HERON/CSE/SAGE) compute the
+            // client backward from locally-held state, so a gradient
+            // codec would silently do nothing there.
+            if !matches!(self.algorithm, Algorithm::SflV1 | Algorithm::SflV2)
+            {
+                bail!(
+                    "--grad_codec topk compresses the per-step CutGradient \
+                     and therefore requires a locked baseline (sfl_v1 or \
+                     sfl_v2, got {})",
+                    self.algorithm.name()
+                );
+            }
         }
         Ok(())
     }
@@ -254,6 +290,14 @@ impl RunConfig {
             "round_deadline_ms" | "deadline_ms" => {
                 self.round_deadline_ms = v.parse()?
             }
+            "codec" => {
+                self.codec = Codec::parse(v)
+                    .with_context(|| format!("unknown codec {v}"))?
+            }
+            "grad_codec" => {
+                self.grad_codec = GradCodec::parse(v)
+                    .with_context(|| format!("unknown grad_codec {v}"))?
+            }
             // non-config CLI flags pass through silently
             _ => {}
         }
@@ -317,6 +361,8 @@ impl RunConfig {
                 "round_deadline_ms",
                 Value::str(&self.round_deadline_ms.to_string()),
             ),
+            ("codec", Value::str(self.codec.name())),
+            ("grad_codec", Value::str(&self.grad_codec.spec())),
         ];
         match self.scheme {
             Scheme::Iid => pairs.push(("iid", Value::str("true"))),
@@ -445,6 +491,7 @@ mod tests {
             queue_capacity: 5,
             zo_wire: ZoWireMode::Theta,
             round_deadline_ms: 1500,
+            codec: Codec::Int8,
             ..Default::default()
         };
         for _ in 0..2 {
@@ -476,13 +523,75 @@ mod tests {
             assert_eq!(back.zo_wire, cfg.zo_wire);
             assert_eq!(back.drain, cfg.drain);
             assert_eq!(back.round_deadline_ms, cfg.round_deadline_ms);
+            assert_eq!(back.codec, cfg.codec);
+            match (back.grad_codec, cfg.grad_codec) {
+                (GradCodec::TopK(a), GradCodec::TopK(b)) => {
+                    assert_eq!(a.to_bits(), b.to_bits())
+                }
+                (GradCodec::F32, GradCodec::F32) => {}
+                other => panic!("grad_codec mismatch: {other:?}"),
+            }
             // second lap exercises the IID branch + the seeds wire mode
-            // + the stream drain policy
+            // + the stream drain policy; codec laps ride on a locked
+            // baseline config below instead (seeds gates on HERON)
             cfg.scheme = Scheme::Iid;
             cfg.algorithm = Algorithm::Heron;
             cfg.zo_wire = ZoWireMode::Seeds;
             cfg.drain = DrainMode::Stream;
+            cfg.codec = Codec::Int4;
         }
+        // a topk ratio with a non-trivial shortest-roundtrip decimal
+        // must survive the JSON lap bit-for-bit on a locked baseline
+        let cfg = RunConfig {
+            algorithm: Algorithm::SflV2,
+            grad_codec: GradCodec::TopK(0.1),
+            ..Default::default()
+        };
+        let json = cfg.to_json().to_string();
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&json).unwrap())
+                .unwrap();
+        match back.grad_codec {
+            GradCodec::TopK(r) => assert_eq!(r.to_bits(), 0.1f32.to_bits()),
+            other => panic!("grad_codec mismatch: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn codec_flags_parse_and_gate() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--codec", "int8"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.codec, Codec::Int8);
+        cfg.validate().unwrap(); // smashed codecs work on any algorithm
+        // grad_codec topk requires a locked baseline
+        cfg.grad_codec = GradCodec::TopK(0.25);
+        assert!(cfg.validate().is_err(), "topk requires sfl_v1/v2");
+        cfg.algorithm = Algorithm::SflV1;
+        cfg.validate().unwrap();
+        cfg.algorithm = Algorithm::SflV2;
+        cfg.validate().unwrap();
+        // ratio bounds
+        cfg.grad_codec = GradCodec::TopK(0.0);
+        assert!(cfg.validate().is_err(), "ratio 0 rejected");
+        cfg.grad_codec = GradCodec::TopK(1.5);
+        assert!(cfg.validate().is_err(), "ratio > 1 rejected");
+        cfg.grad_codec = GradCodec::TopK(1.0);
+        cfg.validate().unwrap();
+        // parse surface
+        assert!(Codec::parse("nope").is_none());
+        assert!(GradCodec::parse("topk:0").is_some(), "gate, not parse");
+        assert!(GradCodec::parse("topk:abc").is_none());
+        let args = Args::parse_from(
+            ["--grad_codec", "topk:0.25"].iter().map(|s| s.to_string()),
+        );
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(
+            matches!(cfg.grad_codec, GradCodec::TopK(r) if r == 0.25)
+        );
     }
 
     #[test]

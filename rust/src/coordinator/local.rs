@@ -256,15 +256,36 @@ pub struct UploadTag {
 /// `Smashed` (barrier) or `SmashedSeq` (stream) message (acknowledged,
 /// so capacity drops surface as typed NACKs). Returns `false` when the
 /// batch was dropped.
+///
+/// `enc` is the payload's already-encoded codec envelope when the run's
+/// `--codec` is lossy (the encode-once rule, `net::codec`):
+/// `batch.smashed` then holds the *decoded* values — exactly what the
+/// dispatcher reconstructs — and a networked sink ships `enc` verbatim
+/// instead of re-encoding (re-quantization would recompute the scale
+/// from already-rounded values and break in-process/wire bit-identity).
+/// `None` under the default f32 codec; a networked sink then encodes
+/// the identity envelope itself.
 pub trait SmashedSink: Sync {
-    fn push_smashed(&self, batch: SmashedBatch, tag: UploadTag) -> bool;
+    fn push_smashed(
+        &self,
+        batch: SmashedBatch,
+        tag: UploadTag,
+        enc: Option<Vec<u8>>,
+    ) -> bool;
 }
 
 impl SmashedSink for ServerQueue {
     /// The in-process queue is FIFO, so the arrival order IS the push
     /// order and the tag carries no extra information here (arrival
-    /// times reach the sim through the client's lane instead).
-    fn push_smashed(&self, batch: SmashedBatch, _tag: UploadTag) -> bool {
+    /// times reach the sim through the client's lane instead). The
+    /// encoded envelope is dropped: `batch.smashed` already carries the
+    /// post-roundtrip values.
+    fn push_smashed(
+        &self,
+        batch: SmashedBatch,
+        _tag: UploadTag,
+        _enc: Option<Vec<u8>>,
+    ) -> bool {
         self.push(batch)
     }
 }
@@ -435,7 +456,14 @@ fn upload_smashed(
     )?;
     // the sink owns the smashed batch, so move it out of the arena (the
     // buffer re-grows on the next upload)
-    let smashed = std::mem::take(fwd_out);
+    let mut smashed = std::mem::take(fwd_out);
+    // encode-once: quantize at the producer, keep the decoded values
+    // locally (FSL-SAGE's last_upload below must also see the
+    // post-roundtrip batch, so this happens before the clone)
+    let enc = match ctx.cfg.codec {
+        crate::net::codec::Codec::F32 => None,
+        codec => Some(crate::net::codec::transcode(codec, &mut smashed)),
+    };
     // the upload forward is part of the protocol but NOT an extra
     // training cost in Table I (the paper's accounting charges the ZO /
     // FO step); we still charge its flops to the client sim for latency
@@ -467,6 +495,7 @@ fn upload_smashed(
             seq: step / ctx.cfg.upload_every,
             sent_at: lane.time,
         },
+        enc,
     );
     // only accepted uploads become server-side work: a dropped batch
     // must not enter the arrival-driven occupancy schedule

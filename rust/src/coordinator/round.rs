@@ -199,7 +199,8 @@ impl<'s> Driver<'s> {
         Ok(Driver {
             session,
             book: CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
-                .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64),
+                .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64)
+                .with_codec(cfg.codec, cfg.grad_codec),
             task,
             base,
             theta_l,
@@ -519,16 +520,29 @@ impl<'s> Driver<'s> {
             cs.loader.next_batch();
             let (x, y) = local::loader_batch_xy(self.task, &cs.loader);
             // client forward to the cut layer
-            let smashed = local::locked_client_fwd(
+            let mut smashed = local::locked_client_fwd(
                 self.session,
                 &self.cfg.variant,
                 self.base.as_deref(),
                 &theta[..self.nc],
                 &x,
             )?;
-            let (loss, g_sm) =
+            // encode-once: the server must see the post-roundtrip
+            // activations a wire run would decode (net::codec)
+            if self.cfg.codec != crate::net::codec::Codec::F32 {
+                crate::net::codec::transcode(self.cfg.codec, &mut smashed);
+            }
+            let (loss, mut g_sm) =
                 self.locked_server_exchange(ci, smashed, y, sim)?;
             losses.push(loss);
+            // mirror the downlink: the client backprops from the cut
+            // gradient as the grad codec reconstructs it
+            if self.cfg.grad_codec != crate::net::codec::GradCodec::F32 {
+                crate::net::codec::transcode_grad(
+                    self.cfg.grad_codec,
+                    &mut g_sm,
+                );
+            }
             // client backprop from the relayed cut gradient
             let new_c = local::locked_client_bp(
                 self.session,

@@ -72,6 +72,11 @@ fn print_help() {
              seed+per-probe-scalar record the server replays)\n\
            --drain barrier|stream (server consumption: deterministic\n\
              Eq.-7 barrier drain, or arrival-order mid-round pipelining)\n\
+           --codec f32|int8|int4 (smashed-activation payload codec;\n\
+             f32 is the bit-identical identity, int8/int4 are per-tensor\n\
+             affine quantizers — negotiated with clients at Hello)\n\
+           --grad_codec f32|topk:<ratio> (CutGradient payload codec;\n\
+             top-k sparsification, locked baselines sfl_v1/sfl_v2 only)\n\
            --out results/dir (writes json+csv)\n\
            --round_deadline_ms D (straggler cutoff: finalize each round\n\
              with whatever uploads arrived within D ms — wall-clock on\n\
@@ -95,6 +100,10 @@ fn print_help() {
            --conns N (sockets; default 16) --lanes L (virtual clients per\n\
            socket; default 64) --out report.json (merge a\n\
            heron-sfl-bench-v1 report)\n\
+         bench codec-sweep flags: --rounds R --out report.json (vision +\n\
+           LM presets x {{f32,int8,int4}} smashed codecs + a top-k\n\
+           cut-gradient leg; prints the bytes-vs-accuracy Pareto table\n\
+           and merges it into bench_report.json by default)\n\
          costs flags: --variant V [--n_pert P]\n\
          spectrum flags: --variant cnn_c1 [--steps M] [--probes P]\n\
          observability (run/serve/connect/bench serve-storm):\n\
@@ -303,9 +312,11 @@ fn cmd_connect(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.positional.get(1).map(String::as_str) {
         Some("serve-storm") => cmd_bench_serve_storm(args),
+        Some("codec-sweep") => cmd_bench_codec_sweep(args),
         other => bail!(
             "unknown bench mode {other:?} — try `heron-sfl bench serve-storm` \
-             (the full sweep lives in `cargo bench --bench serve_storm`)"
+             or `heron-sfl bench codec-sweep` (the full storm sweep lives in \
+             `cargo bench --bench serve_storm`)"
         ),
     }
 }
@@ -373,6 +384,86 @@ fn cmd_bench_serve_storm(args: &Args) -> Result<()> {
         )?;
         println!("merged storm point into {out}");
     }
+    Ok(())
+}
+
+/// Bytes-vs-accuracy Pareto sweep over the payload codecs: the vision and
+/// LM presets each run under every smashed codec (`f32` is the pinned
+/// identity leg) plus a top-k cut-gradient leg on the locked `sfl_v1`
+/// baseline — the only family that ships a per-step CutGradient. The
+/// table prints and lands as a `codec_sweep` array in the shared
+/// `heron-sfl-bench-v1` report (default `bench_report.json`).
+fn cmd_bench_codec_sweep(args: &Args) -> Result<()> {
+    use heron_sfl::experiments;
+    use heron_sfl::net::codec::{Codec, GradCodec};
+    use heron_sfl::util::json::Value;
+
+    let rounds =
+        args.get_usize("rounds", experiments::scaled_rounds(3, 12));
+    let out = args.get_or("out", "bench_report.json");
+    let traced = telemetry_from_args(args, "heron-sfl codec-sweep")?;
+    let session = Session::open_default()?;
+
+    let presets: [(&str, RunConfig); 2] = [
+        ("vision", experiments::vision_base(rounds)),
+        ("lm", experiments::lm_base("gpt2nano_c1_a1", rounds)),
+    ];
+    let mut legs: Vec<(String, RunConfig)> = Vec::new();
+    for (pname, base) in &presets {
+        for codec in [Codec::F32, Codec::Int8, Codec::Int4] {
+            let mut cfg = base.clone();
+            cfg.codec = codec;
+            legs.push((format!("{pname}/{}", codec.name()), cfg));
+        }
+        let mut cfg = base.clone();
+        cfg.algorithm = Algorithm::SflV1;
+        cfg.grad_codec = GradCodec::TopK(0.25);
+        legs.push((format!("{pname}/topk"), cfg));
+    }
+
+    let mut t = heron_sfl::bench_harness::Table::new(&[
+        "leg", "algorithm", "codec", "grad_codec", "comm/run",
+        "final metric",
+    ]);
+    let mut rows: Vec<Value> = Vec::new();
+    for (name, cfg) in legs {
+        cfg.validate()?;
+        let rec = experiments::run(&session, cfg.clone(), &name)?;
+        let metric = rec
+            .rounds
+            .iter()
+            .filter(|r| r.eval_metric.is_finite())
+            .map(|r| r.eval_metric)
+            .next_back()
+            .unwrap_or(f64::NAN);
+        let comm = rec.summary["comm_bytes"];
+        t.row(vec![
+            name.clone(),
+            cfg.algorithm.name().to_string(),
+            cfg.codec.name().to_string(),
+            cfg.grad_codec.spec(),
+            fmt_bytes(comm as u64),
+            format!("{metric:.4}"),
+        ]);
+        rows.push(Value::obj(vec![
+            ("leg", Value::str(&name)),
+            ("algorithm", Value::str(cfg.algorithm.name())),
+            ("codec", Value::str(cfg.codec.name())),
+            ("grad_codec", Value::str(&cfg.grad_codec.spec())),
+            ("comm_bytes", Value::Num(comm)),
+            ("final_metric", Value::Num(metric)),
+        ]));
+    }
+    telemetry_finish(traced)?;
+    t.print(&format!(
+        "codec Pareto sweep — bytes vs final accuracy ({rounds} rounds)"
+    ));
+    heron_sfl::bench_harness::merge_report(
+        out,
+        &[],
+        &[("codec_sweep", Value::Arr(rows))],
+    )?;
+    println!("merged codec sweep into {out}");
     Ok(())
 }
 

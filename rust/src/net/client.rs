@@ -18,9 +18,12 @@
 //! across all lanes), the client states come from the same
 //! [`ClientPool`] construction, and every step runs the same
 //! `coordinator::local` functions the in-process driver fans out to its
-//! worker pool. The wire carries bit-exact f32 payloads, so the
-//! trajectory cannot diverge from `Driver::run_round` — however the
-//! clients are spread over sockets and lanes.
+//! worker pool. Control payloads carry bit-exact f32, and the codec'd
+//! payloads (smashed/cut-grad, v6) follow the encode-once rule of
+//! `net::codec` — the envelope this endpoint ships is byte-identical to
+//! the one the in-process transcode produces — so the trajectory cannot
+//! diverge from `Driver::run_round`, however the clients are spread
+//! over sockets and lanes.
 //!
 //! Message handling is a single blocking loop:
 //!
@@ -52,6 +55,7 @@ use crate::coordinator::local::{
 use crate::coordinator::round::OptState;
 use crate::coordinator::server_queue::SmashedBatch;
 use crate::data::loader::Task;
+use crate::net::codec;
 use crate::net::transport::Transport;
 use crate::net::wire::{Msg, BROADCAST, VERSION};
 use crate::runtime::Session;
@@ -137,8 +141,19 @@ struct NetSink<'a> {
 }
 
 impl NetSink<'_> {
-    fn exchange(&self, b: SmashedBatch, tag: UploadTag) -> Result<bool> {
+    fn exchange(
+        &self,
+        b: SmashedBatch,
+        tag: UploadTag,
+        enc: Option<Vec<u8>>,
+    ) -> Result<bool> {
         let (up_client, up_step) = (b.client, b.step);
+        // encode-once: a lossy codec already produced the envelope at
+        // the producer (`local::upload_smashed`) — ship it verbatim;
+        // under the default f32 codec the identity envelope is built
+        // here from the exact batch values
+        let smashed =
+            enc.unwrap_or_else(|| codec::encode_f32(&b.smashed));
         let mut g = self.t.lock().unwrap_or_else(|p| p.into_inner());
         let msg = if self.stream {
             Msg::SmashedSeq {
@@ -148,7 +163,7 @@ impl NetSink<'_> {
                 step: b.step as u32,
                 seq: self.seq.fetch_add(1, Ordering::Relaxed) + 1,
                 sent_at: tag.sent_at,
-                smashed: b.smashed,
+                smashed,
                 targets: b.targets,
             }
         } else {
@@ -157,7 +172,7 @@ impl NetSink<'_> {
                 client: b.client as u32,
                 round: b.round as u32,
                 step: b.step as u32,
-                smashed: b.smashed,
+                smashed,
                 targets: b.targets,
             }
         };
@@ -180,7 +195,12 @@ impl NetSink<'_> {
 }
 
 impl SmashedSink for NetSink<'_> {
-    fn push_smashed(&self, b: SmashedBatch, tag: UploadTag) -> bool {
+    fn push_smashed(
+        &self,
+        b: SmashedBatch,
+        tag: UploadTag,
+        enc: Option<Vec<u8>>,
+    ) -> bool {
         // latch: after one failed exchange the transport is in an unknown
         // state — never touch it again from this phase (a blocked recv
         // here would deadlock client and server), just let the phase
@@ -191,7 +211,7 @@ impl SmashedSink for NetSink<'_> {
                 return false;
             }
         }
-        match self.exchange(b, tag) {
+        match self.exchange(b, tag, enc) {
             Ok(accepted) => accepted,
             Err(e) => {
                 *self.err.lock().unwrap_or_else(|p| p.into_inner()) = Some(e);
@@ -232,6 +252,7 @@ pub fn run_client_virtual(
         name: name.into(),
         protocol: VERSION as u32,
         lanes: lanes as u32,
+        codecs: codec::SUPPORTED.to_vec(),
     })?;
 
     // one Assign per declared lane, in lane order; every lane carries
@@ -313,7 +334,8 @@ pub fn run_client_virtual(
     };
     let nc = v.size_client;
     let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
-        .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64);
+        .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64)
+        .with_codec(cfg.codec, cfg.grad_codec);
     session.warmup(&cfg.variant, cfg.algorithm.required_entries())?;
     // lazy: a lane's client state is built the first time that client is
     // actually sampled into a cohort — a storm client fronting a large
@@ -592,19 +614,23 @@ fn locked_phase(
             &theta[..nc],
             &x,
         )?;
+        // encode-once at the producer: the dispatcher decodes this exact
+        // envelope, so its view of the activations matches the
+        // in-process transcode bit-for-bit
         send(t, &Msg::Smashed {
             lane,
             client: ci as u32,
             round,
             step: step as u32,
-            smashed,
+            smashed: codec::encode(cfg.codec, &smashed),
             targets: y,
         })?;
         let g = match recv(t)? {
             Some(Msg::CutGrad { client, step: s, g, .. })
                 if client as usize == ci && s as usize == step =>
             {
-                g
+                codec::decode_expect(&g, cfg.grad_codec.id())
+                    .map_err(|e| anyhow::anyhow!("CutGrad payload: {e}"))?
             }
             Some(Msg::Shutdown { reason }) => {
                 return Err(anyhow::Error::new(CleanShutdown(reason)));

@@ -1,0 +1,708 @@
+//! Pluggable payload codecs for wire v6 (substrate S21): encode/decode
+//! tensor payloads with self-describing headers.
+//!
+//! HERON-SFL's thesis is lean clients, but the smashed-activation and
+//! cut-gradient payloads shipped full f32 through v5. This module makes
+//! the payload *representation* a negotiated capability, orthogonal to
+//! the frame layer: `wire.rs` frames/CRCs an opaque `Vec<u8>` envelope,
+//! and this module defines what the bytes mean.
+//!
+//! ## Codecs
+//!
+//! | tag | codec  | envelope layout (little-endian)                    |
+//! |-----|--------|----------------------------------------------------|
+//! | 0   | `f32`  | `u8 tag, u32 n, n×f32` — identity, bit-exact       |
+//! | 1   | `int8` | `u8 tag, u32 n, f32 scale, f32 zero_point, n×u8`   |
+//! | 2   | `int4` | `u8 tag, u32 n, f32 scale, f32 zero_point, ⌈n/2⌉×u8` |
+//! | 3   | `topk` | `u8 tag, u32 n, u32 k, k×(u32 idx, f32 value)`     |
+//!
+//! `int8`/`int4` are per-tensor affine: `zero_point` is the payload's
+//! finite minimum, `scale = (max−min)/qmax` (`qmax` 255 or 15), and
+//! `q = round((x − zero_point)/scale)` clamped to `[0, qmax]`, so the
+//! reconstruction error is bounded by `scale/2` per element. A constant,
+//! empty, or all-non-finite payload encodes with `scale = 0` (every
+//! element decodes to the zero point); non-finite elements quantize to
+//! bucket 0 — deterministic, never a NaN comparison. `int4` packs two
+//! quanta per byte, low nibble first; an odd tail pads the high nibble
+//! with 0. `topk` keeps the `k = max(1, ⌈ratio·n⌉)` largest-|value|
+//! elements (ties break toward the lower index) as sorted
+//! `(index, value)` pairs and decodes to a dense vector with zeros
+//! elsewhere — the classic gradient sparsifier.
+//!
+//! ## The encode-once rule
+//!
+//! Quantization happens **exactly once per payload**, at the producer:
+//! the networked client encodes and ships the bytes verbatim; the
+//! in-process driver runs [`transcode`] (encode, then replace the values
+//! with their own decode) at the same protocol point. Re-encoding a
+//! dequantized payload is *not* bit-stable — the scale would be
+//! recomputed from already-rounded values — so both execution modes
+//! share the single encode, which is what pins `--codec f32` (and every
+//! lossy codec's client-visible trajectory) bit-identical between
+//! in-process and TCP-loopback runs (`rust/tests/net_loopback.rs`).
+//!
+//! Decoding never panics and never allocates more than
+//! [`MAX_ELEMS`]×4 bytes: every count is validated against the actual
+//! envelope length (and the cap) *before* any allocation, and malformed
+//! input is a typed [`CodecError`] (property-tested in
+//! `rust/tests/net_codec.rs`).
+//!
+//! Telemetry: the instrumented entry points ([`encode`], [`encode_grad`],
+//! [`decode`], [`decode_expect`]) record `net.codec.encode`/`.decode`
+//! spans plus `net.codec.{encode,decode}_us` histograms and a
+//! `net.codec.bytes_saved` counter (f32-envelope bytes minus encoded
+//! bytes) into the metrics registry when it is enabled.
+
+use crate::telemetry::{metrics_enabled, now_us, registry};
+use std::fmt;
+
+/// Wire tag of the identity f32 codec.
+pub const TAG_F32: u8 = 0;
+/// Wire tag of the int8 affine codec.
+pub const TAG_INT8: u8 = 1;
+/// Wire tag of the int4 affine codec.
+pub const TAG_INT4: u8 = 2;
+/// Wire tag of the top-k gradient sparsifier.
+pub const TAG_TOPK: u8 = 3;
+
+/// Codec ids this build can decode — what a client advertises in
+/// `Hello.codecs` and the dispatcher validates its `RunConfig` choice
+/// against.
+pub const SUPPORTED: [u8; 4] = [TAG_F32, TAG_INT8, TAG_INT4, TAG_TOPK];
+
+/// Hard cap on a decoded payload's element count: a hostile header must
+/// not make the decoder allocate unbounded memory (16M elements = 64 MiB
+/// of f32 — far above any payload this crate ships, far below an OOM).
+pub const MAX_ELEMS: u32 = 1 << 24;
+
+const H_F32: usize = 5; // tag + n
+const H_AFFINE: usize = 13; // tag + n + scale + zero_point
+const H_TOPK: usize = 9; // tag + n + k
+
+/// Typed decode failure. Decoding rejects — it never panics, and it
+/// validates lengths before allocating.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The envelope is shorter than its header claims.
+    Truncated,
+    /// Unknown codec tag.
+    BadTag(u8),
+    /// A non-finite scale or zero point.
+    BadScale,
+    /// The declared element count exceeds [`MAX_ELEMS`].
+    TooLarge(u32),
+    /// A top-k index at or past the declared element count.
+    BadIndex { idx: u32, n: u32 },
+    /// The envelope tag differs from the negotiated codec.
+    WrongCodec { got: u8, want: u8 },
+    /// Any other structural violation (trailing bytes, k > n, …).
+    Malformed(&'static str),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "codec payload truncated"),
+            CodecError::BadTag(t) => write!(f, "unknown codec tag {t}"),
+            CodecError::BadScale => {
+                write!(f, "non-finite quantization scale or zero point")
+            }
+            CodecError::TooLarge(n) => write!(
+                f,
+                "declared element count {n} exceeds the cap {MAX_ELEMS}"
+            ),
+            CodecError::BadIndex { idx, n } => {
+                write!(f, "top-k index {idx} out of range for {n} elements")
+            }
+            CodecError::WrongCodec { got, want } => write!(
+                f,
+                "payload codec tag {got} differs from the negotiated {want}"
+            ),
+            CodecError::Malformed(m) => write!(f, "malformed codec payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------------------
+// negotiated codec choices (RunConfig `codec` / `grad_codec`)
+// ---------------------------------------------------------------------------
+
+/// Which codec smashed-activation payloads use (`--codec`). The default
+/// `f32` is the identity and pins pre-v6 byte accounting exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    #[default]
+    F32,
+    Int8,
+    Int4,
+}
+
+impl Codec {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::Int8 => "int8",
+            Codec::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "f32" => Some(Codec::F32),
+            "int8" => Some(Codec::Int8),
+            "int4" => Some(Codec::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn id(self) -> u8 {
+        match self {
+            Codec::F32 => TAG_F32,
+            Codec::Int8 => TAG_INT8,
+            Codec::Int4 => TAG_INT4,
+        }
+    }
+}
+
+/// Which codec cut-gradient payloads use (`--grad_codec`): the identity
+/// or top-k sparsification with a keep ratio (serialized `topk:<ratio>`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum GradCodec {
+    #[default]
+    F32,
+    TopK(f32),
+}
+
+impl GradCodec {
+    /// The serialized spec string (`f32` or `topk:<ratio>`); `{}` is
+    /// shortest-roundtrip formatting, so `parse(spec())` is exact.
+    pub fn spec(self) -> String {
+        match self {
+            GradCodec::F32 => "f32".to_string(),
+            GradCodec::TopK(r) => format!("topk:{r}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GradCodec> {
+        if s == "f32" {
+            return Some(GradCodec::F32);
+        }
+        let ratio = s.strip_prefix("topk:")?.parse::<f32>().ok()?;
+        ratio.is_finite().then_some(GradCodec::TopK(ratio))
+    }
+
+    pub fn id(self) -> u8 {
+        match self {
+            GradCodec::F32 => TAG_F32,
+            GradCodec::TopK(_) => TAG_TOPK,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// analytic sizes (CostBook formulas + loopback byte pins)
+// ---------------------------------------------------------------------------
+
+/// `k` for an n-element top-k payload: `max(1, ⌈ratio·n⌉)` clamped to n
+/// (0 for an empty payload).
+pub fn topk_k(n: usize, ratio: f32) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (((n as f64) * (ratio as f64)).ceil() as usize).clamp(1, n)
+    }
+}
+
+/// Information bytes per n-element payload — what the analytic CostBook
+/// charges (headers are per-message overhead, accounted next to the
+/// frame envelope).
+pub fn info_bytes(codec: Codec, n: u64) -> u64 {
+    match codec {
+        Codec::F32 => 4 * n,
+        Codec::Int8 => n,
+        Codec::Int4 => n.div_ceil(2),
+    }
+}
+
+/// [`info_bytes`] for the gradient codec (`topk`: 8 bytes per kept
+/// element).
+pub fn info_bytes_grad(codec: GradCodec, n: u64) -> u64 {
+    match codec {
+        GradCodec::F32 => 4 * n,
+        GradCodec::TopK(r) => 8 * topk_k(n as usize, r) as u64,
+    }
+}
+
+/// Codec header bytes per payload (the explicit per-message overhead in
+/// the measured-vs-analytic cross-check).
+pub fn header_bytes(codec: Codec) -> u64 {
+    match codec {
+        Codec::F32 => H_F32 as u64,
+        Codec::Int8 | Codec::Int4 => H_AFFINE as u64,
+    }
+}
+
+/// [`header_bytes`] for the gradient codec.
+pub fn header_bytes_grad(codec: GradCodec) -> u64 {
+    match codec {
+        GradCodec::F32 => H_F32 as u64,
+        GradCodec::TopK(_) => H_TOPK as u64,
+    }
+}
+
+/// Exact encoded envelope length for an n-element payload.
+pub fn encoded_len(codec: Codec, n: usize) -> usize {
+    header_bytes(codec) as usize + info_bytes(codec, n as u64) as usize
+}
+
+/// [`encoded_len`] for the gradient codec.
+pub fn encoded_len_grad(codec: GradCodec, n: usize) -> usize {
+    header_bytes_grad(codec) as usize
+        + info_bytes_grad(codec, n as u64) as usize
+}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+/// Encode a smashed payload under the negotiated codec (instrumented).
+pub fn encode(codec: Codec, data: &[f32]) -> Vec<u8> {
+    let _s = crate::span!("net.codec.encode", n = data.len());
+    let t0 = if metrics_enabled() { now_us() } else { 0 };
+    let out = match codec {
+        Codec::F32 => encode_f32(data),
+        Codec::Int8 => encode_int8(data),
+        Codec::Int4 => encode_int4(data),
+    };
+    note_encode(data.len(), out.len(), t0);
+    out
+}
+
+/// Encode a cut-gradient payload under the negotiated gradient codec
+/// (instrumented).
+pub fn encode_grad(codec: GradCodec, data: &[f32]) -> Vec<u8> {
+    let _s = crate::span!("net.codec.encode", n = data.len());
+    let t0 = if metrics_enabled() { now_us() } else { 0 };
+    let out = match codec {
+        GradCodec::F32 => encode_f32(data),
+        GradCodec::TopK(r) => encode_topk(data, r),
+    };
+    note_encode(data.len(), out.len(), t0);
+    out
+}
+
+fn note_encode(n: usize, enc_len: usize, t0: u64) {
+    if metrics_enabled() {
+        registry::histogram("net.codec.encode_us")
+            .observe(now_us().saturating_sub(t0));
+        let raw = encoded_len(Codec::F32, n) as u64;
+        registry::counter("net.codec.bytes_saved")
+            .add(raw.saturating_sub(enc_len as u64));
+    }
+}
+
+fn put_header(out: &mut Vec<u8>, tag: u8, n: usize) {
+    out.push(tag);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
+/// The identity codec: the payload's exact f32 bit patterns.
+pub fn encode_f32(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(H_F32 + 4 * data.len());
+    put_header(&mut out, TAG_F32, data.len());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// `(zero_point, range)` over the payload's *finite* values; a constant,
+/// empty, or all-non-finite payload gets range 0 (scale 0 ⇒ every
+/// element decodes to the zero point).
+fn affine_params(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return (if lo.is_finite() { lo } else { 0.0 }, 0.0);
+    }
+    (lo, hi - lo)
+}
+
+fn quantize(v: f32, zp: f32, scale: f32, qmax: f32) -> u8 {
+    if scale <= 0.0 || !v.is_finite() {
+        return 0;
+    }
+    ((v - zp) / scale).round().clamp(0.0, qmax) as u8
+}
+
+/// Per-tensor affine int8: one byte per element plus scale/zero-point.
+pub fn encode_int8(data: &[f32]) -> Vec<u8> {
+    let (zp, range) = affine_params(data);
+    let scale = range / 255.0;
+    let mut out = Vec::with_capacity(H_AFFINE + data.len());
+    put_header(&mut out, TAG_INT8, data.len());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&zp.to_le_bytes());
+    for &v in data {
+        out.push(quantize(v, zp, scale, 255.0));
+    }
+    out
+}
+
+/// Per-tensor affine int4: two quanta per byte (low nibble first, odd
+/// tail pads the high nibble with 0).
+pub fn encode_int4(data: &[f32]) -> Vec<u8> {
+    let (zp, range) = affine_params(data);
+    let scale = range / 15.0;
+    let mut out = Vec::with_capacity(H_AFFINE + data.len().div_ceil(2));
+    put_header(&mut out, TAG_INT4, data.len());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&zp.to_le_bytes());
+    for pair in data.chunks(2) {
+        let lo = quantize(pair[0], zp, scale, 15.0);
+        let hi = if pair.len() == 2 {
+            quantize(pair[1], zp, scale, 15.0)
+        } else {
+            0
+        };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Top-k sparsification: keep the k largest-|value| elements (ties break
+/// toward the lower index; non-finite values never outrank a finite
+/// one), shipped as index-sorted `(u32 idx, f32 value)` pairs.
+pub fn encode_topk(data: &[f32], ratio: f32) -> Vec<u8> {
+    let n = data.len();
+    let k = topk_k(n, ratio);
+    // selection key: |v| for finite values, −1 for NaN/±inf — a strict
+    // total order, so the k-partition is deterministic
+    let key = |i: u32| {
+        let v = data[i as usize];
+        if v.is_finite() {
+            v.abs()
+        } else {
+            -1.0
+        }
+    };
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            key(b).total_cmp(&key(a)).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    let mut out = Vec::with_capacity(H_TOPK + 8 * k);
+    put_header(&mut out, TAG_TOPK, n);
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    for &i in &idx {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&data[i as usize].to_le_bytes());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// Decode a self-describing codec envelope (instrumented). Rejects —
+/// never panics — on malformed input, with every length validated
+/// against the actual envelope before any allocation.
+pub fn decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
+    let _s = crate::span!("net.codec.decode", len = bytes.len());
+    let t0 = if metrics_enabled() { now_us() } else { 0 };
+    let out = decode_inner(bytes)?;
+    if metrics_enabled() {
+        registry::histogram("net.codec.decode_us")
+            .observe(now_us().saturating_sub(t0));
+    }
+    Ok(out)
+}
+
+/// [`decode`], additionally requiring the envelope tag to be the
+/// negotiated codec id — the dispatcher's ingress check (a client must
+/// not ship f32 into an int8 run and skew the measured bytes).
+pub fn decode_expect(bytes: &[u8], want: u8) -> Result<Vec<f32>, CodecError> {
+    match bytes.first() {
+        None => Err(CodecError::Truncated),
+        Some(&got) if got != want => {
+            Err(CodecError::WrongCodec { got, want })
+        }
+        Some(_) => decode(bytes),
+    }
+}
+
+fn check_len(got: usize, want: usize) -> Result<(), CodecError> {
+    match got.cmp(&want) {
+        std::cmp::Ordering::Less => Err(CodecError::Truncated),
+        std::cmp::Ordering::Greater => {
+            Err(CodecError::Malformed("trailing bytes after the payload"))
+        }
+        std::cmp::Ordering::Equal => Ok(()),
+    }
+}
+
+fn read_f32(bytes: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes(bytes[at..at + 4].try_into().expect("4 bytes"))
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().expect("4 bytes"))
+}
+
+fn read_affine(body: &[u8]) -> Result<(f32, f32), CodecError> {
+    let scale = read_f32(body, 0);
+    let zp = read_f32(body, 4);
+    if !scale.is_finite() || !zp.is_finite() {
+        return Err(CodecError::BadScale);
+    }
+    Ok((scale, zp))
+}
+
+fn decode_inner(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
+    if bytes.len() < H_F32 {
+        return Err(CodecError::Truncated);
+    }
+    let tag = bytes[0];
+    let n = read_u32(bytes, 1);
+    if n > MAX_ELEMS {
+        return Err(CodecError::TooLarge(n));
+    }
+    let n = n as usize;
+    let body = &bytes[H_F32..];
+    match tag {
+        TAG_F32 => {
+            check_len(body.len(), 4 * n)?;
+            Ok(body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect())
+        }
+        TAG_INT8 => {
+            check_len(body.len(), 8 + n)?;
+            let (scale, zp) = read_affine(body)?;
+            Ok(body[8..].iter().map(|&q| zp + q as f32 * scale).collect())
+        }
+        TAG_INT4 => {
+            check_len(body.len(), 8 + n.div_ceil(2))?;
+            let (scale, zp) = read_affine(body)?;
+            let packed = &body[8..];
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = packed[i / 2];
+                let q = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+                out.push(zp + q as f32 * scale);
+            }
+            Ok(out)
+        }
+        TAG_TOPK => {
+            if body.len() < 4 {
+                return Err(CodecError::Truncated);
+            }
+            let k = read_u32(body, 0);
+            if k as usize > n {
+                return Err(CodecError::Malformed(
+                    "top-k count exceeds the element count",
+                ));
+            }
+            check_len(body.len(), 4 + 8 * k as usize)?;
+            let mut out = vec![0.0f32; n];
+            for pair in body[4..].chunks_exact(8) {
+                let idx = u32::from_le_bytes(
+                    pair[..4].try_into().expect("4 bytes"),
+                );
+                if idx as usize >= n {
+                    return Err(CodecError::BadIndex { idx, n: n as u32 });
+                }
+                out[idx as usize] = f32::from_le_bytes(
+                    pair[4..].try_into().expect("4 bytes"),
+                );
+            }
+            Ok(out)
+        }
+        t => Err(CodecError::BadTag(t)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transcode (the in-process half of the encode-once rule)
+// ---------------------------------------------------------------------------
+
+/// Encode once, then replace `data` with its own decode — the exact
+/// values the dispatcher would see after the wire. Returns the encoded
+/// envelope (the networked sink ships it verbatim; in-process callers
+/// drop it).
+pub fn transcode(codec: Codec, data: &mut Vec<f32>) -> Vec<u8> {
+    let enc = encode(codec, data);
+    *data = decode(&enc).expect("self-encoded payload decodes");
+    enc
+}
+
+/// [`transcode`] under the gradient codec.
+pub fn transcode_grad(codec: GradCodec, data: &mut Vec<f32>) -> Vec<u8> {
+    let enc = encode_grad(codec, data);
+    *data = decode(&enc).expect("self-encoded payload decodes");
+    enc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_specs_roundtrip() {
+        for c in [Codec::F32, Codec::Int8, Codec::Int4] {
+            assert_eq!(Codec::parse(c.name()), Some(c));
+        }
+        assert_eq!(Codec::parse("gzip"), None);
+        for gc in [GradCodec::F32, GradCodec::TopK(0.25)] {
+            assert_eq!(GradCodec::parse(&gc.spec()), Some(gc));
+        }
+        assert_eq!(GradCodec::parse("topk:0.1"), Some(GradCodec::TopK(0.1)));
+        assert_eq!(GradCodec::parse("topk:nan"), None);
+        assert_eq!(GradCodec::parse("topk:"), None);
+        assert_eq!(GradCodec::parse("topk"), None);
+    }
+
+    #[test]
+    fn encoded_lens_are_exact() {
+        for n in [0usize, 1, 2, 3, 7, 64, 4096] {
+            let data: Vec<f32> =
+                (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+            assert_eq!(encode_f32(&data).len(), encoded_len(Codec::F32, n));
+            assert_eq!(encode_int8(&data).len(), encoded_len(Codec::Int8, n));
+            assert_eq!(encode_int4(&data).len(), encoded_len(Codec::Int4, n));
+            assert_eq!(
+                encode_topk(&data, 0.25).len(),
+                encoded_len_grad(GradCodec::TopK(0.25), n)
+            );
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_is_bitwise() {
+        let data = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 1e30, -0.0];
+        let enc = encode(Codec::F32, &data);
+        let back = decode(&enc).unwrap();
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn affine_error_is_bounded_by_half_scale() {
+        let data: Vec<f32> = (0..257).map(|i| (i as f32).sin() * 3.0).collect();
+        for (enc, qmax) in
+            [(encode_int8(&data), 255.0f32), (encode_int4(&data), 15.0)]
+        {
+            let scale = f32::from_le_bytes(enc[5..9].try_into().unwrap());
+            assert!(scale > 0.0 && scale.is_finite());
+            let back = decode(&enc).unwrap();
+            let bound = scale as f64 / 2.0 + 1e-6;
+            for (a, b) in data.iter().zip(&back) {
+                assert!(
+                    ((a - b).abs() as f64) <= bound,
+                    "|{a} - {b}| > {bound} (qmax {qmax})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_and_nonfinite_payloads_are_deterministic() {
+        for data in [
+            vec![],
+            vec![2.5f32; 9],
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY],
+            vec![f32::NAN, 1.0, 3.0],
+        ] {
+            for enc in [encode_int8(&data), encode_int4(&data)] {
+                let back = decode(&enc).unwrap();
+                assert_eq!(back.len(), data.len());
+                for v in &back {
+                    assert!(v.is_finite(), "{data:?} decoded non-finite");
+                }
+            }
+        }
+        // constant payload decodes exactly: scale 0, zero point = value
+        let c = vec![2.5f32; 9];
+        assert_eq!(decode(&encode_int8(&c)).unwrap(), c);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_zeroes_rest() {
+        let data = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
+        let enc = encode_topk(&data, 0.4); // k = 2
+        assert_eq!(enc.len(), H_TOPK + 8 * 2);
+        let back = decode(&enc).unwrap();
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+        // ties break toward the lower index
+        let tie = vec![1.0f32, -1.0, 1.0];
+        let back = decode(&encode_topk(&tie, 0.5)).unwrap(); // k = 2
+        assert_eq!(back, vec![1.0, -1.0, 0.0]);
+        // ratio 1.0 keeps everything bitwise
+        let back = decode(&encode_topk(&data, 1.0)).unwrap();
+        assert_eq!(back, data);
+        // k floors at 1 for any non-empty payload
+        assert_eq!(topk_k(5, 1e-6), 1);
+        assert_eq!(topk_k(0, 0.5), 0);
+    }
+
+    #[test]
+    fn decode_rejects_hostile_envelopes() {
+        assert_eq!(decode(&[]), Err(CodecError::Truncated));
+        assert_eq!(decode(&[TAG_F32, 1, 0]), Err(CodecError::Truncated));
+        assert_eq!(decode(&encode_f32(&[1.0])[..7]), Err(CodecError::Truncated));
+        let mut bad_tag = encode_f32(&[1.0]);
+        bad_tag[0] = 9;
+        assert_eq!(decode(&bad_tag), Err(CodecError::BadTag(9)));
+        // oversized count: rejected before any allocation
+        let mut huge = encode_f32(&[]);
+        huge[1..5].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&huge), Err(CodecError::TooLarge(u32::MAX)));
+        // non-finite scale
+        let mut bad_scale = encode_int8(&[1.0, 2.0]);
+        bad_scale[5..9].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert_eq!(decode(&bad_scale), Err(CodecError::BadScale));
+        // top-k index out of range
+        let mut bad_idx = encode_topk(&[1.0, 2.0], 0.5);
+        bad_idx[9..13].copy_from_slice(&7u32.to_le_bytes());
+        assert_eq!(
+            decode(&bad_idx),
+            Err(CodecError::BadIndex { idx: 7, n: 2 })
+        );
+        // trailing garbage
+        let mut long = encode_int8(&[1.0]);
+        long.push(0);
+        assert!(matches!(decode(&long), Err(CodecError::Malformed(_))));
+        // negotiated-codec mismatch
+        assert_eq!(
+            decode_expect(&encode_f32(&[1.0]), TAG_INT8),
+            Err(CodecError::WrongCodec { got: TAG_F32, want: TAG_INT8 })
+        );
+    }
+
+    #[test]
+    fn transcode_matches_encode_then_decode() {
+        let orig: Vec<f32> = (0..100).map(|i| (i as f32).cos()).collect();
+        let mut data = orig.clone();
+        let enc = transcode(Codec::Int8, &mut data);
+        assert_eq!(enc, encode_int8(&orig));
+        assert_eq!(data, decode(&enc).unwrap());
+        // f32 transcode is the identity
+        let mut same = orig.clone();
+        transcode(Codec::F32, &mut same);
+        assert_eq!(same, orig);
+    }
+}

@@ -50,6 +50,17 @@
 //! + clean `Shutdown` path. Pinned by `rust/tests/chaos.rs` and
 //! `scripts/chaos_smoke.sh`.
 //!
+//! Payload codecs (v6): [`codec`] defines self-describing envelopes for
+//! the smashed-activation and cut-gradient payloads — identity `f32`
+//! (the default, bit-exact), `int8`/`int4` per-tensor affine
+//! quantization, and `topk` gradient sparsification. The choice is a
+//! negotiated capability: clients advertise supported codec ids in
+//! `Hello.codecs`, the dispatcher picks per `RunConfig`
+//! (`--codec`/`--grad_codec`, shipped to clients inside `Assign`'s
+//! config JSON) and validates the pick against each client's
+//! advertisement. Only the payload envelope changed in v6 — frame
+//! framing/CRC and all v5 control messages are untouched.
+//!
 //! The lean `--zo_wire seeds` mode (HERON only) is the subsystem's
 //! headline: clients upload `ZoUpdate{seeds, gscales}` — one i32 seed
 //! plus n_p gradient scalars per local step — instead of the full θ_l,
@@ -59,6 +70,7 @@
 //! analytic `2(|θc|+|θa|)` ModelSync cost of Table I.
 
 pub mod client;
+pub mod codec;
 pub mod poller;
 pub mod server;
 pub mod storm;

@@ -359,7 +359,12 @@ mod tests {
 
     fn msgs() -> Vec<Msg> {
         vec![
-            Msg::Hello { name: "edge".into(), protocol: 5, lanes: 2 },
+            Msg::Hello {
+                name: "edge".into(),
+                protocol: 6,
+                lanes: 2,
+                codecs: crate::net::codec::SUPPORTED.to_vec(),
+            },
             Msg::ZoUpdate {
                 lane: 0,
                 client: 0,
@@ -375,7 +380,7 @@ mod tests {
                 step: 2,
                 seq: 1,
                 sent_at: 0.25,
-                smashed: vec![1.0; 16],
+                smashed: crate::net::codec::encode_f32(&[1.0; 16]),
                 targets: vec![0, 2, 1],
             },
             Msg::Shutdown { reason: "bye".into() },

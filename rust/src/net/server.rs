@@ -128,6 +128,7 @@ use crate::coordinator::local::{self, LocalOutcome};
 use crate::coordinator::round::Driver;
 use crate::coordinator::server_queue::SmashedBatch;
 use crate::metrics::{RoundRecord, RunRecord};
+use crate::net::codec;
 use crate::net::poller::{
     poll_shard_adopt, shard_conns, Event, EventQueue, PollConn, DEFAULT_SHARDS,
 };
@@ -418,7 +419,7 @@ fn serve_transports_inner(
     let mut lanes_per_conn: Vec<u32> = Vec::with_capacity(n_conns);
     for (j, t) in transports.iter_mut().enumerate() {
         match t.recv()? {
-            Some(Msg::Hello { name, protocol, lanes }) => {
+            Some(Msg::Hello { name, protocol, lanes, codecs }) => {
                 if protocol != VERSION as u32 {
                     let m = Msg::Shutdown {
                         reason: format!(
@@ -434,6 +435,24 @@ fn serve_transports_inner(
                     };
                     let _ = t.send(&m);
                     bail!("conn {j} ({name}): lane count {lanes} out of range");
+                }
+                // capability negotiation (v6): the run's codec picks must
+                // be in this client's advertised set — refusing here
+                // beats a mid-round decode failure
+                for want in [cfg.codec.id(), cfg.grad_codec.id()] {
+                    if !codecs.contains(&want) {
+                        let m = Msg::Shutdown {
+                            reason: format!(
+                                "run requires codec id {want}, client \
+                                 supports {codecs:?}"
+                            ),
+                        };
+                        let _ = t.send(&m);
+                        bail!(
+                            "conn {j} ({name}): does not support codec id \
+                             {want} (advertised {codecs:?})"
+                        );
+                    }
                 }
                 log::info!(
                     "conn {j}: hello from {name} ({}), {lanes} lane(s)",
@@ -526,6 +545,7 @@ fn serve_transports_inner(
             counters: &mut counters,
             opts,
             cfg_json: &cfg_json,
+            codec_ids: [driver.cfg.codec.id(), driver.cfg.grad_codec.id()],
             joiners,
             shard_inbox: &shard_inbox,
         };
@@ -622,6 +642,9 @@ struct RoundsCtx<'a> {
     counters: &'a mut Vec<Arc<WireCounters>>,
     opts: &'a ServeOptions,
     cfg_json: &'a str,
+    /// the run's negotiated codec ids `[codec, grad_codec]` — what a
+    /// rejoining client's `Hello.codecs` must advertise
+    codec_ids: [u8; 2],
     joiners: Option<&'a JoinInbox>,
     shard_inbox: &'a Mutex<Vec<PollConn>>,
 }
@@ -792,9 +815,9 @@ fn adopt_joiners(
         std::mem::take(&mut *g)
     };
     'next: for mut t in pending {
-        let (name, protocol, lanes) = match t.recv() {
-            Ok(Some(Msg::Hello { name, protocol, lanes })) => {
-                (name, protocol, lanes)
+        let (name, protocol, lanes, codecs) = match t.recv() {
+            Ok(Some(Msg::Hello { name, protocol, lanes, codecs })) => {
+                (name, protocol, lanes, codecs)
             }
             Ok(other) => {
                 log::warn!("rejoin: expected Hello, got {other:?}; dropping");
@@ -811,6 +834,20 @@ fn adopt_joiners(
                     "protocol {protocol} unsupported (speak {VERSION})"
                 ),
             });
+            continue;
+        }
+        if let Some(&want) =
+            ctx.codec_ids.iter().find(|id| !codecs.contains(id))
+        {
+            let _ = t.send(&Msg::Shutdown {
+                reason: format!(
+                    "run requires codec id {want}, client supports {codecs:?}"
+                ),
+            });
+            log::warn!(
+                "rejoin from {name}: missing codec id {want} \
+                 (advertised {codecs:?})"
+            );
             continue;
         }
         let Some(j) = (0..dead.len())
@@ -1131,6 +1168,18 @@ fn run_rounds(
                             }
                             continue;
                         }
+                        // decode the codec envelope before anything
+                        // consumes it — a malformed payload is a protocol
+                        // violation, same as a bad frame
+                        let smashed = codec::decode_expect(
+                            &smashed,
+                            driver.cfg.codec.id(),
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "conn {conn}: client {ci} smashed payload: {e}"
+                            )
+                        })?;
                         if let Err(e) = push_and_ack(
                             &queue,
                             &mut ctx.txs[conn],
@@ -1222,6 +1271,15 @@ fn run_rounds(
                             }
                             continue;
                         }
+                        let smashed = codec::decode_expect(
+                            &smashed,
+                            driver.cfg.codec.id(),
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "conn {conn}: client {ci} smashed payload: {e}"
+                            )
+                        })?;
                         let accepted = match push_and_ack(
                             &queue,
                             &mut ctx.txs[conn],
@@ -1403,10 +1461,28 @@ fn run_rounds(
                             check_round(r, r32, "Smashed")?;
                             check_owned(ctx.owner, conn, lane, client, "Smashed")?;
                             check_client(client, ci, "Smashed")?;
+                            // the client encoded once; this decode is the
+                            // server's only view of the activations
+                            let smashed = codec::decode_expect(
+                                &smashed,
+                                driver.cfg.codec.id(),
+                            )
+                            .map_err(|e| {
+                                anyhow::anyhow!(
+                                    "conn {conn}: client {ci} smashed \
+                                     payload: {e}"
+                                )
+                            })?;
                             let (loss, g) = driver.locked_server_exchange(
                                 ci, smashed, targets, &mut sim,
                             )?;
                             losses.push(loss);
+                            // the gradient codec's single encode happens
+                            // here; the client decodes this envelope
+                            let g = codec::encode_grad(
+                                driver.cfg.grad_codec,
+                                &g,
+                            );
                             ctx.txs[conn].send(&Msg::CutGrad {
                                 client,
                                 round: r,

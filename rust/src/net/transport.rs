@@ -495,7 +495,12 @@ mod tests {
     #[test]
     fn loopback_roundtrip_and_counters() {
         let (mut a, mut b) = loopback_pair();
-        let msg = Msg::Hello { name: "x".into(), protocol: 1, lanes: 1 };
+        let msg = Msg::Hello {
+            name: "x".into(),
+            protocol: 1,
+            lanes: 1,
+            codecs: vec![0],
+        };
         a.send(&msg).unwrap();
         let got = b.recv().unwrap().unwrap();
         assert_eq!(got, msg);

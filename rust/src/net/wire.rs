@@ -49,7 +49,14 @@ pub const MAGIC: [u8; 2] = *b"HN";
 /// sequence an uninterrupted one would see). Both fields are decoded
 /// unconditionally — v4 and v5 peers refuse each other at the
 /// handshake, as for any bump.
-pub const VERSION: u8 = 5;
+/// v6: payload codecs — `Hello` gains `codecs` (the codec ids this
+/// client can decode, see `net::codec::SUPPORTED`), and the
+/// `Smashed`/`SmashedSeq` smashed field and the `CutGrad` gradient
+/// become opaque self-describing codec envelopes (`Vec<u8>`, layout in
+/// `net::codec`) instead of raw f32 vectors. Only the payload envelope
+/// changed: frame framing/CRC and every v5 control message
+/// (`Assign`/`ModelSync`/`ZoUpdate`/acks/barriers/…) are untouched.
+pub const VERSION: u8 = 6;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -143,8 +150,11 @@ pub fn crc32(data: &[u8]) -> u32 {
 pub enum Msg {
     /// client → server: first message on a fresh connection. `lanes` is
     /// the number of virtual clients this connection multiplexes (v4);
-    /// a plain `connect` declares 1.
-    Hello { name: String, protocol: u32, lanes: u32 },
+    /// a plain `connect` declares 1. `codecs` (v6) advertises the
+    /// payload codec ids this client can decode — the dispatcher
+    /// validates its `RunConfig` codec choice against it and refuses
+    /// the connection on a miss.
+    Hello { name: String, protocol: u32, lanes: u32, codecs: Vec<u8> },
     /// server → client: logical client ids one lane owns + the full run
     /// config (exact-string JSON, see `RunConfig::to_json`). Sent once
     /// per declared lane, in lane order. `rejoin_round` is the round
@@ -185,13 +195,16 @@ pub enum Msg {
         gscales: Vec<f32>,
     },
     /// client → server: one smashed-data upload (decoupled: enqueued for
-    /// the barrier drain; locked: answered by a `CutGrad`).
+    /// the barrier drain; locked: answered by a `CutGrad`). `smashed`
+    /// (v6) is a self-describing codec envelope (`net::codec`) under
+    /// the run's negotiated `--codec`; the dispatcher decodes it before
+    /// consumption.
     Smashed {
         lane: u32,
         client: u32,
         round: u32,
         step: u32,
-        smashed: Vec<f32>,
+        smashed: Vec<u8>,
         targets: Vec<i32>,
     },
     /// client → server (`--drain stream` runs only): a smashed upload
@@ -208,11 +221,12 @@ pub enum Msg {
         step: u32,
         seq: u32,
         sent_at: f64,
-        smashed: Vec<f32>,
+        smashed: Vec<u8>,
         targets: Vec<i32>,
     },
     /// server → client: locked-exchange reply — loss + cut gradient.
-    CutGrad { client: u32, round: u32, step: u32, loss: f32, g: Vec<f32> },
+    /// `g` (v6) is a codec envelope under the run's `--grad_codec`.
+    CutGrad { client: u32, round: u32, step: u32, loss: f32, g: Vec<u8> },
     /// server → client: FSL-SAGE alignment feedback (cut gradient for the
     /// client's last upload); answered by a `ModelSync` up.
     AlignGrad { client: u32, round: u32, g: Vec<f32> },
@@ -317,6 +331,10 @@ impl Wr {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
+    fn vec_u8(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
     fn vec_u32(&mut self, v: &[u32]) {
         self.u32(v.len() as u32);
         for &x in v {
@@ -389,6 +407,10 @@ impl<'a> Rd<'a> {
         String::from_utf8(bytes.to_vec())
             .map_err(|_| WireError::Malformed("non-utf8 string"))
     }
+    fn vec_u8(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.vec_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
     fn vec_u32(&mut self) -> Result<Vec<u32>, WireError> {
         let n = self.vec_len(4)?;
         (0..n).map(|_| self.u32()).collect()
@@ -415,10 +437,11 @@ impl<'a> Rd<'a> {
 
 fn encode_payload(msg: &Msg, w: &mut Wr) {
     match msg {
-        Msg::Hello { name, protocol, lanes } => {
+        Msg::Hello { name, protocol, lanes, codecs } => {
             w.str(name);
             w.u32(*protocol);
             w.u32(*lanes);
+            w.vec_u8(codecs);
         }
         Msg::Assign { lane, client_ids, config, rejoin_round, phases } => {
             w.u32(*lane);
@@ -450,7 +473,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*client);
             w.u32(*round);
             w.u32(*step);
-            w.vec_f32(smashed);
+            w.vec_u8(smashed);
             w.vec_i32(targets);
         }
         Msg::SmashedSeq {
@@ -469,7 +492,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*step);
             w.u32(*seq);
             w.f64(*sent_at);
-            w.vec_f32(smashed);
+            w.vec_u8(smashed);
             w.vec_i32(targets);
         }
         Msg::CutGrad { client, round, step, loss, g } => {
@@ -477,7 +500,7 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
             w.u32(*round);
             w.u32(*step);
             w.f32(*loss);
-            w.vec_f32(g);
+            w.vec_u8(g);
         }
         Msg::AlignGrad { client, round, g } => {
             w.u32(*client);
@@ -527,6 +550,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             name: r.str()?,
             protocol: r.u32()?,
             lanes: r.u32()?,
+            codecs: r.vec_u8()?,
         },
         2 => Msg::Assign {
             lane: r.u32()?,
@@ -555,7 +579,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             client: r.u32()?,
             round: r.u32()?,
             step: r.u32()?,
-            smashed: r.vec_f32()?,
+            smashed: r.vec_u8()?,
             targets: r.vec_i32()?,
         },
         7 => Msg::CutGrad {
@@ -563,7 +587,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             round: r.u32()?,
             step: r.u32()?,
             loss: r.f32()?,
-            g: r.vec_f32()?,
+            g: r.vec_u8()?,
         },
         8 => Msg::AlignGrad {
             client: r.u32()?,
@@ -604,7 +628,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             step: r.u32()?,
             seq: r.u32()?,
             sent_at: r.f64()?,
-            smashed: r.vec_f32()?,
+            smashed: r.vec_u8()?,
             targets: r.vec_i32()?,
         },
         t => return Err(WireError::BadTag(t)),
@@ -749,7 +773,12 @@ mod tests {
 
     fn samples() -> Vec<Msg> {
         vec![
-            Msg::Hello { name: "edge-0".into(), protocol: 1, lanes: 64 },
+            Msg::Hello {
+                name: "edge-0".into(),
+                protocol: 1,
+                lanes: 64,
+                codecs: crate::net::codec::SUPPORTED.to_vec(),
+            },
             Msg::Assign {
                 lane: 7,
                 client_ids: vec![0, 2, 4],
@@ -777,7 +806,7 @@ mod tests {
                 client: 1,
                 round: 0,
                 step: 2,
-                smashed: vec![0.0; 8],
+                smashed: crate::net::codec::encode_f32(&[0.0; 8]),
                 targets: vec![3, 1, 4],
             },
             Msg::SmashedSeq {
@@ -787,7 +816,7 @@ mod tests {
                 step: 2,
                 seq: 1,
                 sent_at: 3.5,
-                smashed: vec![0.25; 8],
+                smashed: crate::net::codec::encode_int8(&[0.25; 8]),
                 targets: vec![3, 1, 4],
             },
             Msg::CutGrad {
@@ -795,7 +824,7 @@ mod tests {
                 round: 0,
                 step: 2,
                 loss: 2.75,
-                g: vec![-1.0, 1.0],
+                g: crate::net::codec::encode_f32(&[-1.0, 1.0]),
             },
             Msg::AlignGrad { client: 4, round: 9, g: vec![0.125] },
             Msg::UploadAck {

@@ -125,6 +125,7 @@ fn client_killed_mid_round_is_cut_and_the_run_completes() {
                     name: "flaky".into(),
                     protocol: VERSION as u32,
                     lanes: 1,
+                    codecs: heron_sfl::net::codec::SUPPORTED.to_vec(),
                 })
                 .expect("hello");
                 loop {
@@ -196,6 +197,7 @@ fn mute_straggler_is_cut_at_the_wall_deadline_every_round() {
                     name: "mute".into(),
                     protocol: VERSION as u32,
                     lanes: 1,
+                    codecs: heron_sfl::net::codec::SUPPORTED.to_vec(),
                 })
                 .expect("hello");
                 // listen politely, upload nothing, leave on Shutdown

@@ -17,6 +17,7 @@ use heron_sfl::coordinator::accounting::CostBook;
 use heron_sfl::coordinator::algorithms::Algorithm;
 use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
 use heron_sfl::coordinator::round::Driver;
+use heron_sfl::net::codec::{self, Codec, GradCodec};
 use heron_sfl::net::transport::{loopback_pair, Transport};
 use heron_sfl::net::wire::FRAME_OVERHEAD;
 use heron_sfl::net::{
@@ -254,7 +255,8 @@ fn expected_round_bytes(
         v,
         c.algorithm,
         c.n_pert as u64,
-    );
+    )
+    .with_codec(c.codec, c.grad_codec);
     let p = c.n_clients as u64; // participation = 1.0 here
     let conns = n_conns as u64;
     let h = c.local_steps as u64;
@@ -272,16 +274,25 @@ fn expected_round_bytes(
     // v4: every routed frame carries the 4-byte lane id up front
     let model_down = f + 16 + 4 * nl; // lane + round + client + vec<f32> θ
     let model_up = model_down;
-    // ids(16, lane included) + two length-prefixed vectors (smashed
-    // f32s, target i32s)
-    let smashed = f + 24 + book.smashed_bytes + 4 * targets;
+    // ids(16, lane included) + two length-prefixed vectors: the v6
+    // smashed envelope (vec<u8>: codec header + the CostBook's
+    // information bytes) and the target i32s — the codec header is
+    // exactly the "explicit per-message overhead" of this cross-check
+    let smashed = f + 24
+        + codec::header_bytes(c.codec)
+        + book.smashed_bytes
+        + 4 * targets;
     let ack = f + 17; // ids + bool + empty reason string
     // ids (lane + client + round) + seeds + scalars + gscales
     let zo_update =
         f + 12 + (4 + 4 * h) + (4 + 4 * h) + (4 + 4 * gs_elems);
     let local_done = f + 44;
-    let cut_grad = f + 20 + book.cutgrad_bytes; // ids + loss + vec<f32> g
-    let align_grad = f + 12 + book.cutgrad_bytes; // ids + vec<f32> g
+    // ids + loss + the v6 cut-gradient envelope (vec<u8>)
+    let cut_grad = f + 20
+        + codec::header_bytes_grad(c.grad_codec)
+        + book.cutgrad_bytes;
+    // AlignGrad stays a raw vec<f32> (not a codec envelope): ids + g
+    let align_grad = f + 12 + book.cutgrad_bytes;
 
     if c.algorithm.is_decoupled() {
         // seeds mode: the ZoUpdate record replaces the θ upload entirely
@@ -306,81 +317,226 @@ fn expected_round_bytes(
     }
 }
 
+/// Measured loopback bytes for `c` (one logical client per connection)
+/// vs the analytic `CostBook` formulas — codec-aware on both sides: the
+/// book carries the compressed information bytes, the expected wire
+/// layout adds the codec header as explicit per-message overhead.
+fn assert_measured_bytes_match(
+    s: &Session,
+    c: &RunConfig,
+    n_clients: usize,
+) {
+    let tag = format!(
+        "{}/{}/{}",
+        c.algorithm.name(),
+        c.codec.name(),
+        c.grad_codec.spec()
+    );
+    let (net, _) = net_run(s, c, n_clients); // 1 client per conn
+    let v = s.variant(&c.variant).unwrap();
+    let book = heron_sfl::coordinator::accounting::CostBook::new(
+        v,
+        c.algorithm,
+        c.n_pert as u64,
+    )
+    .with_codec(c.codec, c.grad_codec);
+    // FSL-SAGE emits one feedback per cut-grad upload: uploads at
+    // steps k, 2k, ... where step % (k * align_every) == 0
+    let uploads = (c.local_steps / c.upload_every) as u64;
+    let align_msgs = if c.algorithm == Algorithm::FslSage {
+        n_clients as u64 * uploads
+    } else {
+        0
+    };
+    let want = expected_round_bytes(s, c, n_clients, align_msgs);
+
+    // the analytic CostBook number for the same round, from the
+    // same formulas the in-process counter uses
+    let p = n_clients as u64;
+    let analytic_round = match c.algorithm {
+        Algorithm::SflV1 | Algorithm::SflV2 => {
+            p * (c.local_steps as u64
+                * (book.smashed_bytes + book.cutgrad_bytes)
+                + book.comm_per_round_sync())
+        }
+        _ => {
+            p * (uploads * book.smashed_bytes
+                + book.comm_per_round_sync())
+                + align_msgs * book.cutgrad_bytes
+        }
+    };
+
+    for (round, t) in net.record.rounds.iter().enumerate() {
+        let delta = if round == 0 {
+            t.comm_bytes_cum
+        } else {
+            t.comm_bytes_cum
+                - net.record.rounds[round - 1].comm_bytes_cum
+        };
+        assert_eq!(
+            delta, analytic_round,
+            "{tag}: analytic round formula drifted (round {round})"
+        );
+    }
+
+    // measured per-round traffic (server view), recorded in the
+    // run summary as cumulative sums over RoundTiming.wire
+    let rounds = c.rounds as u64;
+    let measured_sent = net.record.summary["wire_bytes_sent"] as u64;
+    let measured_recv = net.record.summary["wire_bytes_recv"] as u64;
+    assert_eq!(
+        measured_sent,
+        want.sent * rounds,
+        "{tag}: server->client bytes (analytic {} + overhead {})",
+        analytic_round,
+        want.sent as i64 - analytic_round as i64,
+    );
+    assert_eq!(
+        measured_recv,
+        want.recv * rounds,
+        "{tag}: client->server bytes"
+    );
+}
+
 #[test]
 fn measured_wire_bytes_match_analytic_plus_pinned_overhead() {
     with_session(|s| {
         for alg in Algorithm::all() {
-            let n_clients = 3;
-            let c = cfg(alg, n_clients);
-            let (net, _) = net_run(s, &c, n_clients); // 1 client per conn
-            let v = s.variant(&c.variant).unwrap();
-            let book = heron_sfl::coordinator::accounting::CostBook::new(
-                v,
-                c.algorithm,
-                c.n_pert as u64,
+            assert_measured_bytes_match(s, &cfg(alg, 3), 3);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// payload codecs (v6): pinned identity, lossy legs, per-codec accounting
+// ---------------------------------------------------------------------------
+
+/// Per-codec accounting cross-check: for every algorithm that ships
+/// smashed payloads, the measured loopback bytes under each lossy codec
+/// equal the CostBook's compressed formula plus the explicit codec
+/// header overhead — and the top-k cut-gradient legs likewise on both
+/// locked baselines. (The f32 legs are covered above: `Codec::F32` is
+/// the default every other loopback test runs under.)
+#[test]
+fn measured_wire_bytes_match_analytic_for_every_codec() {
+    with_session(|s| {
+        for alg in Algorithm::all() {
+            for smashed_codec in [Codec::Int8, Codec::Int4] {
+                let mut c = cfg(alg, 3);
+                c.codec = smashed_codec;
+                assert_measured_bytes_match(s, &c, 3);
+            }
+        }
+        for alg in [Algorithm::SflV1, Algorithm::SflV2] {
+            let mut c = cfg(alg, 3);
+            c.codec = Codec::Int8;
+            c.grad_codec = GradCodec::TopK(0.25);
+            assert_measured_bytes_match(s, &c, 3);
+        }
+    });
+}
+
+/// The encode-once rule, end to end: under a lossy codec the networked
+/// run must still be bit-identical to the in-process driver — the
+/// quantization happens exactly once at the producer, so both paths see
+/// the same post-roundtrip values.
+fn assert_codec_net_matches_in_process(c: &RunConfig, n_conns: usize) {
+    with_session(|s| {
+        let tag = format!(
+            "{}/{}/{}",
+            c.algorithm.name(),
+            c.codec.name(),
+            c.grad_codec.spec()
+        );
+        let (rec, theta_l, theta_s) = in_process(s, c);
+        let (net, _) = net_run(s, c, n_conns);
+        assert_eq!(rec.rounds.len(), net.record.rounds.len(), "{tag}");
+        for (a, b) in rec.rounds.iter().zip(&net.record.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{tag}: train loss, round {}",
+                a.round
             );
-            // FSL-SAGE emits one feedback per cut-grad upload: uploads at
-            // steps k, 2k, ... where step % (k * align_every) == 0
-            let uploads = (c.local_steps / c.upload_every) as u64;
-            let align_msgs = if alg == Algorithm::FslSage {
-                n_clients as u64 * uploads
-            } else {
-                0
-            };
-            let want = expected_round_bytes(s, &c, n_clients, align_msgs);
+            assert_eq!(
+                a.eval_metric.to_bits(),
+                b.eval_metric.to_bits(),
+                "{tag}: eval metric, round {}",
+                a.round
+            );
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum, "{tag}");
+        }
+        assert_eq!(theta_l, net.final_theta_l, "{tag}: θ_l");
+        assert_eq!(theta_s, net.final_theta_s, "{tag}: θ_s");
+    });
+}
 
-            // the analytic CostBook number for the same round, from the
-            // same formulas the in-process counter uses
-            let p = n_clients as u64;
-            let analytic_round = match alg {
-                Algorithm::SflV1 | Algorithm::SflV2 => {
-                    p * (c.local_steps as u64
-                        * (book.smashed_bytes + book.cutgrad_bytes)
-                        + book.comm_per_round_sync())
-                }
-                _ => {
-                    p * (uploads * book.smashed_bytes
-                        + book.comm_per_round_sync())
-                        + align_msgs * book.cutgrad_bytes
-                }
-            };
+#[test]
+fn int8_codec_net_run_bit_identical_for_every_algorithm() {
+    for alg in Algorithm::all() {
+        let mut c = cfg(alg, 3);
+        c.codec = Codec::Int8;
+        assert_codec_net_matches_in_process(&c, 3);
+    }
+}
 
-            for (round, t) in net.record.rounds.iter().enumerate() {
-                let delta = if round == 0 {
-                    t.comm_bytes_cum
-                } else {
-                    t.comm_bytes_cum
-                        - net.record.rounds[round - 1].comm_bytes_cum
-                };
+#[test]
+fn int4_codec_net_run_bit_identical_decoupled_and_locked() {
+    for alg in [Algorithm::Heron, Algorithm::SflV2] {
+        let mut c = cfg(alg, 3);
+        c.codec = Codec::Int4;
+        assert_codec_net_matches_in_process(&c, 3);
+    }
+}
+
+#[test]
+fn topk_cut_gradient_net_run_bit_identical_locked() {
+    for alg in [Algorithm::SflV1, Algorithm::SflV2] {
+        let mut c = cfg(alg, 3);
+        c.grad_codec = GradCodec::TopK(0.25);
+        assert_codec_net_matches_in_process(&c, 3);
+    }
+}
+
+/// The Pareto direction, measured: the lossy legs put strictly fewer
+/// bytes on the wire than the f32 identity leg — and on the decoupled
+/// path the client-phase train losses stay *bitwise* equal to f32,
+/// because quantizing the smashed upload only perturbs the server/eval
+/// side, never the client's local step.
+#[test]
+fn lossy_codecs_slim_measured_wire_and_keep_client_losses() {
+    with_session(|s| {
+        let base = cfg(Algorithm::Heron, 3);
+        let (f32_net, _) = net_run(s, &base, 3);
+        for smashed_codec in [Codec::Int8, Codec::Int4] {
+            let mut c = base.clone();
+            c.codec = smashed_codec;
+            let (net, _) = net_run(s, &c, 3);
+            assert!(
+                net.wire.bytes_recv < f32_net.wire.bytes_recv,
+                "{}: measured upload {} not below f32 {}",
+                smashed_codec.name(),
+                net.wire.bytes_recv,
+                f32_net.wire.bytes_recv
+            );
+            assert!(
+                net.record.summary["comm_bytes"]
+                    < f32_net.record.summary["comm_bytes"],
+                "{}: analytic comm not lean",
+                smashed_codec.name()
+            );
+            for (a, b) in
+                f32_net.record.rounds.iter().zip(&net.record.rounds)
+            {
                 assert_eq!(
-                    delta,
-                    analytic_round,
-                    "{}: analytic round formula drifted (round {round})",
-                    alg.name()
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{}: decoupled train loss must not feel the smashed \
+                     codec (round {})",
+                    smashed_codec.name(),
+                    a.round
                 );
             }
-
-            // measured per-round traffic (server view), recorded in the
-            // run summary as cumulative sums over RoundTiming.wire
-            let rounds = c.rounds as u64;
-            let measured_sent =
-                net.record.summary["wire_bytes_sent"] as u64;
-            let measured_recv =
-                net.record.summary["wire_bytes_recv"] as u64;
-            assert_eq!(
-                measured_sent,
-                want.sent * rounds,
-                "{}: server->client bytes (analytic {} + overhead {})",
-                alg.name(),
-                analytic_round,
-                want.sent as i64 - analytic_round as i64,
-            );
-            assert_eq!(
-                measured_recv,
-                want.recv * rounds,
-                "{}: client->server bytes",
-                alg.name()
-            );
         }
     });
 }

@@ -36,6 +36,13 @@ fn arb_u32s(g: &mut Gen, max: usize) -> Vec<u32> {
     (0..n).map(|_| g.u64() as u32).collect()
 }
 
+/// Raw bytes — v6 payload envelopes (smashed / cut-gradient) are opaque
+/// codec output at the wire layer, so any byte string must roundtrip.
+fn arb_u8s(g: &mut Gen, max: usize) -> Vec<u8> {
+    let n = g.usize_in(0..max);
+    (0..n).map(|_| g.u64() as u8).collect()
+}
+
 /// One random message of a random type.
 fn arb_msg(g: &mut Gen) -> Msg {
     match g.usize_in(0..13) {
@@ -43,6 +50,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             name: arb_string(g),
             protocol: g.u64() as u32,
             lanes: g.u64() as u32,
+            codecs: arb_u8s(g, 8),
         },
         1 => Msg::Assign {
             lane: g.u64() as u32,
@@ -74,7 +82,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             client: g.u64() as u32,
             round: g.u64() as u32,
             step: g.u64() as u32,
-            smashed: arb_f32s(g, 256),
+            smashed: arb_u8s(g, 1024),
             targets: arb_i32s(g, 64),
         },
         6 => Msg::CutGrad {
@@ -82,7 +90,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             round: g.u64() as u32,
             step: g.u64() as u32,
             loss: g.f32_in(-100.0..100.0),
-            g: arb_f32s(g, 256),
+            g: arb_u8s(g, 1024),
         },
         7 => Msg::AlignGrad {
             client: g.u64() as u32,
@@ -118,7 +126,7 @@ fn arb_msg(g: &mut Gen) -> Msg {
             step: g.u64() as u32,
             seq: g.u64() as u32,
             sent_at: g.f64_in(0.0..1e6),
-            smashed: arb_f32s(g, 256),
+            smashed: arb_u8s(g, 1024),
             targets: arb_i32s(g, 64),
         },
         _ => Msg::Shutdown { reason: arb_string(g) },
@@ -229,6 +237,7 @@ fn hostile_length_fields_do_not_allocate_or_panic() {
         name: "h".into(),
         protocol: 1,
         lanes: 1,
+        codecs: heron_sfl::net::codec::SUPPORTED.to_vec(),
     });
     let mut f = frame.clone();
     f[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
