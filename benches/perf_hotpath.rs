@@ -167,6 +167,36 @@ fn main() -> Result<()> {
         std::hint::black_box(&replay_out);
     });
 
+    // seed_agg client-side aggregate replay: FedAvg 4 participants'
+    // 4-step trajectories over 64k params straight from a SeedSync
+    // roster — the per-round client cost `--zo_wire seed_agg` trades
+    // for the eliminated dense θ broadcast
+    let (agg_p, agg_h, agg_np) = (4usize, 4usize, 2usize);
+    let agg_seeds: Vec<i32> =
+        (0..agg_p * agg_h).map(|i| 0x5EED + i as i32).collect();
+    let agg_gscales: Vec<f32> = (0..agg_p * agg_h * agg_np)
+        .map(|i| ((i % 7) as f32 - 3.0) * 0.015625)
+        .collect();
+    let agg_records: Vec<(&[i32], &[f32])> = (0..agg_p)
+        .map(|i| {
+            (
+                &agg_seeds[i * agg_h..(i + 1) * agg_h],
+                &agg_gscales[i * agg_h * agg_np..(i + 1) * agg_h * agg_np],
+            )
+        })
+        .collect();
+    let agg_weights = vec![1.0f64; agg_p];
+    b.run("seed_agg_replay_64k", || {
+        let out = heron_sfl::zo::aggregate_trajectories(
+            &theta64,
+            &agg_records,
+            &agg_weights,
+            agg_np,
+        )
+        .expect("aggregate");
+        std::hint::black_box(&out);
+    });
+
     // stream-drain queue mechanics: 16 × 4096-f32 smashed batches (64k
     // elements) through the bounded MPSC — push + arrival-order FIFO pop,
     // the per-round queue work `--drain stream` adds to the hot path
@@ -304,6 +334,30 @@ fn main() -> Result<()> {
         heron_sfl::coordinator::accounting::fmt_bytes(st.alloc_avoided_bytes),
     );
 
+    // analytic downlink of one HERON round sync for the bench preset:
+    // the dense θ_l broadcast vs the dimension-free SeedSync roster —
+    // the byte claim behind the seed_agg_replay_64k timing above
+    let vb = heron_sfl::experiments::vision_base(1);
+    let agg_book = heron_sfl::coordinator::accounting::CostBook::new(
+        session.variant(&vb.variant)?,
+        vb.algorithm,
+        vb.n_pert as u64,
+    )
+    .with_zo_wire(
+        heron_sfl::coordinator::config::ZoWireMode::SeedAgg,
+        vb.local_steps as u64,
+        vb.participants_per_round() as u64,
+    );
+    let downlink_dense = agg_book.downlink_per_round_sync(0);
+    let downlink_lean = agg_book.downlink_per_round_sync(1);
+    println!(
+        "  -> per-round sync downlink: dense {} vs seed_agg roster {} \
+         ({:.1}x leaner)",
+        heron_sfl::coordinator::accounting::fmt_bytes(downlink_dense),
+        heron_sfl::coordinator::accounting::fmt_bytes(downlink_lean),
+        downlink_dense as f64 / downlink_lean.max(1) as f64,
+    );
+
     if let Ok(path) = std::env::var("BENCH_OUT") {
         write_report(
             &path,
@@ -315,6 +369,8 @@ fn main() -> Result<()> {
             round_misses,
             mk_barrier,
             mk_stream,
+            downlink_dense,
+            downlink_lean,
         )?;
         // dump the live metrics registry (counters/histograms the bench
         // itself populated — queue waits, client step counters, runtime
@@ -353,6 +409,8 @@ fn write_report(
     round_misses: u64,
     mk_barrier: f64,
     mk_stream: f64,
+    downlink_dense: u64,
+    downlink_lean: u64,
 ) -> Result<()> {
     let benchmarks: Vec<Value> = results
         .iter()
@@ -397,6 +455,16 @@ fn write_report(
         // arrival-order mid-round consumption (`--drain stream`)
         ("server_makespan_barrier_seconds", Value::Num(mk_barrier)),
         ("server_makespan_stream_seconds", Value::Num(mk_stream)),
+        // analytic per-round sync downlink for the bench preset: the
+        // dense θ_l broadcast vs the wire v7 seed_agg SeedSync roster
+        (
+            "downlink_dense_sync_bytes_per_round",
+            Value::Num(downlink_dense as f64),
+        ),
+        (
+            "downlink_seed_agg_sync_bytes_per_round",
+            Value::Num(downlink_lean as f64),
+        ),
     ]);
     std::fs::write(path, report.to_string_pretty())?;
     Ok(())

@@ -15,6 +15,8 @@ use crate::net::codec::{self, Codec, GradCodec};
 use crate::runtime::manifest::VariantSpec;
 
 pub const BYTES_F32: u64 = 4;
+pub const BYTES_F64: u64 = 8;
+pub const BYTES_U32: u64 = 4;
 
 /// Per-step / per-round client resource deltas for one algorithm on one
 /// model variant.
@@ -40,6 +42,9 @@ pub struct CostBook {
     pub zo_wire: ZoWireMode,
     /// local steps per round (h) — sizes the seeds-mode upload record
     pub local_steps: u64,
+    /// participants per round — sizes the `seed_agg` SeedSync downlink,
+    /// which ships every cohort member's record to every client
+    pub cohort: u64,
     /// smashed payload codec the byte formulas model (`f32` unless
     /// rebound via [`Self::with_codec`])
     pub codec: Codec,
@@ -92,6 +97,7 @@ impl CostBook {
             n_pert,
             zo_wire: ZoWireMode::Theta,
             local_steps: 0,
+            cohort: 1,
             codec: Codec::F32,
             grad_codec: GradCodec::F32,
         }
@@ -100,10 +106,19 @@ impl CostBook {
     /// Rebind the book to a `--zo_wire` mode. `Seeds` swaps the HERON
     /// upload leg of the round sync for the per-step
     /// seed + per-probe-scalar record the server replays — the lean
-    /// numbers Table I's `2(|θc|+|θa|)` sync collapses to.
-    pub fn with_zo_wire(mut self, mode: ZoWireMode, local_steps: u64) -> Self {
+    /// numbers Table I's `2(|θc|+|θa|)` sync collapses to. `SeedAgg`
+    /// additionally swaps the steady-state downlink for the `SeedSync`
+    /// broadcast, whose size scales with the round `cohort` (the
+    /// participants whose records it carries), not |θ_l|.
+    pub fn with_zo_wire(
+        mut self,
+        mode: ZoWireMode,
+        local_steps: u64,
+        cohort: u64,
+    ) -> Self {
         self.zo_wire = mode;
         self.local_steps = local_steps;
+        self.cohort = cohort.max(1);
         self
     }
 
@@ -147,19 +162,57 @@ impl CostBook {
         }
     }
 
-    /// Per-round model synchronization bytes (download init + upload
-    /// update). In the HERON `seeds` wire mode the upload leg is the
-    /// replay record instead of θ_l — the measured wire bytes then drop
-    /// below the analytic theta-mode sync, which is the paper's title
-    /// claim end to end.
-    pub fn comm_per_round_sync(&self) -> u64 {
+    /// Bytes of one participant's entry in the wire-v7 `SeedSync`
+    /// broadcast: its u32 client id, its f64 FedAvg weight, and its
+    /// per-step (seed, n_p scalars) replay record.
+    pub fn seed_sync_entry_bytes(&self) -> u64 {
+        BYTES_U32 + BYTES_F64 + self.zo_record_bytes()
+    }
+
+    /// Analytic *downlink* bytes of the round sync for one client at a
+    /// given round. Round 0 (and every restore/rejoin bootstrap) ships
+    /// the dense θ_l in every mode; past that, `seed_agg` replaces the
+    /// broadcast with the whole cohort's SeedSync entries —
+    /// O(cohort·h·n_p), independent of |θ_l|.
+    pub fn downlink_per_round_sync(&self, round: u64) -> u64 {
         match self.algorithm {
-            Algorithm::SflV1 | Algorithm::SflV2 => 2 * self.client_param_bytes,
-            Algorithm::Heron if self.zo_wire == ZoWireMode::Seeds => {
-                self.local_param_bytes + self.zo_record_bytes()
+            Algorithm::SflV1 | Algorithm::SflV2 => self.client_param_bytes,
+            Algorithm::Heron
+                if self.zo_wire == ZoWireMode::SeedAgg && round > 0 =>
+            {
+                self.cohort.max(1) * self.seed_sync_entry_bytes()
             }
-            _ => 2 * self.local_param_bytes,
+            _ => self.local_param_bytes,
         }
+    }
+
+    /// Analytic *uplink* bytes of the round sync for one client (the
+    /// lean wire modes upload the replay record instead of θ_l).
+    pub fn uplink_per_round_sync(&self) -> u64 {
+        match self.algorithm {
+            Algorithm::SflV1 | Algorithm::SflV2 => self.client_param_bytes,
+            Algorithm::Heron if self.zo_wire.lean_uplink() => {
+                self.zo_record_bytes()
+            }
+            _ => self.local_param_bytes,
+        }
+    }
+
+    /// Per-round model synchronization bytes (download + upload) at a
+    /// given round index — only `seed_agg` distinguishes the round-0
+    /// dense bootstrap from the steady state.
+    pub fn comm_per_round_sync_at(&self, round: u64) -> u64 {
+        self.downlink_per_round_sync(round) + self.uplink_per_round_sync()
+    }
+
+    /// Per-round model synchronization bytes (download init + upload
+    /// update), steady state. In the HERON `seeds` wire mode the upload
+    /// leg is the replay record instead of θ_l — the measured wire bytes
+    /// then drop below the analytic theta-mode sync, which is the
+    /// paper's title claim end to end. `seed_agg` makes the downlink
+    /// lean too (HO-SFL's dimension-free aggregation).
+    pub fn comm_per_round_sync(&self) -> u64 {
+        self.comm_per_round_sync_at(1)
     }
 
     /// Extra per-alignment communication for FSL-SAGE (cut-gradient
@@ -319,7 +372,7 @@ mod tests {
         let np = 2u64;
         let theta = CostBook::new(&v, Algorithm::Heron, np);
         let seeds = CostBook::new(&v, Algorithm::Heron, np)
-            .with_zo_wire(ZoWireMode::Seeds, h);
+            .with_zo_wire(ZoWireMode::Seeds, h, 5);
         // exact lean formula: θ_l down + h·(seed + n_p scalars) up
         assert_eq!(seeds.zo_record_bytes(), h * (4 + np * 4));
         assert_eq!(
@@ -332,11 +385,51 @@ mod tests {
         assert!(seeds.zo_record_bytes() < seeds.local_param_bytes);
         // other algorithms ignore the binding (no replay to speak of)
         let cse = CostBook::new(&v, Algorithm::CseFsl, 1)
-            .with_zo_wire(ZoWireMode::Seeds, h);
+            .with_zo_wire(ZoWireMode::Seeds, h, 5);
         assert_eq!(
             cse.comm_per_round_sync(),
             CostBook::new(&v, Algorithm::CseFsl, 1).comm_per_round_sync()
         );
+    }
+
+    #[test]
+    fn seed_agg_downlink_is_dimension_free_and_round_indexed() {
+        let v = fake_variant();
+        let (h, np, cohort) = (4u64, 2u64, 5u64);
+        let seeds = CostBook::new(&v, Algorithm::Heron, np)
+            .with_zo_wire(ZoWireMode::Seeds, h, cohort);
+        let agg = CostBook::new(&v, Algorithm::Heron, np)
+            .with_zo_wire(ZoWireMode::SeedAgg, h, cohort);
+        // one SeedSync entry: u32 id + f64 weight + h·(seed + n_p scalars)
+        assert_eq!(agg.seed_sync_entry_bytes(), 4 + 8 + h * (4 + np * 4));
+        // round 0 bootstraps dense in every mode
+        assert_eq!(agg.downlink_per_round_sync(0), agg.local_param_bytes);
+        assert_eq!(agg.comm_per_round_sync_at(0), seeds.comm_per_round_sync());
+        // steady state: the whole cohort's entries, independent of |θ_l|
+        assert_eq!(
+            agg.downlink_per_round_sync(1),
+            cohort * (12 + h * (4 + np * 4))
+        );
+        assert_eq!(
+            agg.comm_per_round_sync(),
+            cohort * (12 + h * (4 + np * 4)) + h * (4 + np * 4)
+        );
+        // strictly below both the dense broadcast and the seeds-mode
+        // downlink (which is the same dense broadcast)
+        assert!(
+            agg.downlink_per_round_sync(1) < seeds.downlink_per_round_sync(1)
+        );
+        assert!(agg.comm_per_round_sync() < seeds.comm_per_round_sync());
+        // uplink stays the lean record in both modes
+        assert_eq!(agg.uplink_per_round_sync(), seeds.uplink_per_round_sync());
+        assert_eq!(agg.uplink_per_round_sync(), agg.zo_record_bytes());
+        // split sums to the combined figure at every round index
+        for r in 0..3 {
+            assert_eq!(
+                agg.comm_per_round_sync_at(r),
+                agg.downlink_per_round_sync(r) + agg.uplink_per_round_sync()
+            );
+        }
     }
 
     #[test]

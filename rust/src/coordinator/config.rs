@@ -10,10 +10,10 @@ use crate::util::json::Value;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-/// What HERON clients put on the wire after their local phase
-/// (`--zo_wire`). The θ trajectory is bit-identical in both modes
-/// (pinned in `rust/tests/net_loopback.rs`); only the upload payload and
-/// the comm accounting change.
+/// What HERON puts on the wire around the local phase (`--zo_wire`).
+/// The θ trajectory is bit-identical in every mode (pinned in
+/// `rust/tests/net_loopback.rs`); only the wire payloads and the comm
+/// accounting change.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ZoWireMode {
     /// Upload the updated θ_l (the general protocol; every algorithm).
@@ -24,6 +24,15 @@ pub enum ZoWireMode {
     /// `zo::stream::replay_update` (paper §IV / Remark 4) — O(h·n_p)
     /// floats up instead of |θ_c|+|θ_a|.
     Seeds,
+    /// HERON only: lean in *both* directions (wire v7). Uploads are the
+    /// `Seeds` record; the downlink `ModelSync` broadcast is replaced by
+    /// a `SeedSync` carrying every participant's `(seeds, gscales)`
+    /// record plus its FedAvg weight, and each client reconstructs the
+    /// aggregate locally via `zo::aggregate_trajectories` from its
+    /// cached round-start θ_l (HO-SFL's dimension-free aggregation).
+    /// Only the first round (and any restore/rejoin bootstrap) ships a
+    /// dense θ_l.
+    SeedAgg,
 }
 
 impl ZoWireMode {
@@ -31,6 +40,7 @@ impl ZoWireMode {
         match self {
             ZoWireMode::Theta => "theta",
             ZoWireMode::Seeds => "seeds",
+            ZoWireMode::SeedAgg => "seed_agg",
         }
     }
 
@@ -38,10 +48,46 @@ impl ZoWireMode {
         match s.to_ascii_lowercase().as_str() {
             "theta" => Some(ZoWireMode::Theta),
             "seeds" | "seed" | "lean" => Some(ZoWireMode::Seeds),
+            "seed_agg" | "seedagg" | "agg" => Some(ZoWireMode::SeedAgg),
             _ => None,
         }
     }
+
+    /// Uploads are the lean `(seeds, gscales)` record (no θ_l up).
+    pub fn lean_uplink(&self) -> bool {
+        matches!(self, ZoWireMode::Seeds | ZoWireMode::SeedAgg)
+    }
+
+    /// Steady-state downlink is the lean `SeedSync` broadcast (no dense
+    /// θ_l down past the bootstrap round).
+    pub fn lean_downlink(&self) -> bool {
+        matches!(self, ZoWireMode::SeedAgg)
+    }
 }
+
+/// Typed rejection for `--zo_wire` modes that need a capability only
+/// one algorithm has (mirrors [`DrainConfigError`]): callers match on
+/// this to distinguish a config-gate refusal from an I/O failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ZoWireConfigError {
+    pub zo_wire: ZoWireMode,
+    pub algorithm: &'static str,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for ZoWireConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "--zo_wire {} is not valid for algorithm {}: {}",
+            self.zo_wire.name(),
+            self.algorithm,
+            self.reason
+        )
+    }
+}
+
+impl std::error::Error for ZoWireConfigError {}
 
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -78,8 +124,10 @@ pub struct RunConfig {
     /// never drops; nonzero bounds the queue so backpressure drops — and,
     /// on the networked path, typed NACKs — become observable)
     pub queue_capacity: usize,
-    /// HERON upload wire mode: `theta` (full θ_l up) or `seeds`
-    /// (seed + per-probe scalars up, server replays the update)
+    /// HERON wire mode: `theta` (full θ_l up), `seeds` (seed +
+    /// per-probe scalars up, server replays the update), or `seed_agg`
+    /// (lean both ways: seeds up AND the round sync down as a
+    /// `SeedSync` seeds+scalars broadcast clients replay locally)
     pub zo_wire: ZoWireMode,
     /// Server drain policy: `barrier` (Eq. 7 order at the round barrier,
     /// bit-identical — the default) or `stream` (arrival-order
@@ -168,6 +216,21 @@ impl RunConfig {
                  requires the HERON algorithm (got {})",
                 self.algorithm.name()
             );
+        }
+        // seed_agg carries the typed rejection: the four non-HERON
+        // algorithms have no seed-addressed ZO record to aggregate, so
+        // the gate is a capability mismatch, not a parse error.
+        if self.zo_wire == ZoWireMode::SeedAgg
+            && self.algorithm != Algorithm::Heron
+        {
+            return Err(anyhow::Error::new(ZoWireConfigError {
+                zo_wire: self.zo_wire,
+                algorithm: self.algorithm.name(),
+                reason: "seed-space aggregation replays every \
+                         participant's (seed, gscales) record from the \
+                         cached round-start θ_l, which only the HERON \
+                         ZO local phase produces",
+            }));
         }
         // `--drain stream` needs the decoupled upload queue: the locked
         // baselines (SFLV1/V2) answer every smashed upload synchronously
@@ -612,6 +675,46 @@ mod tests {
     }
 
     #[test]
+    fn seed_agg_parses_and_rejects_non_heron_with_typed_error() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse_from(
+            ["--zo_wire", "seed_agg"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.zo_wire, ZoWireMode::SeedAgg);
+        assert!(cfg.zo_wire.lean_uplink() && cfg.zo_wire.lean_downlink());
+        assert!(!ZoWireMode::Seeds.lean_downlink());
+        cfg.validate().unwrap(); // default algorithm is HERON
+        // every non-HERON algorithm is refused with the *typed* error
+        for alg in [
+            Algorithm::SflV1,
+            Algorithm::SflV2,
+            Algorithm::CseFsl,
+            Algorithm::FslSage,
+        ] {
+            cfg.algorithm = alg;
+            let err = cfg.validate().unwrap_err();
+            let typed = err
+                .downcast_ref::<ZoWireConfigError>()
+                .expect("seed_agg + non-HERON must carry ZoWireConfigError");
+            assert_eq!(typed.zo_wire, ZoWireMode::SeedAgg);
+            assert_eq!(typed.algorithm, alg.name());
+            // theta mode stays valid for the same algorithm
+            let mut ok = cfg.clone();
+            ok.zo_wire = ZoWireMode::Theta;
+            ok.validate().unwrap();
+        }
+        assert_eq!(ZoWireMode::parse("agg"), Some(ZoWireMode::SeedAgg));
+        // the JSON lap ships "seed_agg" verbatim (Assign handshake path)
+        cfg.algorithm = Algorithm::Heron;
+        let json = cfg.to_json().to_string();
+        let back =
+            RunConfig::from_json(&crate::util::json::parse(&json).unwrap())
+                .unwrap();
+        assert_eq!(back.zo_wire, ZoWireMode::SeedAgg);
+    }
+
+    #[test]
     fn drain_flag_parses_and_gates_on_decoupled() {
         let mut cfg = RunConfig::default();
         let args = Args::parse_from(
@@ -650,9 +753,14 @@ mod tests {
         cfg.zo_wire = ZoWireMode::Seeds;
         cfg.drain = DrainMode::Stream;
         cfg.validate().unwrap();
+        // seed_agg composes identically: the SeedSync replay reads only
+        // the cached round-start θ plus the shipped records — never the
+        // smashed queue — so stream drain stays legal
+        cfg.zo_wire = ZoWireMode::SeedAgg;
+        cfg.validate().unwrap();
         // and the inverse gates still hold independently
         cfg.algorithm = Algorithm::CseFsl;
-        assert!(cfg.validate().is_err(), "seeds still requires HERON");
+        assert!(cfg.validate().is_err(), "seed_agg still requires HERON");
         cfg.zo_wire = ZoWireMode::Theta;
         cfg.validate().unwrap(); // cse + stream + theta is fine
     }

@@ -275,7 +275,8 @@ pub struct RoundSim {
     server_time: f64,
     /// virtual arrival times of queued uploads at the server
     arrivals: Vec<f64>,
-    sync_bytes: u64,
+    sync_down_bytes: u64,
+    sync_up_bytes: u64,
     workers: usize,
     queue_stats: QueueStats,
     wire: WireRoundStats,
@@ -318,7 +319,8 @@ impl RoundSim {
             client_speed: vec![1.0; n],
             server_time: 0.0,
             arrivals: Vec::new(),
-            sync_bytes: 0,
+            sync_down_bytes: 0,
+            sync_up_bytes: 0,
             workers: n.max(1),
             queue_stats: QueueStats::default(),
             wire: WireRoundStats::default(),
@@ -424,8 +426,17 @@ impl RoundSim {
         self.merge_lane(client, &lane);
     }
 
-    pub fn sync(&mut self, bytes_per_client: u64) {
-        self.sync_bytes += bytes_per_client;
+    /// Charge one participant's share of the round sync, split by
+    /// direction: `down` is what the Fed-Server broadcasts to the client
+    /// (dense θ_l, or a seeds+scalars `SeedSync` under
+    /// `--zo_wire seed_agg`), `up` what the client returns. The split
+    /// matters because the directions ride different links — the old
+    /// lumped `sync(bytes)` priced both at the slower of the two, which
+    /// charged a dense download against the (slower) uplink and
+    /// couldn't credit a lean downlink at all.
+    pub fn sync_split(&mut self, down: u64, up: u64) {
+        self.sync_down_bytes += down;
+        self.sync_up_bytes += up;
     }
 
     pub fn finish(mut self) -> RoundTiming {
@@ -437,11 +448,13 @@ impl RoundSim {
         self.cut.sort_unstable();
         self.cut.dedup();
         // the sync broadcast amortizes over the whole registered
-        // population (pre-cohort behavior, preserved exactly)
+        // population (pre-cohort behavior, preserved exactly); each
+        // direction is priced on its own link
         let n = self.population.max(1) as f64;
-        let sync_phase = self.sync_bytes as f64
-            / self.profile.downlink_bps.min(self.profile.uplink_bps)
+        let sync_phase = self.sync_down_bytes as f64
+            / self.profile.downlink_bps
             / n
+            + self.sync_up_bytes as f64 / self.profile.uplink_bps / n
             + self.profile.rtt;
         let host_makespan = makespan(&self.client_times, self.workers);
         let (server_makespan_barrier, server_makespan_stream, wb, ws) =
@@ -582,13 +595,34 @@ mod tests {
         let mut sim = RoundSim::new(&p, 1);
         sim.client_compute(0, 1_000_000_000);
         sim.server_compute(1_000_000_000_000);
-        sim.sync(1_000_000);
+        sim.sync_split(600_000, 400_000);
         let t = sim.finish();
         assert!(
             (t.total() - (t.client_phase + t.server_phase + t.sync_phase))
                 .abs()
                 < 1e-12
         );
+    }
+
+    /// Each sync direction rides its own link: with the profile above
+    /// (downlink 1e7 B/s, uplink 1e6 B/s) a 1 MB download + 0.5 MB
+    /// upload over a population of 1 costs 0.1 + 0.5 + rtt — not the
+    /// 1.5 MB / min-bandwidth lump the pre-split accounting charged.
+    /// A zero-byte direction costs nothing, so a lean seed_agg
+    /// broadcast's sync phase collapses toward the uplink term.
+    #[test]
+    fn sync_split_prices_each_direction_on_its_own_link() {
+        let p = profile();
+        let mut sim = RoundSim::new(&p, 1);
+        sim.sync_split(1_000_000, 500_000);
+        let t = sim.finish();
+        assert!((t.sync_phase - (0.1 + 0.5 + 0.01)).abs() < 1e-9);
+
+        let mut lean = RoundSim::new(&p, 1);
+        lean.sync_split(0, 500_000);
+        let tl = lean.finish();
+        assert!((tl.sync_phase - (0.5 + 0.01)).abs() < 1e-9);
+        assert!(tl.sync_phase < t.sync_phase);
     }
 
     #[test]
@@ -742,7 +776,7 @@ mod tests {
                 sim.merge_lane(ci, &lane);
             }
             sim.server_compute(3_000_000_000_000);
-            sim.sync(1_000_000);
+            sim.sync_split(1_000_000, 500_000);
         }
         let (a, b) = (full.finish(), cohort.finish());
         assert_eq!(a.client_phase.to_bits(), b.client_phase.to_bits());

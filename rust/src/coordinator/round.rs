@@ -85,7 +85,7 @@
 use crate::coordinator::accounting::CostBook;
 use crate::coordinator::aggregator::fedavg_into;
 use crate::coordinator::algorithms::Algorithm;
-use crate::coordinator::config::RunConfig;
+use crate::coordinator::config::{RunConfig, ZoWireMode};
 use crate::coordinator::eventsim::{DeviceProfile, RoundSim, RoundTiming};
 use crate::coordinator::local::{
     self, ClientPool, ClientState, LocalCtx, LocalOutcome,
@@ -144,6 +144,14 @@ pub struct Driver<'s> {
     /// manifest optimizer-state flavor (lazy replica construction)
     opt_state: usize,
     rng: Xoshiro256pp,
+    /// `--zo_wire seed_agg`: this round's accepted ZO replay records
+    /// `(client, seeds, gscales)` in absorb order — the seed-space
+    /// aggregation roster. `finish_round` folds them into θ_l without
+    /// materializing any per-client θ, and the networked dispatcher
+    /// re-broadcasts them verbatim as the next round's `SeedSync`.
+    /// Cleared at every round start; never checkpointed (a restored or
+    /// rejoining peer gets one dense bootstrap sync instead).
+    zo_records: Vec<(usize, Vec<i32>, Vec<f32>)>,
     pub comm_bytes: u64,
     pub flops_client: u64,
     profile: DeviceProfile,
@@ -199,7 +207,11 @@ impl<'s> Driver<'s> {
         Ok(Driver {
             session,
             book: CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
-                .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64)
+                .with_zo_wire(
+                    cfg.zo_wire,
+                    cfg.local_steps as u64,
+                    cfg.participants_per_round() as u64,
+                )
                 .with_codec(cfg.codec, cfg.grad_codec),
             task,
             base,
@@ -211,6 +223,7 @@ impl<'s> Driver<'s> {
             clients,
             opt_state,
             rng: Xoshiro256pp::new(cfg.run_seed),
+            zo_records: Vec::new(),
             comm_bytes: 0,
             flops_client: 0,
             profile: DeviceProfile::edge_default(),
@@ -269,6 +282,7 @@ impl<'s> Driver<'s> {
     /// server, so there is no asynchronous wait to cut.
     pub fn run_round(&mut self) -> Result<f64> {
         let _round_span = crate::span!("round", round = self.round_idx);
+        self.begin_round_records();
         let participants = self.sample_participants();
         let mut sim = self.new_sim(&participants);
         let queue = self.round_queue(participants.len());
@@ -298,8 +312,12 @@ impl<'s> Driver<'s> {
                 let theta_start = self.theta_l.clone();
                 let theta_end = self
                     .local_phase_locked(ci, theta_start, &mut sim, &mut losses)?;
-                self.comm_bytes += self.book.comm_per_round_sync();
-                sim.sync(self.book.comm_per_round_sync());
+                self.comm_bytes +=
+                    self.book.comm_per_round_sync_at(self.round_idx as u64);
+                sim.sync_split(
+                    self.book.downlink_per_round_sync(self.round_idx as u64),
+                    self.book.uplink_per_round_sync(),
+                );
                 updated.push((ci, theta_end));
             }
         }
@@ -481,21 +499,67 @@ impl<'s> Driver<'s> {
             ci,
             theta,
             losses: step_losses,
-            // in-process the client's θ is absorbed directly; the seeds +
-            // gscales replay record is exercised by the networked
-            // `--zo_wire seeds` path (pinned equal in net_loopback tests)
-            seeds: _,
-            gscales: _,
+            // under theta/seeds wire modes the client's θ is what the
+            // aggregator consumes, so the seeds + gscales replay record
+            // is dropped here (the networked `--zo_wire seeds` path
+            // exercises it server-side; pinned equal in net_loopback
+            // tests). Under seed_agg the record IS the aggregation
+            // input — `finish_round` replays it and the dispatcher
+            // re-broadcasts it — so it is retained instead.
+            seeds,
+            gscales,
             comm_bytes,
             flops,
             lane,
         } = out;
         losses.extend(step_losses);
-        self.comm_bytes += comm_bytes + self.book.comm_per_round_sync();
+        self.comm_bytes += comm_bytes
+            + self.book.comm_per_round_sync_at(self.round_idx as u64);
         self.flops_client += flops;
         sim.merge_lane(ci, &lane);
-        sim.sync(self.book.comm_per_round_sync());
+        sim.sync_split(
+            self.book.downlink_per_round_sync(self.round_idx as u64),
+            self.book.uplink_per_round_sync(),
+        );
+        if self.cfg.zo_wire == ZoWireMode::SeedAgg {
+            self.zo_records.push((ci, seeds, gscales));
+        }
         updated.push((ci, theta));
+    }
+
+    /// Reset the per-round seed-space aggregation roster. Both round
+    /// composers (in-process [`Self::run_round`] and the networked
+    /// dispatcher) call this before absorbing any outcome; the dispatcher
+    /// does so only *after* broadcasting the previous round's
+    /// [`Self::seed_sync_record`], which reads the same buffer.
+    pub(crate) fn begin_round_records(&mut self) {
+        self.zo_records.clear();
+    }
+
+    /// The previous round's seed-space aggregation roster, flattened for
+    /// the wire (`Msg::SeedSync`): per participant i in server absorb
+    /// order, `clients[i]`, its FedAvg weight as the exact f64 the
+    /// aggregation used, `seeds[i*h ..]` and `gscales[i*h*np ..]`.
+    /// `None` when there is nothing to replay — fresh start, restore, or
+    /// a round whose cohort was cut whole — in which case the dispatcher
+    /// falls back to a dense `ModelSync` bootstrap.
+    pub(crate) fn seed_sync_record(
+        &self,
+    ) -> Option<(Vec<u32>, Vec<f64>, Vec<i32>, Vec<f32>)> {
+        if self.zo_records.is_empty() {
+            return None;
+        }
+        let mut clients = Vec::with_capacity(self.zo_records.len());
+        let mut weights = Vec::with_capacity(self.zo_records.len());
+        let mut seeds = Vec::new();
+        let mut gscales = Vec::new();
+        for (ci, s, g) in &self.zo_records {
+            clients.push(*ci as u32);
+            weights.push(self.clients.shard_weight(*ci).max(1e-9));
+            seeds.extend_from_slice(s);
+            gscales.extend_from_slice(g);
+        }
+        Some((clients, weights, seeds, gscales))
     }
 
     // ---- locked local phase (SFLV1/V2) -----------------------------------
@@ -781,7 +845,36 @@ impl<'s> Driver<'s> {
         sim: RoundSim,
         losses: &[f64],
     ) -> f64 {
-        if !updated.is_empty() {
+        if self.cfg.zo_wire == ZoWireMode::SeedAgg
+            && !self.zo_records.is_empty()
+        {
+            // Seed-space aggregation (HERON only): replay each record
+            // from the round-start θ_l and accumulate the FedAvg sum
+            // one trajectory at a time — same per-element op order as
+            // `fedavg_into` over materialized θs, so bit-identical to
+            // the dense path (pinned in `zo::tests`) without ever
+            // holding a per-client parameter vector. The networked
+            // dispatcher feeds empty θs through `absorb_outcome` in
+            // this mode, so `updated` must not be consumed here.
+            let records: Vec<(&[i32], &[f32])> = self
+                .zo_records
+                .iter()
+                .map(|(_, s, g)| (s.as_slice(), g.as_slice()))
+                .collect();
+            let weights: Vec<f64> = self
+                .zo_records
+                .iter()
+                .map(|(c, _, _)| self.clients.shard_weight(*c).max(1e-9))
+                .collect();
+            let agg = crate::zo::aggregate_trajectories(
+                &self.theta_l,
+                &records,
+                &weights,
+                self.cfg.n_pert,
+            )
+            .expect("validated seed_agg records cannot fail aggregation");
+            self.theta_l.copy_from_slice(&agg);
+        } else if !updated.is_empty() {
             let refs: Vec<&[f32]> =
                 updated.iter().map(|(_, t)| t.as_slice()).collect();
             let weights: Vec<f64> = updated
@@ -894,6 +987,9 @@ impl<'s> Driver<'s> {
         self.flops_client = state.flops_client;
         self.timings = state.timings;
         self.server_replicas.clear();
+        // never checkpointed: a restored run re-bootstraps its clients
+        // with one dense sync instead of replaying a stale roster
+        self.zo_records.clear();
         Ok(())
     }
 

@@ -68,8 +68,11 @@ fn print_help() {
            --lr_client LR --lr_server LR --alpha A (dirichlet) --participation F\n\
            --workers W (client-phase worker threads; 0 = all cores)\n\
            --queue_capacity Q (Main-Server queue bound; 0 = never drops)\n\
-           --zo_wire theta|seeds (HERON upload: full θ_l, or the lean\n\
-             seed+per-probe-scalar record the server replays)\n\
+           --zo_wire theta|seeds|seed_agg (HERON wire: full θ_l up, the\n\
+             lean seed+per-probe-scalar upload the server replays, or\n\
+             seed_agg — lean both ways: the broadcast is the aggregated\n\
+             seeds+scalars roster (wire v7 SeedSync) and every client\n\
+             reconstructs θ_l locally; downlink cost is dimension-free)\n\
            --drain barrier|stream (server consumption: deterministic\n\
              Eq.-7 barrier drain, or arrival-order mid-round pipelining)\n\
            --codec f32|int8|int4 (smashed-activation payload codec;\n\
@@ -263,6 +266,20 @@ fn print_net_summary(report: &heron_sfl::net::NetReport) {
         report.wire.frames_sent + report.wire.frames_recv,
         report.nacks_sent,
     );
+    // `--zo_wire seed_agg` under `--trace_out`/`--stats_every`: the
+    // measured broadcast bytes and the dense-sync bytes they displaced
+    if let Some(&down) = rec.summary.get("net.downlink.bytes") {
+        let saved = rec
+            .summary
+            .get("net.downlink.bytes_saved")
+            .copied()
+            .unwrap_or(0.0);
+        println!(
+            "downlink measured {} | saved vs dense θ sync {}",
+            fmt_bytes(down as u64),
+            fmt_bytes(saved as u64),
+        );
+    }
     if report.disconnects > 0 || report.clients_cut > 0 {
         println!(
             "churn: {} disconnect(s) ({} mid-frame) | {} client slot(s) cut \

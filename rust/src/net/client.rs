@@ -39,6 +39,12 @@
 //!   per-probe `gscales` in `--zo_wire seeds` mode, which then
 //!   **replaces** the θ upload), `ModelSync` (updated θ, `theta` mode
 //!   only), `LocalDone` (analytic counters).
+//! * `SeedSync` — wire v7 lean broadcast (`--zo_wire seed_agg`): the
+//!   previous round's aggregated `(client, weight, seeds, gscales)`
+//!   roster instead of a dense θ_l; this endpoint reconstructs the
+//!   round-start θ_l locally via `zo::aggregate_trajectories` from the
+//!   cached previous sync (bit-identical to the server's own
+//!   aggregation), caches it, then runs the same decoupled fan-out.
 //! * `ModelSync{client: ci}` — locked SFLV1/V2 phase for `ci`: per step,
 //!   cut forward → `Smashed` → wait `CutGrad` → backprop; then θ up.
 //! * `AlignGrad` — FSL-SAGE: `aux_align` against the stored last upload,
@@ -46,7 +52,7 @@
 //! * `RoundSummary` — bookkeeping; `Shutdown` — return the report.
 
 use crate::coordinator::accounting::CostBook;
-use crate::coordinator::config::{RunConfig, ZoWireMode};
+use crate::coordinator::config::RunConfig;
 use crate::coordinator::drain::DrainMode;
 use crate::coordinator::eventsim::{DeviceProfile, WireRoundStats};
 use crate::coordinator::local::{
@@ -334,7 +340,11 @@ pub fn run_client_virtual(
     };
     let nc = v.size_client;
     let book = CostBook::new(&v, cfg.algorithm, cfg.n_pert as u64)
-        .with_zo_wire(cfg.zo_wire, cfg.local_steps as u64)
+        .with_zo_wire(
+            cfg.zo_wire,
+            cfg.local_steps as u64,
+            cfg.participants_per_round() as u64,
+        )
         .with_codec(cfg.codec, cfg.grad_codec);
     session.warmup(&cfg.variant, cfg.algorithm.required_entries())?;
     // lazy: a lane's client state is built the first time that client is
@@ -371,6 +381,25 @@ pub fn run_client_virtual(
     let mut barrier: Option<(u32, Vec<u32>)> = None;
     // this round's θ per owned client (FSL-SAGE alignment reads/updates it)
     let mut round_theta: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+    // `--zo_wire seed_agg`: the round-start global θ this endpoint last
+    // received or reconstructed — the replay origin for the next
+    // `SeedSync`. One model-sized vector per process, populated by the
+    // dense bootstrap broadcast; `None` until then.
+    let mut global_theta: Option<Vec<f32>> = None;
+    let env = FanoutEnv {
+        session,
+        t: &t,
+        cfg: &cfg,
+        book: &book,
+        base: base.as_deref(),
+        task,
+        profile,
+        nc,
+        assigned: &assigned,
+        lane_of: &lane_of,
+        lane_seq: &lane_seq,
+        lane_nacks: &lane_nacks,
+    };
 
     let shutdown_reason = 'main: loop {
         let msg = match recv(&t)? {
@@ -389,96 +418,95 @@ pub fn run_client_virtual(
             Msg::ModelSync { round, client, theta, .. }
                 if client == BROADCAST =>
             {
-                // decoupled fan-out for every owned participant, in
-                // ascending client order across ALL lanes (= the
-                // in-process job order; lane assignment interleaves ids,
-                // so the union must be re-sorted)
                 let (bar_round, participants) = barrier
                     .as_ref()
                     .context("ModelSync before RoundBarrier")?;
                 if *bar_round != round {
                     bail!("ModelSync round {round} != barrier {bar_round}");
                 }
-                let mut mine: Vec<usize> = assigned
-                    .iter()
-                    .map(|&c| c as usize)
-                    .filter(|c| participants.contains(&(*c as u32)))
+                // `--zo_wire seed_agg`: a dense broadcast is the
+                // bootstrap (first round, or re-bootstrap after a
+                // restore/rejoin) — cache it as the replay origin for
+                // subsequent SeedSync rounds
+                if cfg.zo_wire.lean_downlink() {
+                    global_theta = Some(theta.clone());
+                }
+                if let Some(reason) = decoupled_fanout(
+                    &env,
+                    &mut pool,
+                    round,
+                    participants,
+                    &theta,
+                    &mut phases,
+                    &mut lane_phases,
+                    &mut round_theta,
+                )? {
+                    break 'main reason;
+                }
+            }
+            Msg::SeedSync { round, clients, weights, seeds, gscales } => {
+                // wire v7 dimension-free broadcast: reconstruct this
+                // round's θ_l locally by replaying the previous round's
+                // aggregated seed/scalar roster from the cached
+                // round-start θ — the dense ModelSync never travels
+                if !cfg.zo_wire.lean_downlink() {
+                    bail!(
+                        "SeedSync broadcast under --zo_wire {}",
+                        cfg.zo_wire.name()
+                    );
+                }
+                let (bar_round, participants) = barrier
+                    .as_ref()
+                    .context("SeedSync before RoundBarrier")?;
+                if *bar_round != round {
+                    bail!("SeedSync round {round} != barrier {bar_round}");
+                }
+                let theta_prev = global_theta
+                    .as_ref()
+                    .context("SeedSync before any dense bootstrap sync")?;
+                let p = clients.len();
+                let h = cfg.local_steps;
+                let np = cfg.n_pert.max(1);
+                if p == 0
+                    || weights.len() != p
+                    || seeds.len() != p * h
+                    || gscales.len() != p * h * np
+                {
+                    bail!(
+                        "SeedSync shape: {p} clients, {} weights, {} seeds, \
+                         {} gscales (local_steps={h}, n_pert={np})",
+                        weights.len(),
+                        seeds.len(),
+                        gscales.len()
+                    );
+                }
+                let records: Vec<(&[i32], &[f32])> = (0..p)
+                    .map(|i| {
+                        (
+                            &seeds[i * h..(i + 1) * h],
+                            &gscales[i * h * np..(i + 1) * h * np],
+                        )
+                    })
                     .collect();
-                mine.sort_unstable();
-                let _round_span = crate::span!("client_round", round = round);
-                let ctx = LocalCtx {
-                    session,
-                    cfg: &cfg,
-                    book: &book,
-                    base: base.as_deref(),
-                    task,
-                    round_idx: round as usize,
-                    profile,
-                    nc,
-                };
-                for ci in mine {
-                    let lane = lane_of[&ci];
-                    let sink = NetSink {
-                        t: &t,
-                        lane,
-                        seq: &lane_seq[lane as usize],
-                        nacks: &lane_nacks[lane as usize],
-                        err: Mutex::new(None),
-                        stream: cfg.drain == DrainMode::Stream,
-                    };
-                    let out = local::client_local_phase(
-                        &ctx,
-                        ci,
-                        pool.state(ci),
-                        theta.clone(),
-                        &sink,
-                    )?;
-                    if let Some(e) =
-                        sink.err.lock().unwrap_or_else(|p| p.into_inner()).take()
-                    {
-                        // a Shutdown that landed mid-upload is a clean
-                        // end of run, not a failure
-                        if let Some(reason) = as_shutdown(&e) {
-                            break 'main reason;
-                        }
-                        return Err(e.context("smashed upload failed"));
-                    }
-                    phases += 1;
-                    lane_phases[lane as usize] += 1;
-                    // the lean seeds mode replaces the θ upload with the
-                    // per-probe replay record; the server reconstructs θ
-                    // bit-identically from (seed, gscales)
-                    let lean = cfg.zo_wire == ZoWireMode::Seeds;
-                    send(&t, &Msg::ZoUpdate {
-                        lane,
-                        client: ci as u32,
-                        round,
-                        seeds: out.seeds.clone(),
-                        scalars: out.losses.iter().map(|&l| l as f32).collect(),
-                        gscales: if lean {
-                            out.gscales.clone()
-                        } else {
-                            Vec::new()
-                        },
-                    })?;
-                    if !lean {
-                        send(&t, &Msg::ModelSync {
-                            lane,
-                            client: ci as u32,
-                            round,
-                            theta: out.theta.clone(),
-                        })?;
-                    }
-                    send(&t, &Msg::LocalDone {
-                        lane,
-                        client: ci as u32,
-                        round,
-                        comm_bytes: out.comm_bytes,
-                        flops: out.flops,
-                        lane_time: out.lane.time,
-                        lane_idle: out.lane.idle,
-                    })?;
-                    round_theta.insert(ci, out.theta);
+                let theta = crate::zo::aggregate_trajectories(
+                    theta_prev,
+                    &records,
+                    &weights,
+                    cfg.n_pert,
+                )
+                .context("SeedSync aggregate replay failed")?;
+                global_theta = Some(theta.clone());
+                if let Some(reason) = decoupled_fanout(
+                    &env,
+                    &mut pool,
+                    round,
+                    participants,
+                    &theta,
+                    &mut phases,
+                    &mut lane_phases,
+                    &mut round_theta,
+                )? {
+                    break 'main reason;
                 }
             }
             Msg::ModelSync { lane, round, client, theta } => {
@@ -584,6 +612,127 @@ pub fn run_client_virtual(
         wire: counters.snapshot(),
         shutdown_reason,
     })
+}
+
+/// Shared immutable context for the decoupled fan-out — the per-round
+/// local-phase sweep that both the dense `ModelSync` broadcast and the
+/// wire v7 `SeedSync` broadcast dispatch to once they have this round's
+/// θ_l in hand.
+struct FanoutEnv<'a> {
+    session: &'a Session,
+    t: &'a Mutex<Box<dyn Transport>>,
+    cfg: &'a RunConfig,
+    book: &'a CostBook,
+    base: Option<&'a [f32]>,
+    task: Task,
+    profile: DeviceProfile,
+    nc: usize,
+    assigned: &'a [u32],
+    lane_of: &'a BTreeMap<usize, u32>,
+    lane_seq: &'a [AtomicU32],
+    lane_nacks: &'a [AtomicU64],
+}
+
+/// Decoupled fan-out for every owned participant of `round`, in
+/// ascending client order across ALL lanes (= the in-process job order;
+/// lane assignment interleaves ids, so the union must be re-sorted).
+/// Returns `Ok(Some(reason))` when a `Shutdown` landed mid-upload — the
+/// caller turns that into a clean exit, not a failure.
+#[allow(clippy::too_many_arguments)]
+fn decoupled_fanout(
+    env: &FanoutEnv<'_>,
+    pool: &mut ClientPool,
+    round: u32,
+    participants: &[u32],
+    theta: &[f32],
+    phases: &mut u64,
+    lane_phases: &mut [u64],
+    round_theta: &mut BTreeMap<usize, Vec<f32>>,
+) -> Result<Option<String>> {
+    let cfg = env.cfg;
+    let mut mine: Vec<usize> = env
+        .assigned
+        .iter()
+        .map(|&c| c as usize)
+        .filter(|c| participants.contains(&(*c as u32)))
+        .collect();
+    mine.sort_unstable();
+    let _round_span = crate::span!("client_round", round = round);
+    let ctx = LocalCtx {
+        session: env.session,
+        cfg,
+        book: env.book,
+        base: env.base,
+        task: env.task,
+        round_idx: round as usize,
+        profile: env.profile,
+        nc: env.nc,
+    };
+    for ci in mine {
+        let lane = env.lane_of[&ci];
+        let sink = NetSink {
+            t: env.t,
+            lane,
+            seq: &env.lane_seq[lane as usize],
+            nacks: &env.lane_nacks[lane as usize],
+            err: Mutex::new(None),
+            stream: cfg.drain == DrainMode::Stream,
+        };
+        let out = local::client_local_phase(
+            &ctx,
+            ci,
+            pool.state(ci),
+            theta.to_vec(),
+            &sink,
+        )?;
+        if let Some(e) =
+            sink.err.lock().unwrap_or_else(|p| p.into_inner()).take()
+        {
+            // a Shutdown that landed mid-upload is a clean end of run
+            if let Some(reason) = as_shutdown(&e) {
+                return Ok(Some(reason));
+            }
+            return Err(e.context("smashed upload failed"));
+        }
+        *phases += 1;
+        lane_phases[lane as usize] += 1;
+        // the lean wire modes replace the θ upload with the per-probe
+        // replay record; the server reconstructs θ bit-identically from
+        // (seed, gscales) — and in seed_agg mode additionally rebroad-
+        // casts the roster so clients can do the same
+        let lean = cfg.zo_wire.lean_uplink();
+        send(env.t, &Msg::ZoUpdate {
+            lane,
+            client: ci as u32,
+            round,
+            seeds: out.seeds.clone(),
+            scalars: out.losses.iter().map(|&l| l as f32).collect(),
+            gscales: if lean {
+                out.gscales.clone()
+            } else {
+                Vec::new()
+            },
+        })?;
+        if !lean {
+            send(env.t, &Msg::ModelSync {
+                lane,
+                client: ci as u32,
+                round,
+                theta: out.theta.clone(),
+            })?;
+        }
+        send(env.t, &Msg::LocalDone {
+            lane,
+            client: ci as u32,
+            round,
+            comm_bytes: out.comm_bytes,
+            flops: out.flops,
+            lane_time: out.lane.time,
+            lane_idle: out.lane.idle,
+        })?;
+        round_theta.insert(ci, out.theta);
+    }
+    Ok(None)
 }
 
 /// The client half of the locked SFLV1/V2 exchange: per local step, cut

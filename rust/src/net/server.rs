@@ -81,7 +81,14 @@
 //!    that owns a participant (decoupled), or a per-client
 //!    `ModelSync{client: ci}` kickoff processed *sequentially* in
 //!    participant order (locked SFLV1/V2 — the training lock is the
-//!    baseline's defining property).
+//!    baseline's defining property). Under `--zo_wire seed_agg` (wire
+//!    v7) the dense broadcast is replaced, from round 1 on, by a
+//!    dimension-free `SeedSync` carrying the previous round's accepted
+//!    ZO records and FedAvg weights; each client replays them against
+//!    its cached θ and lands bit-identically on the server's aggregate.
+//!    A connection without the previous round's θ — fresh run, restore,
+//!    rejoiner, or one that sat a round out — gets a dense bootstrap
+//!    `ModelSync` instead.
 //! 2. Decoupled uploads (`Smashed`, or `SmashedSeq` in `--drain stream`
 //!    runs) are pushed straight into the round's [`ServerQueue`]; a
 //!    capacity drop is answered with a typed NACK
@@ -119,7 +126,7 @@
 //! lane-multiplexed — in `rust/tests/net_loopback.rs`).
 
 use crate::coordinator::checkpoint::{self, Checkpoint};
-use crate::coordinator::config::{RunConfig, ZoWireMode};
+use crate::coordinator::config::RunConfig;
 use crate::coordinator::drain::DrainMode;
 use crate::coordinator::eventsim::{
     ClientLane, DeviceProfile, RoundSim, WireRoundStats,
@@ -658,30 +665,29 @@ struct RoundsOutcome {
     stop_reason: Option<String>,
 }
 
-/// Reconstruct one client's end-of-phase θ from its lean wire record
-/// (`--zo_wire seeds`): validate the record shape, check every step seed
-/// against the counter derivation the client must have used (a client
-/// cannot steer the replay off the deterministic trajectory), then
-/// replay h ZO updates from the round's broadcast θ. Bit-identical to
-/// the θ the client would have uploaded in `theta` mode.
-fn replay_theta(
+/// Validate one client's lean ZO replay record: the shape must match the
+/// run config, and every step seed must equal the counter derivation the
+/// client was required to use (a client cannot steer a replay off the
+/// deterministic trajectory). Shared by the `seeds`-mode per-client
+/// replay and the `seed_agg` ingest, which defers the replay to the
+/// streaming aggregation in `finish_round`.
+fn check_zo_record(
     cfg: &RunConfig,
     round: usize,
     ci: usize,
-    theta0: &[f32],
     c: &Collected,
-) -> Result<Vec<f32>> {
+) -> Result<()> {
     let h = cfg.local_steps;
     let np = cfg.n_pert.max(1);
     if c.seeds.len() != h {
         bail!(
-            "client {ci}: seeds-mode record has {} seeds, expected {h}",
+            "client {ci}: lean-wire record has {} seeds, expected {h}",
             c.seeds.len()
         );
     }
     if c.gscales.len() != h * np {
         bail!(
-            "client {ci}: seeds-mode record has {} gscales, expected {}",
+            "client {ci}: lean-wire record has {} gscales, expected {}",
             c.gscales.len(),
             h * np
         );
@@ -695,8 +701,28 @@ fn replay_theta(
             );
         }
     }
-    crate::zo::replay_trajectory(theta0, &c.seeds, np, &c.gscales)
-        .context("replaying seeds-mode update")
+    Ok(())
+}
+
+/// Reconstruct one client's end-of-phase θ from its lean wire record
+/// (`--zo_wire seeds`): validate the record ([`check_zo_record`]), then
+/// replay h ZO updates from the round's broadcast θ. Bit-identical to
+/// the θ the client would have uploaded in `theta` mode.
+fn replay_theta(
+    cfg: &RunConfig,
+    round: usize,
+    ci: usize,
+    theta0: &[f32],
+    c: &Collected,
+) -> Result<Vec<f32>> {
+    check_zo_record(cfg, round, ci, c)?;
+    crate::zo::replay_trajectory(
+        theta0,
+        &c.seeds,
+        cfg.n_pert.max(1),
+        &c.gscales,
+    )
+    .context("replaying seeds-mode update")
 }
 
 /// An older round stamp is late traffic from a straggler that was cut
@@ -804,6 +830,7 @@ fn write_checkpoint(
 fn adopt_joiners(
     ctx: &mut RoundsCtx,
     dead: &mut [bool],
+    synced_round: &mut [Option<usize>],
     round: usize,
     phase_counts: &BTreeMap<usize, u64>,
 ) -> Result<()> {
@@ -887,6 +914,9 @@ fn adopt_joiners(
         // monotone across the swap
         ctx.counters.push(c.clone());
         dead[j] = false;
+        // the adoptee holds no broadcast θ: its first sync must be the
+        // dense bootstrap, never a seed-space delta off a stale model
+        synced_round[j] = None;
         ctx.shard_inbox
             .lock()
             .unwrap_or_else(|p| p.into_inner())
@@ -913,6 +943,12 @@ fn run_rounds(
     let mut nacks_sent = 0u64;
     let profile = DeviceProfile::edge_default();
     let mut dead = vec![false; n_conns];
+    // seed_agg bootstrap tracking: the round whose broadcast θ a
+    // connection last received (dense or seed-reconstructed). A conn is
+    // eligible for the lean `SeedSync` delta only if it holds the
+    // *previous* round's θ — anything else (fresh run, restore,
+    // rejoiner, a round it sat out) gets one dense `ModelSync` instead.
+    let mut synced_round: Vec<Option<usize>> = vec![None; n_conns];
     let mut churn = Churn::default();
     let mut stop_reason: Option<String> = None;
 
@@ -934,7 +970,7 @@ fn run_rounds(
             rec.set("interrupted", 1.0);
             break 'rounds;
         }
-        adopt_joiners(ctx, &mut dead, round, &phase_counts)?;
+        adopt_joiners(ctx, &mut dead, &mut synced_round, round, &phase_counts)?;
 
         let wire_before = sum_counters(ctx.counters);
         let participants = driver.sample_participants();
@@ -1001,39 +1037,108 @@ fn run_rounds(
 
             // The real parallelism width is the client-process count.
             sim.set_workers(n_conns.min(participants.len()).max(1));
-            let lean = driver.cfg.zo_wire == ZoWireMode::Seeds;
+            let lean = driver.cfg.zo_wire.lean_uplink();
+            let seed_agg = driver.cfg.zo_wire.lean_downlink();
             // seeds mode: keep the broadcast θ — it is the replay origin
-            let theta0: Vec<f32> =
-                if lean { driver.theta_l.clone() } else { Vec::new() };
+            // (seed_agg never replays per-client server-side, so it
+            // skips the copy)
+            let theta0: Vec<f32> = if lean && !seed_agg {
+                driver.theta_l.clone()
+            } else {
+                Vec::new()
+            };
             let active: Vec<usize> = (0..n_conns)
                 .filter(|&j| {
                     !dead[j]
                         && participants.iter().any(|&c| ctx.owner[c].conn == j)
                 })
                 .collect();
-            let sync_msg = Msg::ModelSync {
+            // seed_agg (wire v7): the previous round's accepted records
+            // + FedAvg weights replace the dense θ broadcast; each
+            // client replays them against its cached θ and lands on the
+            // exact aggregate `finish_round` computed. `None` (fresh
+            // start, restore, or a fully-cut previous round) falls back
+            // to the dense bootstrap below.
+            let seed_msg = if seed_agg {
+                driver.seed_sync_record().map(
+                    |(clients, weights, seeds, gscales)| Msg::SeedSync {
+                        round: r32,
+                        clients,
+                        weights,
+                        seeds,
+                        gscales,
+                    },
+                )
+            } else {
+                None
+            };
+            let fo = crate::net::wire::FRAME_OVERHEAD as u64;
+            let dense_frame_bytes =
+                fo + 16 + 4 * driver.theta_l.len() as u64;
+            let seed_frame_bytes = seed_msg.as_ref().map(|m| match m {
+                Msg::SeedSync { clients, seeds, gscales, .. } => {
+                    fo + 20
+                        + 12 * clients.len() as u64
+                        + 4 * seeds.len() as u64
+                        + 4 * gscales.len() as u64
+                }
+                _ => unreachable!("seed_msg is always SeedSync"),
+            });
+            let _sync_span = seed_msg.as_ref().map(|_| {
+                crate::span!("seed_sync_broadcast", round = round)
+            });
+            let dense_msg = Msg::ModelSync {
                 lane: BROADCAST,
                 round: r32,
                 client: BROADCAST,
                 theta: driver.theta_l.clone(),
             };
             for &j in &active {
-                if let Err(e) = ctx.txs[j].send(&sync_msg) {
-                    cut_conn(
-                        j,
-                        &format!("model sync send failed: {e:#}"),
-                        false,
-                        round,
-                        &participants,
-                        ctx.owner,
-                        &mut dead,
-                        &mut BTreeSet::new(),
-                        &mut cut,
-                        &mut sim,
-                        &mut churn,
-                    );
+                // a conn holding the previous round's θ can take the
+                // seed-space delta; anyone else needs the dense model
+                let take_seed = seed_msg.is_some()
+                    && synced_round[j].map_or(false, |r| r + 1 == round);
+                let msg = if take_seed {
+                    seed_msg.as_ref().expect("checked above")
+                } else {
+                    &dense_msg
+                };
+                if crate::telemetry::metrics_enabled() {
+                    use crate::telemetry::registry::counter;
+                    let b = if take_seed {
+                        seed_frame_bytes.expect("take_seed implies seed_msg")
+                    } else {
+                        dense_frame_bytes
+                    };
+                    counter("net.downlink.bytes").add(b);
+                    if take_seed {
+                        counter("net.downlink.bytes_saved")
+                            .add(dense_frame_bytes.saturating_sub(b));
+                    }
+                }
+                match ctx.txs[j].send(msg) {
+                    Ok(()) => synced_round[j] = Some(round),
+                    Err(e) => {
+                        synced_round[j] = None;
+                        cut_conn(
+                            j,
+                            &format!("model sync send failed: {e:#}"),
+                            false,
+                            round,
+                            &participants,
+                            ctx.owner,
+                            &mut dead,
+                            &mut BTreeSet::new(),
+                            &mut cut,
+                            &mut sim,
+                            &mut churn,
+                        );
+                    }
                 }
             }
+            // the broadcast above consumed the previous round's roster;
+            // from here the buffer accumulates this round's records
+            driver.begin_round_records();
 
             // ---- collect the fan-out: acks flow back per upload ----
             // The straggler cutoff clock starts at the barrier; with no
@@ -1396,11 +1501,19 @@ fn run_rounds(
                 lane.idle = lane_idle;
                 // theta mode: the client uploaded θ. seeds mode: no θ
                 // ever crossed the wire — replay it from the record.
+                // seed_agg: validate the record now and hand it through
+                // empty-θ; `finish_round` replays all records inside
+                // one streaming FedAvg, so no per-client θ is ever
+                // materialized server-side.
                 let theta = match (c.theta.take(), lean) {
                     (Some(_), true) => bail!(
-                        "client {ci}: unexpected θ upload in seeds wire mode"
+                        "client {ci}: unexpected θ upload in lean wire mode"
                     ),
                     (Some(t), false) => t,
+                    (None, true) if seed_agg => {
+                        check_zo_record(&driver.cfg, round, ci, &c)?;
+                        Vec::new()
+                    }
                     (None, true) => {
                         replay_theta(&driver.cfg, round, ci, &theta0, &c)?
                     }
@@ -1503,8 +1616,12 @@ fn run_rounds(
                         ),
                     }
                 };
-                driver.comm_bytes += driver.book.comm_per_round_sync();
-                sim.sync(driver.book.comm_per_round_sync());
+                driver.comm_bytes +=
+                    driver.book.comm_per_round_sync_at(round as u64);
+                sim.sync_split(
+                    driver.book.downlink_per_round_sync(round as u64),
+                    driver.book.uplink_per_round_sync(),
+                );
                 updated.push((ci, theta_end));
             }
         }

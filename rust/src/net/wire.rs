@@ -56,7 +56,17 @@ pub const MAGIC: [u8; 2] = *b"HN";
 /// `net::codec`) instead of raw f32 vectors. Only the payload envelope
 /// changed: frame framing/CRC and every v5 control message
 /// (`Assign`/`ModelSync`/`ZoUpdate`/acks/barriers/…) are untouched.
-pub const VERSION: u8 = 6;
+/// v7: new `SeedSync` message (tag 14) — the `--zo_wire seed_agg`
+/// dimension-free round sync. Past the bootstrap round the server
+/// broadcasts, instead of a dense `ModelSync`, the previous round's
+/// whole cohort as `(client id, FedAvg weight, per-step seeds,
+/// per-probe gradient scalars)` and every client reconstructs the
+/// aggregate θ_l locally via `zo::aggregate_trajectories`. SeedSync is
+/// deliberately *exempt* from the v6 codec-envelope rule: its vectors
+/// are raw typed fields (i32 seeds, f32 scalars, f64 weights) because
+/// the replay contract is bit-exact — envelopes exist for the lossy
+/// smashed/cut-grad payloads only. No existing payload layout changed.
+pub const VERSION: u8 = 7;
 /// Frame bytes that are not payload: 8-byte header + 4-byte CRC.
 pub const FRAME_OVERHEAD: u64 = 12;
 /// Upper bound on a payload (decoder rejects larger length fields before
@@ -260,6 +270,25 @@ pub enum Msg {
     },
     /// server → clients: the run is over; close the connection.
     Shutdown { reason: String },
+    /// server → clients (v7, `--zo_wire seed_agg`): the dimension-free
+    /// round sync replacing the dense θ_l `ModelSync` broadcast past
+    /// the bootstrap round. Carries the *previous* round's cohort in
+    /// the server's aggregation order: per participant `i`, its id
+    /// `clients[i]`, its FedAvg weight `weights[i]`, its `h` per-step
+    /// seeds `seeds[i·h .. (i+1)·h]`, and its `h·n_p` per-probe
+    /// gradient scalars `gscales[i·h·n_p .. (i+1)·h·n_p]` (`h` and
+    /// `n_p` come from the run config, so the flattening is
+    /// self-describing). Receivers replay every record from their
+    /// cached round-start θ_l and FedAvg-accumulate in shipped order
+    /// (`zo::aggregate_trajectories`) — bit-identical to the dense
+    /// broadcast they would have received.
+    SeedSync {
+        round: u32,
+        clients: Vec<u32>,
+        weights: Vec<f64>,
+        seeds: Vec<i32>,
+        gscales: Vec<f32>,
+    },
 }
 
 impl Msg {
@@ -278,6 +307,7 @@ impl Msg {
             Msg::RoundSummary { .. } => 11,
             Msg::Shutdown { .. } => 12,
             Msg::SmashedSeq { .. } => 13,
+            Msg::SeedSync { .. } => 14,
         }
     }
 
@@ -296,12 +326,13 @@ impl Msg {
             Msg::RoundSummary { .. } => "RoundSummary",
             Msg::Shutdown { .. } => "Shutdown",
             Msg::SmashedSeq { .. } => "SmashedSeq",
+            Msg::SeedSync { .. } => "SeedSync",
         }
     }
 }
 
 const MIN_TAG: u8 = 1;
-const MAX_TAG: u8 = 13;
+const MAX_TAG: u8 = 14;
 
 // ---------------------------------------------------------------------------
 // payload writer
@@ -351,6 +382,12 @@ impl Wr {
         self.u32(v.len() as u32);
         for &x in v {
             self.f32(x);
+        }
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
         }
     }
 }
@@ -422,6 +459,10 @@ impl<'a> Rd<'a> {
     fn vec_f32(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.vec_len(4)?;
         (0..n).map(|_| self.f32()).collect()
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.vec_len(8)?;
+        (0..n).map(|_| self.f64()).collect()
     }
     fn finish(self) -> Result<(), WireError> {
         if self.pos != self.b.len() {
@@ -540,6 +581,13 @@ fn encode_payload(msg: &Msg, w: &mut Wr) {
         Msg::Shutdown { reason } => {
             w.str(reason);
         }
+        Msg::SeedSync { round, clients, weights, seeds, gscales } => {
+            w.u32(*round);
+            w.vec_u32(clients);
+            w.vec_f64(weights);
+            w.vec_i32(seeds);
+            w.vec_f32(gscales);
+        }
     }
 }
 
@@ -630,6 +678,13 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg, WireError> {
             sent_at: r.f64()?,
             smashed: r.vec_u8()?,
             targets: r.vec_i32()?,
+        },
+        14 => Msg::SeedSync {
+            round: r.u32()?,
+            clients: r.vec_u32()?,
+            weights: r.vec_f64()?,
+            seeds: r.vec_i32()?,
+            gscales: r.vec_f32()?,
         },
         t => return Err(WireError::BadTag(t)),
     };
@@ -850,6 +905,16 @@ mod tests {
                 wire_bytes: 5000,
             },
             Msg::Shutdown { reason: "done".into() },
+            // 2 participants × h=2 steps × n_p=2 probes, f64 weights
+            Msg::SeedSync {
+                round: 4,
+                clients: vec![1, 3],
+                weights: vec![0.375, 0.625],
+                seeds: vec![-11, 42, 7, -9],
+                gscales: vec![
+                    0.5, -0.25, 0.125, -2.0, 1.0, 0.75, -0.5, 0.0625,
+                ],
+            },
         ]
     }
 

@@ -218,8 +218,8 @@ impl TagCounters {
     }
 }
 
-/// Slots for message tags 1..=13 plus an "unknown" overflow slot.
-const N_TAGS: usize = 15;
+/// Slots for message tags 1..=14 plus an "unknown" overflow slot.
+const N_TAGS: usize = 16;
 
 static WIRE_TX: OnceLock<TagCounters> = OnceLock::new();
 static WIRE_RX: OnceLock<TagCounters> = OnceLock::new();
@@ -259,6 +259,7 @@ pub fn tag_name(tag: u8) -> &'static str {
         11 => "round_summary",
         12 => "shutdown",
         13 => "smashed_seq",
+        14 => "seed_sync",
         _ => "unknown",
     }
 }
@@ -301,7 +302,7 @@ mod tests {
 
     #[test]
     fn tag_names_cover_protocol() {
-        for t in 1..=13u8 {
+        for t in 1..=14u8 {
             assert_ne!(tag_name(t), "unknown", "tag {t} unnamed");
         }
         assert_eq!(tag_name(0), "unknown");

@@ -41,6 +41,45 @@ pub fn replay_trajectory(
     Some(cur)
 }
 
+/// Seed-space FedAvg (`--zo_wire seed_agg`, HO-SFL's dimension-free
+/// aggregation): replay every participant's `(seeds, gscales)` record
+/// from the shared round-start `theta0` and accumulate the weighted
+/// average *one trajectory at a time* — never holding per-client θ_l
+/// copies. The per-element operation sequence (`out = 0`, then
+/// `out += (wᵢ/Σw) as f32 · θᵢ` in participant order) is exactly
+/// [`crate::coordinator::aggregator::fedavg_into`]'s, so the result is
+/// bit-identical to dense FedAvg over the same replayed trajectories —
+/// whether it runs on the server (aggregating uploads) or on a client
+/// (reconstructing the `SeedSync` broadcast).
+///
+/// Returns `None` — a typed caller error, never a panic — when the
+/// roster is empty, `records`/`weights` disagree in length, any record
+/// fails [`replay_trajectory`]'s shape check, or the weight total is
+/// non-positive/non-finite (wire input is untrusted).
+pub fn aggregate_trajectories(
+    theta0: &[f32],
+    records: &[(&[i32], &[f32])],
+    weights: &[f64],
+    n_pert: usize,
+) -> Option<Vec<f32>> {
+    if records.is_empty() || records.len() != weights.len() {
+        return None;
+    }
+    let total: f64 = weights.iter().sum();
+    if !(total > 0.0) || !total.is_finite() {
+        return None;
+    }
+    let mut out = vec![0.0f32; theta0.len()];
+    for ((seeds, gscales), &w) in records.iter().zip(weights) {
+        let replayed = replay_trajectory(theta0, seeds, n_pert, gscales)?;
+        let wf = (w / total) as f32;
+        for (o, &x) in out.iter_mut().zip(replayed.iter()) {
+            *o += wf * x;
+        }
+    }
+    Some(out)
+}
+
 /// Two-point ZO-SGD on an analytic objective f: R^d -> R.
 ///
 /// Mirrors the paper's Eq. (2) estimator with Gaussian directions:
@@ -229,6 +268,74 @@ mod tests {
         assert!(replay_trajectory(&theta0, &[1], 3, &gs).is_none());
         // n_pert = 0 clamps to 1 like the estimator does
         assert!(replay_trajectory(&theta0, &[1, 2], 0, &gs[..2]).is_some());
+    }
+
+    #[test]
+    fn aggregate_trajectories_is_bitwise_fedavg_of_replays() {
+        let theta0: Vec<f32> =
+            (0..64).map(|i| ((i as f32) * 0.17).sin()).collect();
+        let np = 2;
+        // 3 participants x 2 steps x 2 probes, distinct seeds/scalars
+        let recs: Vec<(Vec<i32>, Vec<f32>)> = (0..3)
+            .map(|c| {
+                let seeds = vec![100 + c, 200 + c];
+                let gs: Vec<f32> = (0..4)
+                    .map(|s| 0.01 * (c as f32 + 1.0) * (s as f32 - 1.5))
+                    .collect();
+                (seeds, gs)
+            })
+            .collect();
+        let weights = [3.0f64, 1.0, 2.0];
+        let borrowed: Vec<(&[i32], &[f32])> = recs
+            .iter()
+            .map(|(s, g)| (s.as_slice(), g.as_slice()))
+            .collect();
+        let got =
+            aggregate_trajectories(&theta0, &borrowed, &weights, np).unwrap();
+        // reference: materialize every replay, then dense FedAvg
+        let replayed: Vec<Vec<f32>> = recs
+            .iter()
+            .map(|(s, g)| replay_trajectory(&theta0, s, np, g).unwrap())
+            .collect();
+        let refs: Vec<&[f32]> =
+            replayed.iter().map(|t| t.as_slice()).collect();
+        let want =
+            crate::coordinator::aggregator::fedavg(&refs, &weights);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "streamed seed-space aggregation must be bit-identical to \
+             dense FedAvg over the replayed trajectories"
+        );
+        // single participant with any positive weight is the pure replay
+        let solo =
+            aggregate_trajectories(&theta0, &borrowed[..1], &[5.0], np)
+                .unwrap();
+        assert_eq!(solo, replayed[0]);
+    }
+
+    #[test]
+    fn aggregate_trajectories_rejects_malformed_input() {
+        let theta0 = vec![0.25f32; 16];
+        let seeds = vec![7, 8];
+        let gs = vec![0.01f32; 4];
+        let rec: Vec<(&[i32], &[f32])> = vec![(&seeds, &gs)];
+        assert!(
+            aggregate_trajectories(&theta0, &rec, &[1.0], 2).is_some()
+        );
+        // empty roster / length mismatch / bad record shape / bad weights
+        assert!(aggregate_trajectories(&theta0, &[], &[], 2).is_none());
+        assert!(
+            aggregate_trajectories(&theta0, &rec, &[1.0, 1.0], 2).is_none()
+        );
+        let short: Vec<(&[i32], &[f32])> = vec![(&seeds, &gs[..3])];
+        assert!(
+            aggregate_trajectories(&theta0, &short, &[1.0], 2).is_none()
+        );
+        assert!(aggregate_trajectories(&theta0, &rec, &[0.0], 2).is_none());
+        assert!(
+            aggregate_trajectories(&theta0, &rec, &[f64::NAN], 2).is_none()
+        );
     }
 
     #[test]

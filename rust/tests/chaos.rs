@@ -22,7 +22,7 @@
 
 use heron_sfl::coordinator::algorithms::Algorithm;
 use heron_sfl::coordinator::checkpoint;
-use heron_sfl::coordinator::config::RunConfig;
+use heron_sfl::coordinator::config::{RunConfig, ZoWireMode};
 use heron_sfl::net::transport::{loopback_pair, Transport};
 use heron_sfl::net::wire::VERSION;
 use heron_sfl::net::{
@@ -294,6 +294,196 @@ fn killed_and_restored_server_finishes_bit_identical() {
             assert_eq!(x.comm_bytes_cum, y.comm_bytes_cum);
         }
         let _ = std::fs::remove_file(&ckpt);
+    });
+}
+
+/// The restore contract under the lean downlink (`--zo_wire seed_agg`):
+/// the checkpoint carries no seed-space roster (it is round-transient),
+/// so a restored server re-bootstraps every fresh client with one dense
+/// broadcast and goes lean again from the following round — and still
+/// finishes **bit-identically** to the uninterrupted seed_agg
+/// reference, analytic accounting included (the round-indexed CostBook
+/// sync formula does not restart at the restore boundary). The final
+/// model also matches the dense-sync (theta-wire) reference, pinning
+/// the whole seed-space pipeline through the crash.
+#[test]
+fn seed_agg_killed_and_restored_finishes_bit_identical() {
+    with_session(|s| {
+        let mut cfg = chaos_cfg(4);
+        cfg.zo_wire = ZoWireMode::SeedAgg;
+        cfg.validate().unwrap();
+        let ckpt = ckpt_path("seed_agg_restore");
+        let _ = std::fs::remove_file(&ckpt);
+
+        // dense-sync reference: the identical run under the theta wire
+        let mut dense = cfg.clone();
+        dense.zo_wire = ZoWireMode::Theta;
+        let (d, _) = net_serve(s, &dense, 2, ServeOptions::default());
+        let d = d.expect("dense-sync reference run");
+
+        // leg A: the uninterrupted seed_agg reference
+        let (a, _) = net_serve(s, &cfg, 2, ServeOptions::default());
+        let a = a.expect("seed_agg reference run");
+        assert_eq!(
+            a.final_theta_l, d.final_theta_l,
+            "seed_agg θ_l diverged from the dense-sync reference"
+        );
+
+        // leg B1: checkpoint every 2 rounds, crash right after round 2 —
+        // rounds 0..2 already ran lean (bootstrap + SeedSync) pre-crash
+        let (b1, b1_clients) = net_serve(s, &cfg, 2, ServeOptions {
+            checkpoint_every: 2,
+            checkpoint_path: Some(ckpt.clone()),
+            halt_after: 2,
+            ..Default::default()
+        });
+        let err = b1.err().expect("halt_after must abort the run");
+        assert!(
+            format!("{err:#}").contains("halted"),
+            "unexpected abort: {err:#}"
+        );
+        assert!(ckpt.exists(), "the crash happened after the checkpoint");
+        for c in &b1_clients {
+            assert_eq!(c.rounds, 2);
+        }
+
+        // leg B2: restored server + fresh clients. No client holds a
+        // cached θ, so round 2 must fall back to the dense bootstrap
+        // broadcast, then round 3 goes lean again — and the whole run
+        // matches the uninterrupted reference bit for bit.
+        let (b2, _) = net_serve(s, &cfg, 2, ServeOptions {
+            restore: Some(ckpt.clone()),
+            ..Default::default()
+        });
+        let b2 = b2.expect("restored seed_agg run");
+
+        assert_eq!(b2.record.rounds.len(), cfg.rounds);
+        assert_eq!(a.final_theta_l, b2.final_theta_l, "θ_l");
+        assert_eq!(a.final_theta_s, b2.final_theta_s, "θ_s");
+        for (x, y) in a.record.rounds.iter().zip(&b2.record.rounds) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(
+                x.train_loss.to_bits(),
+                y.train_loss.to_bits(),
+                "round {} train loss",
+                x.round
+            );
+            assert_eq!(
+                x.eval_metric.to_bits(),
+                y.eval_metric.to_bits(),
+                "round {} eval metric",
+                x.round
+            );
+            assert_eq!(x.comm_bytes_cum, y.comm_bytes_cum);
+        }
+        let _ = std::fs::remove_file(&ckpt);
+    });
+}
+
+/// Rejoin under `--zo_wire seed_agg`, over real TCP (the rejoin
+/// acceptor is TCP-only): a connection dies mid-run with no goodbye, a
+/// replacement connects, adopts the dead lane block, and — the lean
+/// downlink's churn contract — gets a dense θ bootstrap on its first
+/// broadcast (never a SeedSync it has no cached θ to replay), then lean
+/// SeedSync rounds after that, while the survivor keeps receiving lean
+/// broadcasts in the same rounds. The run must finish every round and
+/// both clients must exit clean.
+#[test]
+fn seed_agg_rejoiner_bootstraps_dense_and_run_completes() {
+    with_session(|s| {
+        let mut cfg = chaos_cfg(6);
+        cfg.zo_wire = ZoWireMode::SeedAgg;
+        cfg.validate().unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (report, survivor, rejoiner) = std::thread::scope(|scope| {
+            let server = {
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    heron_sfl::net::serve_tcp_opts(
+                        s,
+                        cfg,
+                        listener,
+                        2,
+                        "chaos-seed-agg-rejoin",
+                        ServeOptions { rejoin: true, ..Default::default() },
+                    )
+                })
+            };
+            let survivor = {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let t = heron_sfl::net::TcpTransport::connect(&addr)
+                        .expect("survivor connect");
+                    run_client(s, Box::new(t), "survivor")
+                })
+            };
+            // the flaky peer: handshake, then vanish right after the
+            // first round's broadcast — kill -9, no protocol goodbye
+            {
+                let mut t: Box<dyn Transport> = Box::new(
+                    heron_sfl::net::TcpTransport::connect(&addr)
+                        .expect("flaky connect"),
+                );
+                t.send(&Msg::Hello {
+                    name: "flaky".into(),
+                    protocol: VERSION as u32,
+                    lanes: 1,
+                    codecs: heron_sfl::net::codec::SUPPORTED.to_vec(),
+                })
+                .expect("hello");
+                loop {
+                    match t.recv().expect("recv") {
+                        Some(Msg::ModelSync { .. }) | None => break,
+                        Some(_) => continue,
+                    }
+                }
+            }
+            // only now — with the dead conn's lane block free — bring up
+            // the replacement; the acceptor parks it and the dispatcher
+            // adopts it at a round boundary with a dense re-bootstrap
+            let rejoiner = {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let t = heron_sfl::net::TcpTransport::connect(&addr)
+                        .expect("rejoiner connect");
+                    run_client(s, Box::new(t), "replacement")
+                })
+            };
+            let report = server
+                .join()
+                .expect("server panicked")
+                .expect("server must survive churn + rejoin");
+            let survivor = survivor
+                .join()
+                .expect("survivor panicked")
+                .expect("survivor");
+            let rejoiner = rejoiner
+                .join()
+                .expect("rejoiner panicked")
+                .expect("rejoiner");
+            (report, survivor, rejoiner)
+        });
+
+        assert_eq!(
+            report.record.rounds.len(),
+            cfg.rounds,
+            "every round must finalize despite churn"
+        );
+        assert!(report.disconnects >= 1, "the kill is typed and counted");
+        assert_eq!(survivor.rounds, cfg.rounds);
+        assert_eq!(survivor.shutdown_reason, "run complete");
+        // the replacement adopted the dead lane block and ran lean
+        // rounds from its dense bootstrap — a SeedSync it could not
+        // replay would have errored its process instead of completing
+        assert!(
+            rejoiner.phases > 0,
+            "replacement was never adopted into the run"
+        );
+        assert_eq!(rejoiner.shutdown_reason, "run complete");
+        for r in &report.record.rounds {
+            assert!(r.train_loss.is_finite());
+        }
     });
 }
 

@@ -225,6 +225,75 @@ fn stream_composes_with_seeds_wire_mode_over_loopback() {
     });
 }
 
+/// `--drain stream` + `--zo_wire seed_agg`: the SeedSync roster is
+/// assembled from the *absorbed* records at the round boundary — after
+/// any drain policy has consumed the smashed queue — so the wire v7
+/// broadcast and the client-side aggregate replay are drain-invariant
+/// (client-side bitwise; θ_s keeps only the 1-worker pin).
+#[test]
+fn seed_agg_composes_with_stream_drain_over_loopback() {
+    with_session(|s| {
+        let mut barrier = cfg(DrainMode::Barrier, 1);
+        barrier.zo_wire = ZoWireMode::SeedAgg;
+        barrier.n_pert = 2;
+        let mut stream = barrier.clone();
+        stream.drain = DrainMode::Stream;
+        barrier.validate().unwrap();
+        stream.validate().unwrap();
+        let net_b = net_run(s, &barrier, 2);
+        let net_s = net_run(s, &stream, 2);
+        assert_eq!(
+            net_b.final_theta_l, net_s.final_theta_l,
+            "aggregate-replayed θ_l must not depend on the drain policy"
+        );
+        for (a, b) in net_b.record.rounds.iter().zip(&net_s.record.rounds)
+        {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            assert!((a.eval_metric - b.eval_metric).abs() < 0.05);
+        }
+    });
+}
+
+/// `--zo_wire seed_agg` across worker counts: under the barrier drain
+/// the server absorbs outcomes in Eq. (7) order regardless of how many
+/// client-phase workers raced, so the seed-space roster, the aggregated
+/// θ_l, and the whole trajectory are bit-identical across 1/4/8
+/// workers — θ_s and eval metrics included.
+#[test]
+fn seed_agg_bit_identical_across_worker_counts() {
+    with_session(|s| {
+        let mk = |workers| {
+            let mut c = cfg(DrainMode::Barrier, workers);
+            c.zo_wire = ZoWireMode::SeedAgg;
+            c.n_pert = 2;
+            c.validate().unwrap();
+            c
+        };
+        let (rec1, tl1, ts1) = run(s, &mk(1));
+        for workers in [4usize, 8] {
+            let (rec, tl, ts) = run(s, &mk(workers));
+            assert_eq!(tl1, tl, "{workers} workers: θ_l");
+            assert_eq!(ts1, ts, "{workers} workers: θ_s");
+            for (a, b) in rec1.rounds.iter().zip(&rec.rounds) {
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{workers} workers: train loss, round {}",
+                    a.round
+                );
+                assert_eq!(
+                    a.eval_metric.to_bits(),
+                    b.eval_metric.to_bits(),
+                    "{workers} workers: eval metric, round {}",
+                    a.round
+                );
+                assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+            }
+        }
+    });
+}
+
 /// Networked stream run: seq-tagged uploads are consumed between
 /// events; the client-side trajectory still matches the in-process
 /// barrier reference bit for bit (HERON), and wire traffic flows.

@@ -264,7 +264,7 @@ fn expected_round_bytes(
     let targets = v.batch as u64; // vision: one i32 label per sample
     let f = FRAME_OVERHEAD;
 
-    let lean = c.zo_wire == ZoWireMode::Seeds;
+    let lean = c.zo_wire.lean_uplink();
     // seeds mode ships the flattened h x n_p per-probe scalars; theta
     // mode ships an empty gscales vector (4-byte length prefix only)
     let gs_elems = if lean { h * c.n_pert.max(1) as u64 } else { 0 };
@@ -674,7 +674,11 @@ fn measured_seeds_wire_bytes_match_formula() {
         // analytic CostBook round formula with the lean sync
         let v = s.variant(&c.variant).unwrap();
         let book = CostBook::new(v, c.algorithm, c.n_pert as u64)
-            .with_zo_wire(c.zo_wire, c.local_steps as u64);
+            .with_zo_wire(
+                c.zo_wire,
+                c.local_steps as u64,
+                c.participants_per_round() as u64,
+            );
         let p = n_clients as u64;
         let uploads = (c.local_steps / c.upload_every) as u64;
         let analytic_round =
@@ -695,6 +699,178 @@ fn measured_seeds_wire_bytes_match_formula() {
             assert_eq!(
                 delta, analytic_round,
                 "analytic lean round formula drifted (round {round})"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dimension-free downlink (--zo_wire seed_agg, wire v7 SeedSync)
+// ---------------------------------------------------------------------------
+
+/// `seed_agg` vs `seeds` vs `theta`: all three wire modes produce the
+/// same trajectory bit for bit (every client reconstructs the
+/// aggregated θ_l from the SeedSync roster exactly as the server's own
+/// `zo::aggregate_trajectories` does), the seed_agg run books *and*
+/// measures strictly fewer broadcast bytes than the seeds run, and the
+/// seed_agg net run is additionally bit-identical to the in-process
+/// driver — analytic counters included.
+fn assert_seed_agg_bit_identical(variant: &str, n_clients: usize) {
+    with_session(|s| {
+        let mut c_theta = cfg(Algorithm::Heron, n_clients);
+        c_theta.variant = variant.into();
+        c_theta.n_pert = 2;
+        let mut c_seeds = c_theta.clone();
+        c_seeds.zo_wire = ZoWireMode::Seeds;
+        let mut c_agg = c_theta.clone();
+        c_agg.zo_wire = ZoWireMode::SeedAgg;
+        let (net_t, _) = net_run(s, &c_theta, 2);
+        let (net_s, _) = net_run(s, &c_seeds, 2);
+        let (net_a, _) = net_run(s, &c_agg, 2);
+        assert_eq!(
+            net_t.final_theta_l, net_a.final_theta_l,
+            "{variant}: aggregate-replayed θ_l diverged"
+        );
+        assert_eq!(
+            net_t.final_theta_s, net_a.final_theta_s,
+            "{variant}: θ_s diverged"
+        );
+        for (a, b) in net_t.record.rounds.iter().zip(&net_a.record.rounds) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{variant}: train loss, round {}",
+                a.round
+            );
+            assert_eq!(
+                a.eval_metric.to_bits(),
+                b.eval_metric.to_bits(),
+                "{variant}: eval metric, round {}",
+                a.round
+            );
+        }
+        // the dimension-free downlink, measured: past the bootstrap
+        // round the broadcast is the SeedSync roster, so the server puts
+        // strictly fewer bytes on the wire than the seeds run (which
+        // still broadcasts a dense θ_l every round)
+        assert!(
+            net_a.wire.bytes_sent < net_s.wire.bytes_sent,
+            "{variant}: seed_agg measured downlink {} not below seeds {}",
+            net_a.wire.bytes_sent,
+            net_s.wire.bytes_sent
+        );
+        assert!(
+            net_a.record.summary["comm_bytes"]
+                < net_s.record.summary["comm_bytes"],
+            "{variant}: seed_agg analytic comm is not lean"
+        );
+        // and the seed_agg net run == the in-process run of the same
+        // config, bit for bit, analytic counters included
+        let (rec, theta_l, theta_s) = in_process(s, &c_agg);
+        assert_eq!(theta_l, net_a.final_theta_l, "{variant}: θ_l");
+        assert_eq!(theta_s, net_a.final_theta_s, "{variant}: θ_s");
+        for (a, b) in rec.rounds.iter().zip(&net_a.record.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_metric.to_bits(), b.eval_metric.to_bits());
+            assert_eq!(a.comm_bytes_cum, b.comm_bytes_cum);
+        }
+    });
+}
+
+#[test]
+fn zo_wire_seed_agg_bit_identical_vision() {
+    assert_seed_agg_bit_identical("cnn_c1", 4);
+}
+
+#[test]
+fn zo_wire_seed_agg_bit_identical_lm() {
+    assert_seed_agg_bit_identical("gpt2nano_c1_a1", 3);
+}
+
+/// Accounting cross-check for the dimension-free downlink: measured
+/// server→client bytes equal the dense bootstrap broadcast in round 0
+/// plus the analytic SeedSync roster frame in every later round — and
+/// the CostBook's round-indexed sync formula matches the recorded
+/// analytic deltas exactly.
+#[test]
+fn measured_seed_agg_wire_bytes_match_formula() {
+    with_session(|s| {
+        let mut c = cfg(Algorithm::Heron, 3);
+        c.zo_wire = ZoWireMode::SeedAgg;
+        c.n_pert = 2;
+        let n_clients = 3;
+        let (net, _) = net_run(s, &c, n_clients); // 1 client per conn
+        let v = s.variant(&c.variant).unwrap();
+        let nl = v.size_local() as u64;
+        let p = n_clients as u64;
+        let conns = p;
+        let h = c.local_steps as u64;
+        let np = c.n_pert as u64;
+        let uploads = h / c.upload_every as u64;
+        let f = FRAME_OVERHEAD;
+        let rounds = c.rounds as u64; // 2: one bootstrap + one SeedSync
+
+        // per-message layouts (same derivation as expected_round_bytes)
+        let barrier = f + 8 + 4 * p;
+        let summary = f + 28;
+        let ack = f + 17;
+        let dense_down = f + 16 + 4 * nl;
+        // wire v7 SeedSync: round + clients + weights + seeds + gscales
+        let seed_down = f + 20 + 12 * p + 4 * (p * h) + 4 * (p * h * np);
+        assert!(
+            seed_down < dense_down,
+            "SeedSync frame {seed_down} B not below dense sync {dense_down} B"
+        );
+        let book0 = CostBook::new(v, c.algorithm, np);
+        let smashed = f + 24
+            + codec::header_bytes(c.codec)
+            + book0.smashed_bytes
+            + 4 * v.batch as u64;
+        let zo_update =
+            f + 12 + (4 + 4 * h) + (4 + 4 * h) + (4 + 4 * h * np);
+        let local_done = f + 44;
+
+        let per_round_base = conns * (barrier + summary) + p * uploads * ack;
+        let want_sent =
+            per_round_base * rounds + conns * (dense_down + seed_down);
+        let per_round_recv =
+            p * uploads * smashed + p * (zo_update + local_done);
+        assert_eq!(
+            net.record.summary["wire_bytes_sent"] as u64,
+            want_sent,
+            "server->client bytes"
+        );
+        assert_eq!(
+            net.record.summary["wire_bytes_recv"] as u64,
+            per_round_recv * rounds,
+            "client->server bytes"
+        );
+
+        // analytic book, round-indexed: dense bootstrap, then the
+        // dimension-free roster — O(cohort·h·n_p), independent of |θ_l|
+        let book = CostBook::new(v, c.algorithm, np).with_zo_wire(
+            c.zo_wire,
+            h,
+            c.participants_per_round() as u64,
+        );
+        assert_eq!(book.downlink_per_round_sync(0), nl * 4);
+        assert_eq!(
+            book.downlink_per_round_sync(1),
+            p * (4 + 8 + h * (4 + 4 * np))
+        );
+        for (round, t) in net.record.rounds.iter().enumerate() {
+            let delta = if round == 0 {
+                t.comm_bytes_cum
+            } else {
+                t.comm_bytes_cum
+                    - net.record.rounds[round - 1].comm_bytes_cum
+            };
+            let analytic_round = p
+                * (uploads * book.smashed_bytes
+                    + book.comm_per_round_sync_at(round as u64));
+            assert_eq!(
+                delta, analytic_round,
+                "analytic seed_agg round formula drifted (round {round})"
             );
         }
     });

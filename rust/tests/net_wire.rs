@@ -43,9 +43,14 @@ fn arb_u8s(g: &mut Gen, max: usize) -> Vec<u8> {
     (0..n).map(|_| g.u64() as u8).collect()
 }
 
+fn arb_f64s(g: &mut Gen, max: usize) -> Vec<f64> {
+    let n = g.usize_in(0..max);
+    (0..n).map(|_| g.f64_in(-1e6..1e6)).collect()
+}
+
 /// One random message of a random type.
 fn arb_msg(g: &mut Gen) -> Msg {
-    match g.usize_in(0..13) {
+    match g.usize_in(0..14) {
         0 => Msg::Hello {
             name: arb_string(g),
             protocol: g.u64() as u32,
@@ -128,6 +133,16 @@ fn arb_msg(g: &mut Gen) -> Msg {
             sent_at: g.f64_in(0.0..1e6),
             smashed: arb_u8s(g, 1024),
             targets: arb_i32s(g, 64),
+        },
+        // v7: shape consistency between the four vectors is the
+        // *receiver's* replay-time contract, not the codec's — any
+        // lengths must roundtrip
+        12 => Msg::SeedSync {
+            round: g.u64() as u32,
+            clients: arb_u32s(g, 16),
+            weights: arb_f64s(g, 16),
+            seeds: arb_i32s(g, 64),
+            gscales: arb_f32s(g, 128),
         },
         _ => Msg::Shutdown { reason: arb_string(g) },
     }
@@ -223,7 +238,7 @@ fn unknown_version_and_tag_are_typed_errors() {
         f[2] = v;
         assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadVersion(v));
     }
-    for tag in [0u8, 14, 42, 255] {
+    for tag in [0u8, 15, 42, 255] {
         let mut f = frame.clone();
         f[3] = tag;
         assert_eq!(decode_frame(&f).unwrap_err(), WireError::BadTag(tag));

@@ -31,8 +31,18 @@ networked leg whose record is passed as the --lossy argument (the
 server->client direction carries no codec'd payload on the decoupled
 path and must not grow).
 
+With --lean-downlink SEEDS_NET.json the networked run used `--zo_wire
+seed_agg` (wire v7): the server broadcasts an aggregated SeedSync roster
+instead of the dense theta_l and clients rebuild the model by seed
+replay. Replay is bit-exact, so the FULL bit-identity contract applies
+unchanged — and on top of it the measured server->client wire bytes must
+sit STRICTLY below what the `--zo_wire seeds` leg (whose record is
+passed as the argument) actually moved, since seeds mode still ships the
+dense broadcast every round.
+
 Usage: diff_net_metrics.py <inproc.json> <net.json> [--stream]
        [--virtual N] [--lossy F32_NET.json]
+       [--lean-downlink SEEDS_NET.json]
 Exits non-zero on any mismatch.
 """
 
@@ -68,6 +78,16 @@ def main():
                 lossy_ref = json.load(f)
         except (IndexError, OSError) as e:
             sys.exit(f"--lossy needs the f32 networked record: {e}")
+        del argv[i:i + 2]
+    lean_ref = None
+    if "--lean-downlink" in argv:
+        i = argv.index("--lean-downlink")
+        try:
+            with open(argv[i + 1]) as f:
+                lean_ref = json.load(f)
+        except (IndexError, OSError) as e:
+            sys.exit(f"--lean-downlink needs the seeds-mode networked "
+                     f"record: {e}")
         del argv[i:i + 2]
     args = [a for a in argv if a != "--stream"]
     stream = "--stream" in argv
@@ -152,6 +172,25 @@ def main():
         else:
             print(f"lossy wire bytes vs f32 leg: recv {wire_recv:.0f} < "
                   f"{ref_recv:.0f}, sent {wire_sent:.0f} <= {ref_sent:.0f}")
+    if lean_ref is not None:
+        # the dimension-free broadcast's whole point, measured: fewer
+        # server->client bytes than the seeds-mode leg actually moved
+        # (seeds mode keeps the uplink lean but still broadcasts dense)
+        ref_sent = lean_ref["summary"].get("wire_bytes_sent", 0)
+        if not 0 < wire_sent < ref_sent:
+            failures.append(
+                f"seed_agg server->client bytes {wire_sent:.0f} not "
+                f"strictly below the seeds leg's {ref_sent:.0f}")
+        else:
+            print(f"lean downlink vs seeds leg: sent {wire_sent:.0f} < "
+                  f"{ref_sent:.0f}")
+        # when the server ran with metrics armed (--stats_every /
+        # --trace_out) the record also carries the downlink counters —
+        # a broadcast that saved nothing means SeedSync never happened
+        saved = b["summary"].get("net.downlink.bytes_saved")
+        if saved is not None and saved <= 0:
+            failures.append(
+                f"net.downlink.bytes_saved: {saved!r} (want > 0)")
     if stream:
         # the pipelining must have actually happened: arrivals recorded,
         # simulated stream schedule strictly below the barrier schedule
@@ -181,6 +220,9 @@ def main():
         print("OK: lossy-codec run matches the reference on every "
               "client-phase surface (losses + counters bitwise, eval "
               "within tolerance, measured upload strictly below f32)")
+    elif lean_ref is not None:
+        print("OK: seed_agg run is bit-identical to in-process AND its "
+              "measured downlink sits strictly below the seeds leg's")
     elif stream:
         print("OK: stream run matches the reference on every "
               "deterministic surface (client side bitwise, eval within "
